@@ -1,0 +1,95 @@
+//! END-TO-END VALIDATION (DESIGN.md §5, EXPERIMENTS.md §E2E): train the
+//! ~100M-parameter ViT (hs=768, depth=12, seq=65) with e=4 tensor-parallel
+//! workers on the synthetic dataset, a χ=2 straggler appearing mid-run,
+//! SEMI-migration balancing on.  Logs the full loss curve and per-epoch
+//! RT/ACC, proving every layer composes: Pallas kernel → JAX shard
+//! programs → HLO artifacts → PJRT runtime → Rust coordinator
+//! (collectives, resizing, migration, optimizer).
+//!
+//! Run: `cargo run --release --example e2e_train -- [--iters N] [--epochs M]`
+//! (defaults sized for a single-core CPU testbed; scale up at will)
+
+use anyhow::Result;
+use flextp::config::{parse_kv_args, RunCfg, StragglerPlan, Strategy};
+use flextp::train::trainer::Trainer;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (_, kv) = parse_kv_args(&args)?;
+    let model = kv.get("model").map(String::as_str).unwrap_or("vit-100m");
+    let epochs: usize = kv.get("epochs").map(|s| s.parse().unwrap()).unwrap_or(6);
+    let iters: usize = kv.get("iters").map(|s| s.parse().unwrap()).unwrap_or(8);
+
+    let mut cfg = RunCfg::new(model);
+    cfg.balancer.strategy = Strategy::Semi;
+    cfg.train.epochs = epochs;
+    cfg.train.iters_per_epoch = iters;
+    cfg.train.eval_iters = 2;
+    cfg.train.lr = 0.01;
+    cfg.train.train_batches = 16;
+    // homogeneous first half, then a χ=2 straggler rotates in (paper's
+    // dynamic heterogeneity): Fixed plan switched at the midpoint below.
+    let mut t = Trainer::new(cfg)?;
+    println!(
+        "e2e: {} — {:.1}M params, e={} TP workers, bs={}, seq={}",
+        t.model().name,
+        t.model().params_total as f64 / 1e6,
+        t.model().e,
+        t.model().bs,
+        t.model().seq,
+    );
+    t.warmup_and_pretest()?;
+    println!("warmup+pretest done; SEMI cost fit: Φ₁/col={:.2e}s Φ₂/col={:.2e}s",
+             t.costs.phi1_per_col, t.costs.phi2_per_col);
+
+    for epoch in 0..epochs {
+        // straggler appears in the second half of the run
+        t.cfg.stragglers = if epoch >= epochs / 2 {
+            StragglerPlan::RoundRobin { chi: 2.0, period_epochs: 1 }
+        } else {
+            StragglerPlan::None
+        };
+        t.run_epoch(epoch)?;
+        let e = t.report.epochs.last().unwrap();
+        println!(
+            "epoch {:>2} [{}]: RT(sim)={:.2}s wall={:.0}s loss={:.4} eval={:.4} acc={:.1}% pruned={} migrated={}",
+            epoch,
+            if epoch >= epochs / 2 { "χ=2 straggler" } else { "homogeneous " },
+            e.rt_sim_s,
+            e.rt_wall_s,
+            e.train_loss,
+            e.eval_loss,
+            100.0 * e.acc,
+            e.pruned_cols,
+            e.migrated_cols,
+        );
+    }
+
+    println!("\nloss curve ({} steps):", t.report.loss_curve.len());
+    let curve = &t.report.loss_curve;
+    for (i, chunk) in curve.chunks(8).enumerate() {
+        let s: Vec<String> = chunk.iter().map(|l| format!("{l:.3}")).collect();
+        println!("  steps {:>3}-{:>3}: {}", i * 8, i * 8 + chunk.len() - 1, s.join(" "));
+    }
+    let out = flextp::bench::out_dir().join("e2e_train.json");
+    t.report.save_json(&out)?;
+    println!("report: {} (loss curve + per-epoch RT/ACC)", out.display());
+
+    // Success criterion: generalization improves over the run (per-step
+    // train loss is noisy at this step count; eval is the signal).
+    let eval0 = t.report.epochs.first().unwrap().eval_loss;
+    let eval_best = t.report.epochs.iter().map(|e| e.eval_loss).fold(f64::INFINITY, f64::min);
+    let acc_best = t.report.best_acc();
+    println!("\neval loss: epoch0={eval0:.4} best={eval_best:.4}; best ACC={:.1}%",
+             100.0 * acc_best);
+    assert!(
+        eval_best <= eval0 && acc_best > 1.5 / t.model().classes as f64,
+        "no generalization improvement — end-to-end training is broken"
+    );
+
+    println!("\nper-executable timing profile (top 8):");
+    for (name, calls, secs) in t.rt.timing_profile().into_iter().take(8) {
+        println!("  {name:<24} {calls:>5} calls  {secs:>8.2}s total");
+    }
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! All seven balancing solutions side by side under one rotating straggler
+//! (χ=4): the paper's compared-systems table in miniature.
+//!
+//! Run: `cargo run --release --example hetero_showdown [-- --model vit-s]`
+
+use anyhow::Result;
+use flextp::config::{parse_kv_args, RunCfg, StragglerPlan, Strategy};
+use flextp::train::trainer::Trainer;
+use flextp::util::table::TextTable;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (_, kv) = parse_kv_args(&args)?;
+    let model = kv.get("model").map(String::as_str).unwrap_or("vit-tiny");
+    let chi: f64 = kv.get("chi").map(|s| s.parse().unwrap()).unwrap_or(4.0);
+
+    let strategies = [
+        Strategy::Baseline,
+        Strategy::ZeroRd,
+        Strategy::ZeroPri,
+        Strategy::ZeroPriDiffE,
+        Strategy::ZeroPriDiffR,
+        Strategy::Mig,
+        Strategy::Semi,
+    ];
+    let mut reports = Vec::new();
+    for s in strategies {
+        let mut cfg = RunCfg::new(model);
+        cfg.balancer.strategy = s;
+        cfg.stragglers = StragglerPlan::RoundRobin { chi, period_epochs: 1 };
+        cfg.train.epochs = 3;
+        cfg.train.iters_per_epoch = 4;
+        let mut t = Trainer::new(cfg)?;
+        let r = t.run()?;
+        println!("{}", r.summary());
+        reports.push(r);
+    }
+
+    let base = reports[0].clone();
+    let mut table = TextTable::new(
+        &format!("hetero showdown: {model}, rotating straggler χ={chi}"),
+        &["solution", "RT (s/epoch)", "speedup", "ACC", "ΔACC (pp)", "comm"],
+    );
+    for r in &reports {
+        table.row(&[
+            r.label.clone(),
+            format!("{:.3}", r.rt()),
+            format!("{:.2}x", flextp::bench::speedup(r, &base)),
+            format!("{:.1}%", 100.0 * r.best_acc()),
+            format!("{:+.1}", flextp::bench::acc_delta_pp(r, &base)),
+            flextp::util::fmt_bytes(r.total_comm_bytes()),
+        ]);
+    }
+    println!("{}", table.render());
+    table.write_csv(&flextp::bench::out_dir().join("hetero_showdown.csv"))?;
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! Leak probe: isolate which PJRT path retains memory per call.
+use flextp::runtime::{Arg, Runtime};
+use flextp::tensor::Tensor;
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    let line = s.lines().find(|l| l.starts_with("VmRSS")).unwrap();
+    line.split_whitespace().nth(1).unwrap().parse::<f64>().unwrap() / 1024.0
+}
+
+fn main() -> anyhow::Result<()> {
+    let mode = std::env::args().nth(1).unwrap_or("literal".into());
+    match mode.as_str() {
+        "literal" => {
+            // pure literal create+drop churn
+            let data = vec![0u8; 1 << 20];
+            println!("start rss={:.0}MB", rss_mb());
+            for i in 0..2000 {
+                let l = xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32, &[256, 1024], &data)?;
+                std::hint::black_box(&l);
+                if i % 500 == 0 {
+                    println!("iter {i}: rss={:.0}MB", rss_mb());
+                }
+            }
+            println!("end rss={:.0}MB", rss_mb());
+        }
+        "exec" => {
+            let dir = std::path::Path::new("artifacts/vit-tiny");
+            let rt = Runtime::load(dir)?;
+            let m = rt.manifest.model.clone();
+            let patches = Tensor::zeros(&[m.bs, m.seq0, m.pd]);
+            let w = Tensor::zeros(&[m.pd, m.hs]);
+            let pos = Tensor::zeros(&[m.seq, m.hs]);
+            let cls = Tensor::zeros(&[m.hs]);
+            println!("start rss={:.0}MB", rss_mb());
+            for i in 0..2000 {
+                rt.call("embed_fwd", &[Arg::F32(&patches), Arg::F32(&w),
+                                       Arg::F32(&pos), Arg::F32(&cls)])?;
+                if i % 500 == 0 {
+                    println!("iter {i}: rss={:.0}MB", rss_mb());
+                }
+            }
+            println!("end rss={:.0}MB", rss_mb());
+        }
+        "raw" => {
+            // execute + drop buffers, no literal conversion
+            let client = xla::PjRtClient::cpu()?;
+            let proto = xla::HloModuleProto::from_text_file(
+                "artifacts/vit-tiny/embed_fwd.hlo.txt")?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            let mk = |dims: &[usize]| {
+                let n: usize = dims.iter().product();
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32, dims, &vec![0u8; n * 4]).unwrap()
+            };
+            let args = [mk(&[8, 64, 48]), mk(&[48, 128]), mk(&[65, 128]), mk(&[128])];
+            println!("start rss={:.0}MB", rss_mb());
+            for i in 0..2000 {
+                let out = exe.execute::<xla::Literal>(&args)?;
+                std::hint::black_box(&out);
+                drop(out);
+                if i % 500 == 0 {
+                    println!("iter {i}: rss={:.0}MB", rss_mb());
+                }
+            }
+            println!("end rss={:.0}MB", rss_mb());
+        }
+        "tolit" => {
+            // execute + to_literal_sync (no decompose)
+            let client = xla::PjRtClient::cpu()?;
+            let proto = xla::HloModuleProto::from_text_file(
+                "artifacts/vit-tiny/embed_fwd.hlo.txt")?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            let mk = |dims: &[usize]| {
+                let n: usize = dims.iter().product();
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32, dims, &vec![0u8; n * 4]).unwrap()
+            };
+            let args = [mk(&[8, 64, 48]), mk(&[48, 128]), mk(&[65, 128]), mk(&[128])];
+            println!("start rss={:.0}MB", rss_mb());
+            for i in 0..2000 {
+                let out = exe.execute::<xla::Literal>(&args)?;
+                let lit = out[0][0].to_literal_sync()?;
+                std::hint::black_box(&lit);
+                if i % 500 == 0 {
+                    println!("iter {i}: rss={:.0}MB", rss_mb());
+                }
+            }
+            println!("end rss={:.0}MB", rss_mb());
+        }
+        _ => {}
+    }
+    Ok(())
+}

@@ -1,0 +1,205 @@
+"""AOT compile path: lower every (role, bucket) shard program to HLO text.
+
+Run once at build time (``make artifacts``); Python never executes at
+training time.  Interchange format is **HLO text**, not a serialized
+``HloModuleProto`` — jax >= 0.5 emits protos with 64-bit instruction ids
+that the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Outputs, per model preset:
+
+    artifacts/<model>/<exec>.hlo.txt      one per executable variant
+    artifacts/<model>/manifest.json       model cfg + executable specs
+    artifacts/<model>/golden.bin          (vit-tiny) cross-language golden
+
+Executable inventory (DESIGN.md §3):
+    embed_fwd, embed_bwd, head_fwdbwd, head_infer
+    attn_fwd_<b>, attn_bwd_<b>             b ∈ γ buckets over hs
+    mlp_fwd_<b1>_<b2>, mlp_bwd_<b1>_<b2>   diagonal (ZERO) + (g00, b)
+                                           column (migration straggler side)
+    mlp_mig_fwd_k<kb>, mlp_mig_bwd_k<kb>   receiver-side migration slices
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import golden as G
+from . import model as M
+
+F32, I32 = "f32", "i32"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _sds(dims, dtype=F32):
+    return jax.ShapeDtypeStruct(
+        tuple(dims), jnp.float32 if dtype == F32 else jnp.int32)
+
+
+def _spec(name, dims, dtype=F32):
+    return dict(name=name, dims=list(dims), dtype=dtype)
+
+
+def executable_inventory(cfg: M.ModelCfg):
+    """Yield (name, builder_fn, input_specs, output_specs, meta)."""
+    b, s, s0 = cfg.bs, cfg.seq, cfg.seq0
+    hs, pd, hsl, ffl, cl = cfg.hs, cfg.pd, cfg.hsl, cfg.ffl, cfg.classes
+    x3 = ("x", (b, s, hs))
+    inv = []
+
+    inv.append(("embed_fwd", M.build_embed_fwd(cfg),
+                [_spec("patches", (b, s0, pd)), _spec("w_patch", (pd, hs)),
+                 _spec("pos", (s, hs)), _spec("cls", (hs,))],
+                [_spec("x0", (b, s, hs))], dict(role="embed_fwd")))
+    inv.append(("embed_bwd", M.build_embed_bwd(cfg),
+                [_spec("patches", (b, s0, pd)), _spec("w_patch", (pd, hs)),
+                 _spec("pos", (s, hs)), _spec("cls", (hs,)),
+                 _spec("dy", (b, s, hs))],
+                [_spec("dw_patch", (pd, hs)), _spec("dpos", (s, hs)),
+                 _spec("dcls", (hs,))], dict(role="embed_bwd")))
+    inv.append(("head_fwdbwd", M.build_head_fwdbwd(cfg),
+                [_spec(*x3), _spec("lnf_g", (hs,)), _spec("lnf_b", (hs,)),
+                 _spec("w_head", (hs, cl)), _spec("b_head", (cl,)),
+                 _spec("labels", (b,), I32)],
+                [_spec("loss", ()), _spec("ncorrect", (), I32),
+                 _spec("dx", (b, s, hs)), _spec("dlnf_g", (hs,)),
+                 _spec("dlnf_b", (hs,)), _spec("dw_head", (hs, cl)),
+                 _spec("db_head", (cl,))], dict(role="head_fwdbwd")))
+    inv.append(("head_infer", M.build_head_infer(cfg),
+                [_spec(*x3), _spec("lnf_g", (hs,)), _spec("lnf_b", (hs,)),
+                 _spec("w_head", (hs, cl)), _spec("b_head", (cl,)),
+                 _spec("labels", (b,), I32)],
+                [_spec("loss", ()), _spec("ncorrect", (), I32)],
+                dict(role="head_infer")))
+
+    for frac in M.KEEP_FRACS:
+        kq = M.keep_count(hs, frac)
+        bname = M.bucket_name(frac)
+        inv.append((f"attn_fwd_{bname}", M.build_attn_fwd(cfg),
+                    [_spec(*x3), _spec("ln1_g", (hs,)), _spec("ln1_b", (hs,)),
+                     _spec("wqkv", (hs, 3 * hsl)), _spec("wo", (hsl, hs)),
+                     _spec("idx", (kq,), I32), _spec("mask", (kq,))],
+                    [_spec("y_partial", (b, s, hs))],
+                    dict(role="attn_fwd", gamma=1 - frac, keep=kq)))
+        inv.append((f"attn_bwd_{bname}", M.build_attn_bwd(cfg),
+                    [_spec(*x3), _spec("ln1_g", (hs,)), _spec("ln1_b", (hs,)),
+                     _spec("wqkv", (hs, 3 * hsl)), _spec("wo", (hsl, hs)),
+                     _spec("idx", (kq,), I32), _spec("mask", (kq,)),
+                     _spec("dy", (b, s, hs))],
+                    [_spec("dx", (b, s, hs)), _spec("dln1_g", (hs,)),
+                     _spec("dln1_b", (hs,)), _spec("dwqkv", (hs, 3 * hsl)),
+                     _spec("dwo", (hsl, hs))],
+                    dict(role="attn_bwd", gamma=1 - frac, keep=kq)))
+
+    combos = [(f, f) for f in M.KEEP_FRACS]
+    combos += [(1.0, f) for f in M.KEEP_FRACS if f != 1.0]
+    for f1, f2 in combos:
+        k1, k2 = M.keep_count(hs, f1), M.keep_count(ffl, f2)
+        b1, b2 = M.bucket_name(f1), M.bucket_name(f2)
+        suffix = b1 if f1 == f2 else f"{b1}_{b2}"
+        ins = [_spec(*x3), _spec("ln2_g", (hs,)), _spec("ln2_b", (hs,)),
+               _spec("w1", (hs, ffl)), _spec("w2", (ffl, hs)),
+               _spec("idx1", (k1,), I32), _spec("mask1", (k1,)),
+               _spec("idx2", (k2,), I32), _spec("mask2", (k2,))]
+        inv.append((f"mlp_fwd_{suffix}", M.build_mlp_fwd(cfg), ins,
+                    [_spec("y_partial", (b, s, hs))],
+                    dict(role="mlp_fwd", gamma1=1 - f1, gamma2=1 - f2,
+                         keep1=k1, keep2=k2)))
+        inv.append((f"mlp_bwd_{suffix}", M.build_mlp_bwd(cfg),
+                    ins + [_spec("dy", (b, s, hs))],
+                    [_spec("dx", (b, s, hs)), _spec("dln2_g", (hs,)),
+                     _spec("dln2_b", (hs,)), _spec("dw1", (hs, ffl)),
+                     _spec("dw2", (ffl, hs))],
+                    dict(role="mlp_bwd", gamma1=1 - f1, gamma2=1 - f2,
+                         keep1=k1, keep2=k2)))
+
+    mig_kbs = sorted({M.keep_count(ffl, frac) for frac in M.MIG_FRACS})
+    for kb in mig_kbs:
+        inv.append((f"mlp_mig_fwd_k{kb}", M.build_mlp_mig_fwd(kb),
+                    [_spec(*x3), _spec("ln2_g", (hs,)), _spec("ln2_b", (hs,)),
+                     _spec("w1c", (hs, kb)), _spec("w2c", (kb, hs))],
+                    [_spec("y_partial", (b, s, hs))],
+                    dict(role="mlp_mig_fwd", kb=kb)))
+        inv.append((f"mlp_mig_bwd_k{kb}", M.build_mlp_mig_bwd(kb),
+                    [_spec(*x3), _spec("ln2_g", (hs,)), _spec("ln2_b", (hs,)),
+                     _spec("w1c", (hs, kb)), _spec("w2c", (kb, hs)),
+                     _spec("dy", (b, s, hs))],
+                    [_spec("dx_partial", (b, s, hs)), _spec("dln2_g", (hs,)),
+                     _spec("dln2_b", (hs,)), _spec("dw1c", (hs, kb)),
+                     _spec("dw2c", (kb, hs))],
+                    dict(role="mlp_mig_bwd", kb=kb)))
+    return inv
+
+
+def build_model(cfg: M.ModelCfg, out_dir: str, with_golden: bool,
+                verbose: bool = True):
+    mdir = os.path.join(out_dir, cfg.name)
+    os.makedirs(mdir, exist_ok=True)
+    manifest = dict(
+        model=dict(name=cfg.name, hs=cfg.hs, depth=cfg.depth,
+                   heads=cfg.heads, e=cfg.e, bs=cfg.bs, img=cfg.img,
+                   patch=cfg.patch, chans=cfg.chans, classes=cfg.classes,
+                   mlp_ratio=cfg.mlp_ratio, seq=cfg.seq, seq0=cfg.seq0,
+                   pd=cfg.pd, hsl=cfg.hsl, hl=cfg.hl, hd=cfg.hd, ffl=cfg.ffl,
+                   params_total=cfg.params_total(),
+                   params_per_worker=cfg.params_per_worker()),
+        buckets=[dict(name=M.bucket_name(f), gamma=1 - f,
+                      keep_hs=M.keep_count(cfg.hs, f),
+                      keep_ffl=M.keep_count(cfg.ffl, f))
+                 for f in M.KEEP_FRACS],
+        mig_buckets=sorted({M.keep_count(cfg.ffl, f) for f in M.MIG_FRACS}),
+        executables=[],
+    )
+    for name, fn, ins, outs, meta in executable_inventory(cfg):
+        t0 = time.time()
+        args = [_sds(i["dims"], i["dtype"]) for i in ins]
+        lowered = jax.jit(fn, keep_unused=True).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(mdir, fname), "w") as f:
+            f.write(text)
+        manifest["executables"].append(
+            dict(name=name, file=fname, inputs=ins, outputs=outs, **meta))
+        if verbose:
+            print(f"  [{cfg.name}] {name}: {len(text)} chars "
+                  f"({time.time() - t0:.1f}s)")
+    with open(os.path.join(mdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if with_golden:
+        t0 = time.time()
+        G.write_bundle(os.path.join(mdir, "golden.bin"), G.build_golden(cfg))
+        if verbose:
+            print(f"  [{cfg.name}] golden.bin ({time.time() - t0:.1f}s)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--models", nargs="+", default=["vit-tiny", "vit-s", "vit-m"],
+                    choices=sorted(M.PRESETS) + ["all"])
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    models = sorted(M.PRESETS) if "all" in args.models else args.models
+    for name in models:
+        cfg = M.PRESETS[name]
+        print(f"[aot] building {name}: hs={cfg.hs} depth={cfg.depth} "
+              f"e={cfg.e} params={cfg.params_total() / 1e6:.1f}M")
+        build_model(cfg, args.out, with_golden=(name == "vit-tiny"))
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,244 @@
+"""Golden-bundle generator: cross-language numerics ground truth.
+
+Simulates the Rust engine's exact dataflow in JAX — e worker shards, the
+branch executables of ``model.py``, exact-sum collectives, plain SGD — and
+writes a binary bundle the Rust integration tests replay step-for-step.
+If Rust's PJRT path, shard bookkeeping, residual adds, collectives,
+lineage scatter, or optimizer diverge from this simulation, the golden
+test fails.
+
+Bundle contents (``tensors.bin`` format, see ``write_bundle``):
+  params.<w>.<name>   per-worker shard tensors (worker-major)
+  batch.patches / batch.labels
+  keep_idx.qkv / keep_idx.ffl    the pruned-step index sets (worker 2)
+  golden.loss_step{0..2}         unpruned 3-step SGD loss trajectory
+  golden.acc_step0               ncorrect at step 0
+  golden.pruned_loss             loss of a step where worker 2 runs γ=0.5
+  golden.grad_ck.<name>          checksums (sum, |sum|) of step-0 grads
+
+Binary layout: u32 LE header length, JSON header
+``{"entries": [{name, dims, dtype, offset_elems, count}]}``, then raw
+little-endian element data. Reader: ``rust/src/util/bin.rs``.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+SGD_LR = 0.05
+
+
+# ---------------------------------------------------------------------------
+# tensors.bin writer
+# ---------------------------------------------------------------------------
+
+def write_bundle(path: str, tensors: dict):
+    """tensors: name -> np.ndarray (f32 or i32)."""
+    entries = []
+    blobs = []
+    offset = 0
+    for name, arr in tensors.items():
+        arr = np.asarray(arr)
+        if arr.dtype in (np.float64,):
+            arr = arr.astype(np.float32)
+        if arr.dtype in (np.int64,):
+            arr = arr.astype(np.int32)
+        assert arr.dtype in (np.float32, np.int32), (name, arr.dtype)
+        dtype = "f32" if arr.dtype == np.float32 else "i32"
+        entries.append(dict(name=name, dims=list(arr.shape), dtype=dtype,
+                            offset_elems=offset, count=int(arr.size)))
+        blobs.append(arr.astype("<f4" if dtype == "f32" else "<i4").tobytes())
+        offset += int(arr.size)
+    header = json.dumps({"entries": entries}).encode()
+    with open(path, "wb") as f:
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        for b in blobs:
+            f.write(b)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic dataset (must match rust/src/data/synthetic.rs exactly)
+# ---------------------------------------------------------------------------
+
+def synth_batch(cfg: M.ModelCfg, seed: int):
+    """Class-template + noise patches.  Deterministic given (cfg, seed);
+    the Rust generator reproduces this from the same bundle, so only the
+    golden batch itself needs to cross the language boundary."""
+    rng = np.random.default_rng(seed)
+    templates = rng.normal(size=(cfg.classes, cfg.seq0, cfg.pd)).astype(np.float32)
+    labels = rng.integers(0, cfg.classes, size=(cfg.bs,)).astype(np.int32)
+    noise = rng.normal(size=(cfg.bs, cfg.seq0, cfg.pd)).astype(np.float32)
+    patches = 0.5 * templates[labels] + 0.5 * noise
+    return patches, labels
+
+
+# ---------------------------------------------------------------------------
+# Engine simulation (mirrors rust/src/train/trainer.rs step dataflow)
+# ---------------------------------------------------------------------------
+
+def _shards(full, cfg):
+    return [[M.shard_block(blk, w, cfg) for blk in full["blocks"]]
+            for w in range(cfg.e)]
+
+
+def sim_step(full, shards, patches, labels, cfg, qkv_idx=None, ffl_idx=None,
+             straggler=None):
+    """One engine step.  Returns (loss, ncorrect, new_full, new_shards).
+
+    ``qkv_idx``/``ffl_idx``: keep-index sets applied on ``straggler``'s
+    blocks (ZERO-resizing, Zero imputation — vjp scatter already leaves
+    zeros).  Replicated params are updated from worker 0's (identical)
+    grads, shard params from their owner's grads.
+    """
+    e = cfg.e
+    full_hs = jnp.arange(cfg.hs, dtype=jnp.int32)
+    ones_hs = jnp.ones((cfg.hs,), jnp.float32)
+    full_ffl = jnp.arange(cfg.ffl, dtype=jnp.int32)
+    ones_ffl = jnp.ones((cfg.ffl,), jnp.float32)
+
+    def idx_for(w, kind):
+        if straggler is not None and w == straggler:
+            if kind == "qkv" and qkv_idx is not None:
+                return qkv_idx, jnp.ones((qkv_idx.shape[0],), jnp.float32)
+            if kind == "ffl" and ffl_idx is not None:
+                return ffl_idx, jnp.ones((ffl_idx.shape[0],), jnp.float32)
+        return (full_hs, ones_hs) if kind == "qkv" else (full_ffl, ones_ffl)
+
+    x = M.embed_fwd(patches, full["w_patch"], full["pos"], full["cls"], cfg)
+    attn_in, mlp_in = [], []
+    for k in range(cfg.depth):
+        attn_in.append(x)
+        part = jnp.zeros_like(x)
+        for w in range(e):
+            s = shards[w][k]
+            qi, qm = idx_for(w, "qkv")
+            part = part + M.attn_fwd(x, s["ln1_g"], s["ln1_b"], s["wqkv"],
+                                     s["wo"], qi, qm, cfg)
+        x = x + part  # all-reduce + residual
+        mlp_in.append(x)
+        part = jnp.zeros_like(x)
+        for w in range(e):
+            s = shards[w][k]
+            qi, qm = idx_for(w, "qkv")
+            fi, fm = idx_for(w, "ffl")
+            part = part + M.mlp_fwd(x, s["ln2_g"], s["ln2_b"], s["w1"],
+                                    s["w2"], qi, qm, fi, fm, cfg)
+        x = x + part
+
+    hf = M.build_head_fwdbwd(cfg)
+    loss, ncorrect, dx, dlnf_g, dlnf_b, dwh, dbh = hf(
+        x, full["lnf_g"], full["lnf_b"], full["w_head"], full["b_head"], labels)
+
+    grads = {w: [dict() for _ in range(cfg.depth)] for w in range(e)}
+    rep = dict(lnf_g=dlnf_g, lnf_b=dlnf_b, w_head=dwh, b_head=dbh)
+    dy = dx
+    for k in reversed(range(cfg.depth)):
+        # MLP branch backward
+        dpart = jnp.zeros_like(dy)
+        for w in range(e):
+            s = shards[w][k]
+            qi, qm = idx_for(w, "qkv")
+            fi, fm = idx_for(w, "ffl")
+            bwd = M.build_mlp_bwd(cfg)
+            dxw, dg, db, dw1, dw2 = bwd(
+                mlp_in[k], s["ln2_g"], s["ln2_b"], s["w1"], s["w2"],
+                qi, qm, fi, fm, dy)
+            dpart = dpart + dxw
+            grads[w][k].update(ln2_g=dg, ln2_b=db, w1=dw1, w2=dw2)
+        # ln grads are all-reduced (identical update on all replicas)
+        ln2_g_sum = sum(grads[w][k]["ln2_g"] for w in range(e))
+        ln2_b_sum = sum(grads[w][k]["ln2_b"] for w in range(e))
+        for w in range(e):
+            grads[w][k]["ln2_g"] = ln2_g_sum
+            grads[w][k]["ln2_b"] = ln2_b_sum
+        dy = dy + dpart
+        # Attention branch backward
+        dpart = jnp.zeros_like(dy)
+        for w in range(e):
+            s = shards[w][k]
+            qi, qm = idx_for(w, "qkv")
+            bwd = M.build_attn_bwd(cfg)
+            dxw, dg, db, dwq, dwo = bwd(
+                attn_in[k], s["ln1_g"], s["ln1_b"], s["wqkv"], s["wo"],
+                qi, qm, dy)
+            dpart = dpart + dxw
+            grads[w][k].update(ln1_g=dg, ln1_b=db, wqkv=dwq, wo=dwo)
+        ln1_g_sum = sum(grads[w][k]["ln1_g"] for w in range(e))
+        ln1_b_sum = sum(grads[w][k]["ln1_b"] for w in range(e))
+        for w in range(e):
+            grads[w][k]["ln1_g"] = ln1_g_sum
+            grads[w][k]["ln1_b"] = ln1_b_sum
+        dy = dy + dpart
+
+    eb = M.build_embed_bwd(cfg)
+    dwp, dpos, dcls = eb(patches, full["w_patch"], full["pos"], full["cls"], dy)
+    rep.update(w_patch=dwp, pos=dpos, cls=dcls)
+
+    # SGD
+    new_full = dict(full)
+    for name, g in rep.items():
+        new_full[name] = full[name] - SGD_LR * g
+    new_shards = []
+    for w in range(e):
+        ws = []
+        for k in range(cfg.depth):
+            s, g = shards[w][k], grads[w][k]
+            ws.append({n: s[n] - SGD_LR * g[n] for n in s})
+        new_shards.append(ws)
+    # blocks inside new_full only matter for reference checks; keep stale.
+    return float(loss), int(ncorrect), new_full, new_shards, grads
+
+
+def build_golden(cfg: M.ModelCfg, seed: int = 42):
+    key = jax.random.PRNGKey(seed)
+    full = M.init_full_params(cfg, key)
+    shards = _shards(full, cfg)
+    patches, labels = synth_batch(cfg, seed)
+
+    out = {}
+    for w in range(cfg.e):
+        for k, blk in enumerate(shards[w]):
+            for n, v in blk.items():
+                out[f"params.{w}.blk{k}.{n}"] = np.asarray(v)
+    for n in ("w_patch", "pos", "cls", "lnf_g", "lnf_b", "w_head", "b_head"):
+        out[f"params.rep.{n}"] = np.asarray(full[n])
+    out["batch.patches"] = patches
+    out["batch.labels"] = labels
+
+    # unpruned 3-step trajectory on the same batch
+    f, s = full, shards
+    losses, accs, g0 = [], [], None
+    for step in range(3):
+        loss, ncorrect, f, s, grads = sim_step(f, s, patches, labels, cfg)
+        losses.append(loss)
+        accs.append(ncorrect)
+        if step == 0:
+            g0 = grads
+    out["golden.loss_steps"] = np.asarray(losses, np.float32)
+    out["golden.acc_step0"] = np.asarray([accs[0]], np.int32)
+    for n in ("wqkv", "wo", "w1", "w2", "ln1_g"):
+        g = np.asarray(g0[1][0][n])
+        out[f"golden.grad_ck.{n}"] = np.asarray(
+            [g.sum(), np.abs(g).sum()], np.float32)
+
+    # pruned step: worker 2 at γ=0.5 with deterministic even-index keeps
+    kq = M.keep_count(cfg.hs, 0.5)
+    kf = M.keep_count(cfg.ffl, 0.5)
+    qkv_idx = jnp.asarray(np.arange(0, 2 * kq, 2) % cfg.hs, jnp.int32)
+    ffl_idx = jnp.asarray(np.arange(0, 2 * kf, 2) % cfg.ffl, jnp.int32)
+    loss_p, _, _, _, _ = sim_step(full, _shards(full, cfg), patches, labels,
+                                  cfg, qkv_idx=qkv_idx, ffl_idx=ffl_idx,
+                                  straggler=2 % cfg.e)
+    out["keep_idx.qkv"] = np.asarray(qkv_idx)
+    out["keep_idx.ffl"] = np.asarray(ffl_idx)
+    out["golden.pruned_loss"] = np.asarray([loss_p], np.float32)
+    out["golden.sgd_lr"] = np.asarray([SGD_LR], np.float32)
+    return out

@@ -1,0 +1,3 @@
+# L1: Pallas kernel(s) for the paper's compute hot-spot.
+from .pruned_matmul import pruned_matmul, pruned_matmul_fwd_only, pick_block, vmem_bytes  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,147 @@
+"""Layer-1 Pallas kernel: the paper's resized GEMM hot-spot.
+
+ZERO-resizing (paper §III-A) shrinks the *contraction* dimension of the
+linear-layer GEMMs on straggling tasks: prune ``hs·γ`` columns of the input
+and the matching rows of the weight, keep the output shape fixed.  This
+kernel expresses exactly that contract:
+
+    pruned_matmul(x[M,K], w[K,N], keep_idx[K'], mask[K']) =
+        (x[:, keep_idx] * mask) @ w[keep_idx, :]
+
+``keep_idx`` is a *runtime* int32 tensor, so which columns survive is a
+runtime decision (priority selection, lineage, migration assignment all
+live in the Rust coordinator); only K' — the pruning *bucket* — is static.
+``mask`` is almost always all-ones; the migration path pads ``keep_idx`` to
+the bucket size with arbitrary indices and zeroes them out through the
+mask, keeping migrated arithmetic exact (see rust/src/migration/).
+
+TPU mapping (DESIGN.md §9): the gather is the HBM→VMEM re-layout of a
+K'-length contraction streamed through (bm, bk)×(bk, bn) MXU tiles; output
+tiles never change shape with γ, which is the paper's consistency
+constraint expressed in tiling terms.  On this CPU-only testbed the kernel
+runs under ``interpret=True`` (real-TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot execute); correctness is pinned against the
+pure-jnp oracle in ``ref.py``.
+
+The backward pass is a hand-written ``custom_vjp`` that mirrors the paper's
+two backward dataflows (§II-B):
+
+    grad_input :  dx[:, idx] += (dy @ w[idx, :]^T) * mask      (scatter-add)
+    grad_weight:  dw[idx, :] += mask · (x[:, idx]^T @ dy)      (scatter-add)
+
+The scatters leave exact zeros in the pruned positions — the paper's
+Zero-imputation default; Average/Same are host-side re-imputations applied
+by the Rust lineage module on top of the same artifact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+__all__ = ["pruned_matmul", "pruned_matmul_fwd_only", "pick_block", "vmem_bytes"]
+
+
+def pick_block(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= ``target``.
+
+    Shapes are static at trace time so the block search is free; favouring
+    big blocks keeps the grid small under interpret mode and maps to
+    128-wide MXU tiles when the dims allow it.
+    """
+    for c in range(min(n, target), 0, -1):
+        if n % c == 0:
+            return c
+    return n
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, kfull: int, itemsize: int = 4) -> int:
+    """VMEM footprint estimate of one grid step (DESIGN.md §9 / §Perf).
+
+    x block is (bm, kfull) because the gather indexes into the full
+    contraction (scalar-prefetch DMA on real TPU would stream only the
+    gathered bk slice; interpret mode materializes the block).
+    """
+    return itemsize * (bm * kfull + kfull * bn + bm * bn + bk)
+
+
+def _mm_kernel(idx_ref, mask_ref, x_ref, w_ref, o_ref, *, nk: int):
+    """Grid (M/bm, N/bn, K'/bk); o block is revisited across k and used as
+    the f32 accumulator (consistency constraint: o's tiling is γ-free)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    idx = idx_ref[...]                      # [bk] int32 gather indices
+    mask = mask_ref[...]                    # [bk] f32 validity mask
+    xb = x_ref[...][:, idx] * mask[None, :]  # [bm, bk] gathered+masked
+    wb = w_ref[...][idx, :]                 # [bk, bn] gathered
+    o_ref[...] += jnp.dot(xb, wb, preferred_element_type=o_ref.dtype)
+
+
+def pruned_matmul_fwd_only(x, w, idx, mask):
+    """The raw pallas_call — no autodiff wiring. Prefer ``pruned_matmul``."""
+    m, kfull = x.shape
+    _, n = w.shape
+    (kp,) = idx.shape
+    bm = pick_block(m, 128)
+    bn = pick_block(n, 128)
+    bk = pick_block(kp, 128)
+    grid = (m // bm, n // bn, kp // bk)
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk,), lambda i, j, k: (k,)),
+            pl.BlockSpec((bk,), lambda i, j, k: (k,)),
+            pl.BlockSpec((bm, kfull), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((kfull, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(idx, mask, x, w)
+
+
+@jax.custom_vjp
+def pruned_matmul(x, w, idx, mask):
+    """(x[:, idx] * mask) @ w[idx, :] with the paper's pruned backward."""
+    return pruned_matmul_fwd_only(x, w, idx, mask)
+
+
+def _fwd(x, w, idx, mask):
+    return pruned_matmul_fwd_only(x, w, idx, mask), (x, w, idx, mask)
+
+
+def _bwd(res, dy):
+    x, w, idx, mask = res
+    m, _ = x.shape
+    n = dy.shape[1]
+    ones_n = jnp.ones((n,), jnp.float32)
+    ones_m = jnp.ones((m,), jnp.float32)
+    ar_n = jnp.arange(n, dtype=jnp.int32)
+    ar_m = jnp.arange(m, dtype=jnp.int32)
+
+    # grad_input dataflow: compact dxc = dy @ w[idx,:]^T, scatter-ADD so
+    # mask-padded duplicate indices contribute exactly zero.
+    wg = w[idx, :]
+    dxc = pruned_matmul_fwd_only(dy, wg.T, ar_n, ones_n) * mask[None, :]
+    dx = jnp.zeros_like(x).at[:, idx].add(dxc)
+
+    # grad_weight dataflow: compact dwc = (x[:,idx]*mask)^T @ dy, scatter-ADD
+    # into zeros — the Zero-imputed grad_weight of paper Fig. 2 (right).
+    xg = x[:, idx] * mask[None, :]
+    dwc = pruned_matmul_fwd_only(xg.T, dy, ar_m, ones_m)
+    dw = jnp.zeros_like(w).at[idx, :].add(dwc)
+
+    # idx/mask are structural inputs — no cotangent (float0 / zeros).
+    return dx, dw, np.zeros(idx.shape, jax.dtypes.float0), jnp.zeros_like(mask)
+
+
+pruned_matmul.defvjp(_fwd, _bwd)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Layer-1 kernel and the resizing dataflows.
+
+These are the correctness ground truth: every pallas path in
+``pruned_matmul.py`` and every model branch in ``model.py`` is pinned
+against a function here by ``python/tests/``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "pruned_matmul_ref",
+    "grad_input_ref",
+    "grad_weight_ref",
+    "expand_cols_zero",
+    "expand_rows_zero",
+]
+
+
+def pruned_matmul_ref(x, w, idx, mask=None):
+    """(x[:, idx] * mask) @ w[idx, :] — paper Fig. 2 (left), forward."""
+    xg = x[:, idx]
+    if mask is not None:
+        xg = xg * mask[None, :]
+    return xg @ w[idx, :]
+
+
+def grad_input_ref(dy, w, idx, mask, kfull):
+    """Zero-imputed grad_input: dx[:, idx] += (dy @ w[idx,:]^T) * mask."""
+    dxc = (dy @ w[idx, :].T) * mask[None, :]
+    return jnp.zeros((dy.shape[0], kfull), dy.dtype).at[:, idx].add(dxc)
+
+
+def grad_weight_ref(x, dy, idx, mask, kfull):
+    """Zero-imputed grad_weight of paper Fig. 2 (right):
+    dw[idx, :] += (x[:, idx] * mask)^T @ dy, zeros at pruned rows."""
+    dwc = (x[:, idx] * mask[None, :]).T @ dy
+    return jnp.zeros((kfull, dy.shape[1]), dy.dtype).at[idx, :].add(dwc)
+
+
+def expand_cols_zero(compact, idx, kfull):
+    """Lineage re-expansion (paper's lookup-table recovery), columns."""
+    return jnp.zeros((compact.shape[0], kfull), compact.dtype).at[:, idx].set(compact)
+
+
+def expand_rows_zero(compact, idx, kfull):
+    """Lineage re-expansion, rows."""
+    return jnp.zeros((kfull, compact.shape[1]), compact.dtype).at[idx, :].set(compact)

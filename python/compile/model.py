@@ -1,0 +1,417 @@
+"""Layer-2: ViT shard programs under 1D tensor parallelism (Megatron split).
+
+The paper trains ViT-1B/3B on Colossal-AI's 1D tensor parallelism: within
+each transformer block the first GEMM of a branch is column-split across
+the ``e`` tasks, the second is row-split, so each branch needs exactly one
+all-reduce per direction (paper §II-B).  This module defines the
+*per-worker branch functions* — everything between two collectives — and
+builders that close them over a static pruning bucket.  ``aot.py`` lowers
+each builder to an HLO-text artifact; the Rust coordinator owns residual
+adds, collectives, optimizer, lineage, and scheduling.
+
+Every TP GEMM goes through the Layer-1 ``pruned_matmul`` kernel, so the
+resized contraction (ZERO-resizing) and the migrated column sets
+(SEMI-migration) are both runtime ``keep_idx`` choices over the same
+artifacts.
+
+Shard layout per worker (column-then-row split):
+
+    wqkv [hs, 3·hsl]   column-split of full [hs, 3·hs]   (hsl = hs/e)
+    wo   [hsl, hs]     row-split    of full [hs, hs]
+    w1   [hs, ffl]     column-split of full [hs, 4·hs]   (ffl = 4·hs/e)
+    w2   [ffl, hs]     row-split    of full [4·hs, hs]
+    ln*/embed/head     replicated
+
+Prunable contractions (the paper's "linear projections and
+transformations"): QKV in-dim (hs), FC1 in-dim (hs), FC2 in-dim (ffl).
+FC1's *output* columns are co-pruned with FC2's input rows so the pruned
+intermediate is never materialized — the resizing saves both GEMMs, exactly
+the FFN workload model of paper §II-B.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pruned_matmul
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+#: Static pruning buckets: fraction of the contraction that SURVIVES.
+#: γ = 1 - keep_frac ∈ {0, 0.25, 0.5, 0.75, 0.875}; Eq.(1) demands are
+#: rounded *up* to the nearest bucket by the Rust coordinator.
+KEEP_FRACS = (1.0, 0.75, 0.5, 0.25, 0.125)
+
+#: Migration-slice buckets (fraction of a contraction a receiver computes
+#: for a straggler).  Padded to size with the kernel's validity mask.
+MIG_FRACS = (0.5, 0.25, 0.125)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    """Static model/parallelism configuration an artifact set is built for."""
+
+    name: str
+    hs: int         # hidden size
+    depth: int      # number of transformer blocks
+    heads: int
+    e: int          # tensor-parallel degree (paper's number of tasks)
+    bs: int         # per-iteration batch size
+    img: int = 32
+    patch: int = 4
+    chans: int = 3
+    classes: int = 10
+    mlp_ratio: int = 4
+
+    def __post_init__(self):
+        assert self.hs % self.heads == 0, "hs must divide into heads"
+        assert self.heads % self.e == 0, "heads must split across e workers"
+        assert self.img % self.patch == 0
+
+    @property
+    def seq0(self) -> int:
+        return (self.img // self.patch) ** 2
+
+    @property
+    def seq(self) -> int:
+        # +1 class token — the paper's sql=65 for 32x32/p4.
+        return self.seq0 + 1
+
+    @property
+    def pd(self) -> int:
+        return self.chans * self.patch * self.patch
+
+    @property
+    def hsl(self) -> int:
+        return self.hs // self.e
+
+    @property
+    def hl(self) -> int:
+        return self.heads // self.e
+
+    @property
+    def hd(self) -> int:
+        return self.hs // self.heads
+
+    @property
+    def ffl(self) -> int:
+        return self.mlp_ratio * self.hs // self.e
+
+    @property
+    def tokens(self) -> int:
+        return self.bs * self.seq
+
+    def params_per_worker(self) -> int:
+        blk = 4 * self.hs + self.hs * 3 * self.hsl + self.hsl * self.hs \
+            + self.hs * self.ffl + self.ffl * self.hs
+        emb = self.pd * self.hs + self.seq * self.hs + self.hs
+        head = 2 * self.hs + self.hs * self.classes + self.classes
+        return self.depth * blk + emb + head
+
+    def params_total(self) -> int:
+        """Global parameter count (shards summed once, replicas once)."""
+        blk = 4 * self.hs + self.hs * 3 * self.hs + self.hs * self.hs \
+            + self.hs * self.mlp_ratio * self.hs + self.mlp_ratio * self.hs * self.hs
+        emb = self.pd * self.hs + self.seq * self.hs + self.hs
+        head = 2 * self.hs + self.hs * self.classes + self.classes
+        return self.depth * blk + emb + head
+
+
+#: Artifact-set presets.  vit-tiny: unit tests + rust golden check;
+#: vit-s / vit-m: the two "paper scale points" for benches (stand-ins for
+#: ViT-1B and ViT-3B — see DESIGN.md §2 substitutions); vit-100m: the
+#: end-to-end example (~100M parameters).
+PRESETS = {
+    "vit-tiny": ModelCfg("vit-tiny", hs=128, depth=2, heads=4, e=4, bs=8),
+    "vit-s": ModelCfg("vit-s", hs=256, depth=4, heads=8, e=8, bs=16),
+    "vit-m": ModelCfg("vit-m", hs=384, depth=6, heads=8, e=8, bs=16),
+    "vit-100m": ModelCfg("vit-100m", hs=768, depth=12, heads=12, e=4, bs=8),
+}
+
+
+def keep_count(k: int, frac: float) -> int:
+    """Bucket keep-size: multiple of 8 (lane width), at least 8."""
+    return max(8, int(round(k * frac / 8)) * 8)
+
+
+def bucket_name(frac: float) -> str:
+    """Bucket suffix by pruning percentage, e.g. 0.75 keep → 'g25'."""
+    return f"g{int(round((1.0 - frac) * 100)):02d}"
+
+
+# ---------------------------------------------------------------------------
+# Numerics helpers
+# ---------------------------------------------------------------------------
+
+def layernorm(x, g, b, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def _full_idx(k: int):
+    return jnp.arange(k, dtype=jnp.int32), jnp.ones((k,), jnp.float32)
+
+
+def _pm(x2d, w):
+    """pruned_matmul over the full (unpruned) contraction."""
+    idx, mask = _full_idx(x2d.shape[1])
+    return pruned_matmul(x2d, w, idx, mask)
+
+
+# ---------------------------------------------------------------------------
+# Branch functions (one per-worker program between collectives)
+# ---------------------------------------------------------------------------
+
+def embed_fwd(patches, w_patch, pos, cls, cfg: ModelCfg):
+    """Patch embedding + cls token + positional embedding (replicated)."""
+    b = patches.shape[0]
+    tok = _pm(patches.reshape(b * cfg.seq0, cfg.pd), w_patch)
+    tok = tok.reshape(b, cfg.seq0, cfg.hs)
+    cls_tok = jnp.broadcast_to(cls[None, None, :], (b, 1, cfg.hs))
+    return jnp.concatenate([cls_tok, tok], axis=1) + pos[None, :, :]
+
+
+def attn_fwd(x, ln_g, ln_b, wqkv, wo, idx, mask, cfg: ModelCfg):
+    """Attention branch, this worker's heads; returns the row-split partial
+    (Rust all-reduces it).  ``idx`` prunes the QKV contraction (hs)."""
+    b, s, hs = x.shape
+    xln = layernorm(x, ln_g, ln_b)
+    qkv = pruned_matmul(xln.reshape(b * s, hs), wqkv, idx, mask)
+    qkv = qkv.reshape(b, s, 3, cfg.hl, cfg.hd)
+    q = qkv[:, :, 0].transpose(0, 2, 1, 3)  # [b, hl, s, hd]
+    k = qkv[:, :, 1].transpose(0, 2, 1, 3)
+    v = qkv[:, :, 2].transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(cfg.hd)
+    att = jax.nn.softmax(att, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b * s, cfg.hsl)
+    y = _pm(o, wo)  # row-split GEMM → partial sum
+    return y.reshape(b, s, hs)
+
+
+def mlp_fwd(x, ln_g, ln_b, w1, w2, idx1, mask1, idx2, mask2, cfg: ModelCfg):
+    """FFN branch.  ``idx1`` prunes FC1's contraction (hs); ``idx2``
+    co-prunes FC1's output columns and FC2's contraction rows (ffl), so the
+    pruned intermediate h is never computed — both GEMMs shrink, matching
+    the paper's FFN workload model."""
+    b, s, hs = x.shape
+    xln = layernorm(x, ln_g, ln_b).reshape(b * s, hs)
+    w1g = w1[:, idx2] * mask2[None, :]        # N-side co-prune of FC1
+    h = pruned_matmul(xln, w1g, idx1, mask1)  # [b·s, |idx2|]
+    h = gelu(h)
+    kp2 = idx2.shape[0]
+    ar, ones = _full_idx(kp2)
+    w2g = w2[idx2, :] * mask2[:, None]        # K-side prune of FC2
+    y = pruned_matmul(h, w2g, ar, ones)       # [b·s, hs] partial sum
+    return y.reshape(b, s, hs)
+
+
+def head_loss(x, lnf_g, lnf_b, w_head, b_head, labels, cfg: ModelCfg):
+    """Final LN → cls-token pool → classifier → mean softmax-CE.
+    Replicated on every worker (inputs are identical post all-reduce)."""
+    xln = layernorm(x, lnf_g, lnf_b)
+    pooled = xln[:, 0, :]
+    logits = _pm(pooled, w_head) + b_head[None, :]
+    logp = jax.nn.log_softmax(logits)
+    b = labels.shape[0]
+    loss = -jnp.mean(logp[jnp.arange(b), labels])
+    return loss, logits
+
+
+# ---------------------------------------------------------------------------
+# Executable builders: functions aot.py lowers, one per (role, bucket).
+# All return tuples of arrays; input order is what the manifest documents.
+# ---------------------------------------------------------------------------
+
+def build_embed_fwd(cfg: ModelCfg):
+    def f(patches, w_patch, pos, cls):
+        return (embed_fwd(patches, w_patch, pos, cls, cfg),)
+    return f
+
+
+def build_embed_bwd(cfg: ModelCfg):
+    def f(patches, w_patch, pos, cls, dy):
+        fwd = lambda wp, p, c: embed_fwd(patches, wp, p, c, cfg)
+        _, vjp = jax.vjp(fwd, w_patch, pos, cls)
+        return vjp(dy)  # (dw_patch, dpos, dcls)
+    return f
+
+
+def build_attn_fwd(cfg: ModelCfg):
+    def f(x, ln_g, ln_b, wqkv, wo, idx, mask):
+        return (attn_fwd(x, ln_g, ln_b, wqkv, wo, idx, mask, cfg),)
+    return f
+
+
+def build_attn_bwd(cfg: ModelCfg):
+    """Rematerializing vjp of the attention branch: recomputes the branch
+    internally so only the branch *input* is stored between fwd and bwd —
+    the pruned activations are temporary, per the consistency constraint."""
+    def f(x, ln_g, ln_b, wqkv, wo, idx, mask, dy):
+        fwd = lambda x_, g_, b_, wq_, wo_: attn_fwd(
+            x_, g_, b_, wq_, wo_, idx, mask, cfg)
+        _, vjp = jax.vjp(fwd, x, ln_g, ln_b, wqkv, wo)
+        return vjp(dy)  # (dx, dln_g, dln_b, dwqkv, dwo)
+    return f
+
+
+def build_mlp_fwd(cfg: ModelCfg):
+    def f(x, ln_g, ln_b, w1, w2, idx1, mask1, idx2, mask2):
+        return (mlp_fwd(x, ln_g, ln_b, w1, w2, idx1, mask1, idx2, mask2, cfg),)
+    return f
+
+
+def build_mlp_bwd(cfg: ModelCfg):
+    def f(x, ln_g, ln_b, w1, w2, idx1, mask1, idx2, mask2, dy):
+        fwd = lambda x_, g_, b_, w1_, w2_: mlp_fwd(
+            x_, g_, b_, w1_, w2_, idx1, mask1, idx2, mask2, cfg)
+        _, vjp = jax.vjp(fwd, x, ln_g, ln_b, w1, w2)
+        return vjp(dy)  # (dx, dln_g, dln_b, dw1, dw2)
+    return f
+
+
+def build_head_fwdbwd(cfg: ModelCfg):
+    """Loss + metrics + all head gradients in one executable (the head is
+    replicated and cheap; fusing fwd+bwd avoids a second artifact)."""
+    def f(x, lnf_g, lnf_b, w_head, b_head, labels):
+        def lf(x_, g_, b_, wh_, bh_):
+            return head_loss(x_, g_, b_, wh_, bh_, labels, cfg)[0]
+        loss, vjp = jax.vjp(lf, x, lnf_g, lnf_b, w_head, b_head)
+        dx, dg, db, dwh, dbh = vjp(jnp.ones(()))
+        _, logits = head_loss(x, lnf_g, lnf_b, w_head, b_head, labels, cfg)
+        ncorrect = jnp.sum(
+            (jnp.argmax(logits, axis=-1) == labels).astype(jnp.int32))
+        return loss, ncorrect, dx, dg, db, dwh, dbh
+    return f
+
+
+def build_head_infer(cfg: ModelCfg):
+    def f(x, lnf_g, lnf_b, w_head, b_head, labels):
+        loss, logits = head_loss(x, lnf_g, lnf_b, w_head, b_head, labels, cfg)
+        ncorrect = jnp.sum(
+            (jnp.argmax(logits, axis=-1) == labels).astype(jnp.int32))
+        return loss, ncorrect
+    return f
+
+
+# --- Migration slice programs (paper §IV-A) ---------------------------------
+# Workload migration operates on the FFN branch at ffl-slice granularity
+# (the paper's own running example is the FFN layer): a receiver computes a
+# self-contained slice of the straggler's FFN —
+#
+#     y_mig = gelu(LN(x) @ w1c) @ w2c
+#
+# over *compact broadcast* weights w1c = w1[:, mig] ([hs, kb]) and
+# w2c = w2[mig, :] ([kb, hs]).  x and the LN params are replicated under
+# column-wise TP, so only the weights move (the paper: "the input matrix
+# has already been available everywhere").  The slice output is a [b,s,hs]
+# partial whose collection folds into the branch all-reduce — the paper's
+# reduce-merging — and the backward slice's dx/dLN partials fold into the
+# backward all-reduce the same way.  Compact weight grads are returned to
+# the straggler, which lineage-scatters them (exact — no imputation).
+#
+# Rust zero-pads w1c/w2c up to the kb bucket: zero FC1 columns give
+# gelu(0)=0 activations which meet zero FC2 rows, so padding contributes
+# exactly nothing.  Attention GEMMs are balanced by resizing only; this
+# caps the migratable share of a block at the FFN's ~2/3 of its FLOPs,
+# which is why pure MIG cannot fully catch up at large χ (paper Fig. 10).
+
+def build_mlp_mig_fwd(kb: int):
+    def f(x, ln_g, ln_b, w1c, w2c):
+        b, s, hs = x.shape
+        xln = layernorm(x, ln_g, ln_b).reshape(b * s, hs)
+        h = gelu(_pm(xln, w1c))
+        y = _pm(h, w2c)
+        return (y.reshape(b, s, hs),)
+    return f
+
+
+def build_mlp_mig_bwd(kb: int):
+    def f(x, ln_g, ln_b, w1c, w2c, dy):
+        def fwd(x_, g_, b_, w1_, w2_):
+            b, s, hs = x_.shape
+            xln = layernorm(x_, g_, b_).reshape(b * s, hs)
+            return _pm(gelu(_pm(xln, w1_)), w2_).reshape(b, s, hs)
+        _, vjp = jax.vjp(fwd, x, ln_g, ln_b, w1c, w2c)
+        return vjp(dy)  # (dx_partial, dln_g, dln_b, dw1c, dw2c)
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Reference model (monolithic, unsharded) + shard mapping — tests/golden.
+# ---------------------------------------------------------------------------
+
+def init_full_params(cfg: ModelCfg, key):
+    """Full (unsharded) parameter pytree with ViT-standard init."""
+    ks = jax.random.split(key, 4 * cfg.depth + 3)
+    std = 0.02
+    blocks = []
+    for i in range(cfg.depth):
+        k0, k1, k2, k3 = ks[4 * i: 4 * i + 4]
+        blocks.append(dict(
+            ln1_g=jnp.ones((cfg.hs,)), ln1_b=jnp.zeros((cfg.hs,)),
+            wqkv=jax.random.normal(k0, (cfg.hs, 3, cfg.heads, cfg.hd)) * std,
+            wo=jax.random.normal(k1, (cfg.heads, cfg.hd, cfg.hs)) * std,
+            ln2_g=jnp.ones((cfg.hs,)), ln2_b=jnp.zeros((cfg.hs,)),
+            w1=jax.random.normal(k2, (cfg.hs, cfg.e, cfg.ffl)) * std,
+            w2=jax.random.normal(k3, (cfg.e, cfg.ffl, cfg.hs)) * std,
+        ))
+    kp, kh = ks[-2:]
+    return dict(
+        blocks=blocks,
+        w_patch=jax.random.normal(kp, (cfg.pd, cfg.hs)) * std,
+        pos=jnp.zeros((cfg.seq, cfg.hs)),
+        cls=jnp.zeros((cfg.hs,)),
+        lnf_g=jnp.ones((cfg.hs,)), lnf_b=jnp.zeros((cfg.hs,)),
+        w_head=jax.random.normal(kh, (cfg.hs, cfg.classes)) * std,
+        b_head=jnp.zeros((cfg.classes,)),
+    )
+
+
+def shard_block(blk, w: int, cfg: ModelCfg):
+    """Extract worker ``w``'s 1D-TP shard of one block's full params."""
+    lo, hi = w * cfg.hl, (w + 1) * cfg.hl
+    return dict(
+        ln1_g=blk["ln1_g"], ln1_b=blk["ln1_b"],
+        wqkv=blk["wqkv"][:, :, lo:hi, :].reshape(cfg.hs, 3 * cfg.hsl),
+        wo=blk["wo"][lo:hi].reshape(cfg.hsl, cfg.hs),
+        ln2_g=blk["ln2_g"], ln2_b=blk["ln2_b"],
+        w1=blk["w1"][:, w, :],
+        w2=blk["w2"][w],
+    )
+
+
+def reference_loss(full, patches, labels, cfg: ModelCfg):
+    """Monolithic (e=1 semantics) forward — the TP golden reference."""
+    x = embed_fwd(patches, full["w_patch"], full["pos"], full["cls"], cfg)
+    b, s, hs = x.shape
+    for blk in full["blocks"]:
+        xln = layernorm(x, blk["ln1_g"], blk["ln1_b"])
+        qkv = xln.reshape(b * s, hs) @ blk["wqkv"].reshape(cfg.hs, 3 * cfg.hs)
+        qkv = qkv.reshape(b, s, 3, cfg.heads, cfg.hd)
+        q = qkv[:, :, 0].transpose(0, 2, 1, 3)
+        k = qkv[:, :, 1].transpose(0, 2, 1, 3)
+        v = qkv[:, :, 2].transpose(0, 2, 1, 3)
+        att = jax.nn.softmax(
+            jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(cfg.hd), axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", att, v).transpose(0, 2, 1, 3)
+        x = x + (o.reshape(b * s, cfg.hs) @ blk["wo"].reshape(cfg.hs, cfg.hs)
+                 ).reshape(b, s, hs)
+        xln = layernorm(x, blk["ln2_g"], blk["ln2_b"]).reshape(b * s, hs)
+        h = gelu(xln @ blk["w1"].reshape(cfg.hs, cfg.e * cfg.ffl))
+        x = x + (h @ blk["w2"].reshape(cfg.e * cfg.ffl, cfg.hs)).reshape(b, s, hs)
+    loss, logits = head_loss(
+        x, full["lnf_g"], full["lnf_b"], full["w_head"], full["b_head"],
+        labels, cfg)
+    return loss, logits

@@ -1,0 +1,102 @@
+"""AOT path: manifest integrity + HLO text interchange format."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+CFG = M.ModelCfg("aot-t", hs=32, depth=1, heads=4, e=4, bs=2, img=16)
+
+
+class TestInventory:
+    def test_all_roles_present(self):
+        inv = aot.executable_inventory(CFG)
+        roles = {meta["role"] for _, _, _, _, meta in inv}
+        assert roles == {
+            "embed_fwd", "embed_bwd", "head_fwdbwd", "head_infer",
+            "attn_fwd", "attn_bwd", "mlp_fwd", "mlp_bwd",
+            "mlp_mig_fwd", "mlp_mig_bwd"}
+
+    def test_bucket_counts(self):
+        inv = aot.executable_inventory(CFG)
+        names = [n for n, *_ in inv]
+        assert sum(n.startswith("attn_fwd") for n in names) == len(M.KEEP_FRACS)
+        # diagonal + straggler-side (g00, b) column
+        assert sum(n.startswith("mlp_fwd") for n in names) == \
+            2 * len(M.KEEP_FRACS) - 1
+        mig_kbs = {M.keep_count(CFG.ffl, f) for f in M.MIG_FRACS}
+        assert sum(n.startswith("mlp_mig_fwd") for n in names) == len(mig_kbs)
+
+    def test_names_unique(self):
+        inv = aot.executable_inventory(CFG)
+        names = [n for n, *_ in inv]
+        assert len(names) == len(set(names))
+
+    def test_input_specs_have_dims_and_dtype(self):
+        for name, _, ins, outs, _ in aot.executable_inventory(CFG):
+            for spec in ins + outs:
+                assert spec["dtype"] in ("f32", "i32"), name
+                assert all(isinstance(d, int) and d > 0 for d in spec["dims"])
+
+
+class TestLowering:
+    @pytest.fixture(scope="class")
+    def built(self, tmp_path_factory):
+        out = str(tmp_path_factory.mktemp("artifacts"))
+        aot.build_model(CFG, out, with_golden=False, verbose=False)
+        return os.path.join(out, CFG.name)
+
+    def test_manifest_parses(self, built):
+        with open(os.path.join(built, "manifest.json")) as f:
+            man = json.load(f)
+        assert man["model"]["hs"] == CFG.hs
+        assert len(man["executables"]) == len(aot.executable_inventory(CFG))
+
+    def test_hlo_is_text_format(self, built):
+        # xla_extension 0.5.1 requires the TEXT parser path (64-bit proto
+        # ids are rejected) — every artifact must be parseable HLO text.
+        with open(os.path.join(built, "manifest.json")) as f:
+            man = json.load(f)
+        for ex in man["executables"]:
+            with open(os.path.join(built, ex["file"])) as f:
+                head = f.read(200)
+            assert head.startswith("HloModule"), ex["name"]
+
+    def test_entry_params_match_manifest(self, built):
+        with open(os.path.join(built, "manifest.json")) as f:
+            man = json.load(f)
+        for ex in man["executables"]:
+            with open(os.path.join(built, ex["file"])) as f:
+                text = f.read()
+            lines = text.splitlines()
+            start = next(i for i, l in enumerate(lines)
+                         if l.startswith("ENTRY"))
+            nparams = 0
+            for l in lines[start + 1:]:
+                if l.startswith("}"):
+                    break
+                if "parameter(" in l:
+                    nparams += 1
+            assert nparams == len(ex["inputs"]), ex["name"]
+
+
+class TestGoldenBundle:
+    def test_roundtrip(self, tmp_path):
+        from compile import golden as G
+        import numpy as np
+        import struct
+        path = str(tmp_path / "g.bin")
+        G.write_bundle(path, {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+                              "b": np.asarray([1, 2], np.int32)})
+        with open(path, "rb") as f:
+            hlen = struct.unpack("<I", f.read(4))[0]
+            header = json.loads(f.read(hlen))
+            data = f.read()
+        assert [e["name"] for e in header["entries"]] == ["a", "b"]
+        a = np.frombuffer(data[:24], "<f4").reshape(2, 3)
+        np.testing.assert_allclose(a, np.arange(6).reshape(2, 3))
+        b = np.frombuffer(data[24:32], "<i4")
+        np.testing.assert_array_equal(b, [1, 2])

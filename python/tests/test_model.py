@@ -1,0 +1,246 @@
+"""L2 shard programs vs the monolithic reference model.
+
+The key theorem of 1D TP: summing the per-worker branch partials
+(= all-reduce) and adding residuals reproduces the unsharded model
+exactly.  Also checks pruning semantics, the migration slice programs,
+and the golden-bundle engine simulation.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import golden as G
+from compile import model as M
+
+CFG = M.ModelCfg("t", hs=32, depth=2, heads=4, e=4, bs=2, img=16)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    full = M.init_full_params(CFG, jax.random.PRNGKey(0))
+    shards = [[M.shard_block(blk, w, CFG) for blk in full["blocks"]]
+              for w in range(CFG.e)]
+    patches, labels = G.synth_batch(CFG, 7)
+    return full, shards, jnp.asarray(patches), jnp.asarray(labels)
+
+
+def _full_idx(k):
+    return jnp.arange(k, dtype=jnp.int32), jnp.ones((k,), jnp.float32)
+
+
+class TestConfig:
+    def test_seq_matches_paper(self):
+        # 32x32 image, patch 4 → 64 patches + cls = the paper's sql=65
+        assert M.PRESETS["vit-tiny"].seq == 65
+
+    def test_param_counts(self):
+        cfg = M.PRESETS["vit-100m"]
+        assert 80e6 < cfg.params_total() < 120e6
+        assert abs(cfg.params_per_worker() * cfg.e
+                   - cfg.params_total()) / cfg.params_total() < 0.2
+
+    def test_keep_count_buckets(self):
+        assert M.keep_count(256, 1.0) == 256
+        assert M.keep_count(256, 0.5) == 128
+        assert M.keep_count(256, 0.125) == 32
+        assert M.keep_count(16, 0.125) == 8  # floor at lane width
+
+    def test_shards_tile_full_params(self):
+        cfg = CFG
+        full = M.init_full_params(cfg, jax.random.PRNGKey(1))
+        blk = full["blocks"][0]
+        ws = [M.shard_block(blk, w, cfg) for w in range(cfg.e)]
+        w1_cat = jnp.concatenate([s["w1"] for s in ws], axis=1)
+        np.testing.assert_allclose(
+            w1_cat, blk["w1"].reshape(cfg.hs, cfg.e * cfg.ffl))
+        w2_cat = jnp.concatenate([s["w2"] for s in ws], axis=0)
+        np.testing.assert_allclose(
+            w2_cat, blk["w2"].reshape(cfg.e * cfg.ffl, cfg.hs))
+
+
+class TestTPEquivalence:
+    def test_attn_partials_sum_to_full(self, setup):
+        full, shards, patches, labels = setup
+        x = M.embed_fwd(patches, full["w_patch"], full["pos"], full["cls"], CFG)
+        idx, mask = _full_idx(CFG.hs)
+        part = sum(
+            M.attn_fwd(x, s["ln1_g"], s["ln1_b"], s["wqkv"], s["wo"],
+                       idx, mask, CFG)
+            for s in (shards[w][0] for w in range(CFG.e)))
+        # monolithic attention of block 0
+        blk = full["blocks"][0]
+        b, s_, hs = x.shape
+        xln = M.layernorm(x, blk["ln1_g"], blk["ln1_b"])
+        qkv = (xln.reshape(b * s_, hs) @ blk["wqkv"].reshape(hs, 3 * hs)
+               ).reshape(b, s_, 3, CFG.heads, CFG.hd)
+        q, k, v = (qkv[:, :, i].transpose(0, 2, 1, 3) for i in range(3))
+        att = jax.nn.softmax(
+            jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(CFG.hd), axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", att, v).transpose(0, 2, 1, 3)
+        want = (o.reshape(b * s_, hs) @ blk["wo"].reshape(hs, hs)
+                ).reshape(b, s_, hs)
+        np.testing.assert_allclose(part, want, rtol=1e-4, atol=1e-4)
+
+    def test_mlp_partials_sum_to_full(self, setup):
+        full, shards, patches, labels = setup
+        x = M.embed_fwd(patches, full["w_patch"], full["pos"], full["cls"], CFG)
+        i1, m1 = _full_idx(CFG.hs)
+        i2, m2 = _full_idx(CFG.ffl)
+        part = sum(
+            M.mlp_fwd(x, s["ln2_g"], s["ln2_b"], s["w1"], s["w2"],
+                      i1, m1, i2, m2, CFG)
+            for s in (shards[w][0] for w in range(CFG.e)))
+        blk = full["blocks"][0]
+        b, s_, hs = x.shape
+        xln = M.layernorm(x, blk["ln2_g"], blk["ln2_b"]).reshape(b * s_, hs)
+        h = M.gelu(xln @ blk["w1"].reshape(hs, CFG.e * CFG.ffl))
+        want = (h @ blk["w2"].reshape(CFG.e * CFG.ffl, hs)).reshape(b, s_, hs)
+        np.testing.assert_allclose(part, want, rtol=1e-4, atol=1e-4)
+
+    def test_engine_sim_matches_reference_model(self, setup):
+        full, shards, patches, labels = setup
+        loss, _, _, _, _ = G.sim_step(full, shards, patches, labels, CFG)
+        want, _ = M.reference_loss(full, patches, labels, CFG)
+        np.testing.assert_allclose(loss, float(want), rtol=1e-4)
+
+    def test_sgd_descends(self, setup):
+        full, shards, patches, labels = setup
+        f, s = full, shards
+        losses = []
+        for _ in range(3):
+            loss, _, f, s, _ = G.sim_step(f, s, patches, labels, CFG)
+            losses.append(loss)
+        assert losses[-1] < losses[0]
+
+
+class TestPruning:
+    def test_pruned_step_changes_loss_slightly(self, setup):
+        full, shards, patches, labels = setup
+        base, _, _, _, _ = G.sim_step(full, shards, patches, labels, CFG)
+        kq = M.keep_count(CFG.hs, 0.5)
+        kf = M.keep_count(CFG.ffl, 0.5)
+        qi = jnp.asarray(np.arange(0, 2 * kq, 2) % CFG.hs, jnp.int32)
+        fi = jnp.asarray(np.arange(0, 2 * kf, 2) % CFG.ffl, jnp.int32)
+        pruned, _, _, _, _ = G.sim_step(
+            full, shards, patches, labels, CFG,
+            qkv_idx=qi, ffl_idx=fi, straggler=1)
+        assert pruned != pytest.approx(base, rel=1e-6)  # pruning has effect
+        assert abs(pruned - base) / abs(base) < 0.5     # but bounded
+
+    def test_mlp_co_prune_never_materializes_pruned_cols(self, setup):
+        # mlp_fwd with idx2 of size kf produces the same value as zeroing
+        # the pruned FC1 cols / FC2 rows in the dense computation.
+        full, shards, patches, labels = setup
+        x = M.embed_fwd(patches, full["w_patch"], full["pos"], full["cls"], CFG)
+        s = shards[0][0]
+        kf = CFG.ffl // 2
+        fi = jnp.asarray(np.arange(kf) * 2, jnp.int32)
+        i1, m1 = _full_idx(CFG.hs)
+        got = M.mlp_fwd(x, s["ln2_g"], s["ln2_b"], s["w1"], s["w2"],
+                        i1, m1, fi, jnp.ones((kf,), jnp.float32), CFG)
+        b, s_, hs = x.shape
+        xln = M.layernorm(x, s["ln2_g"], s["ln2_b"]).reshape(b * s_, hs)
+        w1z = s["w1"][:, fi]
+        w2z = s["w2"][fi, :]
+        want = (M.gelu(xln @ w1z) @ w2z).reshape(b, s_, hs)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+class TestMigrationSlices:
+    def test_slices_partition_ffn_exactly(self, setup):
+        """straggler's kept slice + receivers' migrated slices == full FFN
+        branch (the exactness the paper claims for migration)."""
+        full, shards, patches, labels = setup
+        x = M.embed_fwd(patches, full["w_patch"], full["pos"], full["cls"], CFG)
+        s = shards[0][0]
+        i1, m1 = _full_idx(CFG.hs)
+        i2, m2 = _full_idx(CFG.ffl)
+        want = M.mlp_fwd(x, s["ln2_g"], s["ln2_b"], s["w1"], s["w2"],
+                         i1, m1, i2, m2, CFG)
+        # straggler keeps first half; two receivers take a quarter each
+        kf = CFG.ffl // 2
+        kept = jnp.arange(kf, dtype=jnp.int32)
+        got = M.mlp_fwd(x, s["ln2_g"], s["ln2_b"], s["w1"], s["w2"],
+                        i1, m1, kept, jnp.ones((kf,), jnp.float32), CFG)
+        kb = CFG.ffl // 4
+        mig_fwd = M.build_mlp_mig_fwd(kb)
+        for r in range(2):
+            sl = jnp.arange(kf + r * kb, kf + (r + 1) * kb, dtype=jnp.int32)
+            w1c = s["w1"][:, sl]
+            w2c = s["w2"][sl, :]
+            got = got + mig_fwd(x, s["ln2_g"], s["ln2_b"], w1c, w2c)[0]
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_zero_padded_slice_is_exact(self, setup):
+        full, shards, patches, labels = setup
+        x = M.embed_fwd(patches, full["w_patch"], full["pos"], full["cls"], CFG)
+        s = shards[0][0]
+        kb = CFG.ffl // 2
+        sl = jnp.arange(kb // 2, dtype=jnp.int32)  # only half the bucket used
+        w1c = jnp.zeros((CFG.hs, kb))
+        w1c = w1c.at[:, : kb // 2].set(s["w1"][:, sl])
+        w2c = jnp.zeros((kb, CFG.hs))
+        w2c = w2c.at[: kb // 2, :].set(s["w2"][sl, :])
+        mig_fwd = M.build_mlp_mig_fwd(kb)
+        got = mig_fwd(x, s["ln2_g"], s["ln2_b"], w1c, w2c)[0]
+        want = mig_fwd(
+            x, s["ln2_g"], s["ln2_b"], s["w1"][:, sl], s["w2"][sl, :])[0] \
+            if False else None
+        # direct dense check instead (kb//2-sized slice):
+        b, s_, hs = x.shape
+        xln = M.layernorm(x, s["ln2_g"], s["ln2_b"]).reshape(b * s_, hs)
+        want = (M.gelu(xln @ s["w1"][:, sl]) @ s["w2"][sl, :]).reshape(b, s_, hs)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_mig_bwd_grads_match_dense_slice(self, setup):
+        full, shards, patches, labels = setup
+        x = M.embed_fwd(patches, full["w_patch"], full["pos"], full["cls"], CFG)
+        s = shards[0][0]
+        kb = CFG.ffl // 4
+        sl = jnp.arange(kb, dtype=jnp.int32)
+        w1c, w2c = s["w1"][:, sl], s["w2"][sl, :]
+        dy = jnp.ones_like(x) * 0.01
+        mig_bwd = M.build_mlp_mig_bwd(kb)
+        dx, dg, db, dw1c, dw2c = mig_bwd(x, s["ln2_g"], s["ln2_b"],
+                                         w1c, w2c, dy)
+
+        def dense(x_, g_, b_, w1_, w2_):
+            bshp, s_, hs = x_.shape
+            xln = M.layernorm(x_, g_, b_).reshape(bshp * s_, hs)
+            return jnp.sum(
+                (M.gelu(xln @ w1_) @ w2_).reshape(bshp, s_, hs) * dy)
+
+        grads = jax.grad(dense, argnums=(0, 1, 2, 3, 4))(
+            x, s["ln2_g"], s["ln2_b"], w1c, w2c)
+        for got, want in zip((dx, dg, db, dw1c, dw2c), grads):
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+class TestHead:
+    def test_head_grads_match_autodiff(self, setup):
+        full, shards, patches, labels = setup
+        x = M.embed_fwd(patches, full["w_patch"], full["pos"], full["cls"], CFG)
+        hf = M.build_head_fwdbwd(CFG)
+        loss, ncorrect, dx, dg, db, dwh, dbh = hf(
+            x, full["lnf_g"], full["lnf_b"], full["w_head"], full["b_head"],
+            labels)
+
+        def lf(x_, g_, b_, wh_, bh_):
+            return M.head_loss(x_, g_, b_, wh_, bh_, labels, CFG)[0]
+
+        want = jax.grad(lf, argnums=(0, 1, 2, 3, 4))(
+            x, full["lnf_g"], full["lnf_b"], full["w_head"], full["b_head"])
+        for got, w_ in zip((dx, dg, db, dwh, dbh), want):
+            np.testing.assert_allclose(got, w_, rtol=1e-4, atol=1e-4)
+        assert 0 <= int(ncorrect) <= CFG.bs
+
+    def test_infer_matches_fwdbwd_loss(self, setup):
+        full, shards, patches, labels = setup
+        x = M.embed_fwd(patches, full["w_patch"], full["pos"], full["cls"], CFG)
+        hf = M.build_head_fwdbwd(CFG)
+        hi = M.build_head_infer(CFG)
+        args = (x, full["lnf_g"], full["lnf_b"], full["w_head"],
+                full["b_head"], labels)
+        np.testing.assert_allclose(hf(*args)[0], hi(*args)[0], rtol=1e-6)

@@ -1,0 +1,39 @@
+//! Ablation (DESIGN.md design-choice list): the paper's reduce-merging
+//! optimization (§IV-A) — folding the migration result collection into
+//! the branch all-reduce — measured by running the same broadcast-reduce
+//! migration with merging ON vs OFF (OFF pays an explicit tree-reduce of
+//! the full [b,s,hs] partials back to the straggler, "transferred two
+//! times" as the paper puts it).
+
+use flextp::bench::{forced_migration_rt, out_dir};
+use flextp::config::MigPolicy;
+use flextp::util::table::TextTable;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::var("FLEXTP_BENCH_MODEL").unwrap_or("vit-tiny".into());
+    let gbps: f64 = std::env::var("FLEXTP_BENCH_NET_GBPS")
+        .ok().and_then(|s| s.parse().ok()).unwrap_or(0.25);
+    let gammas = [0.25, 0.5, 0.875];
+    let mut table = TextTable::new(
+        &format!("Ablation — reduce-merging ({model}, ν=1, {gbps} Gbps, sim s/epoch)"),
+        &["variant / γ", "0.25", "0.50", "0.88"],
+    );
+    for (merging, label) in [(true, "merged (paper §IV-A)"), (false, "unmerged (2x transfer)")] {
+        let mut row = vec![label.to_string()];
+        for &g in &gammas {
+            let rt = forced_migration_rt(
+                &model, 1, g, MigPolicy::BroadcastReduce, merging, Some(gbps))?;
+            row.push(format!("{rt:.3}"));
+            eprintln!("  {label} γ={g}: {rt:.3}s");
+        }
+        table.row(&row);
+    }
+    println!("{}", table.render());
+    table.write_csv(&out_dir().join("ablation_reduce_merging.csv"))?;
+    println!(
+        "expected shape: merging strictly cheaper — the unmerged variant\n\
+         re-sends every receiver's full [b,s,hs] partial to the straggler\n\
+         before the all-reduce sends it again."
+    );
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Paper Fig. 10: scalability with a single straggler — ACC delta (vs
+//! Baseline) and RT against χ for Baseline, MIG, ZERO-PriDiffR, SEMI.
+//!
+//! Expected shape: Baseline RT grows linearly with χ (waiting cost);
+//! MIG mitigates but cannot fully catch up at large χ (its migratable
+//! share is capped by the FFN fraction, and migration itself costs
+//! communication); ZERO-PriDiffR and SEMI stay near-flat; SEMI's ACC
+//! stays near Baseline's (migration is exact) while pure resizing loses
+//! more.
+
+use flextp::bench::{acc_delta_pp, bench_cfg, out_dir, run};
+use flextp::config::{StragglerPlan, Strategy};
+use flextp::util::table::TextTable;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::var("FLEXTP_BENCH_MODEL").unwrap_or("vit-tiny".into());
+    let chis = [0.0, 2.0, 4.0, 8.0];
+    let strategies =
+        [Strategy::Baseline, Strategy::Mig, Strategy::ZeroPriDiffR, Strategy::Semi];
+    let mut table = TextTable::new(
+        &format!("Fig. 10 — single straggler ({model}): RT and ΔACC vs χ"),
+        &["solution", "metric", "χ=0", "χ=2", "χ=4", "χ=8"],
+    );
+    let mut baselines = Vec::new();
+    for s in strategies {
+        let mut rts = vec![s.name().to_string(), "RT (s)".into()];
+        let mut dacc = vec![s.name().to_string(), "ΔACC (pp)".into()];
+        for (i, &chi) in chis.iter().enumerate() {
+            let mut cfg = bench_cfg(&model, s);
+            cfg.train.epochs = 2;
+            cfg.train.iters_per_epoch = 3;
+            if chi > 0.0 {
+                // fixed single straggler (rank 0) — the paper's Fig. 10 setup
+                cfg.stragglers = StragglerPlan::Fixed(vec![chi]);
+            }
+            let r = run(cfg)?;
+            eprintln!("  {} χ={chi}: {}", s.name(), r.summary());
+            rts.push(format!("{:.3}", r.rt()));
+            if s == Strategy::Baseline {
+                baselines.push(r.clone());
+                dacc.push("0.0".into());
+            } else {
+                dacc.push(format!("{:+.1}", acc_delta_pp(&r, &baselines[i])));
+            }
+        }
+        table.row(&rts);
+        table.row(&dacc);
+    }
+    println!("{}", table.render());
+    table.write_csv(&out_dir().join("fig10_single_straggler.csv"))?;
+    println!(
+        "expected shape (paper): Baseline RT linear in χ; MIG mitigates but\n\
+         lags at high χ; PriDiffR+SEMI scale flat; SEMI keeps ACC closest\n\
+         to Baseline."
+    );
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Paper Fig. 6: the Fig. 5 homogeneous sweep at the larger scale point
+//! (ViT-3B → vit-m).  Same expected shape; larger model, so the same γ
+//! saves more absolute time.
+
+use flextp::bench::{bench_cfg, out_dir, run};
+use flextp::config::Strategy;
+use flextp::util::table::TextTable;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::var("FLEXTP_BENCH_MODEL").unwrap_or("vit-s".into());
+    let gammas = [0.25, 0.5, 0.875];
+    let mut table = TextTable::new(
+        &format!("Fig. 6 — homogeneous ACC+RT vs γ ({model}, ViT-3B scale point)"),
+        &["solution", "γ", "best ACC", "eval loss", "RT (s/epoch)"],
+    );
+    let mut base = bench_cfg(&model, Strategy::Baseline);
+    base.train.epochs = 2;
+    let base = run(base)?;
+    eprintln!("  {}", base.summary());
+    table.row(&[
+        "Baseline".into(),
+        "0".into(),
+        format!("{:.1}%", 100.0 * base.best_acc()),
+        format!("{:.3}", base.final_eval_loss()),
+        format!("{:.3}", base.rt()),
+    ]);
+    for strategy in [Strategy::ZeroRd, Strategy::ZeroPri] {
+        for &g in &gammas {
+            let mut cfg = bench_cfg(&model, strategy);
+            cfg.train.epochs = 2;
+            cfg.balancer.gamma_override = Some(g);
+            let r = run(cfg)?;
+            eprintln!("  {} γ={g}: {}", strategy.name(), r.summary());
+            table.row(&[
+                strategy.name().to_string(),
+                format!("{g}"),
+                format!("{:.1}%", 100.0 * r.best_acc()),
+                format!("{:.3}", r.final_eval_loss()),
+                format!("{:.3}", r.rt()),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    table.write_csv(&out_dir().join("fig6_homog.csv"))?;
+    println!("expected shape: as Fig. 5, at the larger scale point.");
+    Ok(())
+}

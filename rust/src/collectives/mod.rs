@@ -1,0 +1,258 @@
+//! Collective communication over the simulated worker group.
+//!
+//! Data movement is real (buffers are summed/copied between rank slots);
+//! time is charged through the α-β cost model in [`cost`].  Algorithms
+//! match what the paper compares: ring all-reduce/all-gather (NCCL-style,
+//! what Colossal-AI's 1D TP uses), **tree** broadcast/reduce (the paper's
+//! chosen migration primitives), and **flat** scatter/gather (the
+//! conventional baseline of Table I).
+
+pub mod cost;
+
+use crate::cluster::Clocks;
+use crate::tensor::Tensor;
+use cost::CostModel;
+
+/// Byte/op accounting per collective family (metrics + Φ₁ fitting).
+#[derive(Debug, Clone, Default)]
+pub struct CommStats {
+    pub allreduce_ops: u64,
+    pub allreduce_bytes: u64,
+    pub broadcast_ops: u64,
+    pub broadcast_bytes: u64,
+    pub reduce_ops: u64,
+    pub reduce_bytes: u64,
+    pub scatter_ops: u64,
+    pub scatter_bytes: u64,
+    pub gather_ops: u64,
+    pub gather_bytes: u64,
+    pub allgather_ops: u64,
+    pub allgather_bytes: u64,
+}
+
+impl CommStats {
+    pub fn total_bytes(&self) -> u64 {
+        self.allreduce_bytes + self.broadcast_bytes + self.reduce_bytes
+            + self.scatter_bytes + self.gather_bytes + self.allgather_bytes
+    }
+}
+
+/// The collective engine: cost model + stats, operating on rank buffers.
+#[derive(Debug)]
+pub struct Comm {
+    pub cost: CostModel,
+    pub stats: CommStats,
+}
+
+impl Comm {
+    pub fn new(cost: CostModel) -> Comm {
+        Comm { cost, stats: CommStats::default() }
+    }
+
+    /// Ring all-reduce: every rank ends with the elementwise sum.
+    /// Synchronizes all ranks (barrier) then charges ring time.
+    /// This is the paper's per-branch collection collective.
+    pub fn all_reduce(&mut self, clocks: &mut Clocks, bufs: &mut [Tensor]) {
+        let e = bufs.len();
+        debug_assert_eq!(e, clocks.e());
+        let bytes = bufs[0].size_bytes();
+        // data: sum into rank 0's buffer then copy out
+        let (first, rest) = bufs.split_at_mut(1);
+        for b in rest.iter() {
+            first[0].add_assign(b);
+        }
+        for b in rest.iter_mut() {
+            b.data.copy_from_slice(&first[0].data);
+        }
+        clocks.barrier();
+        let dt = self.cost.ring_allreduce(e, bytes);
+        for r in 0..e {
+            clocks.advance_comm(r, dt);
+        }
+        self.stats.allreduce_ops += 1;
+        self.stats.allreduce_bytes += bytes as u64;
+    }
+
+    /// All-gather of per-rank scalars (e.g. the T_i runtime list of
+    /// Algorithm 2 line 2). Returns the gathered vector.
+    pub fn all_gather_scalars(&mut self, clocks: &mut Clocks, vals: &[f64]) -> Vec<f64> {
+        let e = vals.len();
+        clocks.barrier();
+        let bytes = 8 * e;
+        let dt = self.cost.ring_allgather(e, bytes);
+        for r in 0..e {
+            clocks.advance_comm(r, dt);
+        }
+        self.stats.allgather_ops += 1;
+        self.stats.allgather_bytes += bytes as u64;
+        vals.to_vec()
+    }
+
+    /// Tree broadcast from `root` to `peers`: charges log2-depth rounds.
+    /// Root and receivers advance together (receivers that joined the tree
+    /// early relay onward — the paper's "new senders" scalability note).
+    pub fn broadcast(&mut self, clocks: &mut Clocks, root: usize, peers: &[usize], bytes: usize) {
+        if peers.is_empty() {
+            return;
+        }
+        let mut all = vec![root];
+        all.extend_from_slice(peers);
+        clocks.barrier_of(&all);
+        let dt = self.cost.tree_rounds(peers.len() + 1, bytes);
+        for &r in &all {
+            clocks.advance_comm(r, dt);
+        }
+        self.stats.broadcast_ops += 1;
+        self.stats.broadcast_bytes += (bytes * peers.len()) as u64;
+    }
+
+    /// Flat scatter: root sends a distinct `bytes`-sized slice to each
+    /// peer sequentially (the single-sender bottleneck of Table I).
+    pub fn scatter(&mut self, clocks: &mut Clocks, root: usize, peers: &[usize], bytes_each: usize) {
+        if peers.is_empty() {
+            return;
+        }
+        let mut all = vec![root];
+        all.extend_from_slice(peers);
+        clocks.barrier_of(&all);
+        let per = self.cost.p2p(bytes_each);
+        // peer i can proceed after (i+1) sequential sends; root after all.
+        let t0 = clocks.now(root);
+        for (i, &p) in peers.iter().enumerate() {
+            let tp = t0 + per * (i + 1) as f64;
+            let dt = (tp - clocks.now(p)).max(0.0);
+            clocks.advance_comm(p, dt);
+        }
+        let dtr = per * peers.len() as f64;
+        clocks.advance_comm(root, dtr);
+        self.stats.scatter_ops += 1;
+        self.stats.scatter_bytes += (bytes_each * peers.len()) as u64;
+    }
+
+    /// Tree reduce of per-peer partials to `root`. The data reduction
+    /// (summing `bufs` into the root slot) is the caller's job when
+    /// buffers overlap; this charges time/stats.
+    pub fn reduce(&mut self, clocks: &mut Clocks, root: usize, peers: &[usize], bytes: usize) {
+        if peers.is_empty() {
+            return;
+        }
+        let mut all = vec![root];
+        all.extend_from_slice(peers);
+        clocks.barrier_of(&all);
+        let dt = self.cost.tree_rounds(peers.len() + 1, bytes);
+        for &r in &all {
+            clocks.advance_comm(r, dt);
+        }
+        self.stats.reduce_ops += 1;
+        self.stats.reduce_bytes += (bytes * peers.len()) as u64;
+    }
+
+    /// Flat gather: each peer sends `bytes_each` to root sequentially.
+    pub fn gather(&mut self, clocks: &mut Clocks, root: usize, peers: &[usize], bytes_each: usize) {
+        if peers.is_empty() {
+            return;
+        }
+        let mut all = vec![root];
+        all.extend_from_slice(peers);
+        clocks.barrier_of(&all);
+        let per = self.cost.p2p(bytes_each);
+        let dtr = per * peers.len() as f64;
+        clocks.advance_comm(root, dtr);
+        for &p in peers {
+            clocks.advance_comm(p, per);
+        }
+        self.stats.gather_ops += 1;
+        self.stats.gather_bytes += (bytes_each * peers.len()) as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_comm() -> Comm {
+        Comm::new(CostModel { alpha_s: 1e-5, bytes_per_s: 1e9 })
+    }
+
+    #[test]
+    fn allreduce_sums_everywhere() {
+        let mut comm = mk_comm();
+        let mut clocks = Clocks::new(3);
+        let mut bufs = vec![
+            Tensor::from_vec(&[2], vec![1.0, 2.0]),
+            Tensor::from_vec(&[2], vec![10.0, 20.0]),
+            Tensor::from_vec(&[2], vec![100.0, 200.0]),
+        ];
+        comm.all_reduce(&mut clocks, &mut bufs);
+        for b in &bufs {
+            assert_eq!(b.data, vec![111.0, 222.0]);
+        }
+        assert!(clocks.now(0) > 0.0);
+        assert_eq!(comm.stats.allreduce_ops, 1);
+    }
+
+    #[test]
+    fn allreduce_barriers_to_slowest() {
+        let mut comm = mk_comm();
+        let mut clocks = Clocks::new(2);
+        clocks.advance(1, 5.0); // straggler
+        let mut bufs = vec![Tensor::zeros(&[4]), Tensor::zeros(&[4])];
+        comm.all_reduce(&mut clocks, &mut bufs);
+        // rank 0 waited for rank 1 — the waiting cost
+        assert!(clocks.now(0) >= 5.0);
+        assert_eq!(clocks.now(0), clocks.now(1));
+    }
+
+    #[test]
+    fn broadcast_cheaper_than_scatter_for_many_peers() {
+        // The Table I asymmetry: tree broadcast O(log n) rounds vs flat
+        // scatter O(n) sends from the straggler.
+        let bytes = 1_000_000;
+        let peers: Vec<usize> = (1..8).collect();
+
+        let mut c1 = mk_comm();
+        let mut k1 = Clocks::new(8);
+        c1.broadcast(&mut k1, 0, &peers, bytes);
+        let t_bcast = k1.now(0);
+
+        let mut c2 = mk_comm();
+        let mut k2 = Clocks::new(8);
+        c2.scatter(&mut k2, 0, &peers, bytes);
+        let t_scatter = k2.now(0);
+
+        assert!(t_bcast < t_scatter, "bcast={t_bcast} scatter={t_scatter}");
+    }
+
+    #[test]
+    fn scatter_peers_staggered() {
+        let mut c = mk_comm();
+        let mut k = Clocks::new(4);
+        c.scatter(&mut k, 0, &[1, 2, 3], 1000);
+        assert!(k.now(1) < k.now(2));
+        assert!(k.now(2) < k.now(3));
+        assert!((k.now(3) - k.now(0)).abs() < 1e-12); // last peer = root done
+    }
+
+    #[test]
+    fn gather_root_pays_linear() {
+        let mut c = mk_comm();
+        let mut k = Clocks::new(4);
+        c.gather(&mut k, 0, &[1, 2, 3], 1000);
+        let per = c.cost.p2p(1000);
+        assert!((k.now(0) - 3.0 * per).abs() < 1e-12);
+        assert!((k.now(1) - per).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut c = mk_comm();
+        let mut k = Clocks::new(2);
+        let mut bufs = vec![Tensor::zeros(&[8]), Tensor::zeros(&[8])];
+        c.all_reduce(&mut k, &mut bufs);
+        c.all_reduce(&mut k, &mut bufs);
+        c.broadcast(&mut k, 0, &[1], 100);
+        assert_eq!(c.stats.allreduce_ops, 2);
+        assert_eq!(c.stats.allreduce_bytes, 64);
+        assert_eq!(c.stats.total_bytes(), 64 + 100);
+    }
+}

@@ -1,0 +1,362 @@
+//! Configuration system: everything a run needs, assembled from presets,
+//! key=value config files, and CLI overrides (clap is unavailable offline;
+//! `parse_kv_args` provides `--key value` / `--key=value` parsing).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+/// Which balancing solution runs — the paper's compared systems (§V-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Colossal-AI 1D TP as-is: no balancing, stragglers stall the group.
+    Baseline,
+    /// ZERO-resizing, random column selection (paper ZERO-Rd).
+    ZeroRd,
+    /// ZERO-resizing, priority selection (paper ZERO-Pri).
+    ZeroPri,
+    /// Pri + differentiated per-layer ratios, empirical uniform γ=1/2
+    /// (paper ZERO-PriDiffE).
+    ZeroPriDiffE,
+    /// Pri + differentiated ratios, Eq.(1) uniform γ (paper ZERO-PriDiffR).
+    ZeroPriDiffR,
+    /// Pure lightweight migration (paper MIG).
+    Mig,
+    /// The hybrid SEMI-migration (paper SEMI).
+    Semi,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Result<Strategy> {
+        Ok(match s {
+            "baseline" => Strategy::Baseline,
+            "zero-rd" => Strategy::ZeroRd,
+            "zero-pri" => Strategy::ZeroPri,
+            "zero-pridiff-e" => Strategy::ZeroPriDiffE,
+            "zero-pridiff-r" => Strategy::ZeroPriDiffR,
+            "mig" => Strategy::Mig,
+            "semi" => Strategy::Semi,
+            _ => bail!("unknown strategy '{s}' (baseline|zero-rd|zero-pri|\
+                        zero-pridiff-e|zero-pridiff-r|mig|semi)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Baseline => "Baseline",
+            Strategy::ZeroRd => "ZERO-Rd",
+            Strategy::ZeroPri => "ZERO-Pri",
+            Strategy::ZeroPriDiffE => "ZERO-PriDiffE",
+            Strategy::ZeroPriDiffR => "ZERO-PriDiffR",
+            Strategy::Mig => "MIG",
+            Strategy::Semi => "SEMI",
+        }
+    }
+}
+
+/// Imputation policy for missing gradient dimensions (paper Fig. 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Imputation {
+    /// Uniform zeros — the paper's chosen compromise.
+    Zero,
+    /// Per-column average of unpruned dimensions.
+    Average,
+    /// Same values as the previous iteration (accuracy-best, memory-worst).
+    Same,
+}
+
+impl Imputation {
+    pub fn parse(s: &str) -> Result<Imputation> {
+        Ok(match s {
+            "zero" => Imputation::Zero,
+            "average" => Imputation::Average,
+            "same" => Imputation::Same,
+            _ => bail!("unknown imputation '{s}' (zero|average|same)"),
+        })
+    }
+}
+
+/// Migration communication primitive pair (paper Table I).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MigPolicy {
+    /// Tree broadcast + (merged) reduce — the paper's choice.
+    BroadcastReduce,
+    /// Flat scatter + gather — the conventional baseline.
+    ScatterGather,
+}
+
+impl MigPolicy {
+    pub fn parse(s: &str) -> Result<MigPolicy> {
+        Ok(match s {
+            "broadcast-reduce" => MigPolicy::BroadcastReduce,
+            "scatter-gather" => MigPolicy::ScatterGather,
+            _ => bail!("unknown migration policy '{s}'"),
+        })
+    }
+}
+
+/// How stragglers are injected (paper §V-A: sleeping operations, skewness χ).
+#[derive(Debug, Clone, PartialEq)]
+pub enum StragglerPlan {
+    /// Homogeneous cluster.
+    None,
+    /// Fixed per-rank skewness for the whole run; 1.0 = normal speed.
+    Fixed(Vec<f64>),
+    /// One straggler at skewness χ, rotating round-robin across ranks
+    /// every `period_epochs` (the paper's dynamic heterogeneous scenario).
+    RoundRobin { chi: f64, period_epochs: usize },
+}
+
+impl StragglerPlan {
+    /// Per-rank χ multipliers at a given epoch.
+    pub fn chis(&self, e: usize, epoch: usize) -> Vec<f64> {
+        match self {
+            StragglerPlan::None => vec![1.0; e],
+            StragglerPlan::Fixed(v) => {
+                let mut out = vec![1.0; e];
+                for (i, c) in v.iter().enumerate().take(e) {
+                    out[i] = c.max(1.0);
+                }
+                out
+            }
+            StragglerPlan::RoundRobin { chi, period_epochs } => {
+                let mut out = vec![1.0; e];
+                let idx = (epoch / period_epochs.max(&1)) % e;
+                out[idx] = chi.max(1.0);
+                out
+            }
+        }
+    }
+}
+
+/// Simulated interconnect (α-β model). Defaults approximate PCIe 3.0 x16
+/// (the paper's testbed): ~10 µs latency, ~12 GB/s effective.
+#[derive(Debug, Clone, Copy)]
+pub struct NetCfg {
+    pub alpha_s: f64,
+    pub bytes_per_s: f64,
+}
+
+impl Default for NetCfg {
+    fn default() -> Self {
+        NetCfg { alpha_s: 10e-6, bytes_per_s: 12e9 }
+    }
+}
+
+/// Training-loop parameters.
+#[derive(Debug, Clone)]
+pub struct TrainCfg {
+    pub epochs: usize,
+    pub iters_per_epoch: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub eval_iters: usize,
+    pub seed: u64,
+    /// dataset size in batches (cycled)
+    pub train_batches: usize,
+    /// really sleep (χ-1)·t on stragglers (paper-literal emulation)
+    /// instead of only charging the SimClock
+    pub emulate_wall: bool,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg {
+            epochs: 4,
+            iters_per_epoch: 8,
+            lr: 0.05,
+            momentum: 0.0,
+            eval_iters: 4,
+            seed: 42,
+            train_batches: 8,
+            emulate_wall: false,
+        }
+    }
+}
+
+/// Balancer parameters (paper defaults: θ_iter = 1e-3, α = 0.8).
+#[derive(Debug, Clone)]
+pub struct BalancerCfg {
+    pub strategy: Strategy,
+    pub imputation: Imputation,
+    pub mig_policy: MigPolicy,
+    /// micro-threshold θ_iter for differentiated ratios
+    pub theta_iter: f64,
+    /// decay factor α in γ_k = max(γ_k, α·γ)
+    pub alpha: f64,
+    /// force a uniform pruning ratio (homogeneous Fig. 5/6 sweeps);
+    /// also the empirical γ of PriDiffE.
+    pub gamma_override: Option<f64>,
+    /// Fig. 11: force the number of stragglers that run MIG (λ sweep).
+    pub forced_lambda: Option<usize>,
+    /// merge migration reduce into the branch all-reduce (paper §IV-A).
+    pub reduce_merging: bool,
+}
+
+impl Default for BalancerCfg {
+    fn default() -> Self {
+        BalancerCfg {
+            strategy: Strategy::Baseline,
+            imputation: Imputation::Zero,
+            mig_policy: MigPolicy::BroadcastReduce,
+            theta_iter: 1e-3,
+            alpha: 0.8,
+            gamma_override: None,
+            forced_lambda: None,
+            reduce_merging: true,
+        }
+    }
+}
+
+/// A full run specification.
+#[derive(Debug, Clone)]
+pub struct RunCfg {
+    pub artifacts_dir: PathBuf,
+    pub model: String,
+    pub train: TrainCfg,
+    pub balancer: BalancerCfg,
+    pub stragglers: StragglerPlan,
+    pub net: NetCfg,
+}
+
+impl RunCfg {
+    pub fn new(model: &str) -> RunCfg {
+        RunCfg {
+            artifacts_dir: PathBuf::from("artifacts"),
+            model: model.to_string(),
+            train: TrainCfg::default(),
+            balancer: BalancerCfg::default(),
+            stragglers: StragglerPlan::None,
+            net: NetCfg::default(),
+        }
+    }
+
+    pub fn model_dir(&self) -> PathBuf {
+        self.artifacts_dir.join(&self.model)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CLI parsing (no clap offline)
+// ---------------------------------------------------------------------------
+
+/// Parse `--key value` / `--key=value` pairs; returns (positional, map).
+pub fn parse_kv_args(args: &[String]) -> Result<(Vec<String>, BTreeMap<String, String>)> {
+    let mut pos = Vec::new();
+    let mut kv = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(stripped) = a.strip_prefix("--") {
+            if let Some((k, v)) = stripped.split_once('=') {
+                kv.insert(k.to_string(), v.to_string());
+            } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                kv.insert(stripped.to_string(), args[i + 1].clone());
+                i += 1;
+            } else {
+                kv.insert(stripped.to_string(), "true".to_string());
+            }
+        } else {
+            pos.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok((pos, kv))
+}
+
+/// Apply CLI overrides onto a RunCfg.
+pub fn apply_overrides(cfg: &mut RunCfg, kv: &BTreeMap<String, String>) -> Result<()> {
+    for (k, v) in kv {
+        match k.as_str() {
+            "artifacts" => cfg.artifacts_dir = PathBuf::from(v),
+            "model" => cfg.model = v.clone(),
+            "epochs" => cfg.train.epochs = v.parse().context("epochs")?,
+            "iters" => cfg.train.iters_per_epoch = v.parse().context("iters")?,
+            "lr" => cfg.train.lr = v.parse().context("lr")?,
+            "momentum" => cfg.train.momentum = v.parse().context("momentum")?,
+            "seed" => cfg.train.seed = v.parse().context("seed")?,
+            "eval-iters" => cfg.train.eval_iters = v.parse().context("eval-iters")?,
+            "strategy" => cfg.balancer.strategy = Strategy::parse(v)?,
+            "imputation" => cfg.balancer.imputation = Imputation::parse(v)?,
+            "mig-policy" => cfg.balancer.mig_policy = MigPolicy::parse(v)?,
+            "gamma" => cfg.balancer.gamma_override = Some(v.parse().context("gamma")?),
+            "lambda" => cfg.balancer.forced_lambda = Some(v.parse().context("lambda")?),
+            "theta-iter" => cfg.balancer.theta_iter = v.parse().context("theta-iter")?,
+            "alpha" => cfg.balancer.alpha = v.parse().context("alpha")?,
+            "no-reduce-merging" => cfg.balancer.reduce_merging = false,
+            "emulate-wall" => cfg.train.emulate_wall = true,
+            "chi" => {
+                let chi: f64 = v.parse().context("chi")?;
+                cfg.stragglers = StragglerPlan::RoundRobin { chi, period_epochs: 1 };
+            }
+            "chis" => {
+                let chis: Result<Vec<f64>, _> = v.split(',').map(str::parse).collect();
+                cfg.stragglers = StragglerPlan::Fixed(chis.context("chis")?);
+            }
+            "net-alpha-us" => cfg.net.alpha_s = v.parse::<f64>().context("net-alpha-us")? * 1e-6,
+            "net-gbps" => cfg.net.bytes_per_s = v.parse::<f64>().context("net-gbps")? * 1e9,
+            _ => bail!("unknown option --{k}"),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_roundtrip() {
+        for s in ["baseline", "zero-rd", "zero-pri", "zero-pridiff-e",
+                  "zero-pridiff-r", "mig", "semi"] {
+            assert!(Strategy::parse(s).is_ok(), "{s}");
+        }
+        assert!(Strategy::parse("nope").is_err());
+    }
+
+    #[test]
+    fn straggler_plans() {
+        let p = StragglerPlan::None;
+        assert_eq!(p.chis(4, 0), vec![1.0; 4]);
+
+        let p = StragglerPlan::Fixed(vec![2.0, 1.0]);
+        assert_eq!(p.chis(4, 9), vec![2.0, 1.0, 1.0, 1.0]);
+
+        let p = StragglerPlan::RoundRobin { chi: 4.0, period_epochs: 2 };
+        assert_eq!(p.chis(4, 0), vec![4.0, 1.0, 1.0, 1.0]);
+        assert_eq!(p.chis(4, 2), vec![1.0, 4.0, 1.0, 1.0]);
+        assert_eq!(p.chis(4, 8), vec![4.0, 1.0, 1.0, 1.0]); // wraps
+    }
+
+    #[test]
+    fn kv_parsing() {
+        let args: Vec<String> =
+            ["train", "--epochs", "3", "--gamma=0.5", "--no-reduce-merging"]
+                .iter().map(|s| s.to_string()).collect();
+        let (pos, kv) = parse_kv_args(&args).unwrap();
+        assert_eq!(pos, vec!["train"]);
+        assert_eq!(kv["epochs"], "3");
+        assert_eq!(kv["gamma"], "0.5");
+        assert_eq!(kv["no-reduce-merging"], "true");
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut cfg = RunCfg::new("vit-tiny");
+        let args: Vec<String> = ["--strategy", "semi", "--chi", "4", "--lr", "0.01"]
+            .iter().map(|s| s.to_string()).collect();
+        let (_, kv) = parse_kv_args(&args).unwrap();
+        apply_overrides(&mut cfg, &kv).unwrap();
+        assert_eq!(cfg.balancer.strategy, Strategy::Semi);
+        assert_eq!(cfg.train.lr, 0.01);
+        assert!(matches!(cfg.stragglers, StragglerPlan::RoundRobin { .. }));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let mut cfg = RunCfg::new("vit-tiny");
+        let (_, kv) = parse_kv_args(&["--bogus=1".to_string()]).unwrap();
+        assert!(apply_overrides(&mut cfg, &kv).is_err());
+    }
+}

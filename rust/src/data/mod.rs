@@ -1,0 +1,142 @@
+//! Synthetic labeled image dataset (CIFAR-10 substitute — DESIGN.md §2).
+//!
+//! Each class has a fixed random patch-space template; a sample is
+//! `0.5·template[label] + 0.5·noise`.  The task is learnable by a small
+//! ViT within a few epochs, which is what the paper's *relative* ACC
+//! comparisons need (it explicitly does not target absolute accuracy).
+
+use crate::runtime::manifest::ModelInfo;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// `[bs, seq0, pd]` patch tensors (pre-patchified)
+    pub patches: Tensor,
+    /// `[bs]` class labels
+    pub labels: Vec<i32>,
+}
+
+/// Deterministic synthetic dataset, generated batch-by-batch from a seed.
+pub struct SynthData {
+    templates: Vec<Vec<f32>>, // [classes][seq0*pd]
+    bs: usize,
+    seq0: usize,
+    pd: usize,
+    classes: usize,
+    seed: u64,
+}
+
+impl SynthData {
+    pub fn new(m: &ModelInfo, seed: u64) -> SynthData {
+        let mut rng = Rng::new(seed ^ 0x7E3);
+        let templates = (0..m.classes)
+            .map(|_| rng.normal_vec(m.seq0 * m.pd, 1.0))
+            .collect();
+        SynthData {
+            templates,
+            bs: m.bs,
+            seq0: m.seq0,
+            pd: m.pd,
+            classes: m.classes,
+            seed,
+        }
+    }
+
+    /// The i-th batch of a split ("train" or "eval" streams never collide).
+    pub fn batch(&self, split: u64, i: u64) -> Batch {
+        let mut rng = Rng::new(self.seed ^ (split << 32) ^ i.wrapping_mul(0x9E37));
+        let n = self.seq0 * self.pd;
+        let mut data = Vec::with_capacity(self.bs * n);
+        let mut labels = Vec::with_capacity(self.bs);
+        for _ in 0..self.bs {
+            let label = rng.below(self.classes);
+            labels.push(label as i32);
+            let t = &self.templates[label];
+            for j in 0..n {
+                data.push(0.5 * t[j] + 0.5 * rng.normal());
+            }
+        }
+        Batch {
+            patches: Tensor::from_vec(&[self.bs, self.seq0, self.pd], data),
+            labels,
+        }
+    }
+
+    pub fn train_batch(&self, i: u64) -> Batch {
+        self.batch(1, i)
+    }
+
+    pub fn eval_batch(&self, i: u64) -> Batch {
+        self.batch(2, i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ModelInfo;
+
+    fn info() -> ModelInfo {
+        ModelInfo {
+            name: "t".into(), hs: 32, depth: 1, heads: 4, e: 4, bs: 8,
+            classes: 10, seq: 17, seq0: 16, pd: 48, hsl: 8, hl: 1, hd: 8,
+            ffl: 32, params_total: 0, params_per_worker: 0,
+        }
+    }
+
+    #[test]
+    fn batches_deterministic() {
+        let d = SynthData::new(&info(), 42);
+        let a = d.train_batch(3);
+        let b = d.train_batch(3);
+        assert_eq!(a.patches.data, b.patches.data);
+        assert_eq!(a.labels, b.labels);
+        let c = d.train_batch(4);
+        assert_ne!(a.patches.data, c.patches.data);
+    }
+
+    #[test]
+    fn train_eval_streams_distinct() {
+        let d = SynthData::new(&info(), 42);
+        assert_ne!(d.train_batch(0).patches.data, d.eval_batch(0).patches.data);
+    }
+
+    #[test]
+    fn labels_in_range_and_varied() {
+        let d = SynthData::new(&info(), 1);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..16 {
+            for &l in &d.batch(1, i).labels {
+                assert!((0..10).contains(&l));
+                seen.insert(l);
+            }
+        }
+        assert!(seen.len() > 3, "labels collapsed: {seen:?}");
+    }
+
+    #[test]
+    fn signal_present() {
+        // same-class samples correlate more than cross-class ones
+        let d = SynthData::new(&info(), 7);
+        let mut by_class: std::collections::HashMap<i32, Vec<Vec<f32>>> = Default::default();
+        for i in 0..32 {
+            let b = d.batch(1, i);
+            let n = 16 * 48;
+            for (s, &l) in b.labels.iter().enumerate() {
+                by_class.entry(l).or_default().push(b.patches.data[s * n..(s + 1) * n].to_vec());
+            }
+        }
+        let corr = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| x * y).sum::<f32>() / a.len() as f32
+        };
+        let (l0, l1) = {
+            let mut keys: Vec<i32> = by_class.keys().copied().collect();
+            keys.sort();
+            (keys[0], keys[1])
+        };
+        let same = corr(&by_class[&l0][0], &by_class[&l0][1]);
+        let diff = corr(&by_class[&l0][0], &by_class[&l1][0]);
+        assert!(same > diff, "no class signal: same={same} diff={diff}");
+    }
+}

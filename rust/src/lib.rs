@@ -1,0 +1,39 @@
+//! # flextp — Flexible Workload Control for Heterogeneous Tensor Parallelism
+//!
+//! A Rust + JAX + Pallas reproduction of *"Accelerating Heterogeneous
+//! Tensor Parallelism via Flexible Workload Control"* (Wang et al., 2024):
+//! 1D tensor-parallel ViT training with three dynamic workload-balancing
+//! solutions —
+//!
+//! * **ZERO-resizing** ([`resizing`]): temporarily shrink the contraction
+//!   dimension of the straggler's GEMMs (Eq. 1), with lineage tracking,
+//!   Zero/Average/Same imputation, priority column selection, and
+//!   per-layer differentiated ratios;
+//! * **lightweight migration** ([`migration`]): move FFN column slices to
+//!   normal tasks over tree broadcast/reduce with reduce-merging;
+//! * **SEMI-migration** ([`semi`]): the hybrid that splits balancing work
+//!   between the two by the cost model (Eq. 2 / Eq. 3).
+//!
+//! Architecture (see DESIGN.md): Layer 1 is a Pallas `pruned_matmul`
+//! kernel, Layer 2 the JAX shard programs, both AOT-compiled to HLO text
+//! by `python/compile/aot.py`; this crate is Layer 3 — the coordinator
+//! that loads the artifacts via PJRT ([`runtime`]) and owns the training
+//! loop, collectives, scheduling, and balancing.  Python never runs at
+//! training time.
+
+pub mod balancer;
+pub mod bench;
+pub mod cluster;
+pub mod collectives;
+pub mod config;
+pub mod data;
+pub mod metrics;
+pub mod migration;
+pub mod model;
+pub mod resizing;
+pub mod runtime;
+pub mod semi;
+pub mod straggler;
+pub mod tensor;
+pub mod train;
+pub mod util;

@@ -1,0 +1,193 @@
+//! flextp CLI — the Layer-3 coordinator entrypoint.
+//!
+//! Subcommands:
+//!   train               run a training job (strategy, stragglers, model …)
+//!   inspect-artifacts   list a model's executables and shapes
+//!   bench-comm          compare migration primitives at given sizes
+//!   pretest             print the SEMI cost-function fit for a model
+//!
+//! All options are `--key value` (see `config::apply_overrides`). Example:
+//!
+//!   flextp train --model vit-tiny --strategy semi --chi 4 --epochs 3
+
+use anyhow::{bail, Context, Result};
+
+use flextp::cluster::Clocks;
+use flextp::collectives::{cost::CostModel, Comm};
+use flextp::config::{apply_overrides, parse_kv_args, RunCfg};
+use flextp::train::trainer::Trainer;
+use flextp::util::table::TextTable;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (pos, kv) = parse_kv_args(&args)?;
+    let cmd = pos.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&kv),
+        "inspect-artifacts" => cmd_inspect(&kv),
+        "bench-comm" => cmd_bench_comm(&kv),
+        "pretest" => cmd_pretest(&kv),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try: flextp help)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "flextp — flexible workload control for heterogeneous tensor parallelism\n\
+         \n\
+         USAGE: flextp <command> [--key value ...]\n\
+         \n\
+         COMMANDS\n\
+           train                train a model under a balancing strategy\n\
+           inspect-artifacts    list executables in a model's artifact set\n\
+           bench-comm           compare broadcast-reduce vs scatter-gather\n\
+           pretest              print the SEMI cost-function fit\n\
+         \n\
+         COMMON OPTIONS\n\
+           --model NAME         artifact set (vit-tiny|vit-s|vit-m|vit-100m)\n\
+           --artifacts DIR      artifacts root (default: artifacts)\n\
+           --strategy S         baseline|zero-rd|zero-pri|zero-pridiff-e|\n\
+                                zero-pridiff-r|mig|semi\n\
+           --imputation P       zero|average|same\n\
+           --mig-policy P       broadcast-reduce|scatter-gather\n\
+           --chi X              one round-robin straggler at skewness X\n\
+           --chis A,B,..        fixed per-rank skewness list\n\
+           --gamma G            force a uniform pruning ratio\n\
+           --lambda N           force the MIG group size (Fig. 11)\n\
+           --emulate-wall       really sleep (χ-1)·t on stragglers\n\
+           --epochs/--iters/--lr/--momentum/--seed ...\n"
+    );
+}
+
+fn build_cfg(kv: &std::collections::BTreeMap<String, String>) -> Result<RunCfg> {
+    let mut cfg = RunCfg::new("vit-tiny");
+    apply_overrides(&mut cfg, kv)?;
+    Ok(cfg)
+}
+
+fn cmd_train(kv: &std::collections::BTreeMap<String, String>) -> Result<()> {
+    let cfg = build_cfg(kv)?;
+    let strategy = cfg.balancer.strategy.name();
+    println!(
+        "flextp train: model={} strategy={} epochs={} iters={}",
+        cfg.model, strategy, cfg.train.epochs, cfg.train.iters_per_epoch
+    );
+    let mut t = Trainer::new(cfg)?;
+    println!(
+        "loaded {} ({} params total, e={} workers, platform={})",
+        t.model().name,
+        t.model().params_total,
+        t.model().e,
+        t.rt.platform()
+    );
+    t.warmup_and_pretest()?;
+    for epoch in 0..t.cfg.train.epochs {
+        t.run_epoch(epoch)?;
+        let e = t.report.epochs.last().unwrap();
+        println!(
+            "epoch {:>3}: RT(sim)={:.3}s wall={:.1}s loss={:.4} eval={:.4} \
+             acc={:.1}% comm={} pruned={} migrated={}",
+            epoch,
+            e.rt_sim_s,
+            e.rt_wall_s,
+            e.train_loss,
+            e.eval_loss,
+            100.0 * e.acc,
+            flextp::util::fmt_bytes(e.comm_bytes),
+            e.pruned_cols,
+            e.migrated_cols,
+        );
+    }
+    println!("{}", t.report.summary());
+    let out = std::path::PathBuf::from("bench_out")
+        .join(format!("train_{}_{}.json", t.model().name, strategy));
+    t.report.save_json(&out).context("saving report")?;
+    println!("report: {}", out.display());
+    Ok(())
+}
+
+fn cmd_inspect(kv: &std::collections::BTreeMap<String, String>) -> Result<()> {
+    let cfg = build_cfg(kv)?;
+    let man = flextp::runtime::Manifest::load(&cfg.model_dir().join("manifest.json"))?;
+    println!(
+        "model {}: hs={} depth={} heads={} e={} bs={} seq={} params={}",
+        man.model.name, man.model.hs, man.model.depth, man.model.heads,
+        man.model.e, man.model.bs, man.model.seq, man.model.params_total
+    );
+    let mut t = TextTable::new("executables", &["name", "role", "inputs", "outputs"]);
+    for ex in &man.executables {
+        t.row(&[
+            ex.name.clone(),
+            ex.role.clone(),
+            ex.inputs.len().to_string(),
+            ex.outputs.len().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "buckets: {:?}",
+        man.buckets.iter().map(|b| (&b.name, b.gamma)).collect::<Vec<_>>()
+    );
+    println!("mig buckets (ffl cols): {:?}", man.mig_buckets);
+    Ok(())
+}
+
+fn cmd_bench_comm(kv: &std::collections::BTreeMap<String, String>) -> Result<()> {
+    let cfg = build_cfg(kv)?;
+    let cost = CostModel::from_net(cfg.net);
+    let e = 8;
+    let mut t = TextTable::new(
+        "migration primitive cost (simulated, seconds)",
+        &["bytes", "broadcast(tree)", "scatter(flat)", "reduce(tree)", "gather(flat)"],
+    );
+    for mb in [1usize, 4, 16, 64] {
+        let bytes = mb * 1024 * 1024;
+        let peers: Vec<usize> = (1..e).collect();
+        let (mut c, mut k) = (Comm::new(cost), Clocks::new(e));
+        c.broadcast(&mut k, 0, &peers, bytes);
+        let tb = k.now(0);
+        let (mut c2, mut k) = (Comm::new(cost), Clocks::new(e));
+        c2.scatter(&mut k, 0, &peers, bytes);
+        let ts = k.now(0);
+        let (mut c3, mut k) = (Comm::new(cost), Clocks::new(e));
+        c3.reduce(&mut k, 0, &peers, bytes);
+        let tr = k.now(0);
+        let (mut c4, mut k) = (Comm::new(cost), Clocks::new(e));
+        c4.gather(&mut k, 0, &peers, bytes);
+        let tg = k.now(0);
+        t.row(&[
+            flextp::util::fmt_bytes(bytes as u64),
+            format!("{tb:.6}"),
+            format!("{ts:.6}"),
+            format!("{tr:.6}"),
+            format!("{tg:.6}"),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_pretest(kv: &std::collections::BTreeMap<String, String>) -> Result<()> {
+    let cfg = build_cfg(kv)?;
+    let mut t = Trainer::new(cfg)?;
+    t.warmup_and_pretest()?;
+    let c = &t.costs;
+    println!("SEMI cost functions (model {}):", t.model().name);
+    println!("  Ω₁  (alloc)          = {:.3e} s", c.omega1_s);
+    println!("  Ω₂  (extract/col)    = {:.3e} s", c.omega2_per_col);
+    println!("  Φ₁  (comm base)      = {:.3e} s", c.phi1_base_s);
+    println!("  Φ₁  (comm/col)       = {:.3e} s", c.phi1_per_col);
+    println!("  Φ₂  (remote/col)     = {:.3e} s", c.phi2_per_col);
+    for cols in [8.0, 32.0, 128.0] {
+        println!(
+            "  Φ₁({cols:>4}) = {:.3e}s   Ω₂({cols:>4}) = {:.3e}s",
+            c.phi1(cols),
+            c.omega2(cols)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,167 @@
+//! Run metrics: the paper's two evaluation quantities — RT (averaged
+//! per-epoch elapsed time) and ACC (model accuracy after each epoch) —
+//! plus the cost-accounting the SEMI allocator and §Perf need.
+
+use std::path::Path;
+
+use crate::util::json::{obj, Json};
+
+/// Per-epoch record.
+#[derive(Debug, Clone, Default)]
+pub struct EpochMetrics {
+    pub epoch: usize,
+    /// simulated wall time of the epoch (max over ranks per iteration,
+    /// summed) — the paper's RT
+    pub rt_sim_s: f64,
+    /// real host wall time (for §Perf accounting)
+    pub rt_wall_s: f64,
+    pub train_loss: f64,
+    pub eval_loss: f64,
+    /// eval accuracy in [0,1] — the paper's ACC
+    pub acc: f64,
+    /// total simulated bytes moved by collectives this epoch
+    pub comm_bytes: u64,
+    /// columns pruned across all stragglers/layers this epoch
+    pub pruned_cols: u64,
+    /// columns migrated this epoch
+    pub migrated_cols: u64,
+    /// per-rank compute seconds (sim) — straggler visibility
+    pub rank_compute_s: Vec<f64>,
+}
+
+/// Whole-run report.
+#[derive(Debug, Clone, Default)]
+pub struct RunReport {
+    pub label: String,
+    pub epochs: Vec<EpochMetrics>,
+    /// per-iteration training losses (the e2e loss curve)
+    pub loss_curve: Vec<f32>,
+}
+
+impl RunReport {
+    pub fn new(label: &str) -> Self {
+        RunReport { label: label.to_string(), ..Default::default() }
+    }
+
+    /// Paper RT: mean per-epoch simulated runtime.
+    pub fn rt(&self) -> f64 {
+        if self.epochs.is_empty() {
+            return 0.0;
+        }
+        self.epochs.iter().map(|e| e.rt_sim_s).sum::<f64>() / self.epochs.len() as f64
+    }
+
+    /// Paper ACC: final-epoch accuracy.
+    pub fn final_acc(&self) -> f64 {
+        self.epochs.last().map(|e| e.acc).unwrap_or(0.0)
+    }
+
+    /// Best accuracy over the run (robust ACC for short bench runs).
+    pub fn best_acc(&self) -> f64 {
+        self.epochs.iter().map(|e| e.acc).fold(0.0, f64::max)
+    }
+
+    pub fn final_eval_loss(&self) -> f64 {
+        self.epochs.last().map(|e| e.eval_loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn total_comm_bytes(&self) -> u64 {
+        self.epochs.iter().map(|e| e.comm_bytes).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("label", self.label.as_str().into()),
+            ("rt", self.rt().into()),
+            ("final_acc", self.final_acc().into()),
+            ("best_acc", self.best_acc().into()),
+            ("loss_curve", self.loss_curve.iter().map(|l| *l as f64).collect()),
+            (
+                "epochs",
+                Json::Arr(
+                    self.epochs
+                        .iter()
+                        .map(|e| {
+                            obj([
+                                ("epoch", e.epoch.into()),
+                                ("rt_sim_s", e.rt_sim_s.into()),
+                                ("rt_wall_s", e.rt_wall_s.into()),
+                                ("train_loss", e.train_loss.into()),
+                                ("eval_loss", e.eval_loss.into()),
+                                ("acc", e.acc.into()),
+                                ("comm_bytes", (e.comm_bytes as f64).into()),
+                                ("pruned_cols", (e.pruned_cols as f64).into()),
+                                ("migrated_cols", (e.migrated_cols as f64).into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn save_json(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    /// One-line summary for logs/bench output.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: RT={:.3}s/epoch ACC={:.1}% loss={:.3} comm={}",
+            self.label,
+            self.rt(),
+            100.0 * self.final_acc(),
+            self.final_eval_loss(),
+            crate::util::fmt_bytes(self.total_comm_bytes()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(rts: &[f64], accs: &[f64]) -> RunReport {
+        let mut r = RunReport::new("t");
+        for (i, (&rt, &acc)) in rts.iter().zip(accs).enumerate() {
+            r.epochs.push(EpochMetrics {
+                epoch: i,
+                rt_sim_s: rt,
+                acc,
+                ..Default::default()
+            });
+        }
+        r
+    }
+
+    #[test]
+    fn rt_is_mean_of_epochs() {
+        let r = mk(&[1.0, 3.0], &[0.1, 0.2]);
+        assert_eq!(r.rt(), 2.0);
+    }
+
+    #[test]
+    fn acc_final_and_best() {
+        let r = mk(&[1.0, 1.0, 1.0], &[0.3, 0.6, 0.5]);
+        assert_eq!(r.final_acc(), 0.5);
+        assert_eq!(r.best_acc(), 0.6);
+    }
+
+    #[test]
+    fn empty_report_is_safe() {
+        let r = RunReport::new("e");
+        assert_eq!(r.rt(), 0.0);
+        assert_eq!(r.final_acc(), 0.0);
+    }
+
+    #[test]
+    fn json_emits() {
+        let r = mk(&[1.0], &[0.5]);
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"rt\":1"));
+        assert!(Json::parse(&j).is_ok());
+    }
+}

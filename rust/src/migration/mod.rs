@@ -1,0 +1,239 @@
+//! Lightweight workload migration (paper §IV-A).
+//!
+//! A straggler migrates FFN contraction columns (ffl slices) to the
+//! normal tasks.  Under column-wise TP the input x and the LN params are
+//! already replicated, so only the *weights* of the migrated slice move —
+//! `w1[:, mig]` and `w2[mig, :]` — via tree **broadcast**; receivers run
+//! the self-contained `mlp_mig_*` slice executables; their y/dx partials
+//! fold into the branch all-reduce (**reduce-merging**) and only the small
+//! compact weight-grads travel back.  The conventional
+//! **scatter-gather** alternative sends per-receiver weight slices flat
+//! and gathers full `[b,s,hs]` partials back to the straggler — the
+//! redundant double transfer Table I measures.
+//!
+//! Column assignment uses the paper's virtual renumbering (§IV-B,
+//! `cluster::mig_range`); slices are chunked to the compiled `kb` buckets
+//! and zero-padded (exactness argument in python/compile/model.py).
+
+use crate::cluster::mig_range;
+use crate::runtime::manifest::Manifest;
+
+/// One receiver's work-list for a straggler's layer: chunks into the
+/// migrated index array, each mapped to a compiled kb bucket.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Chunk {
+    /// offset into the migrated set
+    pub start: usize,
+    /// actual columns in this chunk (≤ kb)
+    pub len: usize,
+    /// compiled bucket the chunk is padded to
+    pub kb: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ReceiverWork {
+    pub rank: usize,
+    pub chunks: Vec<Chunk>,
+}
+
+/// Per-layer migration plan for one straggler (same for every block —
+/// layers have identical FFN shapes, mirroring Eq. (1)'s uniform γ).
+#[derive(Debug, Clone)]
+pub struct MigPlan {
+    pub straggler: usize,
+    /// migrated ffl indices (ascending), |migrated| = l_mig
+    pub migrated: Vec<u32>,
+    /// kept ffl indices for the straggler's own (g00, b2) executables
+    pub kept: Vec<u32>,
+    /// the straggler-side mlp bucket name for idx2
+    pub kept_bucket: String,
+    pub receivers: Vec<ReceiverWork>,
+}
+
+impl MigPlan {
+    pub fn l_mig(&self) -> usize {
+        self.migrated.len()
+    }
+
+    /// Bytes of weight broadcast per layer per direction-independent
+    /// setup: w1 cols + w2 rows of the migrated slice.
+    pub fn weight_bytes(&self, hs: usize) -> usize {
+        2 * hs * self.l_mig() * 4
+    }
+}
+
+/// Build a migration plan.
+///
+/// `remove_frac` of the FFN contraction is removed from the straggler
+/// (rounded UP to a compiled straggler-side bucket); of the removed
+/// columns, up to `mig_frac_of_removed` are *migrated* (computed exactly
+/// by receivers) and the rest are left to be pruned+imputed by resizing —
+/// the SEMI three-way split.  Pure MIG passes 1.0, pure resizing has no
+/// plan at all.
+///
+/// `kept_pref` is a full priority ranking (keep-first); the kept set is
+/// its prefix, and the *highest-priority* removed columns are migrated
+/// (exactness where it matters most).  `None` keeps the identity prefix.
+pub fn plan(
+    manifest: &Manifest,
+    straggler: usize,
+    remove_frac: f64,
+    mig_frac_of_removed: f64,
+    kept_pref: Option<&[u32]>,
+) -> Option<MigPlan> {
+    let m = &manifest.model;
+    if remove_frac <= 0.0 || mig_frac_of_removed <= 0.0 {
+        return None;
+    }
+    // straggler-side executable needs keep_ffl ∈ buckets (b1 = g00):
+    let bucket = manifest.bucket_for_gamma(remove_frac);
+    if bucket.gamma <= 0.0 {
+        return None;
+    }
+    let keep_ffl = bucket.keep_ffl;
+    let l_removed = m.ffl - keep_ffl;
+    let l_mig = ((l_removed as f64) * mig_frac_of_removed.min(1.0)).round() as usize;
+    if l_mig == 0 {
+        return None;
+    }
+
+    let (kept, migrated) = match kept_pref {
+        Some(pref) => {
+            debug_assert_eq!(pref.len(), m.ffl, "kept_pref must rank all indices");
+            let mut kept: Vec<u32> = pref[..keep_ffl].to_vec();
+            let mut migrated: Vec<u32> = pref[keep_ffl..keep_ffl + l_mig].to_vec();
+            kept.sort_unstable();
+            migrated.sort_unstable();
+            (kept, migrated)
+        }
+        None => (
+            (0..keep_ffl as u32).collect(),
+            (keep_ffl as u32..(keep_ffl + l_mig) as u32).collect(),
+        ),
+    };
+
+    // distribute migrated columns across normal ranks (virtual renumber)
+    let max_kb = *manifest.mig_buckets.last()?;
+    let mut receivers = Vec::new();
+    for r in (0..m.e).filter(|&r| r != straggler) {
+        let (s, t) = mig_range(r, straggler, m.e, l_mig);
+        if s == t {
+            continue;
+        }
+        let mut chunks = Vec::new();
+        let mut pos = s;
+        while pos < t {
+            let len = (t - pos).min(max_kb);
+            let kb = manifest.mig_bucket_for(len).unwrap_or(max_kb);
+            chunks.push(Chunk { start: pos, len, kb });
+            pos += len;
+        }
+        receivers.push(ReceiverWork { rank: r, chunks });
+    }
+    Some(MigPlan {
+        straggler,
+        migrated,
+        kept,
+        kept_bucket: bucket.name.clone(),
+        receivers,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+          "model": {"name":"t","hs":32,"depth":2,"heads":4,"e":4,"bs":2,
+                    "classes":10,"seq":17,"seq0":16,"pd":48,"hsl":8,"hl":1,
+                    "hd":8,"ffl":32,"params_total":0,"params_per_worker":0},
+          "buckets": [
+            {"name":"g00","gamma":0,"keep_hs":32,"keep_ffl":32},
+            {"name":"g25","gamma":0.25,"keep_hs":24,"keep_ffl":24},
+            {"name":"g50","gamma":0.5,"keep_hs":16,"keep_ffl":16},
+            {"name":"g88","gamma":0.875,"keep_hs":8,"keep_ffl":8}
+          ],
+          "mig_buckets": [8, 16],
+          "executables": []
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn zero_demand_no_plan() {
+        let m = manifest();
+        assert!(plan(&m, 0, 0.0, 1.0, None).is_none());
+        assert!(plan(&m, 0, -1.0, 1.0, None).is_none());
+        assert!(plan(&m, 0, 0.5, 0.0, None).is_none());
+    }
+
+    #[test]
+    fn kept_plus_migrated_partition_ffl() {
+        let m = manifest();
+        let p = plan(&m, 1, 0.5, 1.0, None).unwrap();
+        assert_eq!(p.kept.len() + p.migrated.len(), 32);
+        let mut all: Vec<u32> = p.kept.iter().chain(p.migrated.iter()).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..32).collect::<Vec<u32>>());
+        assert_eq!(p.kept_bucket, "g50");
+    }
+
+    #[test]
+    fn receiver_chunks_cover_migrated_exactly() {
+        let m = manifest();
+        for frac in [0.25, 0.5, 0.875] {
+            let p = plan(&m, 0, frac, 1.0, None).unwrap();
+            let mut covered = vec![false; p.l_mig()];
+            for rw in &p.receivers {
+                assert_ne!(rw.rank, 0);
+                for c in &rw.chunks {
+                    assert!(c.len <= c.kb, "chunk exceeds bucket");
+                    for i in c.start..c.start + c.len {
+                        assert!(!covered[i], "overlap");
+                        covered[i] = true;
+                    }
+                }
+            }
+            assert!(covered.iter().all(|&b| b), "gap at frac={frac}");
+        }
+    }
+
+    #[test]
+    fn chunks_respect_bucket_sizes() {
+        let m = manifest();
+        let p = plan(&m, 0, 0.875, 1.0, None).unwrap(); // l_mig = 24, 3 receivers
+        for rw in &p.receivers {
+            for c in &rw.chunks {
+                assert!(m.mig_buckets.contains(&c.kb));
+            }
+        }
+    }
+
+    #[test]
+    fn priority_preference_respected() {
+        let m = manifest();
+        // prefer keeping odd indices (pref = keep-order ranking)
+        let pref: Vec<u32> = (0..32u32)
+            .map(|i| if i < 16 { i * 2 + 1 } else { (i - 16) * 2 })
+            .collect();
+        let p = plan(&m, 0, 0.5, 1.0, Some(&pref)).unwrap();
+        assert!(p.kept.iter().all(|&i| i % 2 == 1));
+        assert!(p.migrated.iter().all(|&i| i % 2 == 0));
+    }
+
+    #[test]
+    fn weight_bytes_scale_with_l_mig() {
+        let m = manifest();
+        let p = plan(&m, 0, 0.5, 1.0, None).unwrap();
+        assert_eq!(p.weight_bytes(32), 2 * 32 * 16 * 4);
+
+        // three-way split: only half the removed columns migrate
+        let p = plan(&m, 0, 0.5, 0.5, None).unwrap();
+        assert_eq!(p.migrated.len(), 8);
+        assert_eq!(p.kept.len(), 16);
+    }
+}

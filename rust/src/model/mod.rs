@@ -1,0 +1,308 @@
+//! Model state: per-worker 1D-TP parameter shards + replicated params.
+//!
+//! Shard layout matches `python/compile/model.py` (column-then-row split):
+//! `wqkv [hs, 3·hsl]`, `wo [hsl, hs]`, `w1 [hs, ffl]`, `w2 [ffl, hs]`;
+//! LN/embed/head replicated.  Replicated replicas stay bit-identical
+//! across workers because their gradients are all-reduced and the
+//! optimizer update is deterministic — `trainer` asserts this invariant.
+
+use anyhow::{Context, Result};
+
+use crate::runtime::manifest::ModelInfo;
+use crate::tensor::Tensor;
+use crate::util::bin::Bundle;
+use crate::util::rng::Rng;
+
+/// One transformer block's per-worker shard.
+#[derive(Debug, Clone)]
+pub struct BlockShard {
+    pub ln1_g: Tensor,
+    pub ln1_b: Tensor,
+    pub wqkv: Tensor,
+    pub wo: Tensor,
+    pub ln2_g: Tensor,
+    pub ln2_b: Tensor,
+    pub w1: Tensor,
+    pub w2: Tensor,
+}
+
+impl BlockShard {
+    pub fn names() -> [&'static str; 8] {
+        ["ln1_g", "ln1_b", "wqkv", "wo", "ln2_g", "ln2_b", "w1", "w2"]
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        match name {
+            "ln1_g" => &self.ln1_g,
+            "ln1_b" => &self.ln1_b,
+            "wqkv" => &self.wqkv,
+            "wo" => &self.wo,
+            "ln2_g" => &self.ln2_g,
+            "ln2_b" => &self.ln2_b,
+            "w1" => &self.w1,
+            "w2" => &self.w2,
+            _ => panic!("unknown block tensor '{name}'"),
+        }
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> &mut Tensor {
+        match name {
+            "ln1_g" => &mut self.ln1_g,
+            "ln1_b" => &mut self.ln1_b,
+            "wqkv" => &mut self.wqkv,
+            "wo" => &mut self.wo,
+            "ln2_g" => &mut self.ln2_g,
+            "ln2_b" => &mut self.ln2_b,
+            "w1" => &mut self.w1,
+            "w2" => &mut self.w2,
+            _ => panic!("unknown block tensor '{name}'"),
+        }
+    }
+}
+
+/// Replicated (unsharded) parameters.
+#[derive(Debug, Clone)]
+pub struct RepParams {
+    pub w_patch: Tensor,
+    pub pos: Tensor,
+    pub cls: Tensor,
+    pub lnf_g: Tensor,
+    pub lnf_b: Tensor,
+    pub w_head: Tensor,
+    pub b_head: Tensor,
+}
+
+impl RepParams {
+    pub fn names() -> [&'static str; 7] {
+        ["w_patch", "pos", "cls", "lnf_g", "lnf_b", "w_head", "b_head"]
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        match name {
+            "w_patch" => &self.w_patch,
+            "pos" => &self.pos,
+            "cls" => &self.cls,
+            "lnf_g" => &self.lnf_g,
+            "lnf_b" => &self.lnf_b,
+            "w_head" => &self.w_head,
+            "b_head" => &self.b_head,
+            _ => panic!("unknown rep tensor '{name}'"),
+        }
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> &mut Tensor {
+        match name {
+            "w_patch" => &mut self.w_patch,
+            "pos" => &mut self.pos,
+            "cls" => &mut self.cls,
+            "lnf_g" => &mut self.lnf_g,
+            "lnf_b" => &mut self.lnf_b,
+            "w_head" => &mut self.w_head,
+            "b_head" => &mut self.b_head,
+            _ => panic!("unknown rep tensor '{name}'"),
+        }
+    }
+}
+
+/// Full model state: per-worker block shards + one replicated set.
+#[derive(Debug, Clone)]
+pub struct ModelState {
+    /// `shards[w][k]` = worker w's shard of block k
+    pub shards: Vec<Vec<BlockShard>>,
+    pub rep: RepParams,
+}
+
+const INIT_STD: f32 = 0.02;
+
+impl ModelState {
+    /// Fresh ViT init.  Per-(worker, block) seeds keep shard init
+    /// independent; replicated params use a shared seed stream.
+    pub fn init(m: &ModelInfo, seed: u64) -> ModelState {
+        let mut shards = Vec::with_capacity(m.e);
+        for w in 0..m.e {
+            let mut blocks = Vec::with_capacity(m.depth);
+            for k in 0..m.depth {
+                let mut rng = Rng::new(seed ^ (0x5151 + (w * 1009 + k) as u64));
+                blocks.push(BlockShard {
+                    ln1_g: Tensor::full(&[m.hs], 1.0),
+                    ln1_b: Tensor::zeros(&[m.hs]),
+                    wqkv: Tensor::normal(&[m.hs, 3 * m.hsl], INIT_STD, &mut rng),
+                    wo: Tensor::normal(&[m.hsl, m.hs], INIT_STD, &mut rng),
+                    ln2_g: Tensor::full(&[m.hs], 1.0),
+                    ln2_b: Tensor::zeros(&[m.hs]),
+                    w1: Tensor::normal(&[m.hs, m.ffl], INIT_STD, &mut rng),
+                    w2: Tensor::normal(&[m.ffl, m.hs], INIT_STD, &mut rng),
+                });
+            }
+            shards.push(blocks);
+        }
+        let mut rng = Rng::new(seed ^ 0xA11CE);
+        let rep = RepParams {
+            w_patch: Tensor::normal(&[m.pd, m.hs], INIT_STD, &mut rng),
+            pos: Tensor::zeros(&[m.seq, m.hs]),
+            cls: Tensor::zeros(&[m.hs]),
+            lnf_g: Tensor::full(&[m.hs], 1.0),
+            lnf_b: Tensor::zeros(&[m.hs]),
+            w_head: Tensor::normal(&[m.hs, m.classes], INIT_STD, &mut rng),
+            b_head: Tensor::zeros(&[m.classes]),
+        };
+        ModelState { shards, rep }
+    }
+
+    /// Load the golden bundle's parameter snapshot (cross-language test).
+    pub fn from_bundle(m: &ModelInfo, bundle: &Bundle) -> Result<ModelState> {
+        let mut shards = Vec::with_capacity(m.e);
+        for w in 0..m.e {
+            let mut blocks = Vec::with_capacity(m.depth);
+            for k in 0..m.depth {
+                let load = |n: &str| -> Result<Tensor> {
+                    let e = bundle.get(&format!("params.{w}.blk{k}.{n}"))?;
+                    Ok(Tensor::from_vec(&e.dims, e.f32()?.to_vec()))
+                };
+                blocks.push(BlockShard {
+                    ln1_g: load("ln1_g")?,
+                    ln1_b: load("ln1_b")?,
+                    wqkv: load("wqkv")?,
+                    wo: load("wo")?,
+                    ln2_g: load("ln2_g")?,
+                    ln2_b: load("ln2_b")?,
+                    w1: load("w1")?,
+                    w2: load("w2")?,
+                });
+            }
+            shards.push(blocks);
+        }
+        let load = |n: &str| -> Result<Tensor> {
+            let e = bundle.get(&format!("params.rep.{n}"))?;
+            Ok(Tensor::from_vec(&e.dims, e.f32()?.to_vec()))
+        };
+        Ok(ModelState {
+            shards,
+            rep: RepParams {
+                w_patch: load("w_patch")?,
+                pos: load("pos")?,
+                cls: load("cls")?,
+                lnf_g: load("lnf_g")?,
+                lnf_b: load("lnf_b")?,
+                w_head: load("w_head")?,
+                b_head: load("b_head")?,
+            },
+        })
+    }
+
+    pub fn e(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn depth(&self) -> usize {
+        self.shards.first().map(|b| b.len()).unwrap_or(0)
+    }
+
+    /// Total parameter count (shards + one replica).
+    pub fn param_count(&self) -> usize {
+        let shard: usize = self
+            .shards
+            .iter()
+            .flat_map(|bs| bs.iter())
+            .map(|b| BlockShard::names().iter().map(|n| b.get(n).len()).sum::<usize>())
+            .sum();
+        let rep: usize =
+            RepParams::names().iter().map(|n| self.rep.get(n).len()).sum();
+        shard + rep
+    }
+}
+
+/// Gradients for one block shard (same shapes as [`BlockShard`]).
+pub type BlockGrads = BlockShard;
+
+/// Gradients for the replicated params.
+pub type RepGrads = RepParams;
+
+pub fn zero_block_grads(m: &ModelInfo) -> BlockGrads {
+    BlockShard {
+        ln1_g: Tensor::zeros(&[m.hs]),
+        ln1_b: Tensor::zeros(&[m.hs]),
+        wqkv: Tensor::zeros(&[m.hs, 3 * m.hsl]),
+        wo: Tensor::zeros(&[m.hsl, m.hs]),
+        ln2_g: Tensor::zeros(&[m.hs]),
+        ln2_b: Tensor::zeros(&[m.hs]),
+        w1: Tensor::zeros(&[m.hs, m.ffl]),
+        w2: Tensor::zeros(&[m.ffl, m.hs]),
+    }
+}
+
+/// Verify the golden bundle's shapes agree with the manifest — guards the
+/// python/rust contract.
+pub fn check_bundle_shapes(m: &ModelInfo, bundle: &Bundle) -> Result<()> {
+    let e = bundle.get("params.0.blk0.wqkv").context("bundle missing shard params")?;
+    anyhow::ensure!(
+        e.dims == vec![m.hs, 3 * m.hsl],
+        "wqkv bundle dims {:?} != manifest [{}, {}]", e.dims, m.hs, 3 * m.hsl
+    );
+    let p = bundle.get("batch.patches")?;
+    anyhow::ensure!(
+        p.dims == vec![m.bs, m.seq0, m.pd],
+        "patches dims {:?} mismatch", p.dims
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_info() -> ModelInfo {
+        ModelInfo {
+            name: "t".into(), hs: 32, depth: 2, heads: 4, e: 4, bs: 2,
+            classes: 10, seq: 17, seq0: 16, pd: 48, hsl: 8, hl: 1, hd: 8,
+            ffl: 32, params_total: 0, params_per_worker: 0,
+        }
+    }
+
+    #[test]
+    fn init_shapes() {
+        let m = tiny_info();
+        let s = ModelState::init(&m, 1);
+        assert_eq!(s.e(), 4);
+        assert_eq!(s.depth(), 2);
+        assert_eq!(s.shards[0][0].wqkv.dims, vec![32, 24]);
+        assert_eq!(s.shards[0][0].w2.dims, vec![32, 32]);
+        assert_eq!(s.rep.w_head.dims, vec![32, 10]);
+    }
+
+    #[test]
+    fn init_deterministic_and_shard_distinct() {
+        let m = tiny_info();
+        let a = ModelState::init(&m, 1);
+        let b = ModelState::init(&m, 1);
+        assert_eq!(a.shards[0][0].wqkv.data, b.shards[0][0].wqkv.data);
+        // different workers get different shards
+        assert_ne!(a.shards[0][0].wqkv.data, a.shards[1][0].wqkv.data);
+        // different seeds differ
+        let c = ModelState::init(&m, 2);
+        assert_ne!(a.shards[0][0].wqkv.data, c.shards[0][0].wqkv.data);
+    }
+
+    #[test]
+    fn param_count_matches_formula() {
+        let m = tiny_info();
+        let s = ModelState::init(&m, 1);
+        let blk = 4 * 32 + 32 * 24 + 8 * 32 + 32 * 32 + 32 * 32;
+        let rep = 48 * 32 + 17 * 32 + 32 + 2 * 32 + 32 * 10 + 10;
+        assert_eq!(s.param_count(), 4 * 2 * blk + rep);
+    }
+
+    #[test]
+    fn name_accessors_roundtrip() {
+        let m = tiny_info();
+        let mut s = ModelState::init(&m, 1);
+        for n in BlockShard::names() {
+            let dims = s.shards[0][0].get(n).dims.clone();
+            s.shards[0][0].get_mut(n).fill(1.0);
+            assert_eq!(s.shards[0][0].get(n).dims, dims);
+        }
+        for n in RepParams::names() {
+            assert!(!s.rep.get(n).is_empty());
+        }
+    }
+}

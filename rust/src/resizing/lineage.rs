@@ -1,0 +1,150 @@
+//! Lineage lookup table + imputation policies (paper §III-A).
+//!
+//! The executables return *full-shape* gradients whose pruned rows/columns
+//! are exactly zero (the kernel's scatter-add backward).  The lineage
+//! records which positions those are, so (a) gradients stay correctly
+//! aligned with weights — "map the i-th column gradients to the i-th
+//! column weight parameters" — and (b) the Average/Same policies can
+//! re-impute them host-side.  Zero is a no-op by construction.
+
+use crate::config::Imputation;
+use crate::tensor::Tensor;
+
+/// Kept/pruned index sets over one contraction dimension.
+#[derive(Debug, Clone)]
+pub struct Lineage {
+    pub full: usize,
+    /// ascending kept indices
+    pub kept: Vec<u32>,
+    /// ascending pruned indices (complement)
+    pub pruned: Vec<u32>,
+}
+
+impl Lineage {
+    pub fn new(full: usize, kept: &[u32]) -> Lineage {
+        debug_assert!(kept.windows(2).all(|w| w[0] < w[1]), "kept must be sorted");
+        let mut is_kept = vec![false; full];
+        for &i in kept {
+            is_kept[i as usize] = true;
+        }
+        let pruned = (0..full as u32).filter(|&i| !is_kept[i as usize]).collect();
+        Lineage { full, kept: kept.to_vec(), pruned }
+    }
+
+    pub fn identity(full: usize) -> Lineage {
+        Lineage { full, kept: (0..full as u32).collect(), pruned: Vec::new() }
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.pruned.is_empty()
+    }
+}
+
+/// Re-impute the pruned ROWS of a full-shape gradient (wqkv/w1-row,
+/// w2-row lineages) according to the policy.  `prev` is last iteration's
+/// gradient for this tensor (required by Same).
+pub fn impute_rows(grad: &mut Tensor, lin: &Lineage, policy: Imputation, prev: Option<&Tensor>) {
+    if lin.is_identity() {
+        return;
+    }
+    match policy {
+        Imputation::Zero => {} // executables already left exact zeros
+        Imputation::Average => grad.impute_rows_mean(&lin.pruned),
+        Imputation::Same => {
+            if let Some(p) = prev {
+                grad.copy_rows_from(&lin.pruned, p);
+            }
+        }
+    }
+}
+
+/// Re-impute the pruned COLUMNS of a full-shape gradient (w1's co-pruned
+/// output columns).
+pub fn impute_cols(grad: &mut Tensor, lin: &Lineage, policy: Imputation, prev: Option<&Tensor>) {
+    if lin.is_identity() {
+        return;
+    }
+    match policy {
+        Imputation::Zero => {}
+        Imputation::Average => grad.impute_cols_mean(&lin.pruned),
+        Imputation::Same => {
+            if let Some(p) = prev {
+                grad.copy_cols_from(&lin.pruned, p);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complement_is_exact() {
+        let l = Lineage::new(8, &[0, 2, 5]);
+        assert_eq!(l.pruned, vec![1, 3, 4, 6, 7]);
+        assert_eq!(l.kept.len() + l.pruned.len(), 8);
+    }
+
+    #[test]
+    fn identity_has_no_pruned() {
+        let l = Lineage::identity(16);
+        assert!(l.is_identity());
+        assert_eq!(l.kept.len(), 16);
+    }
+
+    #[test]
+    fn roundtrip_gather_scatter_via_lineage() {
+        // expand(compact(g)) restores kept rows exactly (DESIGN.md §6 inv.)
+        let g = Tensor::from_vec(&[4, 2], vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        let lin = Lineage::new(4, &[1, 3]);
+        let compact = g.gather_rows(&lin.kept);
+        let mut full = Tensor::zeros(&[4, 2]);
+        full.scatter_rows_assign(&lin.kept, &compact);
+        assert_eq!(&full.data[2..4], &[3., 4.]);
+        assert_eq!(&full.data[6..8], &[7., 8.]);
+        assert_eq!(&full.data[0..2], &[0., 0.]); // pruned zeros
+    }
+
+    #[test]
+    fn zero_policy_keeps_zeros() {
+        let lin = Lineage::new(3, &[0, 2]);
+        let mut g = Tensor::from_vec(&[3, 2], vec![1., 1., 0., 0., 2., 2.]);
+        impute_rows(&mut g, &lin, Imputation::Zero, None);
+        assert_eq!(&g.data[2..4], &[0., 0.]);
+    }
+
+    #[test]
+    fn average_policy_fills_mean() {
+        let lin = Lineage::new(3, &[0, 2]);
+        let mut g = Tensor::from_vec(&[3, 2], vec![1., 4., 0., 0., 3., 8.]);
+        impute_rows(&mut g, &lin, Imputation::Average, None);
+        assert_eq!(&g.data[2..4], &[2., 6.]); // column means of kept rows
+    }
+
+    #[test]
+    fn same_policy_copies_previous() {
+        let lin = Lineage::new(3, &[0, 2]);
+        let prev = Tensor::from_vec(&[3, 2], vec![9., 9., 7., 7., 9., 9.]);
+        let mut g = Tensor::from_vec(&[3, 2], vec![1., 1., 0., 0., 2., 2.]);
+        impute_rows(&mut g, &lin, Imputation::Same, Some(&prev));
+        assert_eq!(&g.data[2..4], &[7., 7.]);
+        // kept rows untouched
+        assert_eq!(&g.data[0..2], &[1., 1.]);
+    }
+
+    #[test]
+    fn col_imputation_variants() {
+        let lin = Lineage::new(3, &[0, 2]); // col 1 pruned
+        let mut g = Tensor::from_vec(&[2, 3], vec![1., 0., 3., 4., 0., 8.]);
+        impute_cols(&mut g, &lin, Imputation::Average, None);
+        assert_eq!(g.data[1], 2.0); // (1+3)/2
+        assert_eq!(g.data[4], 6.0); // (4+8)/2
+
+        let prev = Tensor::from_vec(&[2, 3], vec![0., 5., 0., 0., 6., 0.]);
+        let mut g = Tensor::from_vec(&[2, 3], vec![1., 0., 3., 4., 0., 8.]);
+        impute_cols(&mut g, &lin, Imputation::Same, Some(&prev));
+        assert_eq!(g.data[1], 5.0);
+        assert_eq!(g.data[4], 6.0);
+    }
+}

@@ -1,0 +1,256 @@
+//! ZERO-resizing (paper §III): dynamic workload balancing by temporarily
+//! shrinking the contraction dimension of the straggler's GEMMs.
+//!
+//! * [`lineage`] — the lookup table recording which dimensions were pruned
+//!   so recovered gradients map to the right weight columns, plus the
+//!   imputation policies (Zero/Average/Same, paper Fig. 3).
+//! * [`priority`] — `w_var_list` / `pri_list`: prune the columns whose
+//!   weights moved least, with the *incremental* update that breaks the
+//!   zero-imputation false-positive endless loop (paper §III-B).
+//! * [`ResizePlanner`] — Algorithm 1: uniform γ from Eq. (1), per-layer
+//!   differentiated γ_k via θ = N_iter·θ_iter and γ_k = max(γ_k, α·γ),
+//!   rounded UP to the compiled pruning buckets.
+
+pub mod lineage;
+pub mod priority;
+
+use crate::runtime::manifest::Manifest;
+use crate::util::rng::Rng;
+use priority::BlockTrackers;
+
+/// How pruned columns are chosen.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Selection {
+    /// blind random (paper ZERO-Rd)
+    Random,
+    /// importance-based (paper ZERO-Pri)
+    Priority,
+}
+
+/// Per-layer resizing decision for one worker and one iteration.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    /// bucket names (manifest naming contract)
+    pub attn_bucket: String,
+    pub mlp_b1: String,
+    pub mlp_b2: String,
+    /// kept contraction indices (ascending — the paper's lexicographic
+    /// concatenation), sized exactly to the bucket's keep count
+    pub attn_keep: Vec<u32>,
+    pub mlp_keep1: Vec<u32>,
+    pub mlp_keep2: Vec<u32>,
+}
+
+impl LayerPlan {
+    /// The no-op (γ=0) plan.
+    pub fn full(hs: usize, ffl: usize) -> LayerPlan {
+        let all_hs: Vec<u32> = (0..hs as u32).collect();
+        let all_ffl: Vec<u32> = (0..ffl as u32).collect();
+        LayerPlan {
+            attn_bucket: "g00".into(),
+            mlp_b1: "g00".into(),
+            mlp_b2: "g00".into(),
+            attn_keep: all_hs.clone(),
+            mlp_keep1: all_hs,
+            mlp_keep2: all_ffl,
+        }
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.attn_bucket == "g00" && self.mlp_b1 == "g00" && self.mlp_b2 == "g00"
+    }
+
+    /// Total pruned columns in this plan (metrics).
+    pub fn pruned_cols(&self, hs: usize, ffl: usize) -> u64 {
+        ((hs - self.attn_keep.len()) + (hs - self.mlp_keep1.len())
+            + (ffl - self.mlp_keep2.len())) as u64
+    }
+}
+
+/// Pick a keep-set of `keep` indices out of `n`.
+pub fn select_keep(
+    n: usize,
+    keep: usize,
+    selection: Selection,
+    tracker: Option<&priority::Tracker>,
+    rng: &mut Rng,
+) -> Vec<u32> {
+    debug_assert!(keep <= n);
+    if keep == n {
+        return (0..n as u32).collect();
+    }
+    match (selection, tracker) {
+        (Selection::Priority, Some(t)) if t.has_stats() => t.keep_set(keep),
+        // Rd, or Pri before any statistics exist (first epoch)
+        _ => rng.choose_k(n, keep),
+    }
+}
+
+/// Algorithm 1 driver: produce per-layer plans for one straggling worker.
+pub struct ResizePlanner<'a> {
+    pub manifest: &'a Manifest,
+    pub selection: Selection,
+    /// θ_iter micro-threshold (paper default 1e-3)
+    pub theta_iter: f64,
+    /// decay factor α (paper default 0.8)
+    pub alpha: f64,
+    pub iters_per_epoch: usize,
+}
+
+impl<'a> ResizePlanner<'a> {
+    /// Uniform-γ plan (ZERO-Rd / ZERO-Pri): one bucket for all layers.
+    pub fn plan_uniform(
+        &self,
+        gamma: f64,
+        trackers: &[BlockTrackers],
+        rng: &mut Rng,
+    ) -> Vec<LayerPlan> {
+        let m = &self.manifest.model;
+        let b = self.manifest.bucket_for_gamma(gamma);
+        (0..m.depth)
+            .map(|k| {
+                let t = &trackers[k];
+                LayerPlan {
+                    attn_bucket: b.name.clone(),
+                    mlp_b1: b.name.clone(),
+                    mlp_b2: b.name.clone(),
+                    attn_keep: select_keep(
+                        m.hs, b.keep_hs, self.selection, Some(&t.qkv), rng),
+                    mlp_keep1: select_keep(
+                        m.hs, b.keep_hs, self.selection, Some(&t.fc1), rng),
+                    mlp_keep2: select_keep(
+                        m.ffl, b.keep_ffl, self.selection, Some(&t.fc2), rng),
+                }
+            })
+            .collect()
+    }
+
+    /// Differentiated per-layer plan (ZERO-PriDiff{E,R}, Alg. 1 lines
+    /// 3-15): γ_k from the candidate set {δ_i < θ}, floored by α·γ_uniform,
+    /// then rounded up to a bucket.
+    pub fn plan_diff(
+        &self,
+        gamma_uniform: f64,
+        trackers: &[BlockTrackers],
+        rng: &mut Rng,
+    ) -> Vec<LayerPlan> {
+        let m = &self.manifest.model;
+        let theta = (self.iters_per_epoch as f64) * self.theta_iter;
+        (0..m.depth)
+            .map(|k| {
+                let t = &trackers[k];
+                // candidate-set ratio per prunable contraction
+                let g_qkv = self.layer_gamma(t.qkv.frac_below(theta), gamma_uniform);
+                let g_fc1 = self.layer_gamma(t.fc1.frac_below(theta), gamma_uniform);
+                let g_fc2 = self.layer_gamma(t.fc2.frac_below(theta), gamma_uniform);
+                let bq = self.manifest.bucket_for_gamma(g_qkv);
+                let b1 = self.manifest.bucket_for_gamma(g_fc1);
+                let b2 = self.manifest.bucket_for_gamma(g_fc2);
+                LayerPlan {
+                    attn_bucket: bq.name.clone(),
+                    mlp_b1: b1.name.clone(),
+                    mlp_b2: b2.name.clone(),
+                    attn_keep: select_keep(
+                        m.hs, bq.keep_hs, self.selection, Some(&t.qkv), rng),
+                    mlp_keep1: select_keep(
+                        m.hs, b1.keep_hs, self.selection, Some(&t.fc1), rng),
+                    mlp_keep2: select_keep(
+                        m.ffl, b2.keep_ffl, self.selection, Some(&t.fc2), rng),
+                }
+            })
+            .collect()
+    }
+
+    /// γ_k = max(candidate-fraction, α·γ_uniform)  (Alg. 1 line 11).
+    fn layer_gamma(&self, candidate_frac: f64, gamma_uniform: f64) -> f64 {
+        candidate_frac.max(self.alpha * gamma_uniform).min(0.9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+          "model": {"name":"t","hs":32,"depth":2,"heads":4,"e":4,"bs":2,
+                    "classes":10,"seq":17,"seq0":16,"pd":48,"hsl":8,"hl":1,
+                    "hd":8,"ffl":32,"params_total":0,"params_per_worker":0},
+          "buckets": [
+            {"name":"g00","gamma":0,"keep_hs":32,"keep_ffl":32},
+            {"name":"g25","gamma":0.25,"keep_hs":24,"keep_ffl":24},
+            {"name":"g50","gamma":0.5,"keep_hs":16,"keep_ffl":16},
+            {"name":"g88","gamma":0.875,"keep_hs":8,"keep_ffl":8}
+          ],
+          "mig_buckets": [8, 16],
+          "executables": []
+        }"#,
+        )
+        .unwrap()
+    }
+
+    fn planner(m: &Manifest) -> ResizePlanner {
+        ResizePlanner {
+            manifest: m,
+            selection: Selection::Random,
+            theta_iter: 1e-3,
+            alpha: 0.8,
+            iters_per_epoch: 10,
+        }
+    }
+
+    fn trackers(m: &Manifest) -> Vec<BlockTrackers> {
+        (0..m.model.depth)
+            .map(|_| BlockTrackers::new(m.model.hs, m.model.hs, m.model.ffl))
+            .collect()
+    }
+
+    #[test]
+    fn full_plan_is_identity() {
+        let p = LayerPlan::full(32, 64);
+        assert!(p.is_full());
+        assert_eq!(p.attn_keep.len(), 32);
+        assert_eq!(p.pruned_cols(32, 64), 0);
+    }
+
+    #[test]
+    fn uniform_plan_rounds_up() {
+        let m = manifest();
+        let pl = planner(&m);
+        let t = trackers(&m);
+        let mut rng = Rng::new(1);
+        let plans = pl.plan_uniform(0.3, &t, &mut rng); // 0.3 → g50 bucket
+        assert_eq!(plans.len(), 2);
+        for p in &plans {
+            assert_eq!(p.attn_bucket, "g50");
+            assert_eq!(p.attn_keep.len(), 16);
+            assert_eq!(p.mlp_keep2.len(), 16);
+            // keep sets sorted ascending & unique
+            assert!(p.attn_keep.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn diff_plan_respects_alpha_floor() {
+        let m = manifest();
+        let pl = planner(&m);
+        let t = trackers(&m); // no stats → candidate_frac = 0
+        let mut rng = Rng::new(1);
+        // α·γ = 0.8·0.5 = 0.4 → bucket g50 (round up)
+        let plans = pl.plan_diff(0.5, &t, &mut rng);
+        for p in &plans {
+            assert_eq!(p.attn_bucket, "g50");
+        }
+    }
+
+    #[test]
+    fn select_keep_falls_back_to_random_without_stats() {
+        let mut rng = Rng::new(2);
+        let t = priority::Tracker::new(16);
+        let keep = select_keep(16, 8, Selection::Priority, Some(&t), &mut rng);
+        assert_eq!(keep.len(), 8);
+        assert!(keep.windows(2).all(|w| w[0] < w[1]));
+    }
+}

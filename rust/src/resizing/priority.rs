@@ -1,0 +1,201 @@
+//! Priority pruning statistics (paper §III-B).
+//!
+//! Per prunable contraction we track `w_var_list`: δ_i = mean |Δ| of the
+//! weight values at contraction index i since the last epoch.  Columns
+//! with the smallest variation are pruned first.  The update is
+//! **incremental**: indices pruned during the last epoch keep their stale
+//! δ — a fresh δ would be ≈0 (zero-imputed gradients barely move those
+//! weights), they would be re-pruned forever, and pruning would become a
+//! permanent structural change.  With stale values they re-enter the pool
+//! on their old merit, giving the paper's "round-robin yet prioritized"
+//! schedule.
+
+/// Variation tracker for one contraction dimension of one weight matrix.
+#[derive(Debug, Clone)]
+pub struct Tracker {
+    /// δ per contraction index; None until the first epoch completes
+    w_var: Option<Vec<f32>>,
+    n: usize,
+}
+
+impl Tracker {
+    pub fn new(n: usize) -> Tracker {
+        Tracker { w_var: None, n }
+    }
+
+    pub fn has_stats(&self) -> bool {
+        self.w_var.is_some()
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Epoch-end update.  `delta[i]` = fresh mean |Δ| for index i;
+    /// `pruned_last_epoch` keeps stale values (incremental update).
+    pub fn epoch_update(&mut self, delta: &[f32], pruned_last_epoch: &[u32]) {
+        debug_assert_eq!(delta.len(), self.n);
+        match &mut self.w_var {
+            None => {
+                // first stats: everything fresh (nothing was pruned before
+                // statistics existed — trackers gate pruning selection)
+                self.w_var = Some(delta.to_vec());
+            }
+            Some(v) => {
+                let mut stale = vec![false; self.n];
+                for &i in pruned_last_epoch {
+                    stale[i as usize] = true;
+                }
+                for i in 0..self.n {
+                    if !stale[i] {
+                        v[i] = delta[i];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Keep-set: the `keep` indices with the LARGEST variation (their
+    /// complement — the smallest-δ columns — is the paper's pri_list),
+    /// ascending order.  Ties break toward keeping the lower index.
+    pub fn keep_set(&self, keep: usize) -> Vec<u32> {
+        let v = self.w_var.as_ref().expect("keep_set requires stats");
+        let mut idx: Vec<u32> = (0..self.n as u32).collect();
+        // sort by δ descending, index ascending for ties
+        idx.sort_by(|&a, &b| {
+            let (da, db) = (v[a as usize], v[b as usize]);
+            db.partial_cmp(&da).unwrap().then(a.cmp(&b))
+        });
+        let mut kept: Vec<u32> = idx.into_iter().take(keep).collect();
+        kept.sort_unstable();
+        kept
+    }
+
+    /// The pri_list itself (to-be-pruned indices, smallest δ first).
+    pub fn pri_list(&self, count: usize) -> Vec<u32> {
+        let v = self.w_var.as_ref().expect("pri_list requires stats");
+        let mut idx: Vec<u32> = (0..self.n as u32).collect();
+        idx.sort_by(|&a, &b| {
+            let (da, db) = (v[a as usize], v[b as usize]);
+            da.partial_cmp(&db).unwrap().then(a.cmp(&b))
+        });
+        idx.truncate(count);
+        idx.sort_unstable(); // ascending, per Alg. 1 line 14
+        idx
+    }
+
+    /// Full keep-priority ranking: all indices, highest δ first (the
+    /// order SEMI uses to split kept / migrated / pruned three ways).
+    pub fn rank_all(&self) -> Vec<u32> {
+        let v = self.w_var.as_ref().expect("rank_all requires stats");
+        let mut idx: Vec<u32> = (0..self.n as u32).collect();
+        idx.sort_by(|&a, &b| {
+            let (da, db) = (v[a as usize], v[b as usize]);
+            db.partial_cmp(&da).unwrap().then(a.cmp(&b))
+        });
+        idx
+    }
+
+    /// Fraction of indices with δ < θ (the differentiated-ratio candidate
+    /// set, Alg. 1 lines 9-10). 0 before stats exist.
+    pub fn frac_below(&self, theta: f64) -> f64 {
+        match &self.w_var {
+            None => 0.0,
+            Some(v) => {
+                v.iter().filter(|&&d| (d as f64) < theta).count() as f64 / self.n as f64
+            }
+        }
+    }
+}
+
+/// The three prunable contractions of one transformer block.
+#[derive(Debug, Clone)]
+pub struct BlockTrackers {
+    /// QKV input dim (hs) — tracked on wqkv rows
+    pub qkv: Tracker,
+    /// FC1 input dim (hs) — tracked on w1 rows
+    pub fc1: Tracker,
+    /// FC2 input dim (ffl) — tracked on w2 rows
+    pub fc2: Tracker,
+}
+
+impl BlockTrackers {
+    pub fn new(hs_qkv: usize, hs_fc1: usize, ffl: usize) -> BlockTrackers {
+        BlockTrackers {
+            qkv: Tracker::new(hs_qkv),
+            fc1: Tracker::new(hs_fc1),
+            fc2: Tracker::new(ffl),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_stats_until_first_update() {
+        let t = Tracker::new(8);
+        assert!(!t.has_stats());
+        assert_eq!(t.frac_below(1.0), 0.0);
+    }
+
+    #[test]
+    fn keep_set_prefers_high_variation() {
+        let mut t = Tracker::new(4);
+        t.epoch_update(&[0.1, 0.9, 0.05, 0.5], &[]);
+        assert_eq!(t.keep_set(2), vec![1, 3]); // largest δ
+        assert_eq!(t.pri_list(2), vec![0, 2]); // smallest δ, ascending
+    }
+
+    #[test]
+    fn keep_and_pri_partition() {
+        let mut t = Tracker::new(6);
+        t.epoch_update(&[0.3, 0.1, 0.6, 0.2, 0.5, 0.4], &[]);
+        let kept = t.keep_set(4);
+        let pri = t.pri_list(2);
+        let mut all: Vec<u32> = kept.iter().chain(pri.iter()).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn incremental_update_keeps_stale_for_pruned() {
+        let mut t = Tracker::new(4);
+        t.epoch_update(&[0.5, 0.6, 0.7, 0.8], &[]);
+        // index 0 was pruned last epoch: its fresh δ would be ~0 (zero
+        // imputation), but we must keep 0.5 — otherwise it is re-pruned
+        // forever (the endless-loop the paper terminates).
+        t.epoch_update(&[0.0, 0.3, 0.71, 0.82], &[0]);
+        // stale 0.5 beats index 1's fresh 0.3 → 0 survives on old merit
+        assert_eq!(t.keep_set(3), vec![0, 2, 3]);
+        assert_eq!(t.pri_list(1), vec![1]);
+    }
+
+    #[test]
+    fn without_incremental_update_pruning_locks_in() {
+        // Control experiment: demonstrate WHY incremental update matters.
+        let mut naive = vec![0.5f32, 0.6, 0.7, 0.8];
+        // epoch 1: prune argmin = 0. Fresh stats: pruned col barely moved.
+        naive[0] = 0.0;
+        let argmin = (0..4).min_by(|&a, &b| naive[a].partial_cmp(&naive[b]).unwrap());
+        assert_eq!(argmin, Some(0)); // 0 would be pruned again — the loop
+    }
+
+    #[test]
+    fn ties_break_deterministically() {
+        let mut t = Tracker::new(4);
+        t.epoch_update(&[0.5, 0.5, 0.5, 0.5], &[]);
+        assert_eq!(t.keep_set(2), vec![0, 1]);
+        assert_eq!(t.pri_list(2), vec![0, 1]);
+    }
+
+    #[test]
+    fn frac_below_counts() {
+        let mut t = Tracker::new(4);
+        t.epoch_update(&[0.1, 0.2, 0.3, 0.4], &[]);
+        assert_eq!(t.frac_below(0.25), 0.5);
+        assert_eq!(t.frac_below(1.0), 1.0);
+        assert_eq!(t.frac_below(0.05), 0.0);
+    }
+}

@@ -1,0 +1,260 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime (executable names, files, input/output shapes+dtypes,
+//! pruning-bucket metadata).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            _ => bail!("unknown dtype '{s}'"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExecSpec {
+    pub name: String,
+    pub file: String,
+    pub role: String,
+    pub inputs: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+}
+
+/// Static model/parallelism facts (mirrors python ModelCfg).
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub hs: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub e: usize,
+    pub bs: usize,
+    pub classes: usize,
+    pub seq: usize,
+    pub seq0: usize,
+    pub pd: usize,
+    pub hsl: usize,
+    pub hl: usize,
+    pub hd: usize,
+    pub ffl: usize,
+    pub params_total: usize,
+    pub params_per_worker: usize,
+}
+
+/// A pruning bucket: γ plus the static keep sizes it compiles to.
+#[derive(Debug, Clone)]
+pub struct Bucket {
+    pub name: String,
+    pub gamma: f64,
+    pub keep_hs: usize,
+    pub keep_ffl: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelInfo,
+    /// ascending γ (g00 first)
+    pub buckets: Vec<Bucket>,
+    /// ascending receiver-slice bucket sizes (over ffl)
+    pub mig_buckets: Vec<usize>,
+    pub executables: Vec<ExecSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let m = j.get("model")?;
+        let model = ModelInfo {
+            name: m.get("name")?.str()?.to_string(),
+            hs: m.get("hs")?.usize()?,
+            depth: m.get("depth")?.usize()?,
+            heads: m.get("heads")?.usize()?,
+            e: m.get("e")?.usize()?,
+            bs: m.get("bs")?.usize()?,
+            classes: m.get("classes")?.usize()?,
+            seq: m.get("seq")?.usize()?,
+            seq0: m.get("seq0")?.usize()?,
+            pd: m.get("pd")?.usize()?,
+            hsl: m.get("hsl")?.usize()?,
+            hl: m.get("hl")?.usize()?,
+            hd: m.get("hd")?.usize()?,
+            ffl: m.get("ffl")?.usize()?,
+            params_total: m.get("params_total")?.usize()?,
+            params_per_worker: m.get("params_per_worker")?.usize()?,
+        };
+        let mut buckets = Vec::new();
+        for b in j.get("buckets")?.arr()? {
+            buckets.push(Bucket {
+                name: b.get("name")?.str()?.to_string(),
+                gamma: b.get("gamma")?.num()?,
+                keep_hs: b.get("keep_hs")?.usize()?,
+                keep_ffl: b.get("keep_ffl")?.usize()?,
+            });
+        }
+        buckets.sort_by(|a, b| a.gamma.partial_cmp(&b.gamma).unwrap());
+        let mut mig_buckets: Vec<usize> = j
+            .get("mig_buckets")?
+            .arr()?
+            .iter()
+            .map(|v| v.usize())
+            .collect::<Result<_>>()?;
+        mig_buckets.sort_unstable();
+        let mut executables = Vec::new();
+        for e in j.get("executables")?.arr()? {
+            let args = |key: &str| -> Result<Vec<ArgSpec>> {
+                e.get(key)?
+                    .arr()?
+                    .iter()
+                    .map(|a| {
+                        Ok(ArgSpec {
+                            name: a.get("name")?.str()?.to_string(),
+                            dims: a.get("dims")?.dims()?,
+                            dtype: Dtype::parse(a.get("dtype")?.str()?)?,
+                        })
+                    })
+                    .collect()
+            };
+            executables.push(ExecSpec {
+                name: e.get("name")?.str()?.to_string(),
+                file: e.get("file")?.str()?.to_string(),
+                role: e.get("role")?.str()?.to_string(),
+                inputs: args("inputs")?,
+                outputs: args("outputs")?,
+            });
+        }
+        Ok(Manifest { model, buckets, mig_buckets, executables })
+    }
+
+    pub fn exec(&self, name: &str) -> Result<&ExecSpec> {
+        self.executables
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| format!("no executable '{name}'"))
+    }
+
+    /// Smallest bucket whose γ satisfies the demand (round UP so the
+    /// straggler never prunes less than Eq.(1) requires). γ=0 → g00.
+    pub fn bucket_for_gamma(&self, gamma: f64) -> &Bucket {
+        self.buckets
+            .iter()
+            .find(|b| b.gamma >= gamma - 1e-9)
+            .unwrap_or_else(|| self.buckets.last().expect("no buckets"))
+    }
+
+    /// Smallest migration bucket that fits `cols` receiver-slice columns.
+    pub fn mig_bucket_for(&self, cols: usize) -> Option<usize> {
+        self.mig_buckets.iter().copied().find(|&kb| kb >= cols)
+            .or(self.mig_buckets.last().copied())
+    }
+
+    /// Executable name helpers (naming contract with aot.py).
+    pub fn attn_name(&self, dir: &str, bucket: &str) -> String {
+        format!("attn_{dir}_{bucket}")
+    }
+
+    pub fn mlp_name(&self, dir: &str, b1: &str, b2: &str) -> String {
+        if b1 == b2 {
+            format!("mlp_{dir}_{b1}")
+        } else {
+            format!("mlp_{dir}_{b1}_{b2}")
+        }
+    }
+
+    pub fn mig_name(&self, dir: &str, kb: usize) -> String {
+        format!("mlp_mig_{dir}_k{kb}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest() -> &'static str {
+        r#"{
+          "model": {"name":"t","hs":32,"depth":1,"heads":4,"e":4,"bs":2,
+                    "classes":10,"seq":17,"seq0":16,"pd":48,"hsl":8,"hl":1,
+                    "hd":8,"ffl":32,"params_total":1000,"params_per_worker":300,
+                    "img":16,"patch":4,"chans":3,"mlp_ratio":4},
+          "buckets": [
+            {"name":"g00","gamma":0,"keep_hs":32,"keep_ffl":32},
+            {"name":"g50","gamma":0.5,"keep_hs":16,"keep_ffl":16},
+            {"name":"g88","gamma":0.875,"keep_hs":8,"keep_ffl":8}
+          ],
+          "mig_buckets": [8, 16],
+          "executables": [
+            {"name":"attn_fwd_g00","file":"attn_fwd_g00.hlo.txt","role":"attn_fwd",
+             "inputs":[{"name":"x","dims":[2,17,32],"dtype":"f32"}],
+             "outputs":[{"name":"y","dims":[2,17,32],"dtype":"f32"}]}
+          ]
+        }"#
+    }
+
+    #[test]
+    fn parses_model_and_buckets() {
+        let m = Manifest::parse(tiny_manifest()).unwrap();
+        assert_eq!(m.model.hs, 32);
+        assert_eq!(m.buckets.len(), 3);
+        assert_eq!(m.buckets[0].name, "g00"); // sorted ascending γ
+    }
+
+    #[test]
+    fn bucket_rounding_never_under_prunes() {
+        let m = Manifest::parse(tiny_manifest()).unwrap();
+        assert_eq!(m.bucket_for_gamma(0.0).name, "g00");
+        assert_eq!(m.bucket_for_gamma(0.3).name, "g50");
+        assert_eq!(m.bucket_for_gamma(0.5).name, "g50");
+        assert_eq!(m.bucket_for_gamma(0.51).name, "g88");
+        assert_eq!(m.bucket_for_gamma(0.99).name, "g88"); // saturates
+    }
+
+    #[test]
+    fn mig_bucket_fits() {
+        let m = Manifest::parse(tiny_manifest()).unwrap();
+        assert_eq!(m.mig_bucket_for(5), Some(8));
+        assert_eq!(m.mig_bucket_for(8), Some(8));
+        assert_eq!(m.mig_bucket_for(9), Some(16));
+        assert_eq!(m.mig_bucket_for(99), Some(16)); // saturates to largest
+    }
+
+    #[test]
+    fn naming_contract() {
+        let m = Manifest::parse(tiny_manifest()).unwrap();
+        assert_eq!(m.attn_name("fwd", "g50"), "attn_fwd_g50");
+        assert_eq!(m.mlp_name("bwd", "g50", "g50"), "mlp_bwd_g50");
+        assert_eq!(m.mlp_name("fwd", "g00", "g50"), "mlp_fwd_g00_g50");
+        assert_eq!(m.mig_name("fwd", 16), "mlp_mig_fwd_k16");
+    }
+
+    #[test]
+    fn exec_lookup() {
+        let m = Manifest::parse(tiny_manifest()).unwrap();
+        assert!(m.exec("attn_fwd_g00").is_ok());
+        assert!(m.exec("nope").is_err());
+    }
+}

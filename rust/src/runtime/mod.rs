@@ -1,0 +1,206 @@
+//! PJRT runtime: loads the AOT artifacts (HLO text) and executes them on
+//! the request path. This is the only module that touches the `xla` crate.
+//!
+//! Flow (adapted from /opt/xla-example/load_hlo):
+//!   `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//!   `client.compile` → `execute` per call.  Executables compile lazily on
+//!   first use and are cached for the life of the runtime, so each model
+//!   variant compiles exactly once.  Every call is timed; the engine
+//!   charges that measurement (×χ for stragglers) to the rank's SimClock.
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+pub use manifest::{ArgSpec, Dtype, ExecSpec, Manifest};
+
+/// An input argument to an executable call.
+pub enum Arg<'a> {
+    F32(&'a Tensor),
+    I32(&'a [i32]),
+}
+
+/// An output value from an executable call.
+#[derive(Debug, Clone)]
+pub enum Out {
+    F32(Tensor),
+    I32(Vec<i32>),
+}
+
+impl Out {
+    pub fn tensor(self) -> Result<Tensor> {
+        match self {
+            Out::F32(t) => Ok(t),
+            _ => bail!("output is not f32"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        match self {
+            Out::F32(t) if t.len() == 1 => Ok(t.data[0]),
+            _ => bail!("output is not a f32 scalar"),
+        }
+    }
+
+    pub fn scalar_i32(&self) -> Result<i32> {
+        match self {
+            Out::I32(v) if v.len() == 1 => Ok(v[0]),
+            _ => bail!("output is not an i32 scalar"),
+        }
+    }
+}
+
+struct CompiledExec {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ExecSpec,
+}
+
+/// The PJRT service: client + lazily-compiled executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<BTreeMap<String, Rc<CompiledExec>>>,
+    /// cumulative (calls, seconds) per executable — §Perf profiling
+    timings: RefCell<BTreeMap<String, (u64, f64)>>,
+}
+
+impl Runtime {
+    /// Load a model's artifact directory (manifest + HLO text files).
+    pub fn load(model_dir: &std::path::Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&model_dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", model_dir.display()))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            dir: model_dir.to_path_buf(),
+            manifest,
+            cache: RefCell::new(BTreeMap::new()),
+            timings: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    fn compiled(&self, name: &str) -> Result<Rc<CompiledExec>> {
+        if let Some(c) = self.cache.borrow().get(name) {
+            return Ok(c.clone());
+        }
+        let spec = self
+            .manifest
+            .exec(name)
+            .with_context(|| format!("executable '{name}' not in manifest"))?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let c = Rc::new(CompiledExec { exe, spec });
+        self.cache.borrow_mut().insert(name.to_string(), c.clone());
+        Ok(c)
+    }
+
+    /// Pre-compile a set of executables (warmup before timed regions).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.compiled(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute `name` with `args`; returns outputs and the measured
+    /// execution seconds (used as the SimClock compute charge).
+    pub fn call(&self, name: &str, args: &[Arg]) -> Result<(Vec<Out>, f64)> {
+        let c = self.compiled(name)?;
+        if args.len() != c.spec.inputs.len() {
+            bail!("{name}: got {} args, manifest says {}", args.len(), c.spec.inputs.len());
+        }
+        // Inputs go through self-owned PjRtBuffers + execute_b: the
+        // crate's literal-taking `execute` leaks its internally-created
+        // input buffers (~input bytes per call — measured by
+        // examples/leak_probe.rs), while buffers we create are freed by
+        // PjRtBuffer::drop.  This is also the §Perf device-buffer path.
+        let mut buffers = Vec::with_capacity(args.len());
+        for (arg, spec) in args.iter().zip(&c.spec.inputs) {
+            buffers.push(to_buffer(&self.client, arg, spec)?);
+        }
+        let t0 = Instant::now();
+        let result = c.exe.execute_b(&buffers)
+            .with_context(|| format!("executing {name}"))?[0][0]
+            .to_literal_sync()?;
+        let elapsed = t0.elapsed().as_secs_f64();
+        // aot.py lowers with return_tuple=True → always a tuple.
+        let elems = result.to_tuple()?;
+        if elems.len() != c.spec.outputs.len() {
+            bail!("{name}: got {} outputs, manifest says {}",
+                  elems.len(), c.spec.outputs.len());
+        }
+        let mut outs = Vec::with_capacity(elems.len());
+        for (lit, spec) in elems.into_iter().zip(&c.spec.outputs) {
+            outs.push(from_literal(lit, spec)?);
+        }
+        let mut t = self.timings.borrow_mut();
+        let e = t.entry(name.to_string()).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += elapsed;
+        Ok((outs, elapsed))
+    }
+
+    /// (calls, total seconds) per executable, sorted by total time.
+    pub fn timing_profile(&self) -> Vec<(String, u64, f64)> {
+        let mut v: Vec<(String, u64, f64)> = self
+            .timings
+            .borrow()
+            .iter()
+            .map(|(k, (n, s))| (k.clone(), *n, *s))
+            .collect();
+        v.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        v
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+fn to_buffer(client: &xla::PjRtClient, arg: &Arg, spec: &ArgSpec) -> Result<xla::PjRtBuffer> {
+    match (arg, spec.dtype) {
+        (Arg::F32(t), Dtype::F32) => {
+            if t.dims != spec.dims {
+                bail!("input '{}' dims {:?} != manifest {:?}", spec.name, t.dims, spec.dims);
+            }
+            Ok(client.buffer_from_host_buffer(&t.data, &spec.dims, None)?)
+        }
+        (Arg::I32(v), Dtype::I32) => {
+            let n: usize = spec.dims.iter().product();
+            if v.len() != n {
+                bail!("input '{}' len {} != manifest {:?}", spec.name, v.len(), spec.dims);
+            }
+            Ok(client.buffer_from_host_buffer(v, &spec.dims, None)?)
+        }
+        _ => bail!("input '{}': dtype mismatch", spec.name),
+    }
+}
+
+fn from_literal(lit: xla::Literal, spec: &ArgSpec) -> Result<Out> {
+    match spec.dtype {
+        Dtype::F32 => {
+            let data = lit.to_vec::<f32>()?;
+            let dims = if spec.dims.is_empty() { vec![1] } else { spec.dims.clone() };
+            if data.len() != dims.iter().product::<usize>() {
+                bail!("output '{}': {} elems, expected {:?}", spec.name, data.len(), spec.dims);
+            }
+            Ok(Out::F32(Tensor::from_vec(&dims, data)))
+        }
+        Dtype::I32 => Ok(Out::I32(lit.to_vec::<i32>()?)),
+    }
+}

@@ -1,0 +1,249 @@
+//! SEMI-migration: the hybrid allocator (paper §IV-B/C).
+//!
+//! * **Pretest** ([`CostFns`]) — point estimates for the cost functions:
+//!   Ω₁ (static allocation overhead of the resized submatrix), Ω₂(n)
+//!   (dimension-extraction cost, linear in extracted columns), Φ₁(n)
+//!   (migration communication, from the α-β model), Φ₂(n) (remote compute
+//!   per column, from measured FFN executable timings).
+//! * **Eq. (2)** ([`eq2_beta`]) — a single heavy straggler splits its
+//!   excess L·γ columns: β to migration, 1-β to resizing, balancing
+//!   straggler-side vs receiver-side added cost.  LHS is decreasing and
+//!   RHS increasing in β, so a bisection finds the crossing.
+//! * **Eq. (3)** ([`eq3_select_x`]) — with z stragglers sorted by runtime
+//!   (slowest first), migrate the top x while f(x) > 0; the rest resize
+//!   against T_min.
+
+/// Cost-function point fits, assembled by the trainer's pretest.
+#[derive(Debug, Clone, Copy)]
+pub struct CostFns {
+    /// Ω₁: fixed submatrix allocation/setup cost on the straggler (s)
+    pub omega1_s: f64,
+    /// Ω₂ slope: extraction cost per resized column (s/col)
+    pub omega2_per_col: f64,
+    /// Φ₁ affine: per-migration-event latency (s) …
+    pub phi1_base_s: f64,
+    /// … plus per-column transfer cost (s/col): broadcast of 2·hs weights
+    /// out + compact grads back, per layer per iteration
+    pub phi1_per_col: f64,
+    /// Φ₂ slope: receiver compute per migrated column (s/col)
+    pub phi2_per_col: f64,
+}
+
+impl CostFns {
+    pub fn omega2(&self, cols: f64) -> f64 {
+        self.omega2_per_col * cols.max(0.0)
+    }
+
+    pub fn phi1(&self, cols: f64) -> f64 {
+        if cols <= 0.0 {
+            0.0
+        } else {
+            self.phi1_base_s + self.phi1_per_col * cols
+        }
+    }
+
+    pub fn phi2(&self, cols: f64) -> f64 {
+        self.phi2_per_col * cols.max(0.0)
+    }
+}
+
+/// Eq. (2): solve Ω₁ + Ω₂(Lγ(1-β)) = Φ₁(Lγβ) + Φ₂(Lγβ/(e-1)) for β∈[0,1].
+///
+/// Returns the balance point, clamped: if migration is cheaper everywhere
+/// → 1.0 (all-migrate); if resizing is cheaper everywhere → 0.0.
+pub fn eq2_beta(l_gamma_cols: f64, e: usize, c: &CostFns) -> f64 {
+    debug_assert!(e >= 2);
+    let lhs_minus_rhs = |beta: f64| {
+        let mig = l_gamma_cols * beta;
+        let res = l_gamma_cols * (1.0 - beta);
+        (c.omega1_s + c.omega2(res)) - (c.phi1(mig) + c.phi2(mig / (e - 1) as f64))
+    };
+    // LHS-RHS is decreasing in β. Check endpoints.
+    if lhs_minus_rhs(0.0) <= 0.0 {
+        return 0.0; // even at β=0 migration side dominates → resize only
+    }
+    if lhs_minus_rhs(1.0) >= 0.0 {
+        return 1.0; // resizing side dominates everywhere → migrate all
+    }
+    let (mut lo, mut hi) = (0.0f64, 1.0f64);
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        if lhs_minus_rhs(mid) > 0.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// One straggler's entry for Eq. (3).
+#[derive(Debug, Clone, Copy)]
+pub struct StragglerStat {
+    pub rank: usize,
+    /// iteration runtime T_i (s)
+    pub t: f64,
+    /// current workload in columns L_i (FFN contraction width available)
+    pub l_cols: f64,
+}
+
+/// Eq. (3): given stragglers sorted by T descending, all-rank runtimes
+/// `t_all`/workloads `l_all`, and T_min, return the largest x such that
+/// migrating the top-x is cost-effective (f(x) > 0); x may be 0.
+pub fn eq3_select_x(
+    stragglers: &[StragglerStat],
+    t_all: &[f64],
+    l_all: &[f64],
+    t_min: f64,
+    c: &CostFns,
+) -> usize {
+    debug_assert!(stragglers.windows(2).all(|w| w[0].t >= w[1].t), "sort desc");
+    let e = t_all.len();
+    let mut x = 0usize;
+    for k in 1..=stragglers.len() {
+        if k >= e {
+            break; // must leave at least one receiver
+        }
+        // Γ(x): total migrated columns for the top-k stragglers
+        let gamma_x: f64 = stragglers[..k]
+            .iter()
+            .map(|s| s.l_cols * ((s.t - t_min) / s.t).max(0.0))
+            .sum();
+        // max receiver slowdown among the other (e-k) tasks
+        let mig_ranks: Vec<usize> = stragglers[..k].iter().map(|s| s.rank).collect();
+        let max_recv = (0..e)
+            .filter(|r| !mig_ranks.contains(r))
+            .map(|r| gamma_x / (e - k) as f64 * t_all[r] / l_all[r].max(1e-12))
+            .fold(0.0, f64::max);
+        let t_k = stragglers[k - 1].t;
+        let f = (t_k - t_min) - c.phi1(gamma_x) - max_recv;
+        if f > 0.0 {
+            x = k;
+        } else {
+            break; // f decreases with x — the paper's brute-force stop
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cheap_comm() -> CostFns {
+        CostFns {
+            omega1_s: 1e-4,
+            omega2_per_col: 1e-5,
+            phi1_base_s: 1e-6,
+            phi1_per_col: 1e-7,
+            phi2_per_col: 1e-7,
+        }
+    }
+
+    fn dear_comm() -> CostFns {
+        CostFns {
+            omega1_s: 1e-6,
+            omega2_per_col: 1e-8,
+            phi1_base_s: 1e-1,
+            phi1_per_col: 1e-1,
+            phi2_per_col: 1e-2,
+        }
+    }
+
+    #[test]
+    fn beta_in_unit_interval() {
+        for c in [cheap_comm(), dear_comm()] {
+            for l in [8.0, 64.0, 512.0] {
+                let b = eq2_beta(l, 8, &c);
+                assert!((0.0..=1.0).contains(&b), "β={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn cheap_comm_prefers_migration() {
+        assert_eq!(eq2_beta(128.0, 8, &cheap_comm()), 1.0);
+    }
+
+    #[test]
+    fn dear_comm_prefers_resizing() {
+        // the Φ₁ base cost makes any migration unprofitable → β ≈ 0
+        assert!(eq2_beta(128.0, 8, &dear_comm()) < 1e-6);
+    }
+
+    #[test]
+    fn beta_balances_interior_case() {
+        let c = CostFns {
+            omega1_s: 0.0,
+            omega2_per_col: 1e-4,
+            phi1_base_s: 0.0,
+            phi1_per_col: 1e-4,
+            phi2_per_col: 0.0,
+        };
+        // symmetric costs → β = 0.5 exactly
+        let b = eq2_beta(100.0, 4, &c);
+        assert!((b - 0.5).abs() < 1e-6, "β={b}");
+    }
+
+    #[test]
+    fn beta_monotone_in_comm_cost() {
+        let mut prev = 2.0;
+        for phi in [1e-7, 1e-5, 1e-4, 1e-3] {
+            let c = CostFns {
+                omega1_s: 1e-4,
+                omega2_per_col: 1e-5,
+                phi1_base_s: 0.0,
+                phi1_per_col: phi,
+                phi2_per_col: 0.0,
+            };
+            let b = eq2_beta(128.0, 8, &c);
+            assert!(b <= prev + 1e-9, "β not monotone: {b} > {prev}");
+            prev = b;
+        }
+    }
+
+    fn strag(rank: usize, t: f64) -> StragglerStat {
+        StragglerStat { rank, t, l_cols: 128.0 }
+    }
+
+    #[test]
+    fn eq3_zero_when_comm_dominates() {
+        let s = [strag(0, 2.0)];
+        let t_all = [2.0, 1.0, 1.0, 1.0];
+        let l_all = [128.0; 4];
+        let x = eq3_select_x(&s, &t_all, &l_all, 1.0, &dear_comm());
+        assert_eq!(x, 0);
+    }
+
+    #[test]
+    fn eq3_selects_slowest_first() {
+        let s = [strag(0, 8.0), strag(1, 4.0), strag(2, 2.0)];
+        let t_all = [8.0, 4.0, 2.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+        let l_all = [128.0; 8];
+        let x = eq3_select_x(&s, &t_all, &l_all, 1.0, &cheap_comm());
+        assert!(x >= 1, "slowest straggler should migrate, x={x}");
+        // group = top-x by construction; remaining resize
+        assert!(x <= 3);
+    }
+
+    #[test]
+    fn eq3_x_monotone_in_comm_cost() {
+        let s = [strag(0, 8.0), strag(1, 6.0), strag(2, 4.0), strag(3, 2.0)];
+        let t_all = [8.0, 6.0, 4.0, 2.0, 1.0, 1.0, 1.0, 1.0];
+        let l_all = [128.0; 8];
+        let x_cheap = eq3_select_x(&s, &t_all, &l_all, 1.0, &cheap_comm());
+        let x_dear = eq3_select_x(&s, &t_all, &l_all, 1.0, &dear_comm());
+        assert!(x_cheap >= x_dear, "{x_cheap} < {x_dear}");
+    }
+
+    #[test]
+    fn eq3_never_starves_receivers() {
+        // 7 stragglers of 8 ranks: x can be at most 7 (and the guard keeps
+        // at least one receiver).
+        let s: Vec<StragglerStat> = (0..7).map(|r| strag(r, 8.0 - r as f64)).collect();
+        let t_all = [8.0, 7.0, 6.0, 5.0, 4.0, 3.0, 2.0, 1.0];
+        let l_all = [128.0; 8];
+        let x = eq3_select_x(&s, &t_all, &l_all, 1.0, &cheap_comm());
+        assert!(x < 8);
+    }
+}

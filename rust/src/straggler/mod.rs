@@ -1,0 +1,206 @@
+//! Straggler detection & injection (paper §III-A, §V-A).
+//!
+//! * **Injector** — per-rank skewness χ: block-GEMM compute charges are
+//!   multiplied by χ (the paper injects sleeps into the matmuls of
+//!   selected GPUs; a SimClock charge is the deterministic equivalent,
+//!   and `emulate_wall` really sleeps for demos).
+//! * **Monitor** — per-rank iteration runtime T_i and matmul time M_i.
+//!   T_avg is refreshed *passively*: a rank only triggers the (costed)
+//!   scalar all-gather when its own runtime moved >10% since the value it
+//!   last synchronized on (the paper's on-demand refresh).
+
+use crate::collectives::Comm;
+use crate::cluster::Clocks;
+
+/// Per-rank χ multipliers for one epoch.
+#[derive(Debug, Clone)]
+pub struct Injector {
+    pub chi: Vec<f64>,
+    /// really sleep (paper-literal emulation) instead of only charging
+    pub emulate_wall: bool,
+}
+
+impl Injector {
+    pub fn homogeneous(e: usize) -> Injector {
+        Injector { chi: vec![1.0; e], emulate_wall: false }
+    }
+
+    pub fn new(chi: Vec<f64>) -> Injector {
+        Injector { chi, emulate_wall: false }
+    }
+
+    /// Charge a block-GEMM compute measurement for `rank`: the SimClock
+    /// gets `χ·t`; in wall-emulation mode the extra `(χ-1)·t` is slept.
+    pub fn charge(&self, clocks: &mut Clocks, rank: usize, measured_s: f64) {
+        let chi = self.chi[rank];
+        clocks.advance(rank, measured_s * chi);
+        if self.emulate_wall && chi > 1.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                measured_s * (chi - 1.0),
+            ));
+        }
+    }
+
+    /// Charge non-GEMM (embed/head) compute — not skewed by χ, matching
+    /// the paper's "simulated matrix multiplication in linear projections
+    /// and transformations is χ times slower".
+    pub fn charge_unskewed(&self, clocks: &mut Clocks, rank: usize, measured_s: f64) {
+        clocks.advance(rank, measured_s);
+    }
+
+    pub fn stragglers(&self) -> Vec<usize> {
+        self.chi
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 1.0)
+            .map(|(r, _)| r)
+            .collect()
+    }
+}
+
+/// Runtime statistics the balancers consume.
+#[derive(Debug, Clone)]
+pub struct Monitor {
+    /// last iteration's per-rank total runtime T_i (seconds, sim)
+    pub t_iter: Vec<f64>,
+    /// last iteration's per-rank matmul runtime M_i (block GEMMs only)
+    pub m_iter: Vec<f64>,
+    /// the T_avg each rank last synchronized on
+    t_avg_cached: Vec<f64>,
+    /// the own-T value at the time of the last sync
+    t_self_at_sync: Vec<f64>,
+    /// number of passive refreshes triggered (metrics)
+    pub refreshes: u64,
+}
+
+impl Monitor {
+    pub fn new(e: usize) -> Monitor {
+        Monitor {
+            t_iter: vec![0.0; e],
+            m_iter: vec![0.0; e],
+            t_avg_cached: vec![0.0; e],
+            t_self_at_sync: vec![0.0; e],
+            refreshes: 0,
+        }
+    }
+
+    /// Record an iteration's measurements.
+    pub fn record(&mut self, t: Vec<f64>, m: Vec<f64>) {
+        self.t_iter = t;
+        self.m_iter = m;
+    }
+
+    /// Passive T_avg (paper: refresh only on >10% own-runtime change).
+    /// Charges the scalar all-gather to the clocks when any rank triggers.
+    pub fn t_avg(&mut self, comm: &mut Comm, clocks: &mut Clocks) -> Vec<f64> {
+        let e = self.t_iter.len();
+        let mut trigger = false;
+        for r in 0..e {
+            let base = self.t_self_at_sync[r];
+            let now = self.t_iter[r];
+            if base == 0.0 || (now - base).abs() > 0.10 * base.max(1e-12) {
+                trigger = true;
+            }
+        }
+        if trigger {
+            let gathered = comm.all_gather_scalars(clocks, &self.t_iter);
+            let avg = gathered.iter().sum::<f64>() / e as f64;
+            for r in 0..e {
+                self.t_avg_cached[r] = avg;
+                self.t_self_at_sync[r] = self.t_iter[r];
+            }
+            self.refreshes += 1;
+        }
+        self.t_avg_cached.clone()
+    }
+
+    /// Strict criterion T_min for the hybrid solution (paper §IV-B) —
+    /// needs the full runtime list, so it always costs an all-gather.
+    pub fn t_list_and_min(&self, comm: &mut Comm, clocks: &mut Clocks) -> (Vec<f64>, f64) {
+        let list = comm.all_gather_scalars(clocks, &self.t_iter);
+        let min = list.iter().cloned().fold(f64::INFINITY, f64::min);
+        (list, min)
+    }
+}
+
+/// Eq. (1): γ_i = (T_i − T_avg) / M_i, clamped to [0, γ_max].
+/// `γ_max < 1` because a task cannot prune more than everything.
+pub fn gamma_eq1(t_i: f64, t_avg: f64, m_i: f64, gamma_max: f64) -> f64 {
+    if m_i <= 0.0 || t_i <= t_avg {
+        return 0.0;
+    }
+    ((t_i - t_avg) / m_i).min(gamma_max).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::cost::CostModel;
+
+    #[test]
+    fn injector_charges_skew() {
+        let inj = Injector::new(vec![1.0, 3.0]);
+        let mut clocks = Clocks::new(2);
+        inj.charge(&mut clocks, 0, 0.1);
+        inj.charge(&mut clocks, 1, 0.1);
+        assert!((clocks.now(0) - 0.1).abs() < 1e-12);
+        assert!((clocks.now(1) - 0.3).abs() < 1e-12);
+        assert_eq!(inj.stragglers(), vec![1]);
+    }
+
+    #[test]
+    fn unskewed_charge_ignores_chi() {
+        let inj = Injector::new(vec![8.0]);
+        let mut clocks = Clocks::new(1);
+        inj.charge_unskewed(&mut clocks, 0, 0.1);
+        assert!((clocks.now(0) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gamma_eq1_basics() {
+        // straggler 2x slower than avg with matmul = all the time:
+        // needs to cut the gap T_i - T_avg.
+        assert!((gamma_eq1(2.0, 1.0, 2.0, 0.9) - 0.5).abs() < 1e-12);
+        assert_eq!(gamma_eq1(1.0, 1.0, 1.0, 0.9), 0.0); // not a straggler
+        assert_eq!(gamma_eq1(0.5, 1.0, 1.0, 0.9), 0.0); // fast task
+        assert_eq!(gamma_eq1(100.0, 1.0, 1.0, 0.9), 0.9); // clamped
+    }
+
+    #[test]
+    fn passive_refresh_triggers_on_change() {
+        let mut mon = Monitor::new(2);
+        let mut comm = Comm::new(CostModel::default());
+        let mut clocks = Clocks::new(2);
+
+        mon.record(vec![1.0, 1.0], vec![0.5, 0.5]);
+        let avg = mon.t_avg(&mut comm, &mut clocks);
+        assert_eq!(avg, vec![1.0, 1.0]);
+        assert_eq!(mon.refreshes, 1);
+
+        // small change (<10%) → no refresh, cached value returned
+        mon.record(vec![1.05, 1.0], vec![0.5, 0.5]);
+        let avg = mon.t_avg(&mut comm, &mut clocks);
+        assert_eq!(avg, vec![1.0, 1.0]);
+        assert_eq!(mon.refreshes, 1);
+
+        // big change → refresh
+        mon.record(vec![2.0, 1.0], vec![0.5, 0.5]);
+        let avg = mon.t_avg(&mut comm, &mut clocks);
+        assert!((avg[0] - 1.5).abs() < 1e-12);
+        assert_eq!(mon.refreshes, 2);
+    }
+
+    #[test]
+    fn t_min_is_strict() {
+        let mon = {
+            let mut m = Monitor::new(3);
+            m.record(vec![3.0, 1.0, 2.0], vec![1.0; 3]);
+            m
+        };
+        let mut comm = Comm::new(CostModel::default());
+        let mut clocks = Clocks::new(3);
+        let (list, min) = mon.t_list_and_min(&mut comm, &mut clocks);
+        assert_eq!(min, 1.0);
+        assert_eq!(list, vec![3.0, 1.0, 2.0]);
+    }
+}

@@ -1,0 +1,401 @@
+//! Host tensor: the coordinator-side data container.
+//!
+//! All heavy GEMMs run inside PJRT executables (Layer 1/2); the host only
+//! does collective sums, residual adds, lineage gathers/scatters, and
+//! optimizer updates — the ops here.  A naive `matmul` exists solely as a
+//! test oracle for small shapes.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(dims: &[usize]) -> Tensor {
+        Tensor { dims: dims.to_vec(), data: vec![0.0; dims.iter().product()] }
+    }
+
+    pub fn from_vec(dims: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len(), "dims/data mismatch");
+        Tensor { dims: dims.to_vec(), data }
+    }
+
+    pub fn full(dims: &[usize], v: f32) -> Tensor {
+        Tensor { dims: dims.to_vec(), data: vec![v; dims.iter().product()] }
+    }
+
+    pub fn normal(dims: &[usize], std: f32, rng: &mut Rng) -> Tensor {
+        Tensor { dims: dims.to_vec(), data: rng.normal_vec(dims.iter().product(), std) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    /// Rows × cols view of the last two dims (leading dims folded into rows).
+    pub fn as_2d(&self) -> (usize, usize) {
+        let cols = *self.dims.last().expect("tensor has no dims");
+        (self.len() / cols, cols)
+    }
+
+    // ---- elementwise ------------------------------------------------------
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        debug_assert_eq!(self.dims, other.dims);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub_scaled(&mut self, other: &Tensor, scale: f32) {
+        debug_assert_eq!(self.dims, other.dims);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a -= scale * b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+
+    /// Sum of |x| — grad checksums & priority statistics.
+    pub fn abs_sum(&self) -> f64 {
+        self.data.iter().map(|x| x.abs() as f64).sum()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|x| *x as f64).sum()
+    }
+
+    // ---- column/row structure (lineage & migration) ------------------------
+
+    /// Mean |Δ| per column of a 2D tensor vs `old` — the paper's
+    /// `w_var_list` statistic δ_i = Σ_j |w_ji - w_ji^old| / R.
+    pub fn col_abs_delta(&self, old: &Tensor) -> Vec<f32> {
+        debug_assert_eq!(self.dims, old.dims);
+        let (r, c) = self.as_2d();
+        let mut out = vec![0.0f32; c];
+        for i in 0..r {
+            let row = &self.data[i * c..(i + 1) * c];
+            let orow = &old.data[i * c..(i + 1) * c];
+            for j in 0..c {
+                out[j] += (row[j] - orow[j]).abs();
+            }
+        }
+        let rn = r as f32;
+        for v in &mut out {
+            *v /= rn;
+        }
+        out
+    }
+
+    /// Mean |Δ| per ROW of a 2D tensor vs `old` — the w_var statistic over
+    /// a contraction dimension stored as weight rows.
+    pub fn row_abs_delta(&self, old: &Tensor) -> Vec<f32> {
+        debug_assert_eq!(self.dims, old.dims);
+        let (r, c) = self.as_2d();
+        let mut out = vec![0.0f32; r];
+        for i in 0..r {
+            let row = &self.data[i * c..(i + 1) * c];
+            let orow = &old.data[i * c..(i + 1) * c];
+            out[i] = row.iter().zip(orow).map(|(a, b)| (a - b).abs()).sum::<f32>()
+                / c as f32;
+        }
+        out
+    }
+
+    /// Set columns `pruned` to the per-row mean over columns NOT pruned
+    /// (Average imputation for column-pruned matrices).
+    pub fn impute_cols_mean(&mut self, pruned: &[u32]) {
+        let (r, c) = self.as_2d();
+        if pruned.len() >= c {
+            return;
+        }
+        let mut in_pruned = vec![false; c];
+        for &j in pruned {
+            in_pruned[j as usize] = true;
+        }
+        let kept = (c - pruned.len()) as f32;
+        for i in 0..r {
+            let row = &mut self.data[i * c..(i + 1) * c];
+            let mean: f32 = row
+                .iter()
+                .enumerate()
+                .filter(|(j, _)| !in_pruned[*j])
+                .map(|(_, v)| *v)
+                .sum::<f32>()
+                / kept;
+            for &j in pruned {
+                row[j as usize] = mean;
+            }
+        }
+    }
+
+    /// Copy rows `idx` from `src` (same full shape) — Same imputation.
+    pub fn copy_rows_from(&mut self, idx: &[u32], src: &Tensor) {
+        debug_assert_eq!(self.dims, src.dims);
+        let (_, c) = self.as_2d();
+        for &i in idx {
+            let i = i as usize;
+            self.data[i * c..(i + 1) * c].copy_from_slice(&src.data[i * c..(i + 1) * c]);
+        }
+    }
+
+    /// Copy columns `idx` from `src` (same full shape) — Same imputation.
+    pub fn copy_cols_from(&mut self, idx: &[u32], src: &Tensor) {
+        debug_assert_eq!(self.dims, src.dims);
+        let (r, c) = self.as_2d();
+        for i in 0..r {
+            for &j in idx {
+                self.data[i * c + j as usize] = src.data[i * c + j as usize];
+            }
+        }
+    }
+
+    /// Scatter-assign `src` (shape `[rows, idx.len()]`) into columns `idx`.
+    pub fn scatter_cols_assign(&mut self, idx: &[u32], src: &Tensor) {
+        let (r, c) = self.as_2d();
+        let (sr, sc) = src.as_2d();
+        debug_assert_eq!(sr, r);
+        debug_assert_eq!(sc, idx.len());
+        for i in 0..r {
+            for (k, &j) in idx.iter().enumerate() {
+                self.data[i * c + j as usize] = src.data[i * sc + k];
+            }
+        }
+    }
+
+    /// Gather columns `idx` of a 2D tensor → `[rows, idx.len()]`.
+    pub fn gather_cols(&self, idx: &[u32]) -> Tensor {
+        let (r, c) = self.as_2d();
+        let k = idx.len();
+        let mut data = Vec::with_capacity(r * k);
+        for i in 0..r {
+            let row = &self.data[i * c..(i + 1) * c];
+            for &j in idx {
+                data.push(row[j as usize]);
+            }
+        }
+        Tensor::from_vec(&[r, k], data)
+    }
+
+    /// Gather rows `idx` of a 2D tensor → `[idx.len(), cols]`.
+    pub fn gather_rows(&self, idx: &[u32]) -> Tensor {
+        let (_, c) = self.as_2d();
+        let mut data = Vec::with_capacity(idx.len() * c);
+        for &i in idx {
+            data.extend_from_slice(&self.data[i as usize * c..(i as usize + 1) * c]);
+        }
+        Tensor::from_vec(&[idx.len(), c], data)
+    }
+
+    /// Scatter-assign `src` rows into rows `idx` of self (2D).
+    pub fn scatter_rows_assign(&mut self, idx: &[u32], src: &Tensor) {
+        let (_, c) = self.as_2d();
+        let (sr, sc) = src.as_2d();
+        debug_assert_eq!(sc, c);
+        debug_assert_eq!(sr, idx.len());
+        for (k, &i) in idx.iter().enumerate() {
+            self.data[i as usize * c..(i as usize + 1) * c]
+                .copy_from_slice(&src.data[k * c..(k + 1) * c]);
+        }
+    }
+
+    /// Scatter-add `src` rows into rows `idx` of self (2D).
+    pub fn scatter_rows_add(&mut self, idx: &[u32], src: &Tensor) {
+        let (_, c) = self.as_2d();
+        for (k, &i) in idx.iter().enumerate() {
+            let dst = &mut self.data[i as usize * c..(i as usize + 1) * c];
+            for (d, s) in dst.iter_mut().zip(&src.data[k * c..(k + 1) * c]) {
+                *d += s;
+            }
+        }
+    }
+
+    /// Set rows `idx` to the per-column mean over rows NOT in `idx`
+    /// (the paper's Average imputation policy).
+    pub fn impute_rows_mean(&mut self, pruned: &[u32]) {
+        let (r, c) = self.as_2d();
+        if pruned.len() >= r {
+            return;
+        }
+        let mut in_pruned = vec![false; r];
+        for &i in pruned {
+            in_pruned[i as usize] = true;
+        }
+        let mut mean = vec![0.0f32; c];
+        let kept = r - pruned.len();
+        for i in 0..r {
+            if !in_pruned[i] {
+                for j in 0..c {
+                    mean[j] += self.data[i * c + j];
+                }
+            }
+        }
+        for m in &mut mean {
+            *m /= kept as f32;
+        }
+        for &i in pruned {
+            self.data[i as usize * c..(i as usize + 1) * c].copy_from_slice(&mean);
+        }
+    }
+
+    /// Zero-pad a `[r, k]` tensor to `[r, kb]` columns (migration buckets).
+    pub fn pad_cols(&self, kb: usize) -> Tensor {
+        let (r, k) = self.as_2d();
+        assert!(kb >= k);
+        let mut out = Tensor::zeros(&[r, kb]);
+        for i in 0..r {
+            out.data[i * kb..i * kb + k].copy_from_slice(&self.data[i * k..(i + 1) * k]);
+        }
+        out
+    }
+
+    /// Zero-pad a `[k, c]` tensor to `[kb, c]` rows (migration buckets).
+    pub fn pad_rows(&self, kb: usize) -> Tensor {
+        let (k, c) = self.as_2d();
+        assert!(kb >= k);
+        let mut out = Tensor::zeros(&[kb, c]);
+        out.data[..k * c].copy_from_slice(&self.data);
+        out
+    }
+
+    /// Truncate a `[kb, c]` tensor to its first `k` rows.
+    pub fn take_rows(&self, k: usize) -> Tensor {
+        let (kb, c) = self.as_2d();
+        assert!(k <= kb);
+        Tensor::from_vec(&[k, c], self.data[..k * c].to_vec())
+    }
+
+    /// Truncate a `[r, kb]` tensor to its first `k` columns.
+    pub fn take_cols(&self, k: usize) -> Tensor {
+        let (r, kb) = self.as_2d();
+        assert!(k <= kb);
+        let mut data = Vec::with_capacity(r * k);
+        for i in 0..r {
+            data.extend_from_slice(&self.data[i * kb..i * kb + k]);
+        }
+        Tensor::from_vec(&[r, k], data)
+    }
+
+    // ---- test oracle -------------------------------------------------------
+
+    /// Naive matmul — TEST ORACLE ONLY (hot-path GEMMs run in PJRT).
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        let (m, k) = self.as_2d();
+        let (k2, n) = other.as_2d();
+        if k != k2 {
+            bail!("matmul shape mismatch: {k} vs {k2}");
+        }
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for l in 0..k {
+                let a = self.data[i * k + l];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[l * n..(l + 1) * n];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn allclose(&self, other: &Tensor, atol: f32) -> bool {
+        self.dims == other.dims
+            && self.data.iter().zip(&other.data).all(|(a, b)| (a - b).abs() <= atol)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let t = Tensor::from_vec(&[2, 4], vec![0., 1., 2., 3., 4., 5., 6., 7.]);
+        let g = t.gather_cols(&[1, 3]);
+        assert_eq!(g.data, vec![1., 3., 5., 7.]);
+        let r = t.gather_rows(&[1]);
+        assert_eq!(r.data, vec![4., 5., 6., 7.]);
+        let mut z = Tensor::zeros(&[2, 4]);
+        z.scatter_rows_assign(&[1], &r);
+        assert_eq!(z.data[4..], t.data[4..]);
+        assert_eq!(z.data[..4], [0.0; 4]);
+    }
+
+    #[test]
+    fn scatter_add_accumulates() {
+        let mut t = Tensor::full(&[3, 2], 1.0);
+        let src = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        t.scatter_rows_add(&[0, 2], &src);
+        assert_eq!(t.data, vec![2., 3., 1., 1., 4., 5.]);
+    }
+
+    #[test]
+    fn col_delta_matches_manual() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_vec(&[2, 2], vec![0., 2., 5., 3.]);
+        let d = b.col_abs_delta(&a);
+        assert_eq!(d, vec![(1.0 + 2.0) / 2.0, (0.0 + 1.0) / 2.0]);
+    }
+
+    #[test]
+    fn impute_mean_fills_pruned_rows() {
+        let mut t = Tensor::from_vec(&[3, 2], vec![1., 2., 100., 100., 3., 4.]);
+        t.impute_rows_mean(&[1]);
+        assert_eq!(&t.data[2..4], &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn pad_and_take_roundtrip() {
+        let t = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let p = t.pad_cols(4);
+        assert_eq!(p.dims, vec![2, 4]);
+        assert_eq!(p.take_cols(2), t);
+        let pr = t.pad_rows(3);
+        assert_eq!(pr.dims, vec![3, 2]);
+        assert_eq!(pr.take_rows(2), t);
+        assert_eq!(&pr.data[4..], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn matmul_oracle() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_vec(&[2, 2], vec![1., 1., 1., 1.]);
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data, vec![3., 3., 7., 7.]);
+        assert!(a.matmul(&Tensor::zeros(&[3, 2])).is_err());
+    }
+
+    #[test]
+    fn sgd_style_update() {
+        let mut p = Tensor::full(&[4], 1.0);
+        let g = Tensor::full(&[4], 0.5);
+        p.sub_scaled(&g, 0.1);
+        assert!(p.allclose(&Tensor::full(&[4], 0.95), 1e-7));
+    }
+}

@@ -1,0 +1,822 @@
+//! The lock-step tensor-parallel training engine (DESIGN.md §6.5).
+//!
+//! One iteration walks the classic 1D-TP dataflow: replicated embed →
+//! per-block [attention branch → all-reduce → residual → FFN branch →
+//! all-reduce → residual] → replicated head (loss + dx) → mirrored
+//! backward with per-branch dx/LN-grad all-reduces → imputation → SGD.
+//! Every PJRT call is timed for real; block-GEMM charges are multiplied
+//! by the rank's skewness χ (the paper's sleep injection); collectives
+//! charge the α-β model; RT = Σ_iters max-rank sim time.
+//!
+//! Balancing hooks: the [`Balancer`] contributes per-rank [`WorkerAction`]s
+//! each iteration — pruned executables + keep sets for ZERO-resizing,
+//! migration plans whose receiver slices run here with reduce-merging.
+
+use anyhow::{Context, Result};
+
+use crate::balancer::{Balancer, WorkerAction};
+use crate::cluster::Clocks;
+use crate::collectives::{cost::CostModel, Comm};
+use crate::config::{Imputation, MigPolicy, RunCfg, Strategy};
+use crate::data::{Batch, SynthData};
+use crate::metrics::{EpochMetrics, RunReport};
+use crate::model::{BlockGrads, ModelState};
+use crate::resizing::lineage::{impute_cols, impute_rows, Lineage};
+use crate::runtime::{Arg, Out, Runtime};
+use crate::semi::CostFns;
+use crate::straggler::{Injector, Monitor};
+use crate::tensor::Tensor;
+use crate::train::Sgd;
+
+pub struct Trainer {
+    pub cfg: RunCfg,
+    pub rt: Runtime,
+    pub state: ModelState,
+    pub data: SynthData,
+    pub comm: Comm,
+    pub clocks: Clocks,
+    pub monitor: Monitor,
+    pub balancer: Balancer,
+    pub opt: Sgd,
+    pub report: RunReport,
+    pub costs: CostFns,
+    injector: Injector,
+    /// previous-iteration grads per (worker, block) — Same policy only
+    prev_grads: Option<Vec<Vec<BlockGrads>>>,
+    /// fixed-batch override (golden tests)
+    pub forced_batch: Option<Batch>,
+    /// forced per-worker actions (golden pruned-step test)
+    pub forced_actions: Option<Vec<WorkerAction>>,
+    global_iter: u64,
+    epoch_pruned_cols: u64,
+    epoch_migrated_cols: u64,
+    epoch_compute: Vec<f64>,
+}
+
+impl Trainer {
+    pub fn new(cfg: RunCfg) -> Result<Trainer> {
+        let rt = Runtime::load(&cfg.model_dir())
+            .with_context(|| format!("loading artifacts for '{}'", cfg.model))?;
+        let m = rt.manifest.model.clone();
+        let state = ModelState::init(&m, cfg.train.seed);
+        let data = SynthData::new(&m, cfg.train.seed);
+        let comm = Comm::new(CostModel::from_net(cfg.net));
+        let clocks = Clocks::new(m.e);
+        let monitor = Monitor::new(m.e);
+        let balancer = Balancer::new(cfg.balancer.clone(), &rt.manifest, cfg.train.seed);
+        let opt = Sgd::new(cfg.train.lr, cfg.train.momentum);
+        let label = format!("{}/{}", cfg.model, cfg.balancer.strategy.name());
+        let costs = CostFns {
+            omega1_s: 1e-6,
+            omega2_per_col: 1e-7,
+            phi1_base_s: 1e-6,
+            phi1_per_col: 1e-7,
+            phi2_per_col: 1e-6,
+        };
+        let prev_grads = if cfg.balancer.imputation == Imputation::Same {
+            Some(
+                (0..m.e)
+                    .map(|_| (0..m.depth).map(|_| crate::model::zero_block_grads(&m)).collect())
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        Ok(Trainer {
+            injector: Injector::homogeneous(m.e),
+            cfg,
+            rt,
+            state,
+            data,
+            comm,
+            clocks,
+            monitor,
+            balancer,
+            opt,
+            report: RunReport::new(&label),
+            costs,
+            prev_grads,
+            forced_batch: None,
+            forced_actions: None,
+            global_iter: 0,
+            epoch_pruned_cols: 0,
+            epoch_migrated_cols: 0,
+            epoch_compute: Vec::new(),
+        })
+    }
+
+    pub fn model(&self) -> &crate::runtime::manifest::ModelInfo {
+        &self.rt.manifest.model
+    }
+
+    /// Full run: warmup/pretest, then epochs of train + eval.
+    pub fn run(&mut self) -> Result<RunReport> {
+        self.warmup_and_pretest()?;
+        for epoch in 0..self.cfg.train.epochs {
+            self.run_epoch(epoch)?;
+        }
+        Ok(self.report.clone())
+    }
+
+    pub fn run_epoch(&mut self, epoch: usize) -> Result<()> {
+        let e = self.model().e;
+        self.injector = Injector::new(self.cfg.stragglers.chis(e, epoch));
+        self.injector.emulate_wall = self.cfg.train.emulate_wall;
+        self.clocks.reset();
+        self.epoch_pruned_cols = 0;
+        self.epoch_migrated_cols = 0;
+        self.epoch_compute = vec![0.0; e];
+        let wall0 = std::time::Instant::now();
+        let mut rt_sim = 0.0;
+        let mut loss_sum = 0.0;
+        let bytes0 = self.comm.stats.total_bytes();
+        for _ in 0..self.cfg.train.iters_per_epoch {
+            let t0 = self.clocks.max();
+            let loss = self.train_iter()?;
+            loss_sum += loss as f64;
+            self.report.loss_curve.push(loss);
+            rt_sim += self.clocks.max() - t0;
+        }
+        let (eval_loss, acc) = self.eval()?;
+        self.balancer.epoch_end(&self.state);
+        let rank_compute = self.epoch_compute.clone();
+        self.report.epochs.push(EpochMetrics {
+            epoch,
+            rt_sim_s: rt_sim,
+            rt_wall_s: wall0.elapsed().as_secs_f64(),
+            train_loss: loss_sum / self.cfg.train.iters_per_epoch as f64,
+            eval_loss,
+            acc,
+            comm_bytes: self.comm.stats.total_bytes() - bytes0,
+            pruned_cols: self.epoch_pruned_cols,
+            migrated_cols: self.epoch_migrated_cols,
+            rank_compute_s: rank_compute,
+        });
+        Ok(())
+    }
+
+    /// One untimed baseline iteration: compiles the hot executables and
+    /// measures the FFN time the pretest needs. Model state is restored.
+    pub fn warmup_and_pretest(&mut self) -> Result<()> {
+        let saved = self.state.clone();
+        let saved_clocks = self.clocks.clone();
+        self.train_iter()?;
+        self.state = saved;
+        self.clocks = saved_clocks;
+        self.report.loss_curve.clear();
+        self.global_iter = 0;
+        let prof = self.rt.timing_profile();
+        let mlp_secs: f64 = prof
+            .iter()
+            .filter(|(n, _, _)| n.starts_with("mlp_fwd") || n.starts_with("mlp_bwd"))
+            .map(|(_, calls, secs)| secs / (*calls).max(1) as f64)
+            .sum();
+        self.costs = crate::train::pretest(
+            &self.rt.manifest.model.clone(),
+            &self.comm.cost,
+            mlp_secs,
+        );
+        Ok(())
+    }
+
+    // -----------------------------------------------------------------
+    // One training iteration
+    // -----------------------------------------------------------------
+
+    pub fn train_iter(&mut self) -> Result<f32> {
+        let m = self.rt.manifest.model.clone();
+        let e = m.e;
+        let batch = match &self.forced_batch {
+            Some(b) => b.clone(),
+            None => self
+                .data
+                .train_batch(self.global_iter % self.cfg.train.train_batches as u64),
+        };
+        self.global_iter += 1;
+
+        // --- balancing plan (uses last iteration's statistics)
+        let actions = match &self.forced_actions {
+            Some(a) => a.clone(),
+            None => {
+                let t_avg = if matches!(
+                    self.cfg.balancer.strategy,
+                    Strategy::Mig | Strategy::Semi
+                ) {
+                    vec![0.0; e] // unused by MIG/SEMI
+                } else {
+                    self.monitor.t_avg(&mut self.comm, &mut self.clocks)
+                };
+                let t_min = if matches!(
+                    self.cfg.balancer.strategy,
+                    Strategy::Mig | Strategy::Semi
+                ) {
+                    self.monitor.t_list_and_min(&mut self.comm, &mut self.clocks).1
+                } else {
+                    0.0
+                };
+                self.balancer.plan_iter(
+                    &self.rt.manifest,
+                    &self.monitor,
+                    &t_avg,
+                    t_min,
+                    self.cfg.train.iters_per_epoch,
+                    &self.costs,
+                )
+            }
+        };
+        for a in &actions {
+            for p in &a.layers {
+                self.epoch_pruned_cols += p.pruned_cols(m.hs, m.ffl);
+            }
+            if let Some(mig) = &a.mig {
+                self.epoch_migrated_cols += (mig.l_mig() * m.depth) as u64;
+                // migrated cols are exact, not pruned: subtract them back
+                self.epoch_pruned_cols =
+                    self.epoch_pruned_cols.saturating_sub((mig.l_mig() * m.depth) as u64);
+            }
+        }
+
+        // --- iteration timing starts here.  T_i is the rank's own
+        // compute time (not post-barrier wall time — collectives sync all
+        // clocks, which would hide the very skew Eq.(1) measures).
+        self.clocks.take_iter_compute(); // reset per-iter compute counters
+        let mut m_gemm = vec![0.0f64; e]; // per-rank block-GEMM time (M_i)
+
+        // ---- forward -------------------------------------------------
+        // embed (replicated): execute once, charge every rank
+        let rep = self.state.rep.clone();
+        let (outs, t) = self.rt.call(
+            "embed_fwd",
+            &[
+                Arg::F32(&batch.patches),
+                Arg::F32(&rep.w_patch),
+                Arg::F32(&rep.pos),
+                Arg::F32(&rep.cls),
+            ],
+        )?;
+        for r in 0..e {
+            self.injector.charge_unskewed(&mut self.clocks, r, t);
+        }
+        let mut x = into1(outs)?;
+
+        let mut attn_in: Vec<Tensor> = Vec::with_capacity(m.depth);
+        let mut mlp_in: Vec<Tensor> = Vec::with_capacity(m.depth);
+        for k in 0..m.depth {
+            attn_in.push(x.clone());
+            let mut partials = self.attn_fwd_partials(&x, k, &actions, &mut m_gemm)?;
+            self.comm.all_reduce(&mut self.clocks, &mut partials);
+            x.add_assign(&partials[0]);
+
+            mlp_in.push(x.clone());
+            let mut partials = self.mlp_fwd_partials(&x, k, &actions, &mut m_gemm)?;
+            self.comm.all_reduce(&mut self.clocks, &mut partials);
+            x.add_assign(&partials[0]);
+        }
+
+        // ---- head (replicated fwd+bwd) --------------------------------
+        let labels = batch.labels.clone();
+        let (outs, t) = self.rt.call(
+            "head_fwdbwd",
+            &[
+                Arg::F32(&x),
+                Arg::F32(&rep.lnf_g),
+                Arg::F32(&rep.lnf_b),
+                Arg::F32(&rep.w_head),
+                Arg::F32(&rep.b_head),
+                Arg::I32(&labels),
+            ],
+        )?;
+        for r in 0..e {
+            self.injector.charge_unskewed(&mut self.clocks, r, t);
+        }
+        let mut it = outs.into_iter();
+        let loss = it.next().unwrap().scalar_f32()?;
+        let _ncorrect = it.next().unwrap().scalar_i32()?;
+        let mut dy = it.next().unwrap().tensor()?;
+        let dlnf_g = it.next().unwrap().tensor()?;
+        let dlnf_b = it.next().unwrap().tensor()?;
+        let dw_head = it.next().unwrap().tensor()?;
+        let db_head = it.next().unwrap().tensor()?;
+
+        // ---- backward --------------------------------------------------
+        let mut block_grads: Vec<Vec<BlockGrads>> = (0..e)
+            .map(|_| (0..m.depth).map(|_| crate::model::zero_block_grads(&m)).collect())
+            .collect();
+        for k in (0..m.depth).rev() {
+            let dpart = self.mlp_bwd(&mlp_in[k], &dy, k, &actions, &mut m_gemm, &mut block_grads)?;
+            dy.add_assign(&dpart);
+            let dpart = self.attn_bwd(&attn_in[k], &dy, k, &actions, &mut m_gemm, &mut block_grads)?;
+            dy.add_assign(&dpart);
+        }
+
+        // embed bwd (replicated)
+        let (outs, t) = self.rt.call(
+            "embed_bwd",
+            &[
+                Arg::F32(&batch.patches),
+                Arg::F32(&rep.w_patch),
+                Arg::F32(&rep.pos),
+                Arg::F32(&rep.cls),
+                Arg::F32(&dy),
+            ],
+        )?;
+        for r in 0..e {
+            self.injector.charge_unskewed(&mut self.clocks, r, t);
+        }
+        let mut it = outs.into_iter();
+        let dw_patch = it.next().unwrap().tensor()?;
+        let dpos = it.next().unwrap().tensor()?;
+        let dcls = it.next().unwrap().tensor()?;
+
+        // ---- imputation + optimizer ------------------------------------
+        self.impute_and_step(&actions, &mut block_grads)?;
+        let rep_grads: [(&str, &Tensor); 7] = [
+            ("w_patch", &dw_patch),
+            ("pos", &dpos),
+            ("cls", &dcls),
+            ("lnf_g", &dlnf_g),
+            ("lnf_b", &dlnf_b),
+            ("w_head", &dw_head),
+            ("b_head", &db_head),
+        ];
+        for (name, g) in rep_grads {
+            let p = self.state.rep.get_mut(name);
+            self.opt.update(&format!("rep.{name}"), p, g);
+        }
+
+        // ---- statistics -------------------------------------------------
+        let t_iter = self.clocks.take_iter_compute();
+        if self.epoch_compute.len() == e {
+            for (acc, t) in self.epoch_compute.iter_mut().zip(&t_iter) {
+                *acc += t;
+            }
+        }
+        self.monitor.record(t_iter, m_gemm);
+        Ok(loss)
+    }
+
+    // ---- branch executions -------------------------------------------
+
+    fn attn_fwd_partials(
+        &mut self,
+        x: &Tensor,
+        k: usize,
+        actions: &[WorkerAction],
+        m_gemm: &mut [f64],
+    ) -> Result<Vec<Tensor>> {
+        let e = self.model().e;
+        let mut partials = Vec::with_capacity(e);
+        for w in 0..e {
+            let p = &actions[w].layers[k];
+            let name = self.rt.manifest.attn_name("fwd", &p.attn_bucket);
+            let idx: Vec<i32> = p.attn_keep.iter().map(|&i| i as i32).collect();
+            let mask = Tensor::full(&[idx.len()], 1.0);
+            let b = &self.state.shards[w][k];
+            let (outs, t) = self.rt.call(
+                &name,
+                &[
+                    Arg::F32(x),
+                    Arg::F32(&b.ln1_g),
+                    Arg::F32(&b.ln1_b),
+                    Arg::F32(&b.wqkv),
+                    Arg::F32(&b.wo),
+                    Arg::I32(&idx),
+                    Arg::F32(&mask),
+                ],
+            )?;
+            self.injector.charge(&mut self.clocks, w, t);
+            m_gemm[w] += t * self.injector.chi[w];
+            partials.push(into1(outs)?);
+        }
+        Ok(partials)
+    }
+
+    fn mlp_fwd_partials(
+        &mut self,
+        x: &Tensor,
+        k: usize,
+        actions: &[WorkerAction],
+        m_gemm: &mut [f64],
+    ) -> Result<Vec<Tensor>> {
+        let e = self.model().e;
+        let mut partials = Vec::with_capacity(e);
+        for w in 0..e {
+            let p = &actions[w].layers[k];
+            let name = self.rt.manifest.mlp_name("fwd", &p.mlp_b1, &p.mlp_b2);
+            let idx1: Vec<i32> = p.mlp_keep1.iter().map(|&i| i as i32).collect();
+            let idx2: Vec<i32> = p.mlp_keep2.iter().map(|&i| i as i32).collect();
+            let mask1 = Tensor::full(&[idx1.len()], 1.0);
+            let mask2 = Tensor::full(&[idx2.len()], 1.0);
+            let b = &self.state.shards[w][k];
+            let (outs, t) = self.rt.call(
+                &name,
+                &[
+                    Arg::F32(x),
+                    Arg::F32(&b.ln2_g),
+                    Arg::F32(&b.ln2_b),
+                    Arg::F32(&b.w1),
+                    Arg::F32(&b.w2),
+                    Arg::I32(&idx1),
+                    Arg::F32(&mask1),
+                    Arg::I32(&idx2),
+                    Arg::F32(&mask2),
+                ],
+            )?;
+            self.injector.charge(&mut self.clocks, w, t);
+            m_gemm[w] += t * self.injector.chi[w];
+            partials.push(into1(outs)?);
+        }
+        // migration: receivers compute stragglers' slices (fwd direction)
+        self.run_migration(x, k, actions, m_gemm, &mut partials, None)?;
+        Ok(partials)
+    }
+
+    fn mlp_bwd(
+        &mut self,
+        x_in: &Tensor,
+        dy: &Tensor,
+        k: usize,
+        actions: &[WorkerAction],
+        m_gemm: &mut [f64],
+        block_grads: &mut [Vec<BlockGrads>],
+    ) -> Result<Tensor> {
+        let e = self.model().e;
+        let mut dx_parts = Vec::with_capacity(e);
+        let mut dg_parts = Vec::with_capacity(e);
+        let mut db_parts = Vec::with_capacity(e);
+        for w in 0..e {
+            let p = &actions[w].layers[k];
+            let name = self.rt.manifest.mlp_name("bwd", &p.mlp_b1, &p.mlp_b2);
+            let idx1: Vec<i32> = p.mlp_keep1.iter().map(|&i| i as i32).collect();
+            let idx2: Vec<i32> = p.mlp_keep2.iter().map(|&i| i as i32).collect();
+            let mask1 = Tensor::full(&[idx1.len()], 1.0);
+            let mask2 = Tensor::full(&[idx2.len()], 1.0);
+            let b = &self.state.shards[w][k];
+            let (outs, t) = self.rt.call(
+                &name,
+                &[
+                    Arg::F32(x_in),
+                    Arg::F32(&b.ln2_g),
+                    Arg::F32(&b.ln2_b),
+                    Arg::F32(&b.w1),
+                    Arg::F32(&b.w2),
+                    Arg::I32(&idx1),
+                    Arg::F32(&mask1),
+                    Arg::I32(&idx2),
+                    Arg::F32(&mask2),
+                    Arg::F32(dy),
+                ],
+            )?;
+            self.injector.charge(&mut self.clocks, w, t);
+            m_gemm[w] += t * self.injector.chi[w];
+            let mut it = outs.into_iter();
+            dx_parts.push(it.next().unwrap().tensor()?);
+            dg_parts.push(it.next().unwrap().tensor()?);
+            db_parts.push(it.next().unwrap().tensor()?);
+            block_grads[w][k].w1 = it.next().unwrap().tensor()?;
+            block_grads[w][k].w2 = it.next().unwrap().tensor()?;
+        }
+        // migration backward: receivers compute grads of migrated slices
+        self.run_migration(
+            x_in,
+            k,
+            actions,
+            m_gemm,
+            &mut dx_parts,
+            Some((dy, block_grads, &mut dg_parts, &mut db_parts)),
+        )?;
+        self.comm.all_reduce(&mut self.clocks, &mut dg_parts);
+        self.comm.all_reduce(&mut self.clocks, &mut db_parts);
+        for w in 0..e {
+            block_grads[w][k].ln2_g = dg_parts[0].clone();
+            block_grads[w][k].ln2_b = db_parts[0].clone();
+        }
+        self.comm.all_reduce(&mut self.clocks, &mut dx_parts);
+        Ok(dx_parts.into_iter().next().unwrap())
+    }
+
+    fn attn_bwd(
+        &mut self,
+        x_in: &Tensor,
+        dy: &Tensor,
+        k: usize,
+        actions: &[WorkerAction],
+        m_gemm: &mut [f64],
+        block_grads: &mut [Vec<BlockGrads>],
+    ) -> Result<Tensor> {
+        let e = self.model().e;
+        let mut dx_parts = Vec::with_capacity(e);
+        let mut dg_parts = Vec::with_capacity(e);
+        let mut db_parts = Vec::with_capacity(e);
+        for w in 0..e {
+            let p = &actions[w].layers[k];
+            let name = self.rt.manifest.attn_name("bwd", &p.attn_bucket);
+            let idx: Vec<i32> = p.attn_keep.iter().map(|&i| i as i32).collect();
+            let mask = Tensor::full(&[idx.len()], 1.0);
+            let b = &self.state.shards[w][k];
+            let (outs, t) = self.rt.call(
+                &name,
+                &[
+                    Arg::F32(x_in),
+                    Arg::F32(&b.ln1_g),
+                    Arg::F32(&b.ln1_b),
+                    Arg::F32(&b.wqkv),
+                    Arg::F32(&b.wo),
+                    Arg::I32(&idx),
+                    Arg::F32(&mask),
+                    Arg::F32(dy),
+                ],
+            )?;
+            self.injector.charge(&mut self.clocks, w, t);
+            m_gemm[w] += t * self.injector.chi[w];
+            let mut it = outs.into_iter();
+            dx_parts.push(it.next().unwrap().tensor()?);
+            dg_parts.push(it.next().unwrap().tensor()?);
+            db_parts.push(it.next().unwrap().tensor()?);
+            block_grads[w][k].wqkv = it.next().unwrap().tensor()?;
+            block_grads[w][k].wo = it.next().unwrap().tensor()?;
+        }
+        self.comm.all_reduce(&mut self.clocks, &mut dg_parts);
+        self.comm.all_reduce(&mut self.clocks, &mut db_parts);
+        for w in 0..e {
+            block_grads[w][k].ln1_g = dg_parts[0].clone();
+            block_grads[w][k].ln1_b = db_parts[0].clone();
+        }
+        self.comm.all_reduce(&mut self.clocks, &mut dx_parts);
+        Ok(dx_parts.into_iter().next().unwrap())
+    }
+
+    /// Execute migration receiver slices for every straggler's plan at
+    /// block k.  Fwd when `bwd` is None, bwd otherwise.  Partials merge
+    /// into `partials[receiver]` (reduce-merging) or are sent back to the
+    /// straggler (scatter-gather / merging disabled).
+    #[allow(clippy::type_complexity)]
+    fn run_migration(
+        &mut self,
+        x: &Tensor,
+        k: usize,
+        actions: &[WorkerAction],
+        m_gemm: &mut [f64],
+        partials: &mut [Tensor],
+        mut bwd: Option<(&Tensor, &mut [Vec<BlockGrads>], &mut Vec<Tensor>, &mut Vec<Tensor>)>,
+    ) -> Result<()> {
+        let m = self.rt.manifest.model.clone();
+        let policy = self.cfg.balancer.mig_policy;
+        let merging =
+            self.cfg.balancer.reduce_merging && policy == MigPolicy::BroadcastReduce;
+        let msg_bytes = m.bs * m.seq * m.hs * 4;
+        for w in 0..m.e {
+            let Some(mig) = actions[w].mig.clone() else { continue };
+            let receivers: Vec<usize> = mig.receivers.iter().map(|r| r.rank).collect();
+            // weight movement (fwd only — receivers keep them for bwd)
+            if bwd.is_none() {
+                match policy {
+                    MigPolicy::BroadcastReduce => self.comm.broadcast(
+                        &mut self.clocks,
+                        w,
+                        &receivers,
+                        mig.weight_bytes(m.hs),
+                    ),
+                    MigPolicy::ScatterGather => {
+                        let per = mig.weight_bytes(m.hs) / receivers.len().max(1);
+                        self.comm.scatter(&mut self.clocks, w, &receivers, per);
+                    }
+                }
+            }
+            let shard = self.state.shards[w][k].clone();
+            for rw in &mig.receivers {
+                for chunk in &rw.chunks {
+                    let cols: Vec<u32> =
+                        mig.migrated[chunk.start..chunk.start + chunk.len].to_vec();
+                    let w1c = shard.w1.gather_cols(&cols).pad_cols(chunk.kb);
+                    let w2c = shard.w2.gather_rows(&cols).pad_rows(chunk.kb);
+                    match &mut bwd {
+                        None => {
+                            let name = self.rt.manifest.mig_name("fwd", chunk.kb);
+                            let (outs, t) = self.rt.call(
+                                &name,
+                                &[
+                                    Arg::F32(x),
+                                    Arg::F32(&shard.ln2_g),
+                                    Arg::F32(&shard.ln2_b),
+                                    Arg::F32(&w1c),
+                                    Arg::F32(&w2c),
+                                ],
+                            )?;
+                            self.injector.charge(&mut self.clocks, rw.rank, t);
+                            m_gemm[rw.rank] += t * self.injector.chi[rw.rank];
+                            let y = into1(outs)?;
+                            if merging {
+                                partials[rw.rank].add_assign(&y);
+                            } else {
+                                // explicit collection back to the straggler
+                                self.comm.gather(&mut self.clocks, w, &[rw.rank], msg_bytes);
+                                partials[w].add_assign(&y);
+                            }
+                        }
+                        Some((dy, block_grads, dg_parts, db_parts)) => {
+                            let name = self.rt.manifest.mig_name("bwd", chunk.kb);
+                            let (outs, t) = self.rt.call(
+                                &name,
+                                &[
+                                    Arg::F32(x),
+                                    Arg::F32(&shard.ln2_g),
+                                    Arg::F32(&shard.ln2_b),
+                                    Arg::F32(&w1c),
+                                    Arg::F32(&w2c),
+                                    Arg::F32(dy),
+                                ],
+                            )?;
+                            self.injector.charge(&mut self.clocks, rw.rank, t);
+                            m_gemm[rw.rank] += t * self.injector.chi[rw.rank];
+                            let mut it = outs.into_iter();
+                            let dxp = it.next().unwrap().tensor()?;
+                            let dg = it.next().unwrap().tensor()?;
+                            let db = it.next().unwrap().tensor()?;
+                            let dw1c = it.next().unwrap().tensor()?;
+                            let dw2c = it.next().unwrap().tensor()?;
+                            if merging {
+                                partials[rw.rank].add_assign(&dxp);
+                                dg_parts[rw.rank].add_assign(&dg);
+                                db_parts[rw.rank].add_assign(&db);
+                            } else {
+                                self.comm.gather(&mut self.clocks, w, &[rw.rank], msg_bytes);
+                                partials[w].add_assign(&dxp);
+                                dg_parts[w].add_assign(&dg);
+                                db_parts[w].add_assign(&db);
+                            }
+                            // compact weight grads always return (small)
+                            self.comm.gather(
+                                &mut self.clocks,
+                                w,
+                                &[rw.rank],
+                                2 * m.hs * chunk.len * 4,
+                            );
+                            let dw1 = dw1c.take_cols(chunk.len);
+                            let dw2 = dw2c.take_rows(chunk.len);
+                            block_grads[w][k].w1.scatter_cols_assign(&cols, &dw1);
+                            block_grads[w][k].w2.scatter_rows_assign(&cols, &dw2);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply imputation policies to pruned grad positions, then SGD.
+    fn impute_and_step(
+        &mut self,
+        actions: &[WorkerAction],
+        block_grads: &mut [Vec<BlockGrads>],
+    ) -> Result<()> {
+        let m = self.rt.manifest.model.clone();
+        let policy = self.cfg.balancer.imputation;
+        for w in 0..m.e {
+            for k in 0..m.depth {
+                let p = &actions[w].layers[k];
+                let g = &mut block_grads[w][k];
+                let prev = self.prev_grads.as_ref().map(|pg| &pg[w][k]);
+                // qkv contraction rows
+                let lin = Lineage::new(m.hs, &p.attn_keep);
+                impute_rows(&mut g.wqkv, &lin, policy, prev.map(|p| &p.wqkv));
+                // fc1 contraction rows
+                let lin1 = Lineage::new(m.hs, &p.mlp_keep1);
+                impute_rows(&mut g.w1, &lin1, policy, prev.map(|p| &p.w1));
+                // ffl dim: pruned = complement of keep2 MINUS migrated
+                // (migrated grads arrived exactly via scatter)
+                let mut lin2 = Lineage::new(m.ffl, &p.mlp_keep2);
+                if let Some(mig) = &actions[w].mig {
+                    let migset: std::collections::BTreeSet<u32> =
+                        mig.migrated.iter().copied().collect();
+                    lin2.pruned.retain(|i| !migset.contains(i));
+                }
+                impute_cols(&mut g.w1, &lin2, policy, prev.map(|p| &p.w1));
+                impute_rows(&mut g.w2, &lin2, policy, prev.map(|p| &p.w2));
+                // optimizer
+                let b = &mut self.state.shards[w][k];
+                for name in crate::model::BlockShard::names() {
+                    let key = format!("{w}.{k}.{name}");
+                    self.opt.update(&key, b.get_mut(name), g.get(name));
+                }
+            }
+        }
+        if let Some(pg) = &mut self.prev_grads {
+            for w in 0..m.e {
+                for k in 0..m.depth {
+                    pg[w][k] = block_grads[w][k].clone();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // -----------------------------------------------------------------
+    // Evaluation (full-width forward; not charged to RT)
+    // -----------------------------------------------------------------
+
+    pub fn eval(&mut self) -> Result<(f64, f64)> {
+        let m = self.rt.manifest.model.clone();
+        let mut loss_sum = 0.0;
+        let mut correct = 0i64;
+        let mut total = 0i64;
+        for i in 0..self.cfg.train.eval_iters {
+            let batch = match &self.forced_batch {
+                Some(b) => b.clone(),
+                None => self.data.eval_batch(i as u64),
+            };
+            let x = self.forward_full(&batch)?;
+            let (outs, _) = self.rt.call(
+                "head_infer",
+                &[
+                    Arg::F32(&x),
+                    Arg::F32(&self.state.rep.lnf_g),
+                    Arg::F32(&self.state.rep.lnf_b),
+                    Arg::F32(&self.state.rep.w_head),
+                    Arg::F32(&self.state.rep.b_head),
+                    Arg::I32(&batch.labels),
+                ],
+            )?;
+            loss_sum += outs[0].scalar_f32()? as f64;
+            correct += outs[1].scalar_i32()? as i64;
+            total += m.bs as i64;
+        }
+        Ok((
+            loss_sum / self.cfg.train.eval_iters as f64,
+            correct as f64 / total as f64,
+        ))
+    }
+
+    /// Unpruned forward pass (eval / golden checks). No clock charges.
+    pub fn forward_full(&mut self, batch: &Batch) -> Result<Tensor> {
+        let m = self.rt.manifest.model.clone();
+        let rep = self.state.rep.clone();
+        let (outs, _) = self.rt.call(
+            "embed_fwd",
+            &[
+                Arg::F32(&batch.patches),
+                Arg::F32(&rep.w_patch),
+                Arg::F32(&rep.pos),
+                Arg::F32(&rep.cls),
+            ],
+        )?;
+        let mut x = into1(outs)?;
+        let idx_hs: Vec<i32> = (0..m.hs as i32).collect();
+        let idx_ffl: Vec<i32> = (0..m.ffl as i32).collect();
+        let ones_hs = Tensor::full(&[m.hs], 1.0);
+        let ones_ffl = Tensor::full(&[m.ffl], 1.0);
+        for k in 0..m.depth {
+            let mut part: Option<Tensor> = None;
+            for w in 0..m.e {
+                let b = &self.state.shards[w][k];
+                let (outs, _) = self.rt.call(
+                    "attn_fwd_g00",
+                    &[
+                        Arg::F32(&x),
+                        Arg::F32(&b.ln1_g),
+                        Arg::F32(&b.ln1_b),
+                        Arg::F32(&b.wqkv),
+                        Arg::F32(&b.wo),
+                        Arg::I32(&idx_hs),
+                        Arg::F32(&ones_hs),
+                    ],
+                )?;
+                let y = into1(outs)?;
+                match &mut part {
+                    None => part = Some(y),
+                    Some(p) => p.add_assign(&y),
+                }
+            }
+            x.add_assign(&part.unwrap());
+            let mut part: Option<Tensor> = None;
+            for w in 0..m.e {
+                let b = &self.state.shards[w][k];
+                let (outs, _) = self.rt.call(
+                    "mlp_fwd_g00",
+                    &[
+                        Arg::F32(&x),
+                        Arg::F32(&b.ln2_g),
+                        Arg::F32(&b.ln2_b),
+                        Arg::F32(&b.w1),
+                        Arg::F32(&b.w2),
+                        Arg::I32(&idx_hs),
+                        Arg::F32(&ones_hs),
+                        Arg::I32(&idx_ffl),
+                        Arg::F32(&ones_ffl),
+                    ],
+                )?;
+                let y = into1(outs)?;
+                match &mut part {
+                    None => part = Some(y),
+                    Some(p) => p.add_assign(&y),
+                }
+            }
+            x.add_assign(&part.unwrap());
+        }
+        Ok(x)
+    }
+}
+
+fn into1(outs: Vec<Out>) -> Result<Tensor> {
+    outs.into_iter().next().context("no outputs")?.tensor()
+}

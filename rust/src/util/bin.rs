@@ -1,0 +1,180 @@
+//! `tensors.bin` — the cross-language tensor bundle format.
+//!
+//! Layout (written by `python/compile/golden.py::write_bundle`):
+//!   u32 LE header length, JSON header
+//!   `{"entries": [{name, dims, dtype, offset_elems, count}]}`,
+//!   then raw little-endian element data (f32 or i32, 4 bytes each).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub dims: Vec<usize>,
+    pub data: Payload,
+}
+
+impl Entry {
+    pub fn f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Payload::F32(v) => Ok(v),
+            _ => bail!("entry is not f32"),
+        }
+    }
+
+    pub fn i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Payload::I32(v) => Ok(v),
+            _ => bail!("entry is not i32"),
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct Bundle {
+    pub entries: BTreeMap<String, Entry>,
+}
+
+impl Bundle {
+    pub fn load(path: &Path) -> Result<Bundle> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let mut len4 = [0u8; 4];
+        f.read_exact(&mut len4)?;
+        let hlen = u32::from_le_bytes(len4) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = Json::parse(std::str::from_utf8(&hbuf)?)?;
+        let mut raw = Vec::new();
+        f.read_to_end(&mut raw)?;
+
+        let mut entries = BTreeMap::new();
+        for e in header.get("entries")?.arr()? {
+            let name = e.get("name")?.str()?.to_string();
+            let dims = e.get("dims")?.dims()?;
+            let dtype = e.get("dtype")?.str()?;
+            let off = e.get("offset_elems")?.usize()? * 4;
+            let count = e.get("count")?.usize()?;
+            let bytes = raw
+                .get(off..off + count * 4)
+                .with_context(|| format!("bundle entry '{name}' out of range"))?;
+            let data = match dtype {
+                "f32" => Payload::F32(
+                    bytes.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                ),
+                "i32" => Payload::I32(
+                    bytes.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                ),
+                d => bail!("unknown dtype '{d}'"),
+            };
+            entries.insert(name, Entry { dims, data });
+        }
+        Ok(Bundle { entries })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut specs = Vec::new();
+        let mut blob: Vec<u8> = Vec::new();
+        let mut offset = 0usize;
+        for (name, e) in &self.entries {
+            let (dtype, count) = match &e.data {
+                Payload::F32(v) => {
+                    for x in v {
+                        blob.extend_from_slice(&x.to_le_bytes());
+                    }
+                    ("f32", v.len())
+                }
+                Payload::I32(v) => {
+                    for x in v {
+                        blob.extend_from_slice(&x.to_le_bytes());
+                    }
+                    ("i32", v.len())
+                }
+            };
+            specs.push(crate::util::json::obj([
+                ("name", name.as_str().into()),
+                ("dims", e.dims.iter().copied().collect()),
+                ("dtype", dtype.into()),
+                ("offset_elems", offset.into()),
+                ("count", count.into()),
+            ]));
+            offset += count;
+        }
+        let header = crate::util::json::obj([("entries", Json::Arr(specs))]).to_string();
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&(header.len() as u32).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        f.write_all(&blob)?;
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("bundle missing entry '{name}'"))
+    }
+
+    /// All entries whose name starts with `prefix` (sorted by name).
+    pub fn with_prefix(&self, prefix: &str) -> Vec<(&str, &Entry)> {
+        self.entries
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, v)| (k.as_str(), v))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("flextp_bin_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let mut b = Bundle::default();
+        b.entries.insert(
+            "x".into(),
+            Entry { dims: vec![2, 3], data: Payload::F32(vec![1.0, 2.0, 3.0, -4.0, 0.5, 6.0]) },
+        );
+        b.entries.insert(
+            "labels".into(),
+            Entry { dims: vec![4], data: Payload::I32(vec![0, 3, 2, 9]) },
+        );
+        b.save(&path).unwrap();
+        let r = Bundle::load(&path).unwrap();
+        assert_eq!(r.get("x").unwrap().f32().unwrap(), &[1.0, 2.0, 3.0, -4.0, 0.5, 6.0]);
+        assert_eq!(r.get("labels").unwrap().i32().unwrap(), &[0, 3, 2, 9]);
+        assert_eq!(r.get("x").unwrap().dims, vec![2, 3]);
+    }
+
+    #[test]
+    fn prefix_query() {
+        let mut b = Bundle::default();
+        for name in ["params.0.a", "params.0.b", "params.1.a", "batch.x"] {
+            b.entries.insert(
+                name.into(),
+                Entry { dims: vec![1], data: Payload::F32(vec![0.0]) },
+            );
+        }
+        assert_eq!(b.with_prefix("params.0.").len(), 2);
+        assert_eq!(b.with_prefix("params.").len(), 3);
+        assert_eq!(b.with_prefix("nope").len(), 0);
+    }
+}

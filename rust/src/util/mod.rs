@@ -1,0 +1,60 @@
+//! Dependency-free substrate utilities.
+//!
+//! The offline build environment vendors only the `xla` crate's dependency
+//! tree (no serde / clap / rand / criterion), so the pieces a framework
+//! normally pulls from crates.io are implemented here: a JSON
+//! parser/emitter for the artifact manifests and metric dumps, a seeded
+//! xorshift RNG for deterministic init/data, the `tensors.bin`
+//! cross-language bundle format, and plain-text table rendering for the
+//! paper-figure benches.
+
+pub mod bin;
+pub mod json;
+pub mod rng;
+pub mod table;
+
+/// Format a byte count human-readably (metrics/logs).
+pub fn fmt_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format seconds with adaptive precision (RT columns).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0}")
+    } else if s >= 1.0 {
+        format!("{s:.2}")
+    } else {
+        format!("{:.2}ms", s * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(fmt_secs(123.4), "123");
+        assert_eq!(fmt_secs(1.5), "1.50");
+        assert_eq!(fmt_secs(0.0123), "12.30ms");
+    }
+}

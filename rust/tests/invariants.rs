@@ -1,0 +1,275 @@
+//! Property-style invariant sweeps (hand-rolled — proptest is unavailable
+//! offline): randomized inputs over many seeds for the coordinator's core
+//! invariants (DESIGN.md §6), plus integration runs over the real tiny
+//! artifacts exercising every strategy end-to-end.
+
+use flextp::cluster::{mig_range, renumber, Clocks};
+use flextp::collectives::{cost::CostModel, Comm};
+use flextp::config::{Imputation, RunCfg, StragglerPlan, Strategy};
+use flextp::resizing::lineage::Lineage;
+use flextp::semi::{eq2_beta, CostFns};
+use flextp::tensor::Tensor;
+use flextp::util::rng::Rng;
+
+const CASES: usize = 60;
+
+#[test]
+fn prop_lineage_roundtrip() {
+    // expand(compact(g)) == g on kept rows; zeros on pruned rows.
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let n = 4 + rng.below(60);
+        let c = 1 + rng.below(12);
+        let keep = 1 + rng.below(n);
+        let kept = rng.choose_k(n, keep);
+        let lin = Lineage::new(n, &kept);
+        assert_eq!(lin.kept.len() + lin.pruned.len(), n);
+        let g = Tensor::normal(&[n, c], 1.0, &mut rng);
+        let compact = g.gather_rows(&lin.kept);
+        let mut full = Tensor::zeros(&[n, c]);
+        full.scatter_rows_assign(&lin.kept, &compact);
+        for (j, &i) in lin.kept.iter().enumerate() {
+            let i = i as usize;
+            assert_eq!(&full.data[i * c..(i + 1) * c], &compact.data[j * c..(j + 1) * c]);
+        }
+        for &i in &lin.pruned {
+            let i = i as usize;
+            assert!(full.data[i * c..(i + 1) * c].iter().all(|&v| v == 0.0));
+        }
+    }
+}
+
+#[test]
+fn prop_renumbering_bijective_and_ranges_tile() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0x11);
+        let e = 2 + rng.below(14);
+        let rk = rng.below(e);
+        let l = rng.below(512);
+        let mut seen = vec![false; e];
+        let mut covered = vec![false; l];
+        for ri in (0..e).filter(|&r| r != rk) {
+            let rp = renumber(ri, rk, e);
+            assert!((1..e).contains(&rp));
+            assert!(!seen[rp]);
+            seen[rp] = true;
+            let (s, t) = mig_range(ri, rk, e, l);
+            for x in s..t {
+                assert!(!covered[x], "overlap");
+                covered[x] = true;
+            }
+        }
+        assert!(covered.iter().all(|&b| b), "ranges must tile L_mig");
+    }
+}
+
+#[test]
+fn prop_eq2_beta_bounded_and_monotone_in_l() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0x22);
+        let c = CostFns {
+            omega1_s: rng.uniform() as f64 * 1e-3,
+            omega2_per_col: rng.uniform() as f64 * 1e-4,
+            phi1_base_s: rng.uniform() as f64 * 1e-3,
+            phi1_per_col: rng.uniform() as f64 * 1e-4,
+            phi2_per_col: rng.uniform() as f64 * 1e-4,
+        };
+        let e = 2 + rng.below(7);
+        for l in [8.0, 64.0, 256.0] {
+            let b = eq2_beta(l, e, &c);
+            assert!((0.0..=1.0).contains(&b), "β={b}");
+            // balance residual at the returned β is ~0 for interior points
+            if b > 1e-6 && b < 1.0 - 1e-6 {
+                let mig = l * b;
+                let res = l * (1.0 - b);
+                let lhs = c.omega1_s + c.omega2(res);
+                let rhs = c.phi1(mig) + c.phi2(mig / (e - 1) as f64);
+                assert!(
+                    (lhs - rhs).abs() <= 1e-6 * lhs.max(rhs).max(1e-12),
+                    "balance violated: {lhs} vs {rhs}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_tree_collectives_dominate_flat_for_large_groups() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0x33);
+        let e = 4 + rng.below(12);
+        let bytes = 1024 * (1 + rng.below(4096));
+        let cost = CostModel::default();
+        let peers: Vec<usize> = (1..e).collect();
+        let (mut c1, mut k1) = (Comm::new(cost), Clocks::new(e));
+        c1.broadcast(&mut k1, 0, &peers, bytes);
+        let (mut c2, mut k2) = (Comm::new(cost), Clocks::new(e));
+        c2.scatter(&mut k2, 0, &peers, bytes);
+        assert!(
+            k1.now(0) <= k2.now(0) + 1e-12,
+            "tree broadcast must not lose to flat scatter (e={e})"
+        );
+    }
+}
+
+#[test]
+fn prop_allreduce_is_exact_sum() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0x44);
+        let e = 2 + rng.below(7);
+        let n = 1 + rng.below(100);
+        let bufs: Vec<Tensor> = (0..e).map(|_| Tensor::normal(&[n], 1.0, &mut rng)).collect();
+        let mut want = Tensor::zeros(&[n]);
+        for b in &bufs {
+            want.add_assign(b);
+        }
+        let mut got = bufs.clone();
+        let mut comm = Comm::new(CostModel::default());
+        let mut clocks = Clocks::new(e);
+        comm.all_reduce(&mut clocks, &mut got);
+        for b in &got {
+            assert!(b.allclose(&want, 1e-5));
+        }
+    }
+}
+
+#[test]
+fn prop_barrier_monotone() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0x55);
+        let e = 2 + rng.below(7);
+        let mut clocks = Clocks::new(e);
+        let mut max = 0.0f64;
+        for r in 0..e {
+            let dt = rng.uniform() as f64;
+            clocks.advance(r, dt);
+            max = max.max(dt);
+        }
+        let b = clocks.barrier();
+        assert!((b - max).abs() < 1e-12);
+        for r in 0..e {
+            assert_eq!(clocks.now(r), b);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Integration: every strategy trains on the real tiny artifacts.
+// ---------------------------------------------------------------------
+
+fn artifacts_exist() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/vit-tiny")
+        .exists()
+}
+
+fn short_cfg(strategy: Strategy) -> RunCfg {
+    let mut cfg = RunCfg::new("vit-tiny");
+    cfg.balancer.strategy = strategy;
+    cfg.train.epochs = 2;
+    cfg.train.iters_per_epoch = 2;
+    cfg.train.eval_iters = 1;
+    cfg.stragglers = StragglerPlan::Fixed(vec![3.0]);
+    cfg
+}
+
+#[test]
+fn integration_all_strategies_run_and_stay_finite() {
+    if !artifacts_exist() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    for strategy in [
+        Strategy::Baseline,
+        Strategy::ZeroRd,
+        Strategy::ZeroPri,
+        Strategy::ZeroPriDiffE,
+        Strategy::ZeroPriDiffR,
+        Strategy::Mig,
+        Strategy::Semi,
+    ] {
+        let mut t =
+            flextp::train::trainer::Trainer::new(short_cfg(strategy)).expect("trainer");
+        let r = t.run().unwrap_or_else(|e| panic!("{} failed: {e:?}", strategy.name()));
+        assert!(r.rt() > 0.0, "{}: no time charged", strategy.name());
+        assert!(
+            r.final_eval_loss().is_finite(),
+            "{}: loss diverged", strategy.name()
+        );
+        assert!(!r.loss_curve.is_empty());
+    }
+}
+
+#[test]
+fn integration_balancers_engage_under_skew() {
+    if !artifacts_exist() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // ZERO prunes, MIG migrates, SEMI does at least one of the two.
+    let mut t = flextp::train::trainer::Trainer::new(short_cfg(Strategy::ZeroPri)).unwrap();
+    let r = t.run().unwrap();
+    assert!(
+        r.epochs.iter().map(|e| e.pruned_cols).sum::<u64>() > 0,
+        "ZERO-Pri never pruned under χ=3"
+    );
+    let mut t = flextp::train::trainer::Trainer::new(short_cfg(Strategy::Mig)).unwrap();
+    let r = t.run().unwrap();
+    assert!(
+        r.epochs.iter().map(|e| e.migrated_cols).sum::<u64>() > 0,
+        "MIG never migrated under χ=3"
+    );
+    let mut t = flextp::train::trainer::Trainer::new(short_cfg(Strategy::Semi)).unwrap();
+    let r = t.run().unwrap();
+    let acted: u64 = r
+        .epochs
+        .iter()
+        .map(|e| e.pruned_cols + e.migrated_cols)
+        .sum();
+    assert!(acted > 0, "SEMI never balanced under χ=3");
+}
+
+#[test]
+fn integration_imputation_policies_all_train() {
+    if !artifacts_exist() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    for imp in [Imputation::Zero, Imputation::Average, Imputation::Same] {
+        let mut cfg = short_cfg(Strategy::ZeroPri);
+        cfg.balancer.imputation = imp;
+        cfg.balancer.gamma_override = Some(0.5);
+        let mut t = flextp::train::trainer::Trainer::new(cfg).unwrap();
+        let r = t.run().expect("run");
+        assert!(r.final_eval_loss().is_finite(), "{imp:?} diverged");
+    }
+}
+
+#[test]
+fn integration_migration_is_numerically_exact() {
+    if !artifacts_exist() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // A pure-MIG run must produce the same loss trajectory as Baseline on
+    // the same batch (migration never changes arithmetic, paper §IV-A).
+    let fixed_batch = |strategy: Strategy| {
+        let mut cfg = short_cfg(strategy);
+        cfg.train.epochs = 1;
+        cfg.train.iters_per_epoch = 3;
+        let mut t = flextp::train::trainer::Trainer::new(cfg).unwrap();
+        let b = t.data.train_batch(0);
+        t.forced_batch = Some(b);
+        let mut losses = Vec::new();
+        for _ in 0..3 {
+            losses.push(t.train_iter().unwrap());
+        }
+        losses
+    };
+    let base = fixed_batch(Strategy::Baseline);
+    let mig = fixed_batch(Strategy::Mig);
+    for (i, (b, m)) in base.iter().zip(&mig).enumerate() {
+        let rel = (b - m).abs() / b.abs().max(1e-6);
+        assert!(rel < 1e-4, "step {i}: MIG loss {m} != baseline {b} (rel {rel})");
+    }
+}

@@ -1,0 +1,94 @@
+//! Runtime smoke: load real vit-tiny artifacts, execute, check shapes and
+//! basic numerics (requires `make artifacts`).
+
+use std::path::Path;
+
+use flextp::runtime::{Arg, Runtime};
+use flextp::tensor::Tensor;
+
+fn artifacts() -> Option<Runtime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/vit-tiny");
+    if !dir.exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("load runtime"))
+}
+
+#[test]
+fn embed_fwd_executes_with_correct_shapes() {
+    let Some(rt) = artifacts() else { return };
+    let m = &rt.manifest.model;
+    let patches = Tensor::full(&[m.bs, m.seq0, m.pd], 0.1);
+    let w_patch = Tensor::full(&[m.pd, m.hs], 0.01);
+    let pos = Tensor::zeros(&[m.seq, m.hs]);
+    let cls = Tensor::full(&[m.hs], 0.5);
+    let (outs, secs) = rt
+        .call(
+            "embed_fwd",
+            &[Arg::F32(&patches), Arg::F32(&w_patch), Arg::F32(&pos), Arg::F32(&cls)],
+        )
+        .expect("call embed_fwd");
+    assert!(secs > 0.0);
+    let x0 = outs.into_iter().next().unwrap().tensor().unwrap();
+    assert_eq!(x0.dims, vec![m.bs, m.seq, m.hs]);
+    // cls token row = cls value (pos is zero)
+    assert!((x0.data[0] - 0.5).abs() < 1e-6);
+    // patch rows = sum of pd * 0.1 * 0.01
+    let want = m.pd as f32 * 0.1 * 0.01;
+    assert!((x0.data[m.hs] - want).abs() < 1e-5, "{} vs {want}", x0.data[m.hs]);
+}
+
+#[test]
+fn attn_fwd_full_bucket_runs() {
+    let Some(rt) = artifacts() else { return };
+    let m = rt.manifest.model.clone();
+    let x = Tensor::full(&[m.bs, m.seq, m.hs], 0.1);
+    let g = Tensor::full(&[m.hs], 1.0);
+    let b = Tensor::zeros(&[m.hs]);
+    let wqkv = Tensor::full(&[m.hs, 3 * m.hsl], 0.01);
+    let wo = Tensor::full(&[m.hsl, m.hs], 0.01);
+    let idx: Vec<i32> = (0..m.hs as i32).collect();
+    let mask = Tensor::full(&[m.hs], 1.0);
+    let (outs, _) = rt
+        .call(
+            "attn_fwd_g00",
+            &[Arg::F32(&x), Arg::F32(&g), Arg::F32(&b), Arg::F32(&wqkv),
+              Arg::F32(&wo), Arg::I32(&idx), Arg::F32(&mask)],
+        )
+        .expect("attn_fwd_g00");
+    let y = outs.into_iter().next().unwrap().tensor().unwrap();
+    assert_eq!(y.dims, vec![m.bs, m.seq, m.hs]);
+    assert!(y.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn timing_profile_accumulates() {
+    let Some(rt) = artifacts() else { return };
+    let m = &rt.manifest.model;
+    let patches = Tensor::zeros(&[m.bs, m.seq0, m.pd]);
+    let w_patch = Tensor::zeros(&[m.pd, m.hs]);
+    let pos = Tensor::zeros(&[m.seq, m.hs]);
+    let cls = Tensor::zeros(&[m.hs]);
+    for _ in 0..3 {
+        rt.call(
+            "embed_fwd",
+            &[Arg::F32(&patches), Arg::F32(&w_patch), Arg::F32(&pos), Arg::F32(&cls)],
+        )
+        .unwrap();
+    }
+    let prof = rt.timing_profile();
+    let e = prof.iter().find(|(n, _, _)| n == "embed_fwd").unwrap();
+    assert_eq!(e.1, 3);
+    assert!(e.2 > 0.0);
+}
+
+#[test]
+fn dim_mismatch_rejected() {
+    let Some(rt) = artifacts() else { return };
+    let bad = Tensor::zeros(&[1, 2, 3]);
+    let z = Tensor::zeros(&[1]);
+    assert!(rt
+        .call("embed_fwd", &[Arg::F32(&bad), Arg::F32(&z), Arg::F32(&z), Arg::F32(&z)])
+        .is_err());
+}
