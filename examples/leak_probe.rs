@@ -26,8 +26,10 @@ fn main() -> anyhow::Result<()> {
             println!("end rss={:.0}MB", rss_mb());
         }
         "exec" => {
+            // probe the PJRT path explicitly — the native backend has no
+            // device buffers to leak
             let dir = std::path::Path::new("artifacts/vit-tiny");
-            let rt = Runtime::load(dir)?;
+            let rt = Runtime::open(dir, "vit-tiny", flextp::config::BackendKind::Pjrt)?;
             let m = rt.manifest.model.clone();
             let patches = Tensor::zeros(&[m.bs, m.seq0, m.pd]);
             let w = Tensor::zeros(&[m.pd, m.hs]);

@@ -15,8 +15,7 @@ fn main() -> anyhow::Result<()> {
     // half the group straggles with descending skewness (paper: 8,6,4,2
     // on 8 GPUs; scaled to the model's e)
     let probe = bench_cfg(&model, Strategy::Semi);
-    let e = flextp::runtime::Manifest::load(
-        &probe.model_dir().join("manifest.json"))?.model.e;
+    let e = flextp::runtime::Manifest::load_or_synthesize(&probe.model_dir(), &model)?.model.e;
     let z = e / 2;
     let chis: Vec<f64> = (0..z).map(|i| 8.0 - 2.0 * i as f64).map(|c| c.max(2.0)).collect();
 

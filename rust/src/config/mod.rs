@@ -7,6 +7,32 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
+/// Which execution backend runs the manifest executables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust implementations; runs from a clean checkout (default).
+    Native,
+    /// AOT HLO artifacts through PJRT (`--features pjrt` + `make artifacts`).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        Ok(match s {
+            "native" => BackendKind::Native,
+            "pjrt" => BackendKind::Pjrt,
+            _ => bail!("unknown backend '{s}' (native|pjrt)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
 /// Which balancing solution runs — the paper's compared systems (§V-A).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Strategy {
@@ -214,6 +240,7 @@ impl Default for BalancerCfg {
 pub struct RunCfg {
     pub artifacts_dir: PathBuf,
     pub model: String,
+    pub backend: BackendKind,
     pub train: TrainCfg,
     pub balancer: BalancerCfg,
     pub stragglers: StragglerPlan,
@@ -225,6 +252,7 @@ impl RunCfg {
         RunCfg {
             artifacts_dir: PathBuf::from("artifacts"),
             model: model.to_string(),
+            backend: BackendKind::Native,
             train: TrainCfg::default(),
             balancer: BalancerCfg::default(),
             stragglers: StragglerPlan::None,
@@ -271,6 +299,7 @@ pub fn apply_overrides(cfg: &mut RunCfg, kv: &BTreeMap<String, String>) -> Resul
         match k.as_str() {
             "artifacts" => cfg.artifacts_dir = PathBuf::from(v),
             "model" => cfg.model = v.clone(),
+            "backend" => cfg.backend = BackendKind::parse(v)?,
             "epochs" => cfg.train.epochs = v.parse().context("epochs")?,
             "iters" => cfg.train.iters_per_epoch = v.parse().context("iters")?,
             "lr" => cfg.train.lr = v.parse().context("lr")?,
@@ -305,6 +334,18 @@ pub fn apply_overrides(cfg: &mut RunCfg, kv: &BTreeMap<String, String>) -> Resul
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn backend_roundtrip_and_default() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(RunCfg::new("vit-tiny").backend, BackendKind::Native);
+        let mut cfg = RunCfg::new("vit-tiny");
+        let (_, kv) = parse_kv_args(&["--backend".to_string(), "pjrt".to_string()]).unwrap();
+        apply_overrides(&mut cfg, &kv).unwrap();
+        assert_eq!(cfg.backend, BackendKind::Pjrt);
+    }
 
     #[test]
     fn strategy_roundtrip() {

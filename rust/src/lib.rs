@@ -17,9 +17,17 @@
 //! Architecture (see DESIGN.md): Layer 1 is a Pallas `pruned_matmul`
 //! kernel, Layer 2 the JAX shard programs, both AOT-compiled to HLO text
 //! by `python/compile/aot.py`; this crate is Layer 3 — the coordinator
-//! that loads the artifacts via PJRT ([`runtime`]) and owns the training
-//! loop, collectives, scheduling, and balancing.  Python never runs at
-//! training time.
+//! that owns the training loop, collectives, scheduling, and balancing.
+//! Executables run through a pluggable [`runtime::Backend`]: the default
+//! **native** backend implements every role in pure Rust (no Python, no
+//! XLA, no artifacts — `cargo run -- train` works from a clean checkout),
+//! while `--features pjrt` loads the AOT artifacts through PJRT.  Python
+//! never runs at training time.
+
+// Numeric-kernel idiom: index-heavy loops over row-major buffers are the
+// clearest way to express the GEMM/layernorm/attention dataflows here.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
 
 pub mod balancer;
 pub mod bench;

@@ -48,7 +48,9 @@ fn print_help() {
            pretest              print the SEMI cost-function fit\n\
          \n\
          COMMON OPTIONS\n\
-           --model NAME         artifact set (vit-tiny|vit-s|vit-m|vit-100m)\n\
+           --model NAME         model preset (vit-tiny|vit-s|vit-m|vit-100m)\n\
+           --backend B          native (default, pure Rust) | pjrt\n\
+                                (pjrt needs --features pjrt + make artifacts)\n\
            --artifacts DIR      artifacts root (default: artifacts)\n\
            --strategy S         baseline|zero-rd|zero-pri|zero-pridiff-e|\n\
                                 zero-pridiff-r|mig|semi\n\
@@ -112,7 +114,7 @@ fn cmd_train(kv: &std::collections::BTreeMap<String, String>) -> Result<()> {
 
 fn cmd_inspect(kv: &std::collections::BTreeMap<String, String>) -> Result<()> {
     let cfg = build_cfg(kv)?;
-    let man = flextp::runtime::Manifest::load(&cfg.model_dir().join("manifest.json"))?;
+    let man = flextp::runtime::Manifest::load_or_synthesize(&cfg.model_dir(), &cfg.model)?;
     println!(
         "model {}: hs={} depth={} heads={} e={} bs={} seq={} params={}",
         man.model.name, man.model.hs, man.model.depth, man.model.heads,

@@ -81,6 +81,24 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// Synthesize the manifest for a built-in preset (no artifacts needed
+    /// — the native backend's path; see [`crate::runtime::presets`]).
+    pub fn for_model(name: &str) -> Result<Manifest> {
+        crate::runtime::presets::synthesize(name)
+    }
+
+    /// Prefer `model_dir/manifest.json` when compiled artifacts exist,
+    /// falling back to preset synthesis — the single fallback policy the
+    /// runtime, CLI, and benches share.
+    pub fn load_or_synthesize(model_dir: &Path, model: &str) -> Result<Manifest> {
+        let mpath = model_dir.join("manifest.json");
+        if mpath.exists() {
+            Self::load(&mpath).with_context(|| format!("loading manifest for '{model}'"))
+        } else {
+            Self::for_model(model)
+        }
+    }
+
     pub fn load(path: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;

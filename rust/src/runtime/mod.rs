@@ -1,25 +1,37 @@
-//! PJRT runtime: loads the AOT artifacts (HLO text) and executes them on
-//! the request path. This is the only module that touches the `xla` crate.
+//! Execution runtime: the pluggable backend layer.
 //!
-//! Flow (adapted from /opt/xla-example/load_hlo):
-//!   `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
-//!   `client.compile` → `execute` per call.  Executables compile lazily on
-//!   first use and are cached for the life of the runtime, so each model
-//!   variant compiles exactly once.  Every call is timed; the engine
-//!   charges that measurement (×χ for stragglers) to the rank's SimClock.
+//! [`Runtime`] is the single entry point the trainer, benches, and tests
+//! use to execute manifest executables.  It owns the [`Manifest`] (loaded
+//! from `artifacts/<model>/manifest.json` when present, synthesized from
+//! the built-in presets otherwise), validates every call against the
+//! declared shapes, accumulates each call's backend-measured compute
+//! seconds into a timing profile, and dispatches to a [`Backend`]:
+//!
+//! * [`native::NativeBackend`] (default) — pure-Rust implementations of
+//!   every role; runs from a clean checkout with nothing but `cargo`.
+//! * `pjrt::PjrtBackend` (`--features pjrt`) — loads the AOT HLO-text
+//!   artifacts produced by `python/compile/aot.py` and executes them
+//!   through the `xla` crate's PJRT bindings.
+//!
+//! The measured seconds returned by [`Runtime::call`] are what the engine
+//! charges (×χ for stragglers) to the rank's `SimClock` — see the
+//! [`Backend`] contract below.
 
 pub mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod presets;
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
-use std::path::PathBuf;
-use std::rc::Rc;
-use std::time::Instant;
+use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::config::BackendKind;
 use crate::tensor::Tensor;
-pub use manifest::{ArgSpec, Dtype, ExecSpec, Manifest};
+pub use manifest::{ArgSpec, Bucket, Dtype, ExecSpec, Manifest, ModelInfo};
 
 /// An input argument to an executable call.
 pub enum Arg<'a> {
@@ -57,96 +69,120 @@ impl Out {
     }
 }
 
-struct CompiledExec {
-    exe: xla::PjRtLoadedExecutable,
-    spec: ExecSpec,
+/// The execution-backend contract.
+///
+/// Invariants every implementation must uphold:
+///
+/// * **Validated calls** — `execute` receives `args` already checked
+///   against `spec.inputs` (count, dtype, exact dims), and must return
+///   exactly `spec.outputs.len()` outputs in manifest order, with scalar
+///   f32/i32 outputs normalized to length-1 values.
+/// * **Pruning semantics** — roles taking `(idx, mask)` implement the
+///   Eq. (1) contraction contract `(x[:,idx]·mask) @ w[idx,:]`, with the
+///   zero-imputed scatter-ADD backward of the Pallas kernel's vjp.
+/// * **Timing** — `execute` returns the measured seconds of the *device
+///   compute* it performed; the trainer charges exactly that (multiplied
+///   by the rank's skewness χ for stragglers) to the rank's `SimClock`.
+///   Backends time their own compute boundary — PJRT times execution +
+///   output download but not host→device input staging, matching the
+///   seed's RT accounting; the native backend times the whole kernel
+///   body.  All work must happen synchronously inside `execute`, or RT
+///   measurements lose meaning.
+/// * **Determinism** — same inputs, same outputs (bitwise), so golden
+///   tests and cross-backend checks are reproducible.
+pub trait Backend {
+    /// Execute one manifest executable on validated arguments; returns
+    /// the outputs plus the measured compute seconds.
+    fn execute(&self, spec: &ExecSpec, args: &[Arg]) -> Result<(Vec<Out>, f64)>;
+
+    /// Pre-compile / warm an executable before timed regions (PJRT
+    /// compiles the HLO here; the native backend has nothing to do).
+    fn prepare(&self, spec: &ExecSpec) -> Result<()>;
+
+    /// Human-readable platform label for logs.
+    fn platform(&self) -> String;
 }
 
-/// The PJRT service: client + lazily-compiled executable cache.
+/// The runtime facade: manifest + backend + per-executable timing profile.
 pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
     pub manifest: Manifest,
-    cache: RefCell<BTreeMap<String, Rc<CompiledExec>>>,
+    backend: Box<dyn Backend>,
     /// cumulative (calls, seconds) per executable — §Perf profiling
     timings: RefCell<BTreeMap<String, (u64, f64)>>,
 }
 
 impl Runtime {
-    /// Load a model's artifact directory (manifest + HLO text files).
-    pub fn load(model_dir: &std::path::Path) -> Result<Runtime> {
-        let manifest = Manifest::load(&model_dir.join("manifest.json"))
-            .with_context(|| format!("loading manifest from {}", model_dir.display()))?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            dir: model_dir.to_path_buf(),
-            manifest,
-            cache: RefCell::new(BTreeMap::new()),
-            timings: RefCell::new(BTreeMap::new()),
-        })
+    fn with_backend(manifest: Manifest, backend: Box<dyn Backend>) -> Runtime {
+        Runtime { manifest, backend, timings: RefCell::new(BTreeMap::new()) }
     }
 
-    fn compiled(&self, name: &str) -> Result<Rc<CompiledExec>> {
-        if let Some(c) = self.cache.borrow().get(name) {
-            return Ok(c.clone());
+    /// Open a model on the requested backend.  With [`BackendKind::Native`]
+    /// the manifest comes from `model_dir/manifest.json` when present and
+    /// is synthesized from the `model` preset otherwise; PJRT always
+    /// requires the compiled artifact directory.
+    pub fn open(model_dir: &Path, model: &str, kind: BackendKind) -> Result<Runtime> {
+        match kind {
+            BackendKind::Native => {
+                let manifest = Manifest::load_or_synthesize(model_dir, model)?;
+                let backend = Box::new(native::NativeBackend::new(&manifest));
+                Ok(Self::with_backend(manifest, backend))
+            }
+            BackendKind::Pjrt => Self::open_pjrt(model_dir),
         }
-        let spec = self
-            .manifest
-            .exec(name)
-            .with_context(|| format!("executable '{name}' not in manifest"))?
-            .clone();
-        let path = self.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
+    }
+
+    /// Native runtime from a synthesized preset manifest (no disk I/O).
+    pub fn native_for(model: &str) -> Result<Runtime> {
+        let manifest = Manifest::for_model(model)?;
+        let backend = Box::new(native::NativeBackend::new(&manifest));
+        Ok(Self::with_backend(manifest, backend))
+    }
+
+    /// Native runtime over an explicit manifest (tests, custom configs).
+    pub fn native_with_manifest(manifest: Manifest) -> Runtime {
+        let backend = Box::new(native::NativeBackend::new(&manifest));
+        Self::with_backend(manifest, backend)
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn open_pjrt(model_dir: &Path) -> Result<Runtime> {
+        let backend = pjrt::PjrtBackend::load(model_dir)?;
+        let manifest = backend.manifest.clone();
+        Ok(Self::with_backend(manifest, Box::new(backend)))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn open_pjrt(_model_dir: &Path) -> Result<Runtime> {
+        bail!(
+            "backend 'pjrt' is not compiled in — rebuild with \
+             `cargo build --features pjrt` (and a real `xla` crate, see \
+             DESIGN.md §8) or use --backend native"
         )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)
-            .with_context(|| format!("compiling {name}"))?;
-        let c = Rc::new(CompiledExec { exe, spec });
-        self.cache.borrow_mut().insert(name.to_string(), c.clone());
-        Ok(c)
     }
 
     /// Pre-compile a set of executables (warmup before timed regions).
     pub fn warmup(&self, names: &[&str]) -> Result<()> {
         for n in names {
-            self.compiled(n)?;
+            self.backend.prepare(self.manifest.exec(n)?)?;
         }
         Ok(())
     }
 
-    /// Execute `name` with `args`; returns outputs and the measured
-    /// execution seconds (used as the SimClock compute charge).
+    /// Execute `name` with `args`; returns outputs and the backend's
+    /// measured compute seconds (used as the SimClock compute charge).
     pub fn call(&self, name: &str, args: &[Arg]) -> Result<(Vec<Out>, f64)> {
-        let c = self.compiled(name)?;
-        if args.len() != c.spec.inputs.len() {
-            bail!("{name}: got {} args, manifest says {}", args.len(), c.spec.inputs.len());
-        }
-        // Inputs go through self-owned PjRtBuffers + execute_b: the
-        // crate's literal-taking `execute` leaks its internally-created
-        // input buffers (~input bytes per call — measured by
-        // examples/leak_probe.rs), while buffers we create are freed by
-        // PjRtBuffer::drop.  This is also the §Perf device-buffer path.
-        let mut buffers = Vec::with_capacity(args.len());
-        for (arg, spec) in args.iter().zip(&c.spec.inputs) {
-            buffers.push(to_buffer(&self.client, arg, spec)?);
-        }
-        let t0 = Instant::now();
-        let result = c.exe.execute_b(&buffers)
-            .with_context(|| format!("executing {name}"))?[0][0]
-            .to_literal_sync()?;
-        let elapsed = t0.elapsed().as_secs_f64();
-        // aot.py lowers with return_tuple=True → always a tuple.
-        let elems = result.to_tuple()?;
-        if elems.len() != c.spec.outputs.len() {
-            bail!("{name}: got {} outputs, manifest says {}",
-                  elems.len(), c.spec.outputs.len());
-        }
-        let mut outs = Vec::with_capacity(elems.len());
-        for (lit, spec) in elems.into_iter().zip(&c.spec.outputs) {
-            outs.push(from_literal(lit, spec)?);
+        let spec = self.manifest.exec(name)?;
+        check_args(spec, args)?;
+        let (outs, elapsed) = self
+            .backend
+            .execute(spec, args)
+            .with_context(|| format!("executing {name}"))?;
+        if outs.len() != spec.outputs.len() {
+            bail!(
+                "{name}: got {} outputs, manifest says {}",
+                outs.len(),
+                spec.outputs.len()
+            );
         }
         let mut t = self.timings.borrow_mut();
         let e = t.entry(name.to_string()).or_insert((0, 0.0));
@@ -168,39 +204,89 @@ impl Runtime {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform()
     }
 }
 
-fn to_buffer(client: &xla::PjRtClient, arg: &Arg, spec: &ArgSpec) -> Result<xla::PjRtBuffer> {
-    match (arg, spec.dtype) {
-        (Arg::F32(t), Dtype::F32) => {
-            if t.dims != spec.dims {
-                bail!("input '{}' dims {:?} != manifest {:?}", spec.name, t.dims, spec.dims);
-            }
-            Ok(client.buffer_from_host_buffer(&t.data, &spec.dims, None)?)
-        }
-        (Arg::I32(v), Dtype::I32) => {
-            let n: usize = spec.dims.iter().product();
-            if v.len() != n {
-                bail!("input '{}' len {} != manifest {:?}", spec.name, v.len(), spec.dims);
-            }
-            Ok(client.buffer_from_host_buffer(v, &spec.dims, None)?)
-        }
-        _ => bail!("input '{}': dtype mismatch", spec.name),
+/// Validate argument count, dtypes, and exact dims against the manifest.
+fn check_args(spec: &ExecSpec, args: &[Arg]) -> Result<()> {
+    if args.len() != spec.inputs.len() {
+        bail!(
+            "{}: got {} args, manifest says {}",
+            spec.name,
+            args.len(),
+            spec.inputs.len()
+        );
     }
+    for (arg, s) in args.iter().zip(&spec.inputs) {
+        match (arg, s.dtype) {
+            (Arg::F32(t), Dtype::F32) => {
+                if t.dims != s.dims {
+                    bail!(
+                        "{}: input '{}' dims {:?} != manifest {:?}",
+                        spec.name,
+                        s.name,
+                        t.dims,
+                        s.dims
+                    );
+                }
+            }
+            (Arg::I32(v), Dtype::I32) => {
+                let n: usize = s.dims.iter().product();
+                if v.len() != n {
+                    bail!(
+                        "{}: input '{}' len {} != manifest {:?}",
+                        spec.name,
+                        s.name,
+                        v.len(),
+                        s.dims
+                    );
+                }
+            }
+            _ => bail!("{}: input '{}': dtype mismatch", spec.name, s.name),
+        }
+    }
+    Ok(())
 }
 
-fn from_literal(lit: xla::Literal, spec: &ArgSpec) -> Result<Out> {
-    match spec.dtype {
-        Dtype::F32 => {
-            let data = lit.to_vec::<f32>()?;
-            let dims = if spec.dims.is_empty() { vec![1] } else { spec.dims.clone() };
-            if data.len() != dims.iter().product::<usize>() {
-                bail!("output '{}': {} elems, expected {:?}", spec.name, data.len(), spec.dims);
-            }
-            Ok(Out::F32(Tensor::from_vec(&dims, data)))
-        }
-        Dtype::I32 => Ok(Out::I32(lit.to_vec::<i32>()?)),
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_runtime_synthesizes_and_validates() {
+        let rt = Runtime::native_for("vit-tiny").unwrap();
+        assert_eq!(rt.platform(), "native-cpu");
+        let m = rt.manifest.model.clone();
+        // wrong dims rejected
+        let bad = Tensor::zeros(&[1, 2, 3]);
+        let z = Tensor::zeros(&[1]);
+        assert!(rt
+            .call("embed_fwd", &[Arg::F32(&bad), Arg::F32(&z), Arg::F32(&z), Arg::F32(&z)])
+            .is_err());
+        // wrong arity rejected
+        assert!(rt.call("embed_fwd", &[Arg::F32(&bad)]).is_err());
+        // unknown name rejected
+        let x = Tensor::zeros(&[m.bs, m.seq, m.hs]);
+        assert!(rt.call("nope", &[Arg::F32(&x)]).is_err());
+    }
+
+    #[test]
+    fn warmup_is_ok_for_known_and_err_for_unknown() {
+        let rt = Runtime::native_for("vit-tiny").unwrap();
+        assert!(rt.warmup(&["embed_fwd", "attn_fwd_g00"]).is_ok());
+        assert!(rt.warmup(&["bogus"]).is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_backend_unavailable_without_feature() {
+        let e = Runtime::open(
+            Path::new("artifacts/vit-tiny"),
+            "vit-tiny",
+            BackendKind::Pjrt,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("pjrt"));
     }
 }

@@ -1,0 +1,54 @@
+//! The pure-Rust native execution backend.
+//!
+//! Implements every executable role of the artifact manifest directly on
+//! [`crate::tensor::Tensor`] buffers — no Python, no XLA, no artifacts on
+//! disk.  The manifest is synthesized from the model presets
+//! ([`crate::runtime::presets`]) when `artifacts/<model>/` is absent, so
+//! `flextp train --model vit-tiny --strategy semi` runs from a clean
+//! checkout with nothing but `cargo`.
+//!
+//! Numerics are pinned to the JAX programs the PJRT backend executes (see
+//! [`vit`] and [`ops`]); GEMMs go through the blocked kernels in
+//! [`crate::tensor::linalg`], so measured per-call wall time scales with
+//! the arithmetic a pruning bucket actually performs — which is what makes
+//! ZERO-resizing/migration bench timings meaningful on this backend.
+//! `execute` measures its own kernel-body wall time (the compute charge);
+//! the ×χ straggler skew is applied by the trainer when charging it to
+//! the rank's `SimClock`.
+
+pub mod ops;
+pub mod vit;
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::manifest::{ExecSpec, Manifest, ModelInfo};
+use super::{Arg, Backend, Out};
+
+/// Stateless native executor for one model's manifest.
+pub struct NativeBackend {
+    model: ModelInfo,
+}
+
+impl NativeBackend {
+    pub fn new(manifest: &Manifest) -> NativeBackend {
+        NativeBackend { model: manifest.model.clone() }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn execute(&self, spec: &ExecSpec, args: &[Arg]) -> Result<(Vec<Out>, f64)> {
+        let t0 = Instant::now();
+        let outs = vit::execute(&self.model, spec, args)?;
+        Ok((outs, t0.elapsed().as_secs_f64()))
+    }
+
+    fn prepare(&self, _spec: &ExecSpec) -> Result<()> {
+        Ok(()) // nothing to compile
+    }
+
+    fn platform(&self) -> String {
+        "native-cpu".to_string()
+    }
+}

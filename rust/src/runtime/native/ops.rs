@@ -1,0 +1,456 @@
+//! Numeric primitives shared by the native executable implementations:
+//! layernorm forward/backward, tanh-approximate GELU, row softmax /
+//! log-softmax, and the pruned-GEMM gather/scatter dataflows of Eq. (1).
+//!
+//! Semantics are pinned to the JAX definitions in
+//! `python/compile/model.py` and `python/compile/kernels/` — same ε, same
+//! GELU constants, same zero-imputed scatter-ADD backward — so a PJRT
+//! build and a native build of the same executable agree to f32 rounding.
+
+use crate::tensor::linalg;
+
+/// LayerNorm ε (matches `model.layernorm`).
+pub const LN_EPS: f32 = 1e-5;
+
+/// √(2/π) for the tanh-approximate GELU (shortest f32 round-trip).
+pub const SQRT_2_OVER_PI: f32 = 0.797_884_6;
+
+const GELU_C: f32 = 0.044_715;
+
+/// Per-row layernorm residuals needed by the backward pass.
+pub struct LnCache {
+    /// normalized activations x̂ = (x − μ)·rstd, `[rows·cols]`
+    pub xhat: Vec<f32>,
+    /// 1/√(var + ε) per row
+    pub rstd: Vec<f32>,
+}
+
+/// Row-wise layernorm: `y = x̂·g + b` over the last dimension.
+pub fn layernorm(x: &[f32], g: &[f32], b: &[f32], rows: usize, cols: usize) -> (Vec<f32>, LnCache) {
+    debug_assert_eq!(x.len(), rows * cols);
+    debug_assert_eq!(g.len(), cols);
+    debug_assert_eq!(b.len(), cols);
+    let mut y = vec![0.0f32; rows * cols];
+    let mut xhat = vec![0.0f32; rows * cols];
+    let mut rstd = vec![0.0f32; rows];
+    for i in 0..rows {
+        let xr = &x[i * cols..(i + 1) * cols];
+        let mut mu = 0.0f32;
+        for &v in xr {
+            mu += v;
+        }
+        mu /= cols as f32;
+        let mut var = 0.0f32;
+        for &v in xr {
+            let d = v - mu;
+            var += d * d;
+        }
+        var /= cols as f32;
+        let rs = 1.0 / (var + LN_EPS).sqrt();
+        rstd[i] = rs;
+        let xh = &mut xhat[i * cols..(i + 1) * cols];
+        let yr = &mut y[i * cols..(i + 1) * cols];
+        for j in 0..cols {
+            let h = (xr[j] - mu) * rs;
+            xh[j] = h;
+            yr[j] = h * g[j] + b[j];
+        }
+    }
+    (y, LnCache { xhat, rstd })
+}
+
+/// Layernorm backward: given `dy` w.r.t. the LN output, produce
+/// `(dx, dg, db)`.  Standard vjp of `y = x̂·g + b` with x̂ recomputed from
+/// the cache:  dx = rstd·(dx̂ − mean(dx̂) − x̂·mean(dx̂·x̂)).
+pub fn layernorm_bwd(
+    dy: &[f32],
+    cache: &LnCache,
+    g: &[f32],
+    rows: usize,
+    cols: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(dy.len(), rows * cols);
+    let mut dx = vec![0.0f32; rows * cols];
+    let mut dg = vec![0.0f32; cols];
+    let mut db = vec![0.0f32; cols];
+    let mut dxhat = vec![0.0f32; cols];
+    for i in 0..rows {
+        let dyr = &dy[i * cols..(i + 1) * cols];
+        let xh = &cache.xhat[i * cols..(i + 1) * cols];
+        let mut m1 = 0.0f32;
+        let mut m2 = 0.0f32;
+        for j in 0..cols {
+            let dh = dyr[j] * g[j];
+            dxhat[j] = dh;
+            m1 += dh;
+            m2 += dh * xh[j];
+            dg[j] += dyr[j] * xh[j];
+            db[j] += dyr[j];
+        }
+        m1 /= cols as f32;
+        m2 /= cols as f32;
+        let rs = cache.rstd[i];
+        let dxr = &mut dx[i * cols..(i + 1) * cols];
+        for j in 0..cols {
+            dxr[j] = rs * (dxhat[j] - m1 - xh[j] * m2);
+        }
+    }
+    (dx, dg, db)
+}
+
+/// Tanh-approximate GELU (`jax.nn.gelu(·, approximate=True)`).
+pub fn gelu(x: f32) -> f32 {
+    let u = SQRT_2_OVER_PI * (x + GELU_C * x * x * x);
+    0.5 * x * (1.0 + u.tanh())
+}
+
+/// Derivative of [`gelu`].
+pub fn gelu_grad(x: f32) -> f32 {
+    let x2 = x * x;
+    let u = SQRT_2_OVER_PI * (x + GELU_C * x * x2);
+    let t = u.tanh();
+    let sech2 = 1.0 - t * t;
+    0.5 * (1.0 + t) + 0.5 * x * sech2 * SQRT_2_OVER_PI * (1.0 + 3.0 * GELU_C * x2)
+}
+
+/// In-place row softmax with max subtraction.
+pub fn softmax_rows(a: &mut [f32], rows: usize, cols: usize) {
+    debug_assert_eq!(a.len(), rows * cols);
+    for i in 0..rows {
+        let row = &mut a[i * cols..(i + 1) * cols];
+        let mut mx = f32::NEG_INFINITY;
+        for &v in row.iter() {
+            mx = mx.max(v);
+        }
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Row log-softmax (returns a new buffer).
+pub fn log_softmax_rows(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), rows * cols);
+    let mut out = vec![0.0f32; rows * cols];
+    for i in 0..rows {
+        let row = &a[i * cols..(i + 1) * cols];
+        let mut mx = f32::NEG_INFINITY;
+        for &v in row {
+            mx = mx.max(v);
+        }
+        let mut sum = 0.0f32;
+        for &v in row {
+            sum += (v - mx).exp();
+        }
+        let lse = mx + sum.ln();
+        let o = &mut out[i * cols..(i + 1) * cols];
+        for j in 0..cols {
+            o[j] = row[j] - lse;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Pruned-GEMM dataflows (kernel contract of python/compile/kernels/)
+// ---------------------------------------------------------------------------
+
+/// Gather + mask the kept contraction columns of `x [rows, kfull]` into a
+/// compact `[rows, idx.len()]` buffer: `x[:, idx] * mask`.
+pub fn gather_cols_masked(
+    x: &[f32],
+    rows: usize,
+    kfull: usize,
+    idx: &[i32],
+    mask: &[f32],
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows * kfull);
+    debug_assert_eq!(idx.len(), mask.len());
+    let kp = idx.len();
+    let mut out = vec![0.0f32; rows * kp];
+    for i in 0..rows {
+        let row = &x[i * kfull..(i + 1) * kfull];
+        let o = &mut out[i * kp..(i + 1) * kp];
+        for (j, (&ix, &mv)) in idx.iter().zip(mask).enumerate() {
+            o[j] = row[ix as usize] * mv;
+        }
+    }
+    out
+}
+
+/// Gather the kept contraction rows of `w [kfull, n]` → `[idx.len(), n]`.
+pub fn gather_rows(w: &[f32], kfull: usize, n: usize, idx: &[i32]) -> Vec<f32> {
+    debug_assert_eq!(w.len(), kfull * n);
+    let mut out = vec![0.0f32; idx.len() * n];
+    for (j, &ix) in idx.iter().enumerate() {
+        out[j * n..(j + 1) * n].copy_from_slice(&w[ix as usize * n..(ix as usize + 1) * n]);
+    }
+    out
+}
+
+/// Scatter-ADD compact columns `src [rows, idx.len()]` into
+/// `dst [rows, kfull]` at the kept positions (zero-imputed grad_input of
+/// paper Fig. 2; ADD so mask-padded duplicate indices stay exact).
+pub fn scatter_add_cols(dst: &mut [f32], rows: usize, kfull: usize, idx: &[i32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), rows * kfull);
+    debug_assert_eq!(src.len(), rows * idx.len());
+    let kp = idx.len();
+    for i in 0..rows {
+        let s = &src[i * kp..(i + 1) * kp];
+        let d = &mut dst[i * kfull..(i + 1) * kfull];
+        for (j, &ix) in idx.iter().enumerate() {
+            d[ix as usize] += s[j];
+        }
+    }
+}
+
+/// Scatter-ADD compact rows `src [idx.len(), n]` into `dst [kfull, n]`
+/// (zero-imputed grad_weight of paper Fig. 2, right).
+pub fn scatter_add_rows(dst: &mut [f32], kfull: usize, n: usize, idx: &[i32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), kfull * n);
+    debug_assert_eq!(src.len(), idx.len() * n);
+    for (j, &ix) in idx.iter().enumerate() {
+        let d = &mut dst[ix as usize * n..(ix as usize + 1) * n];
+        for (dv, sv) in d.iter_mut().zip(&src[j * n..(j + 1) * n]) {
+            *dv += sv;
+        }
+    }
+}
+
+/// Whether `(idx, mask)` selects the whole contraction unchanged — the
+/// common g00 case, which skips the gather entirely.
+pub fn is_identity_keep(kfull: usize, idx: &[i32], mask: &[f32]) -> bool {
+    idx.len() == kfull
+        && idx.iter().enumerate().all(|(j, &ix)| ix as usize == j)
+        && mask.iter().all(|&m| m == 1.0)
+}
+
+/// The Layer-1 kernel contract:
+/// `pruned_matmul(x[rows,kfull], w[kfull,n], idx, mask) =
+///  (x[:,idx]·mask) @ w[idx,:]`.
+pub fn pruned_matmul(
+    x: &[f32],
+    w: &[f32],
+    rows: usize,
+    kfull: usize,
+    n: usize,
+    idx: &[i32],
+    mask: &[f32],
+) -> Vec<f32> {
+    if is_identity_keep(kfull, idx, mask) {
+        return linalg::matmul(x, w, rows, kfull, n);
+    }
+    let xg = gather_cols_masked(x, rows, kfull, idx, mask);
+    let wg = gather_rows(w, kfull, n, idx);
+    linalg::matmul(&xg, &wg, rows, idx.len(), n)
+}
+
+/// Backward of [`pruned_matmul`] w.r.t. its dense inputs, both
+/// zero-imputed into full shapes:
+/// `dx[:,idx] += (dy @ w[idx,:]ᵀ)·mask`, `dw[idx,:] += (x[:,idx]·mask)ᵀ @ dy`.
+pub fn pruned_matmul_bwd(
+    x: &[f32],
+    w: &[f32],
+    dy: &[f32],
+    rows: usize,
+    kfull: usize,
+    n: usize,
+    idx: &[i32],
+    mask: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let kp = idx.len();
+    let wg = gather_rows(w, kfull, n, idx);
+    let mut dxc = linalg::matmul_a_bt(dy, &wg, rows, n, kp);
+    for i in 0..rows {
+        let row = &mut dxc[i * kp..(i + 1) * kp];
+        for (v, &mv) in row.iter_mut().zip(mask) {
+            *v *= mv;
+        }
+    }
+    let mut dx = vec![0.0f32; rows * kfull];
+    scatter_add_cols(&mut dx, rows, kfull, idx, &dxc);
+
+    let xg = gather_cols_masked(x, rows, kfull, idx, mask);
+    let dwc = linalg::matmul_at_b(&xg, dy, rows, kp, n);
+    let mut dw = vec![0.0f32; kfull * n];
+    scatter_add_rows(&mut dw, kfull, n, idx, &dwc);
+    (dx, dw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn fd_scalar<F: FnMut(f32) -> f32>(mut f: F, x: f32, eps: f32) -> f32 {
+        (f(x + eps) - f(x - eps)) / (2.0 * eps)
+    }
+
+    #[test]
+    fn gelu_matches_known_values_and_grad() {
+        // gelu(0)=0, gelu(large)≈x, gelu(-large)≈0
+        assert!(gelu(0.0).abs() < 1e-7);
+        assert!((gelu(10.0) - 10.0).abs() < 1e-4);
+        assert!(gelu(-10.0).abs() < 1e-4);
+        for &x in &[-2.0f32, -0.7, -0.1, 0.0, 0.3, 1.5, 3.0] {
+            let fd = fd_scalar(gelu, x, 1e-3);
+            assert!((gelu_grad(x) - fd).abs() < 1e-3, "x={x}: {} vs {fd}", gelu_grad(x));
+        }
+    }
+
+    #[test]
+    fn layernorm_rows_are_normalized() {
+        let mut rng = Rng::new(3);
+        let (rows, cols) = (5, 16);
+        let x = rng.normal_vec(rows * cols, 2.0);
+        let g = vec![1.0; cols];
+        let b = vec![0.0; cols];
+        let (y, cache) = layernorm(&x, &g, &b, rows, cols);
+        for i in 0..rows {
+            let row = &y[i * cols..(i + 1) * cols];
+            let mu: f32 = row.iter().sum::<f32>() / cols as f32;
+            let var: f32 = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / cols as f32;
+            assert!(mu.abs() < 1e-4, "row {i} mean {mu}");
+            assert!((var - 1.0).abs() < 1e-2, "row {i} var {var}");
+            assert!(cache.rstd[i] > 0.0);
+        }
+    }
+
+    #[test]
+    fn layernorm_bwd_matches_finite_differences() {
+        let mut rng = Rng::new(11);
+        let (rows, cols) = (3, 8);
+        let x = rng.normal_vec(rows * cols, 1.0);
+        let g = rng.normal_vec(cols, 0.5);
+        let b = rng.normal_vec(cols, 0.5);
+        let r = rng.normal_vec(rows * cols, 1.0); // cotangent
+        let phi = |xv: &[f32], gv: &[f32], bv: &[f32]| -> f64 {
+            let (y, _) = layernorm(xv, gv, bv, rows, cols);
+            y.iter().zip(&r).map(|(a, c)| (*a as f64) * (*c as f64)).sum()
+        };
+        let (dx, dg, db) = layernorm_bwd(&r, &layernorm(&x, &g, &b, rows, cols).1, &g, rows, cols);
+        let eps = 1e-2f32;
+        for probe in 0..6 {
+            let i = rng.below(rows * cols);
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let fd = (phi(&xp, &g, &b) - phi(&xm, &g, &b)) / (2.0 * eps as f64);
+            assert!(
+                (dx[i] as f64 - fd).abs() < 2e-2 * fd.abs().max(1.0),
+                "probe {probe} dx[{i}]: {} vs {fd}",
+                dx[i]
+            );
+        }
+        for j in 0..cols {
+            let mut gp = g.clone();
+            gp[j] += eps;
+            let mut gm = g.clone();
+            gm[j] -= eps;
+            let fd = (phi(&x, &gp, &b) - phi(&x, &gm, &b)) / (2.0 * eps as f64);
+            assert!((dg[j] as f64 - fd).abs() < 2e-2 * fd.abs().max(1.0), "dg[{j}]");
+            let mut bp = b.clone();
+            bp[j] += eps;
+            let mut bm = b.clone();
+            bm[j] -= eps;
+            let fd = (phi(&x, &g, &bp) - phi(&x, &g, &bm)) / (2.0 * eps as f64);
+            assert!((db[j] as f64 - fd).abs() < 2e-2 * fd.abs().max(1.0), "db[{j}]");
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one_and_log_softmax_agrees() {
+        let mut rng = Rng::new(5);
+        let (rows, cols) = (4, 9);
+        let a = rng.normal_vec(rows * cols, 3.0);
+        let mut sm = a.clone();
+        softmax_rows(&mut sm, rows, cols);
+        let lsm = log_softmax_rows(&a, rows, cols);
+        for i in 0..rows {
+            let s: f32 = sm[i * cols..(i + 1) * cols].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        for (p, lp) in sm.iter().zip(&lsm) {
+            assert!((p.ln() - lp).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn pruned_matmul_equals_dense_on_identity_keep() {
+        let mut rng = Rng::new(8);
+        let (m, k, n) = (6, 16, 10);
+        let x = rng.normal_vec(m * k, 1.0);
+        let w = rng.normal_vec(k * n, 1.0);
+        let idx: Vec<i32> = (0..k as i32).collect();
+        let mask = vec![1.0f32; k];
+        let a = pruned_matmul(&x, &w, m, k, n, &idx, &mask);
+        let b = linalg::matmul(&x, &w, m, k, n);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pruned_matmul_drops_masked_and_unkept_columns() {
+        let mut rng = Rng::new(13);
+        let (m, k, n) = (4, 12, 7);
+        let x = rng.normal_vec(m * k, 1.0);
+        let w = rng.normal_vec(k * n, 1.0);
+        let idx = [0i32, 3, 5, 5]; // duplicate padded index …
+        let mask = [1.0f32, 1.0, 1.0, 0.0]; // … zeroed by the mask
+        let got = pruned_matmul(&x, &w, m, k, n, &idx, &mask);
+        // oracle: zero out everything but columns {0,3,5} then dense matmul
+        let mut xz = vec![0.0f32; m * k];
+        for i in 0..m {
+            for &j in &[0usize, 3, 5] {
+                xz[i * k + j] = x[i * k + j];
+            }
+        }
+        let want = linalg::matmul(&xz, &w, m, k, n);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn pruned_matmul_bwd_zero_imputes_and_matches_fd() {
+        let mut rng = Rng::new(17);
+        let (m, k, n) = (3, 10, 5);
+        let x = rng.normal_vec(m * k, 1.0);
+        let w = rng.normal_vec(k * n, 1.0);
+        let idx = [1i32, 4, 7, 8];
+        let mask = [1.0f32; 4];
+        let r = rng.normal_vec(m * n, 1.0);
+        let (dx, dw) = pruned_matmul_bwd(&x, &w, &r, m, k, n, &idx, &mask);
+        // pruned rows/cols are exactly zero
+        for i in 0..m {
+            for j in [0usize, 2, 3, 5, 6, 9] {
+                assert_eq!(dx[i * k + j], 0.0);
+            }
+        }
+        for j in [0usize, 2, 3, 5, 6, 9] {
+            assert!(dw[j * n..(j + 1) * n].iter().all(|&v| v == 0.0));
+        }
+        // FD on a kept weight entry
+        let phi = |wv: &[f32]| -> f64 {
+            pruned_matmul(&x, wv, m, k, n, &idx, &mask)
+                .iter()
+                .zip(&r)
+                .map(|(a, c)| (*a as f64) * (*c as f64))
+                .sum()
+        };
+        let eps = 1e-2f32;
+        let target = 4 * n + 2; // w[4, 2], kept
+        let mut wp = w.clone();
+        wp[target] += eps;
+        let mut wm = w.clone();
+        wm[target] -= eps;
+        let fd = (phi(&wp) - phi(&wm)) / (2.0 * eps as f64);
+        assert!((dw[target] as f64 - fd).abs() < 2e-2 * fd.abs().max(1.0));
+    }
+}

@@ -1,0 +1,647 @@
+//! Native implementations of every executable role in the manifest.
+//!
+//! Each function reproduces, on [`crate::tensor::Tensor`] buffers, the
+//! exact math of the corresponding JAX shard program in
+//! `python/compile/model.py` — same layernorm ε, tanh-approximate GELU,
+//! softmax attention, pruned-GEMM contraction semantics (Eq. 1), and the
+//! same zero-imputed backward scatters as the Pallas kernel's custom vjp.
+//! Backward roles rematerialize their forward internally (the remat
+//! structure of `build_attn_bwd`/`build_mlp_bwd`), so call signatures stay
+//! identical to the AOT artifacts and the trainer cannot tell the
+//! backends apart.
+
+use anyhow::{bail, Result};
+
+use super::ops;
+use crate::runtime::manifest::{ExecSpec, ModelInfo};
+use crate::runtime::{Arg, Out};
+use crate::tensor::{linalg, Tensor};
+
+/// Dispatch one validated call to its role implementation.
+pub fn execute(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
+    match spec.role.as_str() {
+        "embed_fwd" => embed_fwd(m, spec, args),
+        "embed_bwd" => embed_bwd(m, spec, args),
+        "attn_fwd" => attn_fwd(m, spec, args),
+        "attn_bwd" => attn_bwd(m, spec, args),
+        "mlp_fwd" => mlp_fwd(m, spec, args),
+        "mlp_bwd" => mlp_bwd(m, spec, args),
+        "head_fwdbwd" => head_fwdbwd(m, spec, args),
+        "head_infer" => head_infer(m, spec, args),
+        "mlp_mig_fwd" => mlp_mig_fwd(m, spec, args),
+        "mlp_mig_bwd" => mlp_mig_bwd(m, spec, args),
+        other => bail!(
+            "native backend: unknown role '{other}' for executable '{}'",
+            spec.name
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// argument / output plumbing
+// ---------------------------------------------------------------------------
+
+fn f32_arg<'a>(args: &'a [Arg<'a>], i: usize) -> Result<&'a Tensor> {
+    match args.get(i) {
+        Some(Arg::F32(t)) => Ok(t),
+        _ => bail!("native backend: expected f32 argument {i}"),
+    }
+}
+
+fn i32_arg<'a>(args: &'a [Arg<'a>], i: usize) -> Result<&'a [i32]> {
+    match args.get(i) {
+        Some(Arg::I32(v)) => Ok(v),
+        _ => bail!("native backend: expected i32 argument {i}"),
+    }
+}
+
+/// Reject out-of-range keep indices up front: `check_args` can only see
+/// flattened lengths, and a bad index would otherwise abort with a
+/// slice-bounds panic instead of the contract's `Err`.
+fn check_idx(idx: &[i32], bound: usize, what: &str) -> Result<()> {
+    for &ix in idx {
+        if ix < 0 || ix as usize >= bound {
+            bail!("keep index {ix} out of range for {what} (size {bound})");
+        }
+    }
+    Ok(())
+}
+
+/// Wrap a buffer in the spec's declared output shape (scalars become `[1]`,
+/// the same normalization the PJRT literal path applies).
+fn out_f32(spec: &ExecSpec, i: usize, data: Vec<f32>) -> Out {
+    let dims = &spec.outputs[i].dims;
+    let dims = if dims.is_empty() { vec![1] } else { dims.clone() };
+    Out::F32(Tensor::from_vec(&dims, data))
+}
+
+// ---------------------------------------------------------------------------
+// embed
+// ---------------------------------------------------------------------------
+
+fn embed_fwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
+    let patches = f32_arg(args, 0)?;
+    let w_patch = f32_arg(args, 1)?;
+    let pos = f32_arg(args, 2)?;
+    let cls = f32_arg(args, 3)?;
+    let (b, s0, pd, s, hs) = (m.bs, m.seq0, m.pd, m.seq, m.hs);
+    let tok = linalg::matmul(&patches.data, &w_patch.data, b * s0, pd, hs);
+    let mut x = vec![0.0f32; b * s * hs];
+    for bi in 0..b {
+        let base = bi * s * hs;
+        for j in 0..hs {
+            x[base + j] = cls.data[j] + pos.data[j];
+        }
+        for t in 0..s0 {
+            let dst = base + (1 + t) * hs;
+            let src = (bi * s0 + t) * hs;
+            let prow = &pos.data[(1 + t) * hs..(2 + t) * hs];
+            for j in 0..hs {
+                x[dst + j] = tok[src + j] + prow[j];
+            }
+        }
+    }
+    Ok(vec![out_f32(spec, 0, x)])
+}
+
+fn embed_bwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
+    let patches = f32_arg(args, 0)?;
+    let dy = f32_arg(args, 4)?;
+    let (b, s0, pd, s, hs) = (m.bs, m.seq0, m.pd, m.seq, m.hs);
+    let mut dcls = vec![0.0f32; hs];
+    let mut dpos = vec![0.0f32; s * hs];
+    let mut dtok = vec![0.0f32; b * s0 * hs];
+    for bi in 0..b {
+        let base = bi * s * hs;
+        for t in 0..s {
+            let dyr = &dy.data[base + t * hs..base + (t + 1) * hs];
+            let dp = &mut dpos[t * hs..(t + 1) * hs];
+            for j in 0..hs {
+                dp[j] += dyr[j];
+            }
+            if t == 0 {
+                for j in 0..hs {
+                    dcls[j] += dyr[j];
+                }
+            } else {
+                dtok[(bi * s0 + t - 1) * hs..(bi * s0 + t) * hs].copy_from_slice(dyr);
+            }
+        }
+    }
+    let dw_patch = linalg::matmul_at_b(&patches.data, &dtok, b * s0, pd, hs);
+    Ok(vec![
+        out_f32(spec, 0, dw_patch),
+        out_f32(spec, 1, dpos),
+        out_f32(spec, 2, dcls),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// attention branch
+// ---------------------------------------------------------------------------
+
+struct AttnCore {
+    xln: Vec<f32>,
+    cache: ops::LnCache,
+    qkv: Vec<f32>,
+    /// softmaxed attention per (batch, head): `[b·hl, s·s]`
+    att: Vec<f32>,
+    /// merged head outputs `[b·s, hsl]`
+    o: Vec<f32>,
+}
+
+/// Copy one (batch, head)'s q/k/v `[s, hd]` panels out of the packed
+/// `[b·s, 3·hsl]` qkv buffer (token layout `[3, hl, hd]`).
+fn gather_qkv(
+    qkv: &[f32],
+    bi: usize,
+    h: usize,
+    s: usize,
+    hd: usize,
+    hsl: usize,
+    q: &mut [f32],
+    k: &mut [f32],
+    v: &mut [f32],
+) {
+    for t in 0..s {
+        let base = (bi * s + t) * 3 * hsl;
+        let oq = base + h * hd;
+        let ok = base + hsl + h * hd;
+        let ov = base + 2 * hsl + h * hd;
+        q[t * hd..(t + 1) * hd].copy_from_slice(&qkv[oq..oq + hd]);
+        k[t * hd..(t + 1) * hd].copy_from_slice(&qkv[ok..ok + hd]);
+        v[t * hd..(t + 1) * hd].copy_from_slice(&qkv[ov..ov + hd]);
+    }
+}
+
+fn attn_forward(
+    m: &ModelInfo,
+    x: &[f32],
+    ln_g: &[f32],
+    ln_b: &[f32],
+    wqkv: &[f32],
+    idx: &[i32],
+    mask: &[f32],
+) -> AttnCore {
+    let (b, s, hs, hl, hd, hsl) = (m.bs, m.seq, m.hs, m.hl, m.hd, m.hsl);
+    let rows = b * s;
+    let (xln, cache) = ops::layernorm(x, ln_g, ln_b, rows, hs);
+    let qkv = ops::pruned_matmul(&xln, wqkv, rows, hs, 3 * hsl, idx, mask);
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut att = vec![0.0f32; b * hl * s * s];
+    let mut o = vec![0.0f32; rows * hsl];
+    let mut q = vec![0.0f32; s * hd];
+    let mut k = vec![0.0f32; s * hd];
+    let mut v = vec![0.0f32; s * hd];
+    for bi in 0..b {
+        for h in 0..hl {
+            gather_qkv(&qkv, bi, h, s, hd, hsl, &mut q, &mut k, &mut v);
+            let mut a = linalg::matmul_a_bt(&q, &k, s, hd, s);
+            for av in &mut a {
+                *av *= scale;
+            }
+            ops::softmax_rows(&mut a, s, s);
+            let oh = linalg::matmul(&a, &v, s, s, hd);
+            let ab = (bi * hl + h) * s * s;
+            att[ab..ab + s * s].copy_from_slice(&a);
+            for t in 0..s {
+                let dst = (bi * s + t) * hsl + h * hd;
+                o[dst..dst + hd].copy_from_slice(&oh[t * hd..(t + 1) * hd]);
+            }
+        }
+    }
+    AttnCore { xln, cache, qkv, att, o }
+}
+
+fn attn_fwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
+    let x = f32_arg(args, 0)?;
+    let ln_g = f32_arg(args, 1)?;
+    let ln_b = f32_arg(args, 2)?;
+    let wqkv = f32_arg(args, 3)?;
+    let wo = f32_arg(args, 4)?;
+    let idx = i32_arg(args, 5)?;
+    let mask = f32_arg(args, 6)?;
+    check_idx(idx, m.hs, "attn qkv contraction")?;
+    let rows = m.bs * m.seq;
+    let core = attn_forward(m, &x.data, &ln_g.data, &ln_b.data, &wqkv.data, idx, &mask.data);
+    let y = linalg::matmul(&core.o, &wo.data, rows, m.hsl, m.hs);
+    Ok(vec![out_f32(spec, 0, y)])
+}
+
+fn attn_bwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
+    let x = f32_arg(args, 0)?;
+    let ln_g = f32_arg(args, 1)?;
+    let ln_b = f32_arg(args, 2)?;
+    let wqkv = f32_arg(args, 3)?;
+    let wo = f32_arg(args, 4)?;
+    let idx = i32_arg(args, 5)?;
+    let mask = f32_arg(args, 6)?;
+    let dy = f32_arg(args, 7)?;
+    check_idx(idx, m.hs, "attn qkv contraction")?;
+    let (b, s, hs, hl, hd, hsl) = (m.bs, m.seq, m.hs, m.hl, m.hd, m.hsl);
+    let rows = b * s;
+    let scale = 1.0 / (hd as f32).sqrt();
+
+    // rematerialized forward
+    let core = attn_forward(m, &x.data, &ln_g.data, &ln_b.data, &wqkv.data, idx, &mask.data);
+
+    // y = o @ wo
+    let do_ = linalg::matmul_a_bt(&dy.data, &wo.data, rows, hs, hsl);
+    let dwo = linalg::matmul_at_b(&core.o, &dy.data, rows, hsl, hs);
+
+    // per-head attention backward into dqkv
+    let mut dqkv = vec![0.0f32; rows * 3 * hsl];
+    let mut q = vec![0.0f32; s * hd];
+    let mut k = vec![0.0f32; s * hd];
+    let mut v = vec![0.0f32; s * hd];
+    let mut doh = vec![0.0f32; s * hd];
+    let mut dpre = vec![0.0f32; s * s];
+    for bi in 0..b {
+        for h in 0..hl {
+            gather_qkv(&core.qkv, bi, h, s, hd, hsl, &mut q, &mut k, &mut v);
+            for t in 0..s {
+                let src = (bi * s + t) * hsl + h * hd;
+                doh[t * hd..(t + 1) * hd].copy_from_slice(&do_[src..src + hd]);
+            }
+            let ab = (bi * hl + h) * s * s;
+            let a = &core.att[ab..ab + s * s];
+            // o = att @ v
+            let dv = linalg::matmul_at_b(a, &doh, s, s, hd);
+            let datt = linalg::matmul_a_bt(&doh, &v, s, hd, s);
+            // softmax backward: dpre = att ⊙ (datt − ⟨datt, att⟩_row)
+            for t in 0..s {
+                let ar = &a[t * s..(t + 1) * s];
+                let dr = &datt[t * s..(t + 1) * s];
+                let inner = linalg::dot(ar, dr);
+                let dp = &mut dpre[t * s..(t + 1) * s];
+                for j in 0..s {
+                    dp[j] = ar[j] * (dr[j] - inner);
+                }
+            }
+            for dv_ in &mut dpre {
+                *dv_ *= scale;
+            }
+            let dq = linalg::matmul(&dpre, &k, s, s, hd);
+            let dk = linalg::matmul_at_b(&dpre, &q, s, s, hd);
+            for t in 0..s {
+                let base = (bi * s + t) * 3 * hsl;
+                dqkv[base + h * hd..base + h * hd + hd]
+                    .copy_from_slice(&dq[t * hd..(t + 1) * hd]);
+                dqkv[base + hsl + h * hd..base + hsl + h * hd + hd]
+                    .copy_from_slice(&dk[t * hd..(t + 1) * hd]);
+                dqkv[base + 2 * hsl + h * hd..base + 2 * hsl + h * hd + hd]
+                    .copy_from_slice(&dv[t * hd..(t + 1) * hd]);
+            }
+        }
+    }
+
+    // pruned-GEMM backward (zero-imputed), then layernorm backward
+    let (dxln, dwqkv) =
+        ops::pruned_matmul_bwd(&core.xln, &wqkv.data, &dqkv, rows, hs, 3 * hsl, idx, &mask.data);
+    let (dx, dg, db) = ops::layernorm_bwd(&dxln, &core.cache, &ln_g.data, rows, hs);
+    Ok(vec![
+        out_f32(spec, 0, dx),
+        out_f32(spec, 1, dg),
+        out_f32(spec, 2, db),
+        out_f32(spec, 3, dwqkv),
+        out_f32(spec, 4, dwo),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// FFN branch
+// ---------------------------------------------------------------------------
+
+struct MlpCore {
+    xln: Vec<f32>,
+    cache: ops::LnCache,
+    /// co-pruned FC1 weight `w1[:, idx2]·mask2`, `[hs, k2]`
+    w1g: Vec<f32>,
+    /// pre-GELU activations `[rows, k2]`
+    h: Vec<f32>,
+    /// post-GELU activations `[rows, k2]`
+    hg: Vec<f32>,
+    /// pruned FC2 weight `w2[idx2,:]·mask2`, `[k2, hs]`
+    w2g: Vec<f32>,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn mlp_forward(
+    m: &ModelInfo,
+    x: &[f32],
+    ln_g: &[f32],
+    ln_b: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    idx1: &[i32],
+    mask1: &[f32],
+    idx2: &[i32],
+    mask2: &[f32],
+) -> MlpCore {
+    let (b, s, hs, ffl) = (m.bs, m.seq, m.hs, m.ffl);
+    let rows = b * s;
+    let k2 = idx2.len();
+    let (xln, cache) = ops::layernorm(x, ln_g, ln_b, rows, hs);
+    // N-side co-prune of FC1: w1g = w1[:, idx2] * mask2
+    let mut w1g = vec![0.0f32; hs * k2];
+    for r in 0..hs {
+        let row = &w1[r * ffl..(r + 1) * ffl];
+        let o = &mut w1g[r * k2..(r + 1) * k2];
+        for (j, (&ix, &mv)) in idx2.iter().zip(mask2).enumerate() {
+            o[j] = row[ix as usize] * mv;
+        }
+    }
+    let h = ops::pruned_matmul(&xln, &w1g, rows, hs, k2, idx1, mask1);
+    let mut hg = h.clone();
+    for v in &mut hg {
+        *v = ops::gelu(*v);
+    }
+    // K-side prune of FC2: w2g = w2[idx2, :] * mask2
+    let mut w2g = vec![0.0f32; k2 * hs];
+    for (j, (&ix, &mv)) in idx2.iter().zip(mask2).enumerate() {
+        let src = &w2[ix as usize * hs..(ix as usize + 1) * hs];
+        let dst = &mut w2g[j * hs..(j + 1) * hs];
+        for (d, sv) in dst.iter_mut().zip(src) {
+            *d = sv * mv;
+        }
+    }
+    MlpCore { xln, cache, w1g, h, hg, w2g }
+}
+
+fn mlp_fwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
+    let x = f32_arg(args, 0)?;
+    let ln_g = f32_arg(args, 1)?;
+    let ln_b = f32_arg(args, 2)?;
+    let w1 = f32_arg(args, 3)?;
+    let w2 = f32_arg(args, 4)?;
+    let idx1 = i32_arg(args, 5)?;
+    let mask1 = f32_arg(args, 6)?;
+    let idx2 = i32_arg(args, 7)?;
+    let mask2 = f32_arg(args, 8)?;
+    check_idx(idx1, m.hs, "mlp fc1 contraction")?;
+    check_idx(idx2, m.ffl, "mlp ffl dimension")?;
+    let rows = m.bs * m.seq;
+    let core = mlp_forward(
+        m, &x.data, &ln_g.data, &ln_b.data, &w1.data, &w2.data, idx1, &mask1.data, idx2,
+        &mask2.data,
+    );
+    let y = linalg::matmul(&core.hg, &core.w2g, rows, idx2.len(), m.hs);
+    Ok(vec![out_f32(spec, 0, y)])
+}
+
+fn mlp_bwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
+    let x = f32_arg(args, 0)?;
+    let ln_g = f32_arg(args, 1)?;
+    let ln_b = f32_arg(args, 2)?;
+    let w1 = f32_arg(args, 3)?;
+    let w2 = f32_arg(args, 4)?;
+    let idx1 = i32_arg(args, 5)?;
+    let mask1 = f32_arg(args, 6)?;
+    let idx2 = i32_arg(args, 7)?;
+    let mask2 = f32_arg(args, 8)?;
+    let dy = f32_arg(args, 9)?;
+    check_idx(idx1, m.hs, "mlp fc1 contraction")?;
+    check_idx(idx2, m.ffl, "mlp ffl dimension")?;
+    let (hs, ffl) = (m.hs, m.ffl);
+    let rows = m.bs * m.seq;
+    let k2 = idx2.len();
+
+    let core = mlp_forward(
+        m, &x.data, &ln_g.data, &ln_b.data, &w1.data, &w2.data, idx1, &mask1.data, idx2,
+        &mask2.data,
+    );
+
+    // y = hg @ w2g
+    let dhg = linalg::matmul_a_bt(&dy.data, &core.w2g, rows, hs, k2);
+    let dw2g = linalg::matmul_at_b(&core.hg, &dy.data, rows, k2, hs);
+    // dw2[idx2[j], :] += dw2g[j, :] * mask2[j]  (zero-imputed full shape)
+    let mut dw2 = vec![0.0f32; ffl * hs];
+    for (j, (&ix, &mv)) in idx2.iter().zip(&mask2.data).enumerate() {
+        let dst = &mut dw2[ix as usize * hs..(ix as usize + 1) * hs];
+        for (d, sv) in dst.iter_mut().zip(&dw2g[j * hs..(j + 1) * hs]) {
+            *d += sv * mv;
+        }
+    }
+    // through the GELU
+    let mut dh = dhg;
+    for (dv, &hv) in dh.iter_mut().zip(&core.h) {
+        *dv *= ops::gelu_grad(hv);
+    }
+    // pruned FC1 backward w.r.t. (xln, w1g)
+    let (dxln, dw1g) =
+        ops::pruned_matmul_bwd(&core.xln, &core.w1g, &dh, rows, hs, k2, idx1, &mask1.data);
+    // dw1[:, idx2[j]] += dw1g[:, j] * mask2[j]
+    let mut dw1 = vec![0.0f32; hs * ffl];
+    for r in 0..hs {
+        let src = &dw1g[r * k2..(r + 1) * k2];
+        let dst = &mut dw1[r * ffl..(r + 1) * ffl];
+        for (j, (&ix, &mv)) in idx2.iter().zip(&mask2.data).enumerate() {
+            dst[ix as usize] += src[j] * mv;
+        }
+    }
+    let (dx, dg, db) = ops::layernorm_bwd(&dxln, &core.cache, &ln_g.data, rows, hs);
+    Ok(vec![
+        out_f32(spec, 0, dx),
+        out_f32(spec, 1, dg),
+        out_f32(spec, 2, db),
+        out_f32(spec, 3, dw1),
+        out_f32(spec, 4, dw2),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// head
+// ---------------------------------------------------------------------------
+
+struct HeadCore {
+    cache: ops::LnCache,
+    pooled: Vec<f32>,
+    /// softmax probabilities `[b, classes]`
+    probs: Vec<f32>,
+    loss: f32,
+    ncorrect: i32,
+}
+
+fn head_forward(
+    m: &ModelInfo,
+    x: &[f32],
+    lnf_g: &[f32],
+    lnf_b: &[f32],
+    w_head: &[f32],
+    b_head: &[f32],
+    labels: &[i32],
+) -> Result<HeadCore> {
+    let (b, s, hs, cl) = (m.bs, m.seq, m.hs, m.classes);
+    let rows = b * s;
+    let (xln, cache) = ops::layernorm(x, lnf_g, lnf_b, rows, hs);
+    let mut pooled = vec![0.0f32; b * hs];
+    for bi in 0..b {
+        pooled[bi * hs..(bi + 1) * hs].copy_from_slice(&xln[bi * s * hs..bi * s * hs + hs]);
+    }
+    let mut logits = linalg::matmul(&pooled, w_head, b, hs, cl);
+    for bi in 0..b {
+        let row = &mut logits[bi * cl..(bi + 1) * cl];
+        for (lv, bv) in row.iter_mut().zip(b_head) {
+            *lv += bv;
+        }
+    }
+    let logp = ops::log_softmax_rows(&logits, b, cl);
+    let mut loss = 0.0f64;
+    let mut ncorrect = 0i32;
+    for bi in 0..b {
+        let li = labels[bi];
+        if li < 0 || li as usize >= cl {
+            bail!("label {li} out of range [0, {cl})");
+        }
+        loss -= logp[bi * cl + li as usize] as f64;
+        // first-occurrence argmax (jnp.argmax semantics)
+        let row = &logits[bi * cl..(bi + 1) * cl];
+        let mut best = 0usize;
+        for (c, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = c;
+            }
+        }
+        if best == li as usize {
+            ncorrect += 1;
+        }
+    }
+    let mut probs = logp;
+    for p in &mut probs {
+        *p = p.exp();
+    }
+    Ok(HeadCore {
+        cache,
+        pooled,
+        probs,
+        loss: (loss / b as f64) as f32,
+        ncorrect,
+    })
+}
+
+fn head_fwdbwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
+    let x = f32_arg(args, 0)?;
+    let lnf_g = f32_arg(args, 1)?;
+    let lnf_b = f32_arg(args, 2)?;
+    let w_head = f32_arg(args, 3)?;
+    let b_head = f32_arg(args, 4)?;
+    let labels = i32_arg(args, 5)?;
+    let (b, s, hs, cl) = (m.bs, m.seq, m.hs, m.classes);
+    let rows = b * s;
+    let core = head_forward(
+        m, &x.data, &lnf_g.data, &lnf_b.data, &w_head.data, &b_head.data, labels,
+    )?;
+
+    // d(loss)/d(logits) of mean softmax-CE
+    let inv_b = 1.0 / b as f32;
+    let mut dlogits = core.probs.clone();
+    for bi in 0..b {
+        dlogits[bi * cl + labels[bi] as usize] -= 1.0;
+    }
+    for v in &mut dlogits {
+        *v *= inv_b;
+    }
+    let dw_head = linalg::matmul_at_b(&core.pooled, &dlogits, b, hs, cl);
+    let mut db_head = vec![0.0f32; cl];
+    for bi in 0..b {
+        for (d, &v) in db_head.iter_mut().zip(&dlogits[bi * cl..(bi + 1) * cl]) {
+            *d += v;
+        }
+    }
+    let dpooled = linalg::matmul_a_bt(&dlogits, &w_head.data, b, cl, hs);
+    // only the cls-token rows receive gradient
+    let mut dxln = vec![0.0f32; rows * hs];
+    for bi in 0..b {
+        dxln[bi * s * hs..bi * s * hs + hs].copy_from_slice(&dpooled[bi * hs..(bi + 1) * hs]);
+    }
+    let (dx, dg, db) = ops::layernorm_bwd(&dxln, &core.cache, &lnf_g.data, rows, hs);
+    Ok(vec![
+        out_f32(spec, 0, vec![core.loss]),
+        Out::I32(vec![core.ncorrect]),
+        out_f32(spec, 2, dx),
+        out_f32(spec, 3, dg),
+        out_f32(spec, 4, db),
+        out_f32(spec, 5, dw_head),
+        out_f32(spec, 6, db_head),
+    ])
+}
+
+fn head_infer(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
+    let x = f32_arg(args, 0)?;
+    let lnf_g = f32_arg(args, 1)?;
+    let lnf_b = f32_arg(args, 2)?;
+    let w_head = f32_arg(args, 3)?;
+    let b_head = f32_arg(args, 4)?;
+    let labels = i32_arg(args, 5)?;
+    let core = head_forward(
+        m, &x.data, &lnf_g.data, &lnf_b.data, &w_head.data, &b_head.data, labels,
+    )?;
+    Ok(vec![out_f32(spec, 0, vec![core.loss]), Out::I32(vec![core.ncorrect])])
+}
+
+// ---------------------------------------------------------------------------
+// migration receiver slices
+// ---------------------------------------------------------------------------
+
+fn mig_forward(
+    m: &ModelInfo,
+    x: &[f32],
+    ln_g: &[f32],
+    ln_b: &[f32],
+    w1c: &[f32],
+    kb: usize,
+) -> (Vec<f32>, Vec<f32>, ops::LnCache) {
+    let rows = m.bs * m.seq;
+    let (xln, cache) = ops::layernorm(x, ln_g, ln_b, rows, m.hs);
+    let h = linalg::matmul(&xln, w1c, rows, m.hs, kb);
+    (xln, h, cache)
+}
+
+fn mlp_mig_fwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
+    let x = f32_arg(args, 0)?;
+    let ln_g = f32_arg(args, 1)?;
+    let ln_b = f32_arg(args, 2)?;
+    let w1c = f32_arg(args, 3)?;
+    let w2c = f32_arg(args, 4)?;
+    let kb = w1c.dims[1];
+    let rows = m.bs * m.seq;
+    let (_xln, h, _cache) = mig_forward(m, &x.data, &ln_g.data, &ln_b.data, &w1c.data, kb);
+    let mut hg = h;
+    for v in &mut hg {
+        *v = ops::gelu(*v);
+    }
+    let y = linalg::matmul(&hg, &w2c.data, rows, kb, m.hs);
+    Ok(vec![out_f32(spec, 0, y)])
+}
+
+fn mlp_mig_bwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
+    let x = f32_arg(args, 0)?;
+    let ln_g = f32_arg(args, 1)?;
+    let ln_b = f32_arg(args, 2)?;
+    let w1c = f32_arg(args, 3)?;
+    let w2c = f32_arg(args, 4)?;
+    let dy = f32_arg(args, 5)?;
+    let kb = w1c.dims[1];
+    let rows = m.bs * m.seq;
+    let (xln, h, cache) = mig_forward(m, &x.data, &ln_g.data, &ln_b.data, &w1c.data, kb);
+    let mut hg = h.clone();
+    for v in &mut hg {
+        *v = ops::gelu(*v);
+    }
+    let dhg = linalg::matmul_a_bt(&dy.data, &w2c.data, rows, m.hs, kb);
+    let dw2c = linalg::matmul_at_b(&hg, &dy.data, rows, kb, m.hs);
+    let mut dh = dhg;
+    for (dv, &hv) in dh.iter_mut().zip(&h) {
+        *dv *= ops::gelu_grad(hv);
+    }
+    let dw1c = linalg::matmul_at_b(&xln, &dh, rows, m.hs, kb);
+    let dxln = linalg::matmul_a_bt(&dh, &w1c.data, rows, kb, m.hs);
+    let (dx, dg, db) = ops::layernorm_bwd(&dxln, &cache, &ln_g.data, rows, m.hs);
+    Ok(vec![
+        out_f32(spec, 0, dx),
+        out_f32(spec, 1, dg),
+        out_f32(spec, 2, db),
+        out_f32(spec, 3, dw1c),
+        out_f32(spec, 4, dw2c),
+    ])
+}

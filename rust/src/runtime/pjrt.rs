@@ -1,0 +1,149 @@
+//! PJRT execution backend (`--features pjrt`): loads the AOT artifacts
+//! (HLO text) produced by `python/compile/aot.py` and executes them
+//! through the `xla` crate.  This is the only module that touches `xla`.
+//!
+//! Flow (adapted from /opt/xla-example/load_hlo):
+//!   `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//!   `client.compile` → `execute` per call.  Executables compile lazily on
+//!   first use and are cached for the life of the backend, so each model
+//!   variant compiles exactly once.
+//!
+//! The offline workspace builds this module against the vendored stub in
+//! `vendor/xla` (compiles, errors at runtime); point `rust/Cargo.toml`'s
+//! `xla` dependency at the real bindings to execute (DESIGN.md §8).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArgSpec, Dtype, ExecSpec, Manifest};
+use super::{Arg, Backend, Out};
+use crate::tensor::Tensor;
+
+struct CompiledExec {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT backend: client + lazily-compiled executable cache.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<BTreeMap<String, Rc<CompiledExec>>>,
+}
+
+impl PjrtBackend {
+    /// Load a model's artifact directory (manifest + HLO text files).
+    pub fn load(model_dir: &Path) -> Result<PjrtBackend> {
+        let manifest = Manifest::load(&model_dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", model_dir.display()))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtBackend {
+            client,
+            dir: model_dir.to_path_buf(),
+            manifest,
+            cache: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    fn compiled(&self, spec: &ExecSpec) -> Result<Rc<CompiledExec>> {
+        if let Some(c) = self.cache.borrow().get(&spec.name) {
+            return Ok(c.clone());
+        }
+        let path = self.dir.join(&spec.file);
+        let proto =
+            xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", spec.name))?;
+        let c = Rc::new(CompiledExec { exe });
+        self.cache.borrow_mut().insert(spec.name.clone(), c.clone());
+        Ok(c)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn execute(&self, spec: &ExecSpec, args: &[Arg]) -> Result<(Vec<Out>, f64)> {
+        let c = self.compiled(spec)?;
+        // Inputs go through self-owned PjRtBuffers + execute_b: the
+        // crate's literal-taking `execute` leaks its internally-created
+        // input buffers (~input bytes per call — measured by
+        // examples/leak_probe.rs), while buffers we create are freed by
+        // PjRtBuffer::drop.  This is also the §Perf device-buffer path.
+        // Buffer staging stays OUTSIDE the timed region so the SimClock
+        // compute charge matches the seed's RT accounting.
+        let mut buffers = Vec::with_capacity(args.len());
+        for (arg, aspec) in args.iter().zip(&spec.inputs) {
+            buffers.push(to_buffer(&self.client, arg, aspec)?);
+        }
+        let t0 = std::time::Instant::now();
+        let result = c
+            .exe
+            .execute_b(&buffers)
+            .with_context(|| format!("executing {}", spec.name))?[0][0]
+            .to_literal_sync()?;
+        let elapsed = t0.elapsed().as_secs_f64();
+        // aot.py lowers with return_tuple=True → always a tuple.
+        let elems = result.to_tuple()?;
+        if elems.len() != spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                spec.name,
+                elems.len(),
+                spec.outputs.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(elems.len());
+        for (lit, ospec) in elems.into_iter().zip(&spec.outputs) {
+            outs.push(from_literal(lit, ospec)?);
+        }
+        Ok((outs, elapsed))
+    }
+
+    fn prepare(&self, spec: &ExecSpec) -> Result<()> {
+        self.compiled(spec).map(|_| ())
+    }
+
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+fn to_buffer(client: &xla::PjRtClient, arg: &Arg, spec: &ArgSpec) -> Result<xla::PjRtBuffer> {
+    match (arg, spec.dtype) {
+        (Arg::F32(t), Dtype::F32) => {
+            if t.dims != spec.dims {
+                bail!("input '{}' dims {:?} != manifest {:?}", spec.name, t.dims, spec.dims);
+            }
+            Ok(client.buffer_from_host_buffer(&t.data, &spec.dims, None)?)
+        }
+        (Arg::I32(v), Dtype::I32) => {
+            let n: usize = spec.dims.iter().product();
+            if v.len() != n {
+                bail!("input '{}' len {} != manifest {:?}", spec.name, v.len(), spec.dims);
+            }
+            Ok(client.buffer_from_host_buffer(v, &spec.dims, None)?)
+        }
+        _ => bail!("input '{}': dtype mismatch", spec.name),
+    }
+}
+
+fn from_literal(lit: xla::Literal, spec: &ArgSpec) -> Result<Out> {
+    match spec.dtype {
+        Dtype::F32 => {
+            let data = lit.to_vec::<f32>()?;
+            let dims = if spec.dims.is_empty() { vec![1] } else { spec.dims.clone() };
+            if data.len() != dims.iter().product::<usize>() {
+                bail!("output '{}': {} elems, expected {:?}", spec.name, data.len(), spec.dims);
+            }
+            Ok(Out::F32(Tensor::from_vec(&dims, data)))
+        }
+        Dtype::I32 => Ok(Out::I32(lit.to_vec::<i32>()?)),
+    }
+}

@@ -1,0 +1,410 @@
+//! Built-in model presets and manifest synthesis.
+//!
+//! The native backend needs no AOT artifacts: when `artifacts/<model>/`
+//! does not exist, the manifest (model facts, pruning buckets, executable
+//! inventory) is synthesized here from the same presets and derivation
+//! rules as `python/compile/model.py` + `aot.py`.  The synthesized
+//! manifest is byte-for-byte equivalent in structure to a compiled one —
+//! names, roles, shapes, and bucket sizes all follow the aot.py contract —
+//! so the trainer, balancers, and tests run identically on either source.
+
+use anyhow::{bail, Result};
+
+use super::manifest::{ArgSpec, Bucket, Dtype, ExecSpec, Manifest, ModelInfo};
+
+/// Static pruning buckets: fraction of the contraction that SURVIVES
+/// (γ = 1 − keep_frac), mirroring `model.KEEP_FRACS`.
+pub const KEEP_FRACS: [f64; 5] = [1.0, 0.75, 0.5, 0.25, 0.125];
+
+/// Migration-slice buckets over ffl, mirroring `model.MIG_FRACS`.
+pub const MIG_FRACS: [f64; 3] = [0.5, 0.25, 0.125];
+
+const IMG: usize = 32;
+const PATCH: usize = 4;
+const CHANS: usize = 3;
+const CLASSES: usize = 10;
+const MLP_RATIO: usize = 4;
+
+/// One artifact-set preset (mirrors python `ModelCfg` presets).
+#[derive(Debug, Clone, Copy)]
+pub struct Preset {
+    pub name: &'static str,
+    pub hs: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub e: usize,
+    pub bs: usize,
+}
+
+/// The preset table from `python/compile/model.py` (vit-s / vit-m are the
+/// ViT-1B / ViT-3B scale stand-ins — DESIGN.md §2).
+pub const PRESETS: [Preset; 4] = [
+    Preset { name: "vit-tiny", hs: 128, depth: 2, heads: 4, e: 4, bs: 8 },
+    Preset { name: "vit-s", hs: 256, depth: 4, heads: 8, e: 8, bs: 16 },
+    Preset { name: "vit-m", hs: 384, depth: 6, heads: 8, e: 8, bs: 16 },
+    Preset { name: "vit-100m", hs: 768, depth: 12, heads: 12, e: 4, bs: 8 },
+];
+
+/// Look up a preset by name.
+pub fn preset(name: &str) -> Result<Preset> {
+    match PRESETS.iter().copied().find(|p| p.name == name) {
+        Some(p) => Ok(p),
+        None => bail!(
+            "unknown model '{name}' and no artifacts on disk \
+             (presets: vit-tiny|vit-s|vit-m|vit-100m)"
+        ),
+    }
+}
+
+/// Bucket keep-size: multiple of 8 (lane width), at least 8.
+pub fn keep_count(k: usize, frac: f64) -> usize {
+    (((k as f64 * frac / 8.0).round() as usize) * 8).max(8)
+}
+
+/// Bucket suffix by pruning percentage, e.g. keep-frac 0.75 → "g25".
+pub fn bucket_name(frac: f64) -> String {
+    format!("g{:02}", ((1.0 - frac) * 100.0).round() as i64)
+}
+
+fn model_info(p: &Preset) -> ModelInfo {
+    let seq0 = (IMG / PATCH) * (IMG / PATCH);
+    let seq = seq0 + 1;
+    let pd = CHANS * PATCH * PATCH;
+    let hsl = p.hs / p.e;
+    let hl = p.heads / p.e;
+    let hd = p.hs / p.heads;
+    let ffl = MLP_RATIO * p.hs / p.e;
+    // per-worker: shard of every block + one replica of embed/head
+    let blk_w = 4 * p.hs + p.hs * 3 * hsl + hsl * p.hs + p.hs * ffl + ffl * p.hs;
+    let emb = pd * p.hs + seq * p.hs + p.hs;
+    let head = 2 * p.hs + p.hs * CLASSES + CLASSES;
+    let params_per_worker = p.depth * blk_w + emb + head;
+    // global: full (unsharded) blocks + one replica set
+    let blk = 4 * p.hs
+        + p.hs * 3 * p.hs
+        + p.hs * p.hs
+        + p.hs * MLP_RATIO * p.hs
+        + MLP_RATIO * p.hs * p.hs;
+    let params_total = p.depth * blk + emb + head;
+    ModelInfo {
+        name: p.name.to_string(),
+        hs: p.hs,
+        depth: p.depth,
+        heads: p.heads,
+        e: p.e,
+        bs: p.bs,
+        classes: CLASSES,
+        seq,
+        seq0,
+        pd,
+        hsl,
+        hl,
+        hd,
+        ffl,
+        params_total,
+        params_per_worker,
+    }
+}
+
+fn f32_spec(name: &str, dims: &[usize]) -> ArgSpec {
+    ArgSpec { name: name.to_string(), dims: dims.to_vec(), dtype: Dtype::F32 }
+}
+
+fn i32_spec(name: &str, dims: &[usize]) -> ArgSpec {
+    ArgSpec { name: name.to_string(), dims: dims.to_vec(), dtype: Dtype::I32 }
+}
+
+fn exec(name: String, role: &str, inputs: Vec<ArgSpec>, outputs: Vec<ArgSpec>) -> ExecSpec {
+    ExecSpec { file: format!("{name}.hlo.txt"), name, role: role.to_string(), inputs, outputs }
+}
+
+/// Build the full executable inventory for a model, mirroring
+/// `aot.py::executable_inventory` name for name and shape for shape.
+fn executables(m: &ModelInfo) -> Vec<ExecSpec> {
+    let (b, s, s0) = (m.bs, m.seq, m.seq0);
+    let (hs, pd, hsl, ffl, cl) = (m.hs, m.pd, m.hsl, m.ffl, m.classes);
+    let x3: &[usize] = &[b, s, hs];
+    let mut inv = Vec::new();
+
+    inv.push(exec(
+        "embed_fwd".to_string(),
+        "embed_fwd",
+        vec![
+            f32_spec("patches", &[b, s0, pd]),
+            f32_spec("w_patch", &[pd, hs]),
+            f32_spec("pos", &[s, hs]),
+            f32_spec("cls", &[hs]),
+        ],
+        vec![f32_spec("x0", x3)],
+    ));
+    inv.push(exec(
+        "embed_bwd".to_string(),
+        "embed_bwd",
+        vec![
+            f32_spec("patches", &[b, s0, pd]),
+            f32_spec("w_patch", &[pd, hs]),
+            f32_spec("pos", &[s, hs]),
+            f32_spec("cls", &[hs]),
+            f32_spec("dy", x3),
+        ],
+        vec![
+            f32_spec("dw_patch", &[pd, hs]),
+            f32_spec("dpos", &[s, hs]),
+            f32_spec("dcls", &[hs]),
+        ],
+    ));
+    let head_inputs = || {
+        vec![
+            f32_spec("x", x3),
+            f32_spec("lnf_g", &[hs]),
+            f32_spec("lnf_b", &[hs]),
+            f32_spec("w_head", &[hs, cl]),
+            f32_spec("b_head", &[cl]),
+            i32_spec("labels", &[b]),
+        ]
+    };
+    inv.push(exec(
+        "head_fwdbwd".to_string(),
+        "head_fwdbwd",
+        head_inputs(),
+        vec![
+            f32_spec("loss", &[]),
+            i32_spec("ncorrect", &[]),
+            f32_spec("dx", x3),
+            f32_spec("dlnf_g", &[hs]),
+            f32_spec("dlnf_b", &[hs]),
+            f32_spec("dw_head", &[hs, cl]),
+            f32_spec("db_head", &[cl]),
+        ],
+    ));
+    inv.push(exec(
+        "head_infer".to_string(),
+        "head_infer",
+        head_inputs(),
+        vec![f32_spec("loss", &[]), i32_spec("ncorrect", &[])],
+    ));
+
+    for &frac in &KEEP_FRACS {
+        let kq = keep_count(hs, frac);
+        let bname = bucket_name(frac);
+        let attn_inputs = || {
+            vec![
+                f32_spec("x", x3),
+                f32_spec("ln1_g", &[hs]),
+                f32_spec("ln1_b", &[hs]),
+                f32_spec("wqkv", &[hs, 3 * hsl]),
+                f32_spec("wo", &[hsl, hs]),
+                i32_spec("idx", &[kq]),
+                f32_spec("mask", &[kq]),
+            ]
+        };
+        inv.push(exec(
+            format!("attn_fwd_{bname}"),
+            "attn_fwd",
+            attn_inputs(),
+            vec![f32_spec("y_partial", x3)],
+        ));
+        let mut bwd_in = attn_inputs();
+        bwd_in.push(f32_spec("dy", x3));
+        inv.push(exec(
+            format!("attn_bwd_{bname}"),
+            "attn_bwd",
+            bwd_in,
+            vec![
+                f32_spec("dx", x3),
+                f32_spec("dln1_g", &[hs]),
+                f32_spec("dln1_b", &[hs]),
+                f32_spec("dwqkv", &[hs, 3 * hsl]),
+                f32_spec("dwo", &[hsl, hs]),
+            ],
+        ));
+    }
+
+    // The FULL bucket cross-product: differentiated per-layer ratios
+    // (Alg. 1) pick FC1's and FC2's buckets independently, so any (b1, b2)
+    // pair can be requested.  aot.py compiles only the diagonal + (g00, b)
+    // column combos (compile time is per-variant there); the native
+    // backend pays nothing per variant, so it covers the whole grid —
+    // see DESIGN.md §3.
+    let mut combos: Vec<(f64, f64)> = Vec::new();
+    for &f1 in &KEEP_FRACS {
+        for &f2 in &KEEP_FRACS {
+            combos.push((f1, f2));
+        }
+    }
+    for (f1, f2) in combos {
+        let (k1, k2) = (keep_count(hs, f1), keep_count(ffl, f2));
+        let (b1, b2) = (bucket_name(f1), bucket_name(f2));
+        let suffix = if f1 == f2 { b1 } else { format!("{b1}_{b2}") };
+        let mlp_inputs = || {
+            vec![
+                f32_spec("x", x3),
+                f32_spec("ln2_g", &[hs]),
+                f32_spec("ln2_b", &[hs]),
+                f32_spec("w1", &[hs, ffl]),
+                f32_spec("w2", &[ffl, hs]),
+                i32_spec("idx1", &[k1]),
+                f32_spec("mask1", &[k1]),
+                i32_spec("idx2", &[k2]),
+                f32_spec("mask2", &[k2]),
+            ]
+        };
+        inv.push(exec(
+            format!("mlp_fwd_{suffix}"),
+            "mlp_fwd",
+            mlp_inputs(),
+            vec![f32_spec("y_partial", x3)],
+        ));
+        let mut bwd_in = mlp_inputs();
+        bwd_in.push(f32_spec("dy", x3));
+        inv.push(exec(
+            format!("mlp_bwd_{suffix}"),
+            "mlp_bwd",
+            bwd_in,
+            vec![
+                f32_spec("dx", x3),
+                f32_spec("dln2_g", &[hs]),
+                f32_spec("dln2_b", &[hs]),
+                f32_spec("dw1", &[hs, ffl]),
+                f32_spec("dw2", &[ffl, hs]),
+            ],
+        ));
+    }
+
+    for kb in mig_buckets(ffl) {
+        inv.push(exec(
+            format!("mlp_mig_fwd_k{kb}"),
+            "mlp_mig_fwd",
+            vec![
+                f32_spec("x", x3),
+                f32_spec("ln2_g", &[hs]),
+                f32_spec("ln2_b", &[hs]),
+                f32_spec("w1c", &[hs, kb]),
+                f32_spec("w2c", &[kb, hs]),
+            ],
+            vec![f32_spec("y_partial", x3)],
+        ));
+        inv.push(exec(
+            format!("mlp_mig_bwd_k{kb}"),
+            "mlp_mig_bwd",
+            vec![
+                f32_spec("x", x3),
+                f32_spec("ln2_g", &[hs]),
+                f32_spec("ln2_b", &[hs]),
+                f32_spec("w1c", &[hs, kb]),
+                f32_spec("w2c", &[kb, hs]),
+                f32_spec("dy", x3),
+            ],
+            vec![
+                f32_spec("dx_partial", x3),
+                f32_spec("dln2_g", &[hs]),
+                f32_spec("dln2_b", &[hs]),
+                f32_spec("dw1c", &[hs, kb]),
+                f32_spec("dw2c", &[kb, hs]),
+            ],
+        ));
+    }
+    inv
+}
+
+fn mig_buckets(ffl: usize) -> Vec<usize> {
+    let mut kbs: Vec<usize> = MIG_FRACS.iter().map(|&f| keep_count(ffl, f)).collect();
+    kbs.sort_unstable();
+    kbs.dedup();
+    kbs
+}
+
+/// Synthesize a full manifest for a preset model (the aot.py output,
+/// minus the HLO files the native backend does not need).
+pub fn synthesize(name: &str) -> Result<Manifest> {
+    let p = preset(name)?;
+    let m = model_info(&p);
+    let buckets = KEEP_FRACS
+        .iter()
+        .map(|&f| Bucket {
+            name: bucket_name(f),
+            gamma: 1.0 - f,
+            keep_hs: keep_count(m.hs, f),
+            keep_ffl: keep_count(m.ffl, f),
+        })
+        .collect();
+    Ok(Manifest {
+        executables: executables(&m),
+        mig_buckets: mig_buckets(m.ffl),
+        buckets,
+        model: m,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keep_counts_match_python_rule() {
+        assert_eq!(keep_count(128, 1.0), 128);
+        assert_eq!(keep_count(128, 0.75), 96);
+        assert_eq!(keep_count(128, 0.5), 64);
+        assert_eq!(keep_count(128, 0.125), 16);
+        assert_eq!(keep_count(8, 0.125), 8); // floor at lane width
+        assert_eq!(bucket_name(1.0), "g00");
+        assert_eq!(bucket_name(0.125), "g88");
+        assert_eq!(bucket_name(0.75), "g25");
+    }
+
+    #[test]
+    fn vit_tiny_derivations() {
+        let m = model_info(&preset("vit-tiny").unwrap());
+        assert_eq!(m.seq0, 64);
+        assert_eq!(m.seq, 65);
+        assert_eq!(m.pd, 48);
+        assert_eq!(m.hsl, 32);
+        assert_eq!(m.hl, 1);
+        assert_eq!(m.hd, 32);
+        assert_eq!(m.ffl, 128);
+        assert!(m.params_total > m.params_per_worker);
+    }
+
+    #[test]
+    fn synthesized_manifest_has_full_inventory() {
+        let man = synthesize("vit-tiny").unwrap();
+        // 4 fixed + 5*2 attn + 25*2 mlp (full bucket grid) + 3*2 mig
+        assert_eq!(man.executables.len(), 4 + 10 + 50 + 6);
+        assert!(man.exec("embed_fwd").is_ok());
+        assert!(man.exec("attn_fwd_g00").is_ok());
+        assert!(man.exec("attn_bwd_g88").is_ok());
+        assert!(man.exec("mlp_fwd_g50").is_ok());
+        assert!(man.exec("mlp_bwd_g00_g50").is_ok());
+        assert!(man.exec("mlp_mig_fwd_k64").is_ok());
+        assert_eq!(man.mig_buckets, vec![16, 32, 64]);
+        assert_eq!(man.buckets.len(), 5);
+        assert_eq!(man.buckets[0].name, "g00");
+        assert_eq!(man.bucket_for_gamma(0.3).name, "g50");
+    }
+
+    #[test]
+    fn synthesized_specs_follow_naming_contract() {
+        let man = synthesize("vit-tiny").unwrap();
+        // trainer resolves names via these helpers — every combination the
+        // planners can produce (independent FC1/FC2 buckets included)
+        // must exist in the inventory
+        for b in &man.buckets {
+            assert!(man.exec(&man.attn_name("fwd", &b.name)).is_ok());
+            assert!(man.exec(&man.attn_name("bwd", &b.name)).is_ok());
+            for b2 in &man.buckets {
+                assert!(man.exec(&man.mlp_name("fwd", &b.name, &b2.name)).is_ok());
+                assert!(man.exec(&man.mlp_name("bwd", &b.name, &b2.name)).is_ok());
+            }
+        }
+        for &kb in &man.mig_buckets {
+            assert!(man.exec(&man.mig_name("fwd", kb)).is_ok());
+            assert!(man.exec(&man.mig_name("bwd", kb)).is_ok());
+        }
+    }
+
+    #[test]
+    fn unknown_preset_rejected() {
+        assert!(preset("vit-9000").is_err());
+        assert!(synthesize("vit-9000").is_err());
+    }
+}

@@ -1,0 +1,167 @@
+//! Blocked dense GEMM kernels for the native execution backend.
+//!
+//! The hot path of every executable role is one of three GEMM shapes —
+//! `A·B`, `Aᵀ·B` (weight gradients), `A·Bᵀ` (input gradients) — over
+//! row-major f32 buffers.  `matmul_acc` tiles the contraction and output
+//! columns so one B panel (`BLOCK_K × BLOCK_N` ≈ 64 KiB) stays resident in
+//! L1/L2 while a C row segment is swept — the cache-friendly layout that
+//! makes the fig5–fig11 bench timings scale with the arithmetic actually
+//! performed instead of with memory stalls.  All kernels are
+//! single-threaded on purpose: the simulated worker group executes ranks
+//! sequentially and charges measured wall time to per-rank `SimClock`s, so
+//! per-call determinism matters more than parallel throughput.
+
+/// Contraction-dimension tile (rows of a B panel).
+const BLOCK_K: usize = 64;
+/// Output-column tile (columns of a B panel).
+const BLOCK_N: usize = 256;
+
+/// `c += a · b` for row-major `a [m,k]`, `b [k,n]`, `c [m,n]`.
+pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for k0 in (0..k).step_by(BLOCK_K) {
+        let k1 = (k0 + BLOCK_K).min(k);
+        for n0 in (0..n).step_by(BLOCK_N) {
+            let n1 = (n0 + BLOCK_N).min(n);
+            for i in 0..m {
+                let a_row = &a[i * k..(i + 1) * k];
+                let c_row = &mut c[i * n + n0..i * n + n1];
+                for (l, &av) in a_row.iter().enumerate().take(k1).skip(k0) {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let b_row = &b[l * n + n0..l * n + n1];
+                    for (cv, bv) in c_row.iter_mut().zip(b_row) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `a · b` for row-major `a [m,k]`, `b [k,n]` → `[m,n]`.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    matmul_acc(&mut c, a, b, m, k, n);
+    c
+}
+
+/// `aᵀ · b` for row-major `a [m,ka]`, `b [m,n]` → `[ka,n]` (the
+/// weight-gradient shape: both operands are walked row-contiguously).
+pub fn matmul_at_b(a: &[f32], b: &[f32], m: usize, ka: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * ka);
+    debug_assert_eq!(b.len(), m * n);
+    let mut c = vec![0.0f32; ka * n];
+    for i in 0..m {
+        let a_row = &a[i * ka..(i + 1) * ka];
+        let b_row = &b[i * n..(i + 1) * n];
+        for (l, &av) in a_row.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let c_row = &mut c[l * n..(l + 1) * n];
+            for (cv, bv) in c_row.iter_mut().zip(b_row) {
+                *cv += av * bv;
+            }
+        }
+    }
+    c
+}
+
+/// `a · bᵀ` for row-major `a [m,k]`, `b [nb,k]` → `[m,nb]` (the
+/// input-gradient shape: contiguous row dot products).
+pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, k: usize, nb: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), nb * k);
+    let mut c = vec![0.0f32; m * nb];
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut c[i * nb..(i + 1) * nb];
+        for (j, cv) in c_row.iter_mut().enumerate() {
+            *cv = dot(a_row, &b[j * k..(j + 1) * k]);
+        }
+    }
+    c
+}
+
+/// Dense dot product (accumulated in f32, matching XLA's CPU default).
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Textbook triple loop — the oracle the blocked kernels are pinned to.
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for l in 0..k {
+                    s += a[i * k + l] * b[l * n + j];
+                }
+                c[i * n + j] = s;
+            }
+        }
+        c
+    }
+
+    fn close(a: &[f32], b: &[f32], tol: f32) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| (x - y).abs() <= tol)
+    }
+
+    #[test]
+    fn blocked_matmul_matches_naive_across_odd_shapes() {
+        let mut rng = Rng::new(7);
+        // shapes straddling the block boundaries, including non-multiples
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 64, 9), (8, 65, 257), (130, 70, 300)] {
+            let a = rng.normal_vec(m * k, 1.0);
+            let b = rng.normal_vec(k * n, 1.0);
+            let want = naive(&a, &b, m, k, n);
+            assert!(close(&matmul(&a, &b, m, k, n), &want, 1e-3), "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn transposed_variants_match_naive() {
+        let mut rng = Rng::new(9);
+        let (m, k, n) = (13, 33, 21);
+        let a = rng.normal_vec(m * k, 1.0);
+        let b = rng.normal_vec(m * n, 1.0);
+        // aᵀ·b vs naive on explicitly transposed a
+        let mut at = vec![0.0f32; k * m];
+        for i in 0..m {
+            for l in 0..k {
+                at[l * m + i] = a[i * k + l];
+            }
+        }
+        let want = naive(&at, &b, k, m, n);
+        assert!(close(&matmul_at_b(&a, &b, m, k, n), &want, 1e-3));
+        // a·bᵀ vs naive on explicitly transposed b
+        let c = rng.normal_vec(n * k, 1.0);
+        let mut ct = vec![0.0f32; k * n];
+        for j in 0..n {
+            for l in 0..k {
+                ct[l * n + j] = c[j * k + l];
+            }
+        }
+        let want = naive(&a, &ct, m, k, n);
+        assert!(close(&matmul_a_bt(&a, &c, m, k, n), &want, 1e-3));
+    }
+
+    #[test]
+    fn acc_accumulates_on_top_of_existing() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![1.0, 0.0, 0.0, 1.0];
+        let mut c = vec![10.0, 10.0, 10.0, 10.0];
+        matmul_acc(&mut c, &a, &b, 2, 2, 2);
+        assert_eq!(c, vec![11.0, 12.0, 13.0, 14.0]);
+    }
+}

@@ -1,9 +1,13 @@
 //! Host tensor: the coordinator-side data container.
 //!
-//! All heavy GEMMs run inside PJRT executables (Layer 1/2); the host only
-//! does collective sums, residual adds, lineage gathers/scatters, and
-//! optimizer updates — the ops here.  A naive `matmul` exists solely as a
-//! test oracle for small shapes.
+//! The host side does collective sums, residual adds, lineage
+//! gathers/scatters, and optimizer updates — the ops here.  Heavy GEMMs
+//! run inside an execution backend: blocked kernels from [`linalg`] on the
+//! default native backend, or PJRT executables behind `--features pjrt`.
+//! [`Tensor::matmul`] routes through the same blocked kernel so host-side
+//! checks and backends agree numerically.
+
+pub mod linalg;
 
 use anyhow::{bail, Result};
 
@@ -298,30 +302,17 @@ impl Tensor {
         Tensor::from_vec(&[r, k], data)
     }
 
-    // ---- test oracle -------------------------------------------------------
+    // ---- dense products ----------------------------------------------------
 
-    /// Naive matmul — TEST ORACLE ONLY (hot-path GEMMs run in PJRT).
+    /// 2-D matrix product over the folded `as_2d` views, via the blocked
+    /// kernel in [`linalg`] (also the native backend's GEMM).
     pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
         let (m, k) = self.as_2d();
         let (k2, n) = other.as_2d();
         if k != k2 {
             bail!("matmul shape mismatch: {k} vs {k2}");
         }
-        let mut out = Tensor::zeros(&[m, n]);
-        for i in 0..m {
-            for l in 0..k {
-                let a = self.data[i * k + l];
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[l * n..(l + 1) * n];
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for j in 0..n {
-                    orow[j] += a * brow[j];
-                }
-            }
-        }
-        Ok(out)
+        Ok(Tensor::from_vec(&[m, n], linalg::matmul(&self.data, &other.data, m, k, n)))
     }
 
     pub fn allclose(&self, other: &Tensor, atol: f32) -> bool {

@@ -4,9 +4,10 @@
 //! per-block [attention branch → all-reduce → residual → FFN branch →
 //! all-reduce → residual] → replicated head (loss + dx) → mirrored
 //! backward with per-branch dx/LN-grad all-reduces → imputation → SGD.
-//! Every PJRT call is timed for real; block-GEMM charges are multiplied
-//! by the rank's skewness χ (the paper's sleep injection); collectives
-//! charge the α-β model; RT = Σ_iters max-rank sim time.
+//! Every backend call (native kernels by default, PJRT behind `--features
+//! pjrt`) is timed for real; block-GEMM charges are multiplied by the
+//! rank's skewness χ (the paper's sleep injection); collectives charge
+//! the α-β model; RT = Σ_iters max-rank sim time.
 //!
 //! Balancing hooks: the [`Balancer`] contributes per-rank [`WorkerAction`]s
 //! each iteration — pruned executables + keep sets for ZERO-resizing,
@@ -55,8 +56,8 @@ pub struct Trainer {
 
 impl Trainer {
     pub fn new(cfg: RunCfg) -> Result<Trainer> {
-        let rt = Runtime::load(&cfg.model_dir())
-            .with_context(|| format!("loading artifacts for '{}'", cfg.model))?;
+        let rt = Runtime::open(&cfg.model_dir(), &cfg.model, cfg.backend)
+            .with_context(|| format!("opening {} backend for '{}'", cfg.backend.name(), cfg.model))?;
         let m = rt.manifest.model.clone();
         let state = ModelState::init(&m, cfg.train.seed);
         let data = SynthData::new(&m, cfg.train.seed);

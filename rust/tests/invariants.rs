@@ -1,7 +1,7 @@
 //! Property-style invariant sweeps (hand-rolled — proptest is unavailable
 //! offline): randomized inputs over many seeds for the coordinator's core
-//! invariants (DESIGN.md §6), plus integration runs over the real tiny
-//! artifacts exercising every strategy end-to-end.
+//! invariants (DESIGN.md §6), plus integration runs on the native backend
+//! exercising every strategy end-to-end (no artifacts required).
 
 use flextp::cluster::{mig_range, renumber, Clocks};
 use flextp::collectives::{cost::CostModel, Comm};
@@ -154,14 +154,9 @@ fn prop_barrier_monotone() {
 }
 
 // ---------------------------------------------------------------------
-// Integration: every strategy trains on the real tiny artifacts.
+// Integration: every strategy trains end-to-end on the native backend
+// (manifest synthesized — no artifacts required).
 // ---------------------------------------------------------------------
-
-fn artifacts_exist() -> bool {
-    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .join("artifacts/vit-tiny")
-        .exists()
-}
 
 fn short_cfg(strategy: Strategy) -> RunCfg {
     let mut cfg = RunCfg::new("vit-tiny");
@@ -175,10 +170,6 @@ fn short_cfg(strategy: Strategy) -> RunCfg {
 
 #[test]
 fn integration_all_strategies_run_and_stay_finite() {
-    if !artifacts_exist() {
-        eprintln!("skipping: artifacts not built");
-        return;
-    }
     for strategy in [
         Strategy::Baseline,
         Strategy::ZeroRd,
@@ -202,10 +193,6 @@ fn integration_all_strategies_run_and_stay_finite() {
 
 #[test]
 fn integration_balancers_engage_under_skew() {
-    if !artifacts_exist() {
-        eprintln!("skipping: artifacts not built");
-        return;
-    }
     // ZERO prunes, MIG migrates, SEMI does at least one of the two.
     let mut t = flextp::train::trainer::Trainer::new(short_cfg(Strategy::ZeroPri)).unwrap();
     let r = t.run().unwrap();
@@ -231,10 +218,6 @@ fn integration_balancers_engage_under_skew() {
 
 #[test]
 fn integration_imputation_policies_all_train() {
-    if !artifacts_exist() {
-        eprintln!("skipping: artifacts not built");
-        return;
-    }
     for imp in [Imputation::Zero, Imputation::Average, Imputation::Same] {
         let mut cfg = short_cfg(Strategy::ZeroPri);
         cfg.balancer.imputation = imp;
@@ -247,10 +230,6 @@ fn integration_imputation_policies_all_train() {
 
 #[test]
 fn integration_migration_is_numerically_exact() {
-    if !artifacts_exist() {
-        eprintln!("skipping: artifacts not built");
-        return;
-    }
     // A pure-MIG run must produce the same loss trajectory as Baseline on
     // the same batch (migration never changes arithmetic, paper §IV-A).
     let fixed_batch = |strategy: Strategy| {

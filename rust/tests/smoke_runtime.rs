@@ -1,23 +1,19 @@
-//! Runtime smoke: load real vit-tiny artifacts, execute, check shapes and
-//! basic numerics (requires `make artifacts`).
-
-use std::path::Path;
+//! Runtime smoke: open vit-tiny on the native backend (manifest
+//! synthesized — no artifacts, no Python), execute representative
+//! executables, and check shapes, validation, and basic numerics.
+//! Runs unconditionally; the PJRT-vs-native cross-check at the bottom is
+//! gated on `--features pjrt` + compiled artifacts.
 
 use flextp::runtime::{Arg, Runtime};
 use flextp::tensor::Tensor;
 
-fn artifacts() -> Option<Runtime> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/vit-tiny");
-    if !dir.exists() {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        return None;
-    }
-    Some(Runtime::load(&dir).expect("load runtime"))
+fn native() -> Runtime {
+    Runtime::native_for("vit-tiny").expect("synthesize vit-tiny runtime")
 }
 
 #[test]
 fn embed_fwd_executes_with_correct_shapes() {
-    let Some(rt) = artifacts() else { return };
+    let rt = native();
     let m = &rt.manifest.model;
     let patches = Tensor::full(&[m.bs, m.seq0, m.pd], 0.1);
     let w_patch = Tensor::full(&[m.pd, m.hs], 0.01);
@@ -41,7 +37,7 @@ fn embed_fwd_executes_with_correct_shapes() {
 
 #[test]
 fn attn_fwd_full_bucket_runs() {
-    let Some(rt) = artifacts() else { return };
+    let rt = native();
     let m = rt.manifest.model.clone();
     let x = Tensor::full(&[m.bs, m.seq, m.hs], 0.1);
     let g = Tensor::full(&[m.hs], 1.0);
@@ -63,8 +59,85 @@ fn attn_fwd_full_bucket_runs() {
 }
 
 #[test]
+fn every_pruning_bucket_executes() {
+    let rt = native();
+    let m = rt.manifest.model.clone();
+    let x = Tensor::full(&[m.bs, m.seq, m.hs], 0.1);
+    let g = Tensor::full(&[m.hs], 1.0);
+    let b = Tensor::zeros(&[m.hs]);
+    let wqkv = Tensor::full(&[m.hs, 3 * m.hsl], 0.01);
+    let wo = Tensor::full(&[m.hsl, m.hs], 0.01);
+    for bucket in rt.manifest.buckets.clone() {
+        let idx: Vec<i32> = (0..bucket.keep_hs as i32).collect();
+        let mask = Tensor::full(&[bucket.keep_hs], 1.0);
+        let name = rt.manifest.attn_name("fwd", &bucket.name);
+        let (outs, _) = rt
+            .call(
+                &name,
+                &[Arg::F32(&x), Arg::F32(&g), Arg::F32(&b), Arg::F32(&wqkv),
+                  Arg::F32(&wo), Arg::I32(&idx), Arg::F32(&mask)],
+            )
+            .unwrap_or_else(|e| panic!("{name}: {e:?}"));
+        let y = outs.into_iter().next().unwrap().tensor().unwrap();
+        assert!(y.data.iter().all(|v| v.is_finite()), "{name} produced non-finite");
+    }
+}
+
+#[test]
+fn mixed_mlp_bucket_pair_executes() {
+    // differentiated ratios (Alg. 1) pick FC1/FC2 buckets independently —
+    // the synthesized inventory must cover mixed non-g00 pairs
+    let rt = native();
+    let m = rt.manifest.model.clone();
+    let x = Tensor::full(&[m.bs, m.seq, m.hs], 0.1);
+    let g = Tensor::full(&[m.hs], 1.0);
+    let b = Tensor::zeros(&[m.hs]);
+    let w1 = Tensor::full(&[m.hs, m.ffl], 0.01);
+    let w2 = Tensor::full(&[m.ffl, m.hs], 0.01);
+    let b1 = rt.manifest.bucket_for_gamma(0.25).clone();
+    let b2 = rt.manifest.bucket_for_gamma(0.5).clone();
+    assert_ne!(b1.name, b2.name);
+    let idx1: Vec<i32> = (0..b1.keep_hs as i32).collect();
+    let idx2: Vec<i32> = (0..b2.keep_ffl as i32).collect();
+    let m1 = Tensor::full(&[b1.keep_hs], 1.0);
+    let m2 = Tensor::full(&[b2.keep_ffl], 1.0);
+    let name = rt.manifest.mlp_name("fwd", &b1.name, &b2.name);
+    let (outs, _) = rt
+        .call(
+            &name,
+            &[Arg::F32(&x), Arg::F32(&g), Arg::F32(&b), Arg::F32(&w1), Arg::F32(&w2),
+              Arg::I32(&idx1), Arg::F32(&m1), Arg::I32(&idx2), Arg::F32(&m2)],
+        )
+        .unwrap_or_else(|e| panic!("{name}: {e:?}"));
+    let y = outs.into_iter().next().unwrap().tensor().unwrap();
+    assert!(y.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn out_of_range_keep_index_is_an_error_not_a_panic() {
+    let rt = native();
+    let m = rt.manifest.model.clone();
+    let x = Tensor::full(&[m.bs, m.seq, m.hs], 0.1);
+    let g = Tensor::full(&[m.hs], 1.0);
+    let b = Tensor::zeros(&[m.hs]);
+    let wqkv = Tensor::full(&[m.hs, 3 * m.hsl], 0.01);
+    let wo = Tensor::full(&[m.hsl, m.hs], 0.01);
+    let mut idx: Vec<i32> = (0..m.hs as i32).collect();
+    idx[0] = m.hs as i32; // one past the end
+    let mask = Tensor::full(&[m.hs], 1.0);
+    let err = rt
+        .call(
+            "attn_fwd_g00",
+            &[Arg::F32(&x), Arg::F32(&g), Arg::F32(&b), Arg::F32(&wqkv),
+              Arg::F32(&wo), Arg::I32(&idx), Arg::F32(&mask)],
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("out of range"), "{err}");
+}
+
+#[test]
 fn timing_profile_accumulates() {
-    let Some(rt) = artifacts() else { return };
+    let rt = native();
     let m = &rt.manifest.model;
     let patches = Tensor::zeros(&[m.bs, m.seq0, m.pd]);
     let w_patch = Tensor::zeros(&[m.pd, m.hs]);
@@ -85,10 +158,77 @@ fn timing_profile_accumulates() {
 
 #[test]
 fn dim_mismatch_rejected() {
-    let Some(rt) = artifacts() else { return };
+    let rt = native();
     let bad = Tensor::zeros(&[1, 2, 3]);
     let z = Tensor::zeros(&[1]);
     assert!(rt
         .call("embed_fwd", &[Arg::F32(&bad), Arg::F32(&z), Arg::F32(&z), Arg::F32(&z)])
         .is_err());
+}
+
+#[test]
+fn open_falls_back_to_preset_synthesis_without_artifacts() {
+    // the clean-checkout path the trainer uses
+    let rt = Runtime::open(
+        std::path::Path::new("artifacts/definitely-absent"),
+        "vit-tiny",
+        flextp::config::BackendKind::Native,
+    )
+    .expect("open with synthesized manifest");
+    assert_eq!(rt.manifest.model.name, "vit-tiny");
+}
+
+#[test]
+fn open_prefers_disk_manifest_when_present() {
+    // a compiled manifest on disk (possibly with non-preset bucket sizes)
+    // must win over synthesis
+    let dir = std::env::temp_dir().join(format!("flextp-smoke-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest_json = r#"{
+      "model": {"name":"disk-test","hs":32,"depth":1,"heads":4,"e":4,"bs":2,
+                "classes":10,"seq":17,"seq0":16,"pd":48,"hsl":8,"hl":1,
+                "hd":8,"ffl":32,"params_total":1000,"params_per_worker":300},
+      "buckets": [{"name":"g00","gamma":0,"keep_hs":32,"keep_ffl":32}],
+      "mig_buckets": [8],
+      "executables": []
+    }"#;
+    std::fs::write(dir.join("manifest.json"), manifest_json).unwrap();
+    let rt = Runtime::open(&dir, "vit-tiny", flextp::config::BackendKind::Native)
+        .expect("open with disk manifest");
+    assert_eq!(rt.manifest.model.name, "disk-test", "disk manifest was ignored");
+    assert_eq!(rt.manifest.model.hs, 32);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// PJRT-vs-native cross-check: only meaningful in a `--features pjrt`
+/// build with real bindings and compiled artifacts on disk.
+#[cfg(feature = "pjrt")]
+mod pjrt_cross_check {
+    use super::*;
+    use flextp::config::BackendKind;
+    use std::path::Path;
+
+    #[test]
+    fn pjrt_matches_native_on_embed_fwd() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/vit-tiny");
+        if !dir.exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let Ok(pjrt) = Runtime::open(&dir, "vit-tiny", BackendKind::Pjrt) else {
+            eprintln!("skipping: pjrt backend unavailable (stub xla build)");
+            return;
+        };
+        let native = Runtime::open(&dir, "vit-tiny", BackendKind::Native).unwrap();
+        let m = native.manifest.model.clone();
+        let patches = Tensor::full(&[m.bs, m.seq0, m.pd], 0.1);
+        let w_patch = Tensor::full(&[m.pd, m.hs], 0.01);
+        let pos = Tensor::zeros(&[m.seq, m.hs]);
+        let cls = Tensor::full(&[m.hs], 0.5);
+        let args = [Arg::F32(&patches), Arg::F32(&w_patch), Arg::F32(&pos), Arg::F32(&cls)];
+        let a = native.call("embed_fwd", &args).unwrap().0[0].clone().tensor().unwrap();
+        let args = [Arg::F32(&patches), Arg::F32(&w_patch), Arg::F32(&pos), Arg::F32(&cls)];
+        let b = pjrt.call("embed_fwd", &args).unwrap().0[0].clone().tensor().unwrap();
+        assert!(a.allclose(&b, 1e-4), "backends disagree on embed_fwd");
+    }
 }

@@ -1,0 +1,156 @@
+//! Offline stub of the `xla` (PJRT bindings) crate surface that flextp's
+//! `pjrt` backend compiles against.
+//!
+//! The real crate links `xla_extension` (a multi-GB native XLA build) and
+//! cannot be vendored here.  This stub keeps the `--features pjrt` code
+//! path *compiling* offline — every constructor returns a descriptive
+//! error at runtime, so selecting `--backend pjrt` in a stub build fails
+//! fast with a clear message instead of failing to build.  To run the real
+//! PJRT path, point the `xla` dependency in `rust/Cargo.toml` at a checkout
+//! of the real bindings (see DESIGN.md §8).
+
+// Stub handle types carry never-read unit fields on purpose.
+#![allow(dead_code)]
+
+use std::fmt;
+
+const STUB_MSG: &str = "xla stub: this build has no real PJRT runtime; \
+                        point rust/Cargo.toml's `xla` dependency at the real \
+                        bindings to enable --backend pjrt (DESIGN.md §8)";
+
+/// Error type mirroring the real crate's; implements `std::error::Error`
+/// so `?` converts it into `anyhow::Error` at call sites.
+#[derive(Debug)]
+pub struct Error(pub &'static str);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_err<T>() -> Result<T> {
+    Err(Error(STUB_MSG))
+}
+
+/// Element dtypes flextp exchanges with PJRT.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    I32,
+}
+
+/// Host-side literal (tensor value).
+#[derive(Debug)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        stub_err()
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        stub_err()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        stub_err()
+    }
+}
+
+/// Device-resident buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub_err()
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        stub_err()
+    }
+}
+
+/// An XLA computation ready for compilation.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Compiled, loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub_err()
+    }
+
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub_err()
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        stub_err()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub_err()
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        stub_err()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_constructors_fail_fast_with_message() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("xla stub"));
+        assert!(HloModuleProto::from_text_file("x").is_err());
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2, 2],
+            &[0u8; 16]
+        )
+        .is_err());
+    }
+}
