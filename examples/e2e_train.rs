@@ -27,16 +27,22 @@ fn main() -> Result<()> {
     cfg.train.eval_iters = 2;
     cfg.train.lr = 0.01;
     cfg.train.train_batches = 16;
+    // --threads N (0 = all cores): parallel rank execution; losses are
+    // bitwise identical to --threads 1, only wall-clock drops.
+    if let Some(t) = kv.get("threads") {
+        cfg.train.threads = t.parse().expect("--threads");
+    }
     // homogeneous first half, then a χ=2 straggler rotates in (paper's
     // dynamic heterogeneity): Fixed plan switched at the midpoint below.
     let mut t = Trainer::new(cfg)?;
     println!(
-        "e2e: {} — {:.1}M params, e={} TP workers, bs={}, seq={}",
+        "e2e: {} — {:.1}M params, e={} TP workers, bs={}, seq={}, threads={}",
         t.model().name,
         t.model().params_total as f64 / 1e6,
         t.model().e,
         t.model().bs,
         t.model().seq,
+        t.threads(),
     );
     t.warmup_and_pretest()?;
     println!("warmup+pretest done; SEMI cost fit: Φ₁/col={:.2e}s Φ₂/col={:.2e}s",

@@ -6,6 +6,9 @@
 //! keep RT roughly flat (the straggler catches up); PriDiffE trades some
 //! of that efficiency for a smaller ACC loss; PriDiffR is the preferred
 //! enhancement (≈Pri RT, comparable or better ACC).
+//!
+//! Set `FLEXTP_THREADS=N` to run the simulated ranks concurrently (same
+//! numbers, lower wall-clock) — e.g. `FLEXTP_THREADS=0` for all cores.
 
 use flextp::bench::{bench_cfg, out_dir, run};
 use flextp::config::{StragglerPlan, Strategy};

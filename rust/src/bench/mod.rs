@@ -2,6 +2,14 @@
 //! table/figure bench is a `harness = false` binary that builds `RunCfg`s
 //! with [`bench_cfg`], runs them through the trainer, and prints the
 //! paper's rows via `util::table::TextTable` (+ CSV under `bench_out/`).
+//!
+//! All benches honor `FLEXTP_THREADS` (the `--threads` knob): it seeds
+//! `TrainCfg::default`, so `FLEXTP_THREADS=4 cargo bench --bench
+//! fig9_hetero_sweep` runs every rank concurrently.  Thread count adds no
+//! nondeterminism of its own, but adaptive strategies (Pri/Semi/…)
+//! re-plan from measured kernel timings, so their losses/ACC vary run to
+//! run whether serial or parallel; fixed-plan runs (baseline, `--gamma`)
+//! are bitwise identical across thread counts.
 
 use std::path::PathBuf;
 

@@ -53,8 +53,13 @@ impl Clocks {
         max
     }
 
-    /// Barrier over a subset of ranks.
+    /// Barrier over a subset of ranks.  An empty subset is a no-op that
+    /// reports the current clock frontier ([`Clocks::max`]) — it used to
+    /// return a bogus 0.0, which callers would treat as a barrier time.
     pub fn barrier_of(&mut self, ranks: &[usize]) -> f64 {
+        if ranks.is_empty() {
+            return self.max();
+        }
         let max = ranks.iter().map(|&r| self.t[r]).fold(0.0, f64::max);
         for &r in ranks {
             self.t[r] = max;
@@ -133,6 +138,17 @@ mod tests {
         c.advance(1, 5.0);
         c.barrier_of(&[0, 1]);
         assert_eq!(c.now(0), 5.0);
+        assert_eq!(c.now(2), 0.0);
+    }
+
+    #[test]
+    fn empty_subset_barrier_is_noop_and_reports_frontier() {
+        // regression: barrier_of(&[]) returned 0.0 instead of the frontier
+        let mut c = Clocks::new(3);
+        c.advance(1, 4.0);
+        assert_eq!(c.barrier_of(&[]), 4.0);
+        assert_eq!(c.now(0), 0.0, "no clock may move on an empty barrier");
+        assert_eq!(c.now(1), 4.0);
         assert_eq!(c.now(2), 0.0);
     }
 

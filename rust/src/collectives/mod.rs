@@ -6,6 +6,11 @@
 //! what Colossal-AI's 1D TP uses), **tree** broadcast/reduce (the paper's
 //! chosen migration primitives), and **flat** scatter/gather (the
 //! conventional baseline of Table I).
+//!
+//! With the parallel rank engine, the *data* reduction of
+//! [`Comm::all_reduce`] runs as a fixed binary tree whose summation order
+//! depends only on the group size — never on which rank's worker thread
+//! finished first — so results are reproducible at any `--threads`.
 
 pub mod cost;
 
@@ -49,18 +54,32 @@ impl Comm {
         Comm { cost, stats: CommStats::default() }
     }
 
-    /// Ring all-reduce: every rank ends with the elementwise sum.
+    /// All-reduce: every rank ends with the elementwise sum.
     /// Synchronizes all ranks (barrier) then charges ring time.
     /// This is the paper's per-branch collection collective.
+    ///
+    /// The data reduction is a **fixed binary tree**: at stride d the rank
+    /// pairs (i, i+d) combine, so the f32 summation order is a function of
+    /// e alone — never of rank arrival order or thread interleaving — and
+    /// a `--threads 1` run and a `--threads N` run produce bitwise-equal
+    /// sums (the parity invariant of `tests/parallel_determinism.rs`).
+    /// Time is still charged with the ring α-β model the paper assumes.
     pub fn all_reduce(&mut self, clocks: &mut Clocks, bufs: &mut [Tensor]) {
         let e = bufs.len();
         debug_assert_eq!(e, clocks.e());
         let bytes = bufs[0].size_bytes();
-        // data: sum into rank 0's buffer then copy out
-        let (first, rest) = bufs.split_at_mut(1);
-        for b in rest.iter() {
-            first[0].add_assign(b);
+        // data: deterministic tree-reduce into rank 0, then copy out
+        let mut d = 1;
+        while d < e {
+            let mut i = 0;
+            while i + d < e {
+                let (head, tail) = bufs.split_at_mut(i + d);
+                head[i].add_assign(&tail[0]);
+                i += 2 * d;
+            }
+            d *= 2;
         }
+        let (first, rest) = bufs.split_at_mut(1);
         for b in rest.iter_mut() {
             b.data.copy_from_slice(&first[0].data);
         }
@@ -241,6 +260,34 @@ mod tests {
         let per = c.cost.p2p(1000);
         assert!((k.now(0) - 3.0 * per).abs() < 1e-12);
         assert!((k.now(1) - per).abs() < 1e-12);
+    }
+
+    #[test]
+    fn allreduce_tree_order_is_fixed_and_repeatable() {
+        // The tree reduction depends only on e: the same inputs reduce to
+        // bitwise-identical sums on every call, regardless of how skewed
+        // the rank clocks are when the collective fires (the "arrival
+        // order" of the simulated ranks).
+        let mk = |skew: &[f64]| {
+            let mut comm = mk_comm();
+            let mut clocks = Clocks::new(5);
+            for (r, &s) in skew.iter().enumerate() {
+                clocks.advance(r, s);
+            }
+            let mut bufs: Vec<Tensor> = (0..5)
+                .map(|r| {
+                    Tensor::from_vec(&[3], vec![0.1 * r as f32, 1.0 / (r + 1) as f32, 1e-3])
+                })
+                .collect();
+            comm.all_reduce(&mut clocks, &mut bufs);
+            bufs[0].data.clone()
+        };
+        let a = mk(&[0.0, 0.0, 0.0, 0.0, 0.0]);
+        let b = mk(&[9.0, 1.0, 5.0, 0.0, 2.0]);
+        assert_eq!(a, b, "reduction must not depend on rank clock skew");
+        // and the sum is still the exact elementwise sum (f64 reference)
+        let want: f64 = (0..5).map(|r| 0.1 * r as f64).sum();
+        assert!((a[0] as f64 - want).abs() < 1e-6);
     }
 
     #[test]

@@ -184,6 +184,18 @@ pub struct TrainCfg {
     /// really sleep (χ-1)·t on stragglers (paper-literal emulation)
     /// instead of only charging the SimClock
     pub emulate_wall: bool,
+    /// rank-execution worker threads (`--threads`): per-rank executables
+    /// and migration slices run concurrently on a scoped pool, and GEMMs
+    /// of replicated single-call roles split into row panels.  0 = all
+    /// available cores; 1 = the serial engine.  For a fixed balancing
+    /// plan (forced actions, `--gamma` override, baseline) thread count
+    /// never changes results — losses are bitwise thread-count-invariant;
+    /// adaptive strategies re-plan from *measured* timings, which vary
+    /// run to run at any thread count (threads add no new
+    /// nondeterminism).  The `FLEXTP_THREADS` env var seeds the default
+    /// so the fig5–fig11 bench binaries and the test suite pick it up
+    /// without per-binary flags.
+    pub threads: usize,
 }
 
 impl Default for TrainCfg {
@@ -197,8 +209,18 @@ impl Default for TrainCfg {
             seed: 42,
             train_batches: 8,
             emulate_wall: false,
+            threads: env_threads(),
         }
     }
+}
+
+/// Default rank-execution thread count: `FLEXTP_THREADS` when set and
+/// parseable, else 1 (the serial engine).
+pub fn env_threads() -> usize {
+    std::env::var("FLEXTP_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(1)
 }
 
 /// Balancer parameters (paper defaults: θ_iter = 1e-3, α = 0.8).
@@ -315,6 +337,7 @@ pub fn apply_overrides(cfg: &mut RunCfg, kv: &BTreeMap<String, String>) -> Resul
             "alpha" => cfg.balancer.alpha = v.parse().context("alpha")?,
             "no-reduce-merging" => cfg.balancer.reduce_merging = false,
             "emulate-wall" => cfg.train.emulate_wall = true,
+            "threads" => cfg.train.threads = v.parse().context("threads")?,
             "chi" => {
                 let chi: f64 = v.parse().context("chi")?;
                 cfg.stragglers = StragglerPlan::RoundRobin { chi, period_epochs: 1 };
@@ -392,6 +415,16 @@ mod tests {
         assert_eq!(cfg.balancer.strategy, Strategy::Semi);
         assert_eq!(cfg.train.lr, 0.01);
         assert!(matches!(cfg.stragglers, StragglerPlan::RoundRobin { .. }));
+    }
+
+    #[test]
+    fn threads_override_applies() {
+        let mut cfg = RunCfg::new("vit-tiny");
+        let (_, kv) = parse_kv_args(&["--threads".to_string(), "4".to_string()]).unwrap();
+        apply_overrides(&mut cfg, &kv).unwrap();
+        assert_eq!(cfg.train.threads, 4);
+        let (_, kv) = parse_kv_args(&["--threads=bogus".to_string()]).unwrap();
+        assert!(apply_overrides(&mut cfg, &kv).is_err());
     }
 
     #[test]

@@ -61,6 +61,10 @@ fn print_help() {
            --gamma G            force a uniform pruning ratio\n\
            --lambda N           force the MIG group size (Fig. 11)\n\
            --emulate-wall       really sleep (χ-1)·t on stragglers\n\
+           --threads N          parallel rank-execution threads\n\
+                                (0 = all cores, 1 = serial; for a fixed\n\
+                                plan results are bitwise identical at any\n\
+                                N; env default: FLEXTP_THREADS)\n\
            --epochs/--iters/--lr/--momentum/--seed ...\n"
     );
 }
@@ -80,11 +84,12 @@ fn cmd_train(kv: &std::collections::BTreeMap<String, String>) -> Result<()> {
     );
     let mut t = Trainer::new(cfg)?;
     println!(
-        "loaded {} ({} params total, e={} workers, platform={})",
+        "loaded {} ({} params total, e={} workers, platform={}, threads={})",
         t.model().name,
         t.model().params_total,
         t.model().e,
-        t.rt.platform()
+        t.rt.platform(),
+        t.threads(),
     );
     t.warmup_and_pretest()?;
     for epoch in 0..t.cfg.train.epochs {

@@ -72,12 +72,16 @@ impl Tracker {
     }
 
     /// The pri_list itself (to-be-pruned indices, smallest δ first).
+    /// Ties break toward pruning the HIGHER index — the exact reverse of
+    /// [`Tracker::keep_set`]'s ranking, so `pri_list(c)` is always the
+    /// set complement of `keep_set(n − c)` even when δ values collide
+    /// (tied δ used to land the same index in both sets).
     pub fn pri_list(&self, count: usize) -> Vec<u32> {
         let v = self.w_var.as_ref().expect("pri_list requires stats");
         let mut idx: Vec<u32> = (0..self.n as u32).collect();
         idx.sort_by(|&a, &b| {
             let (da, db) = (v[a as usize], v[b as usize]);
-            da.partial_cmp(&db).unwrap().then(a.cmp(&b))
+            da.partial_cmp(&db).unwrap().then(b.cmp(&a))
         });
         idx.truncate(count);
         idx.sort_unstable(); // ascending, per Alg. 1 line 14
@@ -183,11 +187,13 @@ mod tests {
     }
 
     #[test]
-    fn ties_break_deterministically() {
+    fn ties_break_deterministically_and_complementarily() {
         let mut t = Tracker::new(4);
         t.epoch_update(&[0.5, 0.5, 0.5, 0.5], &[]);
+        // keep_set ties keep the lower index; pri_list ties prune the
+        // higher index — so the two stay an exact partition under ties.
         assert_eq!(t.keep_set(2), vec![0, 1]);
-        assert_eq!(t.pri_list(2), vec![0, 1]);
+        assert_eq!(t.pri_list(2), vec![2, 3]);
     }
 
     #[test]

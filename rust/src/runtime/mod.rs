@@ -23,9 +23,9 @@ pub mod native;
 pub mod pjrt;
 pub mod presets;
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
@@ -89,8 +89,16 @@ impl Out {
 ///   body.  All work must happen synchronously inside `execute`, or RT
 ///   measurements lose meaning.
 /// * **Determinism** — same inputs, same outputs (bitwise), so golden
-///   tests and cross-backend checks are reproducible.
-pub trait Backend {
+///   tests and cross-backend checks are reproducible.  This must hold at
+///   any thread count: an executable's result may not depend on what else
+///   runs concurrently.
+/// * **Thread safety** — `Backend` is `Send + Sync`: the parallel rank
+///   engine issues `execute` calls for different ranks concurrently from
+///   scoped worker threads.  Implementations keep per-call state on the
+///   stack (the native backend is stateless beyond the shared read-only
+///   `ModelInfo`) and guard any shared caches with locks (the PJRT
+///   backend's compiled-executable cache).
+pub trait Backend: Send + Sync {
     /// Execute one manifest executable on validated arguments; returns
     /// the outputs plus the measured compute seconds.
     fn execute(&self, spec: &ExecSpec, args: &[Arg]) -> Result<(Vec<Out>, f64)>;
@@ -107,13 +115,15 @@ pub trait Backend {
 pub struct Runtime {
     pub manifest: Manifest,
     backend: Box<dyn Backend>,
-    /// cumulative (calls, seconds) per executable — §Perf profiling
-    timings: RefCell<BTreeMap<String, (u64, f64)>>,
+    /// cumulative (calls, seconds) per executable — §Perf profiling.
+    /// Mutex (not RefCell) so concurrent rank workers can record timings;
+    /// held only for the map update, never across a backend call.
+    timings: Mutex<BTreeMap<String, (u64, f64)>>,
 }
 
 impl Runtime {
     fn with_backend(manifest: Manifest, backend: Box<dyn Backend>) -> Runtime {
-        Runtime { manifest, backend, timings: RefCell::new(BTreeMap::new()) }
+        Runtime { manifest, backend, timings: Mutex::new(BTreeMap::new()) }
     }
 
     /// Open a model on the requested backend.  With [`BackendKind::Native`]
@@ -184,7 +194,7 @@ impl Runtime {
                 spec.outputs.len()
             );
         }
-        let mut t = self.timings.borrow_mut();
+        let mut t = self.timings.lock().expect("timings lock poisoned");
         let e = t.entry(name.to_string()).or_insert((0, 0.0));
         e.0 += 1;
         e.1 += elapsed;
@@ -195,7 +205,8 @@ impl Runtime {
     pub fn timing_profile(&self) -> Vec<(String, u64, f64)> {
         let mut v: Vec<(String, u64, f64)> = self
             .timings
-            .borrow()
+            .lock()
+            .expect("timings lock poisoned")
             .iter()
             .map(|(k, (n, s))| (k.clone(), *n, *s))
             .collect();

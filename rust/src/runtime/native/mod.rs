@@ -27,6 +27,14 @@ use super::manifest::{ExecSpec, Manifest, ModelInfo};
 use super::{Arg, Backend, Out};
 
 /// Stateless native executor for one model's manifest.
+///
+/// The only field is the read-only [`ModelInfo`] shared by every call, so
+/// the backend is trivially `Send + Sync` (the [`Backend`] contract): all
+/// per-rank state — activations, gathered weights, LN caches — lives on
+/// the calling worker's stack inside [`vit::execute`].  Concurrent calls
+/// from the parallel rank engine therefore cannot alias; determinism at
+/// any thread count follows from the panel-parallel GEMM guarantee in
+/// [`crate::tensor::linalg`].
 pub struct NativeBackend {
     model: ModelInfo,
 }

@@ -11,11 +11,20 @@
 //! The offline workspace builds this module against the vendored stub in
 //! `vendor/xla` (compiles, errors at runtime); point `rust/Cargo.toml`'s
 //! `xla` dependency at the real bindings to execute (DESIGN.md §8).
+//!
+//! Thread safety: the [`Backend`] contract is `Send + Sync` (the parallel
+//! rank engine calls `execute` concurrently), so the compiled-executable
+//! cache is a `Mutex<BTreeMap>` of `Arc`s; `execute` itself runs without
+//! that lock.  The vendored stub's handle types are plain data and
+//! satisfy the bounds.  Note the bound is *compile-time*: real PJRT
+//! bindings whose client handles are `!Send`/`!Sync` will not build at
+//! any `--threads` setting — wrap them (internal `Mutex` around the
+//! client + an `unsafe impl Send/Sync` shim whose safety argument is that
+//! every handle access is serialized) — see DESIGN.md §10.
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
@@ -32,7 +41,7 @@ pub struct PjrtBackend {
     client: xla::PjRtClient,
     dir: PathBuf,
     pub manifest: Manifest,
-    cache: RefCell<BTreeMap<String, Rc<CompiledExec>>>,
+    cache: Mutex<BTreeMap<String, Arc<CompiledExec>>>,
 }
 
 impl PjrtBackend {
@@ -45,12 +54,12 @@ impl PjrtBackend {
             client,
             dir: model_dir.to_path_buf(),
             manifest,
-            cache: RefCell::new(BTreeMap::new()),
+            cache: Mutex::new(BTreeMap::new()),
         })
     }
 
-    fn compiled(&self, spec: &ExecSpec) -> Result<Rc<CompiledExec>> {
-        if let Some(c) = self.cache.borrow().get(&spec.name) {
+    fn compiled(&self, spec: &ExecSpec) -> Result<Arc<CompiledExec>> {
+        if let Some(c) = self.cache.lock().expect("pjrt cache poisoned").get(&spec.name) {
             return Ok(c.clone());
         }
         let path = self.dir.join(&spec.file);
@@ -62,8 +71,11 @@ impl PjrtBackend {
             .client
             .compile(&comp)
             .with_context(|| format!("compiling {}", spec.name))?;
-        let c = Rc::new(CompiledExec { exe });
-        self.cache.borrow_mut().insert(spec.name.clone(), c.clone());
+        let c = Arc::new(CompiledExec { exe });
+        self.cache
+            .lock()
+            .expect("pjrt cache poisoned")
+            .insert(spec.name.clone(), c.clone());
         Ok(c)
     }
 }

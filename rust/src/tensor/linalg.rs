@@ -6,21 +6,140 @@
 //! columns so one B panel (`BLOCK_K × BLOCK_N` ≈ 64 KiB) stays resident in
 //! L1/L2 while a C row segment is swept — the cache-friendly layout that
 //! makes the fig5–fig11 bench timings scale with the arithmetic actually
-//! performed instead of with memory stalls.  All kernels are
-//! single-threaded on purpose: the simulated worker group executes ranks
-//! sequentially and charges measured wall time to per-rank `SimClock`s, so
-//! per-call determinism matters more than parallel throughput.
+//! performed instead of with memory stalls.
+//!
+//! # Intra-op parallelism (and why it stays bitwise deterministic)
+//!
+//! Each kernel can split its work across **row panels** on scoped OS
+//! threads ([`set_gemm_threads`] / `--threads`).  Every output element is
+//! owned by exactly one panel and its accumulation order is identical to
+//! the serial kernel's (`A·B` / `A·Bᵀ` split output rows; `Aᵀ·B` splits
+//! output rows = A columns, accumulating over the shared `m` dimension in
+//! the same ascending order the serial loop uses).  f32 addition is
+//! deterministic for a fixed operand order, so a 1-thread and an N-thread
+//! run produce **bit-identical** results — the property the trainer's
+//! serial/parallel parity suite (`tests/parallel_determinism.rs`) pins.
+//!
+//! The rank-execution pool ([`crate::train::parallel::RankPool`]) runs its
+//! workers under [`with_gemm_threads`]`(1, ..)` so rank-level and GEMM-level
+//! parallelism never oversubscribe the same cores; the trainer wraps its
+//! replicated single-call roles (embed/head) in
+//! [`with_gemm_threads`]`(threads, ..)` so those still fan out.
+//! [`set_gemm_threads`] sets the *process-wide default* for standalone
+//! kernel use outside a trainer.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Contraction-dimension tile (rows of a B panel).
 const BLOCK_K: usize = 64;
 /// Output-column tile (columns of a B panel).
 const BLOCK_N: usize = 256;
+/// Below this many multiply-adds a GEMM stays serial: thread spawn costs
+/// more than the arithmetic saved.
+const PAR_MIN_FLOPS: usize = 1 << 17;
+
+/// Process-wide default intra-op thread count (serial unless raised via
+/// [`set_gemm_threads`]; the trainer scopes its width per call instead).
+static GEMM_THREADS: AtomicUsize = AtomicUsize::new(1);
+
+thread_local! {
+    /// Per-thread override (0 = defer to the global). Rank-pool workers
+    /// set 1 here so nested parallelism cannot oversubscribe.
+    static GEMM_THREADS_TLS: Cell<usize> = const { Cell::new(0) };
+}
+
+/// `0` = all available cores (shared convention with `--threads`).
+fn resolve(n: usize) -> usize {
+    if n == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        n
+    }
+}
+
+/// Set the process-wide GEMM thread count. `0` = all available cores.
+/// Thread count never changes results (see module docs), only speed.
+pub fn set_gemm_threads(n: usize) {
+    GEMM_THREADS.store(resolve(n), Ordering::Relaxed);
+}
+
+/// Effective GEMM thread count on the calling thread.
+pub fn gemm_threads() -> usize {
+    let tls = GEMM_THREADS_TLS.with(|c| c.get());
+    if tls != 0 {
+        tls
+    } else {
+        GEMM_THREADS.load(Ordering::Relaxed)
+    }
+}
+
+/// Run `f` with the calling thread's GEMM parallelism overridden to `n`
+/// (restored on exit, panic-safe).  `0` = all available cores, matching
+/// [`set_gemm_threads`]; the 0-as-defer sentinel stays internal to the
+/// TLS cell.
+pub fn with_gemm_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            GEMM_THREADS_TLS.with(|c| c.set(self.0));
+        }
+    }
+    let prev = GEMM_THREADS_TLS.with(|c| c.get());
+    let _restore = Restore(prev);
+    GEMM_THREADS_TLS.with(|c| c.set(resolve(n)));
+    f()
+}
+
+/// Threads worth using for `flops` multiply-adds over `rows` splittable
+/// row panels.
+fn panel_threads(flops: usize, rows: usize) -> usize {
+    if flops < PAR_MIN_FLOPS {
+        return 1;
+    }
+    gemm_threads().min(rows)
+}
+
+/// Split `rows` into `t` contiguous nearly-equal panels: `(start, len)`.
+fn row_panels(rows: usize, t: usize) -> Vec<(usize, usize)> {
+    let mut panels = Vec::with_capacity(t);
+    let mut start = 0;
+    for i in 0..t {
+        let len = (rows - start).div_ceil(t - i);
+        panels.push((start, len));
+        start += len;
+    }
+    debug_assert_eq!(start, rows);
+    panels
+}
 
 /// `c += a · b` for row-major `a [m,k]`, `b [k,n]`, `c [m,n]`.
 pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
+    let t = panel_threads(m * k * n, m);
+    if t <= 1 {
+        matmul_acc_rows(c, a, b, m, k, n);
+        return;
+    }
+    // Row-panel split: each worker owns a disjoint C/A row slice, so every
+    // row is computed by exactly the serial kernel — bitwise identical.
+    std::thread::scope(|s| {
+        let mut c_rest = c;
+        let mut a_rest = a;
+        for (_, rows) in row_panels(m, t) {
+            let (c_chunk, c_tail) = c_rest.split_at_mut(rows * n);
+            let (a_chunk, a_tail) = a_rest.split_at(rows * k);
+            c_rest = c_tail;
+            a_rest = a_tail;
+            s.spawn(move || matmul_acc_rows(c_chunk, a_chunk, b, rows, k, n));
+        }
+    });
+}
+
+/// The serial blocked kernel body (one row panel).
+fn matmul_acc_rows(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
     for k0 in (0..k).step_by(BLOCK_K) {
         let k1 = (k0 + BLOCK_K).min(k);
         for n0 in (0..n).step_by(BLOCK_N) {
@@ -50,25 +169,56 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
 }
 
 /// `aᵀ · b` for row-major `a [m,ka]`, `b [m,n]` → `[ka,n]` (the
-/// weight-gradient shape: both operands are walked row-contiguously).
+/// weight-gradient shape).  Parallel panels split the *output* rows
+/// (= A columns); each element accumulates over `i ∈ 0..m` in the same
+/// ascending order as the serial kernel, so results are bit-identical
+/// at any thread count.
 pub fn matmul_at_b(a: &[f32], b: &[f32], m: usize, ka: usize, n: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * ka);
     debug_assert_eq!(b.len(), m * n);
     let mut c = vec![0.0f32; ka * n];
+    let t = panel_threads(m * ka * n, ka);
+    if t <= 1 {
+        matmul_at_b_panel(&mut c, a, b, m, 0, ka, ka, n);
+        return c;
+    }
+    std::thread::scope(|s| {
+        let mut c_rest = c.as_mut_slice();
+        for (l0, rows) in row_panels(ka, t) {
+            let (c_chunk, tail) = c_rest.split_at_mut(rows * n);
+            c_rest = tail;
+            s.spawn(move || matmul_at_b_panel(c_chunk, a, b, m, l0, l0 + rows, ka, n));
+        }
+    });
+    c
+}
+
+/// One `aᵀ·b` output-row panel: `c_chunk` covers rows `[l0, l1)`.
+fn matmul_at_b_panel(
+    c_chunk: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    l0: usize,
+    l1: usize,
+    ka: usize,
+    n: usize,
+) {
+    debug_assert_eq!(c_chunk.len(), (l1 - l0) * n);
     for i in 0..m {
         let a_row = &a[i * ka..(i + 1) * ka];
         let b_row = &b[i * n..(i + 1) * n];
-        for (l, &av) in a_row.iter().enumerate() {
+        for l in l0..l1 {
+            let av = a_row[l];
             if av == 0.0 {
                 continue;
             }
-            let c_row = &mut c[l * n..(l + 1) * n];
+            let c_row = &mut c_chunk[(l - l0) * n..(l - l0 + 1) * n];
             for (cv, bv) in c_row.iter_mut().zip(b_row) {
                 *cv += av * bv;
             }
         }
     }
-    c
 }
 
 /// `a · bᵀ` for row-major `a [m,k]`, `b [nb,k]` → `[m,nb]` (the
@@ -77,6 +227,27 @@ pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, k: usize, nb: usize) -> Vec<f
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), nb * k);
     let mut c = vec![0.0f32; m * nb];
+    let t = panel_threads(m * k * nb, m);
+    if t <= 1 {
+        matmul_a_bt_rows(&mut c, a, b, m, k, nb);
+        return c;
+    }
+    std::thread::scope(|s| {
+        let mut c_rest = c.as_mut_slice();
+        let mut a_rest = a;
+        for (_, rows) in row_panels(m, t) {
+            let (c_chunk, c_tail) = c_rest.split_at_mut(rows * nb);
+            let (a_chunk, a_tail) = a_rest.split_at(rows * k);
+            c_rest = c_tail;
+            a_rest = a_tail;
+            s.spawn(move || matmul_a_bt_rows(c_chunk, a_chunk, b, rows, k, nb));
+        }
+    });
+    c
+}
+
+/// Serial `a·bᵀ` body (one row panel).
+fn matmul_a_bt_rows(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, nb: usize) {
     for i in 0..m {
         let a_row = &a[i * k..(i + 1) * k];
         let c_row = &mut c[i * nb..(i + 1) * nb];
@@ -84,7 +255,6 @@ pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, k: usize, nb: usize) -> Vec<f
             *cv = dot(a_row, &b[j * k..(j + 1) * k]);
         }
     }
-    c
 }
 
 /// Dense dot product (accumulated in f32, matching XLA's CPU default).
@@ -163,5 +333,60 @@ mod tests {
         let mut c = vec![10.0, 10.0, 10.0, 10.0];
         matmul_acc(&mut c, &a, &b, 2, 2, 2);
         assert_eq!(c, vec![11.0, 12.0, 13.0, 14.0]);
+    }
+
+    #[test]
+    fn row_panels_tile_exactly() {
+        for rows in [1usize, 2, 7, 64, 129] {
+            for t in 1..=8usize.min(rows) {
+                let panels = row_panels(rows, t);
+                assert_eq!(panels.len(), t);
+                let mut next = 0;
+                for (start, len) in panels {
+                    assert_eq!(start, next);
+                    assert!(len > 0);
+                    next = start + len;
+                }
+                assert_eq!(next, rows);
+            }
+        }
+    }
+
+    #[test]
+    fn all_kernels_bitwise_identical_across_thread_counts() {
+        // Big enough to clear PAR_MIN_FLOPS so the parallel path engages.
+        let mut rng = Rng::new(31);
+        let (m, k, n) = (67, 129, 93);
+        let a = rng.normal_vec(m * k, 1.0);
+        let b = rng.normal_vec(k * n, 1.0);
+        let bt = rng.normal_vec(n * k, 1.0);
+        let b2 = rng.normal_vec(m * n, 1.0);
+        let serial = with_gemm_threads(1, || {
+            (
+                matmul(&a, &b, m, k, n),
+                matmul_at_b(&a, &b2, m, k, n),
+                matmul_a_bt(&a, &bt, m, k, n),
+            )
+        });
+        for t in [2usize, 3, 4, 7] {
+            let par = with_gemm_threads(t, || {
+                (
+                    matmul(&a, &b, m, k, n),
+                    matmul_at_b(&a, &b2, m, k, n),
+                    matmul_a_bt(&a, &bt, m, k, n),
+                )
+            });
+            assert_eq!(serial.0, par.0, "matmul differs at t={t}");
+            assert_eq!(serial.1, par.1, "matmul_at_b differs at t={t}");
+            assert_eq!(serial.2, par.2, "matmul_a_bt differs at t={t}");
+        }
+    }
+
+    #[test]
+    fn gemm_thread_override_scopes_and_restores() {
+        let global = gemm_threads();
+        let inner = with_gemm_threads(3, gemm_threads);
+        assert_eq!(inner, 3);
+        assert_eq!(gemm_threads(), global);
     }
 }

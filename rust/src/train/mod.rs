@@ -1,6 +1,8 @@
-//! Training layer: SGD optimizer, the Algorithm-2 pretest, and the
-//! lock-step [`trainer::Trainer`] engine.
+//! Training layer: SGD optimizer, the Algorithm-2 pretest, the scoped
+//! rank-execution pool ([`parallel`]), and the lock-step
+//! [`trainer::Trainer`] engine.
 
+pub mod parallel;
 pub mod trainer;
 
 use std::collections::BTreeMap;

@@ -1,0 +1,168 @@
+//! The scoped rank-execution pool behind the parallel trainer.
+//!
+//! One simulated iteration fans the E ranks' independent work (branch
+//! executables, migration receiver slices) out over OS threads and joins
+//! at the existing collective boundaries.  Determinism is preserved by
+//! construction, not by luck:
+//!
+//! * workers only *compute* — every mutation of shared trainer state
+//!   (SimClock charges, `m_gemm` accounting, partial-sum merging, comm
+//!   stats) happens afterwards on the coordinator thread, in rank order,
+//!   exactly as the serial engine did;
+//! * results come back indexed by rank, so reductions consume them in a
+//!   fixed order no matter which worker finished first;
+//! * workers run their kernels under [`linalg::with_gemm_threads`]`(1, ..)`
+//!   so rank-level and GEMM-level parallelism never stack up on the same
+//!   cores.
+//!
+//! With `threads == 1` the pool degenerates to an inline loop over the
+//! same closure — the 1-thread and N-thread paths execute identical
+//! arithmetic, which is what `tests/parallel_determinism.rs` pins
+//! bitwise.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::Result;
+
+use crate::tensor::linalg;
+
+/// Resolve a `--threads` request: `0` means "all available cores".
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
+/// A fixed-width pool of scoped worker threads for per-rank jobs.
+///
+/// `std::thread::scope` keeps everything borrow-checked against the
+/// trainer's state (no `'static` bounds, no new dependencies); workers
+/// pull job indices from a shared atomic counter, so a straggling rank
+/// with a pruned (cheap) executable doesn't idle a whole thread.
+///
+/// Trade-off: each [`RankPool::run`] spawns and joins fresh OS threads
+/// (~tens of µs per worker) rather than keeping a persistent
+/// channel-fed pool.  That overhead is noise for the kernels that
+/// dominate the fig5–fig11 / e2e models, and zero at `threads == 1`; if
+/// a future workload fans out sub-100µs jobs per phase, replace the
+/// scope with a long-lived worker + job-channel design.
+#[derive(Debug)]
+pub struct RankPool {
+    threads: usize,
+}
+
+impl RankPool {
+    pub fn new(requested: usize) -> RankPool {
+        RankPool { threads: resolve_threads(requested) }
+    }
+
+    /// The resolved worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0), f(1), …, f(n-1)` concurrently and return the results in
+    /// index order.  Errors propagate deterministically: the lowest-index
+    /// failure wins regardless of completion order.  A panicking job
+    /// propagates the panic to the caller.
+    pub fn run<T, F>(&self, n: usize, f: F) -> Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(usize) -> Result<T> + Sync,
+    {
+        let workers = self.threads.min(n);
+        if workers <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let mut slots: Vec<Option<Result<T>>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(workers);
+            for _ in 0..workers {
+                let next = &next;
+                let f = &f;
+                handles.push(s.spawn(move || {
+                    let mut done: Vec<(usize, Result<T>)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        // nested GEMM fan-out would oversubscribe the
+                        // pool's cores — rank jobs run kernels serially
+                        done.push((i, linalg::with_gemm_threads(1, || f(i))));
+                    }
+                    done
+                }));
+            }
+            for h in handles {
+                match h.join() {
+                    Ok(done) => {
+                        for (i, r) in done {
+                            slots[i] = Some(r);
+                        }
+                    }
+                    // re-raise the worker's panic with its original payload
+                    Err(payload) => std::panic::resume_unwind(payload),
+                }
+            }
+        });
+        slots
+            .into_iter()
+            .map(|slot| slot.expect("rank job never ran"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::bail;
+
+    #[test]
+    fn results_come_back_in_index_order() {
+        for threads in [1usize, 2, 4, 9] {
+            let pool = RankPool::new(threads);
+            let out = pool.run(17, |i| Ok(i * i)).unwrap();
+            assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn lowest_index_error_wins() {
+        let pool = RankPool::new(4);
+        let err = pool
+            .run(8, |i| {
+                if i % 2 == 1 {
+                    bail!("job {i} failed")
+                }
+                Ok(i)
+            })
+            .unwrap_err();
+        assert_eq!(err.to_string(), "job 1 failed");
+    }
+
+    #[test]
+    fn zero_requests_resolve_to_at_least_one() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+        assert!(RankPool::new(0).threads() >= 1);
+    }
+
+    #[test]
+    fn empty_job_list_is_fine() {
+        let pool = RankPool::new(4);
+        let out: Vec<usize> = pool.run(0, |_| unreachable!()).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn workers_see_serial_gemm_override() {
+        let pool = RankPool::new(2);
+        let widths = pool.run(4, |_| Ok(linalg::gemm_threads())).unwrap();
+        assert!(widths.iter().all(|&w| w == 1), "workers must not nest GEMM fan-out");
+    }
+}

@@ -9,6 +9,21 @@
 //! rank's skewness χ (the paper's sleep injection); collectives charge
 //! the α-β model; RT = Σ_iters max-rank sim time.
 //!
+//! # Parallel rank execution
+//!
+//! Between collective boundaries the E simulated ranks are independent, so
+//! their branch executables (and migration receiver slices) run
+//! concurrently on a scoped thread pool ([`RankPool`], `--threads`).  The
+//! engine keeps the serial semantics exactly: workers only *compute*;
+//! every SimClock charge, `M_i` accumulation, comm-stat update, and
+//! partial-sum merge happens afterwards on the coordinator thread in rank
+//! order, and [`Comm::all_reduce`] reduces over a fixed binary tree — so
+//! for a fixed balancing plan a `--threads 1` and a `--threads N` run
+//! produce bitwise-identical losses
+//! (pinned by `tests/parallel_determinism.rs`).  Real wall-clock drops
+//! toward `max_i(rank i work)` per phase while the *simulated* clocks keep
+//! the paper's lock-step accounting.
+//!
 //! Balancing hooks: the [`Balancer`] contributes per-rank [`WorkerAction`]s
 //! each iteration — pruned executables + keep sets for ZERO-resizing,
 //! migration plans whose receiver slices run here with reduce-merging.
@@ -21,12 +36,14 @@ use crate::collectives::{cost::CostModel, Comm};
 use crate::config::{Imputation, MigPolicy, RunCfg, Strategy};
 use crate::data::{Batch, SynthData};
 use crate::metrics::{EpochMetrics, RunReport};
+use crate::migration::Chunk;
 use crate::model::{BlockGrads, ModelState};
 use crate::resizing::lineage::{impute_cols, impute_rows, Lineage};
 use crate::runtime::{Arg, Out, Runtime};
 use crate::semi::CostFns;
 use crate::straggler::{Injector, Monitor};
-use crate::tensor::Tensor;
+use crate::tensor::{linalg, Tensor};
+use crate::train::parallel::RankPool;
 use crate::train::Sgd;
 
 pub struct Trainer {
@@ -41,6 +58,8 @@ pub struct Trainer {
     pub opt: Sgd,
     pub report: RunReport,
     pub costs: CostFns,
+    /// scoped thread pool running per-rank work between collectives
+    pool: RankPool,
     injector: Injector,
     /// previous-iteration grads per (worker, block) — Same policy only
     prev_grads: Option<Vec<Vec<BlockGrads>>>,
@@ -83,7 +102,9 @@ impl Trainer {
         } else {
             None
         };
+        let pool = RankPool::new(cfg.train.threads);
         Ok(Trainer {
+            pool,
             injector: Injector::homogeneous(m.e),
             cfg,
             rt,
@@ -108,6 +129,20 @@ impl Trainer {
 
     pub fn model(&self) -> &crate::runtime::manifest::ModelInfo {
         &self.rt.manifest.model
+    }
+
+    /// Resolved rank-execution thread count (`--threads`, 0 = all cores).
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Backend call with this trainer's intra-op GEMM fan-out — used for
+    /// the replicated single-call roles (embed/head) executed on the
+    /// coordinator thread.  Scoped per call (not a process global) so
+    /// concurrently live trainers with different `--threads` settings
+    /// cannot stomp each other's width.
+    fn call_wide(&self, name: &str, args: &[Arg]) -> Result<(Vec<Out>, f64)> {
+        linalg::with_gemm_threads(self.pool.threads(), || self.rt.call(name, args))
     }
 
     /// Full run: warmup/pretest, then epochs of train + eval.
@@ -246,7 +281,7 @@ impl Trainer {
         // ---- forward -------------------------------------------------
         // embed (replicated): execute once, charge every rank
         let rep = self.state.rep.clone();
-        let (outs, t) = self.rt.call(
+        let (outs, t) = self.call_wide(
             "embed_fwd",
             &[
                 Arg::F32(&batch.patches),
@@ -276,7 +311,7 @@ impl Trainer {
 
         // ---- head (replicated fwd+bwd) --------------------------------
         let labels = batch.labels.clone();
-        let (outs, t) = self.rt.call(
+        let (outs, t) = self.call_wide(
             "head_fwdbwd",
             &[
                 Arg::F32(&x),
@@ -311,7 +346,7 @@ impl Trainer {
         }
 
         // embed bwd (replicated)
-        let (outs, t) = self.rt.call(
+        let (outs, t) = self.call_wide(
             "embed_bwd",
             &[
                 Arg::F32(&batch.patches),
@@ -357,6 +392,11 @@ impl Trainer {
     }
 
     // ---- branch executions -------------------------------------------
+    //
+    // Each branch fans the E independent rank executables out on the
+    // RankPool, then applies clock charges / M_i accounting / merges on
+    // the coordinator thread in rank order — identical arithmetic to the
+    // serial engine at any thread count.
 
     fn attn_fwd_partials(
         &mut self,
@@ -366,14 +406,15 @@ impl Trainer {
         m_gemm: &mut [f64],
     ) -> Result<Vec<Tensor>> {
         let e = self.model().e;
-        let mut partials = Vec::with_capacity(e);
-        for w in 0..e {
+        let rt = &self.rt;
+        let state = &self.state;
+        let results = self.pool.run(e, |w| {
             let p = &actions[w].layers[k];
-            let name = self.rt.manifest.attn_name("fwd", &p.attn_bucket);
+            let name = rt.manifest.attn_name("fwd", &p.attn_bucket);
             let idx: Vec<i32> = p.attn_keep.iter().map(|&i| i as i32).collect();
             let mask = Tensor::full(&[idx.len()], 1.0);
-            let b = &self.state.shards[w][k];
-            let (outs, t) = self.rt.call(
+            let b = &state.shards[w][k];
+            let (outs, t) = rt.call(
                 &name,
                 &[
                     Arg::F32(x),
@@ -385,9 +426,13 @@ impl Trainer {
                     Arg::F32(&mask),
                 ],
             )?;
+            Ok((into1(outs)?, t))
+        })?;
+        let mut partials = Vec::with_capacity(e);
+        for (w, (y, t)) in results.into_iter().enumerate() {
             self.injector.charge(&mut self.clocks, w, t);
             m_gemm[w] += t * self.injector.chi[w];
-            partials.push(into1(outs)?);
+            partials.push(y);
         }
         Ok(partials)
     }
@@ -400,16 +445,17 @@ impl Trainer {
         m_gemm: &mut [f64],
     ) -> Result<Vec<Tensor>> {
         let e = self.model().e;
-        let mut partials = Vec::with_capacity(e);
-        for w in 0..e {
+        let rt = &self.rt;
+        let state = &self.state;
+        let results = self.pool.run(e, |w| {
             let p = &actions[w].layers[k];
-            let name = self.rt.manifest.mlp_name("fwd", &p.mlp_b1, &p.mlp_b2);
+            let name = rt.manifest.mlp_name("fwd", &p.mlp_b1, &p.mlp_b2);
             let idx1: Vec<i32> = p.mlp_keep1.iter().map(|&i| i as i32).collect();
             let idx2: Vec<i32> = p.mlp_keep2.iter().map(|&i| i as i32).collect();
             let mask1 = Tensor::full(&[idx1.len()], 1.0);
             let mask2 = Tensor::full(&[idx2.len()], 1.0);
-            let b = &self.state.shards[w][k];
-            let (outs, t) = self.rt.call(
+            let b = &state.shards[w][k];
+            let (outs, t) = rt.call(
                 &name,
                 &[
                     Arg::F32(x),
@@ -423,12 +469,16 @@ impl Trainer {
                     Arg::F32(&mask2),
                 ],
             )?;
+            Ok((into1(outs)?, t))
+        })?;
+        let mut partials = Vec::with_capacity(e);
+        for (w, (y, t)) in results.into_iter().enumerate() {
             self.injector.charge(&mut self.clocks, w, t);
             m_gemm[w] += t * self.injector.chi[w];
-            partials.push(into1(outs)?);
+            partials.push(y);
         }
         // migration: receivers compute stragglers' slices (fwd direction)
-        self.run_migration(x, k, actions, m_gemm, &mut partials, None)?;
+        self.run_migration(x, k, actions, m_gemm, &mut partials, None, None)?;
         Ok(partials)
     }
 
@@ -442,18 +492,17 @@ impl Trainer {
         block_grads: &mut [Vec<BlockGrads>],
     ) -> Result<Tensor> {
         let e = self.model().e;
-        let mut dx_parts = Vec::with_capacity(e);
-        let mut dg_parts = Vec::with_capacity(e);
-        let mut db_parts = Vec::with_capacity(e);
-        for w in 0..e {
+        let rt = &self.rt;
+        let state = &self.state;
+        let results = self.pool.run(e, |w| {
             let p = &actions[w].layers[k];
-            let name = self.rt.manifest.mlp_name("bwd", &p.mlp_b1, &p.mlp_b2);
+            let name = rt.manifest.mlp_name("bwd", &p.mlp_b1, &p.mlp_b2);
             let idx1: Vec<i32> = p.mlp_keep1.iter().map(|&i| i as i32).collect();
             let idx2: Vec<i32> = p.mlp_keep2.iter().map(|&i| i as i32).collect();
             let mask1 = Tensor::full(&[idx1.len()], 1.0);
             let mask2 = Tensor::full(&[idx2.len()], 1.0);
-            let b = &self.state.shards[w][k];
-            let (outs, t) = self.rt.call(
+            let b = &state.shards[w][k];
+            let (outs, t) = rt.call(
                 &name,
                 &[
                     Arg::F32(x_in),
@@ -468,14 +517,27 @@ impl Trainer {
                     Arg::F32(dy),
                 ],
             )?;
+            let mut it = outs.into_iter();
+            Ok((
+                it.next().unwrap().tensor()?,
+                it.next().unwrap().tensor()?,
+                it.next().unwrap().tensor()?,
+                it.next().unwrap().tensor()?,
+                it.next().unwrap().tensor()?,
+                t,
+            ))
+        })?;
+        let mut dx_parts = Vec::with_capacity(e);
+        let mut dg_parts = Vec::with_capacity(e);
+        let mut db_parts = Vec::with_capacity(e);
+        for (w, (dx, dg, db, dw1, dw2, t)) in results.into_iter().enumerate() {
             self.injector.charge(&mut self.clocks, w, t);
             m_gemm[w] += t * self.injector.chi[w];
-            let mut it = outs.into_iter();
-            dx_parts.push(it.next().unwrap().tensor()?);
-            dg_parts.push(it.next().unwrap().tensor()?);
-            db_parts.push(it.next().unwrap().tensor()?);
-            block_grads[w][k].w1 = it.next().unwrap().tensor()?;
-            block_grads[w][k].w2 = it.next().unwrap().tensor()?;
+            dx_parts.push(dx);
+            dg_parts.push(dg);
+            db_parts.push(db);
+            block_grads[w][k].w1 = dw1;
+            block_grads[w][k].w2 = dw2;
         }
         // migration backward: receivers compute grads of migrated slices
         self.run_migration(
@@ -484,7 +546,8 @@ impl Trainer {
             actions,
             m_gemm,
             &mut dx_parts,
-            Some((dy, block_grads, &mut dg_parts, &mut db_parts)),
+            Some(dy),
+            Some((&mut *block_grads, &mut dg_parts, &mut db_parts)),
         )?;
         self.comm.all_reduce(&mut self.clocks, &mut dg_parts);
         self.comm.all_reduce(&mut self.clocks, &mut db_parts);
@@ -506,16 +569,15 @@ impl Trainer {
         block_grads: &mut [Vec<BlockGrads>],
     ) -> Result<Tensor> {
         let e = self.model().e;
-        let mut dx_parts = Vec::with_capacity(e);
-        let mut dg_parts = Vec::with_capacity(e);
-        let mut db_parts = Vec::with_capacity(e);
-        for w in 0..e {
+        let rt = &self.rt;
+        let state = &self.state;
+        let results = self.pool.run(e, |w| {
             let p = &actions[w].layers[k];
-            let name = self.rt.manifest.attn_name("bwd", &p.attn_bucket);
+            let name = rt.manifest.attn_name("bwd", &p.attn_bucket);
             let idx: Vec<i32> = p.attn_keep.iter().map(|&i| i as i32).collect();
             let mask = Tensor::full(&[idx.len()], 1.0);
-            let b = &self.state.shards[w][k];
-            let (outs, t) = self.rt.call(
+            let b = &state.shards[w][k];
+            let (outs, t) = rt.call(
                 &name,
                 &[
                     Arg::F32(x_in),
@@ -528,14 +590,27 @@ impl Trainer {
                     Arg::F32(dy),
                 ],
             )?;
+            let mut it = outs.into_iter();
+            Ok((
+                it.next().unwrap().tensor()?,
+                it.next().unwrap().tensor()?,
+                it.next().unwrap().tensor()?,
+                it.next().unwrap().tensor()?,
+                it.next().unwrap().tensor()?,
+                t,
+            ))
+        })?;
+        let mut dx_parts = Vec::with_capacity(e);
+        let mut dg_parts = Vec::with_capacity(e);
+        let mut db_parts = Vec::with_capacity(e);
+        for (w, (dx, dg, db, dwqkv, dwo, t)) in results.into_iter().enumerate() {
             self.injector.charge(&mut self.clocks, w, t);
             m_gemm[w] += t * self.injector.chi[w];
-            let mut it = outs.into_iter();
-            dx_parts.push(it.next().unwrap().tensor()?);
-            dg_parts.push(it.next().unwrap().tensor()?);
-            db_parts.push(it.next().unwrap().tensor()?);
-            block_grads[w][k].wqkv = it.next().unwrap().tensor()?;
-            block_grads[w][k].wo = it.next().unwrap().tensor()?;
+            dx_parts.push(dx);
+            dg_parts.push(dg);
+            db_parts.push(db);
+            block_grads[w][k].wqkv = dwqkv;
+            block_grads[w][k].wo = dwo;
         }
         self.comm.all_reduce(&mut self.clocks, &mut dg_parts);
         self.comm.all_reduce(&mut self.clocks, &mut db_parts);
@@ -548,9 +623,15 @@ impl Trainer {
     }
 
     /// Execute migration receiver slices for every straggler's plan at
-    /// block k.  Fwd when `bwd` is None, bwd otherwise.  Partials merge
-    /// into `partials[receiver]` (reduce-merging) or are sent back to the
-    /// straggler (scatter-gather / merging disabled).
+    /// block k.  Fwd when `dy` is None, bwd otherwise (`bwd` carries the
+    /// gradient sinks and must be Some exactly when `dy` is).  Partials
+    /// merge into `partials[receiver]` (reduce-merging) or are sent back
+    /// to the straggler (scatter-gather / merging disabled).
+    ///
+    /// Receiver slices across all stragglers are independent, so they run
+    /// concurrently on the pool; weight-movement collectives, clock
+    /// charges, and merges replay afterwards in the serial engine's exact
+    /// nested order (straggler → receiver → chunk).
     #[allow(clippy::type_complexity)]
     fn run_migration(
         &mut self,
@@ -559,18 +640,89 @@ impl Trainer {
         actions: &[WorkerAction],
         m_gemm: &mut [f64],
         partials: &mut [Tensor],
-        mut bwd: Option<(&Tensor, &mut [Vec<BlockGrads>], &mut Vec<Tensor>, &mut Vec<Tensor>)>,
+        dy: Option<&Tensor>,
+        mut bwd: Option<(&mut [Vec<BlockGrads>], &mut Vec<Tensor>, &mut Vec<Tensor>)>,
     ) -> Result<()> {
+        debug_assert_eq!(dy.is_some(), bwd.is_some(), "dy and bwd sinks travel together");
         let m = self.rt.manifest.model.clone();
+        // job list in replay order: (straggler, receiver rank, chunk)
+        let mut jobs: Vec<(usize, usize, Chunk)> = Vec::new();
+        for w in 0..m.e {
+            let Some(mig) = &actions[w].mig else { continue };
+            for rw in &mig.receivers {
+                for chunk in &rw.chunks {
+                    jobs.push((w, rw.rank, chunk.clone()));
+                }
+            }
+        }
+        if jobs.is_empty() {
+            return Ok(());
+        }
+
+        // ---- concurrent slice execution (compute only, no shared state)
+        let rt = &self.rt;
+        let state = &self.state;
+        let outs = self.pool.run(jobs.len(), |j| {
+            let (w, _receiver, chunk) = &jobs[j];
+            let mig = actions[*w].mig.as_ref().expect("job built from a plan");
+            let cols: Vec<u32> = mig.migrated[chunk.start..chunk.start + chunk.len].to_vec();
+            let shard = &state.shards[*w][k];
+            let w1c = shard.w1.gather_cols(&cols).pad_cols(chunk.kb);
+            let w2c = shard.w2.gather_rows(&cols).pad_rows(chunk.kb);
+            match dy {
+                None => {
+                    let name = rt.manifest.mig_name("fwd", chunk.kb);
+                    let (outs, t) = rt.call(
+                        &name,
+                        &[
+                            Arg::F32(x),
+                            Arg::F32(&shard.ln2_g),
+                            Arg::F32(&shard.ln2_b),
+                            Arg::F32(&w1c),
+                            Arg::F32(&w2c),
+                        ],
+                    )?;
+                    Ok((MigOut::Fwd(into1(outs)?), t))
+                }
+                Some(dy) => {
+                    let name = rt.manifest.mig_name("bwd", chunk.kb);
+                    let (outs, t) = rt.call(
+                        &name,
+                        &[
+                            Arg::F32(x),
+                            Arg::F32(&shard.ln2_g),
+                            Arg::F32(&shard.ln2_b),
+                            Arg::F32(&w1c),
+                            Arg::F32(&w2c),
+                            Arg::F32(dy),
+                        ],
+                    )?;
+                    let mut it = outs.into_iter();
+                    Ok((
+                        MigOut::Bwd {
+                            dx: it.next().unwrap().tensor()?,
+                            dg: it.next().unwrap().tensor()?,
+                            db: it.next().unwrap().tensor()?,
+                            dw1c: it.next().unwrap().tensor()?,
+                            dw2c: it.next().unwrap().tensor()?,
+                        },
+                        t,
+                    ))
+                }
+            }
+        })?;
+
+        // ---- serial replay: collectives, charges, merges in rank order
         let policy = self.cfg.balancer.mig_policy;
         let merging =
             self.cfg.balancer.reduce_merging && policy == MigPolicy::BroadcastReduce;
         let msg_bytes = m.bs * m.seq * m.hs * 4;
+        let mut results = outs.into_iter();
         for w in 0..m.e {
             let Some(mig) = actions[w].mig.clone() else { continue };
             let receivers: Vec<usize> = mig.receivers.iter().map(|r| r.rank).collect();
             // weight movement (fwd only — receivers keep them for bwd)
-            if bwd.is_none() {
+            if dy.is_none() {
                 match policy {
                     MigPolicy::BroadcastReduce => self.comm.broadcast(
                         &mut self.clocks,
@@ -584,29 +736,13 @@ impl Trainer {
                     }
                 }
             }
-            let shard = self.state.shards[w][k].clone();
             for rw in &mig.receivers {
                 for chunk in &rw.chunks {
-                    let cols: Vec<u32> =
-                        mig.migrated[chunk.start..chunk.start + chunk.len].to_vec();
-                    let w1c = shard.w1.gather_cols(&cols).pad_cols(chunk.kb);
-                    let w2c = shard.w2.gather_rows(&cols).pad_rows(chunk.kb);
-                    match &mut bwd {
-                        None => {
-                            let name = self.rt.manifest.mig_name("fwd", chunk.kb);
-                            let (outs, t) = self.rt.call(
-                                &name,
-                                &[
-                                    Arg::F32(x),
-                                    Arg::F32(&shard.ln2_g),
-                                    Arg::F32(&shard.ln2_b),
-                                    Arg::F32(&w1c),
-                                    Arg::F32(&w2c),
-                                ],
-                            )?;
-                            self.injector.charge(&mut self.clocks, rw.rank, t);
-                            m_gemm[rw.rank] += t * self.injector.chi[rw.rank];
-                            let y = into1(outs)?;
+                    let (out, t) = results.next().expect("one result per migration job");
+                    self.injector.charge(&mut self.clocks, rw.rank, t);
+                    m_gemm[rw.rank] += t * self.injector.chi[rw.rank];
+                    match out {
+                        MigOut::Fwd(y) => {
                             if merging {
                                 partials[rw.rank].add_assign(&y);
                             } else {
@@ -615,34 +751,16 @@ impl Trainer {
                                 partials[w].add_assign(&y);
                             }
                         }
-                        Some((dy, block_grads, dg_parts, db_parts)) => {
-                            let name = self.rt.manifest.mig_name("bwd", chunk.kb);
-                            let (outs, t) = self.rt.call(
-                                &name,
-                                &[
-                                    Arg::F32(x),
-                                    Arg::F32(&shard.ln2_g),
-                                    Arg::F32(&shard.ln2_b),
-                                    Arg::F32(&w1c),
-                                    Arg::F32(&w2c),
-                                    Arg::F32(dy),
-                                ],
-                            )?;
-                            self.injector.charge(&mut self.clocks, rw.rank, t);
-                            m_gemm[rw.rank] += t * self.injector.chi[rw.rank];
-                            let mut it = outs.into_iter();
-                            let dxp = it.next().unwrap().tensor()?;
-                            let dg = it.next().unwrap().tensor()?;
-                            let db = it.next().unwrap().tensor()?;
-                            let dw1c = it.next().unwrap().tensor()?;
-                            let dw2c = it.next().unwrap().tensor()?;
+                        MigOut::Bwd { dx, dg, db, dw1c, dw2c } => {
+                            let (block_grads, dg_parts, db_parts) =
+                                bwd.as_mut().expect("bwd sinks present for bwd jobs");
                             if merging {
-                                partials[rw.rank].add_assign(&dxp);
+                                partials[rw.rank].add_assign(&dx);
                                 dg_parts[rw.rank].add_assign(&dg);
                                 db_parts[rw.rank].add_assign(&db);
                             } else {
                                 self.comm.gather(&mut self.clocks, w, &[rw.rank], msg_bytes);
-                                partials[w].add_assign(&dxp);
+                                partials[w].add_assign(&dx);
                                 dg_parts[w].add_assign(&dg);
                                 db_parts[w].add_assign(&db);
                             }
@@ -653,6 +771,8 @@ impl Trainer {
                                 &[rw.rank],
                                 2 * m.hs * chunk.len * 4,
                             );
+                            let cols: Vec<u32> =
+                                mig.migrated[chunk.start..chunk.start + chunk.len].to_vec();
                             let dw1 = dw1c.take_cols(chunk.len);
                             let dw2 = dw2c.take_rows(chunk.len);
                             block_grads[w][k].w1.scatter_cols_assign(&cols, &dw1);
@@ -749,6 +869,8 @@ impl Trainer {
     }
 
     /// Unpruned forward pass (eval / golden checks). No clock charges.
+    /// Per-rank shards run on the pool; partials fold in rank order, so
+    /// the result is thread-count-invariant like the training path.
     pub fn forward_full(&mut self, batch: &Batch) -> Result<Tensor> {
         let m = self.rt.manifest.model.clone();
         let rep = self.state.rep.clone();
@@ -766,14 +888,18 @@ impl Trainer {
         let idx_ffl: Vec<i32> = (0..m.ffl as i32).collect();
         let ones_hs = Tensor::full(&[m.hs], 1.0);
         let ones_ffl = Tensor::full(&[m.ffl], 1.0);
+        let rt = &self.rt;
+        let state = &self.state;
+        // (embed above ran at width 1 — it's outside the hot loop; the
+        // per-rank full-width calls below use the pool instead)
         for k in 0..m.depth {
-            let mut part: Option<Tensor> = None;
-            for w in 0..m.e {
-                let b = &self.state.shards[w][k];
-                let (outs, _) = self.rt.call(
+            let xin = &x;
+            let parts = self.pool.run(m.e, |w| {
+                let b = &state.shards[w][k];
+                let (outs, _) = rt.call(
                     "attn_fwd_g00",
                     &[
-                        Arg::F32(&x),
+                        Arg::F32(xin),
                         Arg::F32(&b.ln1_g),
                         Arg::F32(&b.ln1_b),
                         Arg::F32(&b.wqkv),
@@ -782,20 +908,16 @@ impl Trainer {
                         Arg::F32(&ones_hs),
                     ],
                 )?;
-                let y = into1(outs)?;
-                match &mut part {
-                    None => part = Some(y),
-                    Some(p) => p.add_assign(&y),
-                }
-            }
-            x.add_assign(&part.unwrap());
-            let mut part: Option<Tensor> = None;
-            for w in 0..m.e {
-                let b = &self.state.shards[w][k];
-                let (outs, _) = self.rt.call(
+                into1(outs)
+            })?;
+            x.add_assign(&sum_in_order(parts));
+            let xin = &x;
+            let parts = self.pool.run(m.e, |w| {
+                let b = &state.shards[w][k];
+                let (outs, _) = rt.call(
                     "mlp_fwd_g00",
                     &[
-                        Arg::F32(&x),
+                        Arg::F32(xin),
                         Arg::F32(&b.ln2_g),
                         Arg::F32(&b.ln2_b),
                         Arg::F32(&b.w1),
@@ -806,18 +928,31 @@ impl Trainer {
                         Arg::F32(&ones_ffl),
                     ],
                 )?;
-                let y = into1(outs)?;
-                match &mut part {
-                    None => part = Some(y),
-                    Some(p) => p.add_assign(&y),
-                }
-            }
-            x.add_assign(&part.unwrap());
+                into1(outs)
+            })?;
+            x.add_assign(&sum_in_order(parts));
         }
         Ok(x)
     }
 }
 
+/// One migration receiver slice's computed outputs (pre-merge).
+enum MigOut {
+    Fwd(Tensor),
+    Bwd { dx: Tensor, dg: Tensor, db: Tensor, dw1c: Tensor, dw2c: Tensor },
+}
+
 fn into1(outs: Vec<Out>) -> Result<Tensor> {
     outs.into_iter().next().context("no outputs")?.tensor()
+}
+
+/// Fold rank partials in rank order (the deterministic reduction the
+/// serial engine used for full-width forwards).
+fn sum_in_order(parts: Vec<Tensor>) -> Tensor {
+    let mut it = parts.into_iter();
+    let mut acc = it.next().expect("at least one rank partial");
+    for p in it {
+        acc.add_assign(&p);
+    }
+    acc
 }

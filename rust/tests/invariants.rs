@@ -64,6 +64,39 @@ fn prop_renumbering_bijective_and_ranges_tile() {
 }
 
 #[test]
+fn prop_renumber_roundtrip_and_range_lengths() {
+    // The virtual renumbering r' = (r_i + e − r_k) mod e must invert as
+    // r_i = (r' + r_k) mod e (round-trip), and each normal task's
+    // migrated-column range must have one of the two balanced lengths
+    // ⌊L/(e−1)⌋ / ⌈L/(e−1)⌉ with the longer ranges on the lowest new
+    // ranks — across randomized (r_i, r_k, e, l_mig).
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0x77);
+        let e = 2 + rng.below(14);
+        let rk = rng.below(e);
+        let l = rng.below(512);
+        let n = e - 1;
+        let mut prev_len = usize::MAX;
+        for rp in 1..e {
+            // round-trip through the inverse mapping
+            let ri = (rp + rk) % e;
+            assert_ne!(ri, rk);
+            assert_eq!(renumber(ri, rk, e), rp);
+            let (s, t) = mig_range(ri, rk, e, l);
+            assert!(s <= t && t <= l, "range [{s},{t}) escapes L={l}");
+            let len = t - s;
+            assert!(
+                len == l / n || len == l / n + 1,
+                "unbalanced range: len={len} L={l} n={n}"
+            );
+            // remainder columns go to the lowest new ranks first
+            assert!(len <= prev_len, "longer range after shorter one");
+            prev_len = len;
+        }
+    }
+}
+
+#[test]
 fn prop_eq2_beta_bounded_and_monotone_in_l() {
     for seed in 0..CASES as u64 {
         let mut rng = Rng::new(seed ^ 0x22);

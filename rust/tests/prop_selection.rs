@@ -1,0 +1,125 @@
+//! Property tests (seeded, hand-rolled — proptest is unavailable offline)
+//! for the ZERO-resizing selection policies in `resizing/priority.rs` and
+//! `resizing::select_keep`: pruned index sets must be sorted, unique, and
+//! in-range, keep/prune must partition the dimension, and selections must
+//! be *monotone in χ* — a slower straggler (larger Eq. 1 γ, more pruned
+//! columns) prunes a superset of what a faster one prunes, so the
+//! round-robin priority schedule degrades gracefully as skew grows.
+
+use std::collections::BTreeSet;
+
+use flextp::resizing::priority::Tracker;
+use flextp::resizing::{select_keep, Selection};
+use flextp::straggler::gamma_eq1;
+use flextp::util::rng::Rng;
+
+const CASES: usize = 60;
+
+fn assert_sorted_unique_in_range(v: &[u32], n: usize, what: &str) {
+    assert!(v.windows(2).all(|w| w[0] < w[1]), "{what}: not sorted/unique: {v:?}");
+    assert!(v.iter().all(|&i| (i as usize) < n), "{what}: out of range: {v:?}");
+}
+
+#[test]
+fn prop_pri_list_sorted_unique_in_range_and_nested_in_count() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0xA1);
+        let n = 4 + rng.below(120);
+        let mut tr = Tracker::new(n);
+        let delta: Vec<f32> = (0..n).map(|_| rng.uniform()).collect();
+        tr.epoch_update(&delta, &[]);
+        let c1 = 1 + rng.below(n - 1);
+        let c2 = c1 + rng.below(n - c1 + 1);
+        let p1 = tr.pri_list(c1);
+        let p2 = tr.pri_list(c2);
+        assert_eq!(p1.len(), c1);
+        assert_eq!(p2.len(), c2);
+        assert_sorted_unique_in_range(&p1, n, "pri_list(c1)");
+        assert_sorted_unique_in_range(&p2, n, "pri_list(c2)");
+        // nested: pruning more keeps the smaller pruned set inside the
+        // larger one (a δ-ranked truncation is prefix-monotone)
+        let set2: BTreeSet<u32> = p2.iter().copied().collect();
+        assert!(
+            p1.iter().all(|i| set2.contains(i)),
+            "pri_list({c1}) ⊄ pri_list({c2})"
+        );
+    }
+}
+
+#[test]
+fn prop_keep_set_is_exact_complement_of_pri_list() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0xB2);
+        let n = 4 + rng.below(120);
+        let mut tr = Tracker::new(n);
+        let delta: Vec<f32> = (0..n).map(|_| rng.uniform()).collect();
+        tr.epoch_update(&delta, &[]);
+        let prune = 1 + rng.below(n - 1);
+        let kept = tr.keep_set(n - prune);
+        let pruned = tr.pri_list(prune);
+        assert_sorted_unique_in_range(&kept, n, "keep_set");
+        let mut all: Vec<u32> = kept.iter().chain(pruned.iter()).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n as u32).collect::<Vec<u32>>(), "not a partition");
+    }
+}
+
+#[test]
+fn prop_select_keep_invariants_on_both_paths() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0xC3);
+        let n = 4 + rng.below(120);
+        let keep = 1 + rng.below(n);
+        // random path (ZERO-Rd, or Pri before stats exist)
+        let tracker = Tracker::new(n);
+        let v = select_keep(n, keep, Selection::Random, Some(&tracker), &mut rng);
+        assert_eq!(v.len(), keep);
+        assert_sorted_unique_in_range(&v, n, "random select_keep");
+        // priority path with stats
+        let mut tr = Tracker::new(n);
+        let delta: Vec<f32> = (0..n).map(|_| rng.uniform()).collect();
+        tr.epoch_update(&delta, &[]);
+        let v = select_keep(n, keep, Selection::Priority, Some(&tr), &mut rng);
+        assert_eq!(v.len(), keep);
+        assert_sorted_unique_in_range(&v, n, "priority select_keep");
+        // keep == n is always the identity
+        let v = select_keep(n, n, Selection::Priority, Some(&tr), &mut rng);
+        assert_eq!(v, (0..n as u32).collect::<Vec<u32>>());
+    }
+}
+
+#[test]
+fn prop_pruned_sets_monotone_in_chi() {
+    // χ enters through Eq. (1): T_i = χ·T_base, γ = (T_i − T_avg)/M_i.
+    // Larger χ ⇒ larger γ ⇒ more pruned columns, and under priority
+    // selection the pruned set grows monotonically (supersets).
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0xD4);
+        let n = 8 + rng.below(100);
+        let mut tr = Tracker::new(n);
+        let delta: Vec<f32> = (0..n).map(|_| rng.uniform()).collect();
+        tr.epoch_update(&delta, &[]);
+        let t_base = 0.5 + rng.uniform() as f64;
+        let t_avg = t_base; // homogeneous peers
+        let gamma_max = 0.875;
+        let mut prev: BTreeSet<u32> = BTreeSet::new();
+        let mut prev_gamma = -1.0f64;
+        for chi in [1.0f64, 1.5, 2.0, 4.0, 8.0] {
+            let t_i = chi * t_base;
+            let m_i = 0.9 * t_i; // GEMM-dominated iteration
+            let gamma = gamma_eq1(t_i, t_avg, m_i, gamma_max);
+            assert!(gamma >= prev_gamma, "γ not monotone in χ");
+            prev_gamma = gamma;
+            let prune = ((n as f64) * gamma).floor() as usize;
+            let pruned: BTreeSet<u32> = tr.pri_list(prune).into_iter().collect();
+            assert_eq!(pruned.len(), prune);
+            assert!(
+                prev.is_subset(&pruned),
+                "χ={chi}: pruned set shrank (not monotone)"
+            );
+            prev = pruned;
+        }
+        // χ=1 (no straggling) prunes nothing
+        assert_eq!(gamma_eq1(t_base, t_avg, 0.9 * t_base, gamma_max), 0.0);
+    }
+}
