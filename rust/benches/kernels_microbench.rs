@@ -1,0 +1,85 @@
+//! GEMM micro-kernel benchmark + perf-regression gate.
+//!
+//! Times the packed micro-kernels against the frozen pre-PR scalar
+//! reference on the vit preset shapes (dense + pruned, fwd + bwd) and
+//! writes `BENCH_kernels.json` at the repository root — median GFLOP/s
+//! per shape, serial and threaded.
+//!
+//! ```text
+//! cargo bench --bench kernels_microbench                    # measure + write
+//! cargo bench --bench kernels_microbench -- \
+//!     --baseline BENCH_kernels.json --out BENCH_kernels.ci.json
+//!     # ...and exit 1 if dense packed GFLOP/s regressed > 20%
+//! ```
+//!
+//! Flags: `--model <preset>` (default vit-tiny), `--out <path>`,
+//! `--baseline <path>`, `--max-regress <frac>` (default 0.20),
+//! `--samples <n>` (default 5), `--target-ms <ms>` (default 25).
+//! Relative paths resolve against the repository root.
+
+use flextp::bench::kernels;
+
+fn arg_value(args: &[String], flag: &str) -> Option<String> {
+    args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1)).cloned()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = arg_value(&args, "--model").unwrap_or_else(|| "vit-tiny".to_string());
+    let out = arg_value(&args, "--out").unwrap_or_else(|| "BENCH_kernels.json".to_string());
+    let baseline = arg_value(&args, "--baseline");
+    let max_regress: f64 = arg_value(&args, "--max-regress")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(0.20);
+    let samples: usize = arg_value(&args, "--samples")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(5);
+    let target_ms: f64 = arg_value(&args, "--target-ms")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(25.0);
+
+    eprintln!("kernels_microbench: model={model} samples={samples} target_ms={target_ms}");
+    let doc = kernels::run_model(&model, samples, target_ms)?;
+
+    // human-readable summary
+    for s in doc.get("shapes")?.arr()? {
+        let name = s.get("name")?.str()?;
+        let serial = s.get("serial")?;
+        let threaded = s.get("threaded")?;
+        eprintln!(
+            "  {name:<24} scalar {:>7.2} | packed {:>7.2} (x{:.2}) | thr {:>7.2} (x{:.2}) GF/s",
+            serial.get("scalar_gflops")?.num()?,
+            serial.get("packed_gflops")?.num()?,
+            serial.get("speedup")?.num()?,
+            threaded.get("packed_gflops")?.num()?,
+            threaded.get("speedup")?.num()?,
+        );
+    }
+
+    let out_path = kernels::resolve_path(&out);
+    std::fs::write(&out_path, doc.to_string())?;
+    eprintln!("wrote {}", out_path.display());
+
+    if let Some(base) = baseline {
+        let base_path = kernels::resolve_path(&base);
+        let base_doc = kernels::load(&base_path)?;
+        let violations = kernels::compare(&doc, &base_doc, max_regress)?;
+        if violations.is_empty() {
+            eprintln!(
+                "regression gate: PASS (within {:.0}% of {})",
+                max_regress * 100.0,
+                base_path.display()
+            );
+        } else {
+            eprintln!("regression gate: FAIL vs {}", base_path.display());
+            for v in &violations {
+                eprintln!("  {v}");
+            }
+            std::process::exit(1);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,643 @@
+//! Kernel microbenchmark harness (`cargo bench --bench kernels_microbench`).
+//!
+//! Times the dense and pruned GEMM kernels on the exact shapes the vit
+//! presets execute per layer (fwd + bwd), against a checked-in copy of
+//! the pre-packing **scalar reference kernels**, and emits a
+//! machine-readable `BENCH_kernels.json` at the repository root:
+//! median GFLOP/s per shape, serial and threaded, scalar vs packed.
+//! That file is the perf trajectory future PRs regress against —
+//! [`compare`] implements the CI gate (fail when dense packed GFLOP/s
+//! drops more than the allowed fraction below the baseline).
+//!
+//! The scalar kernels here are *frozen copies* of the pre-PR-3
+//! `tensor::linalg` inner loops (blocked saxpy with the per-element
+//! zero-skip branch, dot-product `a·bᵀ`, rank-1-update `aᵀ·b`) plus the
+//! gather → GEMM → scatter pruned dataflow — kept so every future run
+//! re-measures the "before" column on the same silicon it measures the
+//! "after" column.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::Manifest;
+use crate::tensor::linalg;
+use crate::tensor::Workspace;
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+
+const BLOCK_K: usize = 64;
+const BLOCK_N: usize = 256;
+
+// ---------------------------------------------------------------------------
+// Frozen pre-PR scalar reference kernels ("before" column)
+// ---------------------------------------------------------------------------
+
+/// Pre-packing `c += a·b`: B-panel blocked, saxpy inner loop, per-element
+/// `av == 0.0` skip — the seed kernel this PR replaced.
+pub fn scalar_matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    for k0 in (0..k).step_by(BLOCK_K) {
+        let k1 = (k0 + BLOCK_K).min(k);
+        for n0 in (0..n).step_by(BLOCK_N) {
+            let n1 = (n0 + BLOCK_N).min(n);
+            for i in 0..m {
+                let a_row = &a[i * k..(i + 1) * k];
+                let c_row = &mut c[i * n + n0..i * n + n1];
+                for (l, &av) in a_row.iter().enumerate().take(k1).skip(k0) {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let b_row = &b[l * n + n0..l * n + n1];
+                    for (cv, bv) in c_row.iter_mut().zip(b_row) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pre-packing `aᵀ·b` (rank-1 updates over full C rows).
+pub fn scalar_matmul_at_b(a: &[f32], b: &[f32], m: usize, ka: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; ka * n];
+    for i in 0..m {
+        let a_row = &a[i * ka..(i + 1) * ka];
+        let b_row = &b[i * n..(i + 1) * n];
+        for l in 0..ka {
+            let av = a_row[l];
+            if av == 0.0 {
+                continue;
+            }
+            let c_row = &mut c[l * n..(l + 1) * n];
+            for (cv, bv) in c_row.iter_mut().zip(b_row) {
+                *cv += av * bv;
+            }
+        }
+    }
+    c
+}
+
+/// Pre-packing `a·bᵀ` (scalar dot product per output element).
+pub fn scalar_matmul_a_bt(a: &[f32], b: &[f32], m: usize, k: usize, nb: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * nb];
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut c[i * nb..(i + 1) * nb];
+        for (j, cv) in c_row.iter_mut().enumerate() {
+            *cv = linalg::dot(a_row, &b[j * k..(j + 1) * k]);
+        }
+    }
+    c
+}
+
+/// Pre-fusion pruned forward: materialized gather → scalar GEMM.
+pub fn scalar_pruned_matmul(
+    x: &[f32],
+    w: &[f32],
+    rows: usize,
+    kfull: usize,
+    n: usize,
+    idx: &[i32],
+    mask: &[f32],
+) -> Vec<f32> {
+    let kp = idx.len();
+    let mut xg = vec![0.0f32; rows * kp];
+    for i in 0..rows {
+        let row = &x[i * kfull..(i + 1) * kfull];
+        let o = &mut xg[i * kp..(i + 1) * kp];
+        for (j, (&ix, &mv)) in idx.iter().zip(mask).enumerate() {
+            o[j] = row[ix as usize] * mv;
+        }
+    }
+    let mut wg = vec![0.0f32; kp * n];
+    for (j, &ix) in idx.iter().enumerate() {
+        wg[j * n..(j + 1) * n].copy_from_slice(&w[ix as usize * n..(ix as usize + 1) * n]);
+    }
+    let mut y = vec![0.0f32; rows * n];
+    scalar_matmul_acc(&mut y, &xg, &wg, rows, kp, n);
+    y
+}
+
+/// Pre-fusion pruned backward: gathers, scalar GEMMs, full-size scatters.
+pub fn scalar_pruned_matmul_bwd(
+    x: &[f32],
+    w: &[f32],
+    dy: &[f32],
+    rows: usize,
+    kfull: usize,
+    n: usize,
+    idx: &[i32],
+    mask: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let kp = idx.len();
+    let mut wg = vec![0.0f32; kp * n];
+    for (j, &ix) in idx.iter().enumerate() {
+        wg[j * n..(j + 1) * n].copy_from_slice(&w[ix as usize * n..(ix as usize + 1) * n]);
+    }
+    let mut dxc = scalar_matmul_a_bt(dy, &wg, rows, n, kp);
+    for i in 0..rows {
+        for (v, &mv) in dxc[i * kp..(i + 1) * kp].iter_mut().zip(mask) {
+            *v *= mv;
+        }
+    }
+    let mut dx = vec![0.0f32; rows * kfull];
+    for i in 0..rows {
+        for (j, &ix) in idx.iter().enumerate() {
+            dx[i * kfull + ix as usize] += dxc[i * kp + j];
+        }
+    }
+    let mut xg = vec![0.0f32; rows * kp];
+    for i in 0..rows {
+        let row = &x[i * kfull..(i + 1) * kfull];
+        for (j, (&ix, &mv)) in idx.iter().zip(mask).enumerate() {
+            xg[i * kp + j] = row[ix as usize] * mv;
+        }
+    }
+    let dwc = scalar_matmul_at_b(&xg, dy, rows, kp, n);
+    let mut dw = vec![0.0f32; kfull * n];
+    for (j, &ix) in idx.iter().enumerate() {
+        for (dv, sv) in dw[ix as usize * n..(ix as usize + 1) * n]
+            .iter_mut()
+            .zip(&dwc[j * n..(j + 1) * n])
+        {
+            *dv += sv;
+        }
+    }
+    (dx, dw)
+}
+
+// ---------------------------------------------------------------------------
+// Timing
+// ---------------------------------------------------------------------------
+
+/// Median seconds per call over `samples` samples of adaptively-sized
+/// batches (each batch ≥ `target_ms`).
+fn time_median<F: FnMut()>(mut f: F, samples: usize, target_ms: f64) -> f64 {
+    // warmup + batch sizing
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_ms / 1e3 / once).ceil() as usize).max(1);
+    let mut per_call: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        per_call.push(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    per_call.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    per_call[per_call.len() / 2]
+}
+
+struct Measured {
+    scalar_s: f64,
+    packed_serial_s: f64,
+    packed_threaded_s: f64,
+}
+
+fn shape_json(
+    name: &str,
+    kind: &str,
+    dims: (usize, usize, usize),
+    flops: f64,
+    t: &Measured,
+    threads: usize,
+) -> Json {
+    let g = |secs: f64| flops / secs.max(1e-12) / 1e9;
+    obj([
+        ("name", name.into()),
+        ("kind", kind.into()),
+        ("m", dims.0.into()),
+        ("k", dims.1.into()),
+        ("n", dims.2.into()),
+        (
+            "serial",
+            obj([
+                ("scalar_gflops", g(t.scalar_s).into()),
+                ("packed_gflops", g(t.packed_serial_s).into()),
+                ("speedup", (t.scalar_s / t.packed_serial_s.max(1e-12)).into()),
+            ]),
+        ),
+        (
+            "threaded",
+            obj([
+                ("threads", threads.into()),
+                ("packed_gflops", g(t.packed_threaded_s).into()),
+                ("speedup", (t.scalar_s / t.packed_threaded_s.max(1e-12)).into()),
+            ]),
+        ),
+    ])
+}
+
+/// Benchmark every hot GEMM shape of `model`'s presets; returns the
+/// `BENCH_kernels.json` document.
+pub fn run_model(model: &str, samples: usize, target_ms: f64) -> Result<Json> {
+    let man = Manifest::for_model(model)?;
+    let m = &man.model;
+    let rows = m.bs * m.seq;
+    let (hs, hsl, ffl) = (m.hs, m.hsl, m.ffl);
+    let threads = linalg::available_cores().clamp(2, 8);
+    let mut rng = Rng::new(4242);
+
+    let mut shapes: Vec<Json> = Vec::new();
+    let mut dense = |name: &str, mm: usize, kk: usize, nn: usize, shapes: &mut Vec<Json>| {
+        let a = rng.normal_vec(mm * kk, 1.0);
+        let b = rng.normal_vec(kk * nn, 1.0);
+        let mut c = vec![0.0f32; mm * nn];
+        let measured = Measured {
+            scalar_s: time_median(
+                || {
+                    c.fill(0.0);
+                    scalar_matmul_acc(&mut c, &a, &b, mm, kk, nn);
+                },
+                samples,
+                target_ms,
+            ),
+            packed_serial_s: linalg::with_gemm_threads(1, || {
+                time_median(
+                    || {
+                        c.fill(0.0);
+                        linalg::matmul_acc(&mut c, &a, &b, mm, kk, nn);
+                    },
+                    samples,
+                    target_ms,
+                )
+            }),
+            packed_threaded_s: linalg::with_gemm_threads(threads, || {
+                time_median(
+                    || {
+                        c.fill(0.0);
+                        linalg::matmul_acc(&mut c, &a, &b, mm, kk, nn);
+                    },
+                    samples,
+                    target_ms,
+                )
+            }),
+        };
+        let flops = 2.0 * (mm * kk * nn) as f64;
+        shapes.push(shape_json(name, "dense_ab", (mm, kk, nn), flops, &measured, threads));
+    };
+    // the per-layer forward GEMMs of the preset
+    dense("attn_qkv_fwd", rows, hs, 3 * hsl, &mut shapes);
+    dense("attn_out_fwd", rows, hsl, hs, &mut shapes);
+    dense("mlp_fc1_fwd", rows, hs, ffl, &mut shapes);
+    dense("mlp_fc2_fwd", rows, ffl, hs, &mut shapes);
+
+    // weight-gradient shape: dwqkv = xlnᵀ · dqkv
+    {
+        let a = rng.normal_vec(rows * hs, 1.0);
+        let b = rng.normal_vec(rows * 3 * hsl, 1.0);
+        let mut c = vec![0.0f32; hs * 3 * hsl];
+        let measured = Measured {
+            scalar_s: time_median(
+                || {
+                    let out = scalar_matmul_at_b(&a, &b, rows, hs, 3 * hsl);
+                    std::hint::black_box(&out);
+                },
+                samples,
+                target_ms,
+            ),
+            packed_serial_s: linalg::with_gemm_threads(1, || {
+                time_median(
+                    || {
+                        c.fill(0.0);
+                        linalg::matmul_at_b_acc(&mut c, &a, &b, rows, hs, 3 * hsl);
+                    },
+                    samples,
+                    target_ms,
+                )
+            }),
+            packed_threaded_s: linalg::with_gemm_threads(threads, || {
+                time_median(
+                    || {
+                        c.fill(0.0);
+                        linalg::matmul_at_b_acc(&mut c, &a, &b, rows, hs, 3 * hsl);
+                    },
+                    samples,
+                    target_ms,
+                )
+            }),
+        };
+        let flops = 2.0 * (rows * hs * 3 * hsl) as f64;
+        shapes.push(shape_json(
+            "attn_dwqkv_bwd",
+            "dense_atb",
+            (rows, hs, 3 * hsl),
+            flops,
+            &measured,
+            threads,
+        ));
+    }
+    // input-gradient shape: dxln = dqkv · wqkvᵀ
+    {
+        let a = rng.normal_vec(rows * 3 * hsl, 1.0);
+        let b = rng.normal_vec(hs * 3 * hsl, 1.0);
+        let mut c = vec![0.0f32; rows * hs];
+        let measured = Measured {
+            scalar_s: time_median(
+                || {
+                    let out = scalar_matmul_a_bt(&a, &b, rows, 3 * hsl, hs);
+                    std::hint::black_box(&out);
+                },
+                samples,
+                target_ms,
+            ),
+            packed_serial_s: linalg::with_gemm_threads(1, || {
+                time_median(
+                    || {
+                        c.fill(0.0);
+                        linalg::matmul_a_bt_acc(&mut c, &a, &b, rows, 3 * hsl, hs);
+                    },
+                    samples,
+                    target_ms,
+                )
+            }),
+            packed_threaded_s: linalg::with_gemm_threads(threads, || {
+                time_median(
+                    || {
+                        c.fill(0.0);
+                        linalg::matmul_a_bt_acc(&mut c, &a, &b, rows, 3 * hsl, hs);
+                    },
+                    samples,
+                    target_ms,
+                )
+            }),
+        };
+        let flops = 2.0 * (rows * 3 * hsl * hs) as f64;
+        shapes.push(shape_json(
+            "attn_dx_bwd",
+            "dense_abt",
+            (rows, 3 * hsl, hs),
+            flops,
+            &measured,
+            threads,
+        ));
+    }
+    // pruned g50 contraction on the FC1 shape: fused vs gather-then-GEMM
+    {
+        let keep = crate::runtime::presets::keep_count(hs, 0.5);
+        let idx: Vec<i32> = (0..keep as i32).map(|i| i * 2).collect();
+        let mask = vec![1.0f32; keep];
+        let x = rng.normal_vec(rows * hs, 1.0);
+        let w = rng.normal_vec(hs * ffl, 1.0);
+        let dy = rng.normal_vec(rows * ffl, 1.0);
+        let mut ws = Workspace::new();
+        let fwd_flops = 2.0 * (rows * keep * ffl) as f64;
+        let measured = Measured {
+            scalar_s: time_median(
+                || {
+                    let out = scalar_pruned_matmul(&x, &w, rows, hs, ffl, &idx, &mask);
+                    std::hint::black_box(&out);
+                },
+                samples,
+                target_ms,
+            ),
+            packed_serial_s: linalg::with_gemm_threads(1, || {
+                time_median(
+                    || {
+                        let y = crate::runtime::native::ops::pruned_matmul_ws(
+                            &x, &w, rows, hs, ffl, &idx, &mask, &mut ws,
+                        );
+                        ws.give(y);
+                    },
+                    samples,
+                    target_ms,
+                )
+            }),
+            packed_threaded_s: linalg::with_gemm_threads(threads, || {
+                time_median(
+                    || {
+                        let y = crate::runtime::native::ops::pruned_matmul_ws(
+                            &x, &w, rows, hs, ffl, &idx, &mask, &mut ws,
+                        );
+                        ws.give(y);
+                    },
+                    samples,
+                    target_ms,
+                )
+            }),
+        };
+        shapes.push(shape_json(
+            "mlp_fc1_fwd_pruned_g50",
+            "pruned_fwd",
+            (rows, keep, ffl),
+            fwd_flops,
+            &measured,
+            threads,
+        ));
+
+        let bwd_flops = 4.0 * (rows * keep * ffl) as f64;
+        let measured = Measured {
+            scalar_s: time_median(
+                || {
+                    let out = scalar_pruned_matmul_bwd(&x, &w, &dy, rows, hs, ffl, &idx, &mask);
+                    std::hint::black_box(&out);
+                },
+                samples,
+                target_ms,
+            ),
+            packed_serial_s: linalg::with_gemm_threads(1, || {
+                time_median(
+                    || {
+                        let (dx, dw) = crate::runtime::native::ops::pruned_matmul_bwd_ws(
+                            &x, &w, &dy, rows, hs, ffl, &idx, &mask, &mut ws,
+                        );
+                        ws.give(dx);
+                        ws.give(dw);
+                    },
+                    samples,
+                    target_ms,
+                )
+            }),
+            packed_threaded_s: linalg::with_gemm_threads(threads, || {
+                time_median(
+                    || {
+                        let (dx, dw) = crate::runtime::native::ops::pruned_matmul_bwd_ws(
+                            &x, &w, &dy, rows, hs, ffl, &idx, &mask, &mut ws,
+                        );
+                        ws.give(dx);
+                        ws.give(dw);
+                    },
+                    samples,
+                    target_ms,
+                )
+            }),
+        };
+        shapes.push(shape_json(
+            "mlp_fc1_bwd_pruned_g50",
+            "pruned_bwd",
+            (rows, keep, ffl),
+            bwd_flops,
+            &measured,
+            threads,
+        ));
+    }
+
+    Ok(obj([
+        ("schema", "flextp-kernel-bench/v1".into()),
+        ("model", model.into()),
+        ("rows", rows.into()),
+        ("threads", threads.into()),
+        ("samples", samples.into()),
+        (
+            "note",
+            "scalar = frozen pre-PR-3 reference kernels re-measured on this host; \
+             packed = current micro-kernels. Regenerate: cargo bench --bench kernels_microbench"
+                .into(),
+        ),
+        ("shapes", shapes.into_iter().collect()),
+    ]))
+}
+
+/// CI regression gate: every dense shape's packed GFLOP/s (serial and
+/// threaded) must stay within `max_regress` (e.g. 0.20) of the baseline.
+/// Returns the list of violations (empty = pass).
+pub fn compare(fresh: &Json, baseline: &Json, max_regress: f64) -> Result<Vec<String>> {
+    let mut violations = Vec::new();
+    let fresh_shapes = fresh.get("shapes")?.arr()?;
+    for base in baseline.get("shapes")?.arr()? {
+        let name = base.get("name")?.str()?;
+        let kind = base.get("kind")?.str()?;
+        if !kind.starts_with("dense") {
+            continue;
+        }
+        let Some(now) = fresh_shapes
+            .iter()
+            .find(|s| s.get("name").and_then(|n| n.str()).map(|n| n == name).unwrap_or(false))
+        else {
+            violations.push(format!("shape '{name}' missing from fresh run"));
+            continue;
+        };
+        for section in ["serial", "threaded"] {
+            let b = base.get(section)?.get("packed_gflops")?.num()?;
+            let f = now.get(section)?.get("packed_gflops")?.num()?;
+            let floor = (1.0 - max_regress) * b;
+            if f < floor {
+                violations.push(format!(
+                    "{name}/{section}: {f:.2} GFLOP/s < floor {floor:.2} (baseline {b:.2})"
+                ));
+            }
+        }
+    }
+    Ok(violations)
+}
+
+/// Repository root (the bench JSON lives there, not in `rust/`).
+pub fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(Path::to_path_buf)
+        .unwrap_or_else(|| PathBuf::from("."))
+}
+
+/// Resolve a possibly-relative bench path against the repository root.
+pub fn resolve_path(p: &str) -> PathBuf {
+    let path = Path::new(p);
+    if path.is_absolute() {
+        path.to_path_buf()
+    } else {
+        repo_root().join(path)
+    }
+}
+
+/// Load and parse a bench JSON file.
+pub fn load(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading bench baseline {}", path.display()))?;
+    Json::parse(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn scalar_references_agree_with_packed_kernels() {
+        let mut rng = Rng::new(61);
+        let (m, k, n) = (9, 37, 22);
+        let a = rng.normal_vec(m * k, 1.0);
+        let b = rng.normal_vec(k * n, 1.0);
+        let mut c_s = vec![0.0f32; m * n];
+        scalar_matmul_acc(&mut c_s, &a, &b, m, k, n);
+        let c_p = linalg::matmul(&a, &b, m, k, n);
+        for (s, p) in c_s.iter().zip(&c_p) {
+            assert!((s - p).abs() < 1e-3);
+        }
+        let b2 = rng.normal_vec(m * n, 1.0);
+        let s = scalar_matmul_at_b(&a, &b2, m, k, n);
+        let p = linalg::matmul_at_b(&a, &b2, m, k, n);
+        for (s, p) in s.iter().zip(&p) {
+            assert!((s - p).abs() < 1e-3);
+        }
+        let bt = rng.normal_vec(n * k, 1.0);
+        let s = scalar_matmul_a_bt(&a, &bt, m, k, n);
+        let p = linalg::matmul_a_bt(&a, &bt, m, k, n);
+        assert_eq!(s, p, "a·bᵀ reference must match bitwise (same dot order)");
+        // pruned reference vs fused
+        let idx = [1i32, 5, 9, 30];
+        let mask = [1.0f32, 0.5, 1.0, 1.0];
+        let s = scalar_pruned_matmul(&a, &b, m, k, n, &idx, &mask);
+        let p = crate::runtime::native::ops::pruned_matmul(&a, &b, m, k, n, &idx, &mask);
+        for (s, p) in s.iter().zip(&p) {
+            assert!((s - p).abs() < 1e-3);
+        }
+        let dy = rng.normal_vec(m * n, 1.0);
+        let (sdx, sdw) = scalar_pruned_matmul_bwd(&a, &b, &dy, m, k, n, &idx, &mask);
+        let (pdx, pdw) =
+            crate::runtime::native::ops::pruned_matmul_bwd(&a, &b, &dy, m, k, n, &idx, &mask);
+        for (s, p) in sdx.iter().zip(&pdx) {
+            assert!((s - p).abs() < 1e-3);
+        }
+        for (s, p) in sdw.iter().zip(&pdw) {
+            assert!((s - p).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn compare_flags_regressions_and_passes_improvements() {
+        let mk = |gf: f64| {
+            obj([(
+                "shapes",
+                vec![obj([
+                    ("name", "attn_qkv_fwd".into()),
+                    ("kind", "dense_ab".into()),
+                    ("serial", obj([("packed_gflops", gf.into())])),
+                    ("threaded", obj([("packed_gflops", (2.0 * gf).into())])),
+                ])]
+                .into_iter()
+                .collect(),
+            )])
+        };
+        let base = mk(10.0);
+        assert!(compare(&mk(9.0), &base, 0.20).unwrap().is_empty());
+        assert!(compare(&mk(50.0), &base, 0.20).unwrap().is_empty());
+        let v = compare(&mk(7.0), &base, 0.20).unwrap();
+        assert_eq!(v.len(), 2, "both serial and threaded regress: {v:?}");
+        // pruned kinds are informational, not gated
+        let pruned_only = obj([(
+            "shapes",
+            vec![obj([
+                ("name", "p".into()),
+                ("kind", "pruned_fwd".into()),
+            ])]
+            .into_iter()
+            .collect(),
+        )]);
+        assert!(compare(&mk(1.0), &pruned_only, 0.2).unwrap().is_empty());
+    }
+
+    #[test]
+    fn run_model_produces_schema_with_speedups() {
+        // tiny sample budget — this is a smoke test, not a measurement
+        let doc = run_model("vit-tiny", 1, 0.5).expect("bench run");
+        assert_eq!(doc.get("schema").unwrap().str().unwrap(), "flextp-kernel-bench/v1");
+        let shapes = doc.get("shapes").unwrap().arr().unwrap();
+        assert!(shapes.len() >= 7, "expected all preset shapes, got {}", shapes.len());
+        for s in shapes {
+            assert!(s.get("serial").unwrap().get("packed_gflops").unwrap().num().unwrap() > 0.0);
+        }
+    }
+}

@@ -2,6 +2,9 @@
 //! table/figure bench is a `harness = false` binary that builds `RunCfg`s
 //! with [`bench_cfg`], runs them through the trainer, and prints the
 //! paper's rows via `util::table::TextTable` (+ CSV under `bench_out/`).
+//! The [`kernels`] submodule is the GEMM microbench harness behind
+//! `cargo bench --bench kernels_microbench` and the `BENCH_kernels.json`
+//! perf baseline at the repository root.
 //!
 //! All benches honor `FLEXTP_THREADS` (the `--threads` knob): it seeds
 //! `TrainCfg::default`, so `FLEXTP_THREADS=4 cargo bench --bench
@@ -10,6 +13,8 @@
 //! re-plan from measured kernel timings, so their losses/ACC vary run to
 //! run whether serial or parallel; fixed-plan runs (baseline, `--gamma`)
 //! are bitwise identical across thread counts.
+
+pub mod kernels;
 
 use std::path::PathBuf;
 

@@ -23,6 +23,7 @@ pub mod native;
 pub mod pjrt;
 pub mod presets;
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Mutex;
@@ -30,8 +31,23 @@ use std::sync::Mutex;
 use anyhow::{bail, Context, Result};
 
 use crate::config::BackendKind;
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, Workspace};
 pub use manifest::{ArgSpec, Bucket, Dtype, ExecSpec, Manifest, ModelInfo};
+
+thread_local! {
+    /// Per-thread workspace behind [`Runtime::call`]: callers that do not
+    /// manage an explicit [`Workspace`] (tests, benches, the trainer's
+    /// replicated embed/head calls on the coordinator thread) still reuse
+    /// scratch across calls made from the same thread.
+    static CALL_WS: RefCell<Workspace> = const { RefCell::new(Workspace::new()) };
+}
+
+/// Park a buffer in the calling thread's [`Runtime::call`] workspace so a
+/// later call can reuse it — the coordinator-side analogue of the
+/// trainer's per-rank recycling.
+pub fn recycle_local(t: Tensor) {
+    CALL_WS.with(|w| w.borrow_mut().give(t.data));
+}
 
 /// An input argument to an executable call.
 pub enum Arg<'a> {
@@ -100,8 +116,13 @@ impl Out {
 ///   backend's compiled-executable cache).
 pub trait Backend: Send + Sync {
     /// Execute one manifest executable on validated arguments; returns
-    /// the outputs plus the measured compute seconds.
-    fn execute(&self, spec: &ExecSpec, args: &[Arg]) -> Result<(Vec<Out>, f64)>;
+    /// the outputs plus the measured compute seconds.  `ws` is the
+    /// caller's scratch arena: backends that compute on the host (the
+    /// native backend) draw every intermediate buffer from it so
+    /// steady-state calls are allocation-free; device-side backends
+    /// (PJRT) may ignore it.  Workspace contents never influence results
+    /// — buffers come out zero-filled.
+    fn execute(&self, spec: &ExecSpec, args: &[Arg], ws: &mut Workspace) -> Result<(Vec<Out>, f64)>;
 
     /// Pre-compile / warm an executable before timed regions (PJRT
     /// compiles the HLO here; the native backend has nothing to do).
@@ -178,14 +199,22 @@ impl Runtime {
         Ok(())
     }
 
-    /// Execute `name` with `args`; returns outputs and the backend's
-    /// measured compute seconds (used as the SimClock compute charge).
+    /// Execute `name` with `args` using the calling thread's shared
+    /// workspace; returns outputs and the backend's measured compute
+    /// seconds (used as the SimClock compute charge).
     pub fn call(&self, name: &str, args: &[Arg]) -> Result<(Vec<Out>, f64)> {
+        CALL_WS.with(|w| self.call_ws(name, args, &mut w.borrow_mut()))
+    }
+
+    /// [`Runtime::call`] with an explicit [`Workspace`] — the trainer
+    /// routes each simulated rank's calls through that rank's own arena
+    /// so steady-state steps reuse every intermediate buffer.
+    pub fn call_ws(&self, name: &str, args: &[Arg], ws: &mut Workspace) -> Result<(Vec<Out>, f64)> {
         let spec = self.manifest.exec(name)?;
         check_args(spec, args)?;
         let (outs, elapsed) = self
             .backend
-            .execute(spec, args)
+            .execute(spec, args, ws)
             .with_context(|| format!("executing {name}"))?;
         if outs.len() != spec.outputs.len() {
             bail!(

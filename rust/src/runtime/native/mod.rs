@@ -25,16 +25,20 @@ use anyhow::Result;
 
 use super::manifest::{ExecSpec, Manifest, ModelInfo};
 use super::{Arg, Backend, Out};
+use crate::tensor::Workspace;
 
 /// Stateless native executor for one model's manifest.
 ///
 /// The only field is the read-only [`ModelInfo`] shared by every call, so
 /// the backend is trivially `Send + Sync` (the [`Backend`] contract): all
-/// per-rank state — activations, gathered weights, LN caches — lives on
-/// the calling worker's stack inside [`vit::execute`].  Concurrent calls
-/// from the parallel rank engine therefore cannot alias; determinism at
-/// any thread count follows from the panel-parallel GEMM guarantee in
-/// [`crate::tensor::linalg`].
+/// per-call state — activations, co-pruned weights, LN caches — lives in
+/// the *caller-owned* [`Workspace`] threaded through [`vit::execute`]
+/// (one workspace per simulated rank in the trainer), plus fixed-size
+/// stack tiles inside the GEMM kernels.  Concurrent calls from the
+/// parallel rank engine therefore cannot alias; determinism at any
+/// thread count follows from the panel-parallel GEMM guarantee in
+/// [`crate::tensor::linalg`] (workspace reuse never changes results —
+/// buffers are checked out zero-filled).
 pub struct NativeBackend {
     model: ModelInfo,
 }
@@ -46,9 +50,14 @@ impl NativeBackend {
 }
 
 impl Backend for NativeBackend {
-    fn execute(&self, spec: &ExecSpec, args: &[Arg]) -> Result<(Vec<Out>, f64)> {
+    fn execute(
+        &self,
+        spec: &ExecSpec,
+        args: &[Arg],
+        ws: &mut Workspace,
+    ) -> Result<(Vec<Out>, f64)> {
         let t0 = Instant::now();
-        let outs = vit::execute(&self.model, spec, args)?;
+        let outs = vit::execute(&self.model, spec, args, ws)?;
         Ok((outs, t0.elapsed().as_secs_f64()))
     }
 

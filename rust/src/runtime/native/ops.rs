@@ -1,13 +1,32 @@
 //! Numeric primitives shared by the native executable implementations:
 //! layernorm forward/backward, tanh-approximate GELU, row softmax /
-//! log-softmax, and the pruned-GEMM gather/scatter dataflows of Eq. (1).
+//! log-softmax, and the pruned-GEMM dataflows of Eq. (1).
 //!
 //! Semantics are pinned to the JAX definitions in
 //! `python/compile/model.py` and `python/compile/kernels/` — same ε, same
 //! GELU constants, same zero-imputed scatter-ADD backward — so a PJRT
 //! build and a native build of the same executable agree to f32 rounding.
+//!
+//! # Fused pruned contraction (PR 3)
+//!
+//! The old `pruned_matmul`/`pruned_matmul_bwd` materialized gathered
+//! copies of their operands per call (`gather_cols_masked` +
+//! `gather_rows`) — for the common full-width g00 bucket those are
+//! *full-size* copies of the activations and weights, four of them per
+//! layer per step.  The `_ws` entry points now route through the
+//! gather-fused kernels in [`crate::tensor::linalg`] (the gather happens
+//! inside the GEMM packing step), keep their compact gradients in a
+//! reusable [`Workspace`], and special-case the identity keep so g00
+//! performs plain dense GEMMs with zero copies.  The old signatures
+//! remain as thin wrappers over a throwaway workspace.
+//!
+//! Every `_ws` function `take`s scratch from the workspace and `give`s
+//! back what does not escape in its return value; returned buffers are
+//! the *caller's* to give back (the vit layer recycles them, the trainer
+//! recycles the buffers behind returned tensors).
 
 use crate::tensor::linalg;
+use crate::tensor::Workspace;
 
 /// LayerNorm ε (matches `model.layernorm`).
 pub const LN_EPS: f32 = 1e-5;
@@ -25,33 +44,50 @@ pub struct LnCache {
     pub rstd: Vec<f32>,
 }
 
+impl LnCache {
+    /// Return the cache's buffers to a workspace.
+    pub fn recycle(self, ws: &mut Workspace) {
+        ws.give(self.xhat);
+        ws.give(self.rstd);
+    }
+}
+
 /// Row-wise layernorm: `y = x̂·g + b` over the last dimension.
-pub fn layernorm(x: &[f32], g: &[f32], b: &[f32], rows: usize, cols: usize) -> (Vec<f32>, LnCache) {
+///
+/// Mean and variance come from a **single Welford pass** (one read of x
+/// per row instead of the old two-pass mean-then-variance sweep); the
+/// second pass writes x̂ and y together.
+pub fn layernorm_ws(
+    x: &[f32],
+    g: &[f32],
+    b: &[f32],
+    rows: usize,
+    cols: usize,
+    ws: &mut Workspace,
+) -> (Vec<f32>, LnCache) {
     debug_assert_eq!(x.len(), rows * cols);
     debug_assert_eq!(g.len(), cols);
     debug_assert_eq!(b.len(), cols);
-    let mut y = vec![0.0f32; rows * cols];
-    let mut xhat = vec![0.0f32; rows * cols];
-    let mut rstd = vec![0.0f32; rows];
+    let mut y = ws.take(rows * cols);
+    let mut xhat = ws.take(rows * cols);
+    let mut rstd = ws.take(rows);
     for i in 0..rows {
         let xr = &x[i * cols..(i + 1) * cols];
-        let mut mu = 0.0f32;
-        for &v in xr {
-            mu += v;
+        // Welford: mean and M2 in one pass
+        let mut mean = 0.0f32;
+        let mut m2 = 0.0f32;
+        for (j, &v) in xr.iter().enumerate() {
+            let d = v - mean;
+            mean += d / (j + 1) as f32;
+            m2 += d * (v - mean);
         }
-        mu /= cols as f32;
-        let mut var = 0.0f32;
-        for &v in xr {
-            let d = v - mu;
-            var += d * d;
-        }
-        var /= cols as f32;
+        let var = m2 / cols as f32;
         let rs = 1.0 / (var + LN_EPS).sqrt();
         rstd[i] = rs;
         let xh = &mut xhat[i * cols..(i + 1) * cols];
         let yr = &mut y[i * cols..(i + 1) * cols];
         for j in 0..cols {
-            let h = (xr[j] - mu) * rs;
+            let h = (xr[j] - mean) * rs;
             xh[j] = h;
             yr[j] = h * g[j] + b[j];
         }
@@ -59,21 +95,27 @@ pub fn layernorm(x: &[f32], g: &[f32], b: &[f32], rows: usize, cols: usize) -> (
     (y, LnCache { xhat, rstd })
 }
 
+/// [`layernorm_ws`] over a throwaway workspace (tests / standalone use).
+pub fn layernorm(x: &[f32], g: &[f32], b: &[f32], rows: usize, cols: usize) -> (Vec<f32>, LnCache) {
+    layernorm_ws(x, g, b, rows, cols, &mut Workspace::new())
+}
+
 /// Layernorm backward: given `dy` w.r.t. the LN output, produce
 /// `(dx, dg, db)`.  Standard vjp of `y = x̂·g + b` with x̂ recomputed from
 /// the cache:  dx = rstd·(dx̂ − mean(dx̂) − x̂·mean(dx̂·x̂)).
-pub fn layernorm_bwd(
+pub fn layernorm_bwd_ws(
     dy: &[f32],
     cache: &LnCache,
     g: &[f32],
     rows: usize,
     cols: usize,
+    ws: &mut Workspace,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     debug_assert_eq!(dy.len(), rows * cols);
-    let mut dx = vec![0.0f32; rows * cols];
-    let mut dg = vec![0.0f32; cols];
-    let mut db = vec![0.0f32; cols];
-    let mut dxhat = vec![0.0f32; cols];
+    let mut dx = ws.take(rows * cols);
+    let mut dg = ws.take(cols);
+    let mut db = ws.take(cols);
+    let mut dxhat = ws.take(cols);
     for i in 0..rows {
         let dyr = &dy[i * cols..(i + 1) * cols];
         let xh = &cache.xhat[i * cols..(i + 1) * cols];
@@ -95,7 +137,19 @@ pub fn layernorm_bwd(
             dxr[j] = rs * (dxhat[j] - m1 - xh[j] * m2);
         }
     }
+    ws.give(dxhat);
     (dx, dg, db)
+}
+
+/// [`layernorm_bwd_ws`] over a throwaway workspace.
+pub fn layernorm_bwd(
+    dy: &[f32],
+    cache: &LnCache,
+    g: &[f32],
+    rows: usize,
+    cols: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    layernorm_bwd_ws(dy, cache, g, rows, cols, &mut Workspace::new())
 }
 
 /// Tanh-approximate GELU (`jax.nn.gelu(·, approximate=True)`).
@@ -113,7 +167,24 @@ pub fn gelu_grad(x: f32) -> f32 {
     0.5 * (1.0 + t) + 0.5 * x * sech2 * SQRT_2_OVER_PI * (1.0 + 3.0 * GELU_C * x2)
 }
 
-/// In-place row softmax with max subtraction.
+/// Max and exp-sum of one row (the shared softmax/log-softmax reduction).
+#[inline]
+fn row_max_expsum(row: &[f32]) -> (f32, f32) {
+    let mut mx = f32::NEG_INFINITY;
+    for &v in row {
+        mx = mx.max(v);
+    }
+    let mut sum = 0.0f32;
+    for &v in row {
+        sum += (v - mx).exp();
+    }
+    (mx, sum)
+}
+
+/// In-place row softmax with max subtraction.  Each exponential is
+/// computed exactly once and stored; the row is then scaled by a single
+/// hoisted `1/sum` (one divide per row, like `log_softmax_rows`'s one
+/// `ln` per row).
 pub fn softmax_rows(a: &mut [f32], rows: usize, cols: usize) {
     debug_assert_eq!(a.len(), rows * cols);
     for i in 0..rows {
@@ -134,20 +205,13 @@ pub fn softmax_rows(a: &mut [f32], rows: usize, cols: usize) {
     }
 }
 
-/// Row log-softmax (returns a new buffer).
-pub fn log_softmax_rows(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+/// Row log-softmax into a workspace buffer.
+pub fn log_softmax_rows_ws(a: &[f32], rows: usize, cols: usize, ws: &mut Workspace) -> Vec<f32> {
     debug_assert_eq!(a.len(), rows * cols);
-    let mut out = vec![0.0f32; rows * cols];
+    let mut out = ws.take(rows * cols);
     for i in 0..rows {
         let row = &a[i * cols..(i + 1) * cols];
-        let mut mx = f32::NEG_INFINITY;
-        for &v in row {
-            mx = mx.max(v);
-        }
-        let mut sum = 0.0f32;
-        for &v in row {
-            sum += (v - mx).exp();
-        }
+        let (mx, sum) = row_max_expsum(row);
         let lse = mx + sum.ln();
         let o = &mut out[i * cols..(i + 1) * cols];
         for j in 0..cols {
@@ -157,12 +221,18 @@ pub fn log_softmax_rows(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
     out
 }
 
+/// [`log_softmax_rows_ws`] over a throwaway workspace.
+pub fn log_softmax_rows(a: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    log_softmax_rows_ws(a, rows, cols, &mut Workspace::new())
+}
+
 // ---------------------------------------------------------------------------
 // Pruned-GEMM dataflows (kernel contract of python/compile/kernels/)
 // ---------------------------------------------------------------------------
 
 /// Gather + mask the kept contraction columns of `x [rows, kfull]` into a
-/// compact `[rows, idx.len()]` buffer: `x[:, idx] * mask`.
+/// compact `[rows, idx.len()]` buffer: `x[:, idx] * mask`.  (Reference
+/// dataflow — the hot path fuses this into the GEMM packing step.)
 pub fn gather_cols_masked(
     x: &[f32],
     rows: usize,
@@ -185,6 +255,7 @@ pub fn gather_cols_masked(
 }
 
 /// Gather the kept contraction rows of `w [kfull, n]` → `[idx.len(), n]`.
+/// (Reference dataflow — the hot path fuses this into the GEMM packing.)
 pub fn gather_rows(w: &[f32], kfull: usize, n: usize, idx: &[i32]) -> Vec<f32> {
     debug_assert_eq!(w.len(), kfull * n);
     let mut out = vec![0.0f32; idx.len() * n];
@@ -233,7 +304,28 @@ pub fn is_identity_keep(kfull: usize, idx: &[i32], mask: &[f32]) -> bool {
 
 /// The Layer-1 kernel contract:
 /// `pruned_matmul(x[rows,kfull], w[kfull,n], idx, mask) =
-///  (x[:,idx]·mask) @ w[idx,:]`.
+///  (x[:,idx]·mask) @ w[idx,:]` — gathers fused into the GEMM packing,
+/// output buffer from the workspace.
+pub fn pruned_matmul_ws(
+    x: &[f32],
+    w: &[f32],
+    rows: usize,
+    kfull: usize,
+    n: usize,
+    idx: &[i32],
+    mask: &[f32],
+    ws: &mut Workspace,
+) -> Vec<f32> {
+    let mut y = ws.take(rows * n);
+    if is_identity_keep(kfull, idx, mask) {
+        linalg::matmul_acc(&mut y, x, w, rows, kfull, n);
+    } else {
+        linalg::matmul_gathered_acc(&mut y, x, w, rows, kfull, n, idx, mask);
+    }
+    y
+}
+
+/// [`pruned_matmul_ws`] over a throwaway workspace (tests / compat).
 pub fn pruned_matmul(
     x: &[f32],
     w: &[f32],
@@ -243,17 +335,61 @@ pub fn pruned_matmul(
     idx: &[i32],
     mask: &[f32],
 ) -> Vec<f32> {
-    if is_identity_keep(kfull, idx, mask) {
-        return linalg::matmul(x, w, rows, kfull, n);
-    }
-    let xg = gather_cols_masked(x, rows, kfull, idx, mask);
-    let wg = gather_rows(w, kfull, n, idx);
-    linalg::matmul(&xg, &wg, rows, idx.len(), n)
+    pruned_matmul_ws(x, w, rows, kfull, n, idx, mask, &mut Workspace::new())
 }
 
-/// Backward of [`pruned_matmul`] w.r.t. its dense inputs, both
+/// Backward of [`pruned_matmul_ws`] w.r.t. its dense inputs, both
 /// zero-imputed into full shapes:
 /// `dx[:,idx] += (dy @ w[idx,:]ᵀ)·mask`, `dw[idx,:] += (x[:,idx]·mask)ᵀ @ dy`.
+///
+/// The compact gradients live in workspace scratch and are scattered
+/// directly into the full-shape outputs; the identity-keep (g00) case
+/// skips the compact stage entirely and writes the dense GEMM results
+/// straight into `dx`/`dw` (bitwise-equal to scattering through an
+/// identity index set).
+pub fn pruned_matmul_bwd_ws(
+    x: &[f32],
+    w: &[f32],
+    dy: &[f32],
+    rows: usize,
+    kfull: usize,
+    n: usize,
+    idx: &[i32],
+    mask: &[f32],
+    ws: &mut Workspace,
+) -> (Vec<f32>, Vec<f32>) {
+    let kp = idx.len();
+    let identity = is_identity_keep(kfull, idx, mask);
+    // dx = zero-impute((dy @ w[idx,:]ᵀ) · mask)
+    let mut dx = ws.take(rows * kfull);
+    if identity {
+        linalg::matmul_a_bt_acc(&mut dx, dy, w, rows, n, kfull);
+    } else {
+        let mut dxc = ws.take(rows * kp);
+        linalg::matmul_a_bt_rows_gathered_acc(&mut dxc, dy, w, rows, n, idx);
+        for i in 0..rows {
+            let row = &mut dxc[i * kp..(i + 1) * kp];
+            for (v, &mv) in row.iter_mut().zip(mask) {
+                *v *= mv;
+            }
+        }
+        scatter_add_cols(&mut dx, rows, kfull, idx, &dxc);
+        ws.give(dxc);
+    }
+    // dw = zero-impute((x[:,idx]·mask)ᵀ @ dy)
+    let mut dw = ws.take(kfull * n);
+    if identity {
+        linalg::matmul_at_b_acc(&mut dw, x, dy, rows, kfull, n);
+    } else {
+        let mut dwc = ws.take(kp * n);
+        linalg::matmul_at_b_cols_gathered_acc(&mut dwc, x, dy, rows, kfull, n, idx, mask);
+        scatter_add_rows(&mut dw, kfull, n, idx, &dwc);
+        ws.give(dwc);
+    }
+    (dx, dw)
+}
+
+/// [`pruned_matmul_bwd_ws`] over a throwaway workspace (tests / compat).
 pub fn pruned_matmul_bwd(
     x: &[f32],
     w: &[f32],
@@ -264,23 +400,7 @@ pub fn pruned_matmul_bwd(
     idx: &[i32],
     mask: &[f32],
 ) -> (Vec<f32>, Vec<f32>) {
-    let kp = idx.len();
-    let wg = gather_rows(w, kfull, n, idx);
-    let mut dxc = linalg::matmul_a_bt(dy, &wg, rows, n, kp);
-    for i in 0..rows {
-        let row = &mut dxc[i * kp..(i + 1) * kp];
-        for (v, &mv) in row.iter_mut().zip(mask) {
-            *v *= mv;
-        }
-    }
-    let mut dx = vec![0.0f32; rows * kfull];
-    scatter_add_cols(&mut dx, rows, kfull, idx, &dxc);
-
-    let xg = gather_cols_masked(x, rows, kfull, idx, mask);
-    let dwc = linalg::matmul_at_b(&xg, dy, rows, kp, n);
-    let mut dw = vec![0.0f32; kfull * n];
-    scatter_add_rows(&mut dw, kfull, n, idx, &dwc);
-    (dx, dw)
+    pruned_matmul_bwd_ws(x, w, dy, rows, kfull, n, idx, mask, &mut Workspace::new())
 }
 
 #[cfg(test)]
@@ -319,6 +439,37 @@ mod tests {
             assert!(mu.abs() < 1e-4, "row {i} mean {mu}");
             assert!((var - 1.0).abs() < 1e-2, "row {i} var {var}");
             assert!(cache.rstd[i] > 0.0);
+        }
+    }
+
+    #[test]
+    fn welford_layernorm_matches_two_pass_reference() {
+        // The single-pass Welford stats must agree with the textbook
+        // two-pass mean/variance to f32 rounding.
+        let mut rng = Rng::new(29);
+        let (rows, cols) = (7, 33);
+        let x = rng.normal_vec(rows * cols, 3.0);
+        let g = rng.normal_vec(cols, 0.5);
+        let b = rng.normal_vec(cols, 0.5);
+        let (y, cache) = layernorm(&x, &g, &b, rows, cols);
+        for i in 0..rows {
+            let xr = &x[i * cols..(i + 1) * cols];
+            let mu: f32 = xr.iter().sum::<f32>() / cols as f32;
+            let var: f32 = xr.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / cols as f32;
+            let rs = 1.0 / (var + LN_EPS).sqrt();
+            assert!(
+                (cache.rstd[i] - rs).abs() <= 1e-4 * rs.abs().max(1.0),
+                "row {i}: rstd {} vs two-pass {rs}",
+                cache.rstd[i]
+            );
+            for j in 0..cols {
+                let want = (xr[j] - mu) * rs * g[j] + b[j];
+                assert!(
+                    (y[i * cols + j] - want).abs() < 1e-3,
+                    "y[{i},{j}] {} vs {want}",
+                    y[i * cols + j]
+                );
+            }
         }
     }
 
@@ -418,6 +569,55 @@ mod tests {
     }
 
     #[test]
+    fn fused_pruned_paths_match_gather_reference_bitwise() {
+        // The fused kernels must reproduce the explicit
+        // gather → dense-GEMM → scatter dataflow exactly.
+        let mut rng = Rng::new(19);
+        let (m, k, n) = (5, 14, 9);
+        let x = rng.normal_vec(m * k, 1.0);
+        let w = rng.normal_vec(k * n, 1.0);
+        let dy = rng.normal_vec(m * n, 1.0);
+        let idx = [2i32, 5, 5, 9, 13];
+        let mask = [1.0f32, 0.5, 0.0, 1.0, 2.0];
+        let kp = idx.len();
+        // forward reference
+        let xg = gather_cols_masked(&x, m, k, &idx, &mask);
+        let wg = gather_rows(&w, k, n, &idx);
+        let want_y = linalg::matmul(&xg, &wg, m, kp, n);
+        assert_eq!(pruned_matmul(&x, &w, m, k, n, &idx, &mask), want_y);
+        // backward reference
+        let mut dxc = linalg::matmul_a_bt(&dy, &wg, m, n, kp);
+        for i in 0..m {
+            for (v, &mv) in dxc[i * kp..(i + 1) * kp].iter_mut().zip(&mask) {
+                *v *= mv;
+            }
+        }
+        let mut want_dx = vec![0.0f32; m * k];
+        scatter_add_cols(&mut want_dx, m, k, &idx, &dxc);
+        let dwc = linalg::matmul_at_b(&xg, &dy, m, kp, n);
+        let mut want_dw = vec![0.0f32; k * n];
+        scatter_add_rows(&mut want_dw, k, n, &idx, &dwc);
+        let (dx, dw) = pruned_matmul_bwd(&x, &w, &dy, m, k, n, &idx, &mask);
+        assert_eq!(dx, want_dx);
+        assert_eq!(dw, want_dw);
+        // identity keep: the dense fast path must equal scattering
+        // through an identity index set
+        let idx_id: Vec<i32> = (0..k as i32).collect();
+        let ones = vec![1.0f32; k];
+        let (dx_id, dw_id) = pruned_matmul_bwd(&x, &w, &dy, m, k, n, &idx_id, &ones);
+        let wg_id = gather_rows(&w, k, n, &idx_id);
+        let mut want_dx = vec![0.0f32; m * k];
+        let dxc_id = linalg::matmul_a_bt(&dy, &wg_id, m, n, k);
+        scatter_add_cols(&mut want_dx, m, k, &idx_id, &dxc_id);
+        assert_eq!(dx_id, want_dx);
+        let xg_id = gather_cols_masked(&x, m, k, &idx_id, &ones);
+        let dwc_id = linalg::matmul_at_b(&xg_id, &dy, m, k, n);
+        let mut want_dw = vec![0.0f32; k * n];
+        scatter_add_rows(&mut want_dw, k, n, &idx_id, &dwc_id);
+        assert_eq!(dw_id, want_dw);
+    }
+
+    #[test]
     fn pruned_matmul_bwd_zero_imputes_and_matches_fd() {
         let mut rng = Rng::new(17);
         let (m, k, n) = (3, 10, 5);
@@ -452,5 +652,60 @@ mod tests {
         wm[target] -= eps;
         let fd = (phi(&wp) - phi(&wm)) / (2.0 * eps as f64);
         assert!((dw[target] as f64 - fd).abs() < 2e-2 * fd.abs().max(1.0));
+    }
+
+    #[test]
+    fn empty_keep_set_yields_zero_outputs_without_panicking() {
+        let (m, k, n) = (3, 6, 4);
+        let x = vec![1.0f32; m * k];
+        let w = vec![1.0f32; k * n];
+        let dy = vec![1.0f32; m * n];
+        let idx: [i32; 0] = [];
+        let mask: [f32; 0] = [];
+        let y = pruned_matmul(&x, &w, m, k, n, &idx, &mask);
+        assert_eq!(y, vec![0.0; m * n]);
+        let (dx, dw) = pruned_matmul_bwd(&x, &w, &dy, m, k, n, &idx, &mask);
+        assert_eq!(dx, vec![0.0; m * k]);
+        assert_eq!(dw, vec![0.0; k * n]);
+        // degenerate gathers/scatters
+        assert!(gather_cols_masked(&x, m, k, &idx, &mask).is_empty());
+        assert!(gather_rows(&w, k, n, &idx).is_empty());
+        let mut dst = vec![0.0f32; m * k];
+        scatter_add_cols(&mut dst, m, k, &idx, &[]);
+        assert!(dst.iter().all(|&v| v == 0.0));
+        let mut dst = vec![0.0f32; k * n];
+        scatter_add_rows(&mut dst, k, n, &idx, &[]);
+        assert!(dst.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn workspace_steady_state_allocates_nothing() {
+        let mut rng = Rng::new(37);
+        let (m, k, n) = (16, 24, 12);
+        let x = rng.normal_vec(m * k, 1.0);
+        let w = rng.normal_vec(k * n, 1.0);
+        let dy = rng.normal_vec(m * n, 1.0);
+        let idx = [0i32, 3, 8, 11, 20];
+        let mask = [1.0f32; 5];
+        let gains = vec![1.0f32; k];
+        let biases = vec![0.0f32; k];
+        let mut ws = Workspace::new();
+        let run = |ws: &mut Workspace| {
+            let y = pruned_matmul_ws(&x, &w, m, k, n, &idx, &mask, ws);
+            let (dx, dw) = pruned_matmul_bwd_ws(&x, &w, &dy, m, k, n, &idx, &mask, ws);
+            let (ln, cache) = layernorm_ws(&x, &gains, &biases, m, k, ws);
+            let (da, dg, db) = layernorm_bwd_ws(&ln, &cache, &gains, m, k, ws);
+            // caller recycles everything, as the vit layer does
+            for v in [y, dx, dw, ln, da, dg, db] {
+                ws.give(v);
+            }
+            cache.recycle(ws);
+        };
+        run(&mut ws);
+        let warm = ws.alloc_count();
+        for _ in 0..10 {
+            run(&mut ws);
+        }
+        assert_eq!(ws.alloc_count(), warm, "steady-state ops must not allocate");
     }
 }

@@ -9,27 +9,44 @@
 //! structure of `build_attn_bwd`/`build_mlp_bwd`), so call signatures stay
 //! identical to the AOT artifacts and the trainer cannot tell the
 //! backends apart.
+//!
+//! # Scratch discipline (PR 3)
+//!
+//! Every intermediate buffer — layernorm x̂/rstd, packed qkv, attention
+//! probabilities, per-head panels, co-pruned FC weights, compact
+//! gradients — is `take`n from the caller's [`Workspace`] and `give`n
+//! back before returning, so a warmed-up workspace services steady-state
+//! calls with **zero heap allocations** inside the backend.  Only the
+//! declared outputs escape (moved into `Out` tensors); the trainer feeds
+//! those buffers back to the per-rank workspaces after merging, closing
+//! the loop.  The common full-width g00 bucket additionally skips the
+//! co-pruned FC1/FC2 weight copies entirely ([`WeightView::Full`]).
 
 use anyhow::{bail, Result};
 
 use super::ops;
 use crate::runtime::manifest::{ExecSpec, ModelInfo};
 use crate::runtime::{Arg, Out};
-use crate::tensor::{linalg, Tensor};
+use crate::tensor::{linalg, Tensor, Workspace};
 
 /// Dispatch one validated call to its role implementation.
-pub fn execute(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
+pub fn execute(
+    m: &ModelInfo,
+    spec: &ExecSpec,
+    args: &[Arg],
+    ws: &mut Workspace,
+) -> Result<Vec<Out>> {
     match spec.role.as_str() {
-        "embed_fwd" => embed_fwd(m, spec, args),
-        "embed_bwd" => embed_bwd(m, spec, args),
-        "attn_fwd" => attn_fwd(m, spec, args),
-        "attn_bwd" => attn_bwd(m, spec, args),
-        "mlp_fwd" => mlp_fwd(m, spec, args),
-        "mlp_bwd" => mlp_bwd(m, spec, args),
-        "head_fwdbwd" => head_fwdbwd(m, spec, args),
-        "head_infer" => head_infer(m, spec, args),
-        "mlp_mig_fwd" => mlp_mig_fwd(m, spec, args),
-        "mlp_mig_bwd" => mlp_mig_bwd(m, spec, args),
+        "embed_fwd" => embed_fwd(m, spec, args, ws),
+        "embed_bwd" => embed_bwd(m, spec, args, ws),
+        "attn_fwd" => attn_fwd(m, spec, args, ws),
+        "attn_bwd" => attn_bwd(m, spec, args, ws),
+        "mlp_fwd" => mlp_fwd(m, spec, args, ws),
+        "mlp_bwd" => mlp_bwd(m, spec, args, ws),
+        "head_fwdbwd" => head_fwdbwd(m, spec, args, ws),
+        "head_infer" => head_infer(m, spec, args, ws),
+        "mlp_mig_fwd" => mlp_mig_fwd(m, spec, args, ws),
+        "mlp_mig_bwd" => mlp_mig_bwd(m, spec, args, ws),
         other => bail!(
             "native backend: unknown role '{other}' for executable '{}'",
             spec.name
@@ -75,18 +92,41 @@ fn out_f32(spec: &ExecSpec, i: usize, data: Vec<f32>) -> Out {
     Out::F32(Tensor::from_vec(&dims, data))
 }
 
+/// A weight operand that is either the caller's full buffer (identity
+/// keep — no copy) or a compact co-pruned copy in workspace scratch.
+enum WeightView<'a> {
+    Full(&'a [f32]),
+    Packed(Vec<f32>),
+}
+
+impl WeightView<'_> {
+    fn as_slice(&self) -> &[f32] {
+        match self {
+            WeightView::Full(s) => s,
+            WeightView::Packed(v) => v,
+        }
+    }
+
+    fn recycle(self, ws: &mut Workspace) {
+        if let WeightView::Packed(v) = self {
+            ws.give(v);
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // embed
 // ---------------------------------------------------------------------------
 
-fn embed_fwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
+fn embed_fwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg], ws: &mut Workspace) -> Result<Vec<Out>> {
     let patches = f32_arg(args, 0)?;
     let w_patch = f32_arg(args, 1)?;
     let pos = f32_arg(args, 2)?;
     let cls = f32_arg(args, 3)?;
     let (b, s0, pd, s, hs) = (m.bs, m.seq0, m.pd, m.seq, m.hs);
-    let tok = linalg::matmul(&patches.data, &w_patch.data, b * s0, pd, hs);
-    let mut x = vec![0.0f32; b * s * hs];
+    let mut tok = ws.take(b * s0 * hs);
+    linalg::matmul_acc(&mut tok, &patches.data, &w_patch.data, b * s0, pd, hs);
+    let mut x = ws.take(b * s * hs);
     for bi in 0..b {
         let base = bi * s * hs;
         for j in 0..hs {
@@ -101,16 +141,17 @@ fn embed_fwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
             }
         }
     }
+    ws.give(tok);
     Ok(vec![out_f32(spec, 0, x)])
 }
 
-fn embed_bwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
+fn embed_bwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg], ws: &mut Workspace) -> Result<Vec<Out>> {
     let patches = f32_arg(args, 0)?;
     let dy = f32_arg(args, 4)?;
     let (b, s0, pd, s, hs) = (m.bs, m.seq0, m.pd, m.seq, m.hs);
-    let mut dcls = vec![0.0f32; hs];
-    let mut dpos = vec![0.0f32; s * hs];
-    let mut dtok = vec![0.0f32; b * s0 * hs];
+    let mut dcls = ws.take(hs);
+    let mut dpos = ws.take(s * hs);
+    let mut dtok = ws.take(b * s0 * hs);
     for bi in 0..b {
         let base = bi * s * hs;
         for t in 0..s {
@@ -128,7 +169,9 @@ fn embed_bwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
             }
         }
     }
-    let dw_patch = linalg::matmul_at_b(&patches.data, &dtok, b * s0, pd, hs);
+    let mut dw_patch = ws.take(pd * hs);
+    linalg::matmul_at_b_acc(&mut dw_patch, &patches.data, &dtok, b * s0, pd, hs);
+    ws.give(dtok);
     Ok(vec![
         out_f32(spec, 0, dw_patch),
         out_f32(spec, 1, dpos),
@@ -148,6 +191,16 @@ struct AttnCore {
     att: Vec<f32>,
     /// merged head outputs `[b·s, hsl]`
     o: Vec<f32>,
+}
+
+impl AttnCore {
+    fn recycle(self, ws: &mut Workspace) {
+        ws.give(self.xln);
+        self.cache.recycle(ws);
+        ws.give(self.qkv);
+        ws.give(self.att);
+        ws.give(self.o);
+    }
 }
 
 /// Copy one (batch, head)'s q/k/v `[s, hd]` panels out of the packed
@@ -182,26 +235,31 @@ fn attn_forward(
     wqkv: &[f32],
     idx: &[i32],
     mask: &[f32],
+    ws: &mut Workspace,
 ) -> AttnCore {
     let (b, s, hs, hl, hd, hsl) = (m.bs, m.seq, m.hs, m.hl, m.hd, m.hsl);
     let rows = b * s;
-    let (xln, cache) = ops::layernorm(x, ln_g, ln_b, rows, hs);
-    let qkv = ops::pruned_matmul(&xln, wqkv, rows, hs, 3 * hsl, idx, mask);
+    let (xln, cache) = ops::layernorm_ws(x, ln_g, ln_b, rows, hs, ws);
+    let qkv = ops::pruned_matmul_ws(&xln, wqkv, rows, hs, 3 * hsl, idx, mask, ws);
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut att = vec![0.0f32; b * hl * s * s];
-    let mut o = vec![0.0f32; rows * hsl];
-    let mut q = vec![0.0f32; s * hd];
-    let mut k = vec![0.0f32; s * hd];
-    let mut v = vec![0.0f32; s * hd];
+    let mut att = ws.take(b * hl * s * s);
+    let mut o = ws.take(rows * hsl);
+    let mut q = ws.take(s * hd);
+    let mut k = ws.take(s * hd);
+    let mut v = ws.take(s * hd);
+    let mut a = ws.take(s * s);
+    let mut oh = ws.take(s * hd);
     for bi in 0..b {
         for h in 0..hl {
             gather_qkv(&qkv, bi, h, s, hd, hsl, &mut q, &mut k, &mut v);
-            let mut a = linalg::matmul_a_bt(&q, &k, s, hd, s);
-            for av in &mut a {
+            a.fill(0.0);
+            linalg::matmul_a_bt_acc(&mut a, &q, &k, s, hd, s);
+            for av in a.iter_mut() {
                 *av *= scale;
             }
             ops::softmax_rows(&mut a, s, s);
-            let oh = linalg::matmul(&a, &v, s, s, hd);
+            oh.fill(0.0);
+            linalg::matmul_acc(&mut oh, &a, &v, s, s, hd);
             let ab = (bi * hl + h) * s * s;
             att[ab..ab + s * s].copy_from_slice(&a);
             for t in 0..s {
@@ -210,10 +268,15 @@ fn attn_forward(
             }
         }
     }
+    ws.give(q);
+    ws.give(k);
+    ws.give(v);
+    ws.give(a);
+    ws.give(oh);
     AttnCore { xln, cache, qkv, att, o }
 }
 
-fn attn_fwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
+fn attn_fwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg], ws: &mut Workspace) -> Result<Vec<Out>> {
     let x = f32_arg(args, 0)?;
     let ln_g = f32_arg(args, 1)?;
     let ln_b = f32_arg(args, 2)?;
@@ -223,12 +286,14 @@ fn attn_fwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
     let mask = f32_arg(args, 6)?;
     check_idx(idx, m.hs, "attn qkv contraction")?;
     let rows = m.bs * m.seq;
-    let core = attn_forward(m, &x.data, &ln_g.data, &ln_b.data, &wqkv.data, idx, &mask.data);
-    let y = linalg::matmul(&core.o, &wo.data, rows, m.hsl, m.hs);
+    let core = attn_forward(m, &x.data, &ln_g.data, &ln_b.data, &wqkv.data, idx, &mask.data, ws);
+    let mut y = ws.take(rows * m.hs);
+    linalg::matmul_acc(&mut y, &core.o, &wo.data, rows, m.hsl, m.hs);
+    core.recycle(ws);
     Ok(vec![out_f32(spec, 0, y)])
 }
 
-fn attn_bwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
+fn attn_bwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg], ws: &mut Workspace) -> Result<Vec<Out>> {
     let x = f32_arg(args, 0)?;
     let ln_g = f32_arg(args, 1)?;
     let ln_b = f32_arg(args, 2)?;
@@ -243,19 +308,25 @@ fn attn_bwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
     let scale = 1.0 / (hd as f32).sqrt();
 
     // rematerialized forward
-    let core = attn_forward(m, &x.data, &ln_g.data, &ln_b.data, &wqkv.data, idx, &mask.data);
+    let core = attn_forward(m, &x.data, &ln_g.data, &ln_b.data, &wqkv.data, idx, &mask.data, ws);
 
     // y = o @ wo
-    let do_ = linalg::matmul_a_bt(&dy.data, &wo.data, rows, hs, hsl);
-    let dwo = linalg::matmul_at_b(&core.o, &dy.data, rows, hsl, hs);
+    let mut do_ = ws.take(rows * hsl);
+    linalg::matmul_a_bt_acc(&mut do_, &dy.data, &wo.data, rows, hs, hsl);
+    let mut dwo = ws.take(hsl * hs);
+    linalg::matmul_at_b_acc(&mut dwo, &core.o, &dy.data, rows, hsl, hs);
 
     // per-head attention backward into dqkv
-    let mut dqkv = vec![0.0f32; rows * 3 * hsl];
-    let mut q = vec![0.0f32; s * hd];
-    let mut k = vec![0.0f32; s * hd];
-    let mut v = vec![0.0f32; s * hd];
-    let mut doh = vec![0.0f32; s * hd];
-    let mut dpre = vec![0.0f32; s * s];
+    let mut dqkv = ws.take(rows * 3 * hsl);
+    let mut q = ws.take(s * hd);
+    let mut k = ws.take(s * hd);
+    let mut v = ws.take(s * hd);
+    let mut doh = ws.take(s * hd);
+    let mut dpre = ws.take(s * s);
+    let mut dv = ws.take(s * hd);
+    let mut datt = ws.take(s * s);
+    let mut dq = ws.take(s * hd);
+    let mut dk = ws.take(s * hd);
     for bi in 0..b {
         for h in 0..hl {
             gather_qkv(&core.qkv, bi, h, s, hd, hsl, &mut q, &mut k, &mut v);
@@ -266,8 +337,10 @@ fn attn_bwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
             let ab = (bi * hl + h) * s * s;
             let a = &core.att[ab..ab + s * s];
             // o = att @ v
-            let dv = linalg::matmul_at_b(a, &doh, s, s, hd);
-            let datt = linalg::matmul_a_bt(&doh, &v, s, hd, s);
+            dv.fill(0.0);
+            linalg::matmul_at_b_acc(&mut dv, a, &doh, s, s, hd);
+            datt.fill(0.0);
+            linalg::matmul_a_bt_acc(&mut datt, &doh, &v, s, hd, s);
             // softmax backward: dpre = att ⊙ (datt − ⟨datt, att⟩_row)
             for t in 0..s {
                 let ar = &a[t * s..(t + 1) * s];
@@ -278,11 +351,13 @@ fn attn_bwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
                     dp[j] = ar[j] * (dr[j] - inner);
                 }
             }
-            for dv_ in &mut dpre {
+            for dv_ in dpre.iter_mut() {
                 *dv_ *= scale;
             }
-            let dq = linalg::matmul(&dpre, &k, s, s, hd);
-            let dk = linalg::matmul_at_b(&dpre, &q, s, s, hd);
+            dq.fill(0.0);
+            linalg::matmul_acc(&mut dq, &dpre, &k, s, s, hd);
+            dk.fill(0.0);
+            linalg::matmul_at_b_acc(&mut dk, &dpre, &q, s, s, hd);
             for t in 0..s {
                 let base = (bi * s + t) * 3 * hsl;
                 dqkv[base + h * hd..base + h * hd + hd]
@@ -294,11 +369,25 @@ fn attn_bwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
             }
         }
     }
+    ws.give(q);
+    ws.give(k);
+    ws.give(v);
+    ws.give(doh);
+    ws.give(dpre);
+    ws.give(dv);
+    ws.give(datt);
+    ws.give(dq);
+    ws.give(dk);
+    ws.give(do_);
 
     // pruned-GEMM backward (zero-imputed), then layernorm backward
-    let (dxln, dwqkv) =
-        ops::pruned_matmul_bwd(&core.xln, &wqkv.data, &dqkv, rows, hs, 3 * hsl, idx, &mask.data);
-    let (dx, dg, db) = ops::layernorm_bwd(&dxln, &core.cache, &ln_g.data, rows, hs);
+    let (dxln, dwqkv) = ops::pruned_matmul_bwd_ws(
+        &core.xln, &wqkv.data, &dqkv, rows, hs, 3 * hsl, idx, &mask.data, ws,
+    );
+    ws.give(dqkv);
+    let (dx, dg, db) = ops::layernorm_bwd_ws(&dxln, &core.cache, &ln_g.data, rows, hs, ws);
+    ws.give(dxln);
+    core.recycle(ws);
     Ok(vec![
         out_f32(spec, 0, dx),
         out_f32(spec, 1, dg),
@@ -312,63 +401,89 @@ fn attn_bwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
 // FFN branch
 // ---------------------------------------------------------------------------
 
-struct MlpCore {
+struct MlpCore<'a> {
     xln: Vec<f32>,
     cache: ops::LnCache,
-    /// co-pruned FC1 weight `w1[:, idx2]·mask2`, `[hs, k2]`
-    w1g: Vec<f32>,
+    /// co-pruned FC1 weight `w1[:, idx2]·mask2`, `[hs, k2]` (the full
+    /// `w1` itself on the identity keep)
+    w1g: WeightView<'a>,
     /// pre-GELU activations `[rows, k2]`
     h: Vec<f32>,
     /// post-GELU activations `[rows, k2]`
     hg: Vec<f32>,
-    /// pruned FC2 weight `w2[idx2,:]·mask2`, `[k2, hs]`
-    w2g: Vec<f32>,
+    /// pruned FC2 weight `w2[idx2,:]·mask2`, `[k2, hs]` (or full `w2`)
+    w2g: WeightView<'a>,
+}
+
+impl MlpCore<'_> {
+    fn recycle(self, ws: &mut Workspace) {
+        ws.give(self.xln);
+        self.cache.recycle(ws);
+        self.w1g.recycle(ws);
+        ws.give(self.h);
+        ws.give(self.hg);
+        self.w2g.recycle(ws);
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
-fn mlp_forward(
+fn mlp_forward<'a>(
     m: &ModelInfo,
     x: &[f32],
     ln_g: &[f32],
     ln_b: &[f32],
-    w1: &[f32],
-    w2: &[f32],
+    w1: &'a [f32],
+    w2: &'a [f32],
     idx1: &[i32],
     mask1: &[f32],
     idx2: &[i32],
     mask2: &[f32],
-) -> MlpCore {
+    ws: &mut Workspace,
+) -> MlpCore<'a> {
     let (b, s, hs, ffl) = (m.bs, m.seq, m.hs, m.ffl);
     let rows = b * s;
     let k2 = idx2.len();
-    let (xln, cache) = ops::layernorm(x, ln_g, ln_b, rows, hs);
-    // N-side co-prune of FC1: w1g = w1[:, idx2] * mask2
-    let mut w1g = vec![0.0f32; hs * k2];
-    for r in 0..hs {
-        let row = &w1[r * ffl..(r + 1) * ffl];
-        let o = &mut w1g[r * k2..(r + 1) * k2];
-        for (j, (&ix, &mv)) in idx2.iter().zip(mask2).enumerate() {
-            o[j] = row[ix as usize] * mv;
+    let identity2 = ops::is_identity_keep(ffl, idx2, mask2);
+    let (xln, cache) = ops::layernorm_ws(x, ln_g, ln_b, rows, hs, ws);
+    // N-side co-prune of FC1: w1g = w1[:, idx2] * mask2 (skipped — no
+    // copy at all — for the identity keep)
+    let w1g = if identity2 {
+        WeightView::Full(w1)
+    } else {
+        let mut buf = ws.take(hs * k2);
+        for r in 0..hs {
+            let row = &w1[r * ffl..(r + 1) * ffl];
+            let o = &mut buf[r * k2..(r + 1) * k2];
+            for (j, (&ix, &mv)) in idx2.iter().zip(mask2).enumerate() {
+                o[j] = row[ix as usize] * mv;
+            }
         }
-    }
-    let h = ops::pruned_matmul(&xln, &w1g, rows, hs, k2, idx1, mask1);
-    let mut hg = h.clone();
-    for v in &mut hg {
+        WeightView::Packed(buf)
+    };
+    let h = ops::pruned_matmul_ws(&xln, w1g.as_slice(), rows, hs, k2, idx1, mask1, ws);
+    let mut hg = ws.take(rows * k2);
+    hg.copy_from_slice(&h);
+    for v in hg.iter_mut() {
         *v = ops::gelu(*v);
     }
     // K-side prune of FC2: w2g = w2[idx2, :] * mask2
-    let mut w2g = vec![0.0f32; k2 * hs];
-    for (j, (&ix, &mv)) in idx2.iter().zip(mask2).enumerate() {
-        let src = &w2[ix as usize * hs..(ix as usize + 1) * hs];
-        let dst = &mut w2g[j * hs..(j + 1) * hs];
-        for (d, sv) in dst.iter_mut().zip(src) {
-            *d = sv * mv;
+    let w2g = if identity2 {
+        WeightView::Full(w2)
+    } else {
+        let mut buf = ws.take(k2 * hs);
+        for (j, (&ix, &mv)) in idx2.iter().zip(mask2).enumerate() {
+            let src = &w2[ix as usize * hs..(ix as usize + 1) * hs];
+            let dst = &mut buf[j * hs..(j + 1) * hs];
+            for (d, sv) in dst.iter_mut().zip(src) {
+                *d = sv * mv;
+            }
         }
-    }
+        WeightView::Packed(buf)
+    };
     MlpCore { xln, cache, w1g, h, hg, w2g }
 }
 
-fn mlp_fwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
+fn mlp_fwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg], ws: &mut Workspace) -> Result<Vec<Out>> {
     let x = f32_arg(args, 0)?;
     let ln_g = f32_arg(args, 1)?;
     let ln_b = f32_arg(args, 2)?;
@@ -383,13 +498,15 @@ fn mlp_fwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
     let rows = m.bs * m.seq;
     let core = mlp_forward(
         m, &x.data, &ln_g.data, &ln_b.data, &w1.data, &w2.data, idx1, &mask1.data, idx2,
-        &mask2.data,
+        &mask2.data, ws,
     );
-    let y = linalg::matmul(&core.hg, &core.w2g, rows, idx2.len(), m.hs);
+    let mut y = ws.take(rows * m.hs);
+    linalg::matmul_acc(&mut y, &core.hg, core.w2g.as_slice(), rows, idx2.len(), m.hs);
+    core.recycle(ws);
     Ok(vec![out_f32(spec, 0, y)])
 }
 
-fn mlp_bwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
+fn mlp_bwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg], ws: &mut Workspace) -> Result<Vec<Out>> {
     let x = f32_arg(args, 0)?;
     let ln_g = f32_arg(args, 1)?;
     let ln_b = f32_arg(args, 2)?;
@@ -405,22 +522,31 @@ fn mlp_bwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
     let (hs, ffl) = (m.hs, m.ffl);
     let rows = m.bs * m.seq;
     let k2 = idx2.len();
+    let identity2 = ops::is_identity_keep(ffl, idx2, &mask2.data);
 
     let core = mlp_forward(
         m, &x.data, &ln_g.data, &ln_b.data, &w1.data, &w2.data, idx1, &mask1.data, idx2,
-        &mask2.data,
+        &mask2.data, ws,
     );
 
     // y = hg @ w2g
-    let dhg = linalg::matmul_a_bt(&dy.data, &core.w2g, rows, hs, k2);
-    let dw2g = linalg::matmul_at_b(&core.hg, &dy.data, rows, k2, hs);
-    // dw2[idx2[j], :] += dw2g[j, :] * mask2[j]  (zero-imputed full shape)
-    let mut dw2 = vec![0.0f32; ffl * hs];
-    for (j, (&ix, &mv)) in idx2.iter().zip(&mask2.data).enumerate() {
-        let dst = &mut dw2[ix as usize * hs..(ix as usize + 1) * hs];
-        for (d, sv) in dst.iter_mut().zip(&dw2g[j * hs..(j + 1) * hs]) {
-            *d += sv * mv;
+    let mut dhg = ws.take(rows * k2);
+    linalg::matmul_a_bt_acc(&mut dhg, &dy.data, core.w2g.as_slice(), rows, hs, k2);
+    // dw2[idx2[j], :] += dw2g[j, :] * mask2[j]  (zero-imputed full shape);
+    // on the identity keep the compact stage collapses into the output.
+    let mut dw2 = ws.take(ffl * hs);
+    if identity2 {
+        linalg::matmul_at_b_acc(&mut dw2, &core.hg, &dy.data, rows, k2, hs);
+    } else {
+        let mut dw2g = ws.take(k2 * hs);
+        linalg::matmul_at_b_acc(&mut dw2g, &core.hg, &dy.data, rows, k2, hs);
+        for (j, (&ix, &mv)) in idx2.iter().zip(&mask2.data).enumerate() {
+            let dst = &mut dw2[ix as usize * hs..(ix as usize + 1) * hs];
+            for (d, sv) in dst.iter_mut().zip(&dw2g[j * hs..(j + 1) * hs]) {
+                *d += sv * mv;
+            }
         }
+        ws.give(dw2g);
     }
     // through the GELU
     let mut dh = dhg;
@@ -428,18 +554,28 @@ fn mlp_bwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
         *dv *= ops::gelu_grad(hv);
     }
     // pruned FC1 backward w.r.t. (xln, w1g)
-    let (dxln, dw1g) =
-        ops::pruned_matmul_bwd(&core.xln, &core.w1g, &dh, rows, hs, k2, idx1, &mask1.data);
-    // dw1[:, idx2[j]] += dw1g[:, j] * mask2[j]
-    let mut dw1 = vec![0.0f32; hs * ffl];
-    for r in 0..hs {
-        let src = &dw1g[r * k2..(r + 1) * k2];
-        let dst = &mut dw1[r * ffl..(r + 1) * ffl];
-        for (j, (&ix, &mv)) in idx2.iter().zip(&mask2.data).enumerate() {
-            dst[ix as usize] += src[j] * mv;
+    let (dxln, dw1g) = ops::pruned_matmul_bwd_ws(
+        &core.xln, core.w1g.as_slice(), &dh, rows, hs, k2, idx1, &mask1.data, ws,
+    );
+    ws.give(dh);
+    // dw1[:, idx2[j]] += dw1g[:, j] * mask2[j]; identity keep → dw1g IS dw1
+    let dw1 = if identity2 {
+        dw1g
+    } else {
+        let mut dw1 = ws.take(hs * ffl);
+        for r in 0..hs {
+            let src = &dw1g[r * k2..(r + 1) * k2];
+            let dst = &mut dw1[r * ffl..(r + 1) * ffl];
+            for (j, (&ix, &mv)) in idx2.iter().zip(&mask2.data).enumerate() {
+                dst[ix as usize] += src[j] * mv;
+            }
         }
-    }
-    let (dx, dg, db) = ops::layernorm_bwd(&dxln, &core.cache, &ln_g.data, rows, hs);
+        ws.give(dw1g);
+        dw1
+    };
+    let (dx, dg, db) = ops::layernorm_bwd_ws(&dxln, &core.cache, &ln_g.data, rows, hs, ws);
+    ws.give(dxln);
+    core.recycle(ws);
     Ok(vec![
         out_f32(spec, 0, dx),
         out_f32(spec, 1, dg),
@@ -462,6 +598,14 @@ struct HeadCore {
     ncorrect: i32,
 }
 
+impl HeadCore {
+    fn recycle(self, ws: &mut Workspace) {
+        self.cache.recycle(ws);
+        ws.give(self.pooled);
+        ws.give(self.probs);
+    }
+}
+
 fn head_forward(
     m: &ModelInfo,
     x: &[f32],
@@ -470,27 +614,35 @@ fn head_forward(
     w_head: &[f32],
     b_head: &[f32],
     labels: &[i32],
+    ws: &mut Workspace,
 ) -> Result<HeadCore> {
     let (b, s, hs, cl) = (m.bs, m.seq, m.hs, m.classes);
     let rows = b * s;
-    let (xln, cache) = ops::layernorm(x, lnf_g, lnf_b, rows, hs);
-    let mut pooled = vec![0.0f32; b * hs];
+    let (xln, cache) = ops::layernorm_ws(x, lnf_g, lnf_b, rows, hs, ws);
+    let mut pooled = ws.take(b * hs);
     for bi in 0..b {
         pooled[bi * hs..(bi + 1) * hs].copy_from_slice(&xln[bi * s * hs..bi * s * hs + hs]);
     }
-    let mut logits = linalg::matmul(&pooled, w_head, b, hs, cl);
+    ws.give(xln);
+    let mut logits = ws.take(b * cl);
+    linalg::matmul_acc(&mut logits, &pooled, w_head, b, hs, cl);
     for bi in 0..b {
         let row = &mut logits[bi * cl..(bi + 1) * cl];
         for (lv, bv) in row.iter_mut().zip(b_head) {
             *lv += bv;
         }
     }
-    let logp = ops::log_softmax_rows(&logits, b, cl);
+    let logp = ops::log_softmax_rows_ws(&logits, b, cl, ws);
     let mut loss = 0.0f64;
     let mut ncorrect = 0i32;
     for bi in 0..b {
         let li = labels[bi];
         if li < 0 || li as usize >= cl {
+            // the caller owns no reference to these buffers — park them
+            ws.give(logits);
+            ws.give(logp);
+            ws.give(pooled);
+            cache.recycle(ws);
             bail!("label {li} out of range [0, {cl})");
         }
         loss -= logp[bi * cl + li as usize] as f64;
@@ -506,8 +658,9 @@ fn head_forward(
             ncorrect += 1;
         }
     }
+    ws.give(logits);
     let mut probs = logp;
-    for p in &mut probs {
+    for p in probs.iter_mut() {
         *p = p.exp();
     }
     Ok(HeadCore {
@@ -519,7 +672,12 @@ fn head_forward(
     })
 }
 
-fn head_fwdbwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
+fn head_fwdbwd(
+    m: &ModelInfo,
+    spec: &ExecSpec,
+    args: &[Arg],
+    ws: &mut Workspace,
+) -> Result<Vec<Out>> {
     let x = f32_arg(args, 0)?;
     let lnf_g = f32_arg(args, 1)?;
     let lnf_b = f32_arg(args, 2)?;
@@ -529,35 +687,44 @@ fn head_fwdbwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>>
     let (b, s, hs, cl) = (m.bs, m.seq, m.hs, m.classes);
     let rows = b * s;
     let core = head_forward(
-        m, &x.data, &lnf_g.data, &lnf_b.data, &w_head.data, &b_head.data, labels,
+        m, &x.data, &lnf_g.data, &lnf_b.data, &w_head.data, &b_head.data, labels, ws,
     )?;
 
     // d(loss)/d(logits) of mean softmax-CE
     let inv_b = 1.0 / b as f32;
-    let mut dlogits = core.probs.clone();
+    let mut dlogits = ws.take(b * cl);
+    dlogits.copy_from_slice(&core.probs);
     for bi in 0..b {
         dlogits[bi * cl + labels[bi] as usize] -= 1.0;
     }
-    for v in &mut dlogits {
+    for v in dlogits.iter_mut() {
         *v *= inv_b;
     }
-    let dw_head = linalg::matmul_at_b(&core.pooled, &dlogits, b, hs, cl);
-    let mut db_head = vec![0.0f32; cl];
+    let mut dw_head = ws.take(hs * cl);
+    linalg::matmul_at_b_acc(&mut dw_head, &core.pooled, &dlogits, b, hs, cl);
+    let mut db_head = ws.take(cl);
     for bi in 0..b {
         for (d, &v) in db_head.iter_mut().zip(&dlogits[bi * cl..(bi + 1) * cl]) {
             *d += v;
         }
     }
-    let dpooled = linalg::matmul_a_bt(&dlogits, &w_head.data, b, cl, hs);
+    let mut dpooled = ws.take(b * hs);
+    linalg::matmul_a_bt_acc(&mut dpooled, &dlogits, &w_head.data, b, cl, hs);
+    ws.give(dlogits);
     // only the cls-token rows receive gradient
-    let mut dxln = vec![0.0f32; rows * hs];
+    let mut dxln = ws.take(rows * hs);
     for bi in 0..b {
         dxln[bi * s * hs..bi * s * hs + hs].copy_from_slice(&dpooled[bi * hs..(bi + 1) * hs]);
     }
-    let (dx, dg, db) = ops::layernorm_bwd(&dxln, &core.cache, &lnf_g.data, rows, hs);
+    ws.give(dpooled);
+    let (dx, dg, db) = ops::layernorm_bwd_ws(&dxln, &core.cache, &lnf_g.data, rows, hs, ws);
+    ws.give(dxln);
+    let loss = core.loss;
+    let ncorrect = core.ncorrect;
+    core.recycle(ws);
     Ok(vec![
-        out_f32(spec, 0, vec![core.loss]),
-        Out::I32(vec![core.ncorrect]),
+        out_f32(spec, 0, vec![loss]),
+        Out::I32(vec![ncorrect]),
         out_f32(spec, 2, dx),
         out_f32(spec, 3, dg),
         out_f32(spec, 4, db),
@@ -566,7 +733,12 @@ fn head_fwdbwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>>
     ])
 }
 
-fn head_infer(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
+fn head_infer(
+    m: &ModelInfo,
+    spec: &ExecSpec,
+    args: &[Arg],
+    ws: &mut Workspace,
+) -> Result<Vec<Out>> {
     let x = f32_arg(args, 0)?;
     let lnf_g = f32_arg(args, 1)?;
     let lnf_b = f32_arg(args, 2)?;
@@ -574,9 +746,12 @@ fn head_infer(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> 
     let b_head = f32_arg(args, 4)?;
     let labels = i32_arg(args, 5)?;
     let core = head_forward(
-        m, &x.data, &lnf_g.data, &lnf_b.data, &w_head.data, &b_head.data, labels,
+        m, &x.data, &lnf_g.data, &lnf_b.data, &w_head.data, &b_head.data, labels, ws,
     )?;
-    Ok(vec![out_f32(spec, 0, vec![core.loss]), Out::I32(vec![core.ncorrect])])
+    let loss = core.loss;
+    let ncorrect = core.ncorrect;
+    core.recycle(ws);
+    Ok(vec![out_f32(spec, 0, vec![loss]), Out::I32(vec![ncorrect])])
 }
 
 // ---------------------------------------------------------------------------
@@ -590,14 +765,21 @@ fn mig_forward(
     ln_b: &[f32],
     w1c: &[f32],
     kb: usize,
+    ws: &mut Workspace,
 ) -> (Vec<f32>, Vec<f32>, ops::LnCache) {
     let rows = m.bs * m.seq;
-    let (xln, cache) = ops::layernorm(x, ln_g, ln_b, rows, m.hs);
-    let h = linalg::matmul(&xln, w1c, rows, m.hs, kb);
+    let (xln, cache) = ops::layernorm_ws(x, ln_g, ln_b, rows, m.hs, ws);
+    let mut h = ws.take(rows * kb);
+    linalg::matmul_acc(&mut h, &xln, w1c, rows, m.hs, kb);
     (xln, h, cache)
 }
 
-fn mlp_mig_fwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
+fn mlp_mig_fwd(
+    m: &ModelInfo,
+    spec: &ExecSpec,
+    args: &[Arg],
+    ws: &mut Workspace,
+) -> Result<Vec<Out>> {
     let x = f32_arg(args, 0)?;
     let ln_g = f32_arg(args, 1)?;
     let ln_b = f32_arg(args, 2)?;
@@ -605,16 +787,25 @@ fn mlp_mig_fwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>>
     let w2c = f32_arg(args, 4)?;
     let kb = w1c.dims[1];
     let rows = m.bs * m.seq;
-    let (_xln, h, _cache) = mig_forward(m, &x.data, &ln_g.data, &ln_b.data, &w1c.data, kb);
+    let (xln, h, cache) = mig_forward(m, &x.data, &ln_g.data, &ln_b.data, &w1c.data, kb, ws);
+    ws.give(xln);
+    cache.recycle(ws);
     let mut hg = h;
-    for v in &mut hg {
+    for v in hg.iter_mut() {
         *v = ops::gelu(*v);
     }
-    let y = linalg::matmul(&hg, &w2c.data, rows, kb, m.hs);
+    let mut y = ws.take(rows * m.hs);
+    linalg::matmul_acc(&mut y, &hg, &w2c.data, rows, kb, m.hs);
+    ws.give(hg);
     Ok(vec![out_f32(spec, 0, y)])
 }
 
-fn mlp_mig_bwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>> {
+fn mlp_mig_bwd(
+    m: &ModelInfo,
+    spec: &ExecSpec,
+    args: &[Arg],
+    ws: &mut Workspace,
+) -> Result<Vec<Out>> {
     let x = f32_arg(args, 0)?;
     let ln_g = f32_arg(args, 1)?;
     let ln_b = f32_arg(args, 2)?;
@@ -623,20 +814,31 @@ fn mlp_mig_bwd(m: &ModelInfo, spec: &ExecSpec, args: &[Arg]) -> Result<Vec<Out>>
     let dy = f32_arg(args, 5)?;
     let kb = w1c.dims[1];
     let rows = m.bs * m.seq;
-    let (xln, h, cache) = mig_forward(m, &x.data, &ln_g.data, &ln_b.data, &w1c.data, kb);
-    let mut hg = h.clone();
-    for v in &mut hg {
+    let (xln, h, cache) = mig_forward(m, &x.data, &ln_g.data, &ln_b.data, &w1c.data, kb, ws);
+    let mut hg = ws.take(rows * kb);
+    hg.copy_from_slice(&h);
+    for v in hg.iter_mut() {
         *v = ops::gelu(*v);
     }
-    let dhg = linalg::matmul_a_bt(&dy.data, &w2c.data, rows, m.hs, kb);
-    let dw2c = linalg::matmul_at_b(&hg, &dy.data, rows, kb, m.hs);
+    let mut dhg = ws.take(rows * kb);
+    linalg::matmul_a_bt_acc(&mut dhg, &dy.data, &w2c.data, rows, m.hs, kb);
+    let mut dw2c = ws.take(kb * m.hs);
+    linalg::matmul_at_b_acc(&mut dw2c, &hg, &dy.data, rows, kb, m.hs);
+    ws.give(hg);
     let mut dh = dhg;
     for (dv, &hv) in dh.iter_mut().zip(&h) {
         *dv *= ops::gelu_grad(hv);
     }
-    let dw1c = linalg::matmul_at_b(&xln, &dh, rows, m.hs, kb);
-    let dxln = linalg::matmul_a_bt(&dh, &w1c.data, rows, kb, m.hs);
-    let (dx, dg, db) = ops::layernorm_bwd(&dxln, &cache, &ln_g.data, rows, m.hs);
+    ws.give(h);
+    let mut dw1c = ws.take(m.hs * kb);
+    linalg::matmul_at_b_acc(&mut dw1c, &xln, &dh, rows, m.hs, kb);
+    let mut dxln = ws.take(rows * m.hs);
+    linalg::matmul_a_bt_acc(&mut dxln, &dh, &w1c.data, rows, kb, m.hs);
+    ws.give(dh);
+    ws.give(xln);
+    let (dx, dg, db) = ops::layernorm_bwd_ws(&dxln, &cache, &ln_g.data, rows, m.hs, ws);
+    ws.give(dxln);
+    cache.recycle(ws);
     Ok(vec![
         out_f32(spec, 0, dx),
         out_f32(spec, 1, dg),

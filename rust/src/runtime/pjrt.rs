@@ -30,7 +30,7 @@ use anyhow::{bail, Context, Result};
 
 use super::manifest::{ArgSpec, Dtype, ExecSpec, Manifest};
 use super::{Arg, Backend, Out};
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, Workspace};
 
 struct CompiledExec {
     exe: xla::PjRtLoadedExecutable,
@@ -81,7 +81,13 @@ impl PjrtBackend {
 }
 
 impl Backend for PjrtBackend {
-    fn execute(&self, spec: &ExecSpec, args: &[Arg]) -> Result<(Vec<Out>, f64)> {
+    // `_ws` is host-side scratch; PJRT computes on device buffers.
+    fn execute(
+        &self,
+        spec: &ExecSpec,
+        args: &[Arg],
+        _ws: &mut Workspace,
+    ) -> Result<(Vec<Out>, f64)> {
         let c = self.compiled(spec)?;
         // Inputs go through self-owned PjRtBuffers + execute_b: the
         // crate's literal-taking `execute` leaks its internally-created

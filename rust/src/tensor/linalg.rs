@@ -1,24 +1,40 @@
-//! Blocked dense GEMM kernels for the native execution backend.
+//! Packed, register-blocked GEMM micro-kernels for the native backend.
 //!
 //! The hot path of every executable role is one of three GEMM shapes —
 //! `A·B`, `Aᵀ·B` (weight gradients), `A·Bᵀ` (input gradients) — over
-//! row-major f32 buffers.  `matmul_acc` tiles the contraction and output
-//! columns so one B panel (`BLOCK_K × BLOCK_N` ≈ 64 KiB) stays resident in
-//! L1/L2 while a C row segment is swept — the cache-friendly layout that
-//! makes the fig5–fig11 bench timings scale with the arithmetic actually
-//! performed instead of with memory stalls.
+//! row-major f32 buffers, plus the gather-fused pruned variants of
+//! Eq. (1).  All of them funnel into one micro-kernel design:
+//!
+//! * The B operand is **packed** once per `(k-block, n-panel)` into
+//!   contiguous `NR`-wide column strips (`pack_b` / `pack_bt`), so the
+//!   inner loop streams one cache line per step regardless of the
+//!   original layout — including the transposed (`A·Bᵀ`) and row-gathered
+//!   (pruned) layouts, which fold their gather into this packing step
+//!   instead of materializing a gathered copy of the operand.
+//! * The inner loop computes an `MR×NR` **register tile**: `MR×NR`
+//!   f32 accumulators in fixed-size arrays that LLVM keeps in vector
+//!   registers and auto-vectorizes (every accumulator is an independent
+//!   chain, so no float-reassociation is needed).  The old per-element
+//!   `av == 0.0` skip is gone from the dense path — branchless tiles beat
+//!   the branch even on sparse-ish inputs, and pruned shapes now use the
+//!   gather-fused kernels instead of zero-masking.
 //!
 //! # Intra-op parallelism (and why it stays bitwise deterministic)
 //!
 //! Each kernel can split its work across **row panels** on scoped OS
 //! threads ([`set_gemm_threads`] / `--threads`).  Every output element is
-//! owned by exactly one panel and its accumulation order is identical to
-//! the serial kernel's (`A·B` / `A·Bᵀ` split output rows; `Aᵀ·B` splits
-//! output rows = A columns, accumulating over the shared `m` dimension in
-//! the same ascending order the serial loop uses).  f32 addition is
-//! deterministic for a fixed operand order, so a 1-thread and an N-thread
-//! run produce **bit-identical** results — the property the trainer's
-//! serial/parallel parity suite (`tests/parallel_determinism.rs`) pins.
+//! owned by exactly one panel, and its accumulation order — ascending
+//! over the contraction dimension, identical for the packed tile and the
+//! serial loop — never depends on the thread count.  For **tall-skinny**
+//! shapes (`rows < threads`, wide output) the split switches to **column
+//! panels**: each worker copies its column stripe of C into a private
+//! contiguous buffer, runs the exact serial kernel on it, and the
+//! coordinator copies the stripes back — seeding the accumulators with
+//! the existing C values keeps the per-element arithmetic identical to
+//! the serial kernel, so results are still bitwise thread-count-invariant.
+//! f32 addition is deterministic for a fixed operand order, which is the
+//! property `tests/parallel_determinism.rs` and
+//! [`tests::all_kernels_bitwise_identical_across_thread_counts`] pin.
 //!
 //! The rank-execution pool ([`crate::train::parallel::RankPool`]) runs its
 //! workers under [`with_gemm_threads`]`(1, ..)` so rank-level and GEMM-level
@@ -27,14 +43,28 @@
 //! [`with_gemm_threads`]`(threads, ..)` so those still fan out.
 //! [`set_gemm_threads`] sets the *process-wide default* for standalone
 //! kernel use outside a trainer.
+//!
+//! Scratch discipline: the pack buffers are fixed-size stack arrays
+//! (`BLOCK_K × BLOCK_N` f32 ≈ 32 KiB), so the serial and row-panel paths
+//! perform **zero heap allocations** — the workspace arena
+//! ([`crate::tensor::workspace::Workspace`]) only has to cover the
+//! buffers *between* kernels.  The one exception is the tall-skinny
+//! column split, whose workers allocate their private C stripes; it can
+//! only trigger on multi-threaded coordinator-side calls (`rows <
+//! threads`), never in the rank workers' serial hot path.
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
-/// Contraction-dimension tile (rows of a B panel).
+/// Contraction-dimension tile (rows of a packed B panel).
 const BLOCK_K: usize = 64;
-/// Output-column tile (columns of a B panel).
-const BLOCK_N: usize = 256;
+/// Output-column tile (columns of a packed B panel; multiple of NR).
+const BLOCK_N: usize = 128;
+/// Micro-tile rows (register-blocked A rows per inner sweep).
+const MR: usize = 4;
+/// Micro-tile columns (one strip of packed B; 16 f32 = 2×AVX2 / 1×AVX-512).
+const NR: usize = 16;
 /// Below this many multiply-adds a GEMM stays serial: thread spawn costs
 /// more than the arithmetic saved.
 const PAR_MIN_FLOPS: usize = 1 << 17;
@@ -43,16 +73,27 @@ const PAR_MIN_FLOPS: usize = 1 << 17;
 /// [`set_gemm_threads`]; the trainer scopes its width per call instead).
 static GEMM_THREADS: AtomicUsize = AtomicUsize::new(1);
 
+/// `available_parallelism` resolved once — the old code re-queried the OS
+/// on every `with_gemm_threads(0, ..)` entry in the hot loop.
+static CORES: OnceLock<usize> = OnceLock::new();
+
 thread_local! {
     /// Per-thread override (0 = defer to the global). Rank-pool workers
     /// set 1 here so nested parallelism cannot oversubscribe.
     static GEMM_THREADS_TLS: Cell<usize> = const { Cell::new(0) };
 }
 
+/// Detected core count (cached after the first call).
+pub fn available_cores() -> usize {
+    *CORES.get_or_init(|| {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    })
+}
+
 /// `0` = all available cores (shared convention with `--threads`).
 fn resolve(n: usize) -> usize {
     if n == 0 {
-        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        available_cores()
     } else {
         n
     }
@@ -91,72 +132,472 @@ pub fn with_gemm_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
     f()
 }
 
-/// Threads worth using for `flops` multiply-adds over `rows` splittable
-/// row panels.
-fn panel_threads(flops: usize, rows: usize) -> usize {
-    if flops < PAR_MIN_FLOPS {
-        return 1;
-    }
-    gemm_threads().min(rows)
+/// How a kernel invocation splits across worker threads.
+enum Split {
+    Serial,
+    /// `t` contiguous output-row panels (each worker runs the serial
+    /// kernel on its own row slice).
+    Rows(usize),
+    /// `t` output-column panels — the tall-skinny case where there are
+    /// fewer rows than threads but plenty of columns.
+    Cols(usize),
 }
 
-/// Split `rows` into `t` contiguous nearly-equal panels: `(start, len)`.
-fn row_panels(rows: usize, t: usize) -> Vec<(usize, usize)> {
+fn choose_split(flops: usize, rows: usize, cols: usize) -> Split {
+    if flops < PAR_MIN_FLOPS {
+        return Split::Serial;
+    }
+    let t = gemm_threads();
+    if t <= 1 {
+        return Split::Serial;
+    }
+    if rows >= t {
+        return Split::Rows(t);
+    }
+    // Tall-skinny: row panels can't feed t workers.  Split columns when
+    // each worker still gets at least one NR strip; otherwise fall back
+    // to one panel per row.
+    let tc = t.min(cols / NR);
+    if tc >= 2 && tc > rows {
+        Split::Cols(tc)
+    } else if rows >= 2 {
+        Split::Rows(rows)
+    } else {
+        Split::Serial
+    }
+}
+
+/// Split `total` into `t` contiguous nearly-equal panels: `(start, len)`.
+fn row_panels(total: usize, t: usize) -> Vec<(usize, usize)> {
     let mut panels = Vec::with_capacity(t);
     let mut start = 0;
     for i in 0..t {
-        let len = (rows - start).div_ceil(t - i);
+        let len = (total - start).div_ceil(t - i);
         panels.push((start, len));
         start += len;
     }
-    debug_assert_eq!(start, rows);
+    debug_assert_eq!(start, total);
     panels
 }
+
+/// Run `body` over column panels of the row-major `c` (`rows × n`): each
+/// worker copies its stripe of C into a private contiguous buffer (so the
+/// accumulators are seeded with the existing values — `c +=` semantics),
+/// runs the serial kernel on it, and the coordinator copies the stripes
+/// back in panel order.  Bitwise-identical to the serial kernel.
+fn col_split<F>(c: &mut [f32], rows: usize, n: usize, t: usize, body: F)
+where
+    F: Fn(&mut [f32], usize, usize) + Sync,
+{
+    let panels = row_panels(n, t);
+    let c_src: &[f32] = c;
+    let results: Vec<Vec<f32>> = std::thread::scope(|s| {
+        let handles: Vec<_> = panels
+            .iter()
+            .map(|&(j0, jw)| {
+                let body = &body;
+                s.spawn(move || {
+                    let mut stripe = vec![0.0f32; rows * jw];
+                    for i in 0..rows {
+                        stripe[i * jw..(i + 1) * jw]
+                            .copy_from_slice(&c_src[i * n + j0..i * n + j0 + jw]);
+                    }
+                    body(&mut stripe, j0, jw);
+                    stripe
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|p| std::panic::resume_unwind(p)))
+            .collect()
+    });
+    for (&(j0, jw), stripe) in panels.iter().zip(&results) {
+        for i in 0..rows {
+            c[i * n + j0..i * n + j0 + jw].copy_from_slice(&stripe[i * jw..(i + 1) * jw]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packing
+// ---------------------------------------------------------------------------
+
+/// Pack `b[row(k0+l), j0..j0+nw]` into NR-wide column strips:
+/// `pack[(s·kb + l)·NR + jj] = b[row(k0+l)·ldb + j0 + s·NR + jj]`, with
+/// strip tails zero-padded.  `rowsel` folds the pruned row-gather of
+/// Eq. (1) into the packing (`row(l) = idx[l]`), replacing the old
+/// `gather_rows` full-copy.
+fn pack_b(
+    pack: &mut [f32],
+    b: &[f32],
+    ldb: usize,
+    k0: usize,
+    k1: usize,
+    j0: usize,
+    nw: usize,
+    rowsel: Option<&[i32]>,
+) {
+    let kb = k1 - k0;
+    let strips = nw.div_ceil(NR);
+    for s in 0..strips {
+        let c0 = j0 + s * NR;
+        let w = NR.min(j0 + nw - c0);
+        for l in 0..kb {
+            let src_row = match rowsel {
+                None => k0 + l,
+                Some(idx) => idx[k0 + l] as usize,
+            };
+            let src = src_row * ldb + c0;
+            let dst = (s * kb + l) * NR;
+            pack[dst..dst + w].copy_from_slice(&b[src..src + w]);
+            pack[dst + w..dst + NR].fill(0.0);
+        }
+    }
+}
+
+/// Pack the *transpose*: `pack[(s·kb + l)·NR + jj] = b[row(j)·ldb + k0 + l]`
+/// where `j = j0 + s·NR + jj` — the `A·Bᵀ` layout, one packed strip per NR
+/// B rows.  `rowsel` maps strip columns through `idx` (the pruned
+/// `dy · w[idx,:]ᵀ` input-gradient kernel).
+fn pack_bt(
+    pack: &mut [f32],
+    b: &[f32],
+    ldb: usize,
+    k0: usize,
+    k1: usize,
+    j0: usize,
+    nw: usize,
+    rowsel: Option<&[i32]>,
+) {
+    let kb = k1 - k0;
+    let strips = nw.div_ceil(NR);
+    for s in 0..strips {
+        let c0 = j0 + s * NR;
+        let w = NR.min(j0 + nw - c0);
+        let base = s * kb * NR;
+        for jj in 0..w {
+            let row = match rowsel {
+                None => c0 + jj,
+                Some(idx) => idx[c0 + jj] as usize,
+            };
+            let src = &b[row * ldb + k0..row * ldb + k1];
+            for (l, &v) in src.iter().enumerate() {
+                pack[base + l * NR + jj] = v;
+            }
+        }
+        for jj in w..NR {
+            for l in 0..kb {
+                pack[base + l * NR + jj] = 0.0;
+            }
+        }
+    }
+}
+
+/// Gather + mask an `rr × kb` tile of A into a contiguous stack tile
+/// (stride `BLOCK_K`): `tile[r·BLOCK_K + l] = a[(i0+r)·lda + idx[k0+l]] ·
+/// mask[k0+l]` — the pruned column-gather of Eq. (1) fused to tile
+/// granularity (the old `gather_cols_masked` materialized the whole
+/// `[rows × kp]` operand).
+fn pack_a_gather(
+    tile: &mut [f32; MR * BLOCK_K],
+    a: &[f32],
+    lda: usize,
+    i0: usize,
+    rr: usize,
+    idx: &[i32],
+    mask: &[f32],
+    k0: usize,
+    kb: usize,
+) {
+    for r in 0..rr {
+        let row = &a[(i0 + r) * lda..(i0 + r + 1) * lda];
+        let dst = &mut tile[r * BLOCK_K..r * BLOCK_K + kb];
+        for (l, d) in dst.iter_mut().enumerate() {
+            *d = row[idx[k0 + l] as usize] * mask[k0 + l];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Micro-kernel
+// ---------------------------------------------------------------------------
+
+/// `R×NR` register tile over one packed strip: for ascending `l`,
+/// `acc[r][j] += a[(ai+r)·lda + ak + l] · strip[l·NR + j]`.  The tile is
+/// loaded from / stored to C around the `l` loop, so the per-element
+/// accumulation order is exactly the serial triple loop's — partial sums
+/// round-trip through f32 memory losslessly, making block order
+/// invisible to the result.
+#[inline(always)]
+fn micro_ab<const R: usize>(
+    c: &mut [f32],
+    ldc: usize,
+    ci: usize,
+    cj: usize,
+    w: usize,
+    a: &[f32],
+    lda: usize,
+    ai: usize,
+    ak: usize,
+    strip: &[f32],
+) {
+    let mut acc = [[0.0f32; NR]; R];
+    for r in 0..R {
+        let base = (ci + r) * ldc + cj;
+        acc[r][..w].copy_from_slice(&c[base..base + w]);
+    }
+    for (l, bl) in strip.chunks_exact(NR).enumerate() {
+        let bl: &[f32; NR] = bl.try_into().expect("NR-wide strip chunk");
+        for r in 0..R {
+            let av = a[(ai + r) * lda + ak + l];
+            let accr = &mut acc[r];
+            for j in 0..NR {
+                accr[j] += av * bl[j];
+            }
+        }
+    }
+    for r in 0..R {
+        let base = (ci + r) * ldc + cj;
+        c[base..base + w].copy_from_slice(&acc[r][..w]);
+    }
+}
+
+/// Sweep all strips of one packed panel for one row block.
+#[inline(always)]
+fn micro_strips<const R: usize>(
+    c: &mut [f32],
+    ldc: usize,
+    i: usize,
+    n0: usize,
+    nw: usize,
+    a: &[f32],
+    lda: usize,
+    ai: usize,
+    ak: usize,
+    pack: &[f32],
+    kb: usize,
+) {
+    let strips = nw.div_ceil(NR);
+    for s in 0..strips {
+        let cj = n0 + s * NR;
+        let w = NR.min(nw - s * NR);
+        micro_ab::<R>(c, ldc, i, cj, w, a, lda, ai, ak, &pack[s * kb * NR..(s + 1) * kb * NR]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernel bodies (serial; the split wrappers call these per panel)
+// ---------------------------------------------------------------------------
+
+/// `c[0..m, 0..jw] += A' · B'[:, j0..j0+jw]` where `A'`/`B'` are the
+/// (optionally gathered+masked) Eq. (1) views of `a`/`b` and `c` rows
+/// have stride `ldc`.  `kp` is the contraction length (`idx.len()` when
+/// `sel` is set, the dense `k` otherwise).
+fn gemm_ab_body(
+    c: &mut [f32],
+    ldc: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    m: usize,
+    kp: usize,
+    j0: usize,
+    jw: usize,
+    sel: Option<(&[i32], &[f32])>,
+) {
+    if m == 0 || kp == 0 || jw == 0 {
+        return;
+    }
+    let mut pack = [0.0f32; BLOCK_K * BLOCK_N];
+    let mut atile = [0.0f32; MR * BLOCK_K];
+    for k0 in (0..kp).step_by(BLOCK_K) {
+        let k1 = (k0 + BLOCK_K).min(kp);
+        let kb = k1 - k0;
+        for n0 in (0..jw).step_by(BLOCK_N) {
+            let nw = BLOCK_N.min(jw - n0);
+            pack_b(&mut pack, b, ldb, k0, k1, j0 + n0, nw, sel.map(|(idx, _)| idx));
+            let mut i = 0;
+            while i < m {
+                let rr = MR.min(m - i);
+                let (asrc, alda, ai, ak): (&[f32], usize, usize, usize) = match sel {
+                    None => (a, lda, i, k0),
+                    Some((idx, mask)) => {
+                        pack_a_gather(&mut atile, a, lda, i, rr, idx, mask, k0, kb);
+                        (&atile[..], BLOCK_K, 0, 0)
+                    }
+                };
+                match rr {
+                    4 => micro_strips::<4>(c, ldc, i, n0, nw, asrc, alda, ai, ak, &pack, kb),
+                    3 => micro_strips::<3>(c, ldc, i, n0, nw, asrc, alda, ai, ak, &pack, kb),
+                    2 => micro_strips::<2>(c, ldc, i, n0, nw, asrc, alda, ai, ak, &pack, kb),
+                    _ => micro_strips::<1>(c, ldc, i, n0, nw, asrc, alda, ai, ak, &pack, kb),
+                }
+                i += rr;
+            }
+        }
+    }
+}
+
+/// `c[0..m, 0..jw] += a · b[rows j0..j0+jw]ᵀ` (contraction over `k`, the
+/// B row length).  `rowsel` maps output columns through `idx` — the
+/// pruned `dy · w[idx,:]ᵀ` kernel.  After `pack_bt` transposes the
+/// panel, the inner sweep is the same `micro_ab` tile as `A·B`.
+fn gemm_abt_body(
+    c: &mut [f32],
+    ldc: usize,
+    a: &[f32],
+    b: &[f32],
+    ldb: usize,
+    m: usize,
+    k: usize,
+    j0: usize,
+    jw: usize,
+    rowsel: Option<&[i32]>,
+) {
+    if m == 0 || k == 0 || jw == 0 {
+        return;
+    }
+    let mut pack = [0.0f32; BLOCK_K * BLOCK_N];
+    for k0 in (0..k).step_by(BLOCK_K) {
+        let k1 = (k0 + BLOCK_K).min(k);
+        let kb = k1 - k0;
+        for n0 in (0..jw).step_by(BLOCK_N) {
+            let nw = BLOCK_N.min(jw - n0);
+            pack_bt(&mut pack, b, ldb, k0, k1, j0 + n0, nw, rowsel);
+            let mut i = 0;
+            while i < m {
+                let rr = MR.min(m - i);
+                match rr {
+                    4 => micro_strips::<4>(c, ldc, i, n0, nw, a, k, i, k0, &pack, kb),
+                    3 => micro_strips::<3>(c, ldc, i, n0, nw, a, k, i, k0, &pack, kb),
+                    2 => micro_strips::<2>(c, ldc, i, n0, nw, a, k, i, k0, &pack, kb),
+                    _ => micro_strips::<1>(c, ldc, i, n0, nw, a, k, i, k0, &pack, kb),
+                }
+                i += rr;
+            }
+        }
+    }
+}
+
+/// `c[l0.., j0..] += (A')ᵀ · b[:, j0..j0+jw]`: output rows are (possibly
+/// gathered+masked) A columns, accumulated over ascending `i` — the
+/// weight-gradient shape.  `c` covers output rows `l0..l0+lw` (row 0 of
+/// the chunk = logical row `l0`) with stride `ldc`.
+fn gemm_atb_body(
+    c: &mut [f32],
+    ldc: usize,
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    m: usize,
+    l0: usize,
+    lw: usize,
+    j0: usize,
+    jw: usize,
+    sel: Option<(&[i32], &[f32])>,
+) {
+    if m == 0 || lw == 0 || jw == 0 {
+        return;
+    }
+    for n0 in (0..jw).step_by(BLOCK_N) {
+        let nw = BLOCK_N.min(jw - n0);
+        for i0 in (0..m).step_by(BLOCK_K) {
+            let i1 = (i0 + BLOCK_K).min(m);
+            let mut r0 = 0;
+            while r0 < lw {
+                let rr = MR.min(lw - r0);
+                // resolve the A source column + mask scale per tile row
+                let mut cols = [0usize; MR];
+                let mut scales = [1.0f32; MR];
+                for r in 0..rr {
+                    match sel {
+                        Some((idx, mask)) => {
+                            cols[r] = idx[l0 + r0 + r] as usize;
+                            scales[r] = mask[l0 + r0 + r];
+                        }
+                        None => cols[r] = l0 + r0 + r,
+                    }
+                }
+                let mut s0 = 0;
+                while s0 < nw {
+                    let w = NR.min(nw - s0);
+                    let cj = n0 + s0;
+                    let bj = j0 + cj;
+                    let mut acc = [[0.0f32; NR]; MR];
+                    for r in 0..rr {
+                        let base = (r0 + r) * ldc + cj;
+                        acc[r][..w].copy_from_slice(&c[base..base + w]);
+                    }
+                    if w == NR {
+                        for i in i0..i1 {
+                            let brow: &[f32; NR] = (&b[i * ldb + bj..i * ldb + bj + NR])
+                                .try_into()
+                                .expect("NR-wide B row segment");
+                            for r in 0..rr {
+                                let av = a[i * lda + cols[r]] * scales[r];
+                                let accr = &mut acc[r];
+                                for j in 0..NR {
+                                    accr[j] += av * brow[j];
+                                }
+                            }
+                        }
+                    } else {
+                        for i in i0..i1 {
+                            let brow = &b[i * ldb + bj..i * ldb + bj + w];
+                            for r in 0..rr {
+                                let av = a[i * lda + cols[r]] * scales[r];
+                                let accr = &mut acc[r];
+                                for (j, &bv) in brow.iter().enumerate() {
+                                    accr[j] += av * bv;
+                                }
+                            }
+                        }
+                    }
+                    for r in 0..rr {
+                        let base = (r0 + r) * ldc + cj;
+                        c[base..base + w].copy_from_slice(&acc[r][..w]);
+                    }
+                    s0 += NR;
+                }
+                r0 += rr;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public kernels
+// ---------------------------------------------------------------------------
 
 /// `c += a · b` for row-major `a [m,k]`, `b [k,n]`, `c [m,n]`.
 pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
-    let t = panel_threads(m * k * n, m);
-    if t <= 1 {
-        matmul_acc_rows(c, a, b, m, k, n);
-        return;
-    }
-    // Row-panel split: each worker owns a disjoint C/A row slice, so every
-    // row is computed by exactly the serial kernel — bitwise identical.
-    std::thread::scope(|s| {
-        let mut c_rest = c;
-        let mut a_rest = a;
-        for (_, rows) in row_panels(m, t) {
-            let (c_chunk, c_tail) = c_rest.split_at_mut(rows * n);
-            let (a_chunk, a_tail) = a_rest.split_at(rows * k);
-            c_rest = c_tail;
-            a_rest = a_tail;
-            s.spawn(move || matmul_acc_rows(c_chunk, a_chunk, b, rows, k, n));
-        }
-    });
-}
-
-/// The serial blocked kernel body (one row panel).
-fn matmul_acc_rows(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-    for k0 in (0..k).step_by(BLOCK_K) {
-        let k1 = (k0 + BLOCK_K).min(k);
-        for n0 in (0..n).step_by(BLOCK_N) {
-            let n1 = (n0 + BLOCK_N).min(n);
-            for i in 0..m {
-                let a_row = &a[i * k..(i + 1) * k];
-                let c_row = &mut c[i * n + n0..i * n + n1];
-                for (l, &av) in a_row.iter().enumerate().take(k1).skip(k0) {
-                    if av == 0.0 {
-                        continue;
-                    }
-                    let b_row = &b[l * n + n0..l * n + n1];
-                    for (cv, bv) in c_row.iter_mut().zip(b_row) {
-                        *cv += av * bv;
-                    }
+    match choose_split(m * k * n, m, n) {
+        Split::Serial => gemm_ab_body(c, n, a, k, b, n, m, k, 0, n, None),
+        Split::Rows(t) => {
+            std::thread::scope(|s| {
+                let mut c_rest = c;
+                let mut a_rest = a;
+                for (_, rows) in row_panels(m, t) {
+                    let (c_chunk, c_tail) = c_rest.split_at_mut(rows * n);
+                    let (a_chunk, a_tail) = a_rest.split_at(rows * k);
+                    c_rest = c_tail;
+                    a_rest = a_tail;
+                    s.spawn(move || {
+                        gemm_ab_body(c_chunk, n, a_chunk, k, b, n, rows, k, 0, n, None)
+                    });
                 }
-            }
+            });
+        }
+        Split::Cols(t) => {
+            col_split(c, m, n, t, |stripe, j0, jw| {
+                gemm_ab_body(stripe, jw, a, k, b, n, m, k, j0, jw, None)
+            });
         }
     }
 }
@@ -168,93 +609,185 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     c
 }
 
-/// `aᵀ · b` for row-major `a [m,ka]`, `b [m,n]` → `[ka,n]` (the
+/// Fused Eq. (1) contraction: `c += (a[:,idx]·mask) · b[idx,:]` for
+/// `a [m,kfull]`, `b [kfull,n]`, `c [m,n]`.  The column gather of A and
+/// row gather of B happen inside the packing step — no gathered operand
+/// copies are materialized.
+pub fn matmul_gathered_acc(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    kfull: usize,
+    n: usize,
+    idx: &[i32],
+    mask: &[f32],
+) {
+    debug_assert_eq!(a.len(), m * kfull);
+    debug_assert_eq!(b.len(), kfull * n);
+    debug_assert_eq!(c.len(), m * n);
+    debug_assert_eq!(idx.len(), mask.len());
+    let kp = idx.len();
+    match choose_split(m * kp * n, m, n) {
+        Split::Serial => gemm_ab_body(c, n, a, kfull, b, n, m, kp, 0, n, Some((idx, mask))),
+        Split::Rows(t) => {
+            std::thread::scope(|s| {
+                let mut c_rest = c;
+                let mut a_rest = a;
+                for (_, rows) in row_panels(m, t) {
+                    let (c_chunk, c_tail) = c_rest.split_at_mut(rows * n);
+                    let (a_chunk, a_tail) = a_rest.split_at(rows * kfull);
+                    c_rest = c_tail;
+                    a_rest = a_tail;
+                    let sel = Some((idx, mask));
+                    s.spawn(move || {
+                        gemm_ab_body(c_chunk, n, a_chunk, kfull, b, n, rows, kp, 0, n, sel)
+                    });
+                }
+            });
+        }
+        Split::Cols(t) => {
+            col_split(c, m, n, t, |stripe, j0, jw| {
+                gemm_ab_body(stripe, jw, a, kfull, b, n, m, kp, j0, jw, Some((idx, mask)))
+            });
+        }
+    }
+}
+
+fn at_b_impl(
+    c: &mut [f32],
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    m: usize,
+    lw: usize,
+    n: usize,
+    sel: Option<(&[i32], &[f32])>,
+) {
+    debug_assert_eq!(c.len(), lw * n);
+    debug_assert_eq!(b.len(), m * n);
+    match choose_split(m * lw * n, lw, n) {
+        Split::Serial => gemm_atb_body(c, n, a, lda, b, n, m, 0, lw, 0, n, sel),
+        Split::Rows(t) => {
+            std::thread::scope(|s| {
+                let mut c_rest = c;
+                for (l0, rows) in row_panels(lw, t) {
+                    let (c_chunk, tail) = c_rest.split_at_mut(rows * n);
+                    c_rest = tail;
+                    s.spawn(move || {
+                        gemm_atb_body(c_chunk, n, a, lda, b, n, m, l0, rows, 0, n, sel)
+                    });
+                }
+            });
+        }
+        Split::Cols(t) => {
+            col_split(c, lw, n, t, |stripe, j0, jw| {
+                gemm_atb_body(stripe, jw, a, lda, b, n, m, 0, lw, j0, jw, sel)
+            });
+        }
+    }
+}
+
+/// `c += aᵀ · b` for row-major `a [m,ka]`, `b [m,n]`, `c [ka,n]` (the
 /// weight-gradient shape).  Parallel panels split the *output* rows
 /// (= A columns); each element accumulates over `i ∈ 0..m` in the same
 /// ascending order as the serial kernel, so results are bit-identical
 /// at any thread count.
-pub fn matmul_at_b(a: &[f32], b: &[f32], m: usize, ka: usize, n: usize) -> Vec<f32> {
+pub fn matmul_at_b_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, ka: usize, n: usize) {
     debug_assert_eq!(a.len(), m * ka);
-    debug_assert_eq!(b.len(), m * n);
+    at_b_impl(c, a, ka, b, m, ka, n, None);
+}
+
+/// `aᵀ · b` → freshly allocated `[ka,n]`.
+pub fn matmul_at_b(a: &[f32], b: &[f32], m: usize, ka: usize, n: usize) -> Vec<f32> {
     let mut c = vec![0.0f32; ka * n];
-    let t = panel_threads(m * ka * n, ka);
-    if t <= 1 {
-        matmul_at_b_panel(&mut c, a, b, m, 0, ka, ka, n);
-        return c;
-    }
-    std::thread::scope(|s| {
-        let mut c_rest = c.as_mut_slice();
-        for (l0, rows) in row_panels(ka, t) {
-            let (c_chunk, tail) = c_rest.split_at_mut(rows * n);
-            c_rest = tail;
-            s.spawn(move || matmul_at_b_panel(c_chunk, a, b, m, l0, l0 + rows, ka, n));
-        }
-    });
+    matmul_at_b_acc(&mut c, a, b, m, ka, n);
     c
 }
 
-/// One `aᵀ·b` output-row panel: `c_chunk` covers rows `[l0, l1)`.
-fn matmul_at_b_panel(
-    c_chunk: &mut [f32],
+/// Fused pruned weight-gradient kernel:
+/// `c += (a[:,idx]·mask)ᵀ · b` for `a [m,kfull]`, `b [m,n]`,
+/// `c [idx.len(), n]` — the compact `dwc` of `pruned_matmul_bwd`, with
+/// the gather+mask applied at the A read instead of via a gathered copy.
+pub fn matmul_at_b_cols_gathered_acc(
+    c: &mut [f32],
     a: &[f32],
     b: &[f32],
     m: usize,
-    l0: usize,
-    l1: usize,
-    ka: usize,
+    kfull: usize,
     n: usize,
+    idx: &[i32],
+    mask: &[f32],
 ) {
-    debug_assert_eq!(c_chunk.len(), (l1 - l0) * n);
-    for i in 0..m {
-        let a_row = &a[i * ka..(i + 1) * ka];
-        let b_row = &b[i * n..(i + 1) * n];
-        for l in l0..l1 {
-            let av = a_row[l];
-            if av == 0.0 {
-                continue;
-            }
-            let c_row = &mut c_chunk[(l - l0) * n..(l - l0 + 1) * n];
-            for (cv, bv) in c_row.iter_mut().zip(b_row) {
-                *cv += av * bv;
-            }
+    debug_assert_eq!(a.len(), m * kfull);
+    debug_assert_eq!(idx.len(), mask.len());
+    at_b_impl(c, a, kfull, b, m, idx.len(), n, Some((idx, mask)));
+}
+
+fn a_bt_impl(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    ldb: usize,
+    m: usize,
+    k: usize,
+    nb: usize,
+    rowsel: Option<&[i32]>,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(c.len(), m * nb);
+    match choose_split(m * k * nb, m, nb) {
+        Split::Serial => gemm_abt_body(c, nb, a, b, ldb, m, k, 0, nb, rowsel),
+        Split::Rows(t) => {
+            std::thread::scope(|s| {
+                let mut c_rest = c;
+                let mut a_rest = a;
+                for (_, rows) in row_panels(m, t) {
+                    let (c_chunk, c_tail) = c_rest.split_at_mut(rows * nb);
+                    let (a_chunk, a_tail) = a_rest.split_at(rows * k);
+                    c_rest = c_tail;
+                    a_rest = a_tail;
+                    s.spawn(move || {
+                        gemm_abt_body(c_chunk, nb, a_chunk, b, ldb, rows, k, 0, nb, rowsel)
+                    });
+                }
+            });
+        }
+        Split::Cols(t) => {
+            col_split(c, m, nb, t, |stripe, j0, jw| {
+                gemm_abt_body(stripe, jw, a, b, ldb, m, k, j0, jw, rowsel)
+            });
         }
     }
 }
 
-/// `a · bᵀ` for row-major `a [m,k]`, `b [nb,k]` → `[m,nb]` (the
-/// input-gradient shape: contiguous row dot products).
-pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, k: usize, nb: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
+/// `c += a · bᵀ` for row-major `a [m,k]`, `b [nb,k]`, `c [m,nb]` (the
+/// input-gradient shape: row-dot-products, contraction ascending over `k`).
+pub fn matmul_a_bt_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, nb: usize) {
     debug_assert_eq!(b.len(), nb * k);
+    a_bt_impl(c, a, b, k, m, k, nb, None);
+}
+
+/// `a · bᵀ` → freshly allocated `[m,nb]`.
+pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, k: usize, nb: usize) -> Vec<f32> {
     let mut c = vec![0.0f32; m * nb];
-    let t = panel_threads(m * k * nb, m);
-    if t <= 1 {
-        matmul_a_bt_rows(&mut c, a, b, m, k, nb);
-        return c;
-    }
-    std::thread::scope(|s| {
-        let mut c_rest = c.as_mut_slice();
-        let mut a_rest = a;
-        for (_, rows) in row_panels(m, t) {
-            let (c_chunk, c_tail) = c_rest.split_at_mut(rows * nb);
-            let (a_chunk, a_tail) = a_rest.split_at(rows * k);
-            c_rest = c_tail;
-            a_rest = a_tail;
-            s.spawn(move || matmul_a_bt_rows(c_chunk, a_chunk, b, rows, k, nb));
-        }
-    });
+    matmul_a_bt_acc(&mut c, a, b, m, k, nb);
     c
 }
 
-/// Serial `a·bᵀ` body (one row panel).
-fn matmul_a_bt_rows(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, nb: usize) {
-    for i in 0..m {
-        let a_row = &a[i * k..(i + 1) * k];
-        let c_row = &mut c[i * nb..(i + 1) * nb];
-        for (j, cv) in c_row.iter_mut().enumerate() {
-            *cv = dot(a_row, &b[j * k..(j + 1) * k]);
-        }
-    }
+/// Fused pruned input-gradient kernel:
+/// `c += a · b[idx,:]ᵀ` for `a [m,k]`, `b [nbfull,k]`,
+/// `c [m, idx.len()]` — the compact `dxc` of `pruned_matmul_bwd`; the row
+/// gather of B folds into `pack_bt` (no `gather_rows` copy).
+pub fn matmul_a_bt_rows_gathered_acc(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    idx: &[i32],
+) {
+    a_bt_impl(c, a, b, k, m, k, idx.len(), Some(idx));
 }
 
 /// Dense dot product (accumulated in f32, matching XLA's CPU default).
@@ -268,7 +801,7 @@ mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
-    /// Textbook triple loop — the oracle the blocked kernels are pinned to.
+    /// Textbook triple loop — the oracle the packed kernels are pinned to.
     fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
         let mut c = vec![0.0f32; m * n];
         for i in 0..m {
@@ -290,8 +823,16 @@ mod tests {
     #[test]
     fn blocked_matmul_matches_naive_across_odd_shapes() {
         let mut rng = Rng::new(7);
-        // shapes straddling the block boundaries, including non-multiples
-        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 64, 9), (8, 65, 257), (130, 70, 300)] {
+        // shapes straddling block, MR, and NR boundaries
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (3, 5, 2),
+            (17, 64, 9),
+            (8, 65, 257),
+            (130, 70, 300),
+            (5, 128, 31),
+            (4, 16, 16),
+        ] {
             let a = rng.normal_vec(m * k, 1.0);
             let b = rng.normal_vec(k * n, 1.0);
             let want = naive(&a, &b, m, k, n);
@@ -336,6 +877,73 @@ mod tests {
     }
 
     #[test]
+    fn gathered_kernels_match_gather_then_dense_bitwise() {
+        let mut rng = Rng::new(23);
+        let (m, kfull, n) = (9, 40, 37);
+        let a = rng.normal_vec(m * kfull, 1.0);
+        let b = rng.normal_vec(kfull * n, 1.0);
+        let idx: Vec<i32> = vec![1, 4, 4, 7, 12, 31, 39, 0];
+        let mask: Vec<f32> = vec![1.0, 0.5, 0.0, 1.0, 1.0, 2.0, 1.0, 1.0];
+        let kp = idx.len();
+        // explicit gathered operands
+        let mut ag = vec![0.0f32; m * kp];
+        for i in 0..m {
+            for (j, (&ix, &mv)) in idx.iter().zip(&mask).enumerate() {
+                ag[i * kp + j] = a[i * kfull + ix as usize] * mv;
+            }
+        }
+        let mut bg = vec![0.0f32; kp * n];
+        for (j, &ix) in idx.iter().enumerate() {
+            bg[j * n..(j + 1) * n].copy_from_slice(&b[ix as usize * n..(ix as usize + 1) * n]);
+        }
+        // fused A·B
+        let mut got = vec![0.0f32; m * n];
+        matmul_gathered_acc(&mut got, &a, &b, m, kfull, n, &idx, &mask);
+        assert_eq!(got, matmul(&ag, &bg, m, kp, n), "gathered A·B");
+        // fused (A')ᵀ·B vs dense on the gathered operand
+        let b2 = rng.normal_vec(m * n, 1.0);
+        let mut got = vec![0.0f32; kp * n];
+        matmul_at_b_cols_gathered_acc(&mut got, &a, &b2, m, kfull, n, &idx, &mask);
+        assert_eq!(got, matmul_at_b(&ag, &b2, m, kp, n), "gathered aᵀ·b");
+        // fused A·(B[idx,:])ᵀ vs dense on the gathered operand
+        let a2 = rng.normal_vec(m * n, 1.0);
+        let mut got = vec![0.0f32; m * kp];
+        matmul_a_bt_rows_gathered_acc(&mut got, &a2, &b, m, n, &idx);
+        assert_eq!(got, matmul_a_bt(&a2, &bg, m, n, kp), "gathered a·bᵀ");
+    }
+
+    #[test]
+    fn degenerate_shapes_return_empty_or_zero_without_panicking() {
+        let empty: Vec<f32> = vec![];
+        let ones8 = vec![1.0f32; 8];
+        let ones6 = vec![1.0f32; 6];
+        let ones9 = vec![1.0f32; 9];
+        // every kernel, every zero dimension
+        assert!(matmul(&empty, &empty, 0, 5, 3).is_empty());
+        assert_eq!(matmul(&empty, &empty, 4, 0, 3), vec![0.0; 12]);
+        assert!(matmul(&ones8, &empty, 4, 2, 0).is_empty());
+        assert_eq!(matmul_at_b(&empty, &empty, 0, 4, 3), vec![0.0; 12]);
+        assert_eq!(matmul_at_b(&ones6, &ones9, 3, 2, 3), vec![3.0; 6]);
+        assert!(matmul_a_bt(&empty, &empty, 0, 3, 4).is_empty());
+        assert_eq!(matmul_a_bt(&ones6, &empty, 2, 3, 0), Vec::<f32>::new());
+        // empty keep set: Eq. (1) with nothing kept is a zero contraction
+        let idx: Vec<i32> = vec![];
+        let mask: Vec<f32> = vec![];
+        let x = vec![1.0f32; 4 * 6];
+        let w = vec![1.0f32; 6 * 5];
+        let dy = vec![1.0f32; 4 * 5];
+        let mut c = vec![0.0f32; 4 * 5];
+        matmul_gathered_acc(&mut c, &x, &w, 4, 6, 5, &idx, &mask);
+        assert!(c.iter().all(|&v| v == 0.0));
+        let mut c: Vec<f32> = vec![];
+        matmul_at_b_cols_gathered_acc(&mut c, &x, &dy, 4, 6, 5, &idx, &mask);
+        assert!(c.is_empty());
+        let mut c: Vec<f32> = vec![];
+        matmul_a_bt_rows_gathered_acc(&mut c, &dy, &w, 4, 5, &idx);
+        assert!(c.is_empty());
+    }
+
+    #[test]
     fn row_panels_tile_exactly() {
         for rows in [1usize, 2, 7, 64, 129] {
             for t in 1..=8usize.min(rows) {
@@ -361,25 +969,69 @@ mod tests {
         let b = rng.normal_vec(k * n, 1.0);
         let bt = rng.normal_vec(n * k, 1.0);
         let b2 = rng.normal_vec(m * n, 1.0);
-        let serial = with_gemm_threads(1, || {
+        let idx: Vec<i32> = (0..k as i32).step_by(2).collect();
+        let mask: Vec<f32> = idx.iter().map(|&i| 1.0 + (i % 3) as f32 * 0.25).collect();
+        let run = || {
+            let mut g = vec![0.0f32; m * n];
+            matmul_gathered_acc(&mut g, &a, &b, m, k, n, &idx, &mask);
+            let mut gat = vec![0.0f32; idx.len() * n];
+            matmul_at_b_cols_gathered_acc(&mut gat, &a, &b2, m, k, n, &idx, &mask);
+            let mut gbt = vec![0.0f32; m * idx.len()];
+            matmul_a_bt_rows_gathered_acc(&mut gbt, &b2, &b, m, n, &idx);
             (
                 matmul(&a, &b, m, k, n),
                 matmul_at_b(&a, &b2, m, k, n),
                 matmul_a_bt(&a, &bt, m, k, n),
+                g,
+                gat,
+                gbt,
             )
-        });
+        };
+        let serial = with_gemm_threads(1, run);
         for t in [2usize, 3, 4, 7] {
-            let par = with_gemm_threads(t, || {
-                (
-                    matmul(&a, &b, m, k, n),
-                    matmul_at_b(&a, &b2, m, k, n),
-                    matmul_a_bt(&a, &bt, m, k, n),
-                )
-            });
+            let par = with_gemm_threads(t, run);
             assert_eq!(serial.0, par.0, "matmul differs at t={t}");
             assert_eq!(serial.1, par.1, "matmul_at_b differs at t={t}");
             assert_eq!(serial.2, par.2, "matmul_a_bt differs at t={t}");
+            assert_eq!(serial.3, par.3, "matmul_gathered differs at t={t}");
+            assert_eq!(serial.4, par.4, "at_b_cols_gathered differs at t={t}");
+            assert_eq!(serial.5, par.5, "a_bt_rows_gathered differs at t={t}");
         }
+    }
+
+    #[test]
+    fn tall_skinny_column_split_is_bitwise_serial() {
+        // rows < threads with a wide output: the column-panel path must
+        // engage and still reproduce the serial result exactly.
+        let mut rng = Rng::new(53);
+        let (m, k, n) = (3, 128, 400); // 3·128·400 = 153 600 > PAR_MIN_FLOPS
+        let a = rng.normal_vec(m * k, 1.0);
+        let b = rng.normal_vec(k * n, 1.0);
+        let serial = with_gemm_threads(1, || matmul(&a, &b, m, k, n));
+        for t in [4usize, 8, 16] {
+            let par = with_gemm_threads(t, || matmul(&a, &b, m, k, n));
+            assert_eq!(serial, par, "column-split matmul differs at t={t}");
+        }
+        // accumulate semantics survive the stripe copy-in
+        let mut c0 = rng.normal_vec(m * n, 1.0);
+        let mut c1 = c0.clone();
+        with_gemm_threads(1, || matmul_acc(&mut c0, &a, &b, m, k, n));
+        with_gemm_threads(8, || matmul_acc(&mut c1, &a, &b, m, k, n));
+        assert_eq!(c0, c1, "matmul_acc column split must seed accumulators from c");
+        // aᵀ·b with few output rows (ka small), wide n
+        let (m2, ka, n2) = (200, 3, 400);
+        let a2 = rng.normal_vec(m2 * ka, 1.0);
+        let b2 = rng.normal_vec(m2 * n2, 1.0);
+        let s = with_gemm_threads(1, || matmul_at_b(&a2, &b2, m2, ka, n2));
+        let p = with_gemm_threads(8, || matmul_at_b(&a2, &b2, m2, ka, n2));
+        assert_eq!(s, p, "column-split matmul_at_b differs");
+        // a·bᵀ with few rows, many b rows (flops above the parallel gate)
+        let (m3, k3, nb3) = (2, 256, 320);
+        let a3 = rng.normal_vec(m3 * k3, 1.0);
+        let b3 = rng.normal_vec(nb3 * k3, 1.0);
+        let s = with_gemm_threads(1, || matmul_a_bt(&a3, &b3, m3, k3, nb3));
+        let p = with_gemm_threads(8, || matmul_a_bt(&a3, &b3, m3, k3, nb3));
+        assert_eq!(s, p, "column-split matmul_a_bt differs");
     }
 
     #[test]
@@ -388,5 +1040,15 @@ mod tests {
         let inner = with_gemm_threads(3, gemm_threads);
         assert_eq!(inner, 3);
         assert_eq!(gemm_threads(), global);
+    }
+
+    #[test]
+    fn available_cores_is_cached_and_positive() {
+        let a = available_cores();
+        let b = available_cores();
+        assert!(a >= 1);
+        assert_eq!(a, b);
+        assert_eq!(resolve(0), a);
+        assert_eq!(resolve(5), 5);
     }
 }

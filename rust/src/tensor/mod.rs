@@ -8,6 +8,9 @@
 //! checks and backends agree numerically.
 
 pub mod linalg;
+pub mod workspace;
+
+pub use workspace::Workspace;
 
 use anyhow::{bail, Result};
 

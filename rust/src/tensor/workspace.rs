@@ -1,0 +1,223 @@
+//! Reusable scratch-buffer arena for the native compute path.
+//!
+//! Every native-backend call needs a handful of intermediate buffers
+//! (layernorm x̂/rstd, packed qkv, attention probabilities, compact
+//! pruned-GEMM gradients, …).  Allocating them fresh per call puts a
+//! `malloc`/`free` pair — and a page-fault-cold buffer — on the critical
+//! path of every layer of every simulated rank, every iteration.  A
+//! [`Workspace`] turns that into pointer churn: buffers are `take`n for
+//! the duration of one use and `give`n back, so a warmed-up workspace
+//! services a steady-state training step without touching the allocator.
+//!
+//! Ownership model (deliberately simple, no lifetimes):
+//!
+//! * [`Workspace::take`] pops the best-fitting free buffer (smallest
+//!   capacity that holds `len`; the largest available otherwise), resizes
+//!   it to `len`, and **zero-fills** it — callers get the same
+//!   `vec![0.0; len]` semantics the old code had, so kernel results never
+//!   depend on what the buffer held before (a determinism requirement:
+//!   `--threads 1` and `--threads N` runs interleave workspace reuse
+//!   differently).
+//! * [`Workspace::give`] returns a buffer to the free list.  *Any*
+//!   `Vec<f32>` is accepted, not just ones that came from `take` — the
+//!   trainer feeds merged per-rank partials back to the rank's workspace,
+//!   which is how output buffers get recycled across iterations.
+//! * Buffers that escape (moved into a returned [`crate::tensor::Tensor`]
+//!   and never given back) are simply lost to the arena; the next `take`
+//!   of that size allocates again.  The trainer's recycling keeps that
+//!   from happening in the steady state.
+//!
+//! A workspace is deliberately **not** `Sync`: each simulated rank owns
+//! one (the trainer holds `Vec<Mutex<Workspace>>`, one slot per rank) and
+//! the coordinator thread uses a thread-local via `Runtime::call`.
+//! Allocation counters ([`Workspace::alloc_count`]) let tests pin the
+//! zero-alloc steady-state property.
+
+/// Arena of growable `f32` scratch buffers.  See module docs.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    free: Vec<Vec<f32>>,
+    takes: u64,
+    allocs: u64,
+}
+
+impl Workspace {
+    pub const fn new() -> Workspace {
+        Workspace { free: Vec::new(), takes: 0, allocs: 0 }
+    }
+
+    /// Pop the best-fitting free buffer for `len` elements (smallest
+    /// sufficient capacity; the largest available otherwise), counting
+    /// an allocation when nothing on the free list is big enough.
+    fn pop_best(&mut self, len: usize) -> Vec<f32> {
+        self.takes += 1;
+        let mut best: Option<usize> = None;
+        for (i, buf) in self.free.iter().enumerate() {
+            let cap = buf.capacity();
+            best = match best {
+                None => Some(i),
+                Some(j) => {
+                    let bj = self.free[j].capacity();
+                    let better = if cap >= len {
+                        bj < len || cap < bj // smallest sufficient wins
+                    } else {
+                        bj < len && cap > bj // else largest insufficient
+                    };
+                    Some(if better { i } else { j })
+                }
+            };
+        }
+        let v = match best {
+            Some(i) => self.free.swap_remove(i),
+            None => Vec::new(),
+        };
+        if v.capacity() < len {
+            self.allocs += 1;
+        }
+        v
+    }
+
+    /// Check out a zero-filled buffer of exactly `len` elements.
+    /// Reuses the best-fitting free buffer; allocates only when nothing
+    /// on the free list is large enough.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.pop_best(len);
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Check out a buffer of exactly `len` elements with **unspecified**
+    /// contents — stale data from an earlier use may remain.  Only for
+    /// slots that are provably overwritten in full before any read (the
+    /// trainer's per-block gradient placeholders); anything whose
+    /// contents could reach a result must use [`Workspace::take`], whose
+    /// zero-fill is what keeps results independent of reuse history.
+    pub fn take_unfilled(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.pop_best(len);
+        if v.len() > len {
+            v.truncate(len);
+        } else {
+            v.resize(len, 0.0); // only the grown tail is written
+        }
+        v
+    }
+
+    /// Return a buffer to the free list (its contents are dead but left
+    /// in place — [`Workspace::take`] re-zeroes on checkout).  Accepts
+    /// any `Vec<f32>`, including ones that never came from this
+    /// workspace — that is how the trainer recycles output buffers.
+    pub fn give(&mut self, v: Vec<f32>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        self.free.push(v);
+    }
+
+    /// [`Workspace::give`] for a tensor's backing buffer.
+    pub fn give_tensor(&mut self, t: crate::tensor::Tensor) {
+        self.give(t.data);
+    }
+
+    /// How many `take` calls had to fall through to the allocator.
+    pub fn alloc_count(&self) -> u64 {
+        self.allocs
+    }
+
+    /// Total `take` calls serviced.
+    pub fn take_count(&self) -> u64 {
+        self.takes
+    }
+
+    /// Bytes currently parked on the free list.
+    pub fn retained_bytes(&self) -> usize {
+        self.free.iter().map(|b| b.capacity() * 4).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_and_reuses() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take(16);
+        assert_eq!(a, vec![0.0; 16]);
+        a.iter_mut().for_each(|v| *v = 7.0);
+        ws.give(a);
+        let b = ws.take(8);
+        assert_eq!(b, vec![0.0; 8], "reused buffer must be re-zeroed");
+        ws.give(b);
+        assert_eq!(ws.alloc_count(), 1, "second take must reuse the first buffer");
+        assert_eq!(ws.take_count(), 2);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient() {
+        let mut ws = Workspace::new();
+        let big = ws.take(100);
+        let small = ws.take(10);
+        ws.give(big);
+        ws.give(small);
+        let v = ws.take(10);
+        assert!(v.capacity() < 100, "should pick the small buffer, got {}", v.capacity());
+        ws.give(v);
+        // asking for more than anything held grows exactly one buffer
+        let before = ws.alloc_count();
+        let w = ws.take(1000);
+        assert_eq!(ws.alloc_count(), before + 1);
+        ws.give(w);
+    }
+
+    #[test]
+    fn steady_state_take_give_never_allocates() {
+        let mut ws = Workspace::new();
+        // warm with the shape set
+        for &n in &[64usize, 128, 256] {
+            let v = ws.take(n);
+            ws.give(v);
+        }
+        let warm = ws.alloc_count();
+        for _ in 0..100 {
+            let a = ws.take(256);
+            let b = ws.take(64);
+            ws.give(a);
+            ws.give(b);
+        }
+        assert_eq!(ws.alloc_count(), warm, "steady-state reuse must not allocate");
+    }
+
+    #[test]
+    fn take_unfilled_reuses_without_touching_contents() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take(32);
+        a.iter_mut().for_each(|v| *v = 9.0);
+        ws.give(a);
+        // shrinking checkout keeps the stale prefix (contents unspecified)
+        let b = ws.take_unfilled(16);
+        assert_eq!(b.len(), 16);
+        assert_eq!(ws.alloc_count(), 1, "must reuse, not allocate");
+        ws.give(b);
+        // growing checkout zero-fills only the tail beyond the stale part
+        let c = ws.take_unfilled(32);
+        assert_eq!(c.len(), 32);
+        assert!(c[16..].iter().all(|&v| v == 0.0), "grown tail must be zeroed");
+        ws.give(c);
+        // a plain take after unfilled use is still fully zeroed
+        let d = ws.take(32);
+        assert_eq!(d, vec![0.0; 32]);
+    }
+
+    #[test]
+    fn foreign_buffers_are_absorbed() {
+        let mut ws = Workspace::new();
+        ws.give(vec![1.0f32; 512]);
+        let v = ws.take(512);
+        assert_eq!(ws.alloc_count(), 0);
+        assert!(v.iter().all(|&x| x == 0.0));
+        // zero-capacity buffers are dropped, not parked
+        ws.give(Vec::new());
+        assert_eq!(ws.retained_bytes(), 0);
+    }
+}

@@ -21,15 +21,18 @@
 //! bitwise.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use anyhow::Result;
 
 use crate::tensor::linalg;
+use crate::tensor::Workspace;
 
-/// Resolve a `--threads` request: `0` means "all available cores".
+/// Resolve a `--threads` request: `0` means "all available cores"
+/// (cached — `available_parallelism` is not re-queried per call).
 pub fn resolve_threads(requested: usize) -> usize {
     if requested == 0 {
-        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        linalg::available_cores()
     } else {
         requested
     }
@@ -115,6 +118,69 @@ impl RankPool {
             .map(|slot| slot.expect("rank job never ran"))
             .collect()
     }
+
+    /// [`RankPool::run`] with one [`Workspace`] slot per job: job `i`
+    /// gets exclusive access to `ws[i]` for its whole duration, so every
+    /// rank reuses its own scratch arena across phases and iterations
+    /// (the zero-alloc steady-state path).  `ws.len()` must cover `n`.
+    ///
+    /// Determinism is unaffected: workspace buffers are checked out
+    /// zero-filled, so which iteration's memory a rank reuses can never
+    /// leak into results.
+    pub fn run_ws<T, F>(&self, n: usize, ws: &[Mutex<Workspace>], f: F) -> Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(usize, &mut Workspace) -> Result<T> + Sync,
+    {
+        assert!(ws.len() >= n, "need one workspace slot per job ({} < {n})", ws.len());
+        let workers = self.threads.min(n);
+        if workers <= 1 {
+            return (0..n)
+                .map(|i| {
+                    let mut guard = ws[i].lock().expect("workspace lock poisoned");
+                    f(i, &mut guard)
+                })
+                .collect();
+        }
+        let next = AtomicUsize::new(0);
+        let mut slots: Vec<Option<Result<T>>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(workers);
+            for _ in 0..workers {
+                let next = &next;
+                let f = &f;
+                handles.push(s.spawn(move || {
+                    let mut done: Vec<(usize, Result<T>)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        // job i owns workspace slot i; serial GEMMs so
+                        // rank- and GEMM-level fan-out never stack
+                        let mut guard = ws[i].lock().expect("workspace lock poisoned");
+                        done.push((i, linalg::with_gemm_threads(1, || f(i, &mut guard))));
+                    }
+                    done
+                }));
+            }
+            for h in handles {
+                match h.join() {
+                    Ok(done) => {
+                        for (i, r) in done {
+                            slots[i] = Some(r);
+                        }
+                    }
+                    Err(payload) => std::panic::resume_unwind(payload),
+                }
+            }
+        });
+        slots
+            .into_iter()
+            .map(|slot| slot.expect("rank job never ran"))
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -164,5 +230,28 @@ mod tests {
         let pool = RankPool::new(2);
         let widths = pool.run(4, |_| Ok(linalg::gemm_threads())).unwrap();
         assert!(widths.iter().all(|&w| w == 1), "workers must not nest GEMM fan-out");
+    }
+
+    #[test]
+    fn run_ws_pins_one_workspace_slot_per_job_and_reuses_it() {
+        for threads in [1usize, 3] {
+            let pool = RankPool::new(threads);
+            let ws: Vec<Mutex<Workspace>> = (0..6).map(|_| Mutex::new(Workspace::new())).collect();
+            for _ in 0..3 {
+                let out = pool
+                    .run_ws(6, &ws, |i, w| {
+                        let buf = w.take(64 + i);
+                        w.give(buf);
+                        Ok(i)
+                    })
+                    .unwrap();
+                assert_eq!(out, (0..6).collect::<Vec<_>>());
+            }
+            for slot in &ws {
+                let g = slot.lock().unwrap();
+                assert_eq!(g.alloc_count(), 1, "slot must allocate once, then reuse");
+                assert_eq!(g.take_count(), 3);
+            }
+        }
     }
 }

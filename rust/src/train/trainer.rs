@@ -28,6 +28,8 @@
 //! each iteration — pruned executables + keep sets for ZERO-resizing,
 //! migration plans whose receiver slices run here with reduce-merging.
 
+use std::sync::Mutex;
+
 use anyhow::{Context, Result};
 
 use crate::balancer::{Balancer, WorkerAction};
@@ -42,7 +44,7 @@ use crate::resizing::lineage::{impute_cols, impute_rows, Lineage};
 use crate::runtime::{Arg, Out, Runtime};
 use crate::semi::CostFns;
 use crate::straggler::{Injector, Monitor};
-use crate::tensor::{linalg, Tensor};
+use crate::tensor::{linalg, Tensor, Workspace};
 use crate::train::parallel::RankPool;
 use crate::train::Sgd;
 
@@ -60,6 +62,12 @@ pub struct Trainer {
     pub costs: CostFns,
     /// scoped thread pool running per-rank work between collectives
     pool: RankPool,
+    /// per-rank scratch arenas: rank w's backend calls draw every
+    /// intermediate buffer from `ws[w]`, and the coordinator feeds merged
+    /// output buffers back — steady-state iterations reuse instead of
+    /// allocating.  Mutex only because pool workers borrow slots through
+    /// a shared slice; each slot is touched by one job at a time.
+    ws: Vec<Mutex<Workspace>>,
     injector: Injector,
     /// previous-iteration grads per (worker, block) — Same policy only
     prev_grads: Option<Vec<Vec<BlockGrads>>>,
@@ -76,7 +84,9 @@ pub struct Trainer {
 impl Trainer {
     pub fn new(cfg: RunCfg) -> Result<Trainer> {
         let rt = Runtime::open(&cfg.model_dir(), &cfg.model, cfg.backend)
-            .with_context(|| format!("opening {} backend for '{}'", cfg.backend.name(), cfg.model))?;
+            .with_context(|| {
+                format!("opening {} backend for '{}'", cfg.backend.name(), cfg.model)
+            })?;
         let m = rt.manifest.model.clone();
         let state = ModelState::init(&m, cfg.train.seed);
         let data = SynthData::new(&m, cfg.train.seed);
@@ -103,8 +113,10 @@ impl Trainer {
             None
         };
         let pool = RankPool::new(cfg.train.threads);
+        let ws = (0..m.e).map(|_| Mutex::new(Workspace::new())).collect();
         Ok(Trainer {
             pool,
+            ws,
             injector: Injector::homogeneous(m.e),
             cfg,
             rt,
@@ -140,9 +152,50 @@ impl Trainer {
     /// the replicated single-call roles (embed/head) executed on the
     /// coordinator thread.  Scoped per call (not a process global) so
     /// concurrently live trainers with different `--threads` settings
-    /// cannot stomp each other's width.
+    /// cannot stomp each other's width.  Scratch comes from the
+    /// coordinator thread's shared workspace (`Runtime::call`).
     fn call_wide(&self, name: &str, args: &[Arg]) -> Result<(Vec<Out>, f64)> {
         linalg::with_gemm_threads(self.pool.threads(), || self.rt.call(name, args))
+    }
+
+    /// Give a merged per-rank output buffer back to rank `w`'s workspace
+    /// — the other half of the zero-alloc loop: rank jobs `take` their
+    /// buffers, the coordinator returns them once folded.
+    fn recycle_rank(&self, w: usize, t: Tensor) {
+        self.ws[w].lock().expect("workspace lock poisoned").give(t.data);
+    }
+
+    /// Fresh per-(worker, block) gradient sinks drawn from each rank's
+    /// workspace (shapes of [`crate::model::zero_block_grads`]).
+    ///
+    /// Every field is overwritten in full before its first read — the
+    /// weight grads are `mem::replace`d with backend outputs and the LN
+    /// grads `copy_from_slice`d from the reduced partials in
+    /// `attn_bwd`/`mlp_bwd`, which run for every block before
+    /// `impute_and_step` touches anything — so the buffers come from
+    /// `take_unfilled` and skip ~1.6 MB of pure memset per iteration.
+    fn zeroed_block_grads(&self) -> Vec<Vec<BlockGrads>> {
+        let m = &self.rt.manifest.model;
+        (0..m.e)
+            .map(|w| {
+                let mut ws = self.ws[w].lock().expect("workspace lock poisoned");
+                (0..m.depth)
+                    .map(|_| crate::model::BlockShard {
+                        ln1_g: Tensor::from_vec(&[m.hs], ws.take_unfilled(m.hs)),
+                        ln1_b: Tensor::from_vec(&[m.hs], ws.take_unfilled(m.hs)),
+                        wqkv: Tensor::from_vec(
+                            &[m.hs, 3 * m.hsl],
+                            ws.take_unfilled(m.hs * 3 * m.hsl),
+                        ),
+                        wo: Tensor::from_vec(&[m.hsl, m.hs], ws.take_unfilled(m.hsl * m.hs)),
+                        ln2_g: Tensor::from_vec(&[m.hs], ws.take_unfilled(m.hs)),
+                        ln2_b: Tensor::from_vec(&[m.hs], ws.take_unfilled(m.hs)),
+                        w1: Tensor::from_vec(&[m.hs, m.ffl], ws.take_unfilled(m.hs * m.ffl)),
+                        w2: Tensor::from_vec(&[m.ffl, m.hs], ws.take_unfilled(m.ffl * m.hs)),
+                    })
+                    .collect()
+            })
+            .collect()
     }
 
     /// Full run: warmup/pretest, then epochs of train + eval.
@@ -302,11 +355,17 @@ impl Trainer {
             let mut partials = self.attn_fwd_partials(&x, k, &actions, &mut m_gemm)?;
             self.comm.all_reduce(&mut self.clocks, &mut partials);
             x.add_assign(&partials[0]);
+            for (w, p) in partials.into_iter().enumerate() {
+                self.recycle_rank(w, p);
+            }
 
             mlp_in.push(x.clone());
             let mut partials = self.mlp_fwd_partials(&x, k, &actions, &mut m_gemm)?;
             self.comm.all_reduce(&mut self.clocks, &mut partials);
             x.add_assign(&partials[0]);
+            for (w, p) in partials.into_iter().enumerate() {
+                self.recycle_rank(w, p);
+            }
         }
 
         // ---- head (replicated fwd+bwd) --------------------------------
@@ -335,14 +394,15 @@ impl Trainer {
         let db_head = it.next().unwrap().tensor()?;
 
         // ---- backward --------------------------------------------------
-        let mut block_grads: Vec<Vec<BlockGrads>> = (0..e)
-            .map(|_| (0..m.depth).map(|_| crate::model::zero_block_grads(&m)).collect())
-            .collect();
+        let mut block_grads = self.zeroed_block_grads();
         for k in (0..m.depth).rev() {
             let dpart = self.mlp_bwd(&mlp_in[k], &dy, k, &actions, &mut m_gemm, &mut block_grads)?;
             dy.add_assign(&dpart);
-            let dpart = self.attn_bwd(&attn_in[k], &dy, k, &actions, &mut m_gemm, &mut block_grads)?;
+            self.recycle_rank(0, dpart);
+            let dpart =
+                self.attn_bwd(&attn_in[k], &dy, k, &actions, &mut m_gemm, &mut block_grads)?;
             dy.add_assign(&dpart);
+            self.recycle_rank(0, dpart);
         }
 
         // embed bwd (replicated)
@@ -380,6 +440,27 @@ impl Trainer {
             self.opt.update(&format!("rep.{name}"), p, g);
         }
 
+        // ---- buffer recycling -------------------------------------------
+        // Per-rank grad sinks go back to their rank's workspace, the
+        // replicated grads (and the spent dy chain) to the coordinator's —
+        // next iteration's takes reuse them instead of allocating.
+        for (w, per_rank) in block_grads.into_iter().enumerate() {
+            let mut ws = self.ws[w].lock().expect("workspace lock poisoned");
+            for bg in per_rank {
+                ws.give_tensor(bg.ln1_g);
+                ws.give_tensor(bg.ln1_b);
+                ws.give_tensor(bg.wqkv);
+                ws.give_tensor(bg.wo);
+                ws.give_tensor(bg.ln2_g);
+                ws.give_tensor(bg.ln2_b);
+                ws.give_tensor(bg.w1);
+                ws.give_tensor(bg.w2);
+            }
+        }
+        for t in [dw_patch, dpos, dcls, dlnf_g, dlnf_b, dw_head, db_head, dy] {
+            crate::runtime::recycle_local(t);
+        }
+
         // ---- statistics -------------------------------------------------
         let t_iter = self.clocks.take_iter_compute();
         if self.epoch_compute.len() == e {
@@ -408,13 +489,13 @@ impl Trainer {
         let e = self.model().e;
         let rt = &self.rt;
         let state = &self.state;
-        let results = self.pool.run(e, |w| {
+        let results = self.pool.run_ws(e, &self.ws, |w, ws| {
             let p = &actions[w].layers[k];
             let name = rt.manifest.attn_name("fwd", &p.attn_bucket);
             let idx: Vec<i32> = p.attn_keep.iter().map(|&i| i as i32).collect();
-            let mask = Tensor::full(&[idx.len()], 1.0);
+            let mask = ones_mask(idx.len(), ws);
             let b = &state.shards[w][k];
-            let (outs, t) = rt.call(
+            let (outs, t) = rt.call_ws(
                 &name,
                 &[
                     Arg::F32(x),
@@ -425,7 +506,9 @@ impl Trainer {
                     Arg::I32(&idx),
                     Arg::F32(&mask),
                 ],
+                ws,
             )?;
+            ws.give_tensor(mask);
             Ok((into1(outs)?, t))
         })?;
         let mut partials = Vec::with_capacity(e);
@@ -447,15 +530,15 @@ impl Trainer {
         let e = self.model().e;
         let rt = &self.rt;
         let state = &self.state;
-        let results = self.pool.run(e, |w| {
+        let results = self.pool.run_ws(e, &self.ws, |w, ws| {
             let p = &actions[w].layers[k];
             let name = rt.manifest.mlp_name("fwd", &p.mlp_b1, &p.mlp_b2);
             let idx1: Vec<i32> = p.mlp_keep1.iter().map(|&i| i as i32).collect();
             let idx2: Vec<i32> = p.mlp_keep2.iter().map(|&i| i as i32).collect();
-            let mask1 = Tensor::full(&[idx1.len()], 1.0);
-            let mask2 = Tensor::full(&[idx2.len()], 1.0);
+            let mask1 = ones_mask(idx1.len(), ws);
+            let mask2 = ones_mask(idx2.len(), ws);
             let b = &state.shards[w][k];
-            let (outs, t) = rt.call(
+            let (outs, t) = rt.call_ws(
                 &name,
                 &[
                     Arg::F32(x),
@@ -468,7 +551,10 @@ impl Trainer {
                     Arg::I32(&idx2),
                     Arg::F32(&mask2),
                 ],
+                ws,
             )?;
+            ws.give_tensor(mask1);
+            ws.give_tensor(mask2);
             Ok((into1(outs)?, t))
         })?;
         let mut partials = Vec::with_capacity(e);
@@ -494,15 +580,15 @@ impl Trainer {
         let e = self.model().e;
         let rt = &self.rt;
         let state = &self.state;
-        let results = self.pool.run(e, |w| {
+        let results = self.pool.run_ws(e, &self.ws, |w, ws| {
             let p = &actions[w].layers[k];
             let name = rt.manifest.mlp_name("bwd", &p.mlp_b1, &p.mlp_b2);
             let idx1: Vec<i32> = p.mlp_keep1.iter().map(|&i| i as i32).collect();
             let idx2: Vec<i32> = p.mlp_keep2.iter().map(|&i| i as i32).collect();
-            let mask1 = Tensor::full(&[idx1.len()], 1.0);
-            let mask2 = Tensor::full(&[idx2.len()], 1.0);
+            let mask1 = ones_mask(idx1.len(), ws);
+            let mask2 = ones_mask(idx2.len(), ws);
             let b = &state.shards[w][k];
-            let (outs, t) = rt.call(
+            let (outs, t) = rt.call_ws(
                 &name,
                 &[
                     Arg::F32(x_in),
@@ -516,7 +602,10 @@ impl Trainer {
                     Arg::F32(&mask2),
                     Arg::F32(dy),
                 ],
+                ws,
             )?;
+            ws.give_tensor(mask1);
+            ws.give_tensor(mask2);
             let mut it = outs.into_iter();
             Ok((
                 it.next().unwrap().tensor()?,
@@ -536,8 +625,12 @@ impl Trainer {
             dx_parts.push(dx);
             dg_parts.push(dg);
             db_parts.push(db);
-            block_grads[w][k].w1 = dw1;
-            block_grads[w][k].w2 = dw2;
+            // swap the backend grads in; the zero placeholders return to
+            // the rank's workspace
+            let old = std::mem::replace(&mut block_grads[w][k].w1, dw1);
+            self.recycle_rank(w, old);
+            let old = std::mem::replace(&mut block_grads[w][k].w2, dw2);
+            self.recycle_rank(w, old);
         }
         // migration backward: receivers compute grads of migrated slices
         self.run_migration(
@@ -552,11 +645,22 @@ impl Trainer {
         self.comm.all_reduce(&mut self.clocks, &mut dg_parts);
         self.comm.all_reduce(&mut self.clocks, &mut db_parts);
         for w in 0..e {
-            block_grads[w][k].ln2_g = dg_parts[0].clone();
-            block_grads[w][k].ln2_b = db_parts[0].clone();
+            block_grads[w][k].ln2_g.data.copy_from_slice(&dg_parts[0].data);
+            block_grads[w][k].ln2_b.data.copy_from_slice(&db_parts[0].data);
+        }
+        for (w, p) in dg_parts.into_iter().enumerate() {
+            self.recycle_rank(w, p);
+        }
+        for (w, p) in db_parts.into_iter().enumerate() {
+            self.recycle_rank(w, p);
         }
         self.comm.all_reduce(&mut self.clocks, &mut dx_parts);
-        Ok(dx_parts.into_iter().next().unwrap())
+        let mut it = dx_parts.into_iter().enumerate();
+        let (_, first) = it.next().expect("at least one rank");
+        for (w, p) in it {
+            self.recycle_rank(w, p);
+        }
+        Ok(first)
     }
 
     fn attn_bwd(
@@ -571,13 +675,13 @@ impl Trainer {
         let e = self.model().e;
         let rt = &self.rt;
         let state = &self.state;
-        let results = self.pool.run(e, |w| {
+        let results = self.pool.run_ws(e, &self.ws, |w, ws| {
             let p = &actions[w].layers[k];
             let name = rt.manifest.attn_name("bwd", &p.attn_bucket);
             let idx: Vec<i32> = p.attn_keep.iter().map(|&i| i as i32).collect();
-            let mask = Tensor::full(&[idx.len()], 1.0);
+            let mask = ones_mask(idx.len(), ws);
             let b = &state.shards[w][k];
-            let (outs, t) = rt.call(
+            let (outs, t) = rt.call_ws(
                 &name,
                 &[
                     Arg::F32(x_in),
@@ -589,7 +693,9 @@ impl Trainer {
                     Arg::F32(&mask),
                     Arg::F32(dy),
                 ],
+                ws,
             )?;
+            ws.give_tensor(mask);
             let mut it = outs.into_iter();
             Ok((
                 it.next().unwrap().tensor()?,
@@ -609,17 +715,30 @@ impl Trainer {
             dx_parts.push(dx);
             dg_parts.push(dg);
             db_parts.push(db);
-            block_grads[w][k].wqkv = dwqkv;
-            block_grads[w][k].wo = dwo;
+            let old = std::mem::replace(&mut block_grads[w][k].wqkv, dwqkv);
+            self.recycle_rank(w, old);
+            let old = std::mem::replace(&mut block_grads[w][k].wo, dwo);
+            self.recycle_rank(w, old);
         }
         self.comm.all_reduce(&mut self.clocks, &mut dg_parts);
         self.comm.all_reduce(&mut self.clocks, &mut db_parts);
         for w in 0..e {
-            block_grads[w][k].ln1_g = dg_parts[0].clone();
-            block_grads[w][k].ln1_b = db_parts[0].clone();
+            block_grads[w][k].ln1_g.data.copy_from_slice(&dg_parts[0].data);
+            block_grads[w][k].ln1_b.data.copy_from_slice(&db_parts[0].data);
+        }
+        for (w, p) in dg_parts.into_iter().enumerate() {
+            self.recycle_rank(w, p);
+        }
+        for (w, p) in db_parts.into_iter().enumerate() {
+            self.recycle_rank(w, p);
         }
         self.comm.all_reduce(&mut self.clocks, &mut dx_parts);
-        Ok(dx_parts.into_iter().next().unwrap())
+        let mut it = dx_parts.into_iter().enumerate();
+        let (_, first) = it.next().expect("at least one rank");
+        for (w, p) in it {
+            self.recycle_rank(w, p);
+        }
+        Ok(first)
     }
 
     /// Execute migration receiver slices for every straggler's plan at
@@ -659,20 +778,34 @@ impl Trainer {
             return Ok(());
         }
 
-        // ---- concurrent slice execution (compute only, no shared state)
+        // ---- concurrent slice execution (compute only, no shared state).
+        // Each job computes with its *receiver* rank's workspace — that is
+        // the rank whose SimClock is charged for the slice.
         let rt = &self.rt;
         let state = &self.state;
+        let ws_slots = &self.ws;
         let outs = self.pool.run(jobs.len(), |j| {
-            let (w, _receiver, chunk) = &jobs[j];
+            let (w, receiver, chunk) = &jobs[j];
             let mig = actions[*w].mig.as_ref().expect("job built from a plan");
             let cols: Vec<u32> = mig.migrated[chunk.start..chunk.start + chunk.len].to_vec();
             let shard = &state.shards[*w][k];
             let w1c = shard.w1.gather_cols(&cols).pad_cols(chunk.kb);
             let w2c = shard.w2.gather_rows(&cols).pad_rows(chunk.kb);
+            // Prefer the receiver rank's arena, but never *block* on it:
+            // two chunks for the same receiver run concurrently on the
+            // pool, and serializing them on the Mutex would undo the
+            // PR-2 migration-phase parallelism.  The throwaway fallback
+            // allocates, but only on the contended (rare) path.
+            let mut fallback = Workspace::new();
+            let mut guard = ws_slots[*receiver].try_lock();
+            let ws: &mut Workspace = match guard {
+                Ok(ref mut g) => g,
+                Err(_) => &mut fallback,
+            };
             match dy {
                 None => {
                     let name = rt.manifest.mig_name("fwd", chunk.kb);
-                    let (outs, t) = rt.call(
+                    let (outs, t) = rt.call_ws(
                         &name,
                         &[
                             Arg::F32(x),
@@ -681,12 +814,13 @@ impl Trainer {
                             Arg::F32(&w1c),
                             Arg::F32(&w2c),
                         ],
+                        ws,
                     )?;
                     Ok((MigOut::Fwd(into1(outs)?), t))
                 }
                 Some(dy) => {
                     let name = rt.manifest.mig_name("bwd", chunk.kb);
-                    let (outs, t) = rt.call(
+                    let (outs, t) = rt.call_ws(
                         &name,
                         &[
                             Arg::F32(x),
@@ -696,6 +830,7 @@ impl Trainer {
                             Arg::F32(&w2c),
                             Arg::F32(dy),
                         ],
+                        ws,
                     )?;
                     let mut it = outs.into_iter();
                     Ok((
@@ -750,6 +885,7 @@ impl Trainer {
                                 self.comm.gather(&mut self.clocks, w, &[rw.rank], msg_bytes);
                                 partials[w].add_assign(&y);
                             }
+                            self.recycle_rank(rw.rank, y);
                         }
                         MigOut::Bwd { dx, dg, db, dw1c, dw2c } => {
                             let (block_grads, dg_parts, db_parts) =
@@ -777,6 +913,9 @@ impl Trainer {
                             let dw2 = dw2c.take_rows(chunk.len);
                             block_grads[w][k].w1.scatter_cols_assign(&cols, &dw1);
                             block_grads[w][k].w2.scatter_rows_assign(&cols, &dw2);
+                            for t in [dx, dg, db, dw1c, dw2c, dw1, dw2] {
+                                self.recycle_rank(rw.rank, t);
+                            }
                         }
                     }
                 }
@@ -894,9 +1033,9 @@ impl Trainer {
         // per-rank full-width calls below use the pool instead)
         for k in 0..m.depth {
             let xin = &x;
-            let parts = self.pool.run(m.e, |w| {
+            let parts = self.pool.run_ws(m.e, &self.ws, |w, ws| {
                 let b = &state.shards[w][k];
-                let (outs, _) = rt.call(
+                let (outs, _) = rt.call_ws(
                     "attn_fwd_g00",
                     &[
                         Arg::F32(xin),
@@ -907,14 +1046,15 @@ impl Trainer {
                         Arg::I32(&idx_hs),
                         Arg::F32(&ones_hs),
                     ],
+                    ws,
                 )?;
                 into1(outs)
             })?;
-            x.add_assign(&sum_in_order(parts));
+            self.fold_partials_into(&mut x, parts);
             let xin = &x;
-            let parts = self.pool.run(m.e, |w| {
+            let parts = self.pool.run_ws(m.e, &self.ws, |w, ws| {
                 let b = &state.shards[w][k];
-                let (outs, _) = rt.call(
+                let (outs, _) = rt.call_ws(
                     "mlp_fwd_g00",
                     &[
                         Arg::F32(xin),
@@ -927,12 +1067,27 @@ impl Trainer {
                         Arg::I32(&idx_ffl),
                         Arg::F32(&ones_ffl),
                     ],
+                    ws,
                 )?;
                 into1(outs)
             })?;
-            x.add_assign(&sum_in_order(parts));
+            self.fold_partials_into(&mut x, parts);
         }
         Ok(x)
+    }
+
+    /// Fold rank partials into `x` in rank order (the deterministic
+    /// reduction the serial engine used for full-width forwards), then
+    /// recycle every partial buffer to its rank's workspace.
+    fn fold_partials_into(&self, x: &mut Tensor, parts: Vec<Tensor>) {
+        let mut it = parts.into_iter().enumerate();
+        let (_, mut acc) = it.next().expect("at least one rank partial");
+        for (w, p) in it {
+            acc.add_assign(&p);
+            self.recycle_rank(w, p);
+        }
+        x.add_assign(&acc);
+        self.recycle_rank(0, acc);
     }
 }
 
@@ -946,13 +1101,10 @@ fn into1(outs: Vec<Out>) -> Result<Tensor> {
     outs.into_iter().next().context("no outputs")?.tensor()
 }
 
-/// Fold rank partials in rank order (the deterministic reduction the
-/// serial engine used for full-width forwards).
-fn sum_in_order(parts: Vec<Tensor>) -> Tensor {
-    let mut it = parts.into_iter();
-    let mut acc = it.next().expect("at least one rank partial");
-    for p in it {
-        acc.add_assign(&p);
-    }
-    acc
+/// All-ones keep mask in a workspace buffer (return it with
+/// `ws.give_tensor` after the call).
+fn ones_mask(len: usize, ws: &mut Workspace) -> Tensor {
+    let mut v = ws.take(len);
+    v.fill(1.0);
+    Tensor::from_vec(&[len], v)
 }

@@ -1,0 +1,181 @@
+//! Zero-alloc steady-state property of the native compute path.
+//!
+//! A counting global allocator wraps `System`; after a warmup call that
+//! populates the workspace, repeated backend calls on the same shapes
+//! must allocate only their *outputs* (plus trivial bookkeeping) — no
+//! full-size gathered-operand copies, no per-call intermediate buffers.
+//! This is the allocation-side acceptance check for the fused pruned
+//! contraction + workspace arena of PR 3.
+//!
+//! Single `#[test]` on purpose: the counters are process-global, so a
+//! second concurrently-running test would pollute the deltas.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use flextp::runtime::{Arg, Out, Runtime};
+use flextp::tensor::{Tensor, Workspace};
+use flextp::util::rng::Rng;
+
+struct Counting;
+
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+// SAFETY: defers entirely to `System`; only counters are added.
+unsafe impl GlobalAlloc for Counting {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static COUNTING: Counting = Counting;
+
+fn bytes() -> u64 {
+    ALLOC_BYTES.load(Ordering::Relaxed)
+}
+
+/// Run one call and return (allocated bytes, outputs).
+fn measured_call(
+    rt: &Runtime,
+    name: &str,
+    args: &[Arg],
+    ws: &mut Workspace,
+) -> (u64, Vec<Out>) {
+    let before = bytes();
+    let (outs, _) = rt.call_ws(name, args, ws).expect("backend call");
+    (bytes() - before, outs)
+}
+
+/// Recycle every f32 output buffer into the workspace, as the trainer
+/// does after merging partials; returns the payload byte count.
+fn recycle_outputs(outs: Vec<Out>, ws: &mut Workspace) -> u64 {
+    let mut total = 0u64;
+    for o in outs {
+        if let Out::F32(t) = o {
+            total += (t.data.len() * 4) as u64;
+            ws.give(t.data);
+        }
+    }
+    total
+}
+
+#[test]
+fn steady_state_backend_calls_allocate_at_most_their_outputs() {
+    let rt = Runtime::native_for("vit-tiny").expect("native runtime");
+    let m = rt.manifest.model.clone();
+    let rows = m.bs * m.seq;
+    let mut rng = Rng::new(123);
+    let x = Tensor::normal(&[m.bs, m.seq, m.hs], 1.0, &mut rng);
+    let ln_g = Tensor::full(&[m.hs], 1.0);
+    let ln_b = Tensor::zeros(&[m.hs]);
+    let w1 = Tensor::normal(&[m.hs, m.ffl], 0.1, &mut rng);
+    let w2 = Tensor::normal(&[m.ffl, m.hs], 0.1, &mut rng);
+    let wqkv = Tensor::normal(&[m.hs, 3 * m.hsl], 0.1, &mut rng);
+    let wo = Tensor::normal(&[m.hsl, m.hs], 0.1, &mut rng);
+    let dy = Tensor::normal(&[m.bs, m.seq, m.hs], 1.0, &mut rng);
+    let idx_hs: Vec<i32> = (0..m.hs as i32).collect();
+    let ones_hs = Tensor::full(&[m.hs], 1.0);
+    let idx_ffl: Vec<i32> = (0..m.ffl as i32).collect();
+    let ones_ffl = Tensor::full(&[m.ffl], 1.0);
+
+    let mlp_bwd_args = [
+        Arg::F32(&x),
+        Arg::F32(&ln_g),
+        Arg::F32(&ln_b),
+        Arg::F32(&w1),
+        Arg::F32(&w2),
+        Arg::I32(&idx_hs),
+        Arg::F32(&ones_hs),
+        Arg::I32(&idx_ffl),
+        Arg::F32(&ones_ffl),
+        Arg::F32(&dy),
+    ];
+    let attn_bwd_args = [
+        Arg::F32(&x),
+        Arg::F32(&ln_g),
+        Arg::F32(&ln_b),
+        Arg::F32(&wqkv),
+        Arg::F32(&wo),
+        Arg::I32(&idx_hs),
+        Arg::F32(&ones_hs),
+        Arg::F32(&dy),
+    ];
+
+    let mut ws = Workspace::new();
+    // cold call: populates the workspace, allocates plenty
+    let (cold_mlp, outs) = measured_call(&rt, "mlp_bwd_g00", &mlp_bwd_args, &mut ws);
+    let reference = outs
+        .iter()
+        .map(|o| match o {
+            Out::F32(t) => t.data.clone(),
+            Out::I32(v) => v.iter().map(|&i| i as f32).collect(),
+        })
+        .collect::<Vec<_>>();
+    let out_bytes_mlp = recycle_outputs(outs, &mut ws);
+    let (_, outs) = measured_call(&rt, "attn_bwd_g00", &attn_bwd_args, &mut ws);
+    let out_bytes_attn = recycle_outputs(outs, &mut ws);
+    assert!(
+        cold_mlp > out_bytes_mlp,
+        "cold call must allocate intermediates ({cold_mlp} vs outputs {out_bytes_mlp}) — \
+         is the counting allocator active?"
+    );
+    // a few more warm rounds so the arena's size-class pool stabilizes
+    for _ in 0..3 {
+        let (_, outs) = measured_call(&rt, "mlp_bwd_g00", &mlp_bwd_args, &mut ws);
+        recycle_outputs(outs, &mut ws);
+        let (_, outs) = measured_call(&rt, "attn_bwd_g00", &attn_bwd_args, &mut ws);
+        recycle_outputs(outs, &mut ws);
+    }
+    let warm_ws_allocs = ws.alloc_count();
+
+    // steady state: with outputs recycled, per-call allocation must stay
+    // far below one full-size intermediate (rows × hs f32 ≈ 266 KB); the
+    // only remaining traffic is Vec-of-Out/dims bookkeeping.  Outputs
+    // themselves come out of the workspace because we feed them back.
+    let slack = 64 * 1024u64;
+    let full_intermediate = (rows * m.hs * 4) as u64;
+    assert!(slack < full_intermediate, "slack must discriminate");
+    for step in 0..5 {
+        let (d, outs) = measured_call(&rt, "mlp_bwd_g00", &mlp_bwd_args, &mut ws);
+        // determinism: workspace reuse must not change results bitwise
+        for (got, want) in outs.iter().zip(&reference) {
+            if let Out::F32(t) = got {
+                assert_eq!(&t.data, want, "step {step}: workspace reuse changed results");
+            }
+        }
+        let recycled = recycle_outputs(outs, &mut ws);
+        assert!(
+            d <= slack,
+            "step {step}: mlp_bwd_g00 allocated {d} B in steady state \
+             (recycled {recycled} B of outputs; full intermediate would be {full_intermediate} B)"
+        );
+        let (d, outs) = measured_call(&rt, "attn_bwd_g00", &attn_bwd_args, &mut ws);
+        let _ = recycle_outputs(outs, &mut ws);
+        assert!(
+            d <= slack,
+            "step {step}: attn_bwd_g00 allocated {d} B in steady state \
+             (outputs were {out_bytes_attn} B)"
+        );
+    }
+    // the arena itself must be fully warmed: no take fell through to the
+    // allocator during the measured steps
+    assert_eq!(
+        ws.alloc_count(),
+        warm_ws_allocs,
+        "workspace allocated new buffers in steady state"
+    );
+}

@@ -123,3 +123,82 @@ fn prop_pruned_sets_monotone_in_chi() {
         assert_eq!(gamma_eq1(t_base, t_avg, 0.9 * t_base, gamma_max), 0.0);
     }
 }
+
+// ---------------------------------------------------------------------------
+// Degenerate-shape properties of the Eq. (1) kernel dataflows (PR 3):
+// empty keep sets and zero dimensions must yield empty/zero outputs, not
+// panics — the planners can legitimately produce them at extreme γ.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pruned_kernels_handle_empty_and_degenerate_selections() {
+    use flextp::runtime::native::ops;
+    use flextp::tensor::linalg;
+
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0xD6);
+        let rows = rng.below(6); // 0 included
+        let kfull = 1 + rng.below(40);
+        let n = rng.below(24); // 0 included
+        let x = rng.normal_vec(rows * kfull, 1.0);
+        let w = rng.normal_vec(kfull * n, 1.0);
+        let dy = rng.normal_vec(rows * n, 1.0);
+        // keep set of random size, INCLUDING empty
+        let kp = rng.below(kfull + 1);
+        let idx: Vec<i32> = (0..kp).map(|_| rng.below(kfull) as i32).collect();
+        let mask: Vec<f32> = idx.iter().map(|_| rng.uniform()).collect();
+
+        let y = ops::pruned_matmul(&x, &w, rows, kfull, n, &idx, &mask);
+        assert_eq!(y.len(), rows * n, "fwd shape (rows={rows}, n={n}, kp={kp})");
+        if kp == 0 {
+            assert!(y.iter().all(|&v| v == 0.0), "empty keep ⇒ zero forward");
+        }
+        let (dx, dw) = ops::pruned_matmul_bwd(&x, &w, &dy, rows, kfull, n, &idx, &mask);
+        assert_eq!(dx.len(), rows * kfull);
+        assert_eq!(dw.len(), kfull * n);
+        if kp == 0 {
+            assert!(dx.iter().all(|&v| v == 0.0), "empty keep ⇒ zero dx");
+            assert!(dw.iter().all(|&v| v == 0.0), "empty keep ⇒ zero dw");
+        }
+        // kept positions partition: every non-zero dw row index is kept
+        let kept: BTreeSet<usize> = idx.iter().map(|&i| i as usize).collect();
+        for r in 0..kfull {
+            if !kept.contains(&r) {
+                assert!(
+                    dw[r * n..(r + 1) * n].iter().all(|&v| v == 0.0),
+                    "unkept row {r} received gradient"
+                );
+            }
+        }
+        // dense kernels on the same degenerate dims
+        assert_eq!(linalg::matmul(&x, &w, rows, kfull, n).len(), rows * n);
+        assert_eq!(linalg::matmul_at_b(&x, &dy, rows, kfull, n).len(), kfull * n);
+        assert_eq!(linalg::matmul_a_bt(&dy, &w, rows, n, kfull).len(), rows * kfull);
+    }
+}
+
+#[test]
+fn prop_selection_driven_keeps_never_panic_the_kernels() {
+    use flextp::runtime::native::ops;
+
+    // Feed actual planner-produced keep sets (which are sorted/unique but
+    // can hit the lane-width floor) through the fused kernels.
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed ^ 0x5E);
+        let n_dim = 8 * (1 + rng.below(16));
+        let mut tr = Tracker::new(n_dim);
+        let delta: Vec<f32> = (0..n_dim).map(|_| rng.uniform()).collect();
+        tr.epoch_update(&delta, &[]);
+        let prune = rng.below(n_dim);
+        let keep = select_keep(n_dim, n_dim - prune, Selection::Priority, Some(&tr), &mut rng);
+        let idx: Vec<i32> = keep.iter().map(|&i| i as i32).collect();
+        let mask = vec![1.0f32; idx.len()];
+        let rows = 3;
+        let ncols = 5;
+        let x = rng.normal_vec(rows * n_dim, 1.0);
+        let w = rng.normal_vec(n_dim * ncols, 1.0);
+        let y = ops::pruned_matmul(&x, &w, rows, n_dim, ncols, &idx, &mask);
+        assert_eq!(y.len(), rows * ncols);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+}
