@@ -230,10 +230,23 @@ impl Balancer {
             let l_gamma = ffn_demand * m.ffl as f64;
             let beta = semi::eq2_beta(l_gamma, e, costs);
             actions[w].mig = migration::plan(manifest, w, ffn_demand, beta, self.pref(w));
-            // residual GEMM demand not covered by the FFN goes to QKV
-            let covered = ffn_demand * FFN_SHARE;
-            let qkv_gamma = ((s - covered).max(0.0) / QKV_SHARE).min(GAMMA_MAX);
-            self.fill_semi_layers(manifest, actions, w, qkv_gamma, iters_per_epoch);
+            if actions[w].mig.is_some() {
+                // mirror the kept set into the straggler's mlp plans —
+                // without this the straggler would compute its full FFN
+                // *and* receivers the migrated slice (double-counted
+                // partials).  Removed-but-unmigrated columns (the 1-β
+                // share) are thereby resized (pruned + imputed).
+                self.apply_mig_to_layers_one(manifest, &mut actions[w]);
+                // residual GEMM demand not covered by the FFN goes to QKV
+                let covered = ffn_demand * FFN_SHARE;
+                let qkv_gamma = ((s - covered).max(0.0) / QKV_SHARE).min(GAMMA_MAX);
+                self.fill_semi_layers(manifest, actions, w, qkv_gamma, iters_per_epoch);
+            } else {
+                // β ≈ 0 (migration unprofitable here): pure
+                // differentiated resizing against the strict T_min
+                let planner = self.planner(manifest, iters_per_epoch);
+                actions[w].layers = planner.plan_diff(s, &self.trackers[w], &mut self.rng);
+            }
         } else {
             // Eq.(3): top-x migrate, the rest resize against T_min.
             let t_all = monitor.t_iter.clone();
@@ -520,6 +533,46 @@ mod tests {
         for w in 1..4 {
             assert!(acts[w].mig.is_none());
         }
+    }
+
+    #[test]
+    fn semi_single_straggler_mirrors_kept_set_into_layers() {
+        // Regression: the Eq.(2) branch must reflect the migration plan
+        // in the straggler's own mlp plans (kept columns only), exactly
+        // like MIG/Eq.(3) — otherwise the migrated slice is computed
+        // twice and the partial sums are wrong.
+        let mon = monitor_with(vec![3.0, 1.0, 1.0, 1.0], 0.9);
+        let acts = plan(Strategy::Semi, &mon, vec![1.5; 4], 1.0);
+        let mig = acts[0].mig.as_ref().expect("single straggler migrates here");
+        for p in &acts[0].layers {
+            assert_eq!(p.mlp_b1, "g00");
+            assert_eq!(p.mlp_b2, mig.kept_bucket);
+            assert_eq!(p.mlp_keep2, mig.kept);
+            assert_eq!(p.mlp_keep1.len(), 32, "idx1 stays full under migration");
+        }
+    }
+
+    #[test]
+    fn semi_resizes_ffn_when_migration_unprofitable() {
+        // With prohibitive Φ costs Eq.(2) lands at β≈0: no migration,
+        // but the straggler must still shed FFN work via resizing.
+        let man = manifest();
+        let cfg = BalancerCfg { strategy: Strategy::Semi, ..Default::default() };
+        let mut b = Balancer::new(cfg, &man, 7);
+        let mon = monitor_with(vec![3.0, 1.0, 1.0, 1.0], 0.9);
+        let dear = CostFns {
+            omega1_s: 1e-6,
+            omega2_per_col: 1e-8,
+            phi1_base_s: 1e-1,
+            phi1_per_col: 1e-1,
+            phi2_per_col: 1e-2,
+        };
+        let acts = b.plan_iter(&man, &mon, &vec![1.5; 4], 1.0, 10, &dear);
+        assert!(acts[0].mig.is_none(), "dear comm must suppress migration");
+        assert!(
+            acts[0].layers.iter().any(|p| p.mlp_keep2.len() < 32),
+            "β≈0 must fall back to FFN resizing"
+        );
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //! are bitwise identical across thread counts.
 
 pub mod kernels;
+pub mod sweep;
 
 use std::path::PathBuf;
 

@@ -1,0 +1,394 @@
+//! Scenario × strategy sweep harness (`flextp sweep`, DESIGN.md §12).
+//!
+//! Runs a matrix of contention scenarios against balancing strategies
+//! (each optionally pinned to a replan mode, e.g. `semi@online` vs
+//! `semi@epoch`) and writes `BENCH_scenarios.json` — RT, ACC, comm
+//! bytes, replan counts, and χ trace stats per cell — plus a rendered
+//! table and, where both `semi@online` and `semi@epoch` ran, the online
+//! controller's speedup over static per-epoch replanning.
+//!
+//! Sweeps default to `--time-model modeled`: the SimClock becomes a
+//! pure function of the scenario, so cells are deterministic, and
+//! re-running a sweep reproduces `BENCH_scenarios.json` byte-for-byte.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ReplanMode, RunCfg, StragglerPlan, Strategy, TimeModel};
+use crate::contention::{self, ScenarioSpec};
+use crate::metrics::RunReport;
+use crate::train::trainer::Trainer;
+use crate::util::json::{obj, Json};
+use crate::util::table::TextTable;
+
+/// One sweep's full specification.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub name: String,
+    pub model: String,
+    pub epochs: usize,
+    pub iters: usize,
+    pub eval_iters: usize,
+    pub seed: u64,
+    pub time_model: TimeModel,
+    /// (label, scenario) rows of the matrix
+    pub scenarios: Vec<(String, ScenarioSpec)>,
+    /// (strategy, replan mode) columns of the matrix
+    pub cells: Vec<(Strategy, ReplanMode)>,
+}
+
+impl SweepSpec {
+    fn base(name: &str) -> SweepSpec {
+        SweepSpec {
+            name: name.to_string(),
+            model: "vit-tiny".to_string(),
+            epochs: 3,
+            iters: 12,
+            eval_iters: 4,
+            seed: 42,
+            time_model: TimeModel::Modeled,
+            scenarios: Vec::new(),
+            cells: Vec::new(),
+        }
+    }
+
+    /// Built-in sweep presets (`--preset`).
+    pub fn preset(name: &str) -> Result<SweepSpec> {
+        let mut s = SweepSpec::base(name);
+        match name {
+            // CI-sized 2 scenarios × 2 strategies: the calm control and
+            // the mid-epoch tenant arrival where online replanning wins
+            "smoke" => {
+                s.epochs = 2;
+                s.iters = 10;
+                s.scenarios = vec![
+                    ("calm".into(), contention::preset("calm")?),
+                    ("step6".into(), contention::preset("step6")?),
+                ];
+                s.cells = vec![
+                    (Strategy::Semi, ReplanMode::Online),
+                    (Strategy::Semi, ReplanMode::Epoch),
+                ];
+            }
+            // the paper's dynamic story: bursty traces vs the controller
+            "bursty" => {
+                s.scenarios = vec![
+                    ("step6".into(), contention::preset("step6")?),
+                    ("bursty".into(), contention::preset("bursty")?),
+                    ("markov-duo".into(), contention::preset("markov-duo")?),
+                ];
+                s.cells = vec![
+                    (Strategy::Semi, ReplanMode::Online),
+                    (Strategy::Semi, ReplanMode::Epoch),
+                    (Strategy::Mig, ReplanMode::Online),
+                    (Strategy::Baseline, ReplanMode::Iter),
+                ];
+            }
+            // tenants arriving/departing against resize-only and hybrid
+            "churn" => {
+                s.scenarios = vec![
+                    ("tenant-churn".into(), contention::preset("tenant-churn")?),
+                    ("burst1".into(), contention::preset("burst1")?),
+                ];
+                s.cells = vec![
+                    (Strategy::Semi, ReplanMode::Online),
+                    (Strategy::ZeroPri, ReplanMode::Iter),
+                    (Strategy::Baseline, ReplanMode::Iter),
+                ];
+            }
+            _ => bail!("unknown sweep preset '{name}' (smoke|bursty|churn)"),
+        }
+        Ok(s)
+    }
+}
+
+/// Parse a strategy cell: `"semi@online"` → (Semi, Online); a bare
+/// strategy name keeps the legacy per-iteration replanning.
+pub fn parse_cell(s: &str) -> Result<(Strategy, ReplanMode)> {
+    match s.split_once('@') {
+        Some((st, rp)) => Ok((Strategy::parse(st)?, ReplanMode::parse(rp)?)),
+        None => Ok((Strategy::parse(s)?, ReplanMode::Iter)),
+    }
+}
+
+/// Parse `"label=dsl;label2=dsl"` (bare specs get s0, s1, … labels).
+pub fn parse_scenarios(s: &str) -> Result<Vec<(String, ScenarioSpec)>> {
+    let mut out = Vec::new();
+    for (i, item) in s.split(';').filter(|x| !x.trim().is_empty()).enumerate() {
+        let (label, dsl) = match item.split_once('=') {
+            Some((l, d)) => (l.trim().to_string(), d),
+            None => (format!("s{i}"), item),
+        };
+        out.push((label, ScenarioSpec::parse(dsl.trim())?));
+    }
+    Ok(out)
+}
+
+/// One finished matrix cell.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    pub scenario: String,
+    pub strategy: String,
+    pub replan: String,
+    /// mean per-epoch simulated runtime (the paper's RT)
+    pub rt: f64,
+    pub final_acc: f64,
+    pub best_acc: f64,
+    pub comm_bytes: u64,
+    pub replans: u64,
+    pub chi_mean: f64,
+    pub chi_max: f64,
+}
+
+impl SweepCell {
+    fn from_report(scenario: &str, strategy: Strategy, replan: ReplanMode, r: &RunReport) -> Self {
+        SweepCell {
+            scenario: scenario.to_string(),
+            strategy: strategy.name().to_string(),
+            replan: replan.name().to_string(),
+            rt: r.rt(),
+            final_acc: r.final_acc(),
+            best_acc: r.best_acc(),
+            comm_bytes: r.total_comm_bytes(),
+            replans: r.total_replans(),
+            chi_mean: r.chi_mean(),
+            chi_max: r.chi_max(),
+        }
+    }
+}
+
+/// Sweep results: cells + the online-vs-epoch comparisons.
+#[derive(Debug, Clone, Default)]
+pub struct SweepReport {
+    pub name: String,
+    pub model: String,
+    pub epochs: usize,
+    pub iters: usize,
+    pub cells: Vec<SweepCell>,
+}
+
+/// Run the full scenario × strategy matrix.
+pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport> {
+    let mut cells = Vec::new();
+    for (label, scen) in &spec.scenarios {
+        for &(strategy, replan) in &spec.cells {
+            let mut cfg = RunCfg::new(&spec.model);
+            cfg.balancer.strategy = strategy;
+            cfg.balancer.replan = replan;
+            cfg.train.epochs = spec.epochs;
+            cfg.train.iters_per_epoch = spec.iters;
+            cfg.train.eval_iters = spec.eval_iters;
+            cfg.train.seed = spec.seed;
+            cfg.train.time_model = spec.time_model;
+            cfg.stragglers = StragglerPlan::Scenario(scen.clone());
+            let mut t = Trainer::new(cfg).with_context(|| {
+                format!("cell {label} × {}@{}", strategy.name(), replan.name())
+            })?;
+            let r = t.run().with_context(|| {
+                format!("running {label} × {}@{}", strategy.name(), replan.name())
+            })?;
+            cells.push(SweepCell::from_report(label, strategy, replan, &r));
+        }
+    }
+    Ok(SweepReport {
+        name: spec.name.clone(),
+        model: spec.model.clone(),
+        epochs: spec.epochs,
+        iters: spec.iters,
+        cells,
+    })
+}
+
+impl SweepReport {
+    fn find(&self, scenario: &str, strategy: &str, replan: &str) -> Option<&SweepCell> {
+        self.cells
+            .iter()
+            .find(|c| c.scenario == scenario && c.strategy == strategy && c.replan == replan)
+    }
+
+    /// Per scenario with both `SEMI@online` and `SEMI@epoch` cells:
+    /// (scenario, rt_online, rt_epoch, speedup, acc_delta_pp).
+    pub fn comparisons(&self) -> Vec<(String, f64, f64, f64, f64)> {
+        let mut out = Vec::new();
+        for label in self.scenario_labels() {
+            let (Some(on), Some(ep)) = (
+                self.find(&label, "SEMI", "online"),
+                self.find(&label, "SEMI", "epoch"),
+            ) else {
+                continue;
+            };
+            let speedup = if on.rt > 0.0 { ep.rt / on.rt } else { 0.0 };
+            out.push((
+                label,
+                on.rt,
+                ep.rt,
+                speedup,
+                100.0 * (on.final_acc - ep.final_acc),
+            ));
+        }
+        out
+    }
+
+    fn scenario_labels(&self) -> Vec<String> {
+        let mut seen: Vec<String> = Vec::new();
+        for c in &self.cells {
+            if !seen.contains(&c.scenario) {
+                seen.push(c.scenario.clone());
+            }
+        }
+        seen
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("name", self.name.as_str().into()),
+            ("model", self.model.as_str().into()),
+            ("epochs", self.epochs.into()),
+            ("iters_per_epoch", self.iters.into()),
+            (
+                "cells",
+                Json::Arr(
+                    self.cells
+                        .iter()
+                        .map(|c| {
+                            obj([
+                                ("scenario", c.scenario.as_str().into()),
+                                ("strategy", c.strategy.as_str().into()),
+                                ("replan", c.replan.as_str().into()),
+                                ("rt", c.rt.into()),
+                                ("final_acc", c.final_acc.into()),
+                                ("best_acc", c.best_acc.into()),
+                                ("comm_bytes", (c.comm_bytes as f64).into()),
+                                ("replans", (c.replans as f64).into()),
+                                ("chi_mean", c.chi_mean.into()),
+                                ("chi_max", c.chi_max.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "comparisons",
+                Json::Arr(
+                    self.comparisons()
+                        .into_iter()
+                        .map(|(s, on, ep, sp, dacc)| {
+                            obj([
+                                ("scenario", s.into()),
+                                ("rt_online", on.into()),
+                                ("rt_epoch", ep.into()),
+                                ("online_speedup", sp.into()),
+                                ("acc_delta_pp", dacc.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Rendered cell table + comparison lines.
+    pub fn render(&self) -> String {
+        let mut t = TextTable::new(
+            &format!("scenario sweep '{}' ({}, RT in sim-seconds)", self.name, self.model),
+            &["scenario", "strategy", "replan", "RT", "ACC", "comm", "replans", "chi_mean", "chi_max"],
+        );
+        for c in &self.cells {
+            t.row(&[
+                c.scenario.clone(),
+                c.strategy.clone(),
+                c.replan.clone(),
+                format!("{:.4}", c.rt),
+                format!("{:.1}%", 100.0 * c.final_acc),
+                crate::util::fmt_bytes(c.comm_bytes),
+                c.replans.to_string(),
+                format!("{:.2}", c.chi_mean),
+                format!("{:.1}", c.chi_max),
+            ]);
+        }
+        let mut out = t.render();
+        for (s, on, ep, sp, dacc) in self.comparisons() {
+            out.push_str(&format!(
+                "\n{s}: online RT {on:.4}s vs epoch {ep:.4}s → {sp:.2}× \
+                 (ΔACC {dacc:+.1}pp)"
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_and_scenario_parsing() {
+        assert_eq!(parse_cell("semi@online").unwrap(), (Strategy::Semi, ReplanMode::Online));
+        assert_eq!(parse_cell("mig").unwrap(), (Strategy::Mig, ReplanMode::Iter));
+        assert!(parse_cell("semi@sometimes").is_err());
+        assert!(parse_cell("vibes@online").is_err());
+        let sc = parse_scenarios("a=burst:r1@x4:iters0-4;step:r2@x3:iters1-").unwrap();
+        assert_eq!(sc.len(), 2);
+        assert_eq!(sc[0].0, "a");
+        assert_eq!(sc[1].0, "s1");
+        assert!(parse_scenarios("a=meteor:r1@x2:iters0-4").is_err());
+    }
+
+    #[test]
+    fn presets_build() {
+        for p in ["smoke", "bursty", "churn"] {
+            let s = SweepSpec::preset(p).unwrap();
+            assert!(!s.scenarios.is_empty());
+            assert!(!s.cells.is_empty());
+            assert_eq!(s.time_model, TimeModel::Modeled);
+        }
+        assert!(SweepSpec::preset("galaxy").is_err());
+        let s = SweepSpec::preset("smoke").unwrap();
+        assert_eq!(s.scenarios.len(), 2);
+        assert_eq!(s.cells.len(), 2);
+    }
+
+    #[test]
+    fn report_json_and_comparisons() {
+        let mut r = SweepReport {
+            name: "t".into(),
+            model: "vit-tiny".into(),
+            epochs: 2,
+            iters: 4,
+            cells: vec![],
+        };
+        let mk = |replan: &str, rt: f64, acc: f64| SweepCell {
+            scenario: "step6".into(),
+            strategy: "SEMI".into(),
+            replan: replan.into(),
+            rt,
+            final_acc: acc,
+            best_acc: acc,
+            comm_bytes: 10,
+            replans: 4,
+            chi_mean: 2.0,
+            chi_max: 6.0,
+        };
+        r.cells.push(mk("online", 1.0, 0.5));
+        r.cells.push(mk("epoch", 2.0, 0.5));
+        let cmp = r.comparisons();
+        assert_eq!(cmp.len(), 1);
+        assert!((cmp[0].3 - 2.0).abs() < 1e-12, "speedup = rt_epoch/rt_online");
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"online_speedup\":2"));
+        assert!(Json::parse(&j).is_ok());
+        assert!(r.render().contains("2.00×"));
+    }
+}

@@ -7,6 +7,9 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
+use crate::contention::control::ControlCfg;
+use crate::contention::ScenarioSpec;
+
 /// Which execution backend runs the manifest executables.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BackendKind {
@@ -132,11 +135,20 @@ pub enum StragglerPlan {
     /// One straggler at skewness χ, rotating round-robin across ranks
     /// every `period_epochs` (the paper's dynamic heterogeneous scenario).
     RoundRobin { chi: f64, period_epochs: usize },
+    /// Trace-driven multi-tenant contention at *iteration* granularity
+    /// (`--scenario`/`--scenario-file`, DESIGN.md §12).
+    Scenario(ScenarioSpec),
 }
 
 impl StragglerPlan {
-    /// Per-rank χ multipliers at a given epoch.
-    pub fn chis(&self, e: usize, epoch: usize) -> Vec<f64> {
+    /// Per-rank χ multipliers at a given iteration.  `iter` is the
+    /// **global** iteration index (`epoch · iters_per_epoch + iter`):
+    /// `None`/`Fixed` ignore it, `RoundRobin` keys off `epoch` only
+    /// (the legacy degenerate traces), and `Scenario` keys off `iter`
+    /// only.  Scenario evaluation replays the seeded trace engine from
+    /// iteration 0 — O(iter) per call; the trainer realizes the whole
+    /// run once as a `contention::ContentionTrace` instead.
+    pub fn chis_at(&self, e: usize, epoch: usize, iter: usize) -> Vec<f64> {
         match self {
             StragglerPlan::None => vec![1.0; e],
             StragglerPlan::Fixed(v) => {
@@ -152,6 +164,80 @@ impl StragglerPlan {
                 out[idx] = chi.max(1.0);
                 out
             }
+            StragglerPlan::Scenario(spec) => {
+                crate::contention::ContentionTrace::generate(spec, e, iter + 1)
+                    .chis(iter)
+                    .to_vec()
+            }
+        }
+    }
+
+    /// Per-rank χ at an epoch boundary — delegates to [`Self::chis_at`]
+    /// with iteration 0 (kept for the pre-trace callers/tests).
+    pub fn chis(&self, e: usize, epoch: usize) -> Vec<f64> {
+        self.chis_at(e, epoch, 0)
+    }
+}
+
+/// When the balancer's plan is recomputed (DESIGN.md §12).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplanMode {
+    /// Every iteration — the legacy engine; detection statistics are
+    /// gathered (and charged) each iteration.
+    Iter,
+    /// Once at each epoch boundary — the static per-epoch baseline the
+    /// online controller is measured against.
+    Epoch,
+    /// Epoch boundaries **plus** EWMA-drift-triggered mid-epoch replans
+    /// (re-running the pretest cost fits and the Eq. 2/3 allocation),
+    /// with the replan overhead charged to the SimClock.
+    Online,
+}
+
+impl ReplanMode {
+    pub fn parse(s: &str) -> Result<ReplanMode> {
+        Ok(match s {
+            "iter" => ReplanMode::Iter,
+            "epoch" => ReplanMode::Epoch,
+            "online" => ReplanMode::Online,
+            _ => bail!("unknown replan mode '{s}' (iter|epoch|online)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReplanMode::Iter => "iter",
+            ReplanMode::Epoch => "epoch",
+            ReplanMode::Online => "online",
+        }
+    }
+}
+
+/// Where SimClock compute charges come from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TimeModel {
+    /// Real measured backend seconds (default; adaptive runs vary
+    /// run-to-run with host noise, like real clusters).
+    Measured,
+    /// Deterministic FLOP-model seconds (`contention::timemodel`) — the
+    /// closed simulation used by `flextp sweep` and the dynamic-scenario
+    /// determinism suite.
+    Modeled,
+}
+
+impl TimeModel {
+    pub fn parse(s: &str) -> Result<TimeModel> {
+        Ok(match s {
+            "measured" => TimeModel::Measured,
+            "modeled" => TimeModel::Modeled,
+            _ => bail!("unknown time model '{s}' (measured|modeled)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TimeModel::Measured => "measured",
+            TimeModel::Modeled => "modeled",
         }
     }
 }
@@ -196,6 +282,11 @@ pub struct TrainCfg {
     /// so the fig5–fig11 bench binaries and the test suite pick it up
     /// without per-binary flags.
     pub threads: usize,
+    /// where SimClock compute charges come from (`--time-model`)
+    pub time_model: TimeModel,
+    /// opt-in per-iteration JSON dump (`--timeline`): χ vs T_i vs RT per
+    /// iteration lands in the run report for plotting
+    pub timeline: bool,
 }
 
 impl Default for TrainCfg {
@@ -210,6 +301,8 @@ impl Default for TrainCfg {
             train_batches: 8,
             emulate_wall: false,
             threads: env_threads(),
+            time_model: TimeModel::Measured,
+            timeline: false,
         }
     }
 }
@@ -240,6 +333,8 @@ pub struct BalancerCfg {
     pub forced_lambda: Option<usize>,
     /// merge migration reduce into the branch all-reduce (paper §IV-A).
     pub reduce_merging: bool,
+    /// when the plan is recomputed (`--replan iter|epoch|online`).
+    pub replan: ReplanMode,
 }
 
 impl Default for BalancerCfg {
@@ -253,6 +348,7 @@ impl Default for BalancerCfg {
             gamma_override: None,
             forced_lambda: None,
             reduce_merging: true,
+            replan: ReplanMode::Iter,
         }
     }
 }
@@ -267,6 +363,8 @@ pub struct RunCfg {
     pub balancer: BalancerCfg,
     pub stragglers: StragglerPlan,
     pub net: NetCfg,
+    /// online-controller drift-detector parameters (`--ctl-*`).
+    pub control: ControlCfg,
 }
 
 impl RunCfg {
@@ -279,6 +377,7 @@ impl RunCfg {
             balancer: BalancerCfg::default(),
             stragglers: StragglerPlan::None,
             net: NetCfg::default(),
+            control: ControlCfg::default(),
         }
     }
 
@@ -338,6 +437,14 @@ pub fn apply_overrides(cfg: &mut RunCfg, kv: &BTreeMap<String, String>) -> Resul
             "no-reduce-merging" => cfg.balancer.reduce_merging = false,
             "emulate-wall" => cfg.train.emulate_wall = true,
             "threads" => cfg.train.threads = v.parse().context("threads")?,
+            "replan" => cfg.balancer.replan = ReplanMode::parse(v)?,
+            "time-model" => cfg.train.time_model = TimeModel::parse(v)?,
+            "timeline" => cfg.train.timeline = true,
+            "ctl-hi" => cfg.control.hi = v.parse().context("ctl-hi")?,
+            "ctl-lo" => cfg.control.lo = v.parse().context("ctl-lo")?,
+            "ctl-cooldown" => cfg.control.cooldown = v.parse().context("ctl-cooldown")?,
+            "ctl-alpha-fast" => cfg.control.alpha_fast = v.parse().context("ctl-alpha-fast")?,
+            "ctl-alpha-slow" => cfg.control.alpha_slow = v.parse().context("ctl-alpha-slow")?,
             "chi" => {
                 let chi: f64 = v.parse().context("chi")?;
                 cfg.stragglers = StragglerPlan::RoundRobin { chi, period_epochs: 1 };
@@ -345,6 +452,16 @@ pub fn apply_overrides(cfg: &mut RunCfg, kv: &BTreeMap<String, String>) -> Resul
             "chis" => {
                 let chis: Result<Vec<f64>, _> = v.split(',').map(str::parse).collect();
                 cfg.stragglers = StragglerPlan::Fixed(chis.context("chis")?);
+            }
+            "scenario" => {
+                cfg.stragglers = StragglerPlan::Scenario(
+                    ScenarioSpec::parse(v).context("scenario")?,
+                );
+            }
+            "scenario-file" => {
+                cfg.stragglers = StragglerPlan::Scenario(
+                    ScenarioSpec::from_file(std::path::Path::new(v)).context("scenario-file")?,
+                );
             }
             "net-alpha-us" => cfg.net.alpha_s = v.parse::<f64>().context("net-alpha-us")? * 1e-6,
             "net-gbps" => cfg.net.bytes_per_s = v.parse::<f64>().context("net-gbps")? * 1e9,
@@ -391,6 +508,55 @@ mod tests {
         assert_eq!(p.chis(4, 0), vec![4.0, 1.0, 1.0, 1.0]);
         assert_eq!(p.chis(4, 2), vec![1.0, 4.0, 1.0, 1.0]);
         assert_eq!(p.chis(4, 8), vec![4.0, 1.0, 1.0, 1.0]); // wraps
+    }
+
+    #[test]
+    fn chis_at_makes_legacy_plans_degenerate_traces() {
+        // Fixed/RoundRobin ignore the iteration — every iteration of an
+        // epoch matches the old per-epoch chis() exactly.
+        let p = StragglerPlan::Fixed(vec![2.0, 1.0]);
+        for it in [0, 1, 7, 99] {
+            assert_eq!(p.chis_at(4, 3, it), p.chis(4, 3));
+        }
+        let p = StragglerPlan::RoundRobin { chi: 4.0, period_epochs: 1 };
+        for it in [0, 5] {
+            assert_eq!(p.chis_at(4, 2, it), p.chis(4, 2));
+        }
+        // Scenario keys off the global iteration, not the epoch
+        let p = StragglerPlan::Scenario(
+            crate::contention::ScenarioSpec::parse("burst:r1@x4:iters2-5").unwrap(),
+        );
+        assert_eq!(p.chis_at(2, 0, 1), vec![1.0, 1.0]);
+        assert_eq!(p.chis_at(2, 7, 3), vec![1.0, 4.0], "epoch is ignored");
+        assert_eq!(p.chis_at(2, 0, 5), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn scenario_replan_time_model_overrides_apply() {
+        let mut cfg = RunCfg::new("vit-tiny");
+        let args: Vec<String> = [
+            "--scenario", "burst:r1@x4:iters2-5,seed:9",
+            "--replan", "online",
+            "--time-model", "modeled",
+            "--timeline",
+            "--ctl-hi", "0.5",
+            "--ctl-cooldown", "4",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let (_, kv) = parse_kv_args(&args).unwrap();
+        apply_overrides(&mut cfg, &kv).unwrap();
+        assert!(matches!(cfg.stragglers, StragglerPlan::Scenario(_)));
+        assert_eq!(cfg.balancer.replan, ReplanMode::Online);
+        assert_eq!(cfg.train.time_model, TimeModel::Modeled);
+        assert!(cfg.train.timeline);
+        assert_eq!(cfg.control.hi, 0.5);
+        assert_eq!(cfg.control.cooldown, 4);
+        assert!(ReplanMode::parse("never").is_err());
+        assert!(TimeModel::parse("psychic").is_err());
+        let (_, kv) = parse_kv_args(&["--scenario=burst:bogus".to_string()]).unwrap();
+        assert!(apply_overrides(&mut cfg, &kv).is_err());
     }
 
     #[test]

@@ -1,0 +1,212 @@
+//! Online adaptive rebalancing controller (DESIGN.md §12).
+//!
+//! The paper plans from the straggler monitor's T_i/M_i statistics every
+//! iteration; a *static* per-epoch plan (`--replan epoch`) goes stale the
+//! moment a tenant arrives mid-epoch.  `--replan online` keeps the plan
+//! cached but watches the per-rank iteration runtimes through a
+//! **fast/slow EWMA drift detector**: when the fast average diverges from
+//! the slow baseline by more than the `hi` threshold on any rank, the
+//! trainer re-runs the pretest cost fits and the Eq. (2)/(3) allocation
+//! mid-epoch (charging the replan overhead to the SimClock).
+//!
+//! Two guards keep the controller from thrashing:
+//!
+//! * **hysteresis** — after a trigger the detector disarms until the
+//!   divergence falls back below `lo` (the slow baseline is resynced to
+//!   the fast average on trigger, so a sustained level shift reads as
+//!   "settled", not as a permanent alarm);
+//! * **cooldown** — at least `cooldown` iterations pass between triggers,
+//!   giving a fresh plan time to show up in the measurements it will be
+//!   judged by.
+//!
+//! The detector is pure arithmetic over coordinator-side signals: under
+//! `--time-model modeled` its decisions are bitwise reproducible at any
+//! `--threads` count (pinned by `tests/parallel_determinism.rs`).
+
+/// Drift-detector parameters (`--ctl-*` CLI overrides).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ControlCfg {
+    /// fast EWMA smoothing factor (reacts within ~2 iterations)
+    pub alpha_fast: f64,
+    /// slow EWMA smoothing factor (the drift baseline)
+    pub alpha_slow: f64,
+    /// trigger threshold: max-rank relative |fast − slow| / slow
+    pub hi: f64,
+    /// re-arm threshold (hysteresis band lower edge)
+    pub lo: f64,
+    /// minimum iterations between triggers
+    pub cooldown: usize,
+}
+
+impl Default for ControlCfg {
+    fn default() -> Self {
+        ControlCfg { alpha_fast: 0.5, alpha_slow: 0.1, hi: 0.3, lo: 0.1, cooldown: 2 }
+    }
+}
+
+/// One observation's verdict.
+#[derive(Debug, Clone, Copy)]
+pub struct Drift {
+    /// max-rank relative fast/slow divergence
+    pub score: f64,
+    /// replan now?
+    pub triggered: bool,
+}
+
+/// Fast/slow EWMA drift detector with hysteresis + cooldown.
+#[derive(Debug, Clone)]
+pub struct DriftDetector {
+    pub cfg: ControlCfg,
+    fast: Vec<f64>,
+    slow: Vec<f64>,
+    armed: bool,
+    cooldown_left: usize,
+    /// total triggers fired (metrics)
+    pub triggers: u64,
+}
+
+impl DriftDetector {
+    pub fn new(cfg: ControlCfg) -> DriftDetector {
+        DriftDetector {
+            cfg,
+            fast: Vec::new(),
+            slow: Vec::new(),
+            armed: true,
+            cooldown_left: 0,
+            triggers: 0,
+        }
+    }
+
+    /// Feed one iteration's per-rank runtimes T_i; returns the drift
+    /// score and whether a replan should fire.  The first observation
+    /// (or a rank-count change) seeds both EWMAs and never triggers.
+    pub fn observe(&mut self, t: &[f64]) -> Drift {
+        if self.fast.len() != t.len() {
+            self.fast = t.to_vec();
+            self.slow = t.to_vec();
+            return Drift { score: 0.0, triggered: false };
+        }
+        let mut score = 0.0f64;
+        for r in 0..t.len() {
+            self.fast[r] += self.cfg.alpha_fast * (t[r] - self.fast[r]);
+            self.slow[r] += self.cfg.alpha_slow * (t[r] - self.slow[r]);
+            let d = (self.fast[r] - self.slow[r]).abs() / self.slow[r].abs().max(1e-12);
+            score = score.max(d);
+        }
+        if self.cooldown_left > 0 {
+            self.cooldown_left -= 1;
+            return Drift { score, triggered: false };
+        }
+        if !self.armed {
+            if score < self.cfg.lo {
+                self.armed = true;
+            }
+            return Drift { score, triggered: false };
+        }
+        if score > self.cfg.hi {
+            self.armed = false;
+            self.cooldown_left = self.cfg.cooldown;
+            self.slow.copy_from_slice(&self.fast);
+            self.triggers += 1;
+            return Drift { score, triggered: true };
+        }
+        Drift { score, triggered: false }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn det() -> DriftDetector {
+        DriftDetector::new(ControlCfg::default())
+    }
+
+    #[test]
+    fn steady_signal_never_triggers() {
+        let mut d = det();
+        for _ in 0..50 {
+            assert!(!d.observe(&[1.0, 1.0, 1.0]).triggered);
+        }
+        assert_eq!(d.triggers, 0);
+    }
+
+    #[test]
+    fn level_shift_triggers_once_then_settles() {
+        let mut d = det();
+        for _ in 0..10 {
+            d.observe(&[1.0, 1.0]);
+        }
+        // rank 1 suddenly 6× slower (a tenant arrived)
+        let mut fired = 0;
+        for _ in 0..20 {
+            if d.observe(&[1.0, 6.0]).triggered {
+                fired += 1;
+            }
+        }
+        assert!(fired >= 1, "shift must be detected");
+        assert!(fired <= 3, "hysteresis+cooldown must stop the thrash, fired {fired}");
+        // settled at the new level: no more triggers
+        let before = d.triggers;
+        for _ in 0..20 {
+            d.observe(&[1.0, 6.0]);
+        }
+        assert_eq!(d.triggers, before);
+    }
+
+    #[test]
+    fn detection_is_fast() {
+        let mut d = det();
+        for _ in 0..8 {
+            d.observe(&[1.0, 1.0]);
+        }
+        // the jump is seen within two observations at default α_fast
+        let first = d.observe(&[1.0, 5.0]);
+        let second = d.observe(&[1.0, 5.0]);
+        assert!(first.triggered || second.triggered, "jump not caught in 2 iters");
+    }
+
+    #[test]
+    fn cooldown_blocks_back_to_back_triggers() {
+        let mut d = DriftDetector::new(ControlCfg { cooldown: 3, ..Default::default() });
+        for _ in 0..8 {
+            d.observe(&[1.0]);
+        }
+        // oscillating signal: without cooldown this would fire every step
+        let mut gaps = Vec::new();
+        let mut last: Option<usize> = None;
+        for i in 0..30 {
+            let v = if i % 2 == 0 { 5.0 } else { 0.2 };
+            if d.observe(&[v]).triggered {
+                if let Some(l) = last {
+                    gaps.push(i - l);
+                }
+                last = Some(i);
+            }
+        }
+        assert!(gaps.iter().all(|&g| g > 3), "trigger inside cooldown: {gaps:?}");
+    }
+
+    #[test]
+    fn first_observation_seeds_without_trigger() {
+        let mut d = det();
+        assert!(!d.observe(&[9.0, 1.0]).triggered, "init must not trigger");
+        // rank-count change re-seeds
+        assert!(!d.observe(&[9.0, 1.0, 1.0]).triggered);
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let run = || {
+            let mut d = det();
+            let mut out = Vec::new();
+            for i in 0..40 {
+                let t = [1.0, if (10..20).contains(&i) { 4.0 } else { 1.0 }];
+                let v = d.observe(&t);
+                out.push((v.score, v.triggered));
+            }
+            out
+        };
+        assert_eq!(run(), run());
+    }
+}

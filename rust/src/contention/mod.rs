@@ -1,0 +1,801 @@
+//! Trace-driven multi-tenant contention engine (DESIGN.md §12).
+//!
+//! The paper's premise is that *dynamic* resource contention — other
+//! tenants time-sharing a GPU, arriving and departing mid-job — is what
+//! creates stragglers, yet a fixed per-epoch χ vector can only express
+//! static skew.  This module produces per-rank skewness at **iteration**
+//! granularity from seeded, deterministic scenario specs:
+//!
+//! * scripted events — [`Event::Burst`] (a tenant active over an
+//!   iteration window; `tenant:` is the arrive/depart-flavored alias),
+//!   [`Event::Ramp`] (contention climbing linearly to χ across a
+//!   window), [`Event::Step`] (a tenant arrives and stays), and
+//!   [`Event::Pulse`] (periodic duty-cycle bursts);
+//! * stochastic tenants — [`Event::Markov`], a two-state
+//!   Markov-modulated on/off process advanced once per iteration from a
+//!   per-(event, rank) seeded RNG;
+//! * built-in presets ([`preset`]) and a small DSL
+//!   (`burst:r2@x4:iters10-40,markov:r*@x3:p0.2-0.4,seed:7`) shared by
+//!   `--scenario`, `--scenario-file`, and the `sweep` subcommand.
+//!
+//! Concurrent tenants compose **multiplicatively** (time-slicing a
+//! device between n tenants multiplies service time), clamped to
+//! [`ScenarioSpec::chi_max`]; χ never drops below 1.  Traces are
+//! realized by [`ContentionTrace::generate`]: same spec + same seed ⇒
+//! bitwise the same trace, and a longer trace is always a prefix
+//! extension of a shorter one, so replaying any prefix matches the full
+//! run.  The trainer realizes the trace once on the **coordinator**
+//! (workers never observe or advance trace state), preserving the
+//! 1-vs-N thread determinism contract of `tests/parallel_determinism.rs`.
+
+pub mod control;
+pub mod timemodel;
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::StragglerPlan;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Which rank(s) a tenant lands on. `r*` gives every rank an
+/// *independent* tenant (independent Markov chains, shared windows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RankSel {
+    One(usize),
+    All,
+}
+
+impl RankSel {
+    pub fn hits(&self, r: usize) -> bool {
+        match self {
+            RankSel::One(x) => *x == r,
+            RankSel::All => true,
+        }
+    }
+
+    fn parse(s: &str) -> Result<RankSel> {
+        let s = s.strip_prefix('r').unwrap_or(s);
+        if s == "*" {
+            return Ok(RankSel::All);
+        }
+        Ok(RankSel::One(s.parse().with_context(|| format!("bad rank '{s}'"))?))
+    }
+
+    fn name(&self) -> String {
+        match self {
+            RankSel::One(r) => format!("r{r}"),
+            RankSel::All => "r*".to_string(),
+        }
+    }
+}
+
+/// One contention source. Iteration windows are **global** iteration
+/// indices (`epoch · iters_per_epoch + iter`), half-open `[from, to)`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// Scripted tenant active during `[from, to)` at multiplier `chi`.
+    Burst { rank: RankSel, chi: f64, from: usize, to: usize },
+    /// χ climbs linearly 1 → `chi` across `[from, to)`, gone after.
+    Ramp { rank: RankSel, chi: f64, from: usize, to: usize },
+    /// Tenant arrives at `from` and never departs.
+    Step { rank: RankSel, chi: f64, from: usize },
+    /// Periodic burst: from `from` on, active for the first `on`
+    /// iterations of every `period`.
+    Pulse { rank: RankSel, chi: f64, from: usize, period: usize, on: usize },
+    /// Markov-modulated on/off tenant: each iteration an *off* tenant
+    /// turns on with probability `p_on`, an *on* tenant departs with
+    /// probability `p_off`. Starts off.
+    Markov { rank: RankSel, chi: f64, p_on: f64, p_off: f64 },
+}
+
+fn chk_chi(chi: f64) -> Result<f64> {
+    if !chi.is_finite() || chi < 1.0 {
+        bail!("tenant χ must be ≥ 1 (a tenant can only slow a rank down), got {chi}");
+    }
+    Ok(chi)
+}
+
+fn chk_window(from: usize, to: usize) -> Result<()> {
+    if from >= to {
+        bail!("empty iteration window iters{from}-{to}");
+    }
+    Ok(())
+}
+
+fn chk_prob(p: f64, what: &str) -> Result<f64> {
+    if !(0.0..=1.0).contains(&p) {
+        bail!("{what} must be a probability in [0,1], got {p}");
+    }
+    Ok(p)
+}
+
+/// A parsed contention scenario: pure data, `Clone + PartialEq`, held by
+/// [`StragglerPlan::Scenario`]. The realized per-iteration χ matrix is a
+/// [`ContentionTrace`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    /// Trace seed (DSL `seed:N`). All stochastic tenants replay
+    /// identically for the same seed, independent of `--seed` (which
+    /// keeps controlling weights/data).
+    pub seed: u64,
+    /// Clamp on the composed per-rank multiplier.
+    pub chi_max: f64,
+    pub events: Vec<Event>,
+}
+
+impl Default for ScenarioSpec {
+    fn default() -> Self {
+        ScenarioSpec { seed: 42, chi_max: 16.0, events: Vec::new() }
+    }
+}
+
+impl ScenarioSpec {
+    /// Parse the comma-separated scenario DSL. Grammar (DESIGN.md §12):
+    ///
+    /// ```text
+    /// spec   := item (',' item)*
+    /// item   := event | "seed:"N | "chimax:"X | "preset:"NAME
+    /// event  := "burst:rR@xC:itersA-B"      scripted tenant over [A,B)
+    ///         | "tenant:rR@xC:itersA-B"     alias of burst (arrive A, depart B)
+    ///         | "ramp:rR@xC:itersA-B"       χ ramps 1→C across [A,B)
+    ///         | "step:rR@xC:itersA-"        tenant arrives at A, stays
+    ///         | "pulse:rR@xC:fromA:periodP:onD"  duty-cycle bursts
+    ///         | "markov:rR@xC:pON-POFF"     stochastic on/off tenant
+    /// R      := rank index | "*" (every rank, independent tenants)
+    /// ```
+    ///
+    /// The empty string parses to the calm (no-contention) scenario.
+    pub fn parse(src: &str) -> Result<ScenarioSpec> {
+        let mut spec = ScenarioSpec::default();
+        for raw in src.split(',') {
+            let item = raw.trim();
+            if item.is_empty() {
+                continue;
+            }
+            if let Some(v) = item.strip_prefix("seed:") {
+                spec.seed = v.parse().with_context(|| format!("bad seed '{v}'"))?;
+                continue;
+            }
+            if let Some(v) = item.strip_prefix("chimax:") {
+                let c: f64 = v.parse().with_context(|| format!("bad chimax '{v}'"))?;
+                spec.chi_max = chk_chi(c)?;
+                continue;
+            }
+            if let Some(name) = item.strip_prefix("preset:") {
+                spec.events.extend(preset(name)?.events);
+                continue;
+            }
+            spec.events.push(parse_event(item)?);
+        }
+        Ok(spec)
+    }
+
+    /// Build from JSON: either a DSL string, or an object
+    /// `{"seed": 7, "chi_max": 16, "events": [{"kind": "burst",
+    /// "rank": 2, "chi": 4, "from": 10, "to": 40}, ...]}` (rank may be
+    /// `"*"`; `to` omitted means open-ended).
+    pub fn from_json(j: &Json) -> Result<ScenarioSpec> {
+        if let Json::Str(s) = j {
+            return ScenarioSpec::parse(s);
+        }
+        if let Json::Obj(m) = j {
+            for k in m.keys() {
+                if !matches!(k.as_str(), "seed" | "chi_max" | "events") {
+                    bail!("unknown scenario field '{k}' (seed|chi_max|events)");
+                }
+            }
+        }
+        let mut spec = ScenarioSpec::default();
+        if let Some(s) = j.opt("seed") {
+            spec.seed = s.num()? as u64;
+        }
+        if let Some(c) = j.opt("chi_max") {
+            spec.chi_max = chk_chi(c.num()?)?;
+        }
+        for ev in j.get("events")?.arr()? {
+            spec.events.push(event_from_json(ev)?);
+        }
+        Ok(spec)
+    }
+
+    /// Load a scenario from disk: JSON when the file starts with `{` or
+    /// `"`, the DSL otherwise.
+    pub fn from_file(path: &Path) -> Result<ScenarioSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scenario file {}", path.display()))?;
+        let t = text.trim();
+        if t.starts_with('{') || t.starts_with('"') {
+            ScenarioSpec::from_json(&Json::parse(t)?)
+        } else {
+            ScenarioSpec::parse(t)
+        }
+    }
+
+    /// Every rank index a scripted/stochastic event targets must exist in
+    /// the worker group, else the event would silently never fire and the
+    /// run would measure a scenario that never happened.  Called by the
+    /// trainer (and the sweep harness) once the model's `e` is known.
+    pub fn validate_ranks(&self, e: usize) -> Result<()> {
+        for ev in &self.events {
+            let rank = match ev {
+                Event::Burst { rank, .. }
+                | Event::Ramp { rank, .. }
+                | Event::Step { rank, .. }
+                | Event::Pulse { rank, .. }
+                | Event::Markov { rank, .. } => rank,
+            };
+            if let RankSel::One(r) = rank {
+                if *r >= e {
+                    bail!(
+                        "scenario targets rank {r} but the model has only {e} \
+                         workers (r0..r{}) — in '{}'",
+                        e - 1,
+                        self.describe()
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Compact one-line rendering (labels, sweep tables).  Includes
+    /// `seed:`/`chimax:` when they differ from the defaults, so the
+    /// rendered string re-parses to an equivalent spec (stochastic
+    /// tenants and clamping reproduce).
+    pub fn describe(&self) -> String {
+        if self.events.is_empty() {
+            return "calm".to_string();
+        }
+        let mut items: Vec<String> = self
+            .events
+            .iter()
+            .map(|e| match e {
+                Event::Burst { rank, chi, from, to } => {
+                    if *to == usize::MAX {
+                        format!("burst:{}@x{chi}:iters{from}-", rank.name())
+                    } else {
+                        format!("burst:{}@x{chi}:iters{from}-{to}", rank.name())
+                    }
+                }
+                Event::Ramp { rank, chi, from, to } => {
+                    format!("ramp:{}@x{chi}:iters{from}-{to}", rank.name())
+                }
+                Event::Step { rank, chi, from } => {
+                    format!("step:{}@x{chi}:iters{from}-", rank.name())
+                }
+                Event::Pulse { rank, chi, from, period, on } => {
+                    format!("pulse:{}@x{chi}:from{from}:period{period}:on{on}", rank.name())
+                }
+                Event::Markov { rank, chi, p_on, p_off } => {
+                    format!("markov:{}@x{chi}:p{p_on}-{p_off}", rank.name())
+                }
+            })
+            .collect();
+        let defaults = ScenarioSpec::default();
+        if self.seed != defaults.seed {
+            items.push(format!("seed:{}", self.seed));
+        }
+        if self.chi_max != defaults.chi_max {
+            items.push(format!("chimax:{}", self.chi_max));
+        }
+        items.join(",")
+    }
+}
+
+/// Parse `"r2@x4"` → (rank selector, χ).
+fn parse_target(s: &str) -> Result<(RankSel, f64)> {
+    let (r, c) = s
+        .split_once('@')
+        .with_context(|| format!("expected rR@xC, got '{s}'"))?;
+    let rank = RankSel::parse(r)?;
+    let c = c.strip_prefix('x').unwrap_or(c);
+    let chi = chk_chi(c.parse().with_context(|| format!("bad χ '{c}'"))?)?;
+    Ok((rank, chi))
+}
+
+/// Parse `"itersA-B"` → (A, Some(B)); `"itersA-"` / `"itersA"` → (A, None).
+fn parse_iters(s: &str) -> Result<(usize, Option<usize>)> {
+    let s = s
+        .strip_prefix("iters")
+        .with_context(|| format!("expected itersA-B, got '{s}'"))?;
+    let (a, b) = match s.split_once('-') {
+        Some((a, "")) => (a, None),
+        Some((a, b)) => (a, Some(b)),
+        None => (s, None),
+    };
+    let from = a.parse().with_context(|| format!("bad iteration '{a}'"))?;
+    let to = match b {
+        Some(b) => Some(b.parse().with_context(|| format!("bad iteration '{b}'"))?),
+        None => None,
+    };
+    Ok((from, to))
+}
+
+fn parse_event(item: &str) -> Result<Event> {
+    let mut parts = item.split(':');
+    let kind = parts.next().unwrap_or("");
+    let target = parts
+        .next()
+        .with_context(|| format!("'{item}': missing rR@xC target"))?;
+    let (rank, chi) = parse_target(target)?;
+    let ev = match kind {
+        "burst" | "tenant" => {
+            let w = parts.next().with_context(|| format!("'{item}': missing itersA-B"))?;
+            let (from, to) = parse_iters(w)?;
+            let to = to.unwrap_or(usize::MAX);
+            chk_window(from, to)?;
+            Event::Burst { rank, chi, from, to }
+        }
+        "ramp" => {
+            let w = parts.next().with_context(|| format!("'{item}': missing itersA-B"))?;
+            let (from, to) = parse_iters(w)?;
+            let to = to.with_context(|| format!("'{item}': ramp needs a closed itersA-B window"))?;
+            chk_window(from, to)?;
+            Event::Ramp { rank, chi, from, to }
+        }
+        "step" => {
+            let w = parts.next().with_context(|| format!("'{item}': missing itersA-"))?;
+            let (from, _) = parse_iters(w)?;
+            Event::Step { rank, chi, from }
+        }
+        "pulse" => {
+            let (mut from, mut period, mut on) = (0usize, None, None);
+            for p in parts.by_ref() {
+                if let Some(v) = p.strip_prefix("from") {
+                    from = v.parse().with_context(|| format!("bad from '{v}'"))?;
+                } else if let Some(v) = p.strip_prefix("period") {
+                    period = Some(v.parse::<usize>().with_context(|| format!("bad period '{v}'"))?);
+                } else if let Some(v) = p.strip_prefix("on") {
+                    on = Some(v.parse::<usize>().with_context(|| format!("bad on '{v}'"))?);
+                } else {
+                    bail!("'{item}': unknown pulse field '{p}'");
+                }
+            }
+            let period = period.with_context(|| format!("'{item}': pulse needs periodP"))?;
+            let on = on.with_context(|| format!("'{item}': pulse needs onD"))?;
+            if period == 0 || on == 0 || on > period {
+                bail!("'{item}': need 0 < on ≤ period");
+            }
+            Event::Pulse { rank, chi, from, period, on }
+        }
+        "markov" => {
+            let w = parts.next().with_context(|| format!("'{item}': missing pON-POFF"))?;
+            let w = w.strip_prefix('p').with_context(|| format!("'{item}': expected pON-POFF"))?;
+            let (a, b) = w
+                .split_once('-')
+                .with_context(|| format!("'{item}': expected pON-POFF"))?;
+            let p_on = chk_prob(a.parse().with_context(|| format!("bad p_on '{a}'"))?, "p_on")?;
+            let p_off = chk_prob(b.parse().with_context(|| format!("bad p_off '{b}'"))?, "p_off")?;
+            Event::Markov { rank, chi, p_on, p_off }
+        }
+        other => bail!(
+            "unknown event kind '{other}' (burst|tenant|ramp|step|pulse|markov)"
+        ),
+    };
+    if let Some(extra) = parts.next() {
+        bail!("'{item}': trailing field '{extra}'");
+    }
+    Ok(ev)
+}
+
+/// Reject JSON event fields the kind does not consume — a `"to"` on a
+/// `step` (or a typoed `"p_onn"`) would otherwise be dropped silently
+/// and the run would simulate a different scenario than the file says.
+fn chk_event_keys(j: &Json, kind: &str, allowed: &[&str]) -> Result<()> {
+    if let Json::Obj(m) = j {
+        for k in m.keys() {
+            if k != "kind" && k != "rank" && k != "chi" && !allowed.contains(&k.as_str()) {
+                bail!("'{kind}' event does not take a '{k}' field (allowed: {allowed:?})");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn event_from_json(j: &Json) -> Result<Event> {
+    let kind = j.get("kind")?.str()?;
+    let rank = {
+        let r = j.get("rank")?;
+        if let Json::Str(s) = r { RankSel::parse(s)? } else { RankSel::One(r.usize()?) }
+    };
+    let chi = chk_chi(j.get("chi")?.num()?)?;
+    let from = match j.opt("from") {
+        Some(v) => v.usize()?,
+        None => 0,
+    };
+    Ok(match kind {
+        "burst" | "tenant" => {
+            chk_event_keys(j, kind, &["from", "to"])?;
+            let to = match j.opt("to") {
+                Some(v) => v.usize()?,
+                None => usize::MAX,
+            };
+            chk_window(from, to)?;
+            Event::Burst { rank, chi, from, to }
+        }
+        "ramp" => {
+            chk_event_keys(j, kind, &["from", "to"])?;
+            let to = j.get("to")?.usize()?;
+            chk_window(from, to)?;
+            Event::Ramp { rank, chi, from, to }
+        }
+        "step" => {
+            chk_event_keys(j, kind, &["from"])?;
+            Event::Step { rank, chi, from }
+        }
+        "pulse" => {
+            chk_event_keys(j, kind, &["from", "period", "on"])?;
+            let period = j.get("period")?.usize()?;
+            let on = j.get("on")?.usize()?;
+            if period == 0 || on == 0 || on > period {
+                bail!("pulse needs 0 < on ≤ period");
+            }
+            Event::Pulse { rank, chi, from, period, on }
+        }
+        "markov" => {
+            chk_event_keys(j, kind, &["p_on", "p_off"])?;
+            Event::Markov {
+                rank,
+                chi,
+                p_on: chk_prob(j.get("p_on")?.num()?, "p_on")?,
+                p_off: chk_prob(j.get("p_off")?.num()?, "p_off")?,
+            }
+        }
+        other => bail!("unknown event kind '{other}'"),
+    })
+}
+
+/// Built-in scenario presets (all expressed in the DSL, so
+/// `preset:NAME` composes with further items).
+pub fn preset(name: &str) -> Result<ScenarioSpec> {
+    let dsl = match name {
+        // homogeneous control run
+        "calm" => "",
+        // one mid-run tenant burst
+        "burst1" => "burst:r1@x4:iters8-24",
+        // square-wave contention: 6-on / 6-off from iteration 4
+        "bursty" => "pulse:r1@x6:from4:period12:on6",
+        // a heavy tenant arrives mid-epoch and never leaves
+        "step6" => "step:r1@x6:iters4-",
+        // arrivals, departures, and a background stochastic tenant
+        "tenant-churn" => "step:r2@x3:iters6-,tenant:r0@x2:iters10-30,markov:r3@x2:p0.1-0.3",
+        // two independent Markov-modulated tenants
+        "markov-duo" => "markov:r1@x4:p0.2-0.5,markov:r2@x3:p0.15-0.4",
+        _ => bail!(
+            "unknown scenario preset '{name}' \
+             (calm|burst1|bursty|step6|tenant-churn|markov-duo)"
+        ),
+    };
+    ScenarioSpec::parse(dsl)
+}
+
+/// One Markov tenant chain, realized per (event, rank).
+struct Chain {
+    rank: usize,
+    chi: f64,
+    p_on: f64,
+    p_off: f64,
+    rng: Rng,
+    on: bool,
+}
+
+/// Decorrelate per-(event, rank) chain seeds (Rng::new splitmixes more).
+fn chain_seed(seed: u64, event: usize, rank: usize) -> u64 {
+    seed ^ (event as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (rank as u64).wrapping_mul(0xD134_2543_DE82_EF95)
+}
+
+/// A realized per-iteration χ matrix: `rows[global_iter][rank]`.
+///
+/// Generated once, on the coordinator, before training starts; queries
+/// past the generated horizon clamp to the last row (a `step` tenant
+/// stays, a frozen pulse holds its last state — documented behavior for
+/// out-of-range probes, which regular runs never make).
+#[derive(Debug, Clone)]
+pub struct ContentionTrace {
+    e: usize,
+    rows: Vec<Vec<f64>>,
+}
+
+impl ContentionTrace {
+    /// Realize `total_iters` iterations of a scenario for `e` ranks.
+    /// Deterministic: same (spec, e, total_iters-prefix) ⇒ same rows.
+    pub fn generate(spec: &ScenarioSpec, e: usize, total_iters: usize) -> ContentionTrace {
+        let total = total_iters.max(1);
+        let mut chains: Vec<Chain> = Vec::new();
+        for (i, ev) in spec.events.iter().enumerate() {
+            if let Event::Markov { rank, chi, p_on, p_off } = ev {
+                for r in 0..e {
+                    if rank.hits(r) {
+                        chains.push(Chain {
+                            rank: r,
+                            chi: *chi,
+                            p_on: *p_on,
+                            p_off: *p_off,
+                            rng: Rng::new(chain_seed(spec.seed, i, r)),
+                            on: false,
+                        });
+                    }
+                }
+            }
+        }
+        let mut rows = Vec::with_capacity(total);
+        for g in 0..total {
+            // advance every stochastic chain exactly once per iteration
+            // (fixed RNG consumption → prefix-stable traces)
+            for c in chains.iter_mut() {
+                let u = c.rng.uniform() as f64;
+                if c.on {
+                    if u < c.p_off {
+                        c.on = false;
+                    }
+                } else if u < c.p_on {
+                    c.on = true;
+                }
+            }
+            let mut chi = vec![1.0f64; e];
+            for ev in &spec.events {
+                match ev {
+                    Event::Burst { rank, chi: c, from, to } => {
+                        if g >= *from && g < *to {
+                            mul(&mut chi, rank, *c);
+                        }
+                    }
+                    Event::Ramp { rank, chi: c, from, to } => {
+                        if g >= *from && g < *to {
+                            let denom = (to - 1 - from).max(1) as f64;
+                            let f = 1.0 + (c - 1.0) * (g - from) as f64 / denom;
+                            mul(&mut chi, rank, f);
+                        }
+                    }
+                    Event::Step { rank, chi: c, from } => {
+                        if g >= *from {
+                            mul(&mut chi, rank, *c);
+                        }
+                    }
+                    Event::Pulse { rank, chi: c, from, period, on } => {
+                        if g >= *from && (g - from) % period < *on {
+                            mul(&mut chi, rank, *c);
+                        }
+                    }
+                    Event::Markov { .. } => {} // handled via chains below
+                }
+            }
+            for c in &chains {
+                if c.on {
+                    chi[c.rank] *= c.chi;
+                }
+            }
+            for v in &mut chi {
+                *v = v.clamp(1.0, spec.chi_max);
+            }
+            rows.push(chi);
+        }
+        ContentionTrace { e, rows }
+    }
+
+    /// Realize any [`StragglerPlan`] as a trace: `None`/`Fixed`/
+    /// `RoundRobin` become degenerate (epoch-constant) traces, scenarios
+    /// run the full engine.
+    pub fn from_plan(
+        plan: &StragglerPlan,
+        e: usize,
+        epochs: usize,
+        iters_per_epoch: usize,
+    ) -> ContentionTrace {
+        let ipe = iters_per_epoch.max(1);
+        let total = (epochs * ipe).max(1);
+        if let StragglerPlan::Scenario(spec) = plan {
+            return Self::generate(spec, e, total);
+        }
+        let rows = (0..total).map(|g| plan.chis_at(e, g / ipe, g)).collect();
+        ContentionTrace { e, rows }
+    }
+
+    pub fn e(&self) -> usize {
+        self.e
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// χ row at global iteration `g`, clamped to the generated horizon.
+    pub fn chis(&self, g: usize) -> &[f64] {
+        &self.rows[g.min(self.rows.len() - 1)]
+    }
+
+    /// (mean, max) χ over all ranks × iterations.
+    pub fn stats(&self) -> (f64, f64) {
+        let mut sum = 0.0;
+        let mut max = 0.0f64;
+        let mut n = 0usize;
+        for row in &self.rows {
+            for &v in row {
+                sum += v;
+                max = max.max(v);
+                n += 1;
+            }
+        }
+        (if n > 0 { sum / n as f64 } else { 1.0 }, max)
+    }
+}
+
+fn mul(chi: &mut [f64], rank: &RankSel, c: f64) {
+    for (r, v) in chi.iter_mut().enumerate() {
+        if rank.hits(r) {
+            *v *= c;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dsl_parses_every_kind() {
+        let s = ScenarioSpec::parse(
+            "burst:r2@x4:iters10-40,tenant:r0@x2:iters5-9,ramp:r1@x3:iters0-8,\
+             step:r3@x6:iters4-,pulse:r1@x6:from4:period12:on6,\
+             markov:r*@x3:p0.2-0.4,seed:7,chimax:12",
+        )
+        .unwrap();
+        assert_eq!(s.seed, 7);
+        assert_eq!(s.chi_max, 12.0);
+        assert_eq!(s.events.len(), 6);
+        assert_eq!(
+            s.events[0],
+            Event::Burst { rank: RankSel::One(2), chi: 4.0, from: 10, to: 40 }
+        );
+        assert!(matches!(s.events[1], Event::Burst { .. }), "tenant aliases burst");
+        assert!(matches!(s.events[5], Event::Markov { rank: RankSel::All, .. }));
+    }
+
+    #[test]
+    fn dsl_rejects_bad_specs() {
+        assert!(ScenarioSpec::parse("burst:r2@x0.5:iters0-4").is_err(), "χ<1");
+        assert!(ScenarioSpec::parse("burst:r2@x4:iters9-4").is_err(), "empty window");
+        assert!(ScenarioSpec::parse("ramp:r2@x4:iters3-").is_err(), "open ramp");
+        assert!(ScenarioSpec::parse("markov:r2@x4:p1.5-0.2").is_err(), "bad prob");
+        assert!(ScenarioSpec::parse("pulse:r1@x2:from0:period4:on9").is_err(), "on>period");
+        assert!(ScenarioSpec::parse("meteor:r1@x2:iters0-4").is_err(), "unknown kind");
+        assert!(ScenarioSpec::parse("burst:r1@x2:iters0-4:bogus").is_err(), "trailing");
+    }
+
+    #[test]
+    fn empty_spec_is_calm() {
+        let s = ScenarioSpec::parse("").unwrap();
+        assert!(s.events.is_empty());
+        let t = ContentionTrace::generate(&s, 4, 16);
+        for g in 0..16 {
+            assert_eq!(t.chis(g), &[1.0; 4]);
+        }
+    }
+
+    #[test]
+    fn presets_parse_and_compose() {
+        for name in ["calm", "burst1", "bursty", "step6", "tenant-churn", "markov-duo"] {
+            preset(name).unwrap_or_else(|e| panic!("preset {name}: {e}"));
+        }
+        assert!(preset("nope").is_err());
+        let s = ScenarioSpec::parse("preset:step6,seed:3").unwrap();
+        assert_eq!(s.seed, 3);
+        assert_eq!(s.events.len(), 1);
+    }
+
+    #[test]
+    fn scripted_windows_are_half_open() {
+        let s = ScenarioSpec::parse("burst:r1@x4:iters2-5").unwrap();
+        let t = ContentionTrace::generate(&s, 3, 8);
+        for g in 0..8 {
+            let want = if (2..5).contains(&g) { 4.0 } else { 1.0 };
+            assert_eq!(t.chis(g), &[1.0, want, 1.0], "g={g}");
+        }
+    }
+
+    #[test]
+    fn step_is_permanent_and_pulse_is_periodic() {
+        let s = ScenarioSpec::parse("step:r0@x2:iters3-").unwrap();
+        let t = ContentionTrace::generate(&s, 2, 10);
+        for g in 0..10 {
+            assert_eq!(t.chis(g)[0], if g >= 3 { 2.0 } else { 1.0 });
+        }
+        let s = ScenarioSpec::parse("pulse:r0@x3:from2:period4:on2").unwrap();
+        let t = ContentionTrace::generate(&s, 1, 12);
+        for g in 2..12 {
+            let want = if (g - 2) % 4 < 2 { 3.0 } else { 1.0 };
+            assert_eq!(t.chis(g)[0], want, "g={g}");
+        }
+    }
+
+    #[test]
+    fn ramp_climbs_monotonically_to_chi() {
+        let s = ScenarioSpec::parse("ramp:r0@x5:iters2-7").unwrap();
+        let t = ContentionTrace::generate(&s, 1, 10);
+        assert_eq!(t.chis(1)[0], 1.0);
+        assert_eq!(t.chis(2)[0], 1.0, "ramp starts at 1");
+        for g in 3..7 {
+            assert!(t.chis(g)[0] > t.chis(g - 1)[0], "not climbing at {g}");
+        }
+        assert_eq!(t.chis(6)[0], 5.0, "reaches χ at the window end");
+        assert_eq!(t.chis(7)[0], 1.0, "gone after the window");
+    }
+
+    #[test]
+    fn tenants_compose_multiplicatively_and_clamp() {
+        let s = ScenarioSpec::parse("burst:r0@x4:iters0-8,burst:r0@x3:iters2-8").unwrap();
+        let t = ContentionTrace::generate(&s, 1, 8);
+        assert_eq!(t.chis(1)[0], 4.0);
+        assert_eq!(t.chis(3)[0], 12.0);
+        let s = ScenarioSpec::parse("chimax:5,burst:r0@x4:iters0-8,burst:r0@x3:iters0-8")
+            .unwrap();
+        let t = ContentionTrace::generate(&s, 1, 4);
+        assert_eq!(t.chis(0)[0], 5.0, "clamped to chimax");
+    }
+
+    #[test]
+    fn json_object_and_string_forms_agree() {
+        let dsl = ScenarioSpec::parse("burst:r2@x4:iters10-40,markov:r*@x3:p0.2-0.4,seed:7")
+            .unwrap();
+        let j = Json::parse(
+            r#"{"seed": 7, "events": [
+                 {"kind":"burst","rank":2,"chi":4,"from":10,"to":40},
+                 {"kind":"markov","rank":"*","chi":3,"p_on":0.2,"p_off":0.4}]}"#,
+        )
+        .unwrap();
+        assert_eq!(ScenarioSpec::from_json(&j).unwrap(), dsl);
+        let j = Json::parse(r#""burst:r2@x4:iters10-40,markov:r*@x3:p0.2-0.4,seed:7""#).unwrap();
+        assert_eq!(ScenarioSpec::from_json(&j).unwrap(), dsl);
+    }
+
+    #[test]
+    fn describe_roundtrips_through_parse() {
+        // non-default seed/chimax must survive the round trip, else a
+        // re-run of the displayed spec realizes a different trace
+        let src = "burst:r2@x4:iters10-40,step:r3@x6:iters4-,\
+                   pulse:r1@x6:from4:period12:on6,markov:r*@x3:p0.2-0.4,\
+                   seed:7,chimax:5";
+        let s = ScenarioSpec::parse(src).unwrap();
+        let re = ScenarioSpec::parse(&s.describe()).unwrap();
+        assert_eq!(s, re, "describe() must round-trip the whole spec");
+        // default seed/chimax stay implicit
+        let plain = ScenarioSpec::parse("burst:r1@x2:iters0-4").unwrap();
+        assert!(!plain.describe().contains("seed:"));
+        assert_eq!(ScenarioSpec::parse(&plain.describe()).unwrap(), plain);
+    }
+
+    #[test]
+    fn rank_validation_rejects_out_of_range_targets() {
+        let s = ScenarioSpec::parse("burst:r5@x4:iters0-20").unwrap();
+        assert!(s.validate_ranks(4).is_err(), "r5 on a 4-rank group");
+        assert!(s.validate_ranks(6).is_ok());
+        // r* is valid for any group size; calm trivially passes
+        assert!(ScenarioSpec::parse("markov:r*@x2:p0.1-0.2").unwrap().validate_ranks(1).is_ok());
+        assert!(ScenarioSpec::parse("").unwrap().validate_ranks(1).is_ok());
+        assert!(preset("tenant-churn").unwrap().validate_ranks(2).is_err(), "preset uses r3");
+    }
+
+    #[test]
+    fn json_rejects_unknown_and_misplaced_fields() {
+        // a 'to' on a step would silently change the scenario's meaning
+        let j = Json::parse(
+            r#"{"events": [{"kind":"step","rank":1,"chi":4,"from":5,"to":20}]}"#,
+        )
+        .unwrap();
+        assert!(ScenarioSpec::from_json(&j).is_err(), "step must reject 'to'");
+        let j = Json::parse(
+            r#"{"events": [{"kind":"markov","rank":1,"chi":4,"p_on":0.2,"p_of":0.4}]}"#,
+        )
+        .unwrap();
+        assert!(ScenarioSpec::from_json(&j).is_err(), "typoed p_of must not be dropped");
+        let j = Json::parse(r#"{"chimax": 5, "events": []}"#).unwrap();
+        assert!(ScenarioSpec::from_json(&j).is_err(), "top-level typo (chi_max) rejected");
+    }
+}

@@ -1,0 +1,133 @@
+//! Deterministic modeled compute charges (`--time-model modeled`).
+//!
+//! By default the SimClock is charged with *measured* backend seconds,
+//! which makes adaptive strategies (whose plans feed on T_i/M_i) vary
+//! run to run.  The modeled clock replaces every compute charge with a
+//! pure function of the executable's shapes — FLOPs at a fixed modeled
+//! device rate — so a scenario run is a closed deterministic system:
+//! trace → charges → monitor → controller → plan → charges.  That is
+//! what lets `tests/parallel_determinism.rs` pin *dynamic* scenarios
+//! (mid-epoch replans included) bitwise at `--threads 1` vs `N`, and
+//! what makes `flextp sweep` cells reproducible and comparable.
+//!
+//! The constants are calibration, not measurement: only *relative*
+//! magnitudes matter (compute vs the α-β network model), chosen so a
+//! vit-tiny iteration lands in the paper's compute-dominated regime.
+//! Real math still executes — losses are real; only the clock is
+//! modeled.
+
+use crate::runtime::manifest::ModelInfo;
+
+/// Modeled device GEMM throughput (FLOP/s).
+pub const GEMM_FLOPS_PER_S: f64 = 50e9;
+/// Modeled memory-copy bandwidth (Ω₂ extraction fits).
+pub const MEM_BYTES_PER_S: f64 = 4e9;
+/// Modeled allocation bandwidth (Ω₁ submatrix-setup fits).
+pub const ALLOC_BYTES_PER_S: f64 = 2e9;
+
+fn secs(flops: f64) -> f64 {
+    flops / GEMM_FLOPS_PER_S
+}
+
+/// One rank's attention branch with `keep_hs` kept contraction columns:
+/// QKV projection + attention core + output projection. `bwd` ≈ 2× fwd.
+pub fn attn_s(m: &ModelInfo, keep_hs: usize, bwd: bool) -> f64 {
+    let rows = (m.bs * m.seq) as f64;
+    let qkv = 2.0 * rows * keep_hs as f64 * (3 * m.hsl) as f64;
+    let core = 4.0 * m.bs as f64 * (m.seq * m.seq) as f64 * m.hsl as f64;
+    let oproj = 2.0 * rows * (m.hsl * m.hs) as f64;
+    let f = qkv + core + oproj;
+    secs(if bwd { 2.0 * f } else { f })
+}
+
+/// One rank's MLP branch with `keep1` kept hs-contraction columns and
+/// `keep2` kept ffl columns. `bwd` ≈ 2× fwd.
+pub fn mlp_s(m: &ModelInfo, keep1: usize, keep2: usize, bwd: bool) -> f64 {
+    let rows = (m.bs * m.seq) as f64;
+    let fc1 = 2.0 * rows * (keep1 * keep2) as f64;
+    let fc2 = 2.0 * rows * (keep2 * m.hs) as f64;
+    let f = fc1 + fc2;
+    secs(if bwd { 2.0 * f } else { f })
+}
+
+/// A migration receiver slice padded to `kb` columns (w1 cols + w2 rows).
+pub fn mig_slice_s(m: &ModelInfo, kb: usize, bwd: bool) -> f64 {
+    let rows = (m.bs * m.seq) as f64;
+    let f = 4.0 * rows * (m.hs * kb) as f64;
+    secs(if bwd { 2.0 * f } else { f })
+}
+
+/// Replicated patch embedding (per rank). `bwd` ≈ 2× fwd.
+pub fn embed_s(m: &ModelInfo, bwd: bool) -> f64 {
+    let f = 2.0 * (m.bs * m.seq0 * m.pd * m.hs) as f64;
+    secs(if bwd { 2.0 * f } else { f })
+}
+
+/// Replicated head fwd+bwd single call (layernorm + classifier + loss).
+pub fn head_s(m: &ModelInfo) -> f64 {
+    secs(3.0 * 2.0 * (m.bs * m.hs * m.classes) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ModelInfo {
+        ModelInfo {
+            name: "t".into(),
+            hs: 128,
+            depth: 2,
+            heads: 4,
+            e: 4,
+            bs: 8,
+            classes: 10,
+            seq: 65,
+            seq0: 64,
+            pd: 48,
+            hsl: 32,
+            hl: 1,
+            hd: 32,
+            ffl: 128,
+            params_total: 0,
+            params_per_worker: 0,
+        }
+    }
+
+    #[test]
+    fn monotone_in_keep_sizes() {
+        let m = model();
+        assert!(attn_s(&m, 64, false) < attn_s(&m, 128, false));
+        assert!(mlp_s(&m, 128, 64, false) < mlp_s(&m, 128, 128, false));
+        assert!(mlp_s(&m, 64, 128, false) < mlp_s(&m, 128, 128, false));
+        assert!(mig_slice_s(&m, 16, false) < mig_slice_s(&m, 64, false));
+    }
+
+    #[test]
+    fn bwd_is_double_fwd() {
+        let m = model();
+        assert_eq!(attn_s(&m, 128, true), 2.0 * attn_s(&m, 128, false));
+        assert_eq!(mlp_s(&m, 128, 128, true), 2.0 * mlp_s(&m, 128, 128, false));
+        assert_eq!(mig_slice_s(&m, 32, true), 2.0 * mig_slice_s(&m, 32, false));
+        assert_eq!(embed_s(&m, true), 2.0 * embed_s(&m, false));
+    }
+
+    #[test]
+    fn vit_tiny_iteration_is_millisecond_scale() {
+        // sanity: one rank's fwd+bwd across both blocks sits in the
+        // compute-dominated regime vs the α-β net defaults (~µs/collective)
+        let m = model();
+        let per_block = attn_s(&m, m.hs, false)
+            + attn_s(&m, m.hs, true)
+            + mlp_s(&m, m.hs, m.ffl, false)
+            + mlp_s(&m, m.hs, m.ffl, true);
+        let iter = per_block * m.depth as f64;
+        assert!(iter > 1e-3, "iter={iter}s too cheap");
+        assert!(iter < 1.0, "iter={iter}s too dear");
+    }
+
+    #[test]
+    fn pure_function_of_shapes() {
+        let m = model();
+        assert_eq!(mlp_s(&m, 96, 112, true), mlp_s(&m, 96, 112, true));
+    }
+}

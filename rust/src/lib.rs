@@ -34,6 +34,7 @@ pub mod bench;
 pub mod cluster;
 pub mod collectives;
 pub mod config;
+pub mod contention;
 pub mod data;
 pub mod metrics;
 pub mod migration;

@@ -2,13 +2,17 @@
 //!
 //! Subcommands:
 //!   train               run a training job (strategy, stragglers, model …)
+//!   sweep               run a scenario × strategy matrix (BENCH_scenarios.json)
 //!   inspect-artifacts   list a model's executables and shapes
 //!   bench-comm          compare migration primitives at given sizes
 //!   pretest             print the SEMI cost-function fit for a model
 //!
-//! All options are `--key value` (see `config::apply_overrides`). Example:
+//! All options are `--key value` (see `config::apply_overrides`). Examples:
 //!
 //!   flextp train --model vit-tiny --strategy semi --chi 4 --epochs 3
+//!   flextp train --strategy semi --replan online \
+//!       --scenario "burst:r2@x4:iters10-40,markov:r*@x2:p0.2-0.4"
+//!   flextp sweep --preset smoke
 
 use anyhow::{bail, Context, Result};
 
@@ -24,6 +28,7 @@ fn main() -> Result<()> {
     let cmd = pos.first().map(String::as_str).unwrap_or("help");
     match cmd {
         "train" => cmd_train(&kv),
+        "sweep" => cmd_sweep(&kv),
         "inspect-artifacts" => cmd_inspect(&kv),
         "bench-comm" => cmd_bench_comm(&kv),
         "pretest" => cmd_pretest(&kv),
@@ -43,6 +48,7 @@ fn print_help() {
          \n\
          COMMANDS\n\
            train                train a model under a balancing strategy\n\
+           sweep                scenario × strategy matrix → BENCH_scenarios.json\n\
            inspect-artifacts    list executables in a model's artifact set\n\
            bench-comm           compare broadcast-reduce vs scatter-gather\n\
            pretest              print the SEMI cost-function fit\n\
@@ -58,6 +64,18 @@ fn print_help() {
            --mig-policy P       broadcast-reduce|scatter-gather\n\
            --chi X              one round-robin straggler at skewness X\n\
            --chis A,B,..        fixed per-rank skewness list\n\
+           --scenario SPEC      iteration-granular contention trace, e.g.\n\
+                                \"burst:r2@x4:iters10-40,markov:r*@x2:p0.2-0.4\"\n\
+                                (kinds: burst|tenant|ramp|step|pulse|markov;\n\
+                                also seed:N, chimax:X, preset:NAME)\n\
+           --scenario-file F    scenario from a DSL or JSON file\n\
+           --replan M           iter (default) | epoch (static per-epoch) |\n\
+                                online (EWMA drift-triggered mid-epoch replans)\n\
+           --time-model T       measured (default) | modeled (deterministic\n\
+                                FLOP-model SimClock — reproducible sims)\n\
+           --timeline           per-iteration χ/T_i/RT dump in the report JSON\n\
+           --ctl-hi/--ctl-lo/--ctl-cooldown/--ctl-alpha-fast/--ctl-alpha-slow\n\
+                                online-controller drift thresholds\n\
            --gamma G            force a uniform pruning ratio\n\
            --lambda N           force the MIG group size (Fig. 11)\n\
            --emulate-wall       really sleep (χ-1)·t on stragglers\n\
@@ -65,7 +83,13 @@ fn print_help() {
                                 (0 = all cores, 1 = serial; for a fixed\n\
                                 plan results are bitwise identical at any\n\
                                 N; env default: FLEXTP_THREADS)\n\
-           --epochs/--iters/--lr/--momentum/--seed ...\n"
+           --epochs/--iters/--lr/--momentum/--seed ...\n\
+         \n\
+         SWEEP OPTIONS\n\
+           --preset P           smoke (CI, 2×2) | bursty | churn\n\
+           --scenarios S        \"label=dsl;label2=dsl\" matrix rows\n\
+           --strategies S       \"semi@online,semi@epoch,baseline\" columns\n\
+           --out FILE           output path (default BENCH_scenarios.json)\n"
     );
 }
 
@@ -97,7 +121,7 @@ fn cmd_train(kv: &std::collections::BTreeMap<String, String>) -> Result<()> {
         let e = t.report.epochs.last().unwrap();
         println!(
             "epoch {:>3}: RT(sim)={:.3}s wall={:.1}s loss={:.4} eval={:.4} \
-             acc={:.1}% comm={} pruned={} migrated={}",
+             acc={:.1}% comm={} pruned={} migrated={} replans={} chi_max={:.1}",
             epoch,
             e.rt_sim_s,
             e.rt_wall_s,
@@ -107,6 +131,8 @@ fn cmd_train(kv: &std::collections::BTreeMap<String, String>) -> Result<()> {
             flextp::util::fmt_bytes(e.comm_bytes),
             e.pruned_cols,
             e.migrated_cols,
+            e.replans,
+            e.chi_max,
         );
     }
     println!("{}", t.report.summary());
@@ -114,6 +140,71 @@ fn cmd_train(kv: &std::collections::BTreeMap<String, String>) -> Result<()> {
         .join(format!("train_{}_{}.json", t.model().name, strategy));
     t.report.save_json(&out).context("saving report")?;
     println!("report: {}", out.display());
+    Ok(())
+}
+
+fn cmd_sweep(kv: &std::collections::BTreeMap<String, String>) -> Result<()> {
+    use flextp::bench::sweep;
+    // reject typos up front (cmd_train gets this from apply_overrides)
+    const KNOWN: [&str; 9] = [
+        "preset", "scenarios", "strategies", "model", "epochs", "iters",
+        "eval-iters", "seed", "time-model",
+    ];
+    for k in kv.keys() {
+        if k != "out" && !KNOWN.contains(&k.as_str()) {
+            bail!("unknown sweep option --{k} (known: --out, {})",
+                  KNOWN.map(|k| format!("--{k}")).join(", "));
+        }
+    }
+    let preset = kv.get("preset").map(String::as_str).unwrap_or("smoke");
+    let mut spec = sweep::SweepSpec::preset(preset)?;
+    if let Some(s) = kv.get("scenarios") {
+        spec.scenarios = sweep::parse_scenarios(s)?;
+        spec.name = "custom".to_string();
+    }
+    if let Some(s) = kv.get("strategies") {
+        spec.cells = s
+            .split(',')
+            .filter(|x| !x.trim().is_empty())
+            .map(|x| sweep::parse_cell(x.trim()))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(v) = kv.get("model") {
+        spec.model = v.clone();
+    }
+    if let Some(v) = kv.get("epochs") {
+        spec.epochs = v.parse().context("epochs")?;
+    }
+    if let Some(v) = kv.get("iters") {
+        spec.iters = v.parse().context("iters")?;
+    }
+    if let Some(v) = kv.get("eval-iters") {
+        spec.eval_iters = v.parse().context("eval-iters")?;
+    }
+    if let Some(v) = kv.get("seed") {
+        spec.seed = v.parse().context("seed")?;
+    }
+    if let Some(v) = kv.get("time-model") {
+        spec.time_model = flextp::config::TimeModel::parse(v)?;
+    }
+    println!(
+        "flextp sweep: preset={} model={} {} scenario(s) × {} strategy cell(s), \
+         epochs={} iters={} time-model={}",
+        spec.name,
+        spec.model,
+        spec.scenarios.len(),
+        spec.cells.len(),
+        spec.epochs,
+        spec.iters,
+        spec.time_model.name(),
+    );
+    let report = sweep::run_sweep(&spec)?;
+    println!("{}", report.render());
+    let out = std::path::PathBuf::from(
+        kv.get("out").map(String::as_str).unwrap_or("BENCH_scenarios.json"),
+    );
+    report.save(&out)?;
+    println!("\nreport: {}", out.display());
     Ok(())
 }
 

@@ -27,6 +27,46 @@ pub struct EpochMetrics {
     pub migrated_cols: u64,
     /// per-rank compute seconds (sim) — straggler visibility
     pub rank_compute_s: Vec<f64>,
+    /// balancing-plan recomputations this epoch: `--replan iter` counts
+    /// every iteration, `epoch` exactly one, `online` the boundary plan
+    /// plus every drift-triggered mid-epoch replan
+    pub replans: u64,
+    /// mean χ over this epoch's (iteration × rank) trace cells
+    pub chi_mean: f64,
+    /// max χ seen this epoch
+    pub chi_max: f64,
+}
+
+/// One `--timeline` sample: contention vs runtime, per iteration — the
+/// raw material for plotting χ against RT and replan events.
+#[derive(Debug, Clone, Default)]
+pub struct IterSample {
+    /// global iteration index
+    pub giter: u64,
+    pub epoch: usize,
+    pub iter: usize,
+    /// per-rank χ snapshot this iteration ran under
+    pub chi: Vec<f64>,
+    /// per-rank compute seconds T_i (sim)
+    pub t_iter: Vec<f64>,
+    /// simulated elapsed time of this iteration (max-rank clock delta)
+    pub rt_iter_s: f64,
+    /// did the balancer recompute its plan this iteration?
+    pub replanned: bool,
+}
+
+impl IterSample {
+    fn to_json(&self) -> Json {
+        obj([
+            ("giter", (self.giter as f64).into()),
+            ("epoch", self.epoch.into()),
+            ("iter", self.iter.into()),
+            ("chi", self.chi.iter().copied().collect()),
+            ("t_iter", self.t_iter.iter().copied().collect()),
+            ("rt_iter_s", self.rt_iter_s.into()),
+            ("replanned", self.replanned.into()),
+        ])
+    }
 }
 
 /// Whole-run report.
@@ -36,6 +76,8 @@ pub struct RunReport {
     pub epochs: Vec<EpochMetrics>,
     /// per-iteration training losses (the e2e loss curve)
     pub loss_curve: Vec<f32>,
+    /// opt-in per-iteration contention/runtime samples (`--timeline`)
+    pub timeline: Vec<IterSample>,
 }
 
 impl RunReport {
@@ -69,8 +111,26 @@ impl RunReport {
         self.epochs.iter().map(|e| e.comm_bytes).sum()
     }
 
+    /// Plan recomputations across the run (replan-overhead accounting).
+    pub fn total_replans(&self) -> u64 {
+        self.epochs.iter().map(|e| e.replans).sum()
+    }
+
+    /// Max χ seen across the run's realized trace.
+    pub fn chi_max(&self) -> f64 {
+        self.epochs.iter().map(|e| e.chi_max).fold(0.0, f64::max)
+    }
+
+    /// Mean of the per-epoch χ means (epochs share an iteration count).
+    pub fn chi_mean(&self) -> f64 {
+        if self.epochs.is_empty() {
+            return 1.0;
+        }
+        self.epochs.iter().map(|e| e.chi_mean).sum::<f64>() / self.epochs.len() as f64
+    }
+
     pub fn to_json(&self) -> Json {
-        obj([
+        let mut top = obj([
             ("label", self.label.as_str().into()),
             ("rt", self.rt().into()),
             ("final_acc", self.final_acc().into()),
@@ -92,12 +152,24 @@ impl RunReport {
                                 ("comm_bytes", (e.comm_bytes as f64).into()),
                                 ("pruned_cols", (e.pruned_cols as f64).into()),
                                 ("migrated_cols", (e.migrated_cols as f64).into()),
+                                ("replans", (e.replans as f64).into()),
+                                ("chi_mean", e.chi_mean.into()),
+                                ("chi_max", e.chi_max.into()),
                             ])
                         })
                         .collect(),
                 ),
             ),
-        ])
+        ]);
+        if !self.timeline.is_empty() {
+            if let Json::Obj(m) = &mut top {
+                m.insert(
+                    "timeline".to_string(),
+                    Json::Arr(self.timeline.iter().map(|s| s.to_json()).collect()),
+                );
+            }
+        }
+        top
     }
 
     pub fn save_json(&self, path: &Path) -> std::io::Result<()> {
@@ -162,6 +234,44 @@ mod tests {
         let r = mk(&[1.0], &[0.5]);
         let j = r.to_json().to_string();
         assert!(j.contains("\"rt\":1"));
+        assert!(j.contains("\"replans\":0"));
+        assert!(j.contains("\"chi_max\":0"));
+        assert!(!j.contains("\"timeline\""), "timeline is opt-in");
         assert!(Json::parse(&j).is_ok());
+    }
+
+    #[test]
+    fn replan_and_chi_accounting() {
+        let mut r = mk(&[1.0, 1.0], &[0.1, 0.2]);
+        r.epochs[0].replans = 3;
+        r.epochs[0].chi_mean = 1.5;
+        r.epochs[0].chi_max = 6.0;
+        r.epochs[1].replans = 1;
+        r.epochs[1].chi_mean = 2.5;
+        r.epochs[1].chi_max = 4.0;
+        assert_eq!(r.total_replans(), 4);
+        assert_eq!(r.chi_max(), 6.0);
+        assert!((r.chi_mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timeline_emits_when_present() {
+        let mut r = mk(&[1.0], &[0.5]);
+        r.timeline.push(IterSample {
+            giter: 4,
+            epoch: 0,
+            iter: 4,
+            chi: vec![1.0, 6.0],
+            t_iter: vec![0.01, 0.06],
+            rt_iter_s: 0.06,
+            replanned: true,
+        });
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"timeline\""));
+        assert!(j.contains("\"replanned\":true"));
+        let parsed = Json::parse(&j).unwrap();
+        let tl = parsed.get("timeline").unwrap().arr().unwrap();
+        assert_eq!(tl.len(), 1);
+        assert_eq!(tl[0].get("chi").unwrap().arr().unwrap().len(), 2);
     }
 }

@@ -45,6 +45,24 @@ impl CostFns {
     pub fn phi2(&self, cols: f64) -> f64 {
         self.phi2_per_col * cols.max(0.0)
     }
+
+    /// EWMA-blend with a fresh fit, weight `w` on the fresh values — the
+    /// online controller's re-entrant pretest: mid-run refits damp
+    /// toward the standing fit instead of jerking the Eq. 2/3 balance
+    /// around on one noisy measurement.  `w = 1` replaces outright;
+    /// blending two equal fits is the identity (so deterministic modeled
+    /// refits stay bitwise stable).
+    pub fn blend(&self, fresh: &CostFns, w: f64) -> CostFns {
+        let w = w.clamp(0.0, 1.0);
+        let mix = |old: f64, new: f64| old + w * (new - old);
+        CostFns {
+            omega1_s: mix(self.omega1_s, fresh.omega1_s),
+            omega2_per_col: mix(self.omega2_per_col, fresh.omega2_per_col),
+            phi1_base_s: mix(self.phi1_base_s, fresh.phi1_base_s),
+            phi1_per_col: mix(self.phi1_per_col, fresh.phi1_per_col),
+            phi2_per_col: mix(self.phi2_per_col, fresh.phi2_per_col),
+        }
+    }
 }
 
 /// Eq. (2): solve Ω₁ + Ω₂(Lγ(1-β)) = Φ₁(Lγβ) + Φ₂(Lγβ/(e-1)) for β∈[0,1].
@@ -148,6 +166,22 @@ mod tests {
             phi1_per_col: 1e-1,
             phi2_per_col: 1e-2,
         }
+    }
+
+    #[test]
+    fn blend_interpolates_and_is_identity_on_equal_fits() {
+        let a = cheap_comm();
+        let b = dear_comm();
+        let half = a.blend(&b, 0.5);
+        assert!((half.phi1_per_col - 0.5 * (a.phi1_per_col + b.phi1_per_col)).abs() < 1e-12);
+        assert!((half.omega1_s - 0.5 * (a.omega1_s + b.omega1_s)).abs() < 1e-12);
+        // w=1 replaces, w=0 keeps
+        assert_eq!(a.blend(&b, 1.0).phi2_per_col, b.phi2_per_col);
+        assert_eq!(a.blend(&b, 0.0).phi2_per_col, a.phi2_per_col);
+        // equal fits: bitwise identity regardless of w (modeled refits)
+        let same = a.blend(&a, 0.5);
+        assert_eq!(same.omega1_s, a.omega1_s);
+        assert_eq!(same.phi1_base_s, a.phi1_base_s);
     }
 
     #[test]

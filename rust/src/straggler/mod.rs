@@ -12,7 +12,15 @@
 use crate::collectives::Comm;
 use crate::cluster::Clocks;
 
-/// Per-rank χ multipliers for one epoch.
+/// Per-rank χ multipliers for one **iteration**.
+///
+/// The injector holds a *snapshot*: [`Injector::set_iter_chi`] is called
+/// once per iteration on the coordinator, and every charge — SimClock
+/// advance *and* wall-emulation sleep — within that iteration reads the
+/// same vector.  Before the snapshot API, χ was re-read per charge, so a
+/// trace that advanced mid-epoch could leave sim-clock charges and
+/// emulated sleeps disagreeing within one iteration (the wall-drift
+/// fix); now the trace can only take effect at iteration boundaries.
 #[derive(Debug, Clone)]
 pub struct Injector {
     pub chi: Vec<f64>,
@@ -29,8 +37,23 @@ impl Injector {
         Injector { chi, emulate_wall: false }
     }
 
+    /// Snapshot the per-rank χ for the coming iteration (clamped to
+    /// ≥ 1.0).  Copies into the existing buffer — allocation-free in the
+    /// steady state when the rank count is unchanged.
+    pub fn set_iter_chi(&mut self, chi: &[f64]) {
+        if self.chi.len() == chi.len() {
+            self.chi.copy_from_slice(chi);
+        } else {
+            self.chi = chi.to_vec();
+        }
+        for c in &mut self.chi {
+            *c = c.max(1.0);
+        }
+    }
+
     /// Charge a block-GEMM compute measurement for `rank`: the SimClock
     /// gets `χ·t`; in wall-emulation mode the extra `(χ-1)·t` is slept.
+    /// Both read the same snapshotted χ, so the two clocks always agree.
     pub fn charge(&self, clocks: &mut Clocks, rank: usize, measured_s: f64) {
         let chi = self.chi[rank];
         clocks.advance(rank, measured_s * chi);
@@ -146,6 +169,37 @@ mod tests {
         assert!((clocks.now(0) - 0.1).abs() < 1e-12);
         assert!((clocks.now(1) - 0.3).abs() < 1e-12);
         assert_eq!(inj.stragglers(), vec![1]);
+    }
+
+    #[test]
+    fn iter_chi_snapshot_is_stable_between_sets() {
+        // The wall-drift fix: charges between two set_iter_chi calls all
+        // use the earlier snapshot; the source trace advancing has no
+        // effect until the next iteration boundary.
+        let mut inj = Injector::homogeneous(2);
+        let mut clocks = Clocks::new(2);
+        let trace_row_a = vec![2.0, 1.0];
+        inj.set_iter_chi(&trace_row_a);
+        inj.charge(&mut clocks, 0, 0.1);
+        // trace moves on mid-iteration — the injector must not care
+        let trace_row_b = vec![8.0, 1.0];
+        let _ = &trace_row_b;
+        inj.charge(&mut clocks, 0, 0.1);
+        assert!((clocks.now(0) - 0.4).abs() < 1e-12, "both charges at χ=2");
+        // next iteration picks the new row up
+        inj.set_iter_chi(&trace_row_b);
+        inj.charge(&mut clocks, 0, 0.1);
+        assert!((clocks.now(0) - 1.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn iter_chi_clamps_below_one() {
+        let mut inj = Injector::homogeneous(3);
+        inj.set_iter_chi(&[0.5, 1.0, 3.0]);
+        assert_eq!(inj.chi, vec![1.0, 1.0, 3.0]);
+        // rank-count change falls back to reallocation
+        inj.set_iter_chi(&[2.0]);
+        assert_eq!(inj.chi, vec![2.0]);
     }
 
     #[test]

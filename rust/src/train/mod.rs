@@ -81,7 +81,18 @@ pub fn pretest(
     let per_gather = t0.elapsed().as_secs_f64() / REPS as f64;
     let omega2_per_col = per_gather / idx.len() as f64 * 2.0 * m.depth as f64;
 
-    // Φ₁: slope via two evaluation points of the analytic comm cost
+    // Φ₁ from the α-β model, Φ₂ from the measured FFN executable time
+    let (phi1_base_s, phi1_per_col) = phi1_fits(m, net);
+    let phi2_per_col = mlp_fwd_bwd_secs / m.ffl as f64 * m.depth as f64;
+
+    CostFns { omega1_s, omega2_per_col, phi1_base_s, phi1_per_col, phi2_per_col }
+}
+
+/// Φ₁ affine fit via two evaluation points of the analytic comm cost:
+/// per migrated column and iteration, a tree broadcast of its 2·hs
+/// weight values out plus a flat gather of the compact gradients back,
+/// per layer.  Shared by the measured and deterministic pretests.
+fn phi1_fits(m: &ModelInfo, net: &CostModel) -> (f64, f64) {
     let phi1_at = |cols: f64| -> f64 {
         if cols <= 0.0 {
             return 0.0;
@@ -91,13 +102,30 @@ pub fn pretest(
         let back = net.p2p(bytes);
         (bcast + back) * m.depth as f64
     };
-    let phi1_base_s = phi1_at(1.0);
-    let phi1_per_col = (phi1_at(101.0) - phi1_at(1.0)) / 100.0;
+    (phi1_at(1.0), (phi1_at(101.0) - phi1_at(1.0)) / 100.0)
+}
 
-    // Φ₂: measured FFN time per contraction column (fwd+bwd, all layers)
-    let phi2_per_col = mlp_fwd_bwd_secs / m.ffl as f64 * m.depth as f64;
-
-    CostFns { omega1_s, omega2_per_col, phi1_base_s, phi1_per_col, phi2_per_col }
+/// Deterministic pretest for `--time-model modeled` runs (DESIGN.md
+/// §12): the Ω fits come from byte-count formulas over the same shapes
+/// the measured pretest touches — a [hs, ffl/2] submatrix allocation
+/// (Ω₁) and per-column gathers of 2·hs weight values (Ω₂) at the
+/// modeled alloc/copy bandwidths — instead of wall measurements, so
+/// mid-run replans are bitwise reproducible across runs and thread
+/// counts.  Φ₁ uses the α-β net model exactly like [`pretest`]; Φ₂
+/// takes the *modeled* full-width FFN fwd+bwd seconds.
+pub fn pretest_det(m: &ModelInfo, net: &CostModel, mlp_fwd_bwd_secs: f64) -> CostFns {
+    use crate::contention::timemodel::{ALLOC_BYTES_PER_S, MEM_BYTES_PER_S};
+    let omega1_s =
+        (m.hs * (m.ffl / 2).max(1) * 4) as f64 / ALLOC_BYTES_PER_S * m.depth as f64;
+    let omega2_per_col = (m.hs * 4) as f64 / MEM_BYTES_PER_S * 2.0 * m.depth as f64;
+    let (phi1_base_s, phi1_per_col) = phi1_fits(m, net);
+    CostFns {
+        omega1_s,
+        omega2_per_col,
+        phi1_base_s,
+        phi1_per_col,
+        phi2_per_col: mlp_fwd_bwd_secs / m.ffl as f64 * m.depth as f64,
+    }
 }
 
 #[cfg(test)]
@@ -152,5 +180,28 @@ mod tests {
         assert!(c.phi2_per_col > 0.0);
         // Φ₁ monotone
         assert!(c.phi1(10.0) < c.phi1(100.0));
+    }
+
+    #[test]
+    fn pretest_det_is_deterministic_and_positive() {
+        let m = ModelInfo {
+            name: "t".into(), hs: 32, depth: 2, heads: 4, e: 4, bs: 2,
+            classes: 10, seq: 17, seq0: 16, pd: 48, hsl: 8, hl: 1, hd: 8,
+            ffl: 32, params_total: 0, params_per_worker: 0,
+        };
+        let a = pretest_det(&m, &CostModel::default(), 0.01);
+        let b = pretest_det(&m, &CostModel::default(), 0.01);
+        // bitwise equality — no wall measurements anywhere
+        assert_eq!(a.omega1_s, b.omega1_s);
+        assert_eq!(a.omega2_per_col, b.omega2_per_col);
+        assert_eq!(a.phi1_base_s, b.phi1_base_s);
+        assert_eq!(a.phi1_per_col, b.phi1_per_col);
+        assert_eq!(a.phi2_per_col, b.phi2_per_col);
+        assert!(a.omega1_s > 0.0 && a.omega2_per_col > 0.0 && a.phi2_per_col > 0.0);
+        // Φ fits agree with the measured pretest (shared derivation)
+        let c = pretest(&m, &CostModel::default(), 0.01);
+        assert_eq!(a.phi1_base_s, c.phi1_base_s);
+        assert_eq!(a.phi1_per_col, c.phi1_per_col);
+        assert_eq!(a.phi2_per_col, c.phi2_per_col);
     }
 }

@@ -27,6 +27,19 @@
 //! Balancing hooks: the [`Balancer`] contributes per-rank [`WorkerAction`]s
 //! each iteration — pruned executables + keep sets for ZERO-resizing,
 //! migration plans whose receiver slices run here with reduce-merging.
+//!
+//! # Dynamic contention & replanning (DESIGN.md §12)
+//!
+//! χ is *iteration*-granular: a [`ContentionTrace`] realized once on the
+//! coordinator (from `--scenario`/`--chi`/`--chis`) feeds the
+//! [`Injector`] one snapshot per iteration.  `--replan` picks when the
+//! plan is recomputed: every iteration (legacy), at epoch boundaries
+//! (static baseline), or **online** — boundaries plus mid-epoch replans
+//! triggered by the EWMA [`DriftDetector`] watching T_i, each charged
+//! Ω₁ to the SimClock and preceded by a re-entrant pretest refit.
+//! `--time-model modeled` swaps measured charges for deterministic
+//! FLOP-model seconds, making whole dynamic runs (replans included)
+//! bitwise thread-count-invariant and sweeps reproducible.
 
 use std::sync::Mutex;
 
@@ -35,9 +48,11 @@ use anyhow::{Context, Result};
 use crate::balancer::{Balancer, WorkerAction};
 use crate::cluster::Clocks;
 use crate::collectives::{cost::CostModel, Comm};
-use crate::config::{Imputation, MigPolicy, RunCfg, Strategy};
+use crate::config::{Imputation, MigPolicy, ReplanMode, RunCfg, Strategy, TimeModel};
+use crate::contention::control::DriftDetector;
+use crate::contention::{timemodel, ContentionTrace};
 use crate::data::{Batch, SynthData};
-use crate::metrics::{EpochMetrics, RunReport};
+use crate::metrics::{EpochMetrics, IterSample, RunReport};
 use crate::migration::Chunk;
 use crate::model::{BlockGrads, ModelState};
 use crate::resizing::lineage::{impute_cols, impute_rows, Lineage};
@@ -69,6 +84,17 @@ pub struct Trainer {
     /// a shared slice; each slot is touched by one job at a time.
     ws: Vec<Mutex<Workspace>>,
     injector: Injector,
+    /// realized per-iteration contention trace (DESIGN.md §12) — built
+    /// once on the coordinator from `cfg.stragglers`; workers never
+    /// observe or advance trace state
+    trace: ContentionTrace,
+    /// EWMA drift detector driving `--replan online`
+    pub controller: DriftDetector,
+    /// plan cache for the epoch/online replan modes
+    cached_actions: Option<Vec<WorkerAction>>,
+    /// true while warmup_and_pretest's untimed iteration runs: the trace
+    /// is not applied and plan/χ accounting is suppressed
+    warming: bool,
     /// previous-iteration grads per (worker, block) — Same policy only
     prev_grads: Option<Vec<Vec<BlockGrads>>>,
     /// fixed-batch override (golden tests)
@@ -79,6 +105,11 @@ pub struct Trainer {
     epoch_pruned_cols: u64,
     epoch_migrated_cols: u64,
     epoch_compute: Vec<f64>,
+    epoch_replans: u64,
+    epoch_chi_sum: f64,
+    epoch_chi_max: f64,
+    epoch_chi_iters: u64,
+    last_replanned: bool,
 }
 
 impl Trainer {
@@ -114,10 +145,31 @@ impl Trainer {
         };
         let pool = RankPool::new(cfg.train.threads);
         let ws = (0..m.e).map(|_| Mutex::new(Workspace::new())).collect();
+        // realize the whole run's contention trace up front, on the
+        // coordinator: queries are pure slice reads afterwards.  A
+        // scenario naming a rank outside the worker group is an error,
+        // not a silently-calm trace.
+        if let crate::config::StragglerPlan::Scenario(spec) = &cfg.stragglers {
+            spec.validate_ranks(m.e)
+                .with_context(|| format!("scenario invalid for model '{}'", cfg.model))?;
+        }
+        let trace = ContentionTrace::from_plan(
+            &cfg.stragglers,
+            m.e,
+            cfg.train.epochs,
+            cfg.train.iters_per_epoch,
+        );
+        let controller = DriftDetector::new(cfg.control);
+        let mut injector = Injector::homogeneous(m.e);
+        injector.emulate_wall = cfg.train.emulate_wall;
         Ok(Trainer {
             pool,
             ws,
-            injector: Injector::homogeneous(m.e),
+            injector,
+            trace,
+            controller,
+            cached_actions: None,
+            warming: false,
             cfg,
             rt,
             state,
@@ -136,6 +188,11 @@ impl Trainer {
             epoch_pruned_cols: 0,
             epoch_migrated_cols: 0,
             epoch_compute: Vec::new(),
+            epoch_replans: 0,
+            epoch_chi_sum: 0.0,
+            epoch_chi_max: 0.0,
+            epoch_chi_iters: 0,
+            last_replanned: false,
         })
     }
 
@@ -209,12 +266,16 @@ impl Trainer {
 
     pub fn run_epoch(&mut self, epoch: usize) -> Result<()> {
         let e = self.model().e;
-        self.injector = Injector::new(self.cfg.stragglers.chis(e, epoch));
-        self.injector.emulate_wall = self.cfg.train.emulate_wall;
+        // χ now applies per *iteration* from the realized trace inside
+        // train_iter (the injector snapshots one row per iteration)
         self.clocks.reset();
         self.epoch_pruned_cols = 0;
         self.epoch_migrated_cols = 0;
         self.epoch_compute = vec![0.0; e];
+        self.epoch_replans = 0;
+        self.epoch_chi_sum = 0.0;
+        self.epoch_chi_max = 0.0;
+        self.epoch_chi_iters = 0;
         let wall0 = std::time::Instant::now();
         let mut rt_sim = 0.0;
         let mut loss_sum = 0.0;
@@ -229,6 +290,7 @@ impl Trainer {
         let (eval_loss, acc) = self.eval()?;
         self.balancer.epoch_end(&self.state);
         let rank_compute = self.epoch_compute.clone();
+        let chi_cells = self.epoch_chi_iters.saturating_mul(e as u64);
         self.report.epochs.push(EpochMetrics {
             epoch,
             rt_sim_s: rt_sim,
@@ -240,31 +302,54 @@ impl Trainer {
             pruned_cols: self.epoch_pruned_cols,
             migrated_cols: self.epoch_migrated_cols,
             rank_compute_s: rank_compute,
+            replans: self.epoch_replans,
+            chi_mean: if chi_cells > 0 {
+                self.epoch_chi_sum / chi_cells as f64
+            } else {
+                1.0
+            },
+            chi_max: self.epoch_chi_max,
         });
         Ok(())
     }
 
     /// One untimed baseline iteration: compiles the hot executables and
     /// measures the FFN time the pretest needs. Model state is restored.
+    /// The contention trace is *not* applied during warmup (homogeneous
+    /// charges), and any plan cached while warming is dropped.
     pub fn warmup_and_pretest(&mut self) -> Result<()> {
         let saved = self.state.clone();
         let saved_clocks = self.clocks.clone();
-        self.train_iter()?;
+        self.warming = true;
+        let warm = self.train_iter();
+        self.warming = false;
+        warm?;
         self.state = saved;
         self.clocks = saved_clocks;
         self.report.loss_curve.clear();
         self.global_iter = 0;
-        let prof = self.rt.timing_profile();
-        let mlp_secs: f64 = prof
-            .iter()
-            .filter(|(n, _, _)| n.starts_with("mlp_fwd") || n.starts_with("mlp_bwd"))
-            .map(|(_, calls, secs)| secs / (*calls).max(1) as f64)
-            .sum();
-        self.costs = crate::train::pretest(
-            &self.rt.manifest.model.clone(),
-            &self.comm.cost,
-            mlp_secs,
-        );
+        self.cached_actions = None;
+        // re-seed the drift detector with the homogeneous warmup stats so
+        // the first real iteration is a baseline, not a phantom drift
+        self.controller = DriftDetector::new(self.cfg.control);
+        self.controller.observe(&self.monitor.t_iter);
+        let m = self.rt.manifest.model.clone();
+        self.costs = match self.cfg.train.time_model {
+            TimeModel::Measured => {
+                let prof = self.rt.timing_profile();
+                let mlp_secs: f64 = prof
+                    .iter()
+                    .filter(|(n, _, _)| n.starts_with("mlp_fwd") || n.starts_with("mlp_bwd"))
+                    .map(|(_, calls, secs)| secs / (*calls).max(1) as f64)
+                    .sum();
+                crate::train::pretest(&m, &self.comm.cost, mlp_secs)
+            }
+            TimeModel::Modeled => crate::train::pretest_det(
+                &m,
+                &self.comm.cost,
+                timemodel::mlp_s(&m, m.hs, m.ffl, false) + timemodel::mlp_s(&m, m.hs, m.ffl, true),
+            ),
+        };
         Ok(())
     }
 
@@ -275,6 +360,22 @@ impl Trainer {
     pub fn train_iter(&mut self) -> Result<f32> {
         let m = self.rt.manifest.model.clone();
         let e = m.e;
+        let g = self.global_iter;
+        let ipe = self.cfg.train.iters_per_epoch.max(1) as u64;
+        let (epoch, iter) = ((g / ipe) as usize, (g % ipe) as usize);
+        let rt0 = self.clocks.max();
+        // --- χ snapshot for this iteration.  The trace row is copied
+        // into the injector on the coordinator before any rank work
+        // launches; every charge (and wall-emulation sleep) this
+        // iteration reads that snapshot.  Warmup stays homogeneous.
+        if !self.warming {
+            self.injector.set_iter_chi(self.trace.chis(g as usize));
+            for &c in &self.injector.chi {
+                self.epoch_chi_sum += c;
+                self.epoch_chi_max = self.epoch_chi_max.max(c);
+            }
+            self.epoch_chi_iters += 1;
+        }
         let batch = match &self.forced_batch {
             Some(b) => b.clone(),
             None => self
@@ -284,35 +385,12 @@ impl Trainer {
         self.global_iter += 1;
 
         // --- balancing plan (uses last iteration's statistics)
-        let actions = match &self.forced_actions {
-            Some(a) => a.clone(),
-            None => {
-                let t_avg = if matches!(
-                    self.cfg.balancer.strategy,
-                    Strategy::Mig | Strategy::Semi
-                ) {
-                    vec![0.0; e] // unused by MIG/SEMI
-                } else {
-                    self.monitor.t_avg(&mut self.comm, &mut self.clocks)
-                };
-                let t_min = if matches!(
-                    self.cfg.balancer.strategy,
-                    Strategy::Mig | Strategy::Semi
-                ) {
-                    self.monitor.t_list_and_min(&mut self.comm, &mut self.clocks).1
-                } else {
-                    0.0
-                };
-                self.balancer.plan_iter(
-                    &self.rt.manifest,
-                    &self.monitor,
-                    &t_avg,
-                    t_min,
-                    self.cfg.train.iters_per_epoch,
-                    &self.costs,
-                )
-            }
+        let mut replanned = false;
+        let actions = match self.forced_actions.clone() {
+            Some(a) => a,
+            None => self.plan_actions(iter, &mut replanned)?,
         };
+        self.last_replanned = replanned;
         for a in &actions {
             for p in &a.layers {
                 self.epoch_pruned_cols += p.pruned_cols(m.hs, m.ffl);
@@ -343,8 +421,9 @@ impl Trainer {
                 Arg::F32(&rep.cls),
             ],
         )?;
+        let tc = self.sim_secs(t, timemodel::embed_s(&m, false));
         for r in 0..e {
-            self.injector.charge_unskewed(&mut self.clocks, r, t);
+            self.injector.charge_unskewed(&mut self.clocks, r, tc);
         }
         let mut x = into1(outs)?;
 
@@ -381,8 +460,9 @@ impl Trainer {
                 Arg::I32(&labels),
             ],
         )?;
+        let tc = self.sim_secs(t, timemodel::head_s(&m));
         for r in 0..e {
-            self.injector.charge_unskewed(&mut self.clocks, r, t);
+            self.injector.charge_unskewed(&mut self.clocks, r, tc);
         }
         let mut it = outs.into_iter();
         let loss = it.next().unwrap().scalar_f32()?;
@@ -416,8 +496,9 @@ impl Trainer {
                 Arg::F32(&dy),
             ],
         )?;
+        let tc = self.sim_secs(t, timemodel::embed_s(&m, true));
         for r in 0..e {
-            self.injector.charge_unskewed(&mut self.clocks, r, t);
+            self.injector.charge_unskewed(&mut self.clocks, r, tc);
         }
         let mut it = outs.into_iter();
         let dw_patch = it.next().unwrap().tensor()?;
@@ -468,8 +549,141 @@ impl Trainer {
                 *acc += t;
             }
         }
+        if self.cfg.train.timeline && !self.warming {
+            self.report.timeline.push(IterSample {
+                giter: g,
+                epoch,
+                iter,
+                chi: self.injector.chi.clone(),
+                t_iter: t_iter.clone(),
+                rt_iter_s: self.clocks.max() - rt0,
+                replanned: self.last_replanned,
+            });
+        }
         self.monitor.record(t_iter, m_gemm);
         Ok(loss)
+    }
+
+    // -----------------------------------------------------------------
+    // Replanning (DESIGN.md §12): when is the balancer's plan recomputed
+    // -----------------------------------------------------------------
+
+    /// Produce this iteration's actions under the configured
+    /// [`ReplanMode`].  `iter` is the within-epoch index; `replanned`
+    /// reports whether the plan was recomputed this iteration.
+    fn plan_actions(&mut self, iter: usize, replanned: &mut bool) -> Result<Vec<WorkerAction>> {
+        match self.cfg.balancer.replan {
+            // legacy engine: fresh plan (and detection statistics) every
+            // iteration; no extra replan charge, preserving the paper
+            // benches' accounting
+            ReplanMode::Iter => {
+                *replanned = true;
+                self.plan_now()
+            }
+            // static per-epoch plan: recomputed at the boundary only —
+            // the baseline the online controller is measured against
+            ReplanMode::Epoch => {
+                if iter == 0 || self.cached_actions.is_none() {
+                    let a = self.plan_now()?;
+                    self.charge_replan();
+                    self.cached_actions = Some(a);
+                    *replanned = true;
+                }
+                Ok(self.cached_actions.clone().expect("cached plan"))
+            }
+            // epoch boundaries + drift-triggered mid-epoch replans
+            ReplanMode::Online => {
+                let drift = self.controller.observe(&self.monitor.t_iter);
+                if iter == 0 || drift.triggered || self.cached_actions.is_none() {
+                    if drift.triggered {
+                        // re-entrant pretest: refresh the Eq. 2/3 cost
+                        // fits before re-running the allocation
+                        self.refresh_costs();
+                    }
+                    let a = self.plan_now()?;
+                    self.charge_replan();
+                    self.cached_actions = Some(a);
+                    *replanned = true;
+                }
+                Ok(self.cached_actions.clone().expect("cached plan"))
+            }
+        }
+    }
+
+    /// One plan recomputation: gather the detection statistics the
+    /// strategy needs (charged collectives) and run the balancer.
+    fn plan_now(&mut self) -> Result<Vec<WorkerAction>> {
+        let e = self.model().e;
+        let t_avg = if matches!(self.cfg.balancer.strategy, Strategy::Mig | Strategy::Semi) {
+            vec![0.0; e] // unused by MIG/SEMI
+        } else {
+            self.monitor.t_avg(&mut self.comm, &mut self.clocks)
+        };
+        let t_min = if matches!(self.cfg.balancer.strategy, Strategy::Mig | Strategy::Semi) {
+            self.monitor.t_list_and_min(&mut self.comm, &mut self.clocks).1
+        } else {
+            0.0
+        };
+        let actions = self.balancer.plan_iter(
+            &self.rt.manifest,
+            &self.monitor,
+            &t_avg,
+            t_min,
+            self.cfg.train.iters_per_epoch,
+            &self.costs,
+        );
+        if !self.warming {
+            self.epoch_replans += 1;
+        }
+        Ok(actions)
+    }
+
+    /// Charge the plan-recompute overhead Ω₁ to every rank's SimClock —
+    /// replans are not free; the controller's RT wins must pay for them.
+    /// (The detection collectives are already charged by `plan_now`.)
+    fn charge_replan(&mut self) {
+        let e = self.model().e;
+        let dt = self.costs.omega1_s;
+        for r in 0..e {
+            self.clocks.advance_comm(r, dt);
+        }
+    }
+
+    /// Re-run the pretest cost fits mid-run (online replanning).
+    /// Measured mode refits from the live timing profile and EWMA-blends
+    /// into the standing fit to damp noise; modeled mode recomputes the
+    /// deterministic fit (blending equal fits is the identity, keeping
+    /// runs bitwise reproducible).
+    fn refresh_costs(&mut self) {
+        let m = self.rt.manifest.model.clone();
+        let fresh = match self.cfg.train.time_model {
+            TimeModel::Measured => {
+                let prof = self.rt.timing_profile();
+                let mlp_secs: f64 = prof
+                    .iter()
+                    .filter(|(n, _, _)| n.starts_with("mlp_fwd") || n.starts_with("mlp_bwd"))
+                    .map(|(_, calls, secs)| secs / (*calls).max(1) as f64)
+                    .sum();
+                crate::train::pretest(&m, &self.comm.cost, mlp_secs)
+            }
+            TimeModel::Modeled => crate::train::pretest_det(
+                &m,
+                &self.comm.cost,
+                timemodel::mlp_s(&m, m.hs, m.ffl, false) + timemodel::mlp_s(&m, m.hs, m.ffl, true),
+            ),
+        };
+        self.costs = self.costs.blend(&fresh, 0.5);
+    }
+
+    /// The SimClock compute charge for one backend call: the measured
+    /// seconds by default, the deterministic FLOP-model seconds under
+    /// `--time-model modeled`.
+    #[inline]
+    fn sim_secs(&self, measured: f64, modeled: f64) -> f64 {
+        match self.cfg.train.time_model {
+            TimeModel::Measured => measured,
+            TimeModel::Modeled => modeled,
+        }
     }
 
     // ---- branch executions -------------------------------------------
@@ -512,9 +726,12 @@ impl Trainer {
             Ok((into1(outs)?, t))
         })?;
         let mut partials = Vec::with_capacity(e);
+        let mi = &self.rt.manifest.model;
         for (w, (y, t)) in results.into_iter().enumerate() {
-            self.injector.charge(&mut self.clocks, w, t);
-            m_gemm[w] += t * self.injector.chi[w];
+            let keep = actions[w].layers[k].attn_keep.len();
+            let tc = self.sim_secs(t, timemodel::attn_s(mi, keep, false));
+            self.injector.charge(&mut self.clocks, w, tc);
+            m_gemm[w] += tc * self.injector.chi[w];
             partials.push(y);
         }
         Ok(partials)
@@ -558,9 +775,13 @@ impl Trainer {
             Ok((into1(outs)?, t))
         })?;
         let mut partials = Vec::with_capacity(e);
+        let mi = &self.rt.manifest.model;
         for (w, (y, t)) in results.into_iter().enumerate() {
-            self.injector.charge(&mut self.clocks, w, t);
-            m_gemm[w] += t * self.injector.chi[w];
+            let p = &actions[w].layers[k];
+            let (k1, k2) = (p.mlp_keep1.len(), p.mlp_keep2.len());
+            let tc = self.sim_secs(t, timemodel::mlp_s(mi, k1, k2, false));
+            self.injector.charge(&mut self.clocks, w, tc);
+            m_gemm[w] += tc * self.injector.chi[w];
             partials.push(y);
         }
         // migration: receivers compute stragglers' slices (fwd direction)
@@ -619,9 +840,13 @@ impl Trainer {
         let mut dx_parts = Vec::with_capacity(e);
         let mut dg_parts = Vec::with_capacity(e);
         let mut db_parts = Vec::with_capacity(e);
+        let mi = &self.rt.manifest.model;
         for (w, (dx, dg, db, dw1, dw2, t)) in results.into_iter().enumerate() {
-            self.injector.charge(&mut self.clocks, w, t);
-            m_gemm[w] += t * self.injector.chi[w];
+            let p = &actions[w].layers[k];
+            let (k1, k2) = (p.mlp_keep1.len(), p.mlp_keep2.len());
+            let tc = self.sim_secs(t, timemodel::mlp_s(mi, k1, k2, true));
+            self.injector.charge(&mut self.clocks, w, tc);
+            m_gemm[w] += tc * self.injector.chi[w];
             dx_parts.push(dx);
             dg_parts.push(dg);
             db_parts.push(db);
@@ -709,9 +934,12 @@ impl Trainer {
         let mut dx_parts = Vec::with_capacity(e);
         let mut dg_parts = Vec::with_capacity(e);
         let mut db_parts = Vec::with_capacity(e);
+        let mi = &self.rt.manifest.model;
         for (w, (dx, dg, db, dwqkv, dwo, t)) in results.into_iter().enumerate() {
-            self.injector.charge(&mut self.clocks, w, t);
-            m_gemm[w] += t * self.injector.chi[w];
+            let keep = actions[w].layers[k].attn_keep.len();
+            let tc = self.sim_secs(t, timemodel::attn_s(mi, keep, true));
+            self.injector.charge(&mut self.clocks, w, tc);
+            m_gemm[w] += tc * self.injector.chi[w];
             dx_parts.push(dx);
             dg_parts.push(dg);
             db_parts.push(db);
@@ -874,8 +1102,10 @@ impl Trainer {
             for rw in &mig.receivers {
                 for chunk in &rw.chunks {
                     let (out, t) = results.next().expect("one result per migration job");
-                    self.injector.charge(&mut self.clocks, rw.rank, t);
-                    m_gemm[rw.rank] += t * self.injector.chi[rw.rank];
+                    let bwd = dy.is_some();
+                    let tc = self.sim_secs(t, timemodel::mig_slice_s(&m, chunk.kb, bwd));
+                    self.injector.charge(&mut self.clocks, rw.rank, tc);
+                    m_gemm[rw.rank] += tc * self.injector.chi[rw.rank];
                     match out {
                         MigOut::Fwd(y) => {
                             if merging {

@@ -1,0 +1,161 @@
+//! Property suite for the trace-driven contention engine (DESIGN.md §12).
+//!
+//! The subsystem's contract: traces are bounded (1 ≤ χ ≤ chi_max),
+//! seeded-deterministic (same seed ⇒ bitwise the same trace, different
+//! seeds decorrelate the stochastic tenants), prefix-stable (a longer
+//! trace extends a shorter one unchanged), and consistent between the
+//! one-shot `StragglerPlan::chis_at` reference path and the trainer's
+//! precomputed `ContentionTrace`.
+
+use flextp::config::StragglerPlan;
+use flextp::contention::{preset, ContentionTrace, ScenarioSpec};
+
+fn spec(dsl: &str) -> ScenarioSpec {
+    ScenarioSpec::parse(dsl).expect("valid DSL")
+}
+
+#[test]
+fn prop_chi_bounded_for_every_preset_and_seed() {
+    for name in ["calm", "burst1", "bursty", "step6", "tenant-churn", "markov-duo"] {
+        for seed in 0..8u64 {
+            let mut s = preset(name).unwrap();
+            s.seed = seed;
+            let t = ContentionTrace::generate(&s, 6, 96);
+            assert_eq!(t.len(), 96);
+            for g in 0..96 {
+                for (r, &c) in t.chis(g).iter().enumerate() {
+                    assert!(
+                        (1.0..=s.chi_max).contains(&c),
+                        "{name} seed={seed} g={g} r={r}: χ={c} out of [1, {}]",
+                        s.chi_max
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_same_seed_identical_trace() {
+    let dsl = "burst:r1@x5:iters2-20,markov:r*@x3:p0.3-0.3,pulse:r2@x2:from1:period5:on2";
+    for seed in [0u64, 7, 42, 1 << 40] {
+        let mut a = spec(dsl);
+        a.seed = seed;
+        let b = a.clone();
+        let ta = ContentionTrace::generate(&a, 5, 64);
+        let tb = ContentionTrace::generate(&b, 5, 64);
+        for g in 0..64 {
+            assert_eq!(ta.chis(g), tb.chis(g), "seed={seed} g={g}");
+        }
+    }
+}
+
+#[test]
+fn prop_different_seeds_decorrelate_stochastic_tenants() {
+    // p_on = p_off = 0.5 flips often: over 64 iterations two seeds
+    // agreeing everywhere would be a (1/2)^~64 coincidence.
+    let mut a = spec("markov:r0@x4:p0.5-0.5");
+    let mut b = a.clone();
+    a.seed = 1;
+    b.seed = 2;
+    let ta = ContentionTrace::generate(&a, 1, 64);
+    let tb = ContentionTrace::generate(&b, 1, 64);
+    let differs = (0..64).any(|g| ta.chis(g) != tb.chis(g));
+    assert!(differs, "different seeds produced identical Markov traces");
+}
+
+#[test]
+fn prop_markov_chains_are_independent_per_rank() {
+    // r* spawns one chain per rank; with symmetric 0.5 transitions the
+    // ranks' on/off patterns must not be mirror copies of each other.
+    let s = spec("markov:r*@x4:p0.5-0.5,seed:5");
+    let t = ContentionTrace::generate(&s, 4, 64);
+    let col = |r: usize| (0..64).map(|g| t.chis(g)[r]).collect::<Vec<_>>();
+    assert!(
+        (1..4).any(|r| col(0) != col(r)),
+        "all per-rank chains identical — seeds not decorrelated"
+    );
+    // and each chain actually both fires and rests over 64 steps
+    for r in 0..4 {
+        let c = col(r);
+        assert!(c.iter().any(|&v| v > 1.0), "rank {r} tenant never arrived");
+        assert!(c.iter().any(|&v| v == 1.0), "rank {r} tenant never departed");
+    }
+}
+
+#[test]
+fn prop_traces_are_prefix_stable() {
+    // The trainer generates epochs·iters rows; tests replay shorter
+    // prefixes — both must see the same history.
+    let s = spec("markov:r*@x3:p0.25-0.25,burst:r1@x4:iters3-9,seed:11");
+    let long = ContentionTrace::generate(&s, 3, 80);
+    for len in [1usize, 7, 40, 79] {
+        let short = ContentionTrace::generate(&s, 3, len);
+        for g in 0..len {
+            assert_eq!(short.chis(g), long.chis(g), "len={len} g={g}");
+        }
+    }
+}
+
+#[test]
+fn plan_chis_at_matches_realized_trace() {
+    // The StragglerPlan::chis_at reference path (replay per call) and
+    // the trainer's precomputed trace must agree row for row.
+    let sc = spec("step:r2@x3:iters4-,markov:r0@x2:p0.3-0.2,seed:13");
+    let plan = StragglerPlan::Scenario(sc.clone());
+    let trace = ContentionTrace::from_plan(&plan, 4, 3, 8);
+    for g in 0..24 {
+        assert_eq!(plan.chis_at(4, g / 8, g), trace.chis(g).to_vec(), "g={g}");
+    }
+}
+
+#[test]
+fn degenerate_plans_realize_as_epoch_constant_traces() {
+    let fixed = StragglerPlan::Fixed(vec![3.0, 1.0]);
+    let t = ContentionTrace::from_plan(&fixed, 4, 2, 5);
+    assert_eq!(t.len(), 10);
+    for g in 0..10 {
+        assert_eq!(t.chis(g), &[3.0, 1.0, 1.0, 1.0]);
+    }
+    // RoundRobin rotates at epoch boundaries, holds within an epoch
+    let rr = StragglerPlan::RoundRobin { chi: 4.0, period_epochs: 1 };
+    let t = ContentionTrace::from_plan(&rr, 3, 3, 4);
+    for g in 0..12 {
+        let mut want = vec![1.0; 3];
+        want[g / 4] = 4.0;
+        assert_eq!(t.chis(g), &want[..], "g={g}");
+    }
+    // None stays calm and out-of-range queries clamp to the last row
+    let t = ContentionTrace::from_plan(&StragglerPlan::None, 2, 1, 4);
+    assert_eq!(t.chis(400), &[1.0, 1.0]);
+}
+
+#[test]
+fn trace_stats_summarize_contention() {
+    let t = ContentionTrace::generate(&spec("burst:r0@x5:iters0-2"), 2, 4);
+    // rows: [5,1],[5,1],[1,1],[1,1] → mean = 16/8, max = 5
+    let (mean, max) = t.stats();
+    assert!((mean - 2.0).abs() < 1e-12, "mean={mean}");
+    assert_eq!(max, 5.0);
+}
+
+#[test]
+fn scenario_file_roundtrip_dsl_and_json() {
+    let dir = std::env::temp_dir().join("flextp_scenario_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let want = spec("burst:r2@x4:iters10-40,seed:7");
+
+    let dsl_path = dir.join("scn.dsl");
+    std::fs::write(&dsl_path, "burst:r2@x4:iters10-40,seed:7\n").unwrap();
+    assert_eq!(ScenarioSpec::from_file(&dsl_path).unwrap(), want);
+
+    let json_path = dir.join("scn.json");
+    std::fs::write(
+        &json_path,
+        r#"{"seed": 7, "events": [{"kind":"burst","rank":2,"chi":4,"from":10,"to":40}]}"#,
+    )
+    .unwrap();
+    assert_eq!(ScenarioSpec::from_file(&json_path).unwrap(), want);
+
+    assert!(ScenarioSpec::from_file(&dir.join("missing.dsl")).is_err());
+}

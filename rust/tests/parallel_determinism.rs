@@ -14,7 +14,8 @@
 //! accounting) is timing-independent.
 
 use flextp::balancer::WorkerAction;
-use flextp::config::RunCfg;
+use flextp::config::{ReplanMode, RunCfg, StragglerPlan, Strategy, TimeModel};
+use flextp::contention::ScenarioSpec;
 use flextp::migration;
 use flextp::resizing::LayerPlan;
 use flextp::tensor::linalg;
@@ -92,11 +93,70 @@ fn losses_eval_and_comm_bytes_bitwise_identical_1_vs_n_threads() {
 }
 
 #[test]
+fn dynamic_scenario_with_online_replans_bitwise_identical_1_vs_n_threads() {
+    // The full dynamic pipeline — bursty contention trace → modeled
+    // SimClock charges → monitor T_i/M_i → EWMA drift controller →
+    // mid-epoch SEMI replans (Eq. 2/3, migration + pruning) — is a
+    // closed deterministic system under --time-model modeled: the trace
+    // is realized on the coordinator, every charge is a pure function of
+    // shapes, and plans feed only on those charges.  So thread count
+    // must change nothing, bit for bit, even though the *plan itself*
+    // changes mid-epoch.
+    let run = |threads: usize| {
+        let mut cfg = RunCfg::new("vit-tiny");
+        cfg.train.threads = threads;
+        cfg.train.epochs = 2;
+        cfg.train.iters_per_epoch = 8;
+        cfg.train.eval_iters = 2;
+        cfg.train.time_model = TimeModel::Modeled;
+        cfg.balancer.strategy = Strategy::Semi;
+        cfg.balancer.replan = ReplanMode::Online;
+        // two stragglers at times → the Eq.(3) grouping path; λ=1 pins
+        // one migrating straggler so migration slices are exercised
+        cfg.balancer.forced_lambda = Some(1);
+        cfg.stragglers = StragglerPlan::Scenario(
+            ScenarioSpec::parse("burst:r1@x5:iters2-9,markov:r3@x2:p0.4-0.3,seed:9")
+                .expect("scenario"),
+        );
+        let mut t = Trainer::new(cfg).expect("trainer");
+        let report = t.run().expect("run");
+        let per_epoch: Vec<(f64, f64, u64, u64, f64)> = report
+            .epochs
+            .iter()
+            .map(|e| (e.eval_loss, e.acc, e.replans, e.migrated_cols + e.pruned_cols, e.rt_sim_s))
+            .collect();
+        (
+            report.loss_curve.clone(),
+            per_epoch,
+            t.comm.stats.total_bytes(),
+            t.comm.stats.allreduce_ops,
+            report.total_replans(),
+        )
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    assert!(serial.0.iter().all(|l| l.is_finite()), "diverged: {:?}", serial.0);
+    assert_eq!(serial.0, parallel.0, "losses must be bitwise identical");
+    assert_eq!(serial.1, parallel.1, "epoch metrics must be bitwise identical");
+    assert_eq!(serial.2, parallel.2, "CommStats::total_bytes must match");
+    assert_eq!(serial.3, parallel.3, "collective op counts must match");
+    assert_eq!(serial.4, parallel.4, "replan counts must match");
+    // the controller actually fired mid-epoch: more replans than the
+    // 2 epoch-boundary plans alone
+    assert!(
+        serial.4 > 2,
+        "expected drift-triggered mid-epoch replans under the bursty trace, got {}",
+        serial.4
+    );
+    // and the trace actually balanced something
+    assert!(serial.1.iter().map(|e| e.3).sum::<u64>() > 0, "no balancing engaged");
+}
+
+#[test]
 fn gamma_override_strategy_losses_identical_1_vs_n_threads() {
     // The ZERO-Rd planner path (balancer rng, pruned executables chosen
     // per iteration) is also timing-independent under --gamma: only the
     // passive T_avg refresh cadence may differ, and it feeds no decision.
-    use flextp::config::Strategy;
     let run = |threads: usize| -> Vec<f32> {
         let mut cfg = RunCfg::new("vit-tiny");
         cfg.train.threads = threads;
