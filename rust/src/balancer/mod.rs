@@ -63,10 +63,10 @@ pub struct Balancer {
     /// `trackers[w][k]`
     pub trackers: Vec<Vec<BlockTrackers>>,
     /// weight snapshots for δ computation: (wqkv, w1, w2) per (w, k)
-    snapshots: Vec<Vec<(Tensor, Tensor, Tensor)>>,
+    pub(crate) snapshots: Vec<Vec<(Tensor, Tensor, Tensor)>>,
     /// indices pruned during the current epoch, per (w, k, kind)
-    pruned_epoch: Vec<Vec<[Vec<bool>; 3]>>,
-    rng: Rng,
+    pub(crate) pruned_epoch: Vec<Vec<[Vec<bool>; 3]>>,
+    pub(crate) rng: Rng,
 }
 
 impl Balancer {

@@ -62,9 +62,19 @@ impl SweepSpec {
             "smoke" => {
                 s.epochs = 2;
                 s.iters = 10;
+                let killed = {
+                    // same step6 trace, but the job is killed after
+                    // iteration 13 (mid epoch 2) and resumed from its
+                    // checkpoint — under the modeled clock this cell
+                    // must reproduce the uninterrupted step6 cell
+                    let mut sc = contention::preset("step6")?;
+                    sc.preempt = Some(13);
+                    sc
+                };
                 s.scenarios = vec![
                     ("calm".into(), contention::preset("calm")?),
                     ("step6".into(), contention::preset("step6")?),
+                    ("step6-kill13".into(), killed),
                 ];
                 s.cells = vec![
                     (Strategy::Semi, ReplanMode::Online),
@@ -182,11 +192,8 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport> {
             cfg.train.seed = spec.seed;
             cfg.train.time_model = spec.time_model;
             cfg.stragglers = StragglerPlan::Scenario(scen.clone());
-            let mut t = Trainer::new(cfg).with_context(|| {
+            let r = run_cell(cfg, scen.preempt, label, strategy, replan).with_context(|| {
                 format!("cell {label} × {}@{}", strategy.name(), replan.name())
-            })?;
-            let r = t.run().with_context(|| {
-                format!("running {label} × {}@{}", strategy.name(), replan.name())
             })?;
             cells.push(SweepCell::from_report(label, strategy, replan, &r));
         }
@@ -198,6 +205,45 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport> {
         iters: spec.iters,
         cells,
     })
+}
+
+/// Execute one matrix cell.  A scenario with a `preempt:iterG` event
+/// runs the full kill/checkpoint/resume cycle mid-run: train to G, save
+/// an atomic snapshot, drop the trainer (the "kill"), rebuild from the
+/// snapshot, and finish — under the modeled clock the resulting report
+/// is bitwise identical to an uninterrupted cell (the parity that
+/// `tests/scenario_sweep.rs` pins).
+fn run_cell(
+    cfg: RunCfg,
+    preempt: Option<usize>,
+    label: &str,
+    strategy: Strategy,
+    replan: ReplanMode,
+) -> Result<RunReport> {
+    let Some(g) = preempt else {
+        let mut t = Trainer::new(cfg)?;
+        return t.run();
+    };
+    let mut t = Trainer::new(cfg.clone())?;
+    t.run_to(Some(g as u64))?;
+    if t.is_complete() {
+        // preemption point beyond the schedule: nothing to resume
+        return Ok(t.report.clone());
+    }
+    let dir = std::env::temp_dir().join(format!(
+        "flextp_preempt_{}_{}_{}_{}",
+        std::process::id(),
+        label.replace(|c: char| !c.is_ascii_alphanumeric(), "-"),
+        strategy.name(),
+        replan.name(),
+    ));
+    let path = dir.join(crate::checkpoint::ckpt_filename(t.giter()));
+    t.save_checkpoint(&path)?;
+    drop(t); // the kill: every live trainer structure is gone
+    let mut resumed = Trainer::resume_from(cfg, &path)?;
+    let r = resumed.run()?;
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(r)
 }
 
 impl SweepReport {
@@ -356,8 +402,13 @@ mod tests {
         }
         assert!(SweepSpec::preset("galaxy").is_err());
         let s = SweepSpec::preset("smoke").unwrap();
-        assert_eq!(s.scenarios.len(), 2);
+        assert_eq!(s.scenarios.len(), 3);
         assert_eq!(s.cells.len(), 2);
+        // the smoke matrix carries a kill/resume cell; its χ trace is
+        // the plain step6 one
+        let killed = &s.scenarios[2].1;
+        assert_eq!(killed.preempt, Some(13));
+        assert_eq!(killed.events, s.scenarios[1].1.events);
     }
 
     #[test]

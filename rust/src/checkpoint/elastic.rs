@@ -1,0 +1,254 @@
+//! Elastic re-sharding: move saved 1D-TP state between worker counts.
+//!
+//! The shard layout (DESIGN.md §2, `model` module docs) is the classic
+//! column-then-row split, so the full model is recoverable by pure
+//! concatenation and re-shardable by pure slicing — both bitwise-exact
+//! copies, no arithmetic:
+//!
+//! * `wqkv [hs, 3·hsl]` — worker w's packed q|k|v column panels; head
+//!   `h ∈ [w·hl, (w+1)·hl)` of the full `[hs, hs]` q (resp. k, v) matrix
+//!   lands at local q-columns `(h − w·hl)·hd ..`.  Because heads are
+//!   assigned to workers in contiguous blocks, worker w's q panel is
+//!   exactly full-q columns `[w·hsl, (w+1)·hsl)` — the same contiguous
+//!   range math as the cluster's migration slicing, with `E` equal parts
+//!   instead of `E−1` renumbered ones.
+//! * `wo [hsl, hs]` — row split of the full `[hs, hs]` output projection.
+//! * `w1 [hs, ffl]` / `w2 [ffl, hs]` — column / row split of the full
+//!   `[hs, 4·hs]` / `[4·hs, hs]` FFN matrices.
+//! * LayerNorm vectors and the embed/head replica are replicated; the
+//!   trainer's all-reduced-gradient invariant keeps every worker's copy
+//!   bit-identical, so worker 0's copy stands for all.
+//!
+//! Re-sharding onto `E'` requires `E' | hs` and `E' | heads` (checked by
+//! [`crate::runtime::presets::synthesize_with_e`]).  Optimizer momentum
+//! buffers are per-element and re-shard with exactly the same slicing.
+
+use crate::model::{BlockShard, ModelState, RepParams};
+use crate::runtime::manifest::ModelInfo;
+use crate::tensor::Tensor;
+
+/// One transformer block's unsharded weights.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FullBlock {
+    pub ln1_g: Tensor,
+    pub ln1_b: Tensor,
+    /// `[hs, 3·hs]`, q|k|v column sections
+    pub wqkv: Tensor,
+    /// `[hs, hs]`
+    pub wo: Tensor,
+    pub ln2_g: Tensor,
+    pub ln2_b: Tensor,
+    /// `[hs, 4·hs]`
+    pub w1: Tensor,
+    /// `[4·hs, hs]`
+    pub w2: Tensor,
+}
+
+/// The whole model with tensor parallelism undone.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FullModel {
+    pub blocks: Vec<FullBlock>,
+    pub rep: RepParams,
+}
+
+/// Copy `src[:, 0..w]` into `dst[:, at..at+w]` (row-major, same row count).
+fn put_cols(dst: &mut Tensor, at: usize, src: &Tensor) {
+    let (rows, dc) = dst.as_2d();
+    let (srows, sc) = src.as_2d();
+    assert_eq!(rows, srows, "column-panel row mismatch");
+    assert!(at + sc <= dc, "column panel out of range");
+    for r in 0..rows {
+        dst.data[r * dc + at..r * dc + at + sc]
+            .copy_from_slice(&src.data[r * sc..(r + 1) * sc]);
+    }
+}
+
+/// Extract `src[:, at..at+w]` as a fresh `[rows, w]` tensor.
+fn get_cols(src: &Tensor, at: usize, w: usize) -> Tensor {
+    let (rows, sc) = src.as_2d();
+    assert!(at + w <= sc, "column slice out of range");
+    let mut data = Vec::with_capacity(rows * w);
+    for r in 0..rows {
+        data.extend_from_slice(&src.data[r * sc + at..r * sc + at + w]);
+    }
+    Tensor::from_vec(&[rows, w], data)
+}
+
+/// Copy `src` (shape `[h, cols]`) into `dst[at..at+h, :]`.
+fn put_rows(dst: &mut Tensor, at: usize, src: &Tensor) {
+    let (dr, dc) = dst.as_2d();
+    let (sr, sc) = src.as_2d();
+    assert_eq!(dc, sc, "row-panel column mismatch");
+    assert!(at + sr <= dr, "row panel out of range");
+    dst.data[at * dc..(at + sr) * dc].copy_from_slice(&src.data);
+}
+
+/// Extract `src[at..at+h, :]` as a fresh `[h, cols]` tensor.
+fn get_rows(src: &Tensor, at: usize, h: usize) -> Tensor {
+    let (sr, sc) = src.as_2d();
+    assert!(at + h <= sr, "row slice out of range");
+    Tensor::from_vec(&[h, sc], src.data[at * sc..(at + h) * sc].to_vec())
+}
+
+/// Undo the 1D-TP split: concatenate every worker's shards into the full
+/// per-block matrices.  Pure copies — bitwise-exact.
+pub fn gather_full(m: &ModelInfo, state: &ModelState) -> FullModel {
+    let (hs, hsl, ffl) = (m.hs, m.hsl, m.ffl);
+    let mut blocks = Vec::with_capacity(m.depth);
+    for k in 0..m.depth {
+        let b0 = &state.shards[0][k];
+        let mut wqkv = Tensor::zeros(&[hs, 3 * hs]);
+        let mut wo = Tensor::zeros(&[hs, hs]);
+        let mut w1 = Tensor::zeros(&[hs, m.e * ffl]);
+        let mut w2 = Tensor::zeros(&[m.e * ffl, hs]);
+        for w in 0..m.e {
+            let b = &state.shards[w][k];
+            // local q|k|v sections map to the full q|k|v sections at the
+            // worker's contiguous head-column range
+            for sec in 0..3 {
+                let local = get_cols(&b.wqkv, sec * hsl, hsl);
+                put_cols(&mut wqkv, sec * hs + w * hsl, &local);
+            }
+            put_rows(&mut wo, w * hsl, &b.wo);
+            put_cols(&mut w1, w * ffl, &b.w1);
+            put_rows(&mut w2, w * ffl, &b.w2);
+        }
+        blocks.push(FullBlock {
+            ln1_g: b0.ln1_g.clone(),
+            ln1_b: b0.ln1_b.clone(),
+            wqkv,
+            wo,
+            ln2_g: b0.ln2_g.clone(),
+            ln2_b: b0.ln2_b.clone(),
+            w1,
+            w2,
+        });
+    }
+    FullModel { blocks, rep: state.rep.clone() }
+}
+
+/// Re-apply the 1D-TP split for a (possibly different) worker count.
+/// `m2` must describe the same model geometry (`hs`, `depth`) with its
+/// own `e`-derived shard widths.  Pure copies — bitwise-exact, and an
+/// exact inverse of [`gather_full`] for any valid `e`.
+pub fn shard_full(m2: &ModelInfo, full: &FullModel) -> ModelState {
+    let (hs, hsl, ffl) = (m2.hs, m2.hsl, m2.ffl);
+    let mut shards = Vec::with_capacity(m2.e);
+    for w in 0..m2.e {
+        let mut blocks = Vec::with_capacity(m2.depth);
+        for fb in &full.blocks {
+            let mut wqkv = Tensor::zeros(&[hs, 3 * hsl]);
+            for sec in 0..3 {
+                let panel = get_cols(&fb.wqkv, sec * hs + w * hsl, hsl);
+                put_cols(&mut wqkv, sec * hsl, &panel);
+            }
+            blocks.push(BlockShard {
+                ln1_g: fb.ln1_g.clone(),
+                ln1_b: fb.ln1_b.clone(),
+                wqkv,
+                wo: get_rows(&fb.wo, w * hsl, hsl),
+                ln2_g: fb.ln2_g.clone(),
+                ln2_b: fb.ln2_b.clone(),
+                w1: get_cols(&fb.w1, w * ffl, ffl),
+                w2: get_rows(&fb.w2, w * ffl, ffl),
+            });
+        }
+        shards.push(blocks);
+    }
+    ModelState { shards, rep: full.rep.clone() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// hs=32, heads=8 (hd=4) so e ∈ {1, 2, 4, 8} are all valid.
+    fn info(e: usize) -> ModelInfo {
+        assert_eq!(32 % e, 0);
+        assert_eq!(8 % e, 0);
+        ModelInfo {
+            name: "t".into(),
+            hs: 32,
+            depth: 2,
+            heads: 8,
+            e,
+            bs: 2,
+            classes: 10,
+            seq: 17,
+            seq0: 16,
+            pd: 48,
+            hsl: 32 / e,
+            hl: 8 / e,
+            hd: 4,
+            ffl: 4 * 32 / e,
+            params_total: 0,
+            params_per_worker: 0,
+        }
+    }
+
+    #[test]
+    fn gather_shard_roundtrips_same_e() {
+        let m = info(4);
+        let s = ModelState::init(&m, 3);
+        let full = gather_full(&m, &s);
+        let back = shard_full(&m, &full);
+        for w in 0..4 {
+            for k in 0..2 {
+                for n in BlockShard::names() {
+                    assert_eq!(
+                        s.shards[w][k].get(n).data,
+                        back.shards[w][k].get(n).data,
+                        "w={w} k={k} {n}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reshard_preserves_full_model_exactly() {
+        // 4 → 2 → 8 → 4: the full model must be bitwise stable across
+        // arbitrary re-partitions (the elastic-resume exactness claim).
+        let m4 = info(4);
+        let s4 = ModelState::init(&m4, 7);
+        let full = gather_full(&m4, &s4);
+        let s2 = shard_full(&info(2), &full);
+        let full2 = gather_full(&info(2), &s2);
+        assert_eq!(full, full2, "4→2 changed the full model");
+        let s8 = shard_full(&info(8), &full2);
+        let full8 = gather_full(&info(8), &s8);
+        assert_eq!(full, full8, "2→8 changed the full model");
+        let s4b = shard_full(&m4, &full8);
+        assert_eq!(
+            gather_full(&m4, &s4b),
+            full,
+            "8→4 changed the full model"
+        );
+    }
+
+    #[test]
+    fn qkv_head_panels_land_in_head_order() {
+        // Fill worker shards with values encoding (section, global col)
+        // and verify the gathered q|k|v sections are column-ordered.
+        let m = info(2);
+        let mut s = ModelState::init(&m, 1);
+        for w in 0..2 {
+            for (sec, base) in [(0usize, 0.0f32), (1, 1000.0), (2, 2000.0)] {
+                for r in 0..m.hs {
+                    for c in 0..m.hsl {
+                        let global = (w * m.hsl + c) as f32;
+                        s.shards[w][0].wqkv.data[r * 3 * m.hsl + sec * m.hsl + c] =
+                            base + global + r as f32 * 0.001;
+                    }
+                }
+            }
+        }
+        let full = gather_full(&m, &s);
+        for (sec, base) in [(0usize, 0.0f32), (1, 1000.0), (2, 2000.0)] {
+            for c in 0..m.hs {
+                let v = full.blocks[0].wqkv.data[sec * m.hs + c];
+                assert_eq!(v, base + c as f32, "sec={sec} col={c}");
+            }
+        }
+    }
+}

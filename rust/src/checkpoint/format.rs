@@ -1,0 +1,530 @@
+//! The `.flexckpt` snapshot container (DESIGN.md §13).
+//!
+//! A checkpoint is one self-describing file:
+//!
+//! ```text
+//! bytes 0..8    magic  b"FLEXTPCK"
+//! bytes 8..12   u32 LE format version (readers reject newer versions)
+//! bytes 12..20  u64 LE FNV-1a checksum of every byte after this field
+//! bytes 20..24  u32 LE header length H
+//! bytes 24..24+H JSON header: {"meta": {...}, "entries": [...]}
+//! then          raw little-endian array payload ("the blob")
+//! ```
+//!
+//! The JSON `meta` object carries every scalar of trainer state (clock
+//! vectors, cursors, EWMA statistics, cached plans) — f64 values survive
+//! the trip bitwise because Rust's shortest-roundtrip float formatting is
+//! exact.  Bulk arrays (model shards, optimizer moments, tracker
+//! statistics) live in the blob as typed [`Payload`] entries, each
+//! declared in the header's `entries` table (name, dtype, byte offset,
+//! element count).
+//!
+//! # Integrity contract
+//!
+//! Loading never panics and never partially succeeds: every failure mode
+//! maps to a typed [`CkptError`] — wrong magic, newer version, truncation
+//! at any byte, checksum mismatch (any bit flip after the checksum
+//! field), or malformed header/entry tables.  Writing is atomic: the file
+//! is assembled in memory, written to a `.tmp` sibling, fsynced, and
+//! renamed into place, so a crash mid-save leaves either the old
+//! checkpoint or a `.tmp` orphan that [`latest_in_dir`] ignores — never a
+//! torn `.flexckpt`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{obj, Json};
+
+/// File magic: identifies a flextp checkpoint regardless of extension.
+pub const MAGIC: [u8; 8] = *b"FLEXTPCK";
+
+/// Current container format version.  Readers accept `<= VERSION` and
+/// reject newer files with [`CkptError::UnsupportedVersion`]; adding
+/// fields to `meta` or new entry names is backward-compatible and does
+/// NOT bump this (absent state restores to defaults where documented).
+pub const VERSION: u32 = 1;
+
+/// Canonical checkpoint file extension.
+pub const EXT: &str = "flexckpt";
+
+/// Typed checkpoint failure — the load path's full error surface.
+/// Implements `std::error::Error`, so `?` converts into `anyhow::Error`
+/// at call sites while tests can still match exact variants.
+#[derive(Debug)]
+pub enum CkptError {
+    /// Underlying filesystem failure (open/read/write/rename).
+    Io(std::io::Error),
+    /// The first 8 bytes are not `FLEXTPCK` — not a checkpoint at all.
+    BadMagic,
+    /// Written by a newer flextp than this reader understands.
+    UnsupportedVersion { found: u32, supported: u32 },
+    /// File ends before a declared structure does (torn/partial file).
+    Truncated { need: usize, have: usize },
+    /// The stored FNV-1a digest does not match the bytes (bit rot,
+    /// manual edits, or a corrupted transfer).
+    ChecksumMismatch { stored: u64, computed: u64 },
+    /// Structurally invalid header or entry table (bad JSON, unknown
+    /// dtype, out-of-range offsets, missing/mistyped entries).
+    Malformed(String),
+    /// The snapshot is valid but does not fit the run it is being
+    /// restored into (model/config fingerprint mismatch).
+    Incompatible(String),
+}
+
+impl fmt::Display for CkptError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CkptError::Io(e) => write!(f, "checkpoint I/O error: {e}"),
+            CkptError::BadMagic => write!(f, "not a flextp checkpoint (bad magic)"),
+            CkptError::UnsupportedVersion { found, supported } => write!(
+                f,
+                "checkpoint format v{found} is newer than supported v{supported}"
+            ),
+            CkptError::Truncated { need, have } => write!(
+                f,
+                "checkpoint truncated: need {need} bytes, have {have}"
+            ),
+            CkptError::ChecksumMismatch { stored, computed } => write!(
+                f,
+                "checkpoint checksum mismatch (stored {stored:#018x}, \
+                 computed {computed:#018x}) — file is corrupt"
+            ),
+            CkptError::Malformed(m) => write!(f, "malformed checkpoint: {m}"),
+            CkptError::Incompatible(m) => write!(f, "incompatible checkpoint: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for CkptError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CkptError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CkptError {
+    fn from(e: std::io::Error) -> CkptError {
+        CkptError::Io(e)
+    }
+}
+
+/// One typed blob array.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    U32(Vec<u32>),
+    U8(Vec<u8>),
+}
+
+impl Payload {
+    fn dtype(&self) -> &'static str {
+        match self {
+            Payload::F32(_) => "f32",
+            Payload::F64(_) => "f64",
+            Payload::U32(_) => "u32",
+            Payload::U8(_) => "u8",
+        }
+    }
+
+    fn count(&self) -> usize {
+        match self {
+            Payload::F32(v) => v.len(),
+            Payload::F64(v) => v.len(),
+            Payload::U32(v) => v.len(),
+            Payload::U8(v) => v.len(),
+        }
+    }
+
+    fn elem_bytes(dtype: &str) -> Option<usize> {
+        match dtype {
+            "f32" | "u32" => Some(4),
+            "f64" => Some(8),
+            "u8" => Some(1),
+            _ => None,
+        }
+    }
+
+    fn write_to(&self, out: &mut Vec<u8>) {
+        match self {
+            Payload::F32(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Payload::F64(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Payload::U32(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Payload::U8(v) => out.extend_from_slice(v),
+        }
+    }
+
+    fn read(dtype: &str, bytes: &[u8]) -> Result<Payload, CkptError> {
+        Ok(match dtype {
+            "f32" => Payload::F32(
+                bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect(),
+            ),
+            "u32" => Payload::U32(
+                bytes.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect(),
+            ),
+            "f64" => Payload::F64(
+                bytes
+                    .chunks_exact(8)
+                    .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+                    .collect(),
+            ),
+            "u8" => Payload::U8(bytes.to_vec()),
+            d => return Err(CkptError::Malformed(format!("unknown entry dtype '{d}'"))),
+        })
+    }
+}
+
+/// FNV-1a 64-bit digest — deterministic, dependency-free corruption
+/// detection (not cryptographic; the threat model is bit rot and torn
+/// writes, not adversaries).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// An in-memory checkpoint: JSON `meta` + named typed arrays.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub meta: Json,
+    entries: BTreeMap<String, Payload>,
+}
+
+impl Snapshot {
+    pub fn new(meta: Json) -> Snapshot {
+        Snapshot { meta, entries: BTreeMap::new() }
+    }
+
+    // ---- entry accessors --------------------------------------------------
+
+    pub fn put(&mut self, name: &str, p: Payload) {
+        self.entries.insert(name.to_string(), p);
+    }
+
+    pub fn put_f32(&mut self, name: &str, v: Vec<f32>) {
+        self.put(name, Payload::F32(v));
+    }
+
+    pub fn put_u8(&mut self, name: &str, v: Vec<u8>) {
+        self.put(name, Payload::U8(v));
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
+    pub fn entry_names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    pub fn f32(&self, name: &str) -> Result<&[f32], CkptError> {
+        match self.entries.get(name) {
+            Some(Payload::F32(v)) => Ok(v),
+            Some(p) => Err(CkptError::Malformed(format!(
+                "entry '{name}' is {}, expected f32",
+                p.dtype()
+            ))),
+            None => Err(CkptError::Malformed(format!("missing entry '{name}'"))),
+        }
+    }
+
+    pub fn u8(&self, name: &str) -> Result<&[u8], CkptError> {
+        match self.entries.get(name) {
+            Some(Payload::U8(v)) => Ok(v),
+            Some(p) => Err(CkptError::Malformed(format!(
+                "entry '{name}' is {}, expected u8",
+                p.dtype()
+            ))),
+            None => Err(CkptError::Malformed(format!("missing entry '{name}'"))),
+        }
+    }
+
+    pub fn opt_f32(&self, name: &str) -> Option<&[f32]> {
+        match self.entries.get(name) {
+            Some(Payload::F32(v)) => Some(v),
+            _ => None,
+        }
+    }
+
+    // ---- wire format ------------------------------------------------------
+
+    /// Serialize to the on-disk byte layout (header + checksum + blob).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut specs = Vec::new();
+        let mut blob: Vec<u8> = Vec::new();
+        for (name, p) in &self.entries {
+            specs.push(obj([
+                ("name", name.as_str().into()),
+                ("dtype", p.dtype().into()),
+                ("offset", blob.len().into()),
+                ("count", p.count().into()),
+            ]));
+            p.write_to(&mut blob);
+        }
+        let header = obj([
+            ("meta", self.meta.clone()),
+            ("entries", Json::Arr(specs)),
+        ])
+        .to_string();
+
+        // checksum covers header_len + header + blob (everything after
+        // the checksum field itself)
+        let mut body = Vec::with_capacity(4 + header.len() + blob.len());
+        body.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        body.extend_from_slice(header.as_bytes());
+        body.extend_from_slice(&blob);
+        let sum = fnv1a64(&body);
+
+        let mut out = Vec::with_capacity(20 + body.len());
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&sum.to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Parse the on-disk byte layout.  Every malformation maps to a typed
+    /// [`CkptError`]; no input can panic this function or yield a
+    /// partially-populated snapshot.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Snapshot, CkptError> {
+        let need = |n: usize| -> Result<(), CkptError> {
+            if bytes.len() < n {
+                Err(CkptError::Truncated { need: n, have: bytes.len() })
+            } else {
+                Ok(())
+            }
+        };
+        need(8)?;
+        if bytes[0..8] != MAGIC {
+            return Err(CkptError::BadMagic);
+        }
+        need(12)?;
+        let version = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]);
+        if version > VERSION || version == 0 {
+            return Err(CkptError::UnsupportedVersion { found: version, supported: VERSION });
+        }
+        need(20)?;
+        let stored = u64::from_le_bytes([
+            bytes[12], bytes[13], bytes[14], bytes[15], bytes[16], bytes[17], bytes[18], bytes[19],
+        ]);
+        let computed = fnv1a64(&bytes[20..]);
+        if stored != computed {
+            return Err(CkptError::ChecksumMismatch { stored, computed });
+        }
+        need(24)?;
+        let hlen = u32::from_le_bytes([bytes[20], bytes[21], bytes[22], bytes[23]]) as usize;
+        let hend = 24usize
+            .checked_add(hlen)
+            .ok_or_else(|| CkptError::Malformed("header length overflows".to_string()))?;
+        need(hend)?;
+        let htext = std::str::from_utf8(&bytes[24..hend])
+            .map_err(|e| CkptError::Malformed(format!("header not UTF-8: {e}")))?;
+        let header = Json::parse(htext)
+            .map_err(|e| CkptError::Malformed(format!("header JSON: {e}")))?;
+        let meta = header
+            .get("meta")
+            .map_err(|e| CkptError::Malformed(format!("{e}")))?
+            .clone();
+        let blob = &bytes[hend..];
+        let mut entries = BTreeMap::new();
+        let specs = header
+            .get("entries")
+            .and_then(|e| e.arr().map(<[Json]>::to_vec))
+            .map_err(|e| CkptError::Malformed(format!("entry table: {e}")))?;
+        for s in &specs {
+            let bad = |what: &str| CkptError::Malformed(format!("entry table: {what}"));
+            let name = s
+                .get("name")
+                .and_then(|v| v.str().map(str::to_string))
+                .map_err(|_| bad("missing name"))?;
+            let dtype = s
+                .get("dtype")
+                .and_then(|v| v.str().map(str::to_string))
+                .map_err(|_| bad("missing dtype"))?;
+            let offset = s.get("offset").and_then(|v| v.usize()).map_err(|_| bad("bad offset"))?;
+            let count = s.get("count").and_then(|v| v.usize()).map_err(|_| bad("bad count"))?;
+            let esz = Payload::elem_bytes(&dtype)
+                .ok_or_else(|| CkptError::Malformed(format!("unknown dtype '{dtype}'")))?;
+            let nbytes = count
+                .checked_mul(esz)
+                .ok_or_else(|| bad("entry size overflows"))?;
+            let end = offset.checked_add(nbytes).ok_or_else(|| bad("entry range overflows"))?;
+            let slice = blob.get(offset..end).ok_or(CkptError::Truncated {
+                need: hend.saturating_add(end),
+                have: bytes.len(),
+            })?;
+            entries.insert(name, Payload::read(&dtype, slice)?);
+        }
+        Ok(Snapshot { meta, entries })
+    }
+
+    /// Atomic save: serialize, write to `<path>.tmp`, fsync, rename.
+    /// A crash at any point leaves either the previous file or an
+    /// ignorable `.tmp` orphan — never a torn checkpoint.
+    pub fn save_atomic(&self, path: &Path) -> Result<(), CkptError> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut tmp = path.as_os_str().to_os_string();
+        tmp.push(".tmp");
+        let tmp = PathBuf::from(tmp);
+        let bytes = self.to_bytes();
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Snapshot, CkptError> {
+        let bytes = std::fs::read(path)?;
+        Self::from_bytes(&bytes)
+    }
+}
+
+/// The newest complete checkpoint in a directory: highest-numbered
+/// `ckpt-<giter>.flexckpt`.  `.tmp` orphans from interrupted saves and
+/// unrelated files are ignored.  `None` when the directory is missing or
+/// holds no checkpoints.
+pub fn latest_in_dir(dir: &Path) -> Option<PathBuf> {
+    let mut best: Option<(u64, PathBuf)> = None;
+    for entry in std::fs::read_dir(dir).ok()?.flatten() {
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let Some(rest) = name.strip_prefix("ckpt-") else { continue };
+        let Some(num) = rest.strip_suffix(&format!(".{EXT}")) else { continue };
+        let Ok(g) = num.parse::<u64>() else { continue };
+        if best.as_ref().is_none_or(|(b, _)| g > *b) {
+            best = Some((g, path));
+        }
+    }
+    best.map(|(_, p)| p)
+}
+
+/// Canonical checkpoint filename for a global-iteration cursor.
+pub fn ckpt_filename(giter: u64) -> String {
+    format!("ckpt-{giter:08}.{EXT}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Snapshot {
+        let mut s = Snapshot::new(obj([
+            ("hello", "world".into()),
+            ("x", 4.25f64.into()),
+        ]));
+        s.put_f32("a", vec![1.0, -2.5, 3.25]);
+        s.put("b", Payload::F64(vec![1e-300, 2.0]));
+        s.put("c", Payload::U32(vec![7, 8, 9]));
+        s.put_u8("d", vec![0, 1, 1, 0]);
+        s
+    }
+
+    #[test]
+    fn roundtrip_preserves_meta_and_entries() {
+        let s = sample();
+        let r = Snapshot::from_bytes(&s.to_bytes()).unwrap();
+        assert_eq!(r.meta, s.meta);
+        assert_eq!(r.f32("a").unwrap(), &[1.0, -2.5, 3.25]);
+        assert_eq!(r.u8("d").unwrap(), &[0, 1, 1, 0]);
+        assert!(r.has("b") && r.has("c"));
+        assert!(r.f32("missing").is_err());
+        assert!(r.u8("a").is_err(), "dtype mismatch must be typed");
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_typed() {
+        let mut b = sample().to_bytes();
+        b[0] = b'X';
+        assert!(matches!(Snapshot::from_bytes(&b), Err(CkptError::BadMagic)));
+        let mut b = sample().to_bytes();
+        b[8] = 99; // version 99
+        assert!(matches!(
+            Snapshot::from_bytes(&b),
+            Err(CkptError::UnsupportedVersion { found: 99, .. })
+        ));
+    }
+
+    #[test]
+    fn every_truncation_point_is_rejected() {
+        let b = sample().to_bytes();
+        for len in 0..b.len() {
+            let e = Snapshot::from_bytes(&b[..len]).unwrap_err();
+            assert!(
+                matches!(
+                    e,
+                    CkptError::Truncated { .. }
+                        | CkptError::BadMagic
+                        | CkptError::ChecksumMismatch { .. }
+                        | CkptError::Malformed(_)
+                ),
+                "len={len}: unexpected {e:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn every_bit_flip_after_checksum_is_caught() {
+        let b = sample().to_bytes();
+        // flip one bit in a spread of positions across header and blob
+        for pos in (20..b.len()).step_by(7) {
+            let mut c = b.clone();
+            c[pos] ^= 0x10;
+            assert!(
+                matches!(Snapshot::from_bytes(&c), Err(CkptError::ChecksumMismatch { .. })),
+                "flip at {pos} not caught"
+            );
+        }
+    }
+
+    #[test]
+    fn atomic_save_load_and_latest() {
+        let dir = std::env::temp_dir().join("flextp_ckpt_fmt_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let s = sample();
+        for g in [5u64, 10, 2] {
+            s.save_atomic(&dir.join(ckpt_filename(g))).unwrap();
+        }
+        // a torn .tmp orphan and an unrelated file must be ignored
+        std::fs::write(dir.join("ckpt-00000099.flexckpt.tmp"), b"torn").unwrap();
+        std::fs::write(dir.join("notes.txt"), b"hi").unwrap();
+        let latest = latest_in_dir(&dir).unwrap();
+        assert!(latest.ends_with(ckpt_filename(10)));
+        let r = Snapshot::load(&latest).unwrap();
+        assert_eq!(r.f32("a").unwrap(), s.f32("a").unwrap());
+        assert!(latest_in_dir(&dir.join("missing")).is_none());
+    }
+
+    #[test]
+    fn fnv_vectors() {
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+    }
+}

@@ -1,0 +1,1045 @@
+//! Checkpoint / elastic-resume subsystem (DESIGN.md §13).
+//!
+//! [`save_trainer`] snapshots the **complete** training state into a
+//! versioned, self-describing [`Snapshot`] (`format` module); the
+//! captured pieces are exactly what bitwise same-`E` continuation needs:
+//!
+//! * model shards + replicated params, optimizer momentum buffers;
+//! * cursors: the global iteration (which is simultaneously the data
+//!   stream position and the contention-trace position — both are pure
+//!   functions of it) and the balancer's RNG stream state;
+//! * the straggler monitor (T_i/M_i, passive T_avg cache), the online
+//!   controller's fast/slow EWMAs + hysteresis/cooldown, the standing
+//!   pretest cost fits (EWMA-blended by mid-run refits);
+//! * the cached balancing plan (`--replan epoch|online` keep a plan
+//!   alive across iterations — a mid-epoch resume must reuse it, not
+//!   recompute and re-charge Ω₁);
+//! * SimClock vectors, `CommStats` byte/op counters, the epoch-in-
+//!   progress accumulators, and the run report so far;
+//! * balancer priority statistics (trackers, weight snapshots, pruned
+//!   marks) and, under `--imputation same`, the previous-iteration
+//!   gradients.
+//!
+//! [`restore_trainer`] validates a config **fingerprint** (everything
+//! that feeds the math: seed, schedule shape, strategy, costs, scenario
+//! — but not `--threads`, which is bitwise-invariant by the PR-2
+//! contract, and not `--epochs`, so a run may be extended) and then
+//! either restores in place (same worker count → bitwise) or routes
+//! through [`elastic`] re-sharding (different `--e` → parameters and
+//! moments move exactly; rank-shaped transient state re-initializes and
+//! the Eq. 2/3 allocation re-runs before the first resumed iteration).
+
+pub mod elastic;
+pub mod format;
+
+pub use format::{ckpt_filename, latest_in_dir, CkptError, Payload, Snapshot, EXT};
+
+use crate::balancer::WorkerAction;
+use crate::config::{RunCfg, StragglerPlan};
+use crate::metrics::{EpochMetrics, IterSample, RunReport};
+use crate::migration::{Chunk, MigPlan, ReceiverWork};
+use crate::model::{BlockShard, ModelState, RepParams};
+use crate::resizing::LayerPlan;
+use crate::runtime::manifest::ModelInfo;
+use crate::tensor::Tensor;
+use crate::train::trainer::Trainer;
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+
+/// Snapshot kind tag (`meta.kind`) — guards against feeding some other
+/// valid container (e.g. a future sweep snapshot) into the trainer.
+const KIND: &str = "flextp-trainer";
+
+// ---------------------------------------------------------------------------
+// JSON helpers (u64s travel as decimal strings — Json numbers are f64)
+// ---------------------------------------------------------------------------
+
+fn ju64(v: u64) -> Json {
+    Json::Str(v.to_string())
+}
+
+fn jf64s(v: &[f64]) -> Json {
+    v.iter().copied().collect()
+}
+
+fn ju32s(v: &[u32]) -> Json {
+    v.iter().map(|&x| x as usize).collect()
+}
+
+fn bad(msg: impl std::fmt::Display) -> CkptError {
+    CkptError::Malformed(msg.to_string())
+}
+
+fn jget<'a>(j: &'a Json, key: &str) -> Result<&'a Json, CkptError> {
+    j.get(key).map_err(bad)
+}
+
+fn pstr<'a>(j: &'a Json, key: &str) -> Result<&'a str, CkptError> {
+    jget(j, key)?.str().map_err(bad)
+}
+
+fn pf64(j: &Json, key: &str) -> Result<f64, CkptError> {
+    jget(j, key)?.num().map_err(bad)
+}
+
+fn pusize(j: &Json, key: &str) -> Result<usize, CkptError> {
+    jget(j, key)?.usize().map_err(bad)
+}
+
+fn pbool(j: &Json, key: &str) -> Result<bool, CkptError> {
+    match jget(j, key)? {
+        Json::Bool(b) => Ok(*b),
+        other => Err(bad(format!("'{key}' is not a bool: {other:?}"))),
+    }
+}
+
+/// Accept a u64 stored either as a decimal string (the writer's form)
+/// or a non-negative integral number — the single place the rule lives.
+fn u64_from(v: &Json, what: &str) -> Result<u64, CkptError> {
+    match v {
+        Json::Str(s) => s.parse().map_err(|e| bad(format!("{what}: {e}"))),
+        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Ok(*n as u64),
+        other => Err(bad(format!("{what} is not a u64: {other:?}"))),
+    }
+}
+
+fn pu64(j: &Json, key: &str) -> Result<u64, CkptError> {
+    u64_from(jget(j, key)?, key)
+}
+
+fn pf64s(j: &Json, key: &str) -> Result<Vec<f64>, CkptError> {
+    jget(j, key)?
+        .arr()
+        .map_err(bad)?
+        .iter()
+        .map(|v| v.num().map_err(bad))
+        .collect()
+}
+
+fn pu32s(j: &Json, key: &str) -> Result<Vec<u32>, CkptError> {
+    jget(j, key)?
+        .arr()
+        .map_err(bad)?
+        .iter()
+        .map(|v| v.usize().map_err(bad).map(|x| x as u32))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Config fingerprint
+// ---------------------------------------------------------------------------
+
+/// One line describing the straggler plan, stable across save/load (the
+/// scenario form round-trips through `ScenarioSpec::describe`).  This is
+/// the persisted **trace cursor contract**: plan descriptor + global
+/// iteration fully determine the χ row (traces are prefix-stable), so
+/// serializing the cursor alone is exact.
+pub fn plan_desc(p: &StragglerPlan) -> String {
+    match p {
+        StragglerPlan::None => "none".to_string(),
+        StragglerPlan::Fixed(v) => format!("chis:{v:?}"),
+        StragglerPlan::RoundRobin { chi, period_epochs } => format!("rr:{chi}@{period_epochs}"),
+        StragglerPlan::Scenario(s) => format!("scenario:{}", s.describe()),
+    }
+}
+
+/// Everything that feeds the training math, in one comparable string.
+/// Excluded on purpose: `--threads` (bitwise-invariant), `--epochs`
+/// (runs may be extended), wall-only knobs (`--emulate-wall`,
+/// `--timeline`), and checkpoint plumbing itself.
+pub fn cfg_fingerprint(cfg: &RunCfg) -> String {
+    let b = &cfg.balancer;
+    let t = &cfg.train;
+    let c = &cfg.control;
+    format!(
+        "model={};seed={};ipe={};eval={};batches={};lr={};mom={};\
+         strategy={};imp={:?};migpol={:?};theta={};alpha={};gamma={:?};\
+         lambda={:?};merge={};replan={};time={};net={},{};\
+         ctl={},{},{},{},{};plan={}",
+        cfg.model,
+        t.seed,
+        t.iters_per_epoch,
+        t.eval_iters,
+        t.train_batches,
+        t.lr,
+        t.momentum,
+        b.strategy.name(),
+        b.imputation,
+        b.mig_policy,
+        b.theta_iter,
+        b.alpha,
+        b.gamma_override,
+        b.forced_lambda,
+        b.reduce_merging,
+        b.replan.name(),
+        t.time_model.name(),
+        cfg.net.alpha_s,
+        cfg.net.bytes_per_s,
+        c.alpha_fast,
+        c.alpha_slow,
+        c.hi,
+        c.lo,
+        c.cooldown,
+        plan_desc(&cfg.stragglers),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Shape tables
+// ---------------------------------------------------------------------------
+
+fn shard_dims(m: &ModelInfo, name: &str) -> Vec<usize> {
+    match name {
+        "ln1_g" | "ln1_b" | "ln2_g" | "ln2_b" => vec![m.hs],
+        "wqkv" => vec![m.hs, 3 * m.hsl],
+        "wo" => vec![m.hsl, m.hs],
+        "w1" => vec![m.hs, m.ffl],
+        "w2" => vec![m.ffl, m.hs],
+        other => unreachable!("unknown shard tensor '{other}'"),
+    }
+}
+
+fn rep_dims(m: &ModelInfo, name: &str) -> Vec<usize> {
+    match name {
+        "w_patch" => vec![m.pd, m.hs],
+        "pos" => vec![m.seq, m.hs],
+        "cls" => vec![m.hs],
+        "lnf_g" | "lnf_b" => vec![m.hs],
+        "w_head" => vec![m.hs, m.classes],
+        "b_head" => vec![m.classes],
+        other => unreachable!("unknown rep tensor '{other}'"),
+    }
+}
+
+fn zero_state(m: &ModelInfo) -> ModelState {
+    ModelState {
+        shards: (0..m.e)
+            .map(|_| (0..m.depth).map(|_| crate::model::zero_block_grads(m)).collect())
+            .collect(),
+        rep: RepParams {
+            w_patch: Tensor::zeros(&rep_dims(m, "w_patch")),
+            pos: Tensor::zeros(&rep_dims(m, "pos")),
+            cls: Tensor::zeros(&rep_dims(m, "cls")),
+            lnf_g: Tensor::zeros(&rep_dims(m, "lnf_g")),
+            lnf_b: Tensor::zeros(&rep_dims(m, "lnf_b")),
+            w_head: Tensor::zeros(&rep_dims(m, "w_head")),
+            b_head: Tensor::zeros(&rep_dims(m, "b_head")),
+        },
+    }
+}
+
+/// Read entry `name` into `dst.data` (length-checked, bitwise copy).
+fn copy_into(snap: &Snapshot, name: &str, dst: &mut Tensor) -> Result<(), CkptError> {
+    let src = snap.f32(name)?;
+    if src.len() != dst.len() {
+        return Err(bad(format!(
+            "entry '{name}' has {} elements, expected {}",
+            src.len(),
+            dst.len()
+        )));
+    }
+    dst.data.copy_from_slice(src);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// WorkerAction <-> JSON
+// ---------------------------------------------------------------------------
+
+fn action_to_json(a: &WorkerAction) -> Json {
+    let layers: Vec<Json> = a
+        .layers
+        .iter()
+        .map(|p| {
+            obj([
+                ("ab", p.attn_bucket.as_str().into()),
+                ("b1", p.mlp_b1.as_str().into()),
+                ("b2", p.mlp_b2.as_str().into()),
+                ("ak", ju32s(&p.attn_keep)),
+                ("k1", ju32s(&p.mlp_keep1)),
+                ("k2", ju32s(&p.mlp_keep2)),
+            ])
+        })
+        .collect();
+    let mig = match &a.mig {
+        None => Json::Null,
+        Some(m) => obj([
+            ("straggler", m.straggler.into()),
+            ("migrated", ju32s(&m.migrated)),
+            ("kept", ju32s(&m.kept)),
+            ("kept_bucket", m.kept_bucket.as_str().into()),
+            (
+                "receivers",
+                Json::Arr(
+                    m.receivers
+                        .iter()
+                        .map(|r| {
+                            obj([
+                                ("rank", r.rank.into()),
+                                (
+                                    "chunks",
+                                    Json::Arr(
+                                        r.chunks
+                                            .iter()
+                                            .map(|c| {
+                                                obj([
+                                                    ("start", c.start.into()),
+                                                    ("len", c.len.into()),
+                                                    ("kb", c.kb.into()),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+    };
+    obj([("layers", Json::Arr(layers)), ("mig", mig)])
+}
+
+fn idx_in_bounds(v: &[u32], bound: usize, what: &str) -> Result<(), CkptError> {
+    for &i in v {
+        if i as usize >= bound {
+            return Err(bad(format!("{what}: index {i} out of range (size {bound})")));
+        }
+    }
+    Ok(())
+}
+
+fn action_from_json(j: &Json, m: &ModelInfo) -> Result<WorkerAction, CkptError> {
+    let mut layers = Vec::new();
+    for l in jget(j, "layers")?.arr().map_err(bad)? {
+        let p = LayerPlan {
+            attn_bucket: pstr(l, "ab")?.to_string(),
+            mlp_b1: pstr(l, "b1")?.to_string(),
+            mlp_b2: pstr(l, "b2")?.to_string(),
+            attn_keep: pu32s(l, "ak")?,
+            mlp_keep1: pu32s(l, "k1")?,
+            mlp_keep2: pu32s(l, "k2")?,
+        };
+        idx_in_bounds(&p.attn_keep, m.hs, "cached plan attn_keep")?;
+        idx_in_bounds(&p.mlp_keep1, m.hs, "cached plan mlp_keep1")?;
+        idx_in_bounds(&p.mlp_keep2, m.ffl, "cached plan mlp_keep2")?;
+        layers.push(p);
+    }
+    if layers.len() != m.depth {
+        return Err(bad(format!(
+            "cached plan has {} layer plans, model depth is {}",
+            layers.len(),
+            m.depth
+        )));
+    }
+    let mig = match jget(j, "mig")? {
+        Json::Null => None,
+        mj => {
+            let migrated = pu32s(mj, "migrated")?;
+            let kept = pu32s(mj, "kept")?;
+            idx_in_bounds(&migrated, m.ffl, "cached plan migrated")?;
+            idx_in_bounds(&kept, m.ffl, "cached plan kept")?;
+            let straggler = pusize(mj, "straggler")?;
+            if straggler >= m.e {
+                return Err(bad(format!("cached plan straggler {straggler} ≥ e={}", m.e)));
+            }
+            let mut receivers = Vec::new();
+            for r in jget(mj, "receivers")?.arr().map_err(bad)? {
+                let rank = pusize(r, "rank")?;
+                if rank >= m.e || rank == straggler {
+                    return Err(bad(format!("cached plan receiver rank {rank} invalid")));
+                }
+                let mut chunks = Vec::new();
+                for c in jget(r, "chunks")?.arr().map_err(bad)? {
+                    let chunk = Chunk {
+                        start: pusize(c, "start")?,
+                        len: pusize(c, "len")?,
+                        kb: pusize(c, "kb")?,
+                    };
+                    let end = chunk.start.checked_add(chunk.len);
+                    if chunk.len == 0 || chunk.len > chunk.kb || end.is_none_or(|e| e > migrated.len())
+                    {
+                        return Err(bad("cached plan chunk out of range"));
+                    }
+                    chunks.push(chunk);
+                }
+                receivers.push(ReceiverWork { rank, chunks });
+            }
+            Some(MigPlan {
+                straggler,
+                migrated,
+                kept,
+                kept_bucket: pstr(mj, "kept_bucket")?.to_string(),
+                receivers,
+            })
+        }
+    };
+    Ok(WorkerAction { layers, mig })
+}
+
+// ---------------------------------------------------------------------------
+// Report <-> JSON
+// ---------------------------------------------------------------------------
+
+fn epoch_to_json(e: &EpochMetrics) -> Json {
+    obj([
+        ("epoch", e.epoch.into()),
+        ("rt_sim_s", e.rt_sim_s.into()),
+        ("rt_wall_s", e.rt_wall_s.into()),
+        ("train_loss", e.train_loss.into()),
+        ("eval_loss", e.eval_loss.into()),
+        ("acc", e.acc.into()),
+        ("comm_bytes", ju64(e.comm_bytes)),
+        ("pruned_cols", ju64(e.pruned_cols)),
+        ("migrated_cols", ju64(e.migrated_cols)),
+        ("rank_compute_s", jf64s(&e.rank_compute_s)),
+        ("replans", ju64(e.replans)),
+        ("chi_mean", e.chi_mean.into()),
+        ("chi_max", e.chi_max.into()),
+    ])
+}
+
+fn epoch_from_json(j: &Json) -> Result<EpochMetrics, CkptError> {
+    Ok(EpochMetrics {
+        epoch: pusize(j, "epoch")?,
+        rt_sim_s: pf64(j, "rt_sim_s")?,
+        rt_wall_s: pf64(j, "rt_wall_s")?,
+        train_loss: pf64(j, "train_loss")?,
+        eval_loss: pf64(j, "eval_loss")?,
+        acc: pf64(j, "acc")?,
+        comm_bytes: pu64(j, "comm_bytes")?,
+        pruned_cols: pu64(j, "pruned_cols")?,
+        migrated_cols: pu64(j, "migrated_cols")?,
+        rank_compute_s: pf64s(j, "rank_compute_s")?,
+        replans: pu64(j, "replans")?,
+        chi_mean: pf64(j, "chi_mean")?,
+        chi_max: pf64(j, "chi_max")?,
+    })
+}
+
+fn sample_to_json(s: &IterSample) -> Json {
+    obj([
+        ("giter", ju64(s.giter)),
+        ("epoch", s.epoch.into()),
+        ("iter", s.iter.into()),
+        ("chi", jf64s(&s.chi)),
+        ("t_iter", jf64s(&s.t_iter)),
+        ("rt_iter_s", s.rt_iter_s.into()),
+        ("replanned", s.replanned.into()),
+    ])
+}
+
+fn sample_from_json(j: &Json) -> Result<IterSample, CkptError> {
+    Ok(IterSample {
+        giter: pu64(j, "giter")?,
+        epoch: pusize(j, "epoch")?,
+        iter: pusize(j, "iter")?,
+        chi: pf64s(j, "chi")?,
+        t_iter: pf64s(j, "t_iter")?,
+        rt_iter_s: pf64(j, "rt_iter_s")?,
+        replanned: pbool(j, "replanned")?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Save
+// ---------------------------------------------------------------------------
+
+/// Assemble a complete trainer snapshot (see module docs for contents).
+pub fn save_trainer(t: &Trainer) -> Snapshot {
+    let m = t.rt.manifest.model.clone();
+    let (s0, s1, spare) = t.balancer.rng.state();
+    let rng_spare = match spare {
+        None => Json::Null,
+        Some(v) => Json::Num(v as f64),
+    };
+    let cached = match &t.cached_actions {
+        None => Json::Null,
+        Some(acts) => Json::Arr(acts.iter().map(action_to_json).collect()),
+    };
+    let cs = &t.comm.stats;
+    let meta = obj([
+        ("kind", KIND.into()),
+        (
+            "model",
+            obj([
+                ("name", m.name.as_str().into()),
+                ("e", m.e.into()),
+                ("hs", m.hs.into()),
+                ("depth", m.depth.into()),
+                ("heads", m.heads.into()),
+                ("bs", m.bs.into()),
+                ("ffl", m.ffl.into()),
+            ]),
+        ),
+        ("cfg_fp", cfg_fingerprint(&t.cfg).into()),
+        ("cursor", obj([("global_iter", ju64(t.global_iter))])),
+        (
+            "clocks",
+            obj([("t", jf64s(&t.clocks.t)), ("ic", jf64s(&t.clocks.iter_compute))]),
+        ),
+        (
+            "comm",
+            obj([
+                ("allreduce_ops", ju64(cs.allreduce_ops)),
+                ("allreduce_bytes", ju64(cs.allreduce_bytes)),
+                ("broadcast_ops", ju64(cs.broadcast_ops)),
+                ("broadcast_bytes", ju64(cs.broadcast_bytes)),
+                ("reduce_ops", ju64(cs.reduce_ops)),
+                ("reduce_bytes", ju64(cs.reduce_bytes)),
+                ("scatter_ops", ju64(cs.scatter_ops)),
+                ("scatter_bytes", ju64(cs.scatter_bytes)),
+                ("gather_ops", ju64(cs.gather_ops)),
+                ("gather_bytes", ju64(cs.gather_bytes)),
+                ("allgather_ops", ju64(cs.allgather_ops)),
+                ("allgather_bytes", ju64(cs.allgather_bytes)),
+            ]),
+        ),
+        (
+            "monitor",
+            obj([
+                ("t_iter", jf64s(&t.monitor.t_iter)),
+                ("m_iter", jf64s(&t.monitor.m_iter)),
+                ("t_avg", jf64s(&t.monitor.t_avg_cached)),
+                ("t_sync", jf64s(&t.monitor.t_self_at_sync)),
+                ("refreshes", ju64(t.monitor.refreshes)),
+            ]),
+        ),
+        (
+            "ctl",
+            obj([
+                ("fast", jf64s(&t.controller.fast)),
+                ("slow", jf64s(&t.controller.slow)),
+                ("armed", t.controller.armed.into()),
+                ("cooldown", t.controller.cooldown_left.into()),
+                ("triggers", ju64(t.controller.triggers)),
+            ]),
+        ),
+        (
+            "costs",
+            obj([
+                ("omega1_s", t.costs.omega1_s.into()),
+                ("omega2_per_col", t.costs.omega2_per_col.into()),
+                ("phi1_base_s", t.costs.phi1_base_s.into()),
+                ("phi1_per_col", t.costs.phi1_per_col.into()),
+                ("phi2_per_col", t.costs.phi2_per_col.into()),
+            ]),
+        ),
+        (
+            "epoch",
+            obj([
+                ("pruned_cols", ju64(t.epoch_pruned_cols)),
+                ("migrated_cols", ju64(t.epoch_migrated_cols)),
+                ("compute", jf64s(&t.epoch_compute)),
+                ("replans", ju64(t.epoch_replans)),
+                ("chi_sum", t.epoch_chi_sum.into()),
+                ("chi_max", t.epoch_chi_max.into()),
+                ("chi_iters", ju64(t.epoch_chi_iters)),
+                ("loss_sum", t.epoch_loss_sum.into()),
+                ("start_bytes", ju64(t.epoch_start_bytes)),
+                ("wall_s", t.epoch_wall_s.into()),
+            ]),
+        ),
+        (
+            "balancer",
+            obj([
+                ("rng", Json::Arr(vec![ju64(s0), ju64(s1), rng_spare])),
+                ("have_snapshots", (!t.balancer.snapshots.is_empty()).into()),
+            ]),
+        ),
+        ("cached_actions", cached),
+        (
+            "flags",
+            obj([("prev_grads", t.prev_grads.is_some().into())]),
+        ),
+        (
+            "report",
+            obj([
+                ("label", t.report.label.as_str().into()),
+                (
+                    "epochs",
+                    Json::Arr(t.report.epochs.iter().map(epoch_to_json).collect()),
+                ),
+                (
+                    "timeline",
+                    Json::Arr(t.report.timeline.iter().map(sample_to_json).collect()),
+                ),
+            ]),
+        ),
+    ]);
+
+    let mut snap = Snapshot::new(meta);
+    // model shards + replicated params
+    for w in 0..m.e {
+        for k in 0..m.depth {
+            for n in BlockShard::names() {
+                snap.put_f32(
+                    &format!("model.{w}.{k}.{n}"),
+                    t.state.shards[w][k].get(n).data.clone(),
+                );
+            }
+        }
+    }
+    for n in RepParams::names() {
+        snap.put_f32(&format!("model.rep.{n}"), t.state.rep.get(n).data.clone());
+    }
+    // optimizer momentum buffers
+    for (key, buf) in &t.opt.bufs {
+        snap.put_f32(&format!("opt.{key}"), buf.data.clone());
+    }
+    // Same-imputation previous-iteration gradients
+    if let Some(pg) = &t.prev_grads {
+        for (w, per_w) in pg.iter().enumerate() {
+            for (k, g) in per_w.iter().enumerate() {
+                for n in BlockShard::names() {
+                    snap.put_f32(&format!("prev.{w}.{k}.{n}"), g.get(n).data.clone());
+                }
+            }
+        }
+    }
+    // balancer statistics
+    for (w, per_w) in t.balancer.trackers.iter().enumerate() {
+        for (k, bt) in per_w.iter().enumerate() {
+            for (c, tr) in [("qkv", &bt.qkv), ("fc1", &bt.fc1), ("fc2", &bt.fc2)] {
+                if let Some(v) = &tr.w_var {
+                    snap.put_f32(&format!("bal.var.{w}.{k}.{c}"), v.clone());
+                }
+            }
+        }
+    }
+    for (w, per_w) in t.balancer.snapshots.iter().enumerate() {
+        for (k, (wqkv, w1, w2)) in per_w.iter().enumerate() {
+            snap.put_f32(&format!("bal.snap.{w}.{k}.wqkv"), wqkv.data.clone());
+            snap.put_f32(&format!("bal.snap.{w}.{k}.w1"), w1.data.clone());
+            snap.put_f32(&format!("bal.snap.{w}.{k}.w2"), w2.data.clone());
+        }
+    }
+    for (w, per_w) in t.balancer.pruned_epoch.iter().enumerate() {
+        for (k, kinds) in per_w.iter().enumerate() {
+            for (i, marks) in kinds.iter().enumerate() {
+                snap.put_u8(
+                    &format!("bal.pruned.{w}.{k}.{i}"),
+                    marks.iter().map(|&b| b as u8).collect(),
+                );
+            }
+        }
+    }
+    // loss curve (f32-exact in the blob)
+    snap.put_f32("report.loss_curve", t.report.loss_curve.clone());
+    snap
+}
+
+// ---------------------------------------------------------------------------
+// Restore
+// ---------------------------------------------------------------------------
+
+/// Restore a trainer from a snapshot: bitwise in-place when the worker
+/// count matches, elastic re-shard otherwise.  On any error the trainer
+/// should be discarded (state may be partially written).
+pub fn restore_trainer(t: &mut Trainer, snap: &Snapshot) -> Result<(), CkptError> {
+    let meta = &snap.meta;
+    if pstr(meta, "kind")? != KIND {
+        return Err(bad(format!("not a {KIND} snapshot")));
+    }
+    let cur = t.rt.manifest.model.clone();
+    let mm = jget(meta, "model")?;
+    let name = pstr(mm, "name")?;
+    if name != cur.name {
+        return Err(CkptError::Incompatible(format!(
+            "checkpoint is for model '{name}', trainer runs '{}'",
+            cur.name
+        )));
+    }
+    let geometry =
+        [("hs", cur.hs), ("depth", cur.depth), ("heads", cur.heads), ("bs", cur.bs)];
+    for (key, have) in geometry {
+        let want = pusize(mm, key)?;
+        if want != have {
+            return Err(CkptError::Incompatible(format!(
+                "model geometry mismatch: checkpoint {key}={want}, trainer {key}={have}"
+            )));
+        }
+    }
+    let fp = pstr(meta, "cfg_fp")?;
+    let want_fp = cfg_fingerprint(&t.cfg);
+    if fp != want_fp {
+        return Err(CkptError::Incompatible(format!(
+            "run configuration differs from the checkpointed one\n  \
+             checkpoint: {fp}\n  current:    {want_fp}"
+        )));
+    }
+    let giter = pu64(jget(meta, "cursor")?, "global_iter")?;
+    let total = (t.cfg.train.epochs * t.cfg.train.iters_per_epoch) as u64;
+    if giter > total {
+        return Err(CkptError::Incompatible(format!(
+            "checkpoint cursor {giter} is past the configured schedule ({total} iterations) \
+             — raise --epochs to extend the run"
+        )));
+    }
+
+    // ---- run report + comm stats + epoch scalars (all geometries) -------
+    let rj = jget(meta, "report")?;
+    t.report = RunReport::new(pstr(rj, "label")?);
+    for e in jget(rj, "epochs")?.arr().map_err(bad)? {
+        t.report.epochs.push(epoch_from_json(e)?);
+    }
+    for s in jget(rj, "timeline")?.arr().map_err(bad)? {
+        t.report.timeline.push(sample_from_json(s)?);
+    }
+    t.report.loss_curve = snap.f32("report.loss_curve")?.to_vec();
+
+    let cj = jget(meta, "comm")?;
+    let cs = &mut t.comm.stats;
+    cs.allreduce_ops = pu64(cj, "allreduce_ops")?;
+    cs.allreduce_bytes = pu64(cj, "allreduce_bytes")?;
+    cs.broadcast_ops = pu64(cj, "broadcast_ops")?;
+    cs.broadcast_bytes = pu64(cj, "broadcast_bytes")?;
+    cs.reduce_ops = pu64(cj, "reduce_ops")?;
+    cs.reduce_bytes = pu64(cj, "reduce_bytes")?;
+    cs.scatter_ops = pu64(cj, "scatter_ops")?;
+    cs.scatter_bytes = pu64(cj, "scatter_bytes")?;
+    cs.gather_ops = pu64(cj, "gather_ops")?;
+    cs.gather_bytes = pu64(cj, "gather_bytes")?;
+    cs.allgather_ops = pu64(cj, "allgather_ops")?;
+    cs.allgather_bytes = pu64(cj, "allgather_bytes")?;
+
+    let ej = jget(meta, "epoch")?;
+    t.epoch_pruned_cols = pu64(ej, "pruned_cols")?;
+    t.epoch_migrated_cols = pu64(ej, "migrated_cols")?;
+    t.epoch_replans = pu64(ej, "replans")?;
+    t.epoch_chi_sum = pf64(ej, "chi_sum")?;
+    t.epoch_chi_max = pf64(ej, "chi_max")?;
+    t.epoch_chi_iters = pu64(ej, "chi_iters")?;
+    t.epoch_loss_sum = pf64(ej, "loss_sum")?;
+    t.epoch_start_bytes = pu64(ej, "start_bytes")?;
+    t.epoch_wall_s = pf64(ej, "wall_s")?;
+
+    let ck_e = pusize(mm, "e")?;
+    if ck_e == cur.e {
+        restore_same_e(t, snap, &cur)?;
+    } else {
+        restore_elastic(t, snap, ck_e)?;
+    }
+
+    t.global_iter = giter;
+    t.resumed = true;
+    Ok(())
+}
+
+/// Bitwise in-place restore (worker count unchanged).
+fn restore_same_e(t: &mut Trainer, snap: &Snapshot, m: &ModelInfo) -> Result<(), CkptError> {
+    let meta = &snap.meta;
+    // model + optimizer
+    for w in 0..m.e {
+        for k in 0..m.depth {
+            for n in BlockShard::names() {
+                copy_into(snap, &format!("model.{w}.{k}.{n}"), t.state.shards[w][k].get_mut(n))?;
+            }
+        }
+    }
+    for n in RepParams::names() {
+        copy_into(snap, &format!("model.rep.{n}"), t.state.rep.get_mut(n))?;
+    }
+    t.opt.bufs.clear();
+    let opt_keys: Vec<String> = snap
+        .entry_names()
+        .filter_map(|n| n.strip_prefix("opt.").map(str::to_string))
+        .collect();
+    for key in opt_keys {
+        let dims = param_dims(m, &key)
+            .ok_or_else(|| bad(format!("optimizer buffer for unknown param '{key}'")))?;
+        let mut buf = Tensor::zeros(&dims);
+        copy_into(snap, &format!("opt.{key}"), &mut buf)?;
+        t.opt.bufs.insert(key, buf);
+    }
+    // Same-imputation gradient history
+    let flagged = pbool(jget(meta, "flags")?, "prev_grads")?;
+    match (&mut t.prev_grads, flagged) {
+        (Some(pg), true) => {
+            for (w, per_w) in pg.iter_mut().enumerate() {
+                for (k, g) in per_w.iter_mut().enumerate() {
+                    for n in BlockShard::names() {
+                        copy_into(snap, &format!("prev.{w}.{k}.{n}"), g.get_mut(n))?;
+                    }
+                }
+            }
+        }
+        (None, false) => {}
+        _ => {
+            return Err(bad(
+                "prev_grads flag disagrees with the imputation policy (corrupt snapshot)",
+            ))
+        }
+    }
+    // clocks + per-rank epoch compute
+    let kj = jget(meta, "clocks")?;
+    let ct = pf64s(kj, "t")?;
+    let ic = pf64s(kj, "ic")?;
+    if ct.len() != m.e || ic.len() != m.e {
+        return Err(bad("clock vectors have the wrong rank count"));
+    }
+    t.clocks.t = ct;
+    t.clocks.iter_compute = ic;
+    let compute = pf64s(jget(meta, "epoch")?, "compute")?;
+    if !compute.is_empty() && compute.len() != m.e {
+        return Err(bad("epoch compute vector has the wrong rank count"));
+    }
+    t.epoch_compute = compute;
+    // monitor
+    let mj = jget(meta, "monitor")?;
+    let (ti, mi) = (pf64s(mj, "t_iter")?, pf64s(mj, "m_iter")?);
+    let (ta, ts) = (pf64s(mj, "t_avg")?, pf64s(mj, "t_sync")?);
+    if [&ti, &mi, &ta, &ts].iter().any(|v| v.len() != m.e) {
+        return Err(bad("monitor vectors have the wrong rank count"));
+    }
+    t.monitor.t_iter = ti;
+    t.monitor.m_iter = mi;
+    t.monitor.t_avg_cached = ta;
+    t.monitor.t_self_at_sync = ts;
+    t.monitor.refreshes = pu64(mj, "refreshes")?;
+    // controller
+    let oj = jget(meta, "ctl")?;
+    t.controller.fast = pf64s(oj, "fast")?;
+    t.controller.slow = pf64s(oj, "slow")?;
+    t.controller.armed = pbool(oj, "armed")?;
+    t.controller.cooldown_left = pusize(oj, "cooldown")?;
+    t.controller.triggers = pu64(oj, "triggers")?;
+    // cost fits
+    let fj = jget(meta, "costs")?;
+    t.costs.omega1_s = pf64(fj, "omega1_s")?;
+    t.costs.omega2_per_col = pf64(fj, "omega2_per_col")?;
+    t.costs.phi1_base_s = pf64(fj, "phi1_base_s")?;
+    t.costs.phi1_per_col = pf64(fj, "phi1_per_col")?;
+    t.costs.phi2_per_col = pf64(fj, "phi2_per_col")?;
+    // cached balancing plan
+    t.cached_actions = match jget(meta, "cached_actions")? {
+        Json::Null => None,
+        Json::Arr(acts) => {
+            if acts.len() != m.e {
+                return Err(bad("cached plan has the wrong rank count"));
+            }
+            Some(acts.iter().map(|a| action_from_json(a, m)).collect::<Result<_, _>>()?)
+        }
+        other => return Err(bad(format!("cached_actions is not null/array: {other:?}"))),
+    };
+    // balancer
+    let bj = jget(meta, "balancer")?;
+    let rj = jget(bj, "rng")?.arr().map_err(bad)?;
+    if rj.len() != 3 {
+        return Err(bad("balancer rng state must be [s0, s1, spare]"));
+    }
+    let spare = match &rj[2] {
+        Json::Null => None,
+        Json::Num(n) => Some(*n as f32),
+        other => return Err(bad(format!("rng spare is not null/number: {other:?}"))),
+    };
+    t.balancer.rng = Rng::from_state(
+        u64_from(&rj[0], "rng s0")?,
+        u64_from(&rj[1], "rng s1")?,
+        spare,
+    );
+    for (w, per_w) in t.balancer.trackers.iter_mut().enumerate() {
+        for (k, bt) in per_w.iter_mut().enumerate() {
+            for (c, tr) in [("qkv", &mut bt.qkv), ("fc1", &mut bt.fc1), ("fc2", &mut bt.fc2)] {
+                let name = format!("bal.var.{w}.{k}.{c}");
+                if let Some(v) = snap.opt_f32(&name) {
+                    if v.len() != tr.n() {
+                        return Err(bad(format!("tracker '{name}' has the wrong width")));
+                    }
+                    tr.w_var = Some(v.to_vec());
+                } else {
+                    tr.w_var = None;
+                }
+            }
+        }
+    }
+    if pbool(bj, "have_snapshots")? {
+        let mut snaps = Vec::with_capacity(m.e);
+        for w in 0..m.e {
+            let mut per_w = Vec::with_capacity(m.depth);
+            for k in 0..m.depth {
+                let mut wqkv = Tensor::zeros(&shard_dims(m, "wqkv"));
+                let mut w1 = Tensor::zeros(&shard_dims(m, "w1"));
+                let mut w2 = Tensor::zeros(&shard_dims(m, "w2"));
+                copy_into(snap, &format!("bal.snap.{w}.{k}.wqkv"), &mut wqkv)?;
+                copy_into(snap, &format!("bal.snap.{w}.{k}.w1"), &mut w1)?;
+                copy_into(snap, &format!("bal.snap.{w}.{k}.w2"), &mut w2)?;
+                per_w.push((wqkv, w1, w2));
+            }
+            snaps.push(per_w);
+        }
+        t.balancer.snapshots = snaps;
+    } else {
+        t.balancer.snapshots = Vec::new();
+    }
+    for (w, per_w) in t.balancer.pruned_epoch.iter_mut().enumerate() {
+        for (k, kinds) in per_w.iter_mut().enumerate() {
+            for (i, marks) in kinds.iter_mut().enumerate() {
+                let v = snap.u8(&format!("bal.pruned.{w}.{k}.{i}"))?;
+                if v.len() != marks.len() {
+                    return Err(bad(format!("pruned marks {w}.{k}.{i} have the wrong width")));
+                }
+                for (dst, &src) in marks.iter_mut().zip(v) {
+                    *dst = src != 0;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Elastic restore: re-shard model + momentum onto the current worker
+/// count; rank-shaped transient state (clocks, monitor, controller,
+/// balancer statistics, cached plan, gradient history) re-initializes,
+/// and the pretest cost fits recompute for the new shard widths, so the
+/// Eq. 2/3 allocation re-runs before the first resumed iteration.
+/// Continuation is loss-equivalent, not bitwise (DESIGN.md §13).
+fn restore_elastic(t: &mut Trainer, snap: &Snapshot, ck_e: usize) -> Result<(), CkptError> {
+    let new_m = t.rt.manifest.model.clone();
+    let old_man = crate::runtime::presets::synthesize_with_e(&new_m.name, ck_e)
+        .map_err(|e| CkptError::Incompatible(format!("elastic resume: {e}")))?;
+    let old_m = old_man.model;
+    // model parameters: fill the old geometry, undo TP, re-shard
+    let mut old_state = zero_state(&old_m);
+    for w in 0..old_m.e {
+        for k in 0..old_m.depth {
+            for n in BlockShard::names() {
+                copy_into(snap, &format!("model.{w}.{k}.{n}"), old_state.shards[w][k].get_mut(n))?;
+            }
+        }
+    }
+    for n in RepParams::names() {
+        copy_into(snap, &format!("model.rep.{n}"), old_state.rep.get_mut(n))?;
+    }
+    let full = elastic::gather_full(&old_m, &old_state);
+    t.state = elastic::shard_full(&new_m, &full);
+    // optimizer momentum re-shards with exactly the same slicing
+    let has_shard_moments = snap
+        .entry_names()
+        .any(|n| n.strip_prefix("opt.").is_some_and(|k| !k.starts_with("rep.")));
+    t.opt.bufs.clear();
+    if has_shard_moments {
+        let mut old_mom = zero_state(&old_m);
+        for w in 0..old_m.e {
+            for k in 0..old_m.depth {
+                for n in BlockShard::names() {
+                    let key = format!("opt.{w}.{k}.{n}");
+                    if snap.has(&key) {
+                        copy_into(snap, &key, old_mom.shards[w][k].get_mut(n))?;
+                    }
+                }
+            }
+        }
+        let mom = elastic::shard_full(&new_m, &elastic::gather_full(&old_m, &old_mom));
+        for w in 0..new_m.e {
+            for k in 0..new_m.depth {
+                for n in BlockShard::names() {
+                    t.opt
+                        .bufs
+                        .insert(format!("{w}.{k}.{n}"), mom.shards[w][k].get(n).clone());
+                }
+            }
+        }
+    }
+    for n in RepParams::names() {
+        let key = format!("opt.rep.{n}");
+        if snap.has(&key) {
+            let mut buf = Tensor::zeros(&rep_dims(&new_m, n));
+            copy_into(snap, &key, &mut buf)?;
+            t.opt.bufs.insert(format!("rep.{n}"), buf);
+        }
+    }
+    // rank-shaped transient state stays freshly initialized (Trainer::new
+    // already sized everything for the new e); recompute the cost fits
+    // against the new shard widths
+    t.epoch_compute = vec![0.0; new_m.e];
+    t.cached_actions = None;
+    t.costs = t.fresh_cost_fit();
+    Ok(())
+}
+
+fn param_dims(m: &ModelInfo, key: &str) -> Option<Vec<usize>> {
+    if let Some(n) = key.strip_prefix("rep.") {
+        if RepParams::names().iter().any(|&x| x == n) {
+            return Some(rep_dims(m, n));
+        }
+        return None;
+    }
+    let mut it = key.splitn(3, '.');
+    let w: usize = it.next()?.parse().ok()?;
+    let k: usize = it.next()?.parse().ok()?;
+    let n = it.next()?;
+    if w >= m.e || k >= m.depth || !BlockShard::names().iter().any(|&x| x == n) {
+        return None;
+    }
+    Some(shard_dims(m, n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Strategy;
+
+    #[test]
+    fn fingerprint_pins_math_but_not_threads_or_epochs() {
+        let mut a = RunCfg::new("vit-tiny");
+        let b = a.clone();
+        a.train.threads = 7;
+        a.train.epochs = 99;
+        a.train.emulate_wall = true;
+        a.train.timeline = true;
+        a.train.ckpt_every = 3;
+        assert_eq!(cfg_fingerprint(&a), cfg_fingerprint(&b), "non-math knobs must not pin");
+        let mut c = b.clone();
+        c.train.seed = 43;
+        assert_ne!(cfg_fingerprint(&b), cfg_fingerprint(&c));
+        let mut d = b.clone();
+        d.balancer.strategy = Strategy::Semi;
+        assert_ne!(cfg_fingerprint(&b), cfg_fingerprint(&d));
+        let mut e = b.clone();
+        e.stragglers = StragglerPlan::Fixed(vec![2.0, 1.0]);
+        assert_ne!(cfg_fingerprint(&b), cfg_fingerprint(&e));
+    }
+
+    #[test]
+    fn plan_desc_distinguishes_and_roundtrips_scenarios() {
+        use crate::contention::ScenarioSpec;
+        assert_eq!(plan_desc(&StragglerPlan::None), "none");
+        let s = ScenarioSpec::parse("burst:r1@x4:iters2-5,seed:9").unwrap();
+        let d = plan_desc(&StragglerPlan::Scenario(s.clone()));
+        // the descriptor re-parses to the same spec — the trace-cursor
+        // persistence contract
+        let re = ScenarioSpec::parse(d.strip_prefix("scenario:").unwrap()).unwrap();
+        assert_eq!(re, s);
+    }
+
+    #[test]
+    fn action_json_roundtrip_and_validation() {
+        let man = crate::runtime::presets::synthesize("vit-tiny").unwrap();
+        let m = man.model.clone();
+        let mig = crate::migration::plan(&man, 0, 0.5, 1.0, None).unwrap();
+        let mut a = WorkerAction::full(&man);
+        a.layers[0].mlp_keep2 = mig.kept.clone();
+        a.mig = Some(mig);
+        let j = action_to_json(&a);
+        let r = action_from_json(&j, &m).unwrap();
+        assert_eq!(r.layers[0].mlp_keep2, a.layers[0].mlp_keep2);
+        let (ra, aa) = (r.mig.unwrap(), a.mig.unwrap());
+        assert_eq!(ra.migrated, aa.migrated);
+        assert_eq!(ra.receivers.len(), aa.receivers.len());
+        // out-of-range indices are rejected, not deferred to a panic
+        let mut b = WorkerAction::full(&man);
+        b.layers[0].attn_keep = vec![m.hs as u32 + 7];
+        assert!(action_from_json(&action_to_json(&b), &m).is_err());
+    }
+
+    #[test]
+    fn u64_values_survive_the_json_trip() {
+        let big = u64::MAX - 12345;
+        let j = obj([("x", ju64(big))]);
+        assert_eq!(pu64(&j, "x").unwrap(), big);
+        let j = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(pu64(&j, "x").unwrap(), big, "string form survives emission");
+    }
+}

@@ -10,10 +10,10 @@
 /// Per-rank virtual clocks (seconds).
 #[derive(Debug, Clone)]
 pub struct Clocks {
-    t: Vec<f64>,
+    pub(crate) t: Vec<f64>,
     /// per-rank cumulative compute time this iteration (the paper's M_i
     /// numerator bookkeeping is done by the trainer; this is T_i support)
-    iter_compute: Vec<f64>,
+    pub(crate) iter_compute: Vec<f64>,
 }
 
 impl Clocks {

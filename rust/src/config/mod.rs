@@ -287,6 +287,18 @@ pub struct TrainCfg {
     /// opt-in per-iteration JSON dump (`--timeline`): χ vs T_i vs RT per
     /// iteration lands in the run report for plotting
     pub timeline: bool,
+    /// checkpoint directory (`--ckpt-dir`); None disables periodic saves
+    pub ckpt_dir: Option<PathBuf>,
+    /// save a snapshot every N global iterations (`--ckpt-every`);
+    /// 0 disables periodic saves even with a directory set
+    pub ckpt_every: usize,
+    /// resume source (`--resume`): a `.flexckpt` file, or a checkpoint
+    /// directory (the newest complete snapshot is picked)
+    pub resume: Option<PathBuf>,
+    /// stop (simulated preemption) after this global iteration
+    /// (`--stop-after`); the epoch in progress is checkpointable and the
+    /// run reports only what completed
+    pub stop_after: Option<u64>,
 }
 
 impl Default for TrainCfg {
@@ -303,6 +315,10 @@ impl Default for TrainCfg {
             threads: env_threads(),
             time_model: TimeModel::Measured,
             timeline: false,
+            ckpt_dir: None,
+            ckpt_every: 0,
+            resume: None,
+            stop_after: None,
         }
     }
 }
@@ -365,6 +381,10 @@ pub struct RunCfg {
     pub net: NetCfg,
     /// online-controller drift-detector parameters (`--ctl-*`).
     pub control: ControlCfg,
+    /// override the preset's worker count (`--e`, elastic resume target).
+    /// Native backend only: the manifest re-synthesizes with the new
+    /// shard widths (`runtime::presets::synthesize_with_e`).
+    pub e_override: Option<usize>,
 }
 
 impl RunCfg {
@@ -378,6 +398,7 @@ impl RunCfg {
             stragglers: StragglerPlan::None,
             net: NetCfg::default(),
             control: ControlCfg::default(),
+            e_override: None,
         }
     }
 
@@ -437,6 +458,11 @@ pub fn apply_overrides(cfg: &mut RunCfg, kv: &BTreeMap<String, String>) -> Resul
             "no-reduce-merging" => cfg.balancer.reduce_merging = false,
             "emulate-wall" => cfg.train.emulate_wall = true,
             "threads" => cfg.train.threads = v.parse().context("threads")?,
+            "e" => cfg.e_override = Some(v.parse().context("e")?),
+            "ckpt-dir" => cfg.train.ckpt_dir = Some(PathBuf::from(v)),
+            "ckpt-every" => cfg.train.ckpt_every = v.parse().context("ckpt-every")?,
+            "resume" => cfg.train.resume = Some(PathBuf::from(v)),
+            "stop-after" => cfg.train.stop_after = Some(v.parse().context("stop-after")?),
             "replan" => cfg.balancer.replan = ReplanMode::parse(v)?,
             "time-model" => cfg.train.time_model = TimeModel::parse(v)?,
             "timeline" => cfg.train.timeline = true,
@@ -590,6 +616,35 @@ mod tests {
         apply_overrides(&mut cfg, &kv).unwrap();
         assert_eq!(cfg.train.threads, 4);
         let (_, kv) = parse_kv_args(&["--threads=bogus".to_string()]).unwrap();
+        assert!(apply_overrides(&mut cfg, &kv).is_err());
+    }
+
+    #[test]
+    fn checkpoint_and_elastic_overrides_apply() {
+        let mut cfg = RunCfg::new("vit-tiny");
+        let args: Vec<String> = [
+            "--ckpt-dir", "ckpts",
+            "--ckpt-every", "5",
+            "--resume", "ckpts/ckpt-00000010.flexckpt",
+            "--stop-after", "10",
+            "--e", "2",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let (_, kv) = parse_kv_args(&args).unwrap();
+        apply_overrides(&mut cfg, &kv).unwrap();
+        assert_eq!(cfg.train.ckpt_dir, Some(PathBuf::from("ckpts")));
+        assert_eq!(cfg.train.ckpt_every, 5);
+        assert_eq!(
+            cfg.train.resume,
+            Some(PathBuf::from("ckpts/ckpt-00000010.flexckpt"))
+        );
+        assert_eq!(cfg.train.stop_after, Some(10));
+        assert_eq!(cfg.e_override, Some(2));
+        let (_, kv) = parse_kv_args(&["--ckpt-every=soon".to_string()]).unwrap();
+        assert!(apply_overrides(&mut cfg, &kv).is_err());
+        let (_, kv) = parse_kv_args(&["--e=two".to_string()]).unwrap();
         assert!(apply_overrides(&mut cfg, &kv).is_err());
     }
 

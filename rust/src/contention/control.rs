@@ -57,10 +57,10 @@ pub struct Drift {
 #[derive(Debug, Clone)]
 pub struct DriftDetector {
     pub cfg: ControlCfg,
-    fast: Vec<f64>,
-    slow: Vec<f64>,
-    armed: bool,
-    cooldown_left: usize,
+    pub(crate) fast: Vec<f64>,
+    pub(crate) slow: Vec<f64>,
+    pub(crate) armed: bool,
+    pub(crate) cooldown_left: usize,
     /// total triggers fired (metrics)
     pub triggers: u64,
 }

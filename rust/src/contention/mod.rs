@@ -123,11 +123,16 @@ pub struct ScenarioSpec {
     /// Clamp on the composed per-rank multiplier.
     pub chi_max: f64,
     pub events: Vec<Event>,
+    /// Simulated preemption (DSL `preempt:iterN`): kill the job after
+    /// global iteration N completes and resume it from a checkpoint.
+    /// Orchestration-only — the χ trace itself ignores it; the `flextp
+    /// sweep` harness executes the kill/checkpoint/resume cycle.
+    pub preempt: Option<usize>,
 }
 
 impl Default for ScenarioSpec {
     fn default() -> Self {
-        ScenarioSpec { seed: 42, chi_max: 16.0, events: Vec::new() }
+        ScenarioSpec { seed: 42, chi_max: 16.0, events: Vec::new(), preempt: None }
     }
 }
 
@@ -167,6 +172,15 @@ impl ScenarioSpec {
                 spec.events.extend(preset(name)?.events);
                 continue;
             }
+            if let Some(v) = item.strip_prefix("preempt:") {
+                let v = v.strip_prefix("iter").unwrap_or(v);
+                let g: usize = v.parse().with_context(|| format!("bad preempt '{v}'"))?;
+                if g == 0 {
+                    bail!("preempt:iter0 would kill the job before any work");
+                }
+                spec.preempt = Some(g);
+                continue;
+            }
             spec.events.push(parse_event(item)?);
         }
         Ok(spec)
@@ -182,8 +196,8 @@ impl ScenarioSpec {
         }
         if let Json::Obj(m) = j {
             for k in m.keys() {
-                if !matches!(k.as_str(), "seed" | "chi_max" | "events") {
-                    bail!("unknown scenario field '{k}' (seed|chi_max|events)");
+                if !matches!(k.as_str(), "seed" | "chi_max" | "events" | "preempt") {
+                    bail!("unknown scenario field '{k}' (seed|chi_max|events|preempt)");
                 }
             }
         }
@@ -193,6 +207,13 @@ impl ScenarioSpec {
         }
         if let Some(c) = j.opt("chi_max") {
             spec.chi_max = chk_chi(c.num()?)?;
+        }
+        if let Some(p) = j.opt("preempt") {
+            let g = p.usize()?;
+            if g == 0 {
+                bail!("preempt: 0 would kill the job before any work");
+            }
+            spec.preempt = Some(g);
         }
         for ev in j.get("events")?.arr()? {
             spec.events.push(event_from_json(ev)?);
@@ -245,7 +266,9 @@ impl ScenarioSpec {
     /// rendered string re-parses to an equivalent spec (stochastic
     /// tenants and clamping reproduce).
     pub fn describe(&self) -> String {
-        if self.events.is_empty() {
+        if self.events.is_empty() && self.preempt.is_none() {
+            // a calm trace is seed/chimax-independent, so those stay
+            // implicit too
             return "calm".to_string();
         }
         let mut items: Vec<String> = self
@@ -279,6 +302,9 @@ impl ScenarioSpec {
         }
         if self.chi_max != defaults.chi_max {
             items.push(format!("chimax:{}", self.chi_max));
+        }
+        if let Some(g) = self.preempt {
+            items.push(format!("preempt:iter{g}"));
         }
         items.join(",")
     }
@@ -769,6 +795,31 @@ mod tests {
         let plain = ScenarioSpec::parse("burst:r1@x2:iters0-4").unwrap();
         assert!(!plain.describe().contains("seed:"));
         assert_eq!(ScenarioSpec::parse(&plain.describe()).unwrap(), plain);
+    }
+
+    #[test]
+    fn preempt_parses_describes_and_never_touches_the_trace() {
+        let s = ScenarioSpec::parse("burst:r1@x4:iters2-5,preempt:iter7").unwrap();
+        assert_eq!(s.preempt, Some(7));
+        // bare number form and JSON form agree
+        assert_eq!(ScenarioSpec::parse("preempt:7").unwrap().preempt, Some(7));
+        let j = Json::parse(r#"{"preempt": 7, "events": []}"#).unwrap();
+        assert_eq!(ScenarioSpec::from_json(&j).unwrap().preempt, Some(7));
+        // round-trips through describe(), even with no χ events
+        let re = ScenarioSpec::parse(&s.describe()).unwrap();
+        assert_eq!(s, re);
+        let only = ScenarioSpec::parse("preempt:3").unwrap();
+        assert_eq!(ScenarioSpec::parse(&only.describe()).unwrap(), only);
+        // preempting before any work is a spec error
+        assert!(ScenarioSpec::parse("preempt:0").is_err());
+        assert!(ScenarioSpec::from_json(&Json::parse(r#"{"preempt":0,"events":[]}"#).unwrap()).is_err());
+        // the realized trace is identical with and without the preempt
+        let a = ScenarioSpec::parse("burst:r1@x4:iters2-5").unwrap();
+        let ta = ContentionTrace::generate(&a, 2, 10);
+        let tb = ContentionTrace::generate(&s, 2, 10);
+        for g in 0..10 {
+            assert_eq!(ta.chis(g), tb.chis(g), "g={g}");
+        }
     }
 
     #[test]

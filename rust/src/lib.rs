@@ -31,6 +31,7 @@
 
 pub mod balancer;
 pub mod bench;
+pub mod checkpoint;
 pub mod cluster;
 pub mod collectives;
 pub mod config;

@@ -67,7 +67,8 @@ fn print_help() {
            --scenario SPEC      iteration-granular contention trace, e.g.\n\
                                 \"burst:r2@x4:iters10-40,markov:r*@x2:p0.2-0.4\"\n\
                                 (kinds: burst|tenant|ramp|step|pulse|markov;\n\
-                                also seed:N, chimax:X, preset:NAME)\n\
+                                also seed:N, chimax:X, preset:NAME, and\n\
+                                preempt:iterN — sweep kills + resumes there)\n\
            --scenario-file F    scenario from a DSL or JSON file\n\
            --replan M           iter (default) | epoch (static per-epoch) |\n\
                                 online (EWMA drift-triggered mid-epoch replans)\n\
@@ -84,6 +85,20 @@ fn print_help() {
                                 plan results are bitwise identical at any\n\
                                 N; env default: FLEXTP_THREADS)\n\
            --epochs/--iters/--lr/--momentum/--seed ...\n\
+         \n\
+         CHECKPOINT / ELASTIC RESUME (DESIGN.md §13)\n\
+           --ckpt-dir DIR       write atomic .flexckpt snapshots here\n\
+           --ckpt-every N       snapshot every N iterations (0 = off)\n\
+           --resume PATH        continue from a snapshot file or the\n\
+                                newest one in a checkpoint directory;\n\
+                                same config + worker count resumes\n\
+                                BITWISE identically to an uninterrupted\n\
+                                run\n\
+           --stop-after N       simulate preemption: stop (and snapshot,\n\
+                                if --ckpt-dir is set) after iteration N\n\
+           --e N                elastic resume target: re-shard the saved\n\
+                                state over N workers (N must divide hs\n\
+                                and heads; native backend only)\n\
          \n\
          SWEEP OPTIONS\n\
            --preset P           smoke (CI, 2×2) | bursty | churn\n\
@@ -106,7 +121,21 @@ fn cmd_train(kv: &std::collections::BTreeMap<String, String>) -> Result<()> {
         "flextp train: model={} strategy={} epochs={} iters={}",
         cfg.model, strategy, cfg.train.epochs, cfg.train.iters_per_epoch
     );
-    let mut t = Trainer::new(cfg)?;
+    let resume = cfg.train.resume.clone();
+    let mut t = match &resume {
+        Some(path) => {
+            let t = Trainer::resume_from(cfg, path)
+                .with_context(|| format!("resuming from {}", path.display()))?;
+            println!(
+                "resumed from {} at iteration {} ({} epoch(s) already recorded)",
+                path.display(),
+                t.giter(),
+                t.report.epochs.len(),
+            );
+            t
+        }
+        None => Trainer::new(cfg)?,
+    };
     println!(
         "loaded {} ({} params total, e={} workers, platform={}, threads={})",
         t.model().name,
@@ -115,14 +144,35 @@ fn cmd_train(kv: &std::collections::BTreeMap<String, String>) -> Result<()> {
         t.rt.platform(),
         t.threads(),
     );
-    t.warmup_and_pretest()?;
-    for epoch in 0..t.cfg.train.epochs {
-        t.run_epoch(epoch)?;
-        let e = t.report.epochs.last().unwrap();
+    let stop = t.cfg.train.stop_after;
+    let report = t.run_to(stop)?;
+    if !t.is_complete() {
+        // simulated preemption: persist a final snapshot so `--resume`
+        // picks up exactly here (skipped when the periodic saver just
+        // wrote this very cursor)
+        if let Some(dir) = t.cfg.train.ckpt_dir.clone() {
+            let path = dir.join(flextp::checkpoint::ckpt_filename(t.giter()));
+            let every = t.cfg.train.ckpt_every as u64;
+            if every == 0 || t.giter() % every != 0 || !path.exists() {
+                t.save_checkpoint(&path)?;
+            }
+            println!(
+                "stopped after iteration {} (preempted); resume with --resume {}",
+                t.giter(),
+                path.display()
+            );
+        } else {
+            println!(
+                "stopped after iteration {} (no --ckpt-dir: state not persisted)",
+                t.giter()
+            );
+        }
+    }
+    for e in &report.epochs {
         println!(
             "epoch {:>3}: RT(sim)={:.3}s wall={:.1}s loss={:.4} eval={:.4} \
              acc={:.1}% comm={} pruned={} migrated={} replans={} chi_max={:.1}",
-            epoch,
+            e.epoch,
             e.rt_sim_s,
             e.rt_wall_s,
             e.train_loss,
@@ -135,10 +185,10 @@ fn cmd_train(kv: &std::collections::BTreeMap<String, String>) -> Result<()> {
             e.chi_max,
         );
     }
-    println!("{}", t.report.summary());
+    println!("{}", report.summary());
     let out = std::path::PathBuf::from("bench_out")
         .join(format!("train_{}_{}.json", t.model().name, strategy));
-    t.report.save_json(&out).context("saving report")?;
+    report.save_json(&out).context("saving report")?;
     println!("report: {}", out.display());
     Ok(())
 }

@@ -37,9 +37,31 @@ pub struct EpochMetrics {
     pub chi_max: f64,
 }
 
+impl EpochMetrics {
+    /// Bitwise equality over every **simulated** quantity — everything
+    /// except `rt_wall_s`, which measures real host time and legitimately
+    /// differs between a resumed run (which only re-pays the post-resume
+    /// wall time) and an uninterrupted one.  This is the comparison the
+    /// checkpoint-resume parity suite and CI job pin.
+    pub fn sim_equal(&self, o: &EpochMetrics) -> bool {
+        self.epoch == o.epoch
+            && self.rt_sim_s == o.rt_sim_s
+            && self.train_loss == o.train_loss
+            && self.eval_loss == o.eval_loss
+            && self.acc == o.acc
+            && self.comm_bytes == o.comm_bytes
+            && self.pruned_cols == o.pruned_cols
+            && self.migrated_cols == o.migrated_cols
+            && self.rank_compute_s == o.rank_compute_s
+            && self.replans == o.replans
+            && self.chi_mean == o.chi_mean
+            && self.chi_max == o.chi_max
+    }
+}
+
 /// One `--timeline` sample: contention vs runtime, per iteration — the
 /// raw material for plotting χ against RT and replan events.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct IterSample {
     /// global iteration index
     pub giter: u64,
@@ -127,6 +149,17 @@ impl RunReport {
             return 1.0;
         }
         self.epochs.iter().map(|e| e.chi_mean).sum::<f64>() / self.epochs.len() as f64
+    }
+
+    /// Whole-run [`EpochMetrics::sim_equal`]: losses, per-epoch simulated
+    /// metrics, and timeline samples all bitwise equal (wall time
+    /// excluded).  Used by the resume-determinism harness to state "a
+    /// resumed run is indistinguishable from an uninterrupted one".
+    pub fn sim_equal(&self, o: &RunReport) -> bool {
+        self.loss_curve == o.loss_curve
+            && self.epochs.len() == o.epochs.len()
+            && self.epochs.iter().zip(&o.epochs).all(|(a, b)| a.sim_equal(b))
+            && self.timeline == o.timeline
     }
 
     pub fn to_json(&self) -> Json {
@@ -252,6 +285,23 @@ mod tests {
         assert_eq!(r.total_replans(), 4);
         assert_eq!(r.chi_max(), 6.0);
         assert!((r.chi_mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sim_equal_ignores_wall_time_only() {
+        let mut a = mk(&[1.0, 2.0], &[0.1, 0.2]);
+        a.loss_curve = vec![2.5, 2.25];
+        let mut b = a.clone();
+        b.epochs[0].rt_wall_s = 99.0; // wall time may differ
+        assert!(a.sim_equal(&b));
+        b.epochs[1].rt_sim_s += 1e-9; // any sim field may not
+        assert!(!a.sim_equal(&b));
+        let mut c = a.clone();
+        c.loss_curve[1] = 2.26;
+        assert!(!a.sim_equal(&c));
+        let mut d = a.clone();
+        d.epochs.pop();
+        assert!(!a.sim_equal(&d));
     }
 
     #[test]

@@ -14,7 +14,7 @@ use crate::util::bin::Bundle;
 use crate::util::rng::Rng;
 
 /// One transformer block's per-worker shard.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct BlockShard {
     pub ln1_g: Tensor,
     pub ln1_b: Tensor,
@@ -61,7 +61,7 @@ impl BlockShard {
 }
 
 /// Replicated (unsharded) parameters.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RepParams {
     pub w_patch: Tensor,
     pub pos: Tensor,

@@ -14,7 +14,7 @@
 #[derive(Debug, Clone)]
 pub struct Tracker {
     /// δ per contraction index; None until the first epoch completes
-    w_var: Option<Vec<f32>>,
+    pub(crate) w_var: Option<Vec<f32>>,
     n: usize,
 }
 

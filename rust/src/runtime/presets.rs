@@ -8,7 +8,7 @@
 //! names, roles, shapes, and bucket sizes all follow the aot.py contract —
 //! so the trainer, balancers, and tests run identically on either source.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use super::manifest::{ArgSpec, Bucket, Dtype, ExecSpec, Manifest, ModelInfo};
 
@@ -318,6 +318,31 @@ fn mig_buckets(ffl: usize) -> Vec<usize> {
 /// minus the HLO files the native backend does not need).
 pub fn synthesize(name: &str) -> Result<Manifest> {
     let p = preset(name)?;
+    synthesize_preset(p)
+}
+
+/// Synthesize a preset's manifest at a **different worker count** — the
+/// elastic-resume target geometry (`--e`, DESIGN.md §13).  The model
+/// itself (hs, depth, heads, batch) is unchanged; only the 1D-TP shard
+/// widths (`hsl = hs/e`, `ffl = 4·hs/e`, `hl = heads/e`) re-derive.
+/// Valid targets must divide both `hs` and `heads` so every worker gets
+/// whole attention heads and lane-aligned FFN slices.
+pub fn synthesize_with_e(name: &str, e: usize) -> Result<Manifest> {
+    let mut p = preset(name)?;
+    ensure!(e >= 1, "worker count must be ≥ 1");
+    ensure!(
+        p.hs % e == 0 && p.heads % e == 0,
+        "'{name}' cannot be sharded over {e} workers: e must divide \
+         hs={} and heads={} (valid: divisors of {})",
+        p.hs,
+        p.heads,
+        crate::util::gcd(p.hs, p.heads),
+    );
+    p.e = e;
+    synthesize_preset(p)
+}
+
+fn synthesize_preset(p: Preset) -> Result<Manifest> {
     let m = model_info(&p);
     let buckets = KEEP_FRACS
         .iter()
@@ -406,5 +431,35 @@ mod tests {
     fn unknown_preset_rejected() {
         assert!(preset("vit-9000").is_err());
         assert!(synthesize("vit-9000").is_err());
+    }
+
+    #[test]
+    fn synthesize_with_e_rederives_shard_widths() {
+        // vit-tiny default e=4; elastic at e=2 doubles every shard width
+        let man = synthesize_with_e("vit-tiny", 2).unwrap();
+        let m = &man.model;
+        assert_eq!(m.e, 2);
+        assert_eq!(m.hsl, 64);
+        assert_eq!(m.hl, 2);
+        assert_eq!(m.ffl, 256);
+        assert_eq!(m.hd, 32, "head dim is e-independent");
+        // the whole inventory re-derives against the new widths
+        assert!(man.exec("mlp_fwd_g00").is_ok());
+        assert_eq!(man.buckets[0].keep_ffl, 256);
+        // default-e synthesis is unchanged
+        let d = synthesize_with_e("vit-tiny", 4).unwrap();
+        assert_eq!(d.model.hsl, synthesize("vit-tiny").unwrap().model.hsl);
+    }
+
+    #[test]
+    fn synthesize_with_e_rejects_indivisible_targets() {
+        // vit-tiny: hs=128, heads=4 → e=8 violates heads, e=3 violates hs
+        assert!(synthesize_with_e("vit-tiny", 8).is_err());
+        assert!(synthesize_with_e("vit-tiny", 3).is_err());
+        assert!(synthesize_with_e("vit-tiny", 0).is_err());
+        // vit-s: hs=256, heads=8 → 1, 2, 4, 8 all valid
+        for e in [1usize, 2, 4, 8] {
+            assert!(synthesize_with_e("vit-s", e).is_ok(), "e={e}");
+        }
     }
 }

@@ -89,9 +89,9 @@ pub struct Monitor {
     /// last iteration's per-rank matmul runtime M_i (block GEMMs only)
     pub m_iter: Vec<f64>,
     /// the T_avg each rank last synchronized on
-    t_avg_cached: Vec<f64>,
+    pub(crate) t_avg_cached: Vec<f64>,
     /// the own-T value at the time of the last sync
-    t_self_at_sync: Vec<f64>,
+    pub(crate) t_self_at_sync: Vec<f64>,
     /// number of passive refreshes triggered (metrics)
     pub refreshes: u64,
 }

@@ -17,7 +17,7 @@ use crate::tensor::Tensor;
 pub struct Sgd {
     pub lr: f32,
     pub momentum: f32,
-    bufs: BTreeMap<String, Tensor>,
+    pub(crate) bufs: BTreeMap<String, Tensor>,
 }
 
 impl Sgd {

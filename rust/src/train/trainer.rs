@@ -40,6 +40,19 @@
 //! `--time-model modeled` swaps measured charges for deterministic
 //! FLOP-model seconds, making whole dynamic runs (replans included)
 //! bitwise thread-count-invariant and sweeps reproducible.
+//!
+//! # Checkpoint / elastic resume (DESIGN.md §13)
+//!
+//! Every completed iteration is a snapshot point: `--ckpt-dir` +
+//! `--ckpt-every` write atomic `.flexckpt` files capturing the *whole*
+//! training state — model shards, optimizer moments, data/RNG cursors,
+//! monitor/controller statistics, the cached balancing plan, SimClock
+//! and comm-stat accumulators, and the run report so far.  A same-`E`
+//! [`Trainer::resume_from`] continues **bitwise identically** to the
+//! uninterrupted run (pinned by `tests/checkpoint_resume.rs`); resuming
+//! under a different `--e` re-shards the saved state exactly
+//! (`checkpoint::elastic`) and re-runs the Eq. 2/3 allocation before the
+//! first resumed iteration.
 
 use std::sync::Mutex;
 
@@ -90,34 +103,57 @@ pub struct Trainer {
     trace: ContentionTrace,
     /// EWMA drift detector driving `--replan online`
     pub controller: DriftDetector,
-    /// plan cache for the epoch/online replan modes
-    cached_actions: Option<Vec<WorkerAction>>,
+    /// plan cache for the epoch/online replan modes (checkpointed so a
+    /// mid-epoch resume reuses the very plan the killed run was on)
+    pub(crate) cached_actions: Option<Vec<WorkerAction>>,
     /// true while warmup_and_pretest's untimed iteration runs: the trace
     /// is not applied and plan/χ accounting is suppressed
     warming: bool,
     /// previous-iteration grads per (worker, block) — Same policy only
-    prev_grads: Option<Vec<Vec<BlockGrads>>>,
+    pub(crate) prev_grads: Option<Vec<Vec<BlockGrads>>>,
     /// fixed-batch override (golden tests)
     pub forced_batch: Option<Batch>,
     /// forced per-worker actions (golden pruned-step test)
     pub forced_actions: Option<Vec<WorkerAction>>,
-    global_iter: u64,
-    epoch_pruned_cols: u64,
-    epoch_migrated_cols: u64,
-    epoch_compute: Vec<f64>,
-    epoch_replans: u64,
-    epoch_chi_sum: f64,
-    epoch_chi_max: f64,
-    epoch_chi_iters: u64,
+    pub(crate) global_iter: u64,
+    // -- epoch-in-progress accumulators (checkpointed: a mid-epoch
+    //    resume finishes the epoch with the interrupted run's partials)
+    pub(crate) epoch_pruned_cols: u64,
+    pub(crate) epoch_migrated_cols: u64,
+    pub(crate) epoch_compute: Vec<f64>,
+    pub(crate) epoch_replans: u64,
+    pub(crate) epoch_chi_sum: f64,
+    pub(crate) epoch_chi_max: f64,
+    pub(crate) epoch_chi_iters: u64,
+    pub(crate) epoch_loss_sum: f64,
+    /// `CommStats::total_bytes` at the epoch boundary (per-epoch deltas)
+    pub(crate) epoch_start_bytes: u64,
+    /// accumulated real wall seconds of this epoch across kill/resume
+    /// segments (the only non-bitwise epoch metric)
+    pub(crate) epoch_wall_s: f64,
+    /// true after a checkpoint restore: `run_to` skips warmup/pretest
+    /// (the restored costs/statistics already include it)
+    pub(crate) resumed: bool,
     last_replanned: bool,
 }
 
 impl Trainer {
     pub fn new(cfg: RunCfg) -> Result<Trainer> {
-        let rt = Runtime::open(&cfg.model_dir(), &cfg.model, cfg.backend)
-            .with_context(|| {
-                format!("opening {} backend for '{}'", cfg.backend.name(), cfg.model)
-            })?;
+        let rt = match cfg.e_override {
+            None => Runtime::open(&cfg.model_dir(), &cfg.model, cfg.backend)
+                .with_context(|| {
+                    format!("opening {} backend for '{}'", cfg.backend.name(), cfg.model)
+                })?,
+            Some(e) => {
+                anyhow::ensure!(
+                    cfg.backend == crate::config::BackendKind::Native,
+                    "--e (elastic worker-count override) requires the native backend"
+                );
+                let man = crate::runtime::presets::synthesize_with_e(&cfg.model, e)
+                    .with_context(|| format!("sharding '{}' over {e} workers", cfg.model))?;
+                Runtime::native_with_manifest(man)
+            }
+        };
         let m = rt.manifest.model.clone();
         let state = ModelState::init(&m, cfg.train.seed);
         let data = SynthData::new(&m, cfg.train.seed);
@@ -192,8 +228,48 @@ impl Trainer {
             epoch_chi_sum: 0.0,
             epoch_chi_max: 0.0,
             epoch_chi_iters: 0,
+            epoch_loss_sum: 0.0,
+            epoch_start_bytes: 0,
+            epoch_wall_s: 0.0,
+            resumed: false,
             last_replanned: false,
         })
+    }
+
+    /// Build a trainer and restore it from a checkpoint — a `.flexckpt`
+    /// file or a checkpoint directory (newest complete snapshot wins).
+    ///
+    /// With the same config and worker count the resumed run continues
+    /// **bitwise identically** to the uninterrupted one (losses, eval
+    /// metrics, `CommStats`); with a different `cfg.e_override` the saved
+    /// state is elastically re-sharded (DESIGN.md §13) and continuation
+    /// is loss-equivalent rather than bitwise.
+    pub fn resume_from(cfg: RunCfg, from: &std::path::Path) -> Result<Trainer> {
+        let path = if from.is_dir() {
+            crate::checkpoint::latest_in_dir(from).with_context(|| {
+                format!("no complete ckpt-*.flexckpt snapshot in {}", from.display())
+            })?
+        } else {
+            from.to_path_buf()
+        };
+        let snap = crate::checkpoint::Snapshot::load(&path)
+            .with_context(|| format!("loading checkpoint {}", path.display()))?;
+        let mut t = Trainer::new(cfg)?;
+        crate::checkpoint::restore_trainer(&mut t, &snap)
+            .with_context(|| format!("restoring {}", path.display()))?;
+        Ok(t)
+    }
+
+    /// The global-iteration cursor: iterations completed so far
+    /// (`epoch · iters_per_epoch + iter`); also the data-stream position.
+    pub fn giter(&self) -> u64 {
+        self.global_iter
+    }
+
+    /// Has the configured schedule (epochs × iters) fully run?
+    pub fn is_complete(&self) -> bool {
+        self.global_iter
+            >= (self.cfg.train.epochs * self.cfg.train.iters_per_epoch) as u64
     }
 
     pub fn model(&self) -> &crate::runtime::manifest::ModelInfo {
@@ -255,53 +331,115 @@ impl Trainer {
             .collect()
     }
 
-    /// Full run: warmup/pretest, then epochs of train + eval.
+    /// Full run: warmup/pretest (fresh runs only), then epochs of
+    /// train + eval, starting wherever the cursor points.
     pub fn run(&mut self) -> Result<RunReport> {
-        self.warmup_and_pretest()?;
-        for epoch in 0..self.cfg.train.epochs {
-            self.run_epoch(epoch)?;
+        self.run_to(None)
+    }
+
+    /// [`Trainer::run`], stopping after global iteration `stop_after`
+    /// completes (post-iteration point — a simulated preemption: the
+    /// state left behind is exactly what [`Trainer::save_checkpoint`]
+    /// snapshots and what a resumed trainer continues from).  `None`
+    /// runs the whole schedule.
+    pub fn run_to(&mut self, stop_after: Option<u64>) -> Result<RunReport> {
+        // a cursor already at/past the stop point trains nothing — the
+        // contract is "stop once iteration N has completed", and it has
+        if let Some(stop) = stop_after {
+            if self.global_iter >= stop {
+                return Ok(self.report.clone());
+            }
+        }
+        if !self.resumed && self.global_iter == 0 && self.report.epochs.is_empty() {
+            self.warmup_and_pretest()?;
+        }
+        let ipe = self.cfg.train.iters_per_epoch.max(1);
+        let start_epoch = (self.global_iter as usize) / ipe;
+        for epoch in start_epoch..self.cfg.train.epochs {
+            if self.run_epoch_to(epoch, stop_after)? {
+                break;
+            }
         }
         Ok(self.report.clone())
     }
 
     pub fn run_epoch(&mut self, epoch: usize) -> Result<()> {
+        self.run_epoch_to(epoch, None).map(|_| ())
+    }
+
+    /// Run (the rest of) one epoch.  A fresh epoch (cursor at the
+    /// boundary) resets the per-epoch accumulators; a resumed mid-epoch
+    /// cursor continues on the restored partials — that is what makes a
+    /// same-`E` resume bitwise-identical to the uninterrupted run.
+    /// Returns true when `stop_after` fired inside this epoch.
+    fn run_epoch_to(&mut self, epoch: usize, stop_after: Option<u64>) -> Result<bool> {
         let e = self.model().e;
-        // χ now applies per *iteration* from the realized trace inside
-        // train_iter (the injector snapshots one row per iteration)
-        self.clocks.reset();
-        self.epoch_pruned_cols = 0;
-        self.epoch_migrated_cols = 0;
-        self.epoch_compute = vec![0.0; e];
-        self.epoch_replans = 0;
-        self.epoch_chi_sum = 0.0;
-        self.epoch_chi_max = 0.0;
-        self.epoch_chi_iters = 0;
-        let wall0 = std::time::Instant::now();
-        let mut rt_sim = 0.0;
-        let mut loss_sum = 0.0;
-        let bytes0 = self.comm.stats.total_bytes();
-        for _ in 0..self.cfg.train.iters_per_epoch {
-            let t0 = self.clocks.max();
-            let loss = self.train_iter()?;
-            loss_sum += loss as f64;
-            self.report.loss_curve.push(loss);
-            rt_sim += self.clocks.max() - t0;
+        let ipe = self.cfg.train.iters_per_epoch;
+        let base = (epoch * ipe) as u64;
+        anyhow::ensure!(
+            self.global_iter >= base && (self.global_iter - base) < ipe.max(1) as u64,
+            "cursor (global_iter {}) is outside epoch {epoch} [{base}, {})",
+            self.global_iter,
+            base + ipe as u64,
+        );
+        let start_iter = (self.global_iter - base) as usize;
+        if start_iter == 0 {
+            // χ applies per *iteration* from the realized trace inside
+            // train_iter (the injector snapshots one row per iteration)
+            self.clocks.reset();
+            self.epoch_pruned_cols = 0;
+            self.epoch_migrated_cols = 0;
+            self.epoch_compute = vec![0.0; e];
+            self.epoch_replans = 0;
+            self.epoch_chi_sum = 0.0;
+            self.epoch_chi_max = 0.0;
+            self.epoch_chi_iters = 0;
+            self.epoch_loss_sum = 0.0;
+            self.epoch_wall_s = 0.0;
+            self.epoch_start_bytes = self.comm.stats.total_bytes();
         }
+        let mut wall0 = std::time::Instant::now();
+        for it in start_iter..ipe {
+            let loss = self.train_iter()?;
+            self.epoch_loss_sum += loss as f64;
+            self.report.loss_curve.push(loss);
+            if it + 1 == ipe {
+                self.finalize_epoch(epoch, &mut wall0)?;
+            }
+            self.maybe_checkpoint(&mut wall0)?;
+            if let Some(stop) = stop_after {
+                if self.global_iter >= stop {
+                    self.epoch_wall_s += take_wall(&mut wall0);
+                    return Ok(true);
+                }
+            }
+        }
+        Ok(false)
+    }
+
+    /// Epoch close-out: eval, balancer statistics refresh, metrics push.
+    /// Runs right after the epoch's last iteration, *before* any
+    /// checkpoint at that boundary — so a boundary snapshot already
+    /// contains the finalized epoch and a resume starts the next one.
+    fn finalize_epoch(&mut self, epoch: usize, wall0: &mut std::time::Instant) -> Result<()> {
+        let e = self.model().e;
         let (eval_loss, acc) = self.eval()?;
         self.balancer.epoch_end(&self.state);
-        let rank_compute = self.epoch_compute.clone();
+        self.epoch_wall_s += take_wall(wall0);
         let chi_cells = self.epoch_chi_iters.saturating_mul(e as u64);
         self.report.epochs.push(EpochMetrics {
             epoch,
-            rt_sim_s: rt_sim,
-            rt_wall_s: wall0.elapsed().as_secs_f64(),
-            train_loss: loss_sum / self.cfg.train.iters_per_epoch as f64,
+            // clocks reset at the epoch boundary, so the frontier IS the
+            // epoch's simulated runtime (Σ-of-deltas telescopes to it)
+            rt_sim_s: self.clocks.max(),
+            rt_wall_s: self.epoch_wall_s,
+            train_loss: self.epoch_loss_sum / self.cfg.train.iters_per_epoch as f64,
             eval_loss,
             acc,
-            comm_bytes: self.comm.stats.total_bytes() - bytes0,
+            comm_bytes: self.comm.stats.total_bytes() - self.epoch_start_bytes,
             pruned_cols: self.epoch_pruned_cols,
             migrated_cols: self.epoch_migrated_cols,
-            rank_compute_s: rank_compute,
+            rank_compute_s: self.epoch_compute.clone(),
             replans: self.epoch_replans,
             chi_mean: if chi_cells > 0 {
                 self.epoch_chi_sum / chi_cells as f64
@@ -310,6 +448,31 @@ impl Trainer {
             },
             chi_max: self.epoch_chi_max,
         });
+        Ok(())
+    }
+
+    /// Periodic snapshot: every `--ckpt-every` completed iterations,
+    /// written atomically into `--ckpt-dir` as `ckpt-<giter>.flexckpt`.
+    fn maybe_checkpoint(&mut self, wall0: &mut std::time::Instant) -> Result<()> {
+        let every = self.cfg.train.ckpt_every as u64;
+        let Some(dir) = self.cfg.train.ckpt_dir.clone() else { return Ok(()) };
+        if every == 0 || self.global_iter == 0 || self.global_iter % every != 0 {
+            return Ok(());
+        }
+        // wall time up to the snapshot belongs to this run segment; the
+        // resumed segment adds its own on top of the serialized value
+        self.epoch_wall_s += take_wall(wall0);
+        let path = dir.join(crate::checkpoint::ckpt_filename(self.global_iter));
+        self.save_checkpoint(&path)
+    }
+
+    /// Snapshot the complete trainer state to `path` (atomic write —
+    /// a crash leaves no torn checkpoint).  See `checkpoint` module docs
+    /// for exactly what is captured.
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        let snap = crate::checkpoint::save_trainer(self);
+        snap.save_atomic(path)
+            .with_context(|| format!("writing checkpoint {}", path.display()))?;
         Ok(())
     }
 
@@ -333,8 +496,16 @@ impl Trainer {
         // the first real iteration is a baseline, not a phantom drift
         self.controller = DriftDetector::new(self.cfg.control);
         self.controller.observe(&self.monitor.t_iter);
+        self.costs = self.fresh_cost_fit();
+        Ok(())
+    }
+
+    /// One pretest cost fit from the current timing profile (measured
+    /// mode) or the deterministic FLOP model — shared by warmup, the
+    /// online controller's refits, and elastic resume.
+    pub(crate) fn fresh_cost_fit(&self) -> CostFns {
         let m = self.rt.manifest.model.clone();
-        self.costs = match self.cfg.train.time_model {
+        match self.cfg.train.time_model {
             TimeModel::Measured => {
                 let prof = self.rt.timing_profile();
                 let mlp_secs: f64 = prof
@@ -349,8 +520,7 @@ impl Trainer {
                 &self.comm.cost,
                 timemodel::mlp_s(&m, m.hs, m.ffl, false) + timemodel::mlp_s(&m, m.hs, m.ffl, true),
             ),
-        };
-        Ok(())
+        }
     }
 
     // -----------------------------------------------------------------
@@ -655,23 +825,7 @@ impl Trainer {
     /// deterministic fit (blending equal fits is the identity, keeping
     /// runs bitwise reproducible).
     fn refresh_costs(&mut self) {
-        let m = self.rt.manifest.model.clone();
-        let fresh = match self.cfg.train.time_model {
-            TimeModel::Measured => {
-                let prof = self.rt.timing_profile();
-                let mlp_secs: f64 = prof
-                    .iter()
-                    .filter(|(n, _, _)| n.starts_with("mlp_fwd") || n.starts_with("mlp_bwd"))
-                    .map(|(_, calls, secs)| secs / (*calls).max(1) as f64)
-                    .sum();
-                crate::train::pretest(&m, &self.comm.cost, mlp_secs)
-            }
-            TimeModel::Modeled => crate::train::pretest_det(
-                &m,
-                &self.comm.cost,
-                timemodel::mlp_s(&m, m.hs, m.ffl, false) + timemodel::mlp_s(&m, m.hs, m.ffl, true),
-            ),
-        };
+        let fresh = self.fresh_cost_fit();
         self.costs = self.costs.blend(&fresh, 0.5);
     }
 
@@ -1319,6 +1473,14 @@ impl Trainer {
         x.add_assign(&acc);
         self.recycle_rank(0, acc);
     }
+}
+
+/// Drain a wall-clock segment: elapsed seconds since `w`, resetting `w`
+/// to now (epoch wall accounting across checkpoint/kill boundaries).
+fn take_wall(w: &mut std::time::Instant) -> f64 {
+    let dt = w.elapsed().as_secs_f64();
+    *w = std::time::Instant::now();
+    dt
 }
 
 /// One migration receiver slice's computed outputs (pre-merge).

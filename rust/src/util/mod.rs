@@ -13,6 +13,17 @@ pub mod json;
 pub mod rng;
 pub mod table;
 
+/// Greatest common divisor (elastic worker-count validation).
+pub fn gcd(a: usize, b: usize) -> usize {
+    let (mut a, mut b) = (a, b);
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
 /// Format a byte count human-readably (metrics/logs).
 pub fn fmt_bytes(n: u64) -> String {
     const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];

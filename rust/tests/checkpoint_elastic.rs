@@ -1,0 +1,111 @@
+//! Elastic resume suite (DESIGN.md §13): a checkpoint written by an
+//! `E`-rank run restores onto a different worker count.
+//!
+//! Contract pinned here:
+//! * **exactness** — re-partitioning is pure slicing: the full
+//!   (TP-undone) model after an elastic restore is bitwise identical to
+//!   the checkpointed one, for both shrink (4→2) and grow (4→8);
+//! * **loss equivalence** — the post-resume loss trajectory matches the
+//!   uninterrupted base run (the fresh-plan oracle at the original E)
+//!   within f32 reduction-order tolerance: a different worker count
+//!   changes partial-sum order, never the math;
+//! * **validation** — indivisible worker counts are rejected up front.
+
+use flextp::checkpoint::elastic::gather_full;
+use flextp::config::{RunCfg, TimeModel};
+use flextp::train::trainer::Trainer;
+
+const EPOCHS: usize = 1;
+const IPE: usize = 4;
+const KILL: u64 = 2;
+
+/// vit-s (hs=256, heads=8) run at e=4 — both 2 and 8 divide hs & heads.
+fn base_cfg(e: usize) -> RunCfg {
+    let mut cfg = RunCfg::new("vit-s");
+    cfg.e_override = Some(e);
+    cfg.train.threads = 1;
+    cfg.train.epochs = EPOCHS;
+    cfg.train.iters_per_epoch = IPE;
+    cfg.train.eval_iters = 1;
+    cfg.train.momentum = 0.9;
+    cfg.train.time_model = TimeModel::Modeled;
+    // calm + baseline: the oracle comparison isolates re-sharding from
+    // balancing-policy divergence across worker counts
+    cfg
+}
+
+fn tmp_ckpt(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("flextp_elastic_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d.join(flextp::checkpoint::ckpt_filename(KILL))
+}
+
+#[test]
+fn elastic_resume_repartitions_exactly_and_tracks_the_oracle() {
+    // --- base 4-rank run: train to the kill point, checkpoint, then
+    //     (as the oracle) keep going uninterrupted
+    let path = tmp_ckpt("main");
+    let mut base = Trainer::new(base_cfg(4)).expect("base trainer");
+    base.run_to(Some(KILL)).expect("base to kill point");
+    base.save_checkpoint(&path).expect("checkpoint");
+    let full_at_kill = gather_full(&base.rt.manifest.model, &base.state);
+    let oracle = base.run().expect("oracle continues uninterrupted");
+    let oracle_tail = &oracle.loss_curve[KILL as usize..];
+
+    for e in [2usize, 8] {
+        let mut t = Trainer::resume_from(base_cfg(e), &path)
+            .unwrap_or_else(|err| panic!("elastic resume e={e}: {err}"));
+        assert_eq!(t.giter(), KILL);
+        assert_eq!(t.model().e, e);
+        // exactness: undoing the new partition reproduces the
+        // checkpointed full model bit for bit
+        let full = gather_full(&t.rt.manifest.model, &t.state);
+        assert_eq!(full, full_at_kill, "e={e}: re-partition must round-trip exactly");
+        // momentum moved with the weights: resharded buffers exist for
+        // every shard key and the rep keys
+        assert!(
+            t.opt.buffer_count() > 0,
+            "e={e}: momentum buffers must survive elastic resume"
+        );
+        // loss equivalence: same math, different f32 reduction order
+        let r = t.run().expect("resumed run");
+        assert_eq!(r.loss_curve.len(), oracle.loss_curve.len());
+        let tail = &r.loss_curve[KILL as usize..];
+        for (i, (a, b)) in tail.iter().zip(oracle_tail).enumerate() {
+            assert!(a.is_finite(), "e={e}: loss {i} diverged");
+            assert!(
+                (a - b).abs() <= 5e-3 * b.abs().max(1.0),
+                "e={e}: post-resume loss {i} drifted: resumed {a} vs oracle {b}"
+            );
+        }
+        // the pre-kill history is carried over verbatim
+        assert_eq!(
+            &r.loss_curve[..KILL as usize],
+            &oracle.loss_curve[..KILL as usize],
+            "e={e}: restored loss history must be the checkpointed one"
+        );
+        // eval on the resharded model agrees with the oracle closely
+        let (el, ol) = (r.epochs[0].eval_loss, oracle.epochs[0].eval_loss);
+        assert!(
+            (el - ol).abs() <= 5e-3 * ol.abs().max(1.0),
+            "e={e}: eval loss drifted: {el} vs {ol}"
+        );
+    }
+    let _ = std::fs::remove_dir_all(path.parent().unwrap());
+}
+
+#[test]
+fn elastic_resume_rejects_indivisible_worker_counts() {
+    let path = tmp_ckpt("reject");
+    {
+        let mut base = Trainer::new(base_cfg(4)).expect("base trainer");
+        base.run_to(Some(KILL)).expect("base");
+        base.save_checkpoint(&path).expect("checkpoint");
+    }
+    // 3 divides neither hs=256 nor heads=8 → rejected while building the
+    // target trainer, with an explanatory error
+    let err = Trainer::resume_from(base_cfg(3), &path).unwrap_err().to_string();
+    assert!(err.contains("3"), "got: {err}");
+    let _ = std::fs::remove_dir_all(path.parent().unwrap());
+}

@@ -1,0 +1,187 @@
+//! Bitwise resume-determinism suite (DESIGN.md §13).
+//!
+//! The subsystem's core contract: a run that is killed after iteration k
+//! and resumed from its checkpoint is **indistinguishable** from one
+//! that was never interrupted — bitwise-identical losses, eval metrics,
+//! and `CommStats`, at `--threads` 1 and 4 alike.  That only holds if
+//! the snapshot really captures *everything* the math reads: model
+//! shards, optimizer moments, data/trace cursors, monitor + controller
+//! statistics, the cached balancing plan, the balancer's RNG stream and
+//! priority state, SimClocks, comm counters, and the Same-imputation
+//! gradient history.  Each test below kills a run at a different kind of
+//! boundary to make a missing piece observable.
+
+use flextp::config::{ReplanMode, RunCfg, StragglerPlan, Strategy, TimeModel};
+use flextp::contention::ScenarioSpec;
+use flextp::metrics::RunReport;
+use flextp::train::trainer::Trainer;
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("flextp_resume_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// The full dynamic pipeline: SEMI + online controller + momentum under
+/// a bursty/stochastic contention trace, deterministic modeled clock.
+fn dynamic_cfg(threads: usize) -> RunCfg {
+    let mut cfg = RunCfg::new("vit-tiny");
+    cfg.train.threads = threads;
+    cfg.train.epochs = 2;
+    cfg.train.iters_per_epoch = 6;
+    cfg.train.eval_iters = 2;
+    cfg.train.momentum = 0.9;
+    cfg.train.time_model = TimeModel::Modeled;
+    cfg.balancer.strategy = Strategy::Semi;
+    cfg.balancer.replan = ReplanMode::Online;
+    cfg.balancer.forced_lambda = Some(1);
+    cfg.stragglers = StragglerPlan::Scenario(
+        ScenarioSpec::parse("burst:r1@x5:iters2-9,markov:r3@x2:p0.4-0.3,seed:9")
+            .expect("scenario"),
+    );
+    cfg
+}
+
+/// (report, comm bytes, allreduce ops) of an uninterrupted run.
+fn run_uninterrupted(cfg: RunCfg) -> (RunReport, u64, u64) {
+    let mut t = Trainer::new(cfg).expect("trainer");
+    let r = t.run().expect("run");
+    (r, t.comm.stats.total_bytes(), t.comm.stats.allreduce_ops)
+}
+
+/// Kill after iteration `k`, checkpoint, drop everything, resume from
+/// the snapshot, finish.  Returns the same observables.
+fn run_killed_and_resumed(cfg: RunCfg, k: u64, tag: &str) -> (RunReport, u64, u64) {
+    let dir = tmp_dir(tag);
+    let path = dir.join(flextp::checkpoint::ckpt_filename(k));
+    {
+        let mut t = Trainer::new(cfg.clone()).expect("trainer");
+        t.run_to(Some(k)).expect("run to kill point");
+        assert_eq!(t.giter(), k, "stop_after must stop exactly at k");
+        t.save_checkpoint(&path).expect("save checkpoint");
+        // t dropped here — the "kill"
+    }
+    let mut t = Trainer::resume_from(cfg, &path).expect("resume");
+    assert_eq!(t.giter(), k, "resume must restore the cursor");
+    let r = t.run().expect("resumed run");
+    let out = (r, t.comm.stats.total_bytes(), t.comm.stats.allreduce_ops);
+    let _ = std::fs::remove_dir_all(&dir);
+    out
+}
+
+fn assert_bitwise(a: &(RunReport, u64, u64), b: &(RunReport, u64, u64), what: &str) {
+    assert!(
+        a.0.loss_curve.iter().all(|l| l.is_finite()),
+        "{what}: diverged: {:?}",
+        a.0.loss_curve
+    );
+    assert_eq!(a.0.loss_curve, b.0.loss_curve, "{what}: losses must be bitwise identical");
+    assert!(a.0.sim_equal(&b.0), "{what}: per-epoch sim metrics must be bitwise identical");
+    assert_eq!(a.1, b.1, "{what}: CommStats::total_bytes must match");
+    assert_eq!(a.2, b.2, "{what}: all-reduce op counts must match");
+}
+
+#[test]
+fn mid_epoch_resume_is_bitwise_identical_at_1_and_4_threads() {
+    // kill at iteration 4 — mid epoch 0, while the online controller's
+    // EWMAs, the cached SEMI plan, and the momentum buffers are all hot
+    let mut per_thread = Vec::new();
+    for threads in [1usize, 4] {
+        let full = run_uninterrupted(dynamic_cfg(threads));
+        let resumed =
+            run_killed_and_resumed(dynamic_cfg(threads), 4, &format!("mid_t{threads}"));
+        assert_bitwise(&full, &resumed, &format!("threads={threads}"));
+        per_thread.push(full);
+    }
+    // and the 1-vs-4-thread parity contract survives the kill/resume
+    assert_bitwise(&per_thread[0], &per_thread[1], "threads 1 vs 4");
+    // sanity: the scenario actually balanced something
+    assert!(
+        per_thread[0].0.epochs.iter().map(|e| e.pruned_cols + e.migrated_cols).sum::<u64>() > 0,
+        "no balancing engaged — the test would not exercise plan serde"
+    );
+}
+
+#[test]
+fn epoch_boundary_resume_is_bitwise_identical() {
+    // kill at iteration 6 — exactly the epoch boundary: the snapshot
+    // must already contain epoch 0's eval/metrics and the balancer's
+    // epoch_end statistics refresh
+    let full = run_uninterrupted(dynamic_cfg(1));
+    let resumed = run_killed_and_resumed(dynamic_cfg(1), 6, "boundary");
+    assert_bitwise(&full, &resumed, "epoch boundary");
+    assert_eq!(resumed.0.epochs.len(), 2);
+}
+
+#[test]
+fn zero_rd_same_imputation_resume_is_bitwise_identical() {
+    // ZERO-Rd draws keep-sets from the balancer's RNG stream and the
+    // Same policy reads last iteration's gradients — both must survive
+    // the checkpoint for the continuation to stay bitwise.
+    let cfg = || {
+        let mut cfg = RunCfg::new("vit-tiny");
+        cfg.train.threads = 1;
+        cfg.train.epochs = 2;
+        cfg.train.iters_per_epoch = 5;
+        cfg.train.eval_iters = 2;
+        cfg.train.time_model = TimeModel::Modeled;
+        cfg.balancer.strategy = Strategy::ZeroRd;
+        cfg.balancer.imputation = flextp::config::Imputation::Same;
+        cfg.balancer.replan = ReplanMode::Iter;
+        cfg.stragglers = StragglerPlan::Fixed(vec![3.0, 1.0, 1.0, 1.0]);
+        cfg
+    };
+    let full = run_uninterrupted(cfg());
+    // kill at 7 — mid epoch 1, after an epoch_end tracker update
+    let resumed = run_killed_and_resumed(cfg(), 7, "zerord");
+    assert_bitwise(&full, &resumed, "zero-rd + same imputation");
+    assert!(
+        full.0.epochs.iter().map(|e| e.pruned_cols).sum::<u64>() > 0,
+        "straggler never pruned — RNG stream serde untested"
+    );
+}
+
+#[test]
+fn resume_from_directory_picks_newest_snapshot() {
+    let cfg = dynamic_cfg(1);
+    let dir = tmp_dir("dirpick");
+    {
+        let mut ckpt_cfg = cfg.clone();
+        ckpt_cfg.train.ckpt_dir = Some(dir.clone());
+        ckpt_cfg.train.ckpt_every = 2;
+        let mut t = Trainer::new(ckpt_cfg).expect("trainer");
+        t.run_to(Some(5)).expect("run");
+        // periodic snapshots landed at 2 and 4
+        assert!(dir.join(flextp::checkpoint::ckpt_filename(2)).exists());
+        assert!(dir.join(flextp::checkpoint::ckpt_filename(4)).exists());
+    }
+    let t = Trainer::resume_from(cfg, &dir).expect("resume from dir");
+    assert_eq!(t.giter(), 4, "directory resume must pick the newest snapshot");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_rejects_mismatched_config_and_model() {
+    let dir = tmp_dir("mismatch");
+    let path = dir.join(flextp::checkpoint::ckpt_filename(2));
+    {
+        let mut t = Trainer::new(dynamic_cfg(1)).expect("trainer");
+        t.run_to(Some(2)).expect("run");
+        t.save_checkpoint(&path).expect("save");
+    }
+    // a different seed changes the math → typed Incompatible error
+    let mut other = dynamic_cfg(1);
+    other.train.seed = 43;
+    let e = Trainer::resume_from(other, &path).unwrap_err().to_string();
+    assert!(e.contains("configuration"), "got: {e}");
+    // a different model is rejected before any state moves
+    let e = Trainer::resume_from(RunCfg::new("vit-s"), &path).unwrap_err().to_string();
+    assert!(e.contains("model") || e.contains("incompatible"), "got: {e}");
+    // threads may differ (bitwise-invariant), epochs may extend
+    let mut more = dynamic_cfg(4);
+    more.train.epochs = 3;
+    let t = Trainer::resume_from(more, &path).expect("threads/epochs changes are fine");
+    assert_eq!(t.giter(), 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -131,6 +131,51 @@ fn degenerate_plans_realize_as_epoch_constant_traces() {
 }
 
 #[test]
+fn trace_cursor_persists_across_resume_without_drift() {
+    // The checkpoint subsystem persists the contention-trace position as
+    // (plan descriptor string, global iteration) — the descriptor is
+    // `ScenarioSpec::describe()` and the trace is regenerated on resume.
+    // This test guards the cursor serde against off-by-one drift: for
+    // every kill point, the resumed trace's rows from the cursor onward
+    // must equal the uninterrupted trace's rows — including the row AT
+    // the cursor (the first resumed iteration) and the one before it
+    // (the last pre-kill iteration must NOT be replayed as shifted).
+    let src = "burst:r1@x5:iters3-11,markov:r*@x2:p0.3-0.25,\
+               pulse:r2@x3:from1:period5:on2,seed:17";
+    let spec = spec(src);
+    let (e, epochs, ipe) = (4usize, 3usize, 8usize);
+    let plan = StragglerPlan::Scenario(spec.clone());
+    let uninterrupted = ContentionTrace::from_plan(&plan, e, epochs, ipe);
+    for kill in [1usize, 7, 8, 13, 23] {
+        // what resume actually does: re-parse the persisted descriptor,
+        // rebuild the trace, continue at the saved global iteration
+        let described = ScenarioSpec::parse(&spec.describe()).expect("descriptor re-parses");
+        assert_eq!(described, spec, "describe() must round-trip the spec");
+        let resumed =
+            ContentionTrace::from_plan(&StragglerPlan::Scenario(described), e, epochs, ipe);
+        for g in kill.saturating_sub(1)..(epochs * ipe) {
+            assert_eq!(
+                resumed.chis(g),
+                uninterrupted.chis(g),
+                "kill={kill} g={g}: resumed trace drifted"
+            );
+            // and the chis_at reference path agrees with both
+            assert_eq!(
+                StragglerPlan::Scenario(spec.clone()).chis_at(e, g / ipe, g),
+                uninterrupted.chis(g).to_vec(),
+                "kill={kill} g={g}: chis_at disagrees"
+            );
+        }
+    }
+    // extending the schedule on resume (--epochs raised) keeps the
+    // shared prefix bitwise identical (prefix stability)
+    let extended = ContentionTrace::from_plan(&plan, e, epochs + 2, ipe);
+    for g in 0..(epochs * ipe) {
+        assert_eq!(extended.chis(g), uninterrupted.chis(g), "g={g}");
+    }
+}
+
+#[test]
 fn trace_stats_summarize_contention() {
     let t = ContentionTrace::generate(&spec("burst:r0@x5:iters0-2"), 2, 4);
     // rows: [5,1],[5,1],[1,1],[1,1] → mean = 16/8, max = 5

@@ -103,6 +103,36 @@ fn sweep_runs_are_deterministic_under_modeled_time() {
 }
 
 #[test]
+fn preempted_cell_reproduces_uninterrupted_cell_bitwise() {
+    // A `preempt:iterG` scenario event makes the sweep harness kill the
+    // trainer mid-epoch, checkpoint, and resume — under the modeled
+    // clock the cell's whole metric row must be bitwise identical to
+    // the never-interrupted run of the same trace (ISSUE 5 acceptance).
+    let mut spec = bursty_duel();
+    spec.name = "preempt-parity".into();
+    let killed = {
+        let mut sc = spec.scenarios[0].1.clone();
+        sc.preempt = Some(5); // mid epoch 0 (8 iters/epoch)
+        sc
+    };
+    spec.scenarios = vec![
+        ("plain".into(), spec.scenarios[0].1.clone()),
+        ("killed".into(), killed),
+    ];
+    spec.cells = vec![(Strategy::Semi, ReplanMode::Online)];
+    let report = run_sweep(&spec).expect("sweep with preemption");
+    let plain = report.cells.iter().find(|c| c.scenario == "plain").unwrap();
+    let killed = report.cells.iter().find(|c| c.scenario == "killed").unwrap();
+    assert_eq!(plain.rt, killed.rt, "RT must survive kill/resume bitwise");
+    assert_eq!(plain.final_acc, killed.final_acc);
+    assert_eq!(plain.best_acc, killed.best_acc);
+    assert_eq!(plain.comm_bytes, killed.comm_bytes);
+    assert_eq!(plain.replans, killed.replans);
+    assert_eq!(plain.chi_mean, killed.chi_mean);
+    assert_eq!(plain.chi_max, killed.chi_max);
+}
+
+#[test]
 fn sweep_report_writes_parseable_bench_scenarios_json() {
     // pipeline check on a minimal 1×1 matrix (calm scenario, quick)
     let mut spec = SweepSpec::preset("smoke").expect("smoke");
