@@ -481,6 +481,9 @@ pub fn run_model(model: &str, samples: usize, target_ms: f64) -> Result<Json> {
         ("rows", rows.into()),
         ("threads", threads.into()),
         ("samples", samples.into()),
+        // every number above came from a real timed run on this host —
+        // distinguishes CI-refreshed baselines from hand-seeded ones
+        ("measured", true.into()),
         (
             "note",
             "scalar = frozen pre-PR-3 reference kernels re-measured on this host; \

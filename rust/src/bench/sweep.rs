@@ -22,6 +22,42 @@ use crate::train::trainer::Trainer;
 use crate::util::json::{obj, Json};
 use crate::util::table::TextTable;
 
+/// One matrix column: a balancing strategy, its replan mode, and its
+/// stance towards worker churn.  `churn: true` (the default) lets the
+/// trainer act on `join:`/`leave:`/`fail:` scenario events by
+/// re-sharding in-process; `churn: false` pins the run to its starting
+/// worker count (optionally forced via `e_override`) — the fixed-E
+/// baselines the elastic cell is measured against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CellSpec {
+    pub strategy: Strategy,
+    pub replan: ReplanMode,
+    /// force the starting worker count (`--e`); `None` keeps the preset's
+    pub e_override: Option<usize>,
+    /// act on scenario churn events (live elastic re-parallelization)
+    pub churn: bool,
+}
+
+impl CellSpec {
+    pub fn new(strategy: Strategy, replan: ReplanMode) -> CellSpec {
+        CellSpec { strategy, replan, e_override: None, churn: true }
+    }
+
+    pub fn fixed(strategy: Strategy, replan: ReplanMode, e: Option<usize>) -> CellSpec {
+        CellSpec { strategy, replan, e_override: e, churn: false }
+    }
+
+    /// Elasticity tag, the `cell` column of `BENCH_scenarios.json`:
+    /// `live`, `live-eN`, `fixed`, or `fixed-eN`.
+    pub fn tag(&self) -> String {
+        let base = if self.churn { "live" } else { "fixed" };
+        match self.e_override {
+            Some(e) => format!("{base}-e{e}"),
+            None => base.to_string(),
+        }
+    }
+}
+
 /// One sweep's full specification.
 #[derive(Debug, Clone)]
 pub struct SweepSpec {
@@ -34,8 +70,8 @@ pub struct SweepSpec {
     pub time_model: TimeModel,
     /// (label, scenario) rows of the matrix
     pub scenarios: Vec<(String, ScenarioSpec)>,
-    /// (strategy, replan mode) columns of the matrix
-    pub cells: Vec<(Strategy, ReplanMode)>,
+    /// strategy/replan/elasticity columns of the matrix
+    pub cells: Vec<CellSpec>,
 }
 
 impl SweepSpec {
@@ -77,8 +113,8 @@ impl SweepSpec {
                     ("step6-kill13".into(), killed),
                 ];
                 s.cells = vec![
-                    (Strategy::Semi, ReplanMode::Online),
-                    (Strategy::Semi, ReplanMode::Epoch),
+                    CellSpec::new(Strategy::Semi, ReplanMode::Online),
+                    CellSpec::new(Strategy::Semi, ReplanMode::Epoch),
                 ];
             }
             // the paper's dynamic story: bursty traces vs the controller
@@ -89,22 +125,30 @@ impl SweepSpec {
                     ("markov-duo".into(), contention::preset("markov-duo")?),
                 ];
                 s.cells = vec![
-                    (Strategy::Semi, ReplanMode::Online),
-                    (Strategy::Semi, ReplanMode::Epoch),
-                    (Strategy::Mig, ReplanMode::Online),
-                    (Strategy::Baseline, ReplanMode::Iter),
+                    CellSpec::new(Strategy::Semi, ReplanMode::Online),
+                    CellSpec::new(Strategy::Semi, ReplanMode::Epoch),
+                    CellSpec::new(Strategy::Mig, ReplanMode::Online),
+                    CellSpec::new(Strategy::Baseline, ReplanMode::Iter),
                 ];
             }
-            // tenants arriving/departing against resize-only and hybrid
+            // the live-elasticity headline: worker r3 turns straggler
+            // (χ24 — past what γ-capped pruning can absorb) and then
+            // fails, and later a replacement joins.  The `live` cell
+            // re-shards 4→2→4 in-process; the fixed-E baselines either
+            // ride out the straggler at E=4 or pay 2× compute at E=2
+            // for the whole run — `churn_comparisons()` pins that the
+            // elastic cell beats both on modeled RT (tests/elastic_live.rs)
             "churn" => {
-                s.scenarios = vec![
-                    ("tenant-churn".into(), contention::preset("tenant-churn")?),
-                    ("burst1".into(), contention::preset("burst1")?),
-                ];
+                s.scenarios = vec![(
+                    "worker-churn".into(),
+                    ScenarioSpec::parse(
+                        "fail:r3@iter6,join:r3@iter30,burst:r3@x24:iters6-30,chimax:32",
+                    )?,
+                )];
                 s.cells = vec![
-                    (Strategy::Semi, ReplanMode::Online),
-                    (Strategy::ZeroPri, ReplanMode::Iter),
-                    (Strategy::Baseline, ReplanMode::Iter),
+                    CellSpec::new(Strategy::Semi, ReplanMode::Online),
+                    CellSpec::fixed(Strategy::Semi, ReplanMode::Online, None),
+                    CellSpec::fixed(Strategy::Semi, ReplanMode::Online, Some(2)),
                 ];
             }
             _ => bail!("unknown sweep preset '{name}' (smoke|bursty|churn)"),
@@ -113,13 +157,38 @@ impl SweepSpec {
     }
 }
 
-/// Parse a strategy cell: `"semi@online"` → (Semi, Online); a bare
-/// strategy name keeps the legacy per-iteration replanning.
-pub fn parse_cell(s: &str) -> Result<(Strategy, ReplanMode)> {
-    match s.split_once('@') {
-        Some((st, rp)) => Ok((Strategy::parse(st)?, ReplanMode::parse(rp)?)),
-        None => Ok((Strategy::parse(s)?, ReplanMode::Iter)),
+/// Parse a strategy cell: `"semi@online"` → Semi/Online; a bare
+/// strategy name keeps the legacy per-iteration replanning.  An
+/// optional third segment sets the elasticity stance: `semi@online@fixed`
+/// ignores churn events, `semi@online@fixed-e2` additionally forces the
+/// starting worker count, `semi@online@live` is the (default) elastic
+/// cell.
+pub fn parse_cell(s: &str) -> Result<CellSpec> {
+    let mut parts = s.splitn(3, '@');
+    let st = Strategy::parse(parts.next().unwrap_or(""))?;
+    let rp = match parts.next() {
+        Some(rp) => ReplanMode::parse(rp)?,
+        None => ReplanMode::Iter,
+    };
+    let mut cell = CellSpec::new(st, rp);
+    if let Some(el) = parts.next() {
+        let (base, e) = match el.split_once("-e") {
+            Some((b, n)) => {
+                let e: usize = n
+                    .parse()
+                    .with_context(|| format!("bad worker count in cell elasticity '{el}'"))?;
+                (b, Some(e))
+            }
+            None => (el, None),
+        };
+        match base {
+            "live" => cell.churn = true,
+            "fixed" => cell.churn = false,
+            _ => bail!("unknown cell elasticity '{el}' (live|fixed, optionally -eN)"),
+        }
+        cell.e_override = e;
     }
+    Ok(cell)
 }
 
 /// Parse `"label=dsl;label2=dsl"` (bare specs get s0, s1, … labels).
@@ -141,6 +210,8 @@ pub struct SweepCell {
     pub scenario: String,
     pub strategy: String,
     pub replan: String,
+    /// elasticity tag (`CellSpec::tag`): live / fixed / fixed-eN
+    pub cell: String,
     /// mean per-epoch simulated runtime (the paper's RT)
     pub rt: f64,
     pub final_acc: f64,
@@ -152,11 +223,12 @@ pub struct SweepCell {
 }
 
 impl SweepCell {
-    fn from_report(scenario: &str, strategy: Strategy, replan: ReplanMode, r: &RunReport) -> Self {
+    fn from_report(scenario: &str, cell: &CellSpec, r: &RunReport) -> Self {
         SweepCell {
             scenario: scenario.to_string(),
-            strategy: strategy.name().to_string(),
-            replan: replan.name().to_string(),
+            strategy: cell.strategy.name().to_string(),
+            replan: cell.replan.name().to_string(),
+            cell: cell.tag(),
             rt: r.rt(),
             final_acc: r.final_acc(),
             best_acc: r.best_acc(),
@@ -182,20 +254,27 @@ pub struct SweepReport {
 pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport> {
     let mut cells = Vec::new();
     for (label, scen) in &spec.scenarios {
-        for &(strategy, replan) in &spec.cells {
+        for cell in &spec.cells {
             let mut cfg = RunCfg::new(&spec.model);
-            cfg.balancer.strategy = strategy;
-            cfg.balancer.replan = replan;
+            cfg.balancer.strategy = cell.strategy;
+            cfg.balancer.replan = cell.replan;
+            cfg.e_override = cell.e_override;
+            cfg.train.churn = cell.churn;
             cfg.train.epochs = spec.epochs;
             cfg.train.iters_per_epoch = spec.iters;
             cfg.train.eval_iters = spec.eval_iters;
             cfg.train.seed = spec.seed;
             cfg.train.time_model = spec.time_model;
             cfg.stragglers = StragglerPlan::Scenario(scen.clone());
-            let r = run_cell(cfg, scen.preempt, label, strategy, replan).with_context(|| {
-                format!("cell {label} × {}@{}", strategy.name(), replan.name())
+            let r = run_cell(cfg, scen.preempt, label, cell).with_context(|| {
+                format!(
+                    "cell {label} × {}@{}@{}",
+                    cell.strategy.name(),
+                    cell.replan.name(),
+                    cell.tag()
+                )
             })?;
-            cells.push(SweepCell::from_report(label, strategy, replan, &r));
+            cells.push(SweepCell::from_report(label, cell, &r));
         }
     }
     Ok(SweepReport {
@@ -217,8 +296,7 @@ fn run_cell(
     cfg: RunCfg,
     preempt: Option<usize>,
     label: &str,
-    strategy: Strategy,
-    replan: ReplanMode,
+    cell: &CellSpec,
 ) -> Result<RunReport> {
     let Some(g) = preempt else {
         let mut t = Trainer::new(cfg)?;
@@ -231,11 +309,12 @@ fn run_cell(
         return Ok(t.report.clone());
     }
     let dir = std::env::temp_dir().join(format!(
-        "flextp_preempt_{}_{}_{}_{}",
+        "flextp_preempt_{}_{}_{}_{}_{}",
         std::process::id(),
         label.replace(|c: char| !c.is_ascii_alphanumeric(), "-"),
-        strategy.name(),
-        replan.name(),
+        cell.strategy.name(),
+        cell.replan.name(),
+        cell.tag(),
     ));
     let path = dir.join(crate::checkpoint::ckpt_filename(t.giter()));
     t.save_checkpoint(&path)?;
@@ -276,6 +355,40 @@ impl SweepReport {
         out
     }
 
+    /// Per scenario with a `live` cell and at least one `fixed*` cell:
+    /// (scenario, rt_live, rt_fixed_best, speedup over the *best* fixed-E
+    /// baseline, final-ACC delta vs that baseline in pp).  A speedup
+    /// > 1 means the elastic cell beat every fixed-E baseline on modeled
+    /// RT — the churn acceptance bar (tests/elastic_live.rs).
+    pub fn churn_comparisons(&self) -> Vec<(String, f64, f64, f64, f64)> {
+        let mut out = Vec::new();
+        for label in self.scenario_labels() {
+            let live = self.cells.iter().find(|c| c.scenario == label && c.cell == "live");
+            let fixed: Vec<&SweepCell> = self
+                .cells
+                .iter()
+                .filter(|c| c.scenario == label && c.cell.starts_with("fixed"))
+                .collect();
+            let (Some(live), false) = (live, fixed.is_empty()) else {
+                continue;
+            };
+            let best = fixed
+                .iter()
+                .copied()
+                .min_by(|a, b| a.rt.total_cmp(&b.rt))
+                .expect("non-empty");
+            let speedup = if live.rt > 0.0 { best.rt / live.rt } else { 0.0 };
+            out.push((
+                label,
+                live.rt,
+                best.rt,
+                speedup,
+                100.0 * (live.final_acc - best.final_acc),
+            ));
+        }
+        out
+    }
+
     fn scenario_labels(&self) -> Vec<String> {
         let mut seen: Vec<String> = Vec::new();
         for c in &self.cells {
@@ -302,6 +415,7 @@ impl SweepReport {
                                 ("scenario", c.scenario.as_str().into()),
                                 ("strategy", c.strategy.as_str().into()),
                                 ("replan", c.replan.as_str().into()),
+                                ("cell", c.cell.as_str().into()),
                                 ("rt", c.rt.into()),
                                 ("final_acc", c.final_acc.into()),
                                 ("best_acc", c.best_acc.into()),
@@ -331,6 +445,23 @@ impl SweepReport {
                         .collect(),
                 ),
             ),
+            (
+                "churn_comparisons",
+                Json::Arr(
+                    self.churn_comparisons()
+                        .into_iter()
+                        .map(|(s, live, fixed, sp, dacc)| {
+                            obj([
+                                ("scenario", s.into()),
+                                ("rt_live", live.into()),
+                                ("rt_fixed_best", fixed.into()),
+                                ("elastic_speedup", sp.into()),
+                                ("acc_delta_pp", dacc.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
 
@@ -349,13 +480,14 @@ impl SweepReport {
     pub fn render(&self) -> String {
         let mut t = TextTable::new(
             &format!("scenario sweep '{}' ({}, RT in sim-seconds)", self.name, self.model),
-            &["scenario", "strategy", "replan", "RT", "ACC", "comm", "replans", "chi_mean", "chi_max"],
+            &["scenario", "strategy", "replan", "cell", "RT", "ACC", "comm", "replans", "chi_mean", "chi_max"],
         );
         for c in &self.cells {
             t.row(&[
                 c.scenario.clone(),
                 c.strategy.clone(),
                 c.replan.clone(),
+                c.cell.clone(),
                 format!("{:.4}", c.rt),
                 format!("{:.1}%", 100.0 * c.final_acc),
                 crate::util::fmt_bytes(c.comm_bytes),
@@ -371,6 +503,12 @@ impl SweepReport {
                  (ΔACC {dacc:+.1}pp)"
             ));
         }
+        for (s, live, fixed, sp, dacc) in self.churn_comparisons() {
+            out.push_str(&format!(
+                "\n{s}: elastic RT {live:.4}s vs best fixed-E {fixed:.4}s → {sp:.2}× \
+                 (ΔACC {dacc:+.1}pp)"
+            ));
+        }
         out
     }
 }
@@ -381,8 +519,18 @@ mod tests {
 
     #[test]
     fn cell_and_scenario_parsing() {
-        assert_eq!(parse_cell("semi@online").unwrap(), (Strategy::Semi, ReplanMode::Online));
-        assert_eq!(parse_cell("mig").unwrap(), (Strategy::Mig, ReplanMode::Iter));
+        assert_eq!(
+            parse_cell("semi@online").unwrap(),
+            CellSpec::new(Strategy::Semi, ReplanMode::Online)
+        );
+        assert_eq!(parse_cell("mig").unwrap(), CellSpec::new(Strategy::Mig, ReplanMode::Iter));
+        let fx = parse_cell("semi@online@fixed-e2").unwrap();
+        assert_eq!(fx, CellSpec::fixed(Strategy::Semi, ReplanMode::Online, Some(2)));
+        assert_eq!(fx.tag(), "fixed-e2");
+        assert_eq!(parse_cell("semi@online@fixed").unwrap().tag(), "fixed");
+        assert_eq!(parse_cell("semi@online@live").unwrap().tag(), "live");
+        assert!(parse_cell("semi@online@sideways").is_err());
+        assert!(parse_cell("semi@online@fixed-ex").is_err());
         assert!(parse_cell("semi@sometimes").is_err());
         assert!(parse_cell("vibes@online").is_err());
         let sc = parse_scenarios("a=burst:r1@x4:iters0-4;step:r2@x3:iters1-").unwrap();
@@ -409,6 +557,13 @@ mod tests {
         let killed = &s.scenarios[2].1;
         assert_eq!(killed.preempt, Some(13));
         assert_eq!(killed.events, s.scenarios[1].1.events);
+        // the churn matrix pits one live cell against two fixed-E
+        // baselines over a worker fail/join scenario
+        let c = SweepSpec::preset("churn").unwrap();
+        assert_eq!(c.scenarios.len(), 1);
+        assert_eq!(c.scenarios[0].1.churn.len(), 2);
+        let tags: Vec<String> = c.cells.iter().map(|x| x.tag()).collect();
+        assert_eq!(tags, ["live", "fixed", "fixed-e2"]);
     }
 
     #[test]
@@ -420,10 +575,11 @@ mod tests {
             iters: 4,
             cells: vec![],
         };
-        let mk = |replan: &str, rt: f64, acc: f64| SweepCell {
+        let mk = |replan: &str, cell: &str, rt: f64, acc: f64| SweepCell {
             scenario: "step6".into(),
             strategy: "SEMI".into(),
             replan: replan.into(),
+            cell: cell.into(),
             rt,
             final_acc: acc,
             best_acc: acc,
@@ -432,8 +588,8 @@ mod tests {
             chi_mean: 2.0,
             chi_max: 6.0,
         };
-        r.cells.push(mk("online", 1.0, 0.5));
-        r.cells.push(mk("epoch", 2.0, 0.5));
+        r.cells.push(mk("online", "live", 1.0, 0.5));
+        r.cells.push(mk("epoch", "live", 2.0, 0.5));
         let cmp = r.comparisons();
         assert_eq!(cmp.len(), 1);
         assert!((cmp[0].3 - 2.0).abs() < 1e-12, "speedup = rt_epoch/rt_online");
@@ -441,5 +597,14 @@ mod tests {
         assert!(j.contains("\"online_speedup\":2"));
         assert!(Json::parse(&j).is_ok());
         assert!(r.render().contains("2.00×"));
+        // churn comparison: live vs the best of the fixed-E baselines
+        r.cells.push(mk("online", "fixed", 3.0, 0.4));
+        r.cells.push(mk("online", "fixed-e2", 2.5, 0.5));
+        let cc = r.churn_comparisons();
+        assert_eq!(cc.len(), 1);
+        assert!((cc[0].1 - 1.0).abs() < 1e-12, "rt_live");
+        assert!((cc[0].2 - 2.5).abs() < 1e-12, "best fixed rt");
+        assert!((cc[0].3 - 2.5).abs() < 1e-12, "elastic speedup");
+        assert!(r.to_json().to_string().contains("\"elastic_speedup\":2.5"));
     }
 }

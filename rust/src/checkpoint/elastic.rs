@@ -23,6 +23,8 @@
 //! [`crate::runtime::presets::synthesize_with_e`]).  Optimizer momentum
 //! buffers are per-element and re-shard with exactly the same slicing.
 
+use std::collections::BTreeMap;
+
 use crate::model::{BlockShard, ModelState, RepParams};
 use crate::runtime::manifest::ModelInfo;
 use crate::tensor::Tensor;
@@ -156,6 +158,56 @@ pub fn shard_full(m2: &ModelInfo, full: &FullModel) -> ModelState {
         shards.push(blocks);
     }
     ModelState { shards, rep: full.rep.clone() }
+}
+
+/// Re-shard a live [`ModelState`] from geometry `m1` to `m2` in one
+/// step — the in-memory transition path (DESIGN.md §14): live elastic
+/// re-parallelization moves state between worker counts without a
+/// `.flexckpt` round-trip, with the same bitwise-exactness guarantee as
+/// the checkpoint path (both are [`gather_full`] ∘ [`shard_full`]).
+pub fn reshard_state(m1: &ModelInfo, m2: &ModelInfo, s: &ModelState) -> ModelState {
+    shard_full(m2, &gather_full(m1, s))
+}
+
+/// Re-shard SGD momentum buffers (keys `"{w}.{k}.{name}"` for shard
+/// tensors, `"rep.{name}"` for the replicated embed/head) from `m1`'s
+/// layout to `m2`'s.  Momentum is per-element, so it re-slices exactly
+/// like the weights; `rep.*` buffers are e-independent and carry over
+/// unchanged.  When no shard buffers exist (momentum 0, or a run too
+/// young to have created them) none are invented — matching the
+/// checkpoint elastic-restore path bit for bit.
+pub fn reshard_moments(
+    m1: &ModelInfo,
+    m2: &ModelInfo,
+    bufs: &BTreeMap<String, Tensor>,
+) -> BTreeMap<String, Tensor> {
+    let mut out = BTreeMap::new();
+    if bufs.keys().any(|k| !k.starts_with("rep.")) {
+        let mut old = super::zero_state(m1);
+        for w in 0..m1.e {
+            for k in 0..m1.depth {
+                for n in BlockShard::names() {
+                    if let Some(b) = bufs.get(&format!("{w}.{k}.{n}")) {
+                        old.shards[w][k].get_mut(n).data.copy_from_slice(&b.data);
+                    }
+                }
+            }
+        }
+        let new = reshard_state(m1, m2, &old);
+        for w in 0..m2.e {
+            for k in 0..m2.depth {
+                for n in BlockShard::names() {
+                    out.insert(format!("{w}.{k}.{n}"), new.shards[w][k].get(n).clone());
+                }
+            }
+        }
+    }
+    for (k, b) in bufs {
+        if k.starts_with("rep.") {
+            out.insert(k.clone(), b.clone());
+        }
+    }
+    out
 }
 
 #[cfg(test)]

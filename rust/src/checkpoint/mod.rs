@@ -155,7 +155,7 @@ pub fn cfg_fingerprint(cfg: &RunCfg) -> String {
         "model={};seed={};ipe={};eval={};batches={};lr={};mom={};\
          strategy={};imp={:?};migpol={:?};theta={};alpha={};gamma={:?};\
          lambda={:?};merge={};replan={};time={};net={},{};\
-         ctl={},{},{},{},{};plan={}",
+         ctl={},{},{},{},{};churn={};plan={}",
         cfg.model,
         t.seed,
         t.iters_per_epoch,
@@ -180,6 +180,7 @@ pub fn cfg_fingerprint(cfg: &RunCfg) -> String {
         c.hi,
         c.lo,
         c.cooldown,
+        t.churn,
         plan_desc(&cfg.stragglers),
     )
 }
@@ -474,7 +475,18 @@ pub fn save_trainer(t: &Trainer) -> Snapshot {
             ]),
         ),
         ("cfg_fp", cfg_fingerprint(&t.cfg).into()),
-        ("cursor", obj([("global_iter", ju64(t.global_iter))])),
+        (
+            "cursor",
+            obj([
+                ("global_iter", ju64(t.global_iter)),
+                // live worker count at the cut — churn events strictly
+                // before `global_iter` have already been folded in, so a
+                // resume must start from this count, not from the model's
+                // sharding degree (they differ when the last transition
+                // landed on a nearest-divisor E' < avail)
+                ("avail", t.avail.into()),
+            ]),
+        ),
         (
             "clocks",
             obj([("t", jf64s(&t.clocks.t)), ("ic", jf64s(&t.clocks.iter_compute))]),
@@ -723,6 +735,19 @@ pub fn restore_trainer(t: &mut Trainer, snap: &Snapshot) -> Result<(), CkptError
     }
 
     t.global_iter = giter;
+    // ---- worker-churn cursor ---------------------------------------------
+    // Live worker count at the cut (snapshots from before churn support
+    // carry none: their count *is* the sharding degree), plus the
+    // fired-event cursor.  An event scheduled `@iterK` fires before
+    // iteration K runs, so exactly the events strictly before `giter`
+    // have been folded into `avail` by the run that wrote the snapshot;
+    // the event *at* `giter` (if any) is still pending and will fire as
+    // the resumed run enters its first iteration.
+    t.avail = match jget(meta, "cursor")?.opt("avail") {
+        Some(v) => v.usize().map_err(bad)?,
+        None => ck_e,
+    };
+    t.churn_fired = t.churn.iter().filter(|ev| (ev.at as u64) < giter).count();
     t.resumed = true;
     Ok(())
 }
@@ -956,6 +981,15 @@ fn restore_elastic(t: &mut Trainer, snap: &Snapshot, ck_e: usize) -> Result<(), 
     t.epoch_compute = vec![0.0; new_m.e];
     t.cached_actions = None;
     t.costs = t.fresh_cost_fit();
+    // sim clocks: a re-shard is a barrier, so every new rank starts at the
+    // checkpointed frontier.  The live transition path
+    // (`Trainer::transition_to`) does exactly the same, which is what
+    // keeps modeled rt identical between an in-process E→E' switch and
+    // this kill/resume oracle (tests/elastic_live.rs).
+    let ct = pf64s(jget(&snap.meta, "clocks")?, "t")?;
+    let frontier = ct.iter().cloned().fold(0.0f64, f64::max);
+    t.clocks = crate::cluster::Clocks::new(new_m.e);
+    t.clocks.t.fill(frontier);
     Ok(())
 }
 

@@ -299,6 +299,12 @@ pub struct TrainCfg {
     /// (`--stop-after`); the epoch in progress is checkpointable and the
     /// run reports only what completed
     pub stop_after: Option<u64>,
+    /// act on scenario `join:`/`leave:`/`fail:` worker-churn events by
+    /// re-sharding in-process (`--churn false` ignores them: the
+    /// fixed-E baseline rides out the scenario at its starting worker
+    /// count).  Part of the math fingerprint — a resumed run must keep
+    /// the setting of the run that wrote the snapshot.
+    pub churn: bool,
 }
 
 impl Default for TrainCfg {
@@ -319,6 +325,7 @@ impl Default for TrainCfg {
             ckpt_every: 0,
             resume: None,
             stop_after: None,
+            churn: true,
         }
     }
 }
@@ -463,6 +470,7 @@ pub fn apply_overrides(cfg: &mut RunCfg, kv: &BTreeMap<String, String>) -> Resul
             "ckpt-every" => cfg.train.ckpt_every = v.parse().context("ckpt-every")?,
             "resume" => cfg.train.resume = Some(PathBuf::from(v)),
             "stop-after" => cfg.train.stop_after = Some(v.parse().context("stop-after")?),
+            "churn" => cfg.train.churn = v.parse().context("churn (true|false)")?,
             "replan" => cfg.balancer.replan = ReplanMode::parse(v)?,
             "time-model" => cfg.train.time_model = TimeModel::parse(v)?,
             "timeline" => cfg.train.timeline = true,

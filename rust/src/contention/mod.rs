@@ -16,7 +16,11 @@
 //!   per-(event, rank) seeded RNG;
 //! * built-in presets ([`preset`]) and a small DSL
 //!   (`burst:r2@x4:iters10-40,markov:r*@x3:p0.2-0.4,seed:7`) shared by
-//!   `--scenario`, `--scenario-file`, and the `sweep` subcommand.
+//!   `--scenario`, `--scenario-file`, and the `sweep` subcommand;
+//! * worker churn — [`ChurnEvent`] (`join:rN@iterK`, `leave:rN@iterK`,
+//!   `fail:rN@iterK`): unlike χ events these change the *size* of the
+//!   worker group; the trainer re-shards in-process onto the largest
+//!   `E'` the live worker count supports (DESIGN.md §14).
 //!
 //! Concurrent tenants compose **multiplicatively** (time-slicing a
 //! device between n tenants multiplies service time), clamped to
@@ -90,6 +94,80 @@ pub enum Event {
     Markov { rank: RankSel, chi: f64, p_on: f64, p_off: f64 },
 }
 
+/// A scripted worker join/leave/failure (DESIGN.md §14).  `rank` is a
+/// label for the affected worker (a join may reuse a departed label);
+/// only the *count* of live workers feeds the choice of the next
+/// sharding degree, so traces stay well-defined across re-realizations.
+/// `at` is a global iteration: the event fires **before** iteration
+/// `at` runs — exactly the cut a kill-at-`at` checkpoint makes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChurnEvent {
+    pub kind: ChurnKind,
+    pub rank: usize,
+    pub at: usize,
+}
+
+/// `Leave` (graceful departure) and `Fail` (crash) are distinguished in
+/// the DSL for reporting, but both shrink the live worker count by one;
+/// `Join` grows it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnKind {
+    Join,
+    Leave,
+    Fail,
+}
+
+impl ChurnKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChurnKind::Join => "join",
+            ChurnKind::Leave => "leave",
+            ChurnKind::Fail => "fail",
+        }
+    }
+}
+
+/// Typed scenario errors.  Parsing and validation surface these through
+/// `anyhow`, so callers (and tests) can `downcast_ref::<ScenarioError>()`
+/// instead of string-matching, while the CLI keeps the readable message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScenarioError {
+    /// An event kind the DSL does not know (`meteor:...`).
+    UnknownEventKind(String),
+    /// A clause naming a known kind that cannot be parsed.
+    Malformed { item: String, reason: String },
+    /// A χ event targets a rank outside a *static* worker group.
+    RankOutOfRange { rank: usize, e: usize },
+    /// Worker churn left no live workers to re-shard onto.
+    NoViableWorkerCount { avail: usize, hs: usize, heads: usize },
+}
+
+impl std::fmt::Display for ScenarioError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScenarioError::UnknownEventKind(k) => write!(
+                f,
+                "unknown event kind '{k}' \
+                 (burst|tenant|ramp|step|pulse|markov|join|leave|fail)"
+            ),
+            ScenarioError::Malformed { item, reason } => write!(f, "'{item}': {reason}"),
+            ScenarioError::RankOutOfRange { rank, e } => write!(
+                f,
+                "scenario targets rank {rank} but the model has only {e} \
+                 workers (r0..r{})",
+                e - 1
+            ),
+            ScenarioError::NoViableWorkerCount { avail, hs, heads } => write!(
+                f,
+                "worker churn left {avail} live worker(s) — no E' ≥ 1 can \
+                 shard hs={hs}/heads={heads}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ScenarioError {}
+
 fn chk_chi(chi: f64) -> Result<f64> {
     if !chi.is_finite() || chi < 1.0 {
         bail!("tenant χ must be ≥ 1 (a tenant can only slow a rank down), got {chi}");
@@ -128,11 +206,22 @@ pub struct ScenarioSpec {
     /// Orchestration-only — the χ trace itself ignores it; the `flextp
     /// sweep` harness executes the kill/checkpoint/resume cycle.
     pub preempt: Option<usize>,
+    /// Worker churn schedule (DSL `join:rN@iterK` etc.).  Like
+    /// `preempt`, churn is orchestration-level: it never perturbs the χ
+    /// rows — the trainer re-realizes the trace whenever the worker
+    /// count changes.
+    pub churn: Vec<ChurnEvent>,
 }
 
 impl Default for ScenarioSpec {
     fn default() -> Self {
-        ScenarioSpec { seed: 42, chi_max: 16.0, events: Vec::new(), preempt: None }
+        ScenarioSpec {
+            seed: 42,
+            chi_max: 16.0,
+            events: Vec::new(),
+            preempt: None,
+            churn: Vec::new(),
+        }
     }
 }
 
@@ -148,6 +237,9 @@ impl ScenarioSpec {
     ///         | "step:rR@xC:itersA-"        tenant arrives at A, stays
     ///         | "pulse:rR@xC:fromA:periodP:onD"  duty-cycle bursts
     ///         | "markov:rR@xC:pON-POFF"     stochastic on/off tenant
+    ///         | "join:rN@iterK"             worker N joins before iteration K
+    ///         | "leave:rN@iterK"            worker N departs before iteration K
+    ///         | "fail:rN@iterK"             worker N crashes before iteration K
     /// R      := rank index | "*" (every rank, independent tenants)
     /// ```
     ///
@@ -181,6 +273,10 @@ impl ScenarioSpec {
                 spec.preempt = Some(g);
                 continue;
             }
+            if let Some(ev) = parse_churn(item)? {
+                spec.churn.push(ev);
+                continue;
+            }
             spec.events.push(parse_event(item)?);
         }
         Ok(spec)
@@ -196,8 +292,8 @@ impl ScenarioSpec {
         }
         if let Json::Obj(m) = j {
             for k in m.keys() {
-                if !matches!(k.as_str(), "seed" | "chi_max" | "events" | "preempt") {
-                    bail!("unknown scenario field '{k}' (seed|chi_max|events|preempt)");
+                if !matches!(k.as_str(), "seed" | "chi_max" | "events" | "preempt" | "churn") {
+                    bail!("unknown scenario field '{k}' (seed|chi_max|events|preempt|churn)");
                 }
             }
         }
@@ -217,6 +313,11 @@ impl ScenarioSpec {
         }
         for ev in j.get("events")?.arr()? {
             spec.events.push(event_from_json(ev)?);
+        }
+        if let Some(c) = j.opt("churn") {
+            for ev in c.arr()? {
+                spec.churn.push(churn_from_json(ev)?);
+            }
         }
         Ok(spec)
     }
@@ -238,7 +339,16 @@ impl ScenarioSpec {
     /// the worker group, else the event would silently never fire and the
     /// run would measure a scenario that never happened.  Called by the
     /// trainer (and the sweep harness) once the model's `e` is known.
+    ///
+    /// Under worker churn the live rank set is dynamic: a χ event may
+    /// legitimately name a rank that exists only at the larger `E` (it is
+    /// inert while the group is smaller), so the static range check is
+    /// skipped — trace realization at any `E'` simply never applies
+    /// events whose rank is absent.
     pub fn validate_ranks(&self, e: usize) -> Result<()> {
+        if !self.churn.is_empty() {
+            return Ok(());
+        }
         for ev in &self.events {
             let rank = match ev {
                 Event::Burst { rank, .. }
@@ -249,16 +359,23 @@ impl ScenarioSpec {
             };
             if let RankSel::One(r) = rank {
                 if *r >= e {
-                    bail!(
-                        "scenario targets rank {r} but the model has only {e} \
-                         workers (r0..r{}) — in '{}'",
-                        e - 1,
-                        self.describe()
-                    );
+                    return Err(anyhow::Error::from(ScenarioError::RankOutOfRange {
+                        rank: *r,
+                        e,
+                    })
+                    .context(format!("in scenario '{}'", self.describe())));
                 }
             }
         }
         Ok(())
+    }
+
+    /// The churn schedule in firing order (stable sort on `at`, so
+    /// same-iteration events coalesce in spec order).
+    pub fn churn_sorted(&self) -> Vec<ChurnEvent> {
+        let mut v = self.churn.clone();
+        v.sort_by_key(|c| c.at);
+        v
     }
 
     /// Compact one-line rendering (labels, sweep tables).  Includes
@@ -266,7 +383,7 @@ impl ScenarioSpec {
     /// rendered string re-parses to an equivalent spec (stochastic
     /// tenants and clamping reproduce).
     pub fn describe(&self) -> String {
-        if self.events.is_empty() && self.preempt.is_none() {
+        if self.events.is_empty() && self.preempt.is_none() && self.churn.is_empty() {
             // a calm trace is seed/chimax-independent, so those stay
             // implicit too
             return "calm".to_string();
@@ -296,6 +413,9 @@ impl ScenarioSpec {
                 }
             })
             .collect();
+        for c in &self.churn {
+            items.push(format!("{}:r{}@iter{}", c.kind.name(), c.rank, c.at));
+        }
         let defaults = ScenarioSpec::default();
         if self.seed != defaults.seed {
             items.push(format!("seed:{}", self.seed));
@@ -337,6 +457,71 @@ fn parse_iters(s: &str) -> Result<(usize, Option<usize>)> {
         None => None,
     };
     Ok((from, to))
+}
+
+/// Parse a churn clause `join:rN@iterK` / `leave:rN@iterK` /
+/// `fail:rN@iterK`.  Returns `Ok(None)` when `item` is not a churn kind
+/// (so the caller falls through to χ-event parsing) and a typed
+/// [`ScenarioError::Malformed`] when the kind matches but the body does
+/// not.
+fn parse_churn(item: &str) -> Result<Option<ChurnEvent>> {
+    let Some((kind_s, rest)) = item.split_once(':') else {
+        return Ok(None);
+    };
+    let kind = match kind_s {
+        "join" => ChurnKind::Join,
+        "leave" => ChurnKind::Leave,
+        "fail" => ChurnKind::Fail,
+        _ => return Ok(None),
+    };
+    let mal = |reason: &str| ScenarioError::Malformed {
+        item: item.to_string(),
+        reason: reason.to_string(),
+    };
+    let (r, at_s) = rest
+        .split_once('@')
+        .ok_or_else(|| mal("expected rN@iterK"))?;
+    let rank = match RankSel::parse(r).map_err(|_| mal("expected a rank like r3"))? {
+        RankSel::One(x) => x,
+        RankSel::All => {
+            return Err(mal("churn events need a concrete rank; r* is not a worker").into())
+        }
+    };
+    let at_s = at_s
+        .strip_prefix("iter")
+        .ok_or_else(|| mal("expected @iterK"))?;
+    let at: usize = at_s
+        .parse()
+        .map_err(|_| mal("bad iteration after @iter"))?;
+    if at == 0 {
+        return Err(mal(
+            "churn at iteration 0 would resize before any work — start the run with --e instead",
+        )
+        .into());
+    }
+    Ok(Some(ChurnEvent { kind, rank, at }))
+}
+
+/// JSON form of a churn clause: `{"kind":"fail","rank":3,"at":12}`.
+fn churn_from_json(j: &Json) -> Result<ChurnEvent> {
+    if let Json::Obj(m) = j {
+        for k in m.keys() {
+            if !matches!(k.as_str(), "kind" | "rank" | "at") {
+                bail!("churn event does not take a '{k}' field (allowed: kind, rank, at)");
+            }
+        }
+    }
+    let kind = match j.get("kind")?.str()? {
+        "join" => ChurnKind::Join,
+        "leave" => ChurnKind::Leave,
+        "fail" => ChurnKind::Fail,
+        other => return Err(ScenarioError::UnknownEventKind(other.to_string()).into()),
+    };
+    let ev = ChurnEvent { kind, rank: j.get("rank")?.usize()?, at: j.get("at")?.usize()? };
+    if ev.at == 0 {
+        bail!("churn at iteration 0 would resize before any work");
+    }
+    Ok(ev)
 }
 
 fn parse_event(item: &str) -> Result<Event> {
@@ -396,12 +581,14 @@ fn parse_event(item: &str) -> Result<Event> {
             let p_off = chk_prob(b.parse().with_context(|| format!("bad p_off '{b}'"))?, "p_off")?;
             Event::Markov { rank, chi, p_on, p_off }
         }
-        other => bail!(
-            "unknown event kind '{other}' (burst|tenant|ramp|step|pulse|markov)"
-        ),
+        other => return Err(ScenarioError::UnknownEventKind(other.to_string()).into()),
     };
     if let Some(extra) = parts.next() {
-        bail!("'{item}': trailing field '{extra}'");
+        return Err(ScenarioError::Malformed {
+            item: item.to_string(),
+            reason: format!("trailing field '{extra}'"),
+        }
+        .into());
     }
     Ok(ev)
 }
@@ -469,7 +656,7 @@ fn event_from_json(j: &Json) -> Result<Event> {
                 p_off: chk_prob(j.get("p_off")?.num()?, "p_off")?,
             }
         }
-        other => bail!("unknown event kind '{other}'"),
+        other => return Err(ScenarioError::UnknownEventKind(other.to_string()).into()),
     })
 }
 
@@ -831,6 +1018,58 @@ mod tests {
         assert!(ScenarioSpec::parse("markov:r*@x2:p0.1-0.2").unwrap().validate_ranks(1).is_ok());
         assert!(ScenarioSpec::parse("").unwrap().validate_ranks(1).is_ok());
         assert!(preset("tenant-churn").unwrap().validate_ranks(2).is_err(), "preset uses r3");
+    }
+
+    #[test]
+    fn churn_events_parse_describe_and_json_roundtrip() {
+        let s = ScenarioSpec::parse("fail:r3@iter6,join:r3@iter30,step:r2@x3:iters6-").unwrap();
+        assert_eq!(s.churn.len(), 2);
+        assert_eq!(s.churn[0], ChurnEvent { kind: ChurnKind::Fail, rank: 3, at: 6 });
+        assert_eq!(s.churn[1], ChurnEvent { kind: ChurnKind::Join, rank: 3, at: 30 });
+        // describe round-trips — checkpoint fingerprints depend on this
+        assert_eq!(ScenarioSpec::parse(&s.describe()).unwrap(), s);
+        // a churn-only spec is not "calm"
+        let only = ScenarioSpec::parse("leave:r1@iter4").unwrap();
+        assert_ne!(only.describe(), "calm");
+        assert_eq!(ScenarioSpec::parse(&only.describe()).unwrap(), only);
+        // JSON object form agrees with the DSL
+        let j = Json::parse(
+            r#"{"events": [{"kind":"step","rank":2,"chi":3,"from":6}],
+                "churn": [{"kind":"fail","rank":3,"at":6},
+                          {"kind":"join","rank":3,"at":30}]}"#,
+        )
+        .unwrap();
+        assert_eq!(ScenarioSpec::from_json(&j).unwrap(), s);
+        // churn is orchestration-only: the realized χ rows are identical
+        let bare = ScenarioSpec::parse("step:r2@x3:iters6-").unwrap();
+        let ta = ContentionTrace::generate(&bare, 4, 12);
+        let tb = ContentionTrace::generate(&s, 4, 12);
+        for g in 0..12 {
+            assert_eq!(ta.chis(g), tb.chis(g), "g={g}");
+        }
+    }
+
+    #[test]
+    fn churn_suspends_static_rank_validation() {
+        // with churn the group size is dynamic: r3 exists while E=4 even
+        // if the model is currently sharded over 2 workers
+        let s = ScenarioSpec::parse("step:r3@x6:iters4-,fail:r3@iter6").unwrap();
+        assert!(s.validate_ranks(2).is_ok());
+        let stat = ScenarioSpec::parse("step:r3@x6:iters4-").unwrap();
+        assert!(stat.validate_ranks(2).is_err(), "static spec keeps the range check");
+    }
+
+    #[test]
+    fn churn_rejects_malformed_clauses() {
+        for bad in ["join:r*@iter4", "fail:r1@iter0", "join:r1@x4", "leave:r1", "join:rq@iter3"]
+        {
+            assert!(ScenarioSpec::parse(bad).is_err(), "{bad} must be rejected");
+        }
+        // churn sorts stably by firing iteration
+        let s = ScenarioSpec::parse("join:r1@iter9,fail:r0@iter3").unwrap();
+        let sorted = s.churn_sorted();
+        assert_eq!(sorted[0].at, 3);
+        assert_eq!(sorted[1].at, 9);
     }
 
     #[test]

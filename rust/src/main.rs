@@ -69,6 +69,13 @@ fn print_help() {
                                 (kinds: burst|tenant|ramp|step|pulse|markov;\n\
                                 also seed:N, chimax:X, preset:NAME, and\n\
                                 preempt:iterN — sweep kills + resumes there)\n\
+                                worker churn: join:rN@iterK, leave:rN@iterK,\n\
+                                fail:rN@iterK — the run re-shards in-process\n\
+                                to the largest E' ≤ live workers dividing\n\
+                                hs and heads, at the same global iteration\n\
+           --churn B            true (default): act on scenario churn\n\
+                                events; false: fixed-E baseline that rides\n\
+                                out the scenario at its starting width\n\
            --scenario-file F    scenario from a DSL or JSON file\n\
            --replan M           iter (default) | epoch (static per-epoch) |\n\
                                 online (EWMA drift-triggered mid-epoch replans)\n\
@@ -101,9 +108,14 @@ fn print_help() {
                                 and heads; native backend only)\n\
          \n\
          SWEEP OPTIONS\n\
-           --preset P           smoke (CI, 2×2) | bursty | churn\n\
+           --preset P           smoke (CI, 2×2) | bursty | churn (live\n\
+                                elastic vs fixed-E baselines under worker\n\
+                                fail/join)\n\
            --scenarios S        \"label=dsl;label2=dsl\" matrix rows\n\
-           --strategies S       \"semi@online,semi@epoch,baseline\" columns\n\
+           --strategies S       \"semi@online,semi@epoch,baseline\" columns;\n\
+                                an optional third segment pins elasticity:\n\
+                                semi@online@fixed-e2 ignores churn events\n\
+                                and forces --e 2, ...@live re-shards (default)\n\
            --out FILE           output path (default BENCH_scenarios.json)\n"
     );
 }

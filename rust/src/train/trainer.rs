@@ -135,6 +135,19 @@ pub struct Trainer {
     /// (the restored costs/statistics already include it)
     pub(crate) resumed: bool,
     last_replanned: bool,
+    /// scenario worker-churn schedule (DESIGN.md §14), sorted by firing
+    /// iteration; empty unless the scenario scripts churn and
+    /// `cfg.train.churn` is on
+    pub(crate) churn: Vec<crate::contention::ChurnEvent>,
+    /// cursor into `churn`: how many events have fired (checkpointed
+    /// implicitly — recomputed from the restored `global_iter`)
+    pub(crate) churn_fired: usize,
+    /// live worker count implied by the churn schedule.  May differ from
+    /// the sharding degree `model().e` when no larger divisor of
+    /// hs/heads fits (e.g. 3 live workers run sharded over 2).
+    /// Checkpointed: a resumed run must count joins/leaves from the
+    /// same baseline as the uninterrupted one.
+    pub(crate) avail: usize,
 }
 
 impl Trainer {
@@ -198,6 +211,19 @@ impl Trainer {
         let controller = DriftDetector::new(cfg.control);
         let mut injector = Injector::homogeneous(m.e);
         injector.emulate_wall = cfg.train.emulate_wall;
+        let churn = match &cfg.stragglers {
+            crate::config::StragglerPlan::Scenario(spec) if cfg.train.churn => {
+                spec.churn_sorted()
+            }
+            _ => Vec::new(),
+        };
+        if !churn.is_empty() {
+            anyhow::ensure!(
+                cfg.backend == crate::config::BackendKind::Native,
+                "worker-churn scenarios (live re-sharding) require the native backend"
+            );
+        }
+        let avail = m.e;
         Ok(Trainer {
             pool,
             ws,
@@ -233,6 +259,9 @@ impl Trainer {
             epoch_wall_s: 0.0,
             resumed: false,
             last_replanned: false,
+            churn,
+            churn_fired: 0,
+            avail,
         })
     }
 
@@ -400,6 +429,11 @@ impl Trainer {
         }
         let mut wall0 = std::time::Instant::now();
         for it in start_iter..ipe {
+            // scheduled worker churn fires *before* the iteration at its
+            // firing cursor — exactly the cut a kill-at-`at` checkpoint
+            // makes, so live transitions and the kill/resume oracle see
+            // identical state (tests/elastic_live.rs)
+            self.apply_churn_transitions()?;
             let loss = self.train_iter()?;
             self.epoch_loss_sum += loss as f64;
             self.report.loss_curve.push(loss);
@@ -521,6 +555,127 @@ impl Trainer {
                 timemodel::mlp_s(&m, m.hs, m.ffl, false) + timemodel::mlp_s(&m, m.hs, m.ffl, true),
             ),
         }
+    }
+
+    // -----------------------------------------------------------------
+    // Live elastic re-parallelization (DESIGN.md §14)
+    // -----------------------------------------------------------------
+
+    /// Fire every churn event whose iteration has been reached, then —
+    /// if the implied sharding degree changed — re-shard in-process.
+    /// Joins and leaves/fails only move the live worker *count*; the
+    /// sharding degree is the largest divisor of hs/heads it admits
+    /// (nearest-valid-divisor degradation: 3 live workers run sharded
+    /// over 2).  Zero live workers is a typed error, never a panic.
+    fn apply_churn_transitions(&mut self) -> Result<()> {
+        if self.churn_fired >= self.churn.len() {
+            return Ok(());
+        }
+        let mut fired = false;
+        while self.churn_fired < self.churn.len() {
+            let ev = self.churn[self.churn_fired];
+            if (ev.at as u64) > self.global_iter {
+                break;
+            }
+            match ev.kind {
+                crate::contention::ChurnKind::Join => self.avail += 1,
+                crate::contention::ChurnKind::Leave | crate::contention::ChurnKind::Fail => {
+                    self.avail = self.avail.saturating_sub(1);
+                }
+            }
+            self.churn_fired += 1;
+            fired = true;
+        }
+        if !fired {
+            return Ok(());
+        }
+        let m = self.rt.manifest.model.clone();
+        if self.avail == 0 {
+            return Err(anyhow::Error::from(
+                crate::contention::ScenarioError::NoViableWorkerCount {
+                    avail: 0,
+                    hs: m.hs,
+                    heads: m.heads,
+                },
+            )
+            .context(format!("worker churn at iteration {}", self.global_iter)));
+        }
+        let target = (1..=self.avail)
+            .rev()
+            .find(|d| m.hs % d == 0 && m.heads % d == 0)
+            .unwrap_or(1);
+        // a same-degree outcome (e.g. a join with no larger divisor to
+        // grow into, or the kill/resume oracle already running at E') is
+        // a pure cursor advance — no transient may be touched, or a
+        // same-E resume would stop being bitwise
+        if target != m.e {
+            self.transition_to(target).with_context(|| {
+                format!(
+                    "live transition {}→{target} at iteration {}",
+                    m.e, self.global_iter
+                )
+            })?;
+        }
+        Ok(())
+    }
+
+    /// In-process elastic re-shard onto `new_e` workers — no `.flexckpt`
+    /// round-trip.  Field by field this reproduces exactly what
+    /// `Trainer::new(--e new_e)` + the checkpoint elastic-restore path
+    /// builds, which is what makes a live transition bitwise identical
+    /// to the kill/checkpoint/resume oracle (tests/elastic_live.rs):
+    ///
+    /// * re-sharded (pure slicing): model shards, SGD momentum;
+    /// * carried: comm cost model + stats, run report, epoch scalar
+    ///   accumulators, the global-iteration/data cursor;
+    /// * re-initialized at the new width: clocks (synced to the old
+    ///   frontier — a re-shard is a barrier), monitor, drift detector,
+    ///   balancer (trackers + RNG from seed), injector, workspaces,
+    ///   realized trace, Same-imputation gradient history, per-rank
+    ///   compute accumulator, plan cache, pretest cost fit.
+    fn transition_to(&mut self, new_e: usize) -> Result<()> {
+        let old_m = self.rt.manifest.model.clone();
+        let man = crate::runtime::presets::synthesize_with_e(&self.cfg.model, new_e)
+            .with_context(|| format!("re-sharding '{}' over {new_e} workers", self.cfg.model))?;
+        let rt = Runtime::native_with_manifest(man);
+        let new_m = rt.manifest.model.clone();
+        self.state = crate::checkpoint::elastic::reshard_state(&old_m, &new_m, &self.state);
+        self.opt.bufs =
+            crate::checkpoint::elastic::reshard_moments(&old_m, &new_m, &self.opt.bufs);
+        self.rt = rt;
+        self.data = SynthData::new(&new_m, self.cfg.train.seed);
+        let frontier = self.clocks.max();
+        self.clocks = Clocks::new(new_m.e);
+        self.clocks.t.fill(frontier);
+        self.monitor = Monitor::new(new_m.e);
+        self.balancer =
+            Balancer::new(self.cfg.balancer.clone(), &self.rt.manifest, self.cfg.train.seed);
+        self.controller = DriftDetector::new(self.cfg.control);
+        let mut injector = Injector::homogeneous(new_m.e);
+        injector.emulate_wall = self.cfg.train.emulate_wall;
+        self.injector = injector;
+        self.ws = (0..new_m.e).map(|_| Mutex::new(Workspace::new())).collect();
+        self.trace = ContentionTrace::from_plan(
+            &self.cfg.stragglers,
+            new_m.e,
+            self.cfg.train.epochs,
+            self.cfg.train.iters_per_epoch,
+        );
+        if self.prev_grads.is_some() {
+            self.prev_grads = Some(
+                (0..new_m.e)
+                    .map(|_| {
+                        (0..new_m.depth)
+                            .map(|_| crate::model::zero_block_grads(&new_m))
+                            .collect()
+                    })
+                    .collect(),
+            );
+        }
+        self.epoch_compute = vec![0.0; new_m.e];
+        self.cached_actions = None;
+        self.costs = self.fresh_cost_fit();
+        Ok(())
     }
 
     // -----------------------------------------------------------------

@@ -11,8 +11,10 @@
 //!   changes partial-sum order, never the math;
 //! * **validation** — indivisible worker counts are rejected up front.
 
-use flextp::checkpoint::elastic::gather_full;
+use flextp::checkpoint::elastic::{gather_full, reshard_moments, reshard_state, shard_full};
 use flextp::config::{RunCfg, TimeModel};
+use flextp::model::{BlockShard, ModelState, RepParams};
+use flextp::runtime::presets::synthesize_with_e;
 use flextp::train::trainer::Trainer;
 
 const EPOCHS: usize = 1;
@@ -93,6 +95,105 @@ fn elastic_resume_repartitions_exactly_and_tracks_the_oracle() {
         );
     }
     let _ = std::fs::remove_dir_all(path.parent().unwrap());
+}
+
+/// Every worker count that divides both hs and heads of a preset.
+fn valid_es(name: &str) -> Vec<usize> {
+    let m = synthesize_with_e(name, 1).expect("preset").model;
+    (1..=m.heads.max(8)).filter(|&d| m.hs % d == 0 && m.heads % d == 0).collect()
+}
+
+/// Property (satellite 1): gather → shard → gather is bitwise identity
+/// for **every** divisor chain E→E'→E'' of hs/heads — not just the
+/// hand-picked 4→2/4→8 cases — on both preset geometries, covering
+/// the sharded block tensors and the replicated params alike.
+#[test]
+fn gather_shard_roundtrip_is_identity_for_every_divisor_chain() {
+    for name in ["vit-tiny", "vit-s"] {
+        let es = valid_es(name);
+        assert!(es.len() >= 3, "{name}: want a real divisor lattice, got {es:?}");
+        for &e1 in &es {
+            let m1 = synthesize_with_e(name, e1).expect("m1").model;
+            let s1 = ModelState::init(&m1, 0xE1A57 ^ e1 as u64);
+            let full1 = gather_full(&m1, &s1);
+            for &e2 in &es {
+                let m2 = synthesize_with_e(name, e2).expect("m2").model;
+                let s2 = shard_full(&m2, &full1);
+                let full2 = gather_full(&m2, &s2);
+                assert_eq!(full2, full1, "{name}: {e1}→{e2} must round-trip bitwise");
+                for &e3 in &es {
+                    let m3 = synthesize_with_e(name, e3).expect("m3").model;
+                    let full3 = gather_full(&m3, &reshard_state(&m2, &m3, &s2));
+                    assert_eq!(full3, full1, "{name}: chain {e1}→{e2}→{e3} must be identity");
+                }
+            }
+        }
+    }
+}
+
+/// The same identity for optimizer moments: `reshard_moments` moves
+/// momentum with the weights through any divisor chain and hands the
+/// replicated `rep.*` buffers through untouched; a map without shard
+/// moments (momentum = 0) must not invent any.
+#[test]
+fn moment_resharding_round_trips_through_every_divisor_chain() {
+    let name = "vit-s";
+    let es = valid_es(name);
+    let m1 = synthesize_with_e(name, es[es.len() - 1]).expect("m1").model;
+    // seeded, worker-distinct moment tensors with exactly the shard
+    // shapes the optimizer would hold
+    let proto = ModelState::init(&m1, 0x40417);
+    let mut bufs = std::collections::BTreeMap::new();
+    for w in 0..m1.e {
+        for k in 0..m1.depth {
+            for n in BlockShard::names() {
+                bufs.insert(format!("{w}.{k}.{n}"), proto.shards[w][k].get(n).clone());
+            }
+        }
+    }
+    for n in RepParams::names() {
+        bufs.insert(format!("rep.{n}"), proto.rep.get(n).clone());
+    }
+    let full1 = gather_full(&m1, &proto);
+    for &e2 in &es {
+        let m2 = synthesize_with_e(name, e2).expect("m2").model;
+        let b2 = reshard_moments(&m1, &m2, &bufs);
+        assert_eq!(
+            b2.len(),
+            m2.e * m2.depth * BlockShard::names().len() + RepParams::names().len(),
+            "e={e2}: one buffer per shard key plus the rep passthrough"
+        );
+        for n in RepParams::names() {
+            assert_eq!(b2[&format!("rep.{n}")], bufs[&format!("rep.{n}")], "rep.{n} verbatim");
+        }
+        for &e3 in &es {
+            let m3 = synthesize_with_e(name, e3).expect("m3").model;
+            let b3 = reshard_moments(&m2, &m3, &b2);
+            // undo TP on the twice-resharded moments: still the original
+            let mut s3 = ModelState::init(&m3, 1);
+            for w in 0..m3.e {
+                for k in 0..m3.depth {
+                    for n in BlockShard::names() {
+                        *s3.shards[w][k].get_mut(n) = b3[&format!("{w}.{k}.{n}")].clone();
+                    }
+                }
+            }
+            s3.rep = proto.rep.clone();
+            assert_eq!(
+                gather_full(&m3, &s3),
+                full1,
+                "moments chain {}→{e2}→{e3} must be identity",
+                m1.e
+            );
+        }
+    }
+    // momentum-off: only rep buffers in, only rep buffers out
+    let rep_only: std::collections::BTreeMap<_, _> =
+        bufs.iter().filter(|(k, _)| k.starts_with("rep.")).map(|(k, v)| (k.clone(), v.clone())).collect();
+    let m2 = synthesize_with_e(name, es[0]).expect("m2").model;
+    let out = reshard_moments(&m1, &m2, &rep_only);
+    assert_eq!(out.len(), RepParams::names().len(), "no shard moments may be invented");
+    assert!(out.keys().all(|k| k.starts_with("rep.")));
 }
 
 #[test]

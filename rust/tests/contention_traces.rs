@@ -8,7 +8,7 @@
 //! precomputed `ContentionTrace`.
 
 use flextp::config::StragglerPlan;
-use flextp::contention::{preset, ContentionTrace, ScenarioSpec};
+use flextp::contention::{preset, ContentionTrace, ScenarioError, ScenarioSpec};
 
 fn spec(dsl: &str) -> ScenarioSpec {
     ScenarioSpec::parse(dsl).expect("valid DSL")
@@ -173,6 +173,78 @@ fn trace_cursor_persists_across_resume_without_drift() {
     for g in 0..(epochs * ipe) {
         assert_eq!(extended.chis(g), uninterrupted.chis(g), "g={g}");
     }
+}
+
+/// DSL strictness (ISSUE 6 satellite): malformed clauses fail the parse
+/// with a *typed* `ScenarioError` — never silently ignored — and the
+/// error survives the anyhow chain for callers that want to match on it.
+#[test]
+fn malformed_scenarios_raise_typed_errors() {
+    // unknown event kind
+    let err = ScenarioSpec::parse("meteor:r1@x2:iters0-4").expect_err("unknown kind");
+    match err.downcast_ref::<ScenarioError>() {
+        Some(ScenarioError::UnknownEventKind(k)) => assert_eq!(k, "meteor"),
+        other => panic!("expected UnknownEventKind, got {other:?} ({err:#})"),
+    }
+    // malformed churn clauses, each with the offending item in the error
+    for bad in [
+        "join:r*@iter4",  // churn needs a concrete rank
+        "fail:r1@iter0",  // resizing before any work ran
+        "join:r1@x4",     // missing @iterK
+        "leave:r1",       // missing everything after the rank
+        "join:rq@iter3",  // unparsable rank
+        "fail:r1@iterx",  // unparsable iteration
+    ] {
+        let err = ScenarioSpec::parse(bad).expect_err(bad);
+        assert!(
+            matches!(err.downcast_ref::<ScenarioError>(), Some(ScenarioError::Malformed { .. })),
+            "'{bad}' must raise ScenarioError::Malformed, got: {err:#}"
+        );
+    }
+    // a static event aimed past the worker set: typed RankOutOfRange
+    // from validate_ranks (parse itself cannot know e)
+    let s = spec("step:r3@x6:iters4-");
+    let err = s.validate_ranks(2).expect_err("rank 3 of 2");
+    match err.downcast_ref::<ScenarioError>() {
+        Some(ScenarioError::RankOutOfRange { rank: 3, e: 2 }) => {}
+        other => panic!("expected RankOutOfRange, got {other:?} ({err:#})"),
+    }
+    // JSON path is equally strict
+    let err = ScenarioSpec::from_json(
+        &flextp::util::json::Json::parse(r#"{"events":[{"kind":"meteor","rank":1,"chi":2}]}"#)
+            .unwrap(),
+    )
+    .expect_err("unknown JSON kind");
+    assert!(
+        matches!(err.downcast_ref::<ScenarioError>(), Some(ScenarioError::UnknownEventKind(_))),
+        "got: {err:#}"
+    );
+}
+
+/// Churn events are orchestration-level: they parse, describe, sort,
+/// and round-trip without ever perturbing the realized χ trace, and
+/// their presence suspends static rank validation (the rank set is no
+/// longer fixed for the whole run).
+#[test]
+fn churn_events_ride_along_without_touching_the_chi_trace() {
+    let with = spec("burst:r3@x5:iters2-9,fail:r3@iter6,join:r3@iter30,seed:9");
+    let without = spec("burst:r3@x5:iters2-9,seed:9");
+    let (ta, tb) = (
+        ContentionTrace::generate(&with, 4, 40),
+        ContentionTrace::generate(&without, 4, 40),
+    );
+    for g in 0..40 {
+        assert_eq!(ta.chis(g), tb.chis(g), "g={g}: churn must not perturb χ");
+    }
+    // describe() round-trips the churn clauses
+    let reparsed = ScenarioSpec::parse(&with.describe()).expect("describe re-parses");
+    assert_eq!(reparsed, with);
+    assert_eq!(with.churn_sorted().len(), 2);
+    // a static out-of-range event is tolerated when churn may resize the
+    // worker set mid-run (trace realization drops absent ranks)...
+    assert!(with.validate_ranks(2).is_ok());
+    // ...but stays an error for churn-free specs
+    assert!(without.validate_ranks(2).is_err());
 }
 
 #[test]

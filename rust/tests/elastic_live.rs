@@ -1,0 +1,266 @@
+//! Live elastic re-parallelization suite (ISSUE 6, DESIGN.md §14).
+//!
+//! The tentpole contract: when a scenario scripts worker churn
+//! (`fail:rN@iterK`, `join:rN@iterK`), the trainer re-shards **in
+//! process** — gather → shard at the same global iteration, no
+//! `.flexckpt` round-trip — and the result is *bitwise identical* to
+//! the PR 5 oracle: kill the run at iteration K, checkpoint, and resume
+//! with `--e E'`.  Every observable the math produces (losses, per-epoch
+//! sim metrics, CommStats) must match at `--threads` 1 and 4 alike.
+//!
+//! Also pinned here: mid-epoch accumulator correctness across an E
+//! change (satellite 3), graceful degradation when a failure leaves no
+//! divisor-compatible worker count (satellite 6), and the churn sweep
+//! acceptance row — elastic@online beats both fixed-E baselines on
+//! modeled RT (acceptance criterion).
+
+use flextp::bench::sweep::{run_sweep, SweepSpec};
+use flextp::config::{ReplanMode, RunCfg, StragglerPlan, Strategy, TimeModel};
+use flextp::contention::{ScenarioError, ScenarioSpec};
+use flextp::metrics::RunReport;
+use flextp::train::trainer::Trainer;
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("flextp_live_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// vit-tiny (hs=128, heads=4, e=4) under the full dynamic pipeline —
+/// SEMI + online controller + momentum, deterministic modeled clock —
+/// with scripted churn: r3 fails at iteration 4 (mid epoch 0, 4→2) and
+/// a worker rejoins at iteration 8 (mid epoch 1, 2→4).  A burst tenant
+/// keeps the balancer busy on a surviving rank throughout, so the plan,
+/// monitor, and controller state all carry real information across both
+/// transitions.
+fn churn_cfg(threads: usize) -> RunCfg {
+    let mut cfg = RunCfg::new("vit-tiny");
+    cfg.train.threads = threads;
+    cfg.train.epochs = 2;
+    cfg.train.iters_per_epoch = 6;
+    cfg.train.eval_iters = 2;
+    cfg.train.momentum = 0.9;
+    cfg.train.time_model = TimeModel::Modeled;
+    cfg.balancer.strategy = Strategy::Semi;
+    cfg.balancer.replan = ReplanMode::Online;
+    cfg.balancer.forced_lambda = Some(1);
+    cfg.stragglers = StragglerPlan::Scenario(
+        ScenarioSpec::parse(
+            "fail:r3@iter4,join:r3@iter8,burst:r1@x5:iters2-9,markov:r3@x2:p0.4-0.3,seed:9",
+        )
+        .expect("scenario"),
+    );
+    cfg
+}
+
+type Observables = (RunReport, u64, u64, usize);
+
+/// One uninterrupted run with live in-process transitions.
+fn run_live(cfg: RunCfg) -> Observables {
+    let mut t = Trainer::new(cfg).expect("trainer");
+    let r = t.run().expect("live run");
+    (r, t.comm.stats.total_bytes(), t.comm.stats.allreduce_ops, t.model().e)
+}
+
+/// The PR 5 oracle for the same schedule: kill at each churn iteration,
+/// checkpoint, and resume with `--e E'` — the elastic restore path the
+/// live transition must reproduce bit for bit.
+fn run_oracle(cfg: RunCfg, tag: &str) -> Observables {
+    let dir = tmp_dir(tag);
+    let p4 = dir.join(flextp::checkpoint::ckpt_filename(4));
+    {
+        let mut t = Trainer::new(cfg.clone()).expect("trainer");
+        t.run_to(Some(4)).expect("to the failure point");
+        assert_eq!(t.giter(), 4);
+        assert_eq!(t.model().e, 4, "the fail event must not have fired yet");
+        t.save_checkpoint(&p4).expect("save @4");
+        // drop = the kill
+    }
+    let p8 = dir.join(flextp::checkpoint::ckpt_filename(8));
+    {
+        let mut shrunk = cfg.clone();
+        shrunk.e_override = Some(2);
+        let mut t = Trainer::resume_from(shrunk, &p4).expect("elastic resume onto e=2");
+        assert_eq!(t.model().e, 2);
+        t.run_to(Some(8)).expect("to the join point");
+        assert_eq!(t.model().e, 2, "fail@4 must be a no-op on the resumed e=2 run");
+        t.save_checkpoint(&p8).expect("save @8");
+    }
+    let mut grown = cfg;
+    grown.e_override = Some(4);
+    let mut t = Trainer::resume_from(grown, &p8).expect("elastic resume onto e=4");
+    assert_eq!(t.model().e, 4);
+    let r = t.run().expect("oracle run");
+    let out = (r, t.comm.stats.total_bytes(), t.comm.stats.allreduce_ops, t.model().e);
+    let _ = std::fs::remove_dir_all(&dir);
+    out
+}
+
+fn assert_bitwise(a: &Observables, b: &Observables, what: &str) {
+    assert!(
+        a.0.loss_curve.iter().all(|l| l.is_finite()),
+        "{what}: diverged: {:?}",
+        a.0.loss_curve
+    );
+    assert_eq!(a.0.loss_curve, b.0.loss_curve, "{what}: losses must be bitwise identical");
+    assert!(a.0.sim_equal(&b.0), "{what}: per-epoch sim metrics must be bitwise identical");
+    assert_eq!(a.1, b.1, "{what}: CommStats::total_bytes must match");
+    assert_eq!(a.2, b.2, "{what}: all-reduce op counts must match");
+    assert_eq!(a.3, b.3, "{what}: final worker counts must match");
+}
+
+#[test]
+fn live_transition_matches_kill_resume_oracle_at_1_and_4_threads() {
+    let mut per_thread = Vec::new();
+    for threads in [1usize, 4] {
+        let live = run_live(churn_cfg(threads));
+        let oracle = run_oracle(churn_cfg(threads), &format!("oracle_t{threads}"));
+        assert_bitwise(&live, &oracle, &format!("threads={threads}"));
+        per_thread.push(live);
+    }
+    // the 1-vs-4-thread parity contract survives live re-sharding
+    assert_bitwise(&per_thread[0], &per_thread[1], "threads 1 vs 4");
+    let live = &per_thread[0];
+    assert_eq!(live.3, 4, "join@8 must have re-grown the run to e=4");
+    assert_eq!(live.0.loss_curve.len(), 12, "every scheduled iteration ran");
+    // sanity: the burst tenant actually engaged the balancer, so the
+    // parity above covered a non-trivial plan across the transitions
+    assert!(
+        live.0.epochs.iter().map(|e| e.pruned_cols + e.migrated_cols).sum::<u64>() > 0,
+        "no balancing engaged — the oracle comparison would be vacuous"
+    );
+}
+
+#[test]
+fn transition_fires_at_the_scheduled_iteration() {
+    let mut cfg = churn_cfg(1);
+    cfg.train.epochs = 1;
+    let mut t = Trainer::new(cfg).expect("trainer");
+    t.run_to(Some(4)).expect("to just before the failure");
+    assert_eq!(t.model().e, 4, "fail:r3@iter4 fires before iteration 4, not earlier");
+    t.run_to(Some(5)).expect("across the failure");
+    assert_eq!(t.model().e, 2, "the 4→2 re-shard lands exactly at iteration 4");
+    let r = t.run().expect("finish epoch 0");
+    assert!(r.loss_curve.iter().all(|l| l.is_finite()));
+    assert_eq!(r.loss_curve.len(), 6);
+}
+
+/// Satellite 3: epoch accumulators (replans, χ stats, CommStats deltas)
+/// survive a *mid-epoch* E change and a kill *between* the transitions.
+/// The run is killed at iteration 5 — inside epoch 0, after the 4→2
+/// re-shard — and resumed at the same width (`--e 2`, the PR 5
+/// epoch-in-progress restore path); the join@8 then fires inside the
+/// resumed run.  Everything must still match the live run bitwise.
+#[test]
+fn mid_epoch_kill_between_transitions_is_bitwise() {
+    let cfg = churn_cfg(1);
+    let live = run_live(cfg.clone());
+
+    let dir = tmp_dir("between");
+    let p5 = dir.join(flextp::checkpoint::ckpt_filename(5));
+    {
+        let mut t = Trainer::new(cfg.clone()).expect("trainer");
+        t.run_to(Some(5)).expect("past the 4→2 transition");
+        assert_eq!(t.model().e, 2, "the kill point sits between the transitions");
+        t.save_checkpoint(&p5).expect("save @5");
+    }
+    let mut same = cfg;
+    same.e_override = Some(2);
+    let mut t = Trainer::resume_from(same, &p5).expect("same-width resume");
+    assert_eq!(t.model().e, 2);
+    let r = t.run().expect("resumed run");
+    let resumed = (r, t.comm.stats.total_bytes(), t.comm.stats.allreduce_ops, t.model().e);
+    assert_bitwise(&live, &resumed, "kill between transitions");
+
+    // the accumulator guts, spelled out: epoch 0 closed at e=2 with its
+    // partials carried across both the transition and the kill, epoch 1
+    // spans the 2→4 re-grow
+    for (i, (a, b)) in live.0.epochs.iter().zip(&resumed.0.epochs).enumerate() {
+        assert_eq!(a.replans, b.replans, "epoch {i} replans");
+        assert_eq!(a.chi_mean, b.chi_mean, "epoch {i} chi_mean");
+        assert_eq!(a.chi_max, b.chi_max, "epoch {i} chi_max");
+        assert_eq!(a.comm_bytes, b.comm_bytes, "epoch {i} comm bytes");
+        assert_eq!(a.pruned_cols, b.pruned_cols, "epoch {i} pruned");
+        assert_eq!(a.migrated_cols, b.migrated_cols, "epoch {i} migrated");
+        assert_eq!(a.rt_sim_s, b.rt_sim_s, "epoch {i} simulated RT");
+    }
+    assert_eq!(live.0.epochs[0].rank_compute_s.len(), 2, "epoch 0 finalized at e=2");
+    assert_eq!(live.0.epochs[1].rank_compute_s.len(), 4, "epoch 1 finalized at e=4");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite 6: a failure that leaves a worker count dividing neither
+/// hs nor heads degrades to the nearest valid divisor; losing everything
+/// is a typed error, never a panic.
+#[test]
+fn failures_degrade_to_nearest_divisor_or_typed_error() {
+    let base = |scenario: &str| {
+        let mut cfg = churn_cfg(1);
+        cfg.train.epochs = 1;
+        cfg.stragglers =
+            StragglerPlan::Scenario(ScenarioSpec::parse(scenario).expect("scenario"));
+        cfg
+    };
+
+    // one failure: 3 survivors, but 3 divides neither hs=128 nor
+    // heads=4 — the run degrades to E'=2, the nearest valid divisor
+    let mut t = Trainer::new(base("fail:r0@iter2")).expect("trainer");
+    let r = t.run().expect("nearest-divisor run");
+    assert_eq!(t.model().e, 2, "3 survivors must degrade to E'=2");
+    assert!(r.loss_curve.iter().all(|l| l.is_finite()));
+
+    // three failures: one survivor still shards (E'=1 always divides)
+    let mut t =
+        Trainer::new(base("fail:r0@iter2,fail:r1@iter2,fail:r2@iter3")).expect("trainer");
+    let r = t.run().expect("single-survivor run");
+    assert_eq!(t.model().e, 1);
+    assert_eq!(r.loss_curve.len(), 6, "the run finishes its schedule");
+
+    // every worker gone: a typed mid-epoch error, not a panic
+    let mut t = Trainer::new(base(
+        "fail:r0@iter2,fail:r1@iter2,fail:r2@iter2,fail:r3@iter2",
+    ))
+    .expect("trainer");
+    let err = t.run().expect_err("no survivors must fail the run");
+    let scen = err
+        .downcast_ref::<ScenarioError>()
+        .unwrap_or_else(|| panic!("expected a typed ScenarioError, got: {err:#}"));
+    assert!(
+        matches!(scen, ScenarioError::NoViableWorkerCount { avail: 0, .. }),
+        "got: {scen}"
+    );
+}
+
+/// The acceptance row: under the churn sweep preset, the live elastic
+/// cell must beat *both* fixed-E baselines on modeled RT while staying
+/// within accuracy tolerance of the best of them.
+#[test]
+fn churn_sweep_elastic_cell_beats_both_fixed_baselines() {
+    let spec = SweepSpec::preset("churn").expect("churn preset");
+    let report = run_sweep(&spec).expect("churn sweep");
+    assert_eq!(report.cells.len(), 3);
+    let live = report.cells.iter().find(|c| c.cell == "live").expect("live cell");
+    let fixed: Vec<_> = report.cells.iter().filter(|c| c.cell.starts_with("fixed")).collect();
+    assert_eq!(fixed.len(), 2, "two fixed-E baselines (e=4 and e=2)");
+    for f in &fixed {
+        assert!(
+            live.rt < f.rt,
+            "elastic RT {:.4}s must beat fixed '{}' RT {:.4}s",
+            live.rt,
+            f.cell,
+            f.rt
+        );
+        assert!(
+            (live.final_acc - f.final_acc).abs() <= 0.15,
+            "elastic ACC {:.3} drifted from '{}' ACC {:.3}",
+            live.final_acc,
+            f.cell,
+            f.final_acc
+        );
+    }
+    // and the report's own comparison table agrees
+    let cc = report.churn_comparisons();
+    assert_eq!(cc.len(), 1);
+    assert!(cc[0].3 > 1.0, "elastic_speedup {:.3} must exceed 1", cc[0].3);
+}

@@ -7,7 +7,7 @@
 //! deterministic — the inequalities are exact properties of the closed
 //! simulation, not statistical luck.
 
-use flextp::bench::sweep::{run_sweep, SweepSpec};
+use flextp::bench::sweep::{run_sweep, CellSpec, SweepSpec};
 use flextp::config::{ReplanMode, Strategy, TimeModel};
 use flextp::contention::ScenarioSpec;
 use flextp::util::json::Json;
@@ -26,8 +26,8 @@ fn bursty_duel() -> SweepSpec {
         ScenarioSpec::parse("step:r1@x6:iters3-").expect("scenario"),
     )];
     s.cells = vec![
-        (Strategy::Semi, ReplanMode::Online),
-        (Strategy::Semi, ReplanMode::Epoch),
+        CellSpec::new(Strategy::Semi, ReplanMode::Online),
+        CellSpec::new(Strategy::Semi, ReplanMode::Epoch),
     ];
     s
 }
@@ -119,7 +119,7 @@ fn preempted_cell_reproduces_uninterrupted_cell_bitwise() {
         ("plain".into(), spec.scenarios[0].1.clone()),
         ("killed".into(), killed),
     ];
-    spec.cells = vec![(Strategy::Semi, ReplanMode::Online)];
+    spec.cells = vec![CellSpec::new(Strategy::Semi, ReplanMode::Online)];
     let report = run_sweep(&spec).expect("sweep with preemption");
     let plain = report.cells.iter().find(|c| c.scenario == "plain").unwrap();
     let killed = report.cells.iter().find(|c| c.scenario == "killed").unwrap();
@@ -140,7 +140,7 @@ fn sweep_report_writes_parseable_bench_scenarios_json() {
     spec.iters = 3;
     spec.eval_iters = 1;
     spec.scenarios.truncate(1); // calm only
-    spec.cells = vec![(Strategy::Semi, ReplanMode::Online)];
+    spec.cells = vec![CellSpec::new(Strategy::Semi, ReplanMode::Online)];
     let report = run_sweep(&spec).expect("sweep");
 
     let dir = std::env::temp_dir().join("flextp_sweep_test");

@@ -6,8 +6,10 @@
 //! vendors this shim as a path dependency named `anyhow` — every
 //! `use anyhow::...` in the codebase compiles unchanged.  The shim keeps
 //! anyhow's ergonomics (context chaining, `?` conversion from any
-//! `std::error::Error`) but stores the chain as plain strings rather than
-//! live trait objects; that is all the coordinator needs for diagnostics.
+//! `std::error::Error + Send + Sync + 'static` — anyhow's own bound),
+//! renders the chain as strings for diagnostics, and keeps the original
+//! root error alive so [`Error::downcast_ref`] can recover typed errors
+//! (e.g. a scenario parser's error enum) through any number of contexts.
 
 use std::fmt;
 
@@ -18,18 +20,36 @@ use std::fmt;
 pub struct Error {
     /// outermost context first, root cause last
     chain: Vec<String>,
+    /// the originating typed error, when there was one (`Error::msg`
+    /// and the macros build pure-string errors with no root)
+    root: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
 }
 
 impl Error {
     /// Construct from a displayable message (the `anyhow!` entry point).
     pub fn msg<M: fmt::Display>(message: M) -> Error {
-        Error { chain: vec![message.to_string()] }
+        Error { chain: vec![message.to_string()], root: None }
     }
 
     /// Wrap with an outer context message.
     pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
         self.chain.insert(0, context.to_string());
         self
+    }
+
+    /// A reference to the originating error if it is (or sources) an
+    /// `E` — anyhow's downcast, restricted to shared access.  Contexts
+    /// added along the way don't hide the root cause.
+    pub fn downcast_ref<E: std::error::Error + 'static>(&self) -> Option<&E> {
+        let mut cur: Option<&(dyn std::error::Error + 'static)> =
+            self.root.as_ref().map(|b| &**b as &(dyn std::error::Error + 'static));
+        while let Some(e) = cur {
+            if let Some(t) = e.downcast_ref::<E>() {
+                return Some(t);
+            }
+            cur = e.source();
+        }
+        None
     }
 
     /// The outermost message (most recent context).
@@ -67,7 +87,7 @@ impl fmt::Debug for Error {
     }
 }
 
-impl<E: std::error::Error> From<E> for Error {
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
     fn from(e: E) -> Error {
         let mut chain = vec![e.to_string()];
         let mut src = e.source();
@@ -75,7 +95,7 @@ impl<E: std::error::Error> From<E> for Error {
             chain.push(s.to_string());
             src = s.source();
         }
-        Error { chain }
+        Error { chain, root: Some(Box::new(e)) }
     }
 }
 
@@ -205,6 +225,28 @@ mod tests {
         assert!(f(11).unwrap_err().to_string().contains("11"));
         let e = anyhow!("plain {}", 5);
         assert_eq!(e.to_message(), "plain 5");
+    }
+
+    #[test]
+    fn downcast_ref_survives_context_chaining() {
+        #[derive(Debug, PartialEq)]
+        struct Typed(u32);
+        impl fmt::Display for Typed {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "typed error {}", self.0)
+            }
+        }
+        impl std::error::Error for Typed {}
+
+        let e = Error::from(Typed(7)).context("outer").context("outermost");
+        assert_eq!(e.downcast_ref::<Typed>(), Some(&Typed(7)));
+        assert!(e.downcast_ref::<std::io::Error>().is_none());
+        // string-built errors have no typed root
+        assert!(anyhow!("plain").downcast_ref::<Typed>().is_none());
+        // the io root of a ?-converted error is reachable too
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("loading").unwrap_err();
+        assert_eq!(e.downcast_ref::<std::io::Error>().unwrap().to_string(), "gone");
     }
 
     #[test]
