@@ -15,7 +15,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{ReplanMode, RunCfg, StragglerPlan, Strategy, TimeModel};
+use crate::config::{ReplanMode, RunCfg, StragglerPlan, Strategy, TimeModel, TransportKind};
 use crate::contention::{self, ScenarioSpec};
 use crate::metrics::RunReport;
 use crate::train::trainer::Trainer;
@@ -36,25 +36,47 @@ pub struct CellSpec {
     pub e_override: Option<usize>,
     /// act on scenario churn events (live elastic re-parallelization)
     pub churn: bool,
+    /// collective data plane (DESIGN.md §15); composes with the
+    /// elasticity stance, so one matrix covers `live@tcp` without a
+    /// duplicated cell list
+    pub transport: TransportKind,
 }
 
 impl CellSpec {
     pub fn new(strategy: Strategy, replan: ReplanMode) -> CellSpec {
-        CellSpec { strategy, replan, e_override: None, churn: true }
+        CellSpec {
+            strategy,
+            replan,
+            e_override: None,
+            churn: true,
+            transport: TransportKind::InProc,
+        }
     }
 
     pub fn fixed(strategy: Strategy, replan: ReplanMode, e: Option<usize>) -> CellSpec {
-        CellSpec { strategy, replan, e_override: e, churn: false }
+        CellSpec { e_override: e, churn: false, ..CellSpec::new(strategy, replan) }
     }
 
-    /// Elasticity tag, the `cell` column of `BENCH_scenarios.json`:
-    /// `live`, `live-eN`, `fixed`, or `fixed-eN`.
+    pub fn with_transport(mut self, transport: TransportKind) -> CellSpec {
+        self.transport = transport;
+        self
+    }
+
+    /// Elasticity/transport tag, the `cell` column of
+    /// `BENCH_scenarios.json`: `live`, `live-eN`, `fixed`, or `fixed-eN`,
+    /// with a `+tcp` suffix for multi-process cells.  In-process cells
+    /// keep the historic bare tags so existing consumers (churn-parity
+    /// CI, `churn_comparisons`) are unaffected.
     pub fn tag(&self) -> String {
         let base = if self.churn { "live" } else { "fixed" };
-        match self.e_override {
+        let mut tag = match self.e_override {
             Some(e) => format!("{base}-e{e}"),
             None => base.to_string(),
+        };
+        if self.transport == TransportKind::Tcp {
+            tag.push_str("+tcp");
         }
+        tag
     }
 }
 
@@ -68,9 +90,12 @@ pub struct SweepSpec {
     pub eval_iters: usize,
     pub seed: u64,
     pub time_model: TimeModel,
+    /// rank binary for `@tcp` cells (`--rank-exe`); `None` re-execs the
+    /// current executable
+    pub rank_exe: Option<std::path::PathBuf>,
     /// (label, scenario) rows of the matrix
     pub scenarios: Vec<(String, ScenarioSpec)>,
-    /// strategy/replan/elasticity columns of the matrix
+    /// strategy/replan/elasticity/transport columns of the matrix
     pub cells: Vec<CellSpec>,
 }
 
@@ -84,6 +109,7 @@ impl SweepSpec {
             eval_iters: 4,
             seed: 42,
             time_model: TimeModel::Modeled,
+            rank_exe: None,
             scenarios: Vec::new(),
             cells: Vec::new(),
         }
@@ -158,33 +184,53 @@ impl SweepSpec {
 }
 
 /// Parse a strategy cell: `"semi@online"` → Semi/Online; a bare
-/// strategy name keeps the legacy per-iteration replanning.  An
-/// optional third segment sets the elasticity stance: `semi@online@fixed`
-/// ignores churn events, `semi@online@fixed-e2` additionally forces the
-/// starting worker count, `semi@online@live` is the (default) elastic
-/// cell.
+/// strategy name keeps the legacy per-iteration replanning.  Further
+/// `@`-segments compose in any order, at most once each:
+///
+/// * elasticity — `live` (default) acts on churn events, `fixed`
+///   ignores them, `fixed-e2` additionally forces the starting worker
+///   count;
+/// * transport — `inproc` (default) or `tcp` picks the collective data
+///   plane, so `semi@online@live@tcp` runs the elastic cell over real
+///   rank processes without a second cell grammar.
 pub fn parse_cell(s: &str) -> Result<CellSpec> {
-    let mut parts = s.splitn(3, '@');
+    let mut parts = s.split('@');
     let st = Strategy::parse(parts.next().unwrap_or(""))?;
     let rp = match parts.next() {
         Some(rp) => ReplanMode::parse(rp)?,
         None => ReplanMode::Iter,
     };
     let mut cell = CellSpec::new(st, rp);
-    if let Some(el) = parts.next() {
-        let (base, e) = match el.split_once("-e") {
+    let (mut saw_elastic, mut saw_transport) = (false, false);
+    for seg in parts {
+        if matches!(seg, "inproc" | "tcp") {
+            if saw_transport {
+                bail!("duplicate transport tag '{seg}' in cell '{s}'");
+            }
+            saw_transport = true;
+            cell.transport = TransportKind::parse(seg)?;
+            continue;
+        }
+        if saw_elastic {
+            bail!("duplicate elasticity tag '{seg}' in cell '{s}'");
+        }
+        saw_elastic = true;
+        let (base, e) = match seg.split_once("-e") {
             Some((b, n)) => {
                 let e: usize = n
                     .parse()
-                    .with_context(|| format!("bad worker count in cell elasticity '{el}'"))?;
+                    .with_context(|| format!("bad worker count in cell elasticity '{seg}'"))?;
                 (b, Some(e))
             }
-            None => (el, None),
+            None => (seg, None),
         };
         match base {
             "live" => cell.churn = true,
             "fixed" => cell.churn = false,
-            _ => bail!("unknown cell elasticity '{el}' (live|fixed, optionally -eN)"),
+            _ => bail!(
+                "unknown cell tag '{seg}' (live|fixed, optionally -eN, or a \
+                 transport: inproc|tcp)"
+            ),
         }
         cell.e_override = e;
     }
@@ -265,6 +311,8 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport> {
             cfg.train.eval_iters = spec.eval_iters;
             cfg.train.seed = spec.seed;
             cfg.train.time_model = spec.time_model;
+            cfg.train.transport = cell.transport;
+            cfg.train.rank_exe = spec.rank_exe.clone();
             cfg.stragglers = StragglerPlan::Scenario(scen.clone());
             let r = run_cell(cfg, scen.preempt, label, cell).with_context(|| {
                 format!(
@@ -533,6 +581,20 @@ mod tests {
         assert!(parse_cell("semi@online@fixed-ex").is_err());
         assert!(parse_cell("semi@sometimes").is_err());
         assert!(parse_cell("vibes@online").is_err());
+        // transport tags compose with elasticity tags in either order
+        let tcp = parse_cell("semi@online@tcp").unwrap();
+        assert_eq!(tcp, CellSpec::new(Strategy::Semi, ReplanMode::Online)
+            .with_transport(TransportKind::Tcp));
+        assert_eq!(tcp.tag(), "live+tcp");
+        assert_eq!(
+            parse_cell("semi@online@tcp@fixed-e2").unwrap(),
+            parse_cell("semi@online@fixed-e2@tcp").unwrap()
+        );
+        assert_eq!(parse_cell("semi@online@fixed-e2@tcp").unwrap().tag(), "fixed-e2+tcp");
+        // inproc is the explicit spelling of the default (bare tag)
+        assert_eq!(parse_cell("semi@online@inproc").unwrap().tag(), "live");
+        assert!(parse_cell("semi@online@tcp@inproc").is_err(), "duplicate transport");
+        assert!(parse_cell("semi@online@live@fixed").is_err(), "duplicate elasticity");
         let sc = parse_scenarios("a=burst:r1@x4:iters0-4;step:r2@x3:iters1-").unwrap();
         assert_eq!(sc.len(), 2);
         assert_eq!(sc[0].0, "a");

@@ -146,7 +146,10 @@ pub fn plan_desc(p: &StragglerPlan) -> String {
 /// Everything that feeds the training math, in one comparable string.
 /// Excluded on purpose: `--threads` (bitwise-invariant), `--epochs`
 /// (runs may be extended), wall-only knobs (`--emulate-wall`,
-/// `--timeline`), and checkpoint plumbing itself.
+/// `--timeline`), the transport knobs (`--transport`,
+/// `--transport-timeout-ms`, `--rank-exe` — cross-transport parity is
+/// bitwise, tests/transport_parity.rs, so a tcp run may resume an
+/// inproc checkpoint and vice versa), and checkpoint plumbing itself.
 pub fn cfg_fingerprint(cfg: &RunCfg) -> String {
     let b = &cfg.balancer;
     let t = &cfg.train;
@@ -1024,6 +1027,11 @@ mod tests {
         a.train.emulate_wall = true;
         a.train.timeline = true;
         a.train.ckpt_every = 3;
+        // the transport is a pure data plane — a tcp run may resume an
+        // inproc checkpoint (tests/transport_parity.rs)
+        a.train.transport = crate::config::TransportKind::Tcp;
+        a.train.transport_timeout_ms = 123;
+        a.train.rank_exe = Some(std::path::PathBuf::from("/tmp/flextp"));
         assert_eq!(cfg_fingerprint(&a), cfg_fingerprint(&b), "non-math knobs must not pin");
         let mut c = b.clone();
         c.train.seed = 43;

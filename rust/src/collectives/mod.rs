@@ -13,10 +13,12 @@
 //! finished first — so results are reproducible at any `--threads`.
 
 pub mod cost;
+pub mod transport;
 
 use crate::cluster::Clocks;
 use crate::tensor::Tensor;
 use cost::CostModel;
+use transport::{InProc, Transport, TransportError};
 
 /// Byte/op accounting per collective family (metrics + Φ₁ fitting).
 #[derive(Debug, Clone, Default)]
@@ -42,16 +44,29 @@ impl CommStats {
     }
 }
 
-/// The collective engine: cost model + stats, operating on rank buffers.
+/// The collective engine: cost model + stats + a pluggable data plane.
+///
+/// Accounting (simulated clocks, α-β costs, `CommStats`) always runs here
+/// on the coordinator; only the all-reduce *data movement* is delegated
+/// to the [`Transport`] — which is why every transport produces identical
+/// simulated metrics by construction (DESIGN.md §15).
 #[derive(Debug)]
 pub struct Comm {
     pub cost: CostModel,
     pub stats: CommStats,
+    /// The all-reduce data plane: [`InProc`] (buffer slots in this
+    /// process, the historic engine) or
+    /// [`LocalTcp`](transport::LocalTcp) (OS-process ranks).
+    pub transport: Box<dyn Transport>,
 }
 
 impl Comm {
     pub fn new(cost: CostModel) -> Comm {
-        Comm { cost, stats: CommStats::default() }
+        Comm::with_transport(cost, Box::new(InProc))
+    }
+
+    pub fn with_transport(cost: CostModel, transport: Box<dyn Transport>) -> Comm {
+        Comm { cost, stats: CommStats::default(), transport }
     }
 
     /// All-reduce: every rank ends with the elementwise sum.
@@ -63,26 +78,21 @@ impl Comm {
     /// e alone — never of rank arrival order or thread interleaving — and
     /// a `--threads 1` run and a `--threads N` run produce bitwise-equal
     /// sums (the parity invariant of `tests/parallel_determinism.rs`).
-    /// Time is still charged with the ring α-β model the paper assumes.
-    pub fn all_reduce(&mut self, clocks: &mut Clocks, bufs: &mut [Tensor]) {
+    /// The same order is what [`transport::LocalTcp`] distributes over
+    /// rank processes, so transports are bitwise-interchangeable too
+    /// (`tests/transport_parity.rs`).  Time is still charged with the
+    /// ring α-β model the paper assumes.  `phase` labels the collective
+    /// in transport errors.
+    pub fn all_reduce(
+        &mut self,
+        clocks: &mut Clocks,
+        phase: &str,
+        bufs: &mut [Tensor],
+    ) -> Result<(), TransportError> {
         let e = bufs.len();
         debug_assert_eq!(e, clocks.e());
         let bytes = bufs[0].size_bytes();
-        // data: deterministic tree-reduce into rank 0, then copy out
-        let mut d = 1;
-        while d < e {
-            let mut i = 0;
-            while i + d < e {
-                let (head, tail) = bufs.split_at_mut(i + d);
-                head[i].add_assign(&tail[0]);
-                i += 2 * d;
-            }
-            d *= 2;
-        }
-        let (first, rest) = bufs.split_at_mut(1);
-        for b in rest.iter_mut() {
-            b.data.copy_from_slice(&first[0].data);
-        }
+        self.transport.all_reduce(phase, bufs)?;
         clocks.barrier();
         let dt = self.cost.ring_allreduce(e, bytes);
         for r in 0..e {
@@ -90,6 +100,39 @@ impl Comm {
         }
         self.stats.allreduce_ops += 1;
         self.stats.allreduce_bytes += bytes as u64;
+        Ok(())
+    }
+
+    /// Several independent all-reduces at once.  The transport may
+    /// overlap the groups' collective waits (the Megatron column/row
+    /// overlap discipline — `LocalTcp` submits every group's frames
+    /// before collecting any sum); the accounting below replays the
+    /// exact barrier/cost sequence of sequential [`Comm::all_reduce`]
+    /// calls, so clocks, stats, and data are bitwise identical to the
+    /// unbatched form on every transport.
+    pub fn all_reduce_batch(
+        &mut self,
+        clocks: &mut Clocks,
+        phase: &str,
+        groups: &mut [&mut [Tensor]],
+    ) -> Result<(), TransportError> {
+        if groups.is_empty() {
+            return Ok(());
+        }
+        let e = groups[0].len();
+        debug_assert_eq!(e, clocks.e());
+        let sizes: Vec<usize> = groups.iter().map(|g| g[0].size_bytes()).collect();
+        self.transport.all_reduce_batch(phase, groups)?;
+        for bytes in sizes {
+            clocks.barrier();
+            let dt = self.cost.ring_allreduce(e, bytes);
+            for r in 0..e {
+                clocks.advance_comm(r, dt);
+            }
+            self.stats.allreduce_ops += 1;
+            self.stats.allreduce_bytes += bytes as u64;
+        }
+        Ok(())
     }
 
     /// All-gather of per-rank scalars (e.g. the T_i runtime list of
@@ -202,7 +245,7 @@ mod tests {
             Tensor::from_vec(&[2], vec![10.0, 20.0]),
             Tensor::from_vec(&[2], vec![100.0, 200.0]),
         ];
-        comm.all_reduce(&mut clocks, &mut bufs);
+        comm.all_reduce(&mut clocks, "test", &mut bufs).unwrap();
         for b in &bufs {
             assert_eq!(b.data, vec![111.0, 222.0]);
         }
@@ -216,7 +259,7 @@ mod tests {
         let mut clocks = Clocks::new(2);
         clocks.advance(1, 5.0); // straggler
         let mut bufs = vec![Tensor::zeros(&[4]), Tensor::zeros(&[4])];
-        comm.all_reduce(&mut clocks, &mut bufs);
+        comm.all_reduce(&mut clocks, "test", &mut bufs).unwrap();
         // rank 0 waited for rank 1 — the waiting cost
         assert!(clocks.now(0) >= 5.0);
         assert_eq!(clocks.now(0), clocks.now(1));
@@ -279,7 +322,7 @@ mod tests {
                     Tensor::from_vec(&[3], vec![0.1 * r as f32, 1.0 / (r + 1) as f32, 1e-3])
                 })
                 .collect();
-            comm.all_reduce(&mut clocks, &mut bufs);
+            comm.all_reduce(&mut clocks, "test", &mut bufs).unwrap();
             bufs[0].data.clone()
         };
         let a = mk(&[0.0, 0.0, 0.0, 0.0, 0.0]);
@@ -295,11 +338,53 @@ mod tests {
         let mut c = mk_comm();
         let mut k = Clocks::new(2);
         let mut bufs = vec![Tensor::zeros(&[8]), Tensor::zeros(&[8])];
-        c.all_reduce(&mut k, &mut bufs);
-        c.all_reduce(&mut k, &mut bufs);
+        c.all_reduce(&mut k, "test", &mut bufs).unwrap();
+        c.all_reduce(&mut k, "test", &mut bufs).unwrap();
         c.broadcast(&mut k, 0, &[1], 100);
         assert_eq!(c.stats.allreduce_ops, 2);
         assert_eq!(c.stats.allreduce_bytes, 64);
         assert_eq!(c.stats.total_bytes(), 64 + 100);
+    }
+
+    #[test]
+    fn batch_matches_sequential_accounting_and_data() {
+        // the overlapped batch form must be indistinguishable from
+        // sequential calls: same sums, same clocks, same stats
+        let mk_bufs = || {
+            vec![
+                vec![
+                    Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]),
+                    Tensor::from_vec(&[3], vec![4.0, 5.0, 6.0]),
+                ],
+                vec![
+                    Tensor::from_vec(&[5], vec![0.1; 5]),
+                    Tensor::from_vec(&[5], vec![0.2; 5]),
+                ],
+            ]
+        };
+        let mut seq = mk_bufs();
+        let mut cs = mk_comm();
+        let mut ks = Clocks::new(2);
+        ks.advance(1, 3.0); // skewed start must not matter
+        for g in seq.iter_mut() {
+            cs.all_reduce(&mut ks, "test", g).unwrap();
+        }
+
+        let mut bat = mk_bufs();
+        let mut cb = mk_comm();
+        let mut kb = Clocks::new(2);
+        kb.advance(1, 3.0);
+        let (a, b) = bat.split_at_mut(1);
+        cb.all_reduce_batch(&mut kb, "test", &mut [&mut a[0][..], &mut b[0][..]]).unwrap();
+
+        for (gs, gb) in seq.iter().zip(bat.iter()) {
+            for (ts, tb) in gs.iter().zip(gb.iter()) {
+                assert_eq!(ts.data, tb.data);
+            }
+        }
+        assert_eq!(ks.now(0), kb.now(0));
+        assert_eq!(ks.now(1), kb.now(1));
+        assert_eq!(cs.stats.allreduce_ops, cb.stats.allreduce_ops);
+        assert_eq!(cs.stats.allreduce_bytes, cb.stats.allreduce_bytes);
     }
 }

@@ -1,0 +1,1265 @@
+//! Pluggable collective transport (DESIGN.md §15).
+//!
+//! [`Comm`](super::Comm) owns the *accounting* of every collective (the
+//! α-β cost model, the simulated clocks, `CommStats`); the only collective
+//! that moves real data is the all-reduce.  This module makes that data
+//! plane pluggable behind the [`Transport`] trait:
+//!
+//! * [`InProc`] — the historic engine: every rank is a buffer slot in the
+//!   coordinator's address space and the reduction is the fixed
+//!   binary-tree stride loop, byte for byte what the code has always done.
+//! * [`LocalTcp`] — every rank is an **OS process** (`flextp rank …`,
+//!   re-exec of the current binary) connected over localhost TCP with
+//!   length-prefixed, checksummed frames.  The reduction runs over the
+//!   *same* fixed binary tree, expressed as its binomial-tree form
+//!   (rank `j` receives the partials of children `j+d` for every stride
+//!   `d` with `j ≡ 0 (mod 2d)`, in increasing-stride order, then forwards
+//!   to parent `j − lowbit(j)`), so f32 sums are **bitwise identical** to
+//!   `InProc` — determinism survives the wire
+//!   (`tests/transport_parity.rs`).
+//!
+//! Every failure maps to a typed [`TransportError`] — never a panic, and
+//! never an unbounded hang: all reads carry bounded timeouts, connects
+//! use exponential backoff with a deadline, and a dead peer is identified
+//! by probing the child processes (`try_wait`) so a SIGKILL surfaces as
+//! [`TransportError::PeerDied`] rather than a bare socket error.  The
+//! trainer routes `PeerDied` into the PR 6 churn path: snapshot-restore
+//! onto the nearest-divisor worker count, exactly the
+//! kill/checkpoint/`--resume --e E'` oracle (`tests/transport_faults.rs`).
+
+use std::fmt;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use crate::tensor::Tensor;
+
+// ---------------------------------------------------------------------
+// Wire constants (documented in DESIGN.md §15)
+// ---------------------------------------------------------------------
+
+/// Frame preamble: any stream not starting with this is a `BadFrame`.
+pub const MAGIC: [u8; 4] = *b"FLXT";
+/// Hard payload ceiling (16 MiB) — a corrupt length field fails fast as
+/// `BadFrame` instead of attempting a multi-gigabyte allocation.
+pub const MAX_FRAME: usize = 1 << 24;
+/// First retry delay of the exponential-backoff connect loop.
+pub const CONNECT_BACKOFF_START_MS: u64 = 1;
+/// Backoff cap: retries never sleep longer than this between attempts.
+pub const CONNECT_BACKOFF_CAP_MS: u64 = 200;
+/// Total budget for one backoff connect before `ConnRefused`.
+pub const CONNECT_DEADLINE_MS: u64 = 10_000;
+/// Group handshake budget (spawn → hello → topology → ready).  Decoupled
+/// from the per-collective read timeout so a deliberately tiny
+/// `--transport-timeout-ms` (fault tests) still lets the group form.
+pub const HANDSHAKE_TIMEOUT_MS: u64 = 30_000;
+/// Rank-side idle read timeout.  Deliberately much longer than the
+/// coordinator-side default so a stalled peer is always diagnosed by the
+/// coordinator (typed `Timeout`) before the rank-side cascade fires.
+pub const RANK_IDLE_TIMEOUT_MS: u64 = 60_000;
+/// Coordinator-side default per-read timeout (`--transport-timeout-ms`).
+pub const DEFAULT_COORD_TIMEOUT_MS: u64 = 10_000;
+
+// ---------------------------------------------------------------------
+// Typed errors
+// ---------------------------------------------------------------------
+
+/// Every way the transport can fail.  The contract: any I/O anomaly,
+/// malformed frame, or peer death decodes to exactly one of these —
+/// callers never see a panic, a hang, or an untyped error string.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TransportError {
+    /// Could not connect within the backoff deadline.
+    ConnRefused { addr: String },
+    /// The stream ended inside a frame (peer closed mid-message).
+    Truncated { got: usize, want: usize },
+    /// Structurally invalid frame: bad magic, oversized length, checksum
+    /// mismatch, unknown kind, or a frame out of protocol order.
+    BadFrame { reason: String },
+    /// A rank process is gone (exited or signal-killed).
+    PeerDied { rank: usize },
+    /// A bounded read/write deadline expired with all peers still alive.
+    Timeout { waiting_for: String },
+    /// Any other I/O error, with its kind preserved for matching.
+    Io { context: String, kind: io::ErrorKind },
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::ConnRefused { addr } => {
+                write!(f, "connection to {addr} refused (backoff deadline exhausted)")
+            }
+            TransportError::Truncated { got, want } => {
+                write!(f, "frame truncated: got {got} of {want} bytes")
+            }
+            TransportError::BadFrame { reason } => write!(f, "bad frame: {reason}"),
+            TransportError::PeerDied { rank } => write!(f, "rank {rank} process died"),
+            TransportError::Timeout { waiting_for } => {
+                write!(f, "transport timeout waiting for {waiting_for}")
+            }
+            TransportError::Io { context, kind } => write!(f, "transport i/o ({context}): {kind}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// Classify a raw I/O error from a socket read/write.  EOF means the
+/// peer closed mid-frame; WouldBlock/TimedOut are the bounded-read
+/// deadline (both appear depending on platform).
+fn map_io(err: io::Error, context: &str) -> TransportError {
+    match err.kind() {
+        io::ErrorKind::UnexpectedEof => TransportError::Truncated { got: 0, want: 1 },
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => {
+            TransportError::Timeout { waiting_for: context.to_string() }
+        }
+        kind => TransportError::Io { context: context.to_string(), kind },
+    }
+}
+
+// ---------------------------------------------------------------------
+// Frame codec
+// ---------------------------------------------------------------------
+
+/// Message kinds carried on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    /// rank → coordinator / parent: identify self; payload = child-facing
+    /// listen port (u16 LE, 0 when the rank is a leaf).
+    Hello = 1,
+    /// coordinator → rank: payload = group size `e` (u16 LE) + the
+    /// rank's parent listen port (u16 LE, 0 for rank 0).
+    Topology = 2,
+    /// coordinator → rank: one all-reduce input; payload = f32 LE data.
+    Work = 3,
+    /// child → parent: subtree partial sum; payload = f32 LE data.
+    Partial = 4,
+    /// rank 0 → coordinator: the full tree sum; payload = f32 LE data.
+    Sum = 5,
+    /// rank → coordinator: handshake complete (tree links are up).
+    Ready = 6,
+    /// coordinator → rank: exit cleanly.
+    Shutdown = 7,
+}
+
+impl FrameKind {
+    pub fn from_u8(v: u8) -> Option<FrameKind> {
+        match v {
+            1 => Some(FrameKind::Hello),
+            2 => Some(FrameKind::Topology),
+            3 => Some(FrameKind::Work),
+            4 => Some(FrameKind::Partial),
+            5 => Some(FrameKind::Sum),
+            6 => Some(FrameKind::Ready),
+            7 => Some(FrameKind::Shutdown),
+            _ => None,
+        }
+    }
+
+    /// Every kind, for round-trip property tests.
+    pub fn all() -> [FrameKind; 7] {
+        [
+            FrameKind::Hello,
+            FrameKind::Topology,
+            FrameKind::Work,
+            FrameKind::Partial,
+            FrameKind::Sum,
+            FrameKind::Ready,
+            FrameKind::Shutdown,
+        ]
+    }
+}
+
+/// One decoded frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub rank: u16,
+    pub seq: u32,
+    pub payload: Vec<u8>,
+}
+
+/// FNV-1a 64-bit over the header-after-magic plus payload: cheap, no
+/// dependencies, and catches the single-bit flips the fuzz suite injects.
+fn fnv1a64(parts: &[&[u8]]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for part in parts {
+        for &b in *part {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Frame layout: `MAGIC(4) | kind(1) | rank(2 LE) | seq(4 LE) |
+/// len(4 LE) | payload(len) | fnv1a64(11-byte header + payload)(8 LE)`.
+pub fn encode_frame(kind: FrameKind, rank: u16, seq: u32, payload: &[u8]) -> Vec<u8> {
+    let mut header = [0u8; 11];
+    header[0] = kind as u8;
+    header[1..3].copy_from_slice(&rank.to_le_bytes());
+    header[3..7].copy_from_slice(&seq.to_le_bytes());
+    header[7..11].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    let sum = fnv1a64(&[&header, payload]);
+    let mut out = Vec::with_capacity(4 + 11 + payload.len() + 8);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&header);
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Encode and write one frame (single `write_all` so the frame hits the
+/// socket as one burst; TCP_NODELAY is set on every stream).
+pub fn write_frame<W: Write>(
+    w: &mut W,
+    kind: FrameKind,
+    rank: u16,
+    seq: u32,
+    payload: &[u8],
+) -> Result<(), TransportError> {
+    let buf = encode_frame(kind, rank, seq, payload);
+    w.write_all(&buf).map_err(|e| map_io(e, "writing frame"))?;
+    w.flush().map_err(|e| map_io(e, "flushing frame"))?;
+    Ok(())
+}
+
+fn read_exact_or(r: &mut impl Read, buf: &mut [u8], got_so_far: usize, want_total: usize)
+    -> Result<(), TransportError>
+{
+    r.read_exact(buf).map_err(|e| {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            TransportError::Truncated { got: got_so_far, want: want_total }
+        } else {
+            map_io(e, "reading frame")
+        }
+    })
+}
+
+/// Decode one frame.  Every malformation maps to a typed error:
+/// truncation → `Truncated`; bad magic, oversized length, checksum
+/// mismatch, unknown kind → `BadFrame`; expired read deadline →
+/// `Timeout` (`tests` fuzz all of these).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, TransportError> {
+    let mut magic = [0u8; 4];
+    read_exact_or(r, &mut magic, 0, 4 + 11)?;
+    if magic != MAGIC {
+        return Err(TransportError::BadFrame { reason: format!("bad magic {magic:02x?}") });
+    }
+    let mut header = [0u8; 11];
+    read_exact_or(r, &mut header, 4, 4 + 11)?;
+    let kind_byte = header[0];
+    let rank = u16::from_le_bytes([header[1], header[2]]);
+    let seq = u32::from_le_bytes([header[3], header[4], header[5], header[6]]);
+    let len = u32::from_le_bytes([header[7], header[8], header[9], header[10]]) as usize;
+    if len > MAX_FRAME {
+        return Err(TransportError::BadFrame {
+            reason: format!("oversized frame: {len} > {MAX_FRAME} bytes"),
+        });
+    }
+    let mut payload = vec![0u8; len];
+    read_exact_or(r, &mut payload, 4 + 11, 4 + 11 + len + 8)?;
+    let mut sum = [0u8; 8];
+    read_exact_or(r, &mut sum, 4 + 11 + len, 4 + 11 + len + 8)?;
+    let want = fnv1a64(&[&header, &payload]);
+    if u64::from_le_bytes(sum) != want {
+        return Err(TransportError::BadFrame { reason: "checksum mismatch".to_string() });
+    }
+    let kind = FrameKind::from_u8(kind_byte).ok_or_else(|| TransportError::BadFrame {
+        reason: format!("unknown frame kind {kind_byte}"),
+    })?;
+    Ok(Frame { kind, rank, seq, payload })
+}
+
+/// Read a frame and require a specific kind (and sequence number, when
+/// expected): a structurally valid frame arriving out of protocol order
+/// is a `BadFrame`, not a silent misinterpretation.
+pub fn expect_frame<R: Read>(
+    r: &mut R,
+    kind: FrameKind,
+    seq: Option<u32>,
+) -> Result<Frame, TransportError> {
+    let f = read_frame(r)?;
+    if f.kind != kind {
+        return Err(TransportError::BadFrame {
+            reason: format!("expected {kind:?} frame, got {:?} (reordered?)", f.kind),
+        });
+    }
+    if let Some(s) = seq {
+        if f.seq != s {
+            return Err(TransportError::BadFrame {
+                reason: format!("expected {kind:?} seq {s}, got seq {}", f.seq),
+            });
+        }
+    }
+    Ok(f)
+}
+
+/// f32 → LE bytes.  The wire carries the exact storage bits, so a
+/// round-trip is bit-preserving (including negative zero and NaN
+/// payloads) — one leg of the cross-transport bitwise-parity argument.
+pub fn f32s_to_bytes(vals: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * 4);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// LE bytes → f32 (caller has already validated the length).
+pub fn bytes_to_f32s(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// The fixed binary tree, in both of its equivalent forms
+// ---------------------------------------------------------------------
+
+/// The historic in-process reduction: stride loop + copy-out.  At stride
+/// `d` the pairs `(i, i+d)` (for `i ≡ 0 mod 2d`, `i+d < e`) combine in
+/// increasing-`i` order; afterwards slot 0 holds the sum and is copied
+/// to every other slot.  The f32 association order is a function of `e`
+/// alone.
+pub(crate) fn tree_reduce_inplace(bufs: &mut [Tensor]) {
+    let e = bufs.len();
+    let mut d = 1;
+    while d < e {
+        let mut i = 0;
+        while i + d < e {
+            let (head, tail) = bufs.split_at_mut(i + d);
+            head[i].add_assign(&tail[0]);
+            i += 2 * d;
+        }
+        d *= 2;
+    }
+    let (first, rest) = bufs.split_at_mut(1);
+    for b in rest.iter_mut() {
+        b.data.copy_from_slice(&first[0].data);
+    }
+}
+
+/// Binomial-tree children of `rank` in a group of `e`, in the
+/// increasing-stride order the rank must consume their partials:
+/// `{rank+d : rank ≡ 0 mod 2d, rank+d < e}` for `d = 1, 2, 4, …`.
+///
+/// Consuming child partials in this order makes each rank's local
+/// accumulation replay exactly the stride-loop association of
+/// [`tree_reduce_inplace`] (pinned by `tests::binomial_matches_stride_loop`),
+/// which is why `LocalTcp` sums are bitwise equal to `InProc` sums.
+pub fn children_of(rank: usize, e: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut d = 1;
+    while d < e {
+        if rank % (2 * d) == 0 && rank + d < e {
+            out.push(rank + d);
+        }
+        d *= 2;
+    }
+    out
+}
+
+/// Binomial-tree parent: clear the lowest set bit.  Rank 0's "parent" is
+/// the coordinator itself.
+pub fn parent_of(rank: usize) -> usize {
+    rank - (rank & rank.wrapping_neg())
+}
+
+// ---------------------------------------------------------------------
+// The trait
+// ---------------------------------------------------------------------
+
+/// The pluggable all-reduce data plane.  Implementations move bytes;
+/// they never touch clocks, cost models, or stats — that accounting
+/// lives in [`Comm`](super::Comm) and is therefore identical across
+/// transports by construction.
+pub trait Transport: fmt::Debug + Send {
+    /// Short name for reports and errors (`"inproc"` / `"tcp"`).
+    fn name(&self) -> &'static str;
+
+    /// Reduce `bufs` (one tensor per rank, equal shapes) so every slot
+    /// holds the elementwise sum, using the fixed binary-tree order.
+    /// `phase` labels the collective for error context only.
+    fn all_reduce(&mut self, phase: &str, bufs: &mut [Tensor]) -> Result<(), TransportError>;
+
+    /// Reduce several independent groups.  The default runs them
+    /// sequentially; a wire transport may submit all groups before
+    /// collecting any result, overlapping the collective waits
+    /// (Megatron's column/row-parallel overlap discipline) — the sums
+    /// are bitwise identical either way because each group's reduction
+    /// order is unchanged.
+    fn all_reduce_batch(
+        &mut self,
+        phase: &str,
+        groups: &mut [&mut [Tensor]],
+    ) -> Result<(), TransportError> {
+        for g in groups.iter_mut() {
+            self.all_reduce(phase, g)?;
+        }
+        Ok(())
+    }
+
+    /// Make the transport ready for a group of `e` ranks (spawn or
+    /// re-spawn worker processes as needed).  A no-op for in-process
+    /// transports.  Called by `Trainer::transition_to` after a live
+    /// re-shard so churn under `@tcp` rebuilds the process group.
+    fn ensure_group(&mut self, _e: usize) -> Result<(), TransportError> {
+        Ok(())
+    }
+
+    /// Fault injection (tests): SIGKILL the given rank's process.
+    /// Returns false when there is no such process to kill.
+    fn kill_rank(&mut self, _rank: usize) -> bool {
+        false
+    }
+
+    /// OS pid of the given rank's process, when one exists.
+    fn rank_pid(&self, _rank: usize) -> Option<u32> {
+        None
+    }
+}
+
+/// The historic engine: ranks are buffer slots in the coordinator's
+/// address space; the reduction is [`tree_reduce_inplace`], byte for
+/// byte today's behavior.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct InProc;
+
+impl Transport for InProc {
+    fn name(&self) -> &'static str {
+        "inproc"
+    }
+
+    fn all_reduce(&mut self, _phase: &str, bufs: &mut [Tensor]) -> Result<(), TransportError> {
+        tree_reduce_inplace(bufs);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// LocalTcp: OS-process ranks over localhost sockets
+// ---------------------------------------------------------------------
+
+/// Resolve the binary to re-exec as `flextp rank`: explicit config
+/// (`--rank-exe`), then the `FLEXTP_RANK_EXE` environment variable
+/// (integration tests point it at `CARGO_BIN_EXE_flextp` — the *test*
+/// binary is not the CLI), then `current_exe` (the CLI re-execs itself).
+pub fn resolve_rank_exe(explicit: Option<&Path>) -> Result<PathBuf, TransportError> {
+    if let Some(p) = explicit {
+        return Ok(p.to_path_buf());
+    }
+    if let Ok(p) = std::env::var("FLEXTP_RANK_EXE") {
+        if !p.is_empty() {
+            return Ok(PathBuf::from(p));
+        }
+    }
+    std::env::current_exe().map_err(|e| TransportError::Io {
+        context: "resolving rank executable (current_exe)".to_string(),
+        kind: e.kind(),
+    })
+}
+
+/// Connect with exponential backoff: refused/unreachable attempts retry
+/// with doubling sleeps until `deadline_ms` elapses, then the typed
+/// `ConnRefused` surfaces.  Rank processes racing the coordinator's (or
+/// each other's) listeners is expected at startup, not an error.
+pub fn connect_with_backoff(addr: &str, deadline_ms: u64) -> Result<TcpStream, TransportError> {
+    let deadline = Instant::now() + Duration::from_millis(deadline_ms);
+    let mut sleep_ms = CONNECT_BACKOFF_START_MS;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                s.set_nodelay(true).map_err(|e| map_io(e, "set_nodelay"))?;
+                return Ok(s);
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::ConnectionRefused
+                        | io::ErrorKind::ConnectionReset
+                        | io::ErrorKind::AddrNotAvailable
+                ) =>
+            {
+                if Instant::now() >= deadline {
+                    return Err(TransportError::ConnRefused { addr: addr.to_string() });
+                }
+                std::thread::sleep(Duration::from_millis(sleep_ms));
+                sleep_ms = (sleep_ms * 2).min(CONNECT_BACKOFF_CAP_MS);
+            }
+            Err(e) => return Err(map_io(e, "connecting")),
+        }
+    }
+}
+
+#[derive(Debug)]
+struct RankLink {
+    child: Child,
+    conn: TcpStream,
+}
+
+/// Localhost-TCP transport: the coordinator spawns `e` rank processes,
+/// wires them into the fixed binomial tree, and runs every all-reduce
+/// as Work frames out / one Sum frame back.  Spawning is lazy (first
+/// collective) so constructing a trainer never forks.
+#[derive(Debug)]
+pub struct LocalTcp {
+    timeout: Duration,
+    rank_exe: Option<PathBuf>,
+    /// Test hook: `(rank, nth)` — that rank parks forever at its nth
+    /// Work frame (the self-stall equivalent of SIGSTOP), so the
+    /// coordinator's bounded read surfaces a typed `Timeout`.
+    stall: Option<(usize, u32)>,
+    links: Vec<RankLink>,
+    seq: u32,
+}
+
+impl LocalTcp {
+    pub fn new(timeout_ms: u64, rank_exe: Option<PathBuf>) -> LocalTcp {
+        LocalTcp {
+            timeout: Duration::from_millis(timeout_ms.max(1)),
+            rank_exe,
+            stall: None,
+            links: Vec::new(),
+            seq: 0,
+        }
+    }
+
+    /// Install the stall fault (must be set before the group spawns).
+    pub fn set_stall(&mut self, rank: usize, nth_work_frame: u32) {
+        self.stall = Some((rank, nth_work_frame));
+    }
+
+    /// Lowest-numbered dead rank, preferring signal-killed processes
+    /// (the actual SIGKILL victim) over ranks that exited after the
+    /// resulting cascade.
+    fn first_dead(&mut self) -> Option<usize> {
+        let mut first_exited = None;
+        for (r, link) in self.links.iter_mut().enumerate() {
+            if let Ok(Some(status)) = link.child.try_wait() {
+                #[cfg(unix)]
+                {
+                    use std::os::unix::process::ExitStatusExt;
+                    if status.signal().is_some() {
+                        return Some(r);
+                    }
+                }
+                let _ = status;
+                if first_exited.is_none() {
+                    first_exited = Some(r);
+                }
+            }
+        }
+        first_exited
+    }
+
+    /// Upgrade a raw transport error using child liveness: if any rank
+    /// process is gone, the *real* failure is a dead peer, whatever the
+    /// socket reported.  The group is torn down either way — after any
+    /// error there may be frames in flight, so the next use respawns.
+    fn classify(&mut self, err: TransportError, phase: &str) -> TransportError {
+        let out = match err {
+            TransportError::BadFrame { .. } | TransportError::PeerDied { .. } => err,
+            TransportError::Timeout { .. } => match self.first_dead() {
+                Some(rank) => TransportError::PeerDied { rank },
+                None => TransportError::Timeout { waiting_for: format!("{phase} all-reduce") },
+            },
+            other => match self.first_dead() {
+                Some(rank) => TransportError::PeerDied { rank },
+                None => other,
+            },
+        };
+        self.teardown();
+        out
+    }
+
+    /// Shut the group down: best-effort Shutdown frames, then SIGKILL +
+    /// reap (no zombies, deterministic teardown).
+    fn teardown(&mut self) {
+        for link in &mut self.links {
+            let _ = write_frame(&mut link.conn, FrameKind::Shutdown, 0, 0, &[]);
+        }
+        for link in &mut self.links {
+            let _ = link.child.kill();
+            let _ = link.child.wait();
+        }
+        self.links.clear();
+    }
+
+    /// Spawn `e` rank processes and run the handshake: accept `e`
+    /// Hellos, push the Topology (parent ports), wait for `e` Readys.
+    fn spawn_group(&mut self, e: usize) -> Result<(), TransportError> {
+        let exe = resolve_rank_exe(self.rank_exe.as_deref())?;
+        let listener = TcpListener::bind("127.0.0.1:0").map_err(|e| map_io(e, "binding"))?;
+        let port = listener.local_addr().map_err(|e| map_io(e, "local_addr"))?.port();
+        listener.set_nonblocking(true).map_err(|e| map_io(e, "set_nonblocking"))?;
+
+        let mut children: Vec<Child> = Vec::with_capacity(e);
+        for i in 0..e {
+            let mut cmd = Command::new(&exe);
+            cmd.arg("rank")
+                .arg("--rank")
+                .arg(i.to_string())
+                .arg("--e")
+                .arg(e.to_string())
+                .arg("--connect")
+                .arg(format!("127.0.0.1:{port}"))
+                .arg("--timeout-ms")
+                .arg(RANK_IDLE_TIMEOUT_MS.to_string())
+                .stdin(Stdio::null())
+                .stdout(Stdio::null())
+                .stderr(Stdio::null());
+            if let Some((r, n)) = self.stall {
+                if r == i {
+                    cmd.env("FLEXTP_STALL", n.to_string());
+                }
+            }
+            match cmd.spawn() {
+                Ok(c) => children.push(c),
+                Err(err) => {
+                    for mut c in children {
+                        let _ = c.kill();
+                        let _ = c.wait();
+                    }
+                    return Err(TransportError::Io {
+                        context: format!("spawning rank {i} ({})", exe.display()),
+                        kind: err.kind(),
+                    });
+                }
+            }
+        }
+        self.links = match Self::handshake(listener, children, e) {
+            Ok(links) => links,
+            Err(e) => return Err(e),
+        };
+        for link in &mut self.links {
+            link.conn
+                .set_read_timeout(Some(self.timeout))
+                .map_err(|e| map_io(e, "set_read_timeout"))?;
+            link.conn
+                .set_write_timeout(Some(self.timeout))
+                .map_err(|e| map_io(e, "set_write_timeout"))?;
+        }
+        self.seq = 0;
+        Ok(())
+    }
+
+    fn handshake(
+        listener: TcpListener,
+        mut children: Vec<Child>,
+        e: usize,
+    ) -> Result<Vec<RankLink>, TransportError> {
+        let kill_all = |children: &mut Vec<Child>| {
+            for c in children.iter_mut() {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+        };
+        let probe_dead = |children: &mut Vec<Child>| -> Option<usize> {
+            children
+                .iter_mut()
+                .position(|c| matches!(c.try_wait(), Ok(Some(_))))
+        };
+        let deadline = Instant::now() + Duration::from_millis(HANDSHAKE_TIMEOUT_MS);
+        let mut conns: Vec<Option<(TcpStream, u16)>> = (0..e).map(|_| None).collect();
+        let mut got = 0usize;
+        while got < e {
+            if Instant::now() >= deadline {
+                let dead = probe_dead(&mut children);
+                kill_all(&mut children);
+                return Err(match dead {
+                    Some(rank) => TransportError::PeerDied { rank },
+                    None => TransportError::Timeout {
+                        waiting_for: format!("hello from {} of {e} rank processes", e - got),
+                    },
+                });
+            }
+            match listener.accept() {
+                Ok((mut s, _)) => {
+                    let setup = (|| -> Result<(usize, TcpStream, u16), TransportError> {
+                        s.set_nodelay(true).map_err(|err| map_io(err, "set_nodelay"))?;
+                        s.set_read_timeout(Some(Duration::from_millis(HANDSHAKE_TIMEOUT_MS)))
+                            .map_err(|err| map_io(err, "set_read_timeout"))?;
+                        let f = expect_frame(&mut s, FrameKind::Hello, None)?;
+                        let rank = f.rank as usize;
+                        if rank >= e || f.payload.len() != 2 {
+                            return Err(TransportError::BadFrame {
+                                reason: format!("hello from invalid rank {rank} (e={e})"),
+                            });
+                        }
+                        let lp = u16::from_le_bytes([f.payload[0], f.payload[1]]);
+                        Ok((rank, s, lp))
+                    })();
+                    match setup {
+                        Ok((rank, s, lp)) if conns[rank].is_none() => {
+                            conns[rank] = Some((s, lp));
+                            got += 1;
+                        }
+                        Ok((rank, ..)) => {
+                            kill_all(&mut children);
+                            return Err(TransportError::BadFrame {
+                                reason: format!("duplicate hello from rank {rank}"),
+                            });
+                        }
+                        Err(err) => {
+                            let dead = probe_dead(&mut children);
+                            kill_all(&mut children);
+                            return Err(match dead {
+                                Some(rank) => TransportError::PeerDied { rank },
+                                None => err,
+                            });
+                        }
+                    }
+                }
+                Err(err) if err.kind() == io::ErrorKind::WouldBlock => {
+                    if let Some(rank) = probe_dead(&mut children) {
+                        kill_all(&mut children);
+                        return Err(TransportError::PeerDied { rank });
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(err) => {
+                    kill_all(&mut children);
+                    return Err(map_io(err, "accepting rank connection"));
+                }
+            }
+        }
+        // every rank is connected: push the topology, collect the readys
+        let ports: Vec<u16> = conns.iter().map(|c| c.as_ref().unwrap().1).collect();
+        let mut links: Vec<RankLink> = children
+            .into_iter()
+            .zip(conns.into_iter().map(Option::unwrap))
+            .map(|(child, (conn, _))| RankLink { child, conn })
+            .collect();
+        let fail = |links: &mut Vec<RankLink>, err: TransportError| -> TransportError {
+            let dead = links
+                .iter_mut()
+                .position(|l| matches!(l.child.try_wait(), Ok(Some(_))));
+            for l in links.iter_mut() {
+                let _ = l.child.kill();
+                let _ = l.child.wait();
+            }
+            links.clear();
+            match dead {
+                Some(rank) => TransportError::PeerDied { rank },
+                None => err,
+            }
+        };
+        for j in 0..e {
+            let parent_port = if j == 0 { 0 } else { ports[parent_of(j)] };
+            let mut payload = Vec::with_capacity(4);
+            payload.extend_from_slice(&(e as u16).to_le_bytes());
+            payload.extend_from_slice(&parent_port.to_le_bytes());
+            if let Err(err) =
+                write_frame(&mut links[j].conn, FrameKind::Topology, j as u16, 0, &payload)
+            {
+                return Err(fail(&mut links, err));
+            }
+        }
+        for j in 0..e {
+            if let Err(err) = expect_frame(&mut links[j].conn, FrameKind::Ready, None) {
+                return Err(fail(&mut links, err));
+            }
+        }
+        Ok(links)
+    }
+}
+
+impl Transport for LocalTcp {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn ensure_group(&mut self, e: usize) -> Result<(), TransportError> {
+        if self.links.len() == e {
+            // never silently respawn over a corpse: a dead rank in a
+            // right-sized group must surface as the typed PeerDied the
+            // recovery path keys on
+            if let Some(rank) = self.first_dead() {
+                self.teardown();
+                return Err(TransportError::PeerDied { rank });
+            }
+            return Ok(());
+        }
+        self.teardown();
+        self.spawn_group(e)
+    }
+
+    fn all_reduce(&mut self, phase: &str, bufs: &mut [Tensor]) -> Result<(), TransportError> {
+        self.all_reduce_batch(phase, &mut [bufs])
+    }
+
+    /// Submit Work frames for *every* group to *every* rank, then
+    /// collect the Sums in group order: the wire work of later groups
+    /// overlaps the tree reduction of earlier ones.  Deadlock-free by
+    /// topology: the tree has no cycles, ranks consume Work/Partial
+    /// frames in a fixed order with blocking reads, and the coordinator
+    /// finishes all writes before its first Sum read — a Sum can only
+    /// be produced after the inputs it depends on were written.
+    fn all_reduce_batch(
+        &mut self,
+        phase: &str,
+        groups: &mut [&mut [Tensor]],
+    ) -> Result<(), TransportError> {
+        if groups.is_empty() {
+            return Ok(());
+        }
+        let e = groups[0].len();
+        self.ensure_group(e)?;
+        let seq0 = self.seq;
+        self.seq = self.seq.wrapping_add(groups.len() as u32);
+        for (gi, g) in groups.iter().enumerate() {
+            debug_assert_eq!(g.len(), e, "ragged all-reduce batch");
+            let seq = seq0.wrapping_add(gi as u32);
+            for r in 0..e {
+                let payload = f32s_to_bytes(&g[r].data);
+                if let Err(err) =
+                    write_frame(&mut self.links[r].conn, FrameKind::Work, r as u16, seq, &payload)
+                {
+                    return Err(self.classify(err, phase));
+                }
+            }
+        }
+        for (gi, g) in groups.iter_mut().enumerate() {
+            let seq = seq0.wrapping_add(gi as u32);
+            let f = match expect_frame(&mut self.links[0].conn, FrameKind::Sum, Some(seq)) {
+                Ok(f) => f,
+                Err(err) => return Err(self.classify(err, phase)),
+            };
+            let want = g[0].data.len() * 4;
+            if f.payload.len() != want {
+                let reason = format!(
+                    "sum length mismatch in {phase}: got {} bytes, want {want}",
+                    f.payload.len()
+                );
+                return Err(self.classify(TransportError::BadFrame { reason }, phase));
+            }
+            let sum = bytes_to_f32s(&f.payload);
+            for b in g.iter_mut() {
+                b.data.copy_from_slice(&sum);
+            }
+        }
+        Ok(())
+    }
+
+    fn kill_rank(&mut self, rank: usize) -> bool {
+        match self.links.get_mut(rank) {
+            Some(link) => link.child.kill().is_ok(),
+            None => false,
+        }
+    }
+
+    fn rank_pid(&self, rank: usize) -> Option<u32> {
+        self.links.get(rank).map(|l| l.child.id())
+    }
+}
+
+impl Drop for LocalTcp {
+    fn drop(&mut self) {
+        self.teardown();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rank-side protocol loop (the `flextp rank` subcommand)
+// ---------------------------------------------------------------------
+
+/// Serve one rank process until Shutdown (clean exit) or a transport
+/// error (the caller exits nonzero, and the coordinator's liveness
+/// probe converts the cascade into `PeerDied`).
+///
+/// Protocol: connect to the coordinator (backoff), bind a child-facing
+/// listener when this rank has tree children, Hello, read Topology,
+/// connect to the parent (rank > 0), accept the children, Ready; then
+/// loop — read Work, fold in each child's Partial in increasing-stride
+/// order, forward Partial to the parent (or Sum to the coordinator for
+/// rank 0).
+pub fn rank_serve(rank: usize, e: usize, connect: &str, timeout_ms: u64) -> Result<(), TransportError> {
+    if rank >= e || e == 0 {
+        return Err(TransportError::BadFrame { reason: format!("rank {rank} outside group of {e}") });
+    }
+    let stall: Option<u32> = std::env::var("FLEXTP_STALL").ok().and_then(|s| s.parse().ok());
+    let idle = Duration::from_millis(timeout_ms.max(1));
+    let children = children_of(rank, e);
+
+    let mut coord = connect_with_backoff(connect, CONNECT_DEADLINE_MS)?;
+    coord.set_read_timeout(Some(idle)).map_err(|err| map_io(err, "set_read_timeout"))?;
+
+    // child-facing listener (only when the tree gives this rank children)
+    let listener = if children.is_empty() {
+        None
+    } else {
+        let l = TcpListener::bind("127.0.0.1:0").map_err(|err| map_io(err, "binding"))?;
+        Some(l)
+    };
+    let listen_port = match &listener {
+        Some(l) => l.local_addr().map_err(|err| map_io(err, "local_addr"))?.port(),
+        None => 0,
+    };
+    write_frame(&mut coord, FrameKind::Hello, rank as u16, 0, &listen_port.to_le_bytes())?;
+
+    let topo = expect_frame(&mut coord, FrameKind::Topology, None)?;
+    if topo.payload.len() != 4 {
+        return Err(TransportError::BadFrame { reason: "malformed topology".to_string() });
+    }
+    let wire_e = u16::from_le_bytes([topo.payload[0], topo.payload[1]]) as usize;
+    let parent_port = u16::from_le_bytes([topo.payload[2], topo.payload[3]]);
+    if wire_e != e {
+        return Err(TransportError::BadFrame {
+            reason: format!("topology says e={wire_e}, spawned with e={e}"),
+        });
+    }
+
+    // upstream link: parent rank (via its listener) or the coordinator
+    let mut parent = if rank > 0 {
+        let mut p = connect_with_backoff(&format!("127.0.0.1:{parent_port}"), CONNECT_DEADLINE_MS)?;
+        p.set_read_timeout(Some(idle)).map_err(|err| map_io(err, "set_read_timeout"))?;
+        write_frame(&mut p, FrameKind::Hello, rank as u16, 0, &0u16.to_le_bytes())?;
+        Some(p)
+    } else {
+        None
+    };
+
+    // downstream links, identified by the Hello each child sends
+    let mut child_conns: Vec<Option<TcpStream>> = (0..children.len()).map(|_| None).collect();
+    if let Some(listener) = &listener {
+        let mut got = 0;
+        while got < children.len() {
+            let (mut s, _) = listener.accept().map_err(|err| map_io(err, "accepting child"))?;
+            s.set_nodelay(true).map_err(|err| map_io(err, "set_nodelay"))?;
+            s.set_read_timeout(Some(idle)).map_err(|err| map_io(err, "set_read_timeout"))?;
+            let hello = expect_frame(&mut s, FrameKind::Hello, None)?;
+            let who = hello.rank as usize;
+            let slot = children.iter().position(|&c| c == who).ok_or_else(|| {
+                TransportError::BadFrame {
+                    reason: format!("rank {who} is not a tree child of rank {rank}"),
+                }
+            })?;
+            if child_conns[slot].is_some() {
+                return Err(TransportError::BadFrame {
+                    reason: format!("duplicate child connection from rank {who}"),
+                });
+            }
+            child_conns[slot] = Some(s);
+            got += 1;
+        }
+    }
+    let mut child_conns: Vec<TcpStream> = child_conns.into_iter().map(Option::unwrap).collect();
+
+    write_frame(&mut coord, FrameKind::Ready, rank as u16, 0, &[])?;
+
+    // steady state
+    let mut works_seen: u32 = 0;
+    loop {
+        let frame = read_frame(&mut coord)?;
+        match frame.kind {
+            FrameKind::Shutdown => return Ok(()),
+            FrameKind::Work => {}
+            other => {
+                return Err(TransportError::BadFrame {
+                    reason: format!("rank {rank} expected Work/Shutdown, got {other:?}"),
+                })
+            }
+        }
+        works_seen += 1;
+        if let Some(n) = stall {
+            if works_seen >= n {
+                // SIGSTOP equivalent: stop responding forever; the
+                // coordinator's bounded read reports the typed Timeout
+                loop {
+                    std::thread::sleep(Duration::from_secs(3600));
+                }
+            }
+        }
+        let seq = frame.seq;
+        let mut acc = bytes_to_f32s(&frame.payload);
+        for conn in child_conns.iter_mut() {
+            let part = expect_frame(conn, FrameKind::Partial, Some(seq))?;
+            if part.payload.len() != frame.payload.len() {
+                return Err(TransportError::BadFrame {
+                    reason: format!(
+                        "partial length mismatch at rank {rank}: got {}, want {}",
+                        part.payload.len(),
+                        frame.payload.len()
+                    ),
+                });
+            }
+            for (a, b) in acc.iter_mut().zip(bytes_to_f32s(&part.payload)) {
+                *a += b;
+            }
+        }
+        let out = f32s_to_bytes(&acc);
+        match &mut parent {
+            Some(p) => write_frame(p, FrameKind::Partial, rank as u16, seq, &out)?,
+            None => write_frame(&mut coord, FrameKind::Sum, rank as u16, seq, &out)?,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tests: codec round-trips, seeded frame fuzz, tree equivalence
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::io::Cursor;
+
+    const CASES: usize = 40;
+
+    fn rand_payload(rng: &mut Rng, max: usize) -> Vec<u8> {
+        let n = rng.below(max + 1);
+        (0..n).map(|_| rng.below(256) as u8).collect()
+    }
+
+    #[test]
+    fn roundtrip_all_frame_kinds() {
+        for seed in 0..CASES as u64 {
+            let mut rng = Rng::new(seed ^ 0x7a11);
+            for kind in FrameKind::all() {
+                let rank = rng.below(1 << 16) as u16;
+                let seq = rng.below(1 << 30) as u32;
+                let payload = rand_payload(&mut rng, 512);
+                let bytes = encode_frame(kind, rank, seq, &payload);
+                let got = read_frame(&mut Cursor::new(&bytes)).expect("round-trip");
+                assert_eq!(got, Frame { kind, rank, seq, payload });
+            }
+        }
+    }
+
+    #[test]
+    fn f32_payloads_roundtrip_bitwise() {
+        for seed in 0..CASES as u64 {
+            let mut rng = Rng::new(seed ^ 0xf32);
+            let n = 1 + rng.below(300);
+            let mut vals: Vec<f32> = (0..n).map(|_| rng.normal() * 1e3).collect();
+            // exotic bit patterns must survive too
+            vals[0] = -0.0;
+            if n > 1 {
+                vals[1] = f32::MIN_POSITIVE / 2.0; // subnormal
+            }
+            let back = bytes_to_f32s(&f32s_to_bytes(&vals));
+            let a: Vec<u32> = vals.iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = back.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "f32 wire round-trip must be bit-exact");
+        }
+    }
+
+    #[test]
+    fn fuzz_truncated_frames_are_typed() {
+        for seed in 0..CASES as u64 {
+            let mut rng = Rng::new(seed ^ 0x77);
+            let payload = rand_payload(&mut rng, 256);
+            let bytes = encode_frame(FrameKind::Work, 3, 9, &payload);
+            let cut = rng.below(bytes.len()); // strictly shorter
+            let err = read_frame(&mut Cursor::new(&bytes[..cut])).unwrap_err();
+            assert!(
+                matches!(err, TransportError::Truncated { .. }),
+                "cut at {cut}/{} gave {err:?}",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn fuzz_bitflips_are_typed() {
+        // a flipped bit anywhere decodes to a typed error, never Ok with
+        // silently corrupt content (checksum covers header + payload)
+        for seed in 0..CASES as u64 {
+            let mut rng = Rng::new(seed ^ 0xb17);
+            let payload = rand_payload(&mut rng, 256);
+            let clean = encode_frame(FrameKind::Partial, 1, 7, &payload);
+            let mut bytes = clean.clone();
+            let pos = rng.below(bytes.len());
+            let bit = 1u8 << rng.below(8);
+            bytes[pos] ^= bit;
+            match read_frame(&mut Cursor::new(&bytes)) {
+                Err(
+                    TransportError::BadFrame { .. }
+                    | TransportError::Truncated { .. }
+                    | TransportError::Timeout { .. },
+                ) => {}
+                Err(other) => panic!("flip at byte {pos} gave untyped-ish {other:?}"),
+                Ok(f) => {
+                    // the only acceptable Ok is the length field shrinking
+                    // onto a frame whose checksum still validates — FNV
+                    // makes that effectively impossible; fail loudly
+                    panic!("flip at byte {pos} decoded Ok: {f:?}")
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fuzz_oversized_frames_are_typed() {
+        for seed in 0..CASES as u64 {
+            let mut rng = Rng::new(seed ^ 0x0ababa);
+            let mut bytes = encode_frame(FrameKind::Work, 0, 0, &[1, 2, 3]);
+            let huge = (MAX_FRAME as u32) + 1 + rng.below(1 << 20) as u32;
+            bytes[11..15].copy_from_slice(&huge.to_le_bytes());
+            let err = read_frame(&mut Cursor::new(&bytes)).unwrap_err();
+            assert!(
+                matches!(err, TransportError::BadFrame { ref reason } if reason.contains("oversized")),
+                "got {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn fuzz_reordered_frames_are_typed() {
+        for seed in 0..CASES as u64 {
+            let mut rng = Rng::new(seed ^ 0x5e9);
+            // a valid frame of the wrong kind, or the right kind with the
+            // wrong sequence number, must be rejected as BadFrame
+            let kinds = FrameKind::all();
+            let kind = kinds[rng.below(kinds.len())];
+            let seq = rng.below(100) as u32;
+            let bytes = encode_frame(kind, 2, seq, &[0xAB; 8]);
+            let want_kind = FrameKind::Sum;
+            let want_seq = seq + 1;
+            let err = expect_frame(&mut Cursor::new(&bytes), want_kind, Some(want_seq)).unwrap_err();
+            assert!(matches!(err, TransportError::BadFrame { .. }), "got {err:?}");
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_unknown_kind_are_typed() {
+        let mut bytes = encode_frame(FrameKind::Ready, 0, 0, &[]);
+        bytes[0] = b'N';
+        assert!(matches!(
+            read_frame(&mut Cursor::new(&bytes)).unwrap_err(),
+            TransportError::BadFrame { .. }
+        ));
+        // unknown kind with a *recomputed valid checksum* still rejects
+        let payload: &[u8] = &[9, 9];
+        let mut header = [0u8; 11];
+        header[0] = 250; // no such kind
+        header[7..11].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+        let sum = fnv1a64(&[&header, payload]);
+        let mut raw = Vec::new();
+        raw.extend_from_slice(&MAGIC);
+        raw.extend_from_slice(&header);
+        raw.extend_from_slice(payload);
+        raw.extend_from_slice(&sum.to_le_bytes());
+        assert!(matches!(
+            read_frame(&mut Cursor::new(&raw)).unwrap_err(),
+            TransportError::BadFrame { ref reason } if reason.contains("unknown frame kind")
+        ));
+    }
+
+    #[test]
+    fn tree_shape_is_consistent() {
+        // children/parent must describe the same tree, rooted at 0
+        for e in 1..=17 {
+            for j in 1..e {
+                let p = parent_of(j);
+                assert!(p < j, "parent must be lower-numbered");
+                assert!(
+                    children_of(p, e).contains(&j),
+                    "rank {j} missing from children of {p} (e={e})"
+                );
+            }
+            let mut seen = vec![false; e];
+            seen[0] = true;
+            let mut frontier = vec![0usize];
+            while let Some(r) = frontier.pop() {
+                for c in children_of(r, e) {
+                    assert!(!seen[c], "rank {c} reached twice (e={e})");
+                    seen[c] = true;
+                    frontier.push(c);
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "tree must span all ranks (e={e})");
+        }
+    }
+
+    /// The bitwise-parity keystone: simulating the binomial tree (each
+    /// rank folds child partials in increasing-stride order, parents
+    /// fold in post-order) reproduces the stride-loop sums **bit for
+    /// bit** for every group size — the exact computation `LocalTcp`
+    /// distributes across processes.
+    #[test]
+    fn binomial_matches_stride_loop() {
+        fn binomial_sum(rank: usize, e: usize, inputs: &[Vec<f32>]) -> Vec<f32> {
+            let mut acc = inputs[rank].clone();
+            for c in children_of(rank, e) {
+                let part = binomial_sum(c, e, inputs);
+                for (a, b) in acc.iter_mut().zip(part) {
+                    *a += b;
+                }
+            }
+            acc
+        }
+        for seed in 0..CASES as u64 {
+            let mut rng = Rng::new(seed ^ 0xb1_70);
+            for e in 1..=9 {
+                let n = 1 + rng.below(64);
+                let inputs: Vec<Vec<f32>> =
+                    (0..e).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+                let mut bufs: Vec<Tensor> =
+                    inputs.iter().map(|v| Tensor::from_vec(&[n], v.clone())).collect();
+                tree_reduce_inplace(&mut bufs);
+                let wire = binomial_sum(0, e, &inputs);
+                let a: Vec<u32> = bufs[0].data.iter().map(|v| v.to_bits()).collect();
+                let b: Vec<u32> = wire.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(a, b, "binomial ≠ stride loop at e={e}, n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn inproc_transport_is_the_stride_loop() {
+        let mut t = InProc;
+        let mut bufs = vec![
+            Tensor::from_vec(&[2], vec![1.0, 2.0]),
+            Tensor::from_vec(&[2], vec![10.0, 20.0]),
+            Tensor::from_vec(&[2], vec![100.0, 200.0]),
+        ];
+        t.all_reduce("test", &mut bufs).unwrap();
+        for b in &bufs {
+            assert_eq!(b.data, vec![111.0, 222.0]);
+        }
+    }
+
+    #[test]
+    fn batch_default_equals_sequential() {
+        let mk = || {
+            vec![
+                Tensor::from_vec(&[2], vec![0.1, 0.2]),
+                Tensor::from_vec(&[2], vec![0.3, 0.4]),
+            ]
+        };
+        let mut a1 = mk();
+        let mut a2 = mk();
+        let mut b1 = mk();
+        let mut b2 = mk();
+        let mut t = InProc;
+        t.all_reduce_batch("test", &mut [&mut a1[..], &mut a2[..]]).unwrap();
+        t.all_reduce("test", &mut b1).unwrap();
+        t.all_reduce("test", &mut b2).unwrap();
+        assert_eq!(a1[0].data, b1[0].data);
+        assert_eq!(a2[0].data, b2[0].data);
+    }
+
+    #[test]
+    fn errors_display_and_are_std_errors() {
+        let errs: Vec<TransportError> = vec![
+            TransportError::ConnRefused { addr: "127.0.0.1:1".into() },
+            TransportError::Truncated { got: 3, want: 15 },
+            TransportError::BadFrame { reason: "x".into() },
+            TransportError::PeerDied { rank: 2 },
+            TransportError::Timeout { waiting_for: "sum".into() },
+            TransportError::Io { context: "y".into(), kind: io::ErrorKind::BrokenPipe },
+        ];
+        for e in errs {
+            let boxed: Box<dyn std::error::Error> = Box::new(e.clone());
+            assert!(!boxed.to_string().is_empty());
+        }
+    }
+}

@@ -242,6 +242,38 @@ impl TimeModel {
     }
 }
 
+/// Which all-reduce data plane carries the collectives (`--transport`).
+/// Accounting (clocks, costs, `CommStats`) is transport-independent, so
+/// the two modes are bitwise-interchangeable on every simulated metric
+/// (DESIGN.md §15, `tests/transport_parity.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Ranks are buffer slots in the coordinator process (the historic
+    /// engine; zero syscalls, default).
+    InProc,
+    /// Ranks are OS processes (`flextp rank …`) over localhost TCP with
+    /// framed, checksummed messages — real process kills exercise the
+    /// churn/recovery machinery.
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        Ok(match s {
+            "inproc" => TransportKind::InProc,
+            "tcp" => TransportKind::Tcp,
+            _ => bail!("unknown transport '{s}' (inproc|tcp)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::InProc => "inproc",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
 /// Simulated interconnect (α-β model). Defaults approximate PCIe 3.0 x16
 /// (the paper's testbed): ~10 µs latency, ~12 GB/s effective.
 #[derive(Debug, Clone, Copy)]
@@ -305,6 +337,18 @@ pub struct TrainCfg {
     /// count).  Part of the math fingerprint — a resumed run must keep
     /// the setting of the run that wrote the snapshot.
     pub churn: bool,
+    /// all-reduce data plane (`--transport inproc|tcp`).  Excluded from
+    /// the checkpoint math fingerprint: transports are bitwise-equal on
+    /// simulated metrics, so a tcp run may resume an inproc snapshot.
+    pub transport: TransportKind,
+    /// coordinator-side per-read deadline in ms (`--transport-timeout-ms`)
+    /// before a stalled rank surfaces as a typed `Timeout`
+    pub transport_timeout_ms: u64,
+    /// binary to re-exec as `flextp rank` (`--rank-exe`); None resolves
+    /// `FLEXTP_RANK_EXE`, then the current executable.  Integration
+    /// tests must point this at the real CLI binary — the *test* binary
+    /// has no `rank` subcommand.
+    pub rank_exe: Option<PathBuf>,
 }
 
 impl Default for TrainCfg {
@@ -326,6 +370,9 @@ impl Default for TrainCfg {
             resume: None,
             stop_after: None,
             churn: true,
+            transport: TransportKind::InProc,
+            transport_timeout_ms: crate::collectives::transport::DEFAULT_COORD_TIMEOUT_MS,
+            rank_exe: None,
         }
     }
 }
@@ -471,6 +518,11 @@ pub fn apply_overrides(cfg: &mut RunCfg, kv: &BTreeMap<String, String>) -> Resul
             "resume" => cfg.train.resume = Some(PathBuf::from(v)),
             "stop-after" => cfg.train.stop_after = Some(v.parse().context("stop-after")?),
             "churn" => cfg.train.churn = v.parse().context("churn (true|false)")?,
+            "transport" => cfg.train.transport = TransportKind::parse(v)?,
+            "transport-timeout-ms" => {
+                cfg.train.transport_timeout_ms = v.parse().context("transport-timeout-ms")?
+            }
+            "rank-exe" => cfg.train.rank_exe = Some(PathBuf::from(v)),
             "replan" => cfg.balancer.replan = ReplanMode::parse(v)?,
             "time-model" => cfg.train.time_model = TimeModel::parse(v)?,
             "timeline" => cfg.train.timeline = true,
@@ -519,6 +571,29 @@ mod tests {
         let (_, kv) = parse_kv_args(&["--backend".to_string(), "pjrt".to_string()]).unwrap();
         apply_overrides(&mut cfg, &kv).unwrap();
         assert_eq!(cfg.backend, BackendKind::Pjrt);
+    }
+
+    #[test]
+    fn transport_roundtrip_and_overrides() {
+        assert_eq!(TransportKind::parse("inproc").unwrap(), TransportKind::InProc);
+        assert_eq!(TransportKind::parse("tcp").unwrap(), TransportKind::Tcp);
+        assert!(TransportKind::parse("rdma").is_err());
+        assert_eq!(TransportKind::Tcp.name(), "tcp");
+        let mut cfg = RunCfg::new("vit-tiny");
+        assert_eq!(cfg.train.transport, TransportKind::InProc);
+        let (_, kv) = parse_kv_args(&[
+            "--transport".to_string(),
+            "tcp".to_string(),
+            "--transport-timeout-ms".to_string(),
+            "250".to_string(),
+            "--rank-exe".to_string(),
+            "/tmp/flextp".to_string(),
+        ])
+        .unwrap();
+        apply_overrides(&mut cfg, &kv).unwrap();
+        assert_eq!(cfg.train.transport, TransportKind::Tcp);
+        assert_eq!(cfg.train.transport_timeout_ms, 250);
+        assert_eq!(cfg.train.rank_exe.as_deref(), Some(std::path::Path::new("/tmp/flextp")));
     }
 
     #[test]

@@ -138,7 +138,10 @@ pub enum ScenarioError {
     Malformed { item: String, reason: String },
     /// A χ event targets a rank outside a *static* worker group.
     RankOutOfRange { rank: usize, e: usize },
-    /// Worker churn left no live workers to re-shard onto.
+    /// Worker churn left no live workers to re-shard onto.  Raised both
+    /// by scripted `fail:` events and by *real* rank-process death under
+    /// `--transport tcp` (a `TransportError::PeerDied` flows into the
+    /// same recovery path — tests/transport_faults.rs).
     NoViableWorkerCount { avail: usize, hs: usize, heads: usize },
 }
 

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   train               run a training job (strategy, stragglers, model …)
+//!   rank                one TP rank process (re-exec'd by `train --transport tcp`)
 //!   sweep               run a scenario × strategy matrix (BENCH_scenarios.json)
 //!   inspect-artifacts   list a model's executables and shapes
 //!   bench-comm          compare migration primitives at given sizes
@@ -28,6 +29,7 @@ fn main() -> Result<()> {
     let cmd = pos.first().map(String::as_str).unwrap_or("help");
     match cmd {
         "train" => cmd_train(&kv),
+        "rank" => cmd_rank(&kv),
         "sweep" => cmd_sweep(&kv),
         "inspect-artifacts" => cmd_inspect(&kv),
         "bench-comm" => cmd_bench_comm(&kv),
@@ -48,6 +50,8 @@ fn print_help() {
          \n\
          COMMANDS\n\
            train                train a model under a balancing strategy\n\
+           rank                 one TP rank process (spawned internally by\n\
+                                'train --transport tcp'; not for direct use)\n\
            sweep                scenario × strategy matrix → BENCH_scenarios.json\n\
            inspect-artifacts    list executables in a model's artifact set\n\
            bench-comm           compare broadcast-reduce vs scatter-gather\n\
@@ -93,6 +97,20 @@ fn print_help() {
                                 N; env default: FLEXTP_THREADS)\n\
            --epochs/--iters/--lr/--momentum/--seed ...\n\
          \n\
+         TRANSPORT (DESIGN.md §15)\n\
+           --transport T        inproc (default: ranks are in-process\n\
+                                buffer slots) | tcp (ranks are OS\n\
+                                processes over localhost TCP; bitwise\n\
+                                identical simulated metrics — only wall\n\
+                                time differs)\n\
+           --transport-timeout-ms N\n\
+                                coordinator read deadline before a\n\
+                                stalled rank surfaces as a typed Timeout\n\
+                                (default 10000)\n\
+           --rank-exe PATH      binary to re-exec as 'flextp rank'\n\
+                                (default: FLEXTP_RANK_EXE, then this\n\
+                                binary itself)\n\
+         \n\
          CHECKPOINT / ELASTIC RESUME (DESIGN.md §13)\n\
            --ckpt-dir DIR       write atomic .flexckpt snapshots here\n\
            --ckpt-every N       snapshot every N iterations (0 = off)\n\
@@ -113,11 +131,40 @@ fn print_help() {
                                 fail/join)\n\
            --scenarios S        \"label=dsl;label2=dsl\" matrix rows\n\
            --strategies S       \"semi@online,semi@epoch,baseline\" columns;\n\
-                                an optional third segment pins elasticity:\n\
-                                semi@online@fixed-e2 ignores churn events\n\
-                                and forces --e 2, ...@live re-shards (default)\n\
+                                further @-segments compose in any order:\n\
+                                elasticity (semi@online@fixed-e2 ignores\n\
+                                churn events and forces --e 2, ...@live\n\
+                                re-shards — the default) and transport\n\
+                                (...@tcp runs the cell over rank processes)\n\
+           --rank-exe PATH      binary for @tcp cells' rank processes\n\
            --out FILE           output path (default BENCH_scenarios.json)\n"
     );
+}
+
+/// The rank-process entrypoint (`--transport tcp` re-execs this binary
+/// as `flextp rank --rank i --e E --connect HOST:PORT --timeout-ms T`).
+/// Never prints to stdout (output belongs to the coordinator); any
+/// transport error exits nonzero so the coordinator's liveness probe
+/// reports a typed `PeerDied`.
+fn cmd_rank(kv: &std::collections::BTreeMap<String, String>) -> Result<()> {
+    let get = |k: &str| -> Result<&String> {
+        kv.get(k).ok_or_else(|| anyhow::anyhow!("flextp rank: missing --{k}"))
+    };
+    let rank: usize = get("rank")?.parse().context("rank")?;
+    let e: usize = get("e")?.parse().context("e")?;
+    let connect = get("connect")?;
+    let timeout_ms: u64 = kv
+        .get("timeout-ms")
+        .map(|v| v.parse().context("timeout-ms"))
+        .transpose()?
+        .unwrap_or(flextp::collectives::transport::RANK_IDLE_TIMEOUT_MS);
+    match flextp::collectives::transport::rank_serve(rank, e, connect, timeout_ms) {
+        Ok(()) => Ok(()),
+        Err(err) => {
+            eprintln!("flextp rank {rank}/{e}: {err}");
+            std::process::exit(1);
+        }
+    }
 }
 
 fn build_cfg(kv: &std::collections::BTreeMap<String, String>) -> Result<RunCfg> {
@@ -208,9 +255,9 @@ fn cmd_train(kv: &std::collections::BTreeMap<String, String>) -> Result<()> {
 fn cmd_sweep(kv: &std::collections::BTreeMap<String, String>) -> Result<()> {
     use flextp::bench::sweep;
     // reject typos up front (cmd_train gets this from apply_overrides)
-    const KNOWN: [&str; 9] = [
+    const KNOWN: [&str; 10] = [
         "preset", "scenarios", "strategies", "model", "epochs", "iters",
-        "eval-iters", "seed", "time-model",
+        "eval-iters", "seed", "time-model", "rank-exe",
     ];
     for k in kv.keys() {
         if k != "out" && !KNOWN.contains(&k.as_str()) {
@@ -248,6 +295,9 @@ fn cmd_sweep(kv: &std::collections::BTreeMap<String, String>) -> Result<()> {
     }
     if let Some(v) = kv.get("time-model") {
         spec.time_model = flextp::config::TimeModel::parse(v)?;
+    }
+    if let Some(v) = kv.get("rank-exe") {
+        spec.rank_exe = Some(std::path::PathBuf::from(v));
     }
     println!(
         "flextp sweep: preset={} model={} {} scenario(s) × {} strategy cell(s), \

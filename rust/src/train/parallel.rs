@@ -19,6 +19,14 @@
 //! same closure — the 1-thread and N-thread paths execute identical
 //! arithmetic, which is what `tests/parallel_determinism.rs` pins
 //! bitwise.
+//!
+//! This pool is the **compute plane** only.  The **data plane** — how
+//! all-reduce payloads actually move between ranks — lives behind the
+//! [`crate::collectives::transport::Transport`] seam (DESIGN.md §15):
+//! with `--transport tcp` the same per-rank closures run here, threads
+//! overlap the wire wait, and only the reduction bytes travel through
+//! rank OS processes.  The two axes compose freely, which is why the
+//! cross-transport parity suite runs at `--threads` 1 and 4 alike.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;

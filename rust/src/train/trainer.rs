@@ -170,7 +170,25 @@ impl Trainer {
         let m = rt.manifest.model.clone();
         let state = ModelState::init(&m, cfg.train.seed);
         let data = SynthData::new(&m, cfg.train.seed);
-        let comm = Comm::new(CostModel::from_net(cfg.net));
+        let comm = match cfg.train.transport {
+            crate::config::TransportKind::InProc => Comm::new(CostModel::from_net(cfg.net)),
+            crate::config::TransportKind::Tcp => {
+                anyhow::ensure!(
+                    cfg.backend == crate::config::BackendKind::Native,
+                    "--transport tcp (multi-process ranks) requires the native backend"
+                );
+                // lazy transport: rank processes spawn at the first
+                // collective, so building (or restoring) a trainer never
+                // forks
+                Comm::with_transport(
+                    CostModel::from_net(cfg.net),
+                    Box::new(crate::collectives::transport::LocalTcp::new(
+                        cfg.train.transport_timeout_ms,
+                        cfg.train.rank_exe.clone(),
+                    )),
+                )
+            }
+        };
         let clocks = Clocks::new(m.e);
         let monitor = Monitor::new(m.e);
         let balancer = Balancer::new(cfg.balancer.clone(), &rt.manifest, cfg.train.seed);
@@ -428,13 +446,45 @@ impl Trainer {
             self.epoch_start_bytes = self.comm.stats.total_bytes();
         }
         let mut wall0 = std::time::Instant::now();
+        // with OS-process ranks a peer can really die mid-iteration; an
+        // in-memory pre-iteration snapshot (the exact bytes
+        // save_checkpoint would write at this cut) is the recovery point
+        let recoverable = self.cfg.train.transport == crate::config::TransportKind::Tcp;
         for it in start_iter..ipe {
             // scheduled worker churn fires *before* the iteration at its
             // firing cursor — exactly the cut a kill-at-`at` checkpoint
             // makes, so live transitions and the kill/resume oracle see
             // identical state (tests/elastic_live.rs)
             self.apply_churn_transitions()?;
-            let loss = self.train_iter()?;
+            let loss = loop {
+                let snap = if recoverable {
+                    Some(crate::checkpoint::save_trainer(self))
+                } else {
+                    None
+                };
+                match self.train_iter() {
+                    Ok(loss) => break loss,
+                    Err(err) => {
+                        // only a typed PeerDied is survivable — and only
+                        // when a snapshot exists to rebuild from.
+                        // Timeouts, frame corruption, and everything
+                        // else still propagate.
+                        let (Some(snap), Some(dead)) = (snap, peer_died_rank(&err)) else {
+                            return Err(err);
+                        };
+                        self.recover_from_peer_death(&snap, dead).with_context(|| {
+                            format!(
+                                "recovering from dead rank {dead} at iteration {}",
+                                self.global_iter
+                            )
+                        })?;
+                        // retry the same iteration on the survivors;
+                        // each attempt burns one worker, so avail hits
+                        // the typed NoViableWorkerCount floor before any
+                        // unbounded retry loop could form
+                    }
+                }
+            };
             self.epoch_loss_sum += loss as f64;
             self.report.loss_curve.push(loss);
             if it + 1 == ipe {
@@ -675,7 +725,67 @@ impl Trainer {
         self.epoch_compute = vec![0.0; new_m.e];
         self.cached_actions = None;
         self.costs = self.fresh_cost_fit();
+        // a wire transport must re-form its process group at the new
+        // width before the next collective (no-op for InProc) — this is
+        // how scenario churn under `@tcp` sweep cells respawns ranks
+        self.comm
+            .transport
+            .ensure_group(new_m.e)
+            .map_err(|err| anyhow::Error::from(err).context("re-forming the transport group"))?;
         Ok(())
+    }
+
+    /// Rebuild this trainer from a pre-iteration snapshot after rank
+    /// `dead`'s process died: one fewer live worker, re-sharded onto the
+    /// largest divisor of hs/heads that fits — **the same path as
+    /// kill/checkpoint/`--resume --e E'`** (`Trainer::new` with
+    /// `e_override` + `checkpoint::restore_trainer`), which is what
+    /// makes real-kill recovery bitwise equal to that oracle
+    /// (tests/transport_faults.rs).  Zero survivors is the typed
+    /// `NoViableWorkerCount`, never a panic.  The dead group's remaining
+    /// processes are reaped when the old transport drops; the survivors'
+    /// group spawns lazily at the retried iteration's first collective.
+    fn recover_from_peer_death(
+        &mut self,
+        snap: &crate::checkpoint::Snapshot,
+        dead: usize,
+    ) -> Result<()> {
+        let m = self.rt.manifest.model.clone();
+        let avail = self.avail.saturating_sub(1);
+        if avail == 0 {
+            return Err(anyhow::Error::from(
+                crate::contention::ScenarioError::NoViableWorkerCount {
+                    avail: 0,
+                    hs: m.hs,
+                    heads: m.heads,
+                },
+            )
+            .context(format!("rank {dead} process died; no workers left")));
+        }
+        let target = (1..=avail)
+            .rev()
+            .find(|d| m.hs % d == 0 && m.heads % d == 0)
+            .unwrap_or(1);
+        let mut cfg = self.cfg.clone();
+        cfg.e_override = Some(target);
+        let mut t = Trainer::new(cfg)?;
+        crate::checkpoint::restore_trainer(&mut t, snap)
+            .map_err(|err| anyhow::Error::from(err).context("restoring the recovery snapshot"))?;
+        t.avail = avail;
+        *self = t;
+        Ok(())
+    }
+
+    /// Fault injection (tests): SIGKILL the given rank's OS process.
+    /// False when the transport has no process to kill (inproc, or the
+    /// group has not spawned yet).
+    pub fn debug_kill_rank(&mut self, rank: usize) -> bool {
+        self.comm.transport.kill_rank(rank)
+    }
+
+    /// OS pid of the given rank's process (tests: SIGSTOP injection).
+    pub fn debug_rank_pid(&self, rank: usize) -> Option<u32> {
+        self.comm.transport.rank_pid(rank)
     }
 
     // -----------------------------------------------------------------
@@ -757,7 +867,7 @@ impl Trainer {
         for k in 0..m.depth {
             attn_in.push(x.clone());
             let mut partials = self.attn_fwd_partials(&x, k, &actions, &mut m_gemm)?;
-            self.comm.all_reduce(&mut self.clocks, &mut partials);
+            self.comm.all_reduce(&mut self.clocks, "attn_fwd", &mut partials)?;
             x.add_assign(&partials[0]);
             for (w, p) in partials.into_iter().enumerate() {
                 self.recycle_rank(w, p);
@@ -765,7 +875,7 @@ impl Trainer {
 
             mlp_in.push(x.clone());
             let mut partials = self.mlp_fwd_partials(&x, k, &actions, &mut m_gemm)?;
-            self.comm.all_reduce(&mut self.clocks, &mut partials);
+            self.comm.all_reduce(&mut self.clocks, "mlp_fwd", &mut partials)?;
             x.add_assign(&partials[0]);
             for (w, p) in partials.into_iter().enumerate() {
                 self.recycle_rank(w, p);
@@ -1176,8 +1286,16 @@ impl Trainer {
             Some(dy),
             Some((&mut *block_grads, &mut dg_parts, &mut db_parts)),
         )?;
-        self.comm.all_reduce(&mut self.clocks, &mut dg_parts);
-        self.comm.all_reduce(&mut self.clocks, &mut db_parts);
+        // the dg/db/dx reduces are independent: batch them so a wire
+        // transport overlaps their collective waits (Megatron's
+        // column/row-parallel discipline).  Accounting replays the
+        // sequential barrier/cost order and the copy-outs below only
+        // read already-reduced data, so results are bitwise unchanged.
+        self.comm.all_reduce_batch(
+            &mut self.clocks,
+            "mlp_bwd",
+            &mut [&mut dg_parts[..], &mut db_parts[..], &mut dx_parts[..]],
+        )?;
         for w in 0..e {
             block_grads[w][k].ln2_g.data.copy_from_slice(&dg_parts[0].data);
             block_grads[w][k].ln2_b.data.copy_from_slice(&db_parts[0].data);
@@ -1188,7 +1306,6 @@ impl Trainer {
         for (w, p) in db_parts.into_iter().enumerate() {
             self.recycle_rank(w, p);
         }
-        self.comm.all_reduce(&mut self.clocks, &mut dx_parts);
         let mut it = dx_parts.into_iter().enumerate();
         let (_, first) = it.next().expect("at least one rank");
         for (w, p) in it {
@@ -1257,8 +1374,13 @@ impl Trainer {
             let old = std::mem::replace(&mut block_grads[w][k].wo, dwo);
             self.recycle_rank(w, old);
         }
-        self.comm.all_reduce(&mut self.clocks, &mut dg_parts);
-        self.comm.all_reduce(&mut self.clocks, &mut db_parts);
+        // batched like mlp_bwd: overlapped waits, bitwise-identical
+        // accounting and sums
+        self.comm.all_reduce_batch(
+            &mut self.clocks,
+            "attn_bwd",
+            &mut [&mut dg_parts[..], &mut db_parts[..], &mut dx_parts[..]],
+        )?;
         for w in 0..e {
             block_grads[w][k].ln1_g.data.copy_from_slice(&dg_parts[0].data);
             block_grads[w][k].ln1_b.data.copy_from_slice(&db_parts[0].data);
@@ -1269,7 +1391,6 @@ impl Trainer {
         for (w, p) in db_parts.into_iter().enumerate() {
             self.recycle_rank(w, p);
         }
-        self.comm.all_reduce(&mut self.clocks, &mut dx_parts);
         let mut it = dx_parts.into_iter().enumerate();
         let (_, first) = it.next().expect("at least one rank");
         for (w, p) in it {
@@ -1627,6 +1748,16 @@ impl Trainer {
         }
         x.add_assign(&acc);
         self.recycle_rank(0, acc);
+    }
+}
+
+/// If `err`'s root cause is `TransportError::PeerDied`, the rank that
+/// died — the one transport failure the trainer can recover from
+/// in-place (everything else propagates to the caller).
+fn peer_died_rank(err: &anyhow::Error) -> Option<usize> {
+    match err.downcast_ref::<crate::collectives::transport::TransportError>() {
+        Some(crate::collectives::transport::TransportError::PeerDied { rank }) => Some(*rank),
+        _ => None,
     }
 }
 

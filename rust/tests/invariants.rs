@@ -159,7 +159,7 @@ fn prop_allreduce_is_exact_sum() {
         let mut got = bufs.clone();
         let mut comm = Comm::new(CostModel::default());
         let mut clocks = Clocks::new(e);
-        comm.all_reduce(&mut clocks, &mut got);
+        comm.all_reduce(&mut clocks, "test", &mut got).unwrap();
         for b in &got {
             assert!(b.allclose(&want, 1e-5));
         }

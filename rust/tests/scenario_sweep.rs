@@ -8,7 +8,7 @@
 //! simulation, not statistical luck.
 
 use flextp::bench::sweep::{run_sweep, CellSpec, SweepSpec};
-use flextp::config::{ReplanMode, Strategy, TimeModel};
+use flextp::config::{ReplanMode, Strategy, TimeModel, TransportKind};
 use flextp::contention::ScenarioSpec;
 use flextp::util::json::Json;
 
@@ -130,6 +130,33 @@ fn preempted_cell_reproduces_uninterrupted_cell_bitwise() {
     assert_eq!(plain.replans, killed.replans);
     assert_eq!(plain.chi_mean, killed.chi_mean);
     assert_eq!(plain.chi_max, killed.chi_max);
+}
+
+/// A `@tcp` transport tag composes with the elasticity tags in the same
+/// cell grammar — no duplicated matrix code — and a multi-process cell
+/// row is bitwise identical to its in-process twin (DESIGN.md §15).
+#[test]
+fn tcp_sweep_cell_composes_and_matches_inproc_row() {
+    let mut spec = bursty_duel();
+    spec.name = "transport-duel".into();
+    spec.epochs = 1;
+    spec.iters = 5;
+    spec.rank_exe = Some(env!("CARGO_BIN_EXE_flextp").into());
+    spec.cells = vec![
+        CellSpec::new(Strategy::Semi, ReplanMode::Online),
+        CellSpec::new(Strategy::Semi, ReplanMode::Online).with_transport(TransportKind::Tcp),
+    ];
+    let report = run_sweep(&spec).expect("sweep across transports");
+    assert_eq!(report.cells.len(), 2);
+    let inproc = report.cells.iter().find(|c| c.cell == "live").expect("inproc row");
+    let tcp = report.cells.iter().find(|c| c.cell == "live+tcp").expect("tcp row");
+    assert_eq!(inproc.rt, tcp.rt, "modeled RT must survive the wire bitwise");
+    assert_eq!(inproc.final_acc, tcp.final_acc);
+    assert_eq!(inproc.best_acc, tcp.best_acc);
+    assert_eq!(inproc.comm_bytes, tcp.comm_bytes);
+    assert_eq!(inproc.replans, tcp.replans);
+    assert_eq!(inproc.chi_mean, tcp.chi_mean);
+    assert_eq!(inproc.chi_max, tcp.chi_max);
 }
 
 #[test]

@@ -1,0 +1,202 @@
+//! Transport fault-injection suite (ISSUE 7, DESIGN.md §15).
+//!
+//! The failure contract: every transport fault surfaces as a typed
+//! `TransportError` — never a panic, never a hang — and the one
+//! recoverable fault, a dead rank process (`PeerDied`), flows through
+//! the PR 6 churn path: the coordinator re-shards the survivors onto
+//! the nearest divisor-compatible worker count and the finished run is
+//! **bitwise identical** to the kill/checkpoint/`--resume --e E'`
+//! oracle.  Pinned here with a real `SIGKILL` (via `Child::kill`), a
+//! really-stalled rank (`SIGSTOP` and the built-in stall fault), and
+//! the zero-survivor floor.
+
+use flextp::collectives::transport::{LocalTcp, Transport, TransportError};
+use flextp::config::{ReplanMode, RunCfg, StragglerPlan, Strategy, TimeModel, TransportKind};
+use flextp::contention::{ScenarioError, ScenarioSpec};
+use flextp::metrics::RunReport;
+use flextp::tensor::Tensor;
+use flextp::train::trainer::Trainer;
+
+fn rank_exe() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_BIN_EXE_flextp"))
+}
+
+/// vit-tiny (hs=128, heads=4, e=4) with a bursty tenant trace and the
+/// deterministic modeled clock — same dynamic pipeline the parity suite
+/// runs, so fault recovery is exercised under a non-trivial plan.
+fn fault_cfg(transport: TransportKind) -> RunCfg {
+    let mut cfg = RunCfg::new("vit-tiny");
+    cfg.train.threads = 1;
+    cfg.train.epochs = 2;
+    cfg.train.iters_per_epoch = 6;
+    cfg.train.eval_iters = 2;
+    cfg.train.momentum = 0.9;
+    cfg.train.time_model = TimeModel::Modeled;
+    cfg.train.transport = transport;
+    cfg.train.rank_exe = Some(rank_exe());
+    cfg.balancer.strategy = Strategy::Semi;
+    cfg.balancer.replan = ReplanMode::Online;
+    cfg.balancer.forced_lambda = Some(1);
+    cfg.stragglers = StragglerPlan::Scenario(
+        ScenarioSpec::parse("burst:r1@x5:iters2-9,markov:r3@x2:p0.4-0.3,seed:9")
+            .expect("scenario"),
+    );
+    cfg
+}
+
+type Observables = (RunReport, u64, u64, usize);
+
+fn observe(r: RunReport, t: &Trainer) -> Observables {
+    (r, t.comm.stats.total_bytes(), t.comm.stats.allreduce_ops, t.model().e)
+}
+
+fn assert_bitwise(a: &Observables, b: &Observables, what: &str) {
+    assert!(
+        a.0.loss_curve.iter().all(|l| l.is_finite()),
+        "{what}: diverged: {:?}",
+        a.0.loss_curve
+    );
+    assert_eq!(a.0.loss_curve, b.0.loss_curve, "{what}: losses must be bitwise identical");
+    assert!(a.0.sim_equal(&b.0), "{what}: per-epoch sim metrics must be bitwise identical");
+    assert_eq!(a.1, b.1, "{what}: CommStats::total_bytes must match");
+    assert_eq!(a.2, b.2, "{what}: all-reduce op counts must match");
+    assert_eq!(a.3, b.3, "{what}: final worker counts must match");
+}
+
+/// The headline: SIGKILL rank 2 after iteration 3, mid-run.  The next
+/// collective observes the typed `PeerDied`, the coordinator re-shards
+/// 4→2 (3 survivors, but 3 divides neither hs=128 nor heads=4), retries
+/// the iteration, and finishes — and the whole run reproduces the PR 5
+/// kill/checkpoint/`--resume --e 2` oracle bit for bit.
+#[test]
+fn sigkilled_rank_recovers_through_churn_path_and_matches_oracle() {
+    let mut t = Trainer::new(fault_cfg(TransportKind::Tcp)).expect("trainer");
+    t.run_to(Some(3)).expect("warmup to the kill point");
+    assert_eq!(t.model().e, 4);
+    assert!(t.debug_kill_rank(2), "the rank process must exist to be killed");
+    let r = t.run().expect("the run must survive the kill");
+    let live = observe(r, &t);
+    assert_eq!(live.3, 2, "4 ranks with one dead must re-shard to E'=2");
+    assert_eq!(live.0.loss_curve.len(), 12, "every scheduled iteration ran");
+
+    // the oracle: same schedule, killed at the same cut, resumed at E'=2
+    let cfg = fault_cfg(TransportKind::InProc);
+    let dir = std::env::temp_dir()
+        .join(format!("flextp_faults_oracle_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let p3 = dir.join(flextp::checkpoint::ckpt_filename(3));
+    {
+        let mut t = Trainer::new(cfg.clone()).expect("oracle trainer");
+        t.run_to(Some(3)).expect("oracle to the cut");
+        t.save_checkpoint(&p3).expect("save @3");
+        // drop = the kill
+    }
+    let mut shrunk = cfg;
+    shrunk.e_override = Some(2);
+    let mut t = Trainer::resume_from(shrunk, &p3).expect("oracle resume onto e=2");
+    let r = t.run().expect("oracle run");
+    let oracle = observe(r, &t);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    assert_bitwise(&live, &oracle, "real kill vs kill/checkpoint/resume oracle");
+}
+
+/// Two kills in one run: 4→2 after iteration 2, then the e=2 group
+/// loses another rank after iteration 4 and re-forms at E'=2 on the
+/// remaining availability.  Repeated recovery must still finish the
+/// schedule with finite losses.
+#[test]
+fn repeated_kills_keep_recovering() {
+    let mut t = Trainer::new(fault_cfg(TransportKind::Tcp)).expect("trainer");
+    t.run_to(Some(2)).expect("warmup");
+    assert!(t.debug_kill_rank(3));
+    t.run_to(Some(4)).expect("across the first recovery");
+    assert_eq!(t.model().e, 2, "first kill re-shards 4→2");
+    assert!(t.debug_kill_rank(1), "the respawned e=2 group is live");
+    let r = t.run().expect("across the second recovery");
+    assert_eq!(t.model().e, 2, "2 survivors still shard at E'=2");
+    assert!(r.loss_curve.iter().all(|l| l.is_finite()));
+    assert_eq!(r.loss_curve.len(), 12);
+}
+
+/// Zero survivors is the same typed error scenario churn produces —
+/// `NoViableWorkerCount` — never a panic or a hang.
+#[test]
+fn losing_every_worker_is_a_typed_error() {
+    let mut cfg = fault_cfg(TransportKind::Tcp);
+    cfg.e_override = Some(1);
+    // the bursty trace targets r1/r3, which don't exist at e=1
+    cfg.stragglers =
+        StragglerPlan::Scenario(flextp::contention::preset("calm").expect("calm preset"));
+    let mut t = Trainer::new(cfg).expect("trainer");
+    t.run_to(Some(2)).expect("warmup");
+    assert!(t.debug_kill_rank(0));
+    let err = t.run().expect_err("no survivors must fail the run");
+    let scen = err
+        .downcast_ref::<ScenarioError>()
+        .unwrap_or_else(|| panic!("expected a typed ScenarioError, got: {err:#}"));
+    assert!(
+        matches!(scen, ScenarioError::NoViableWorkerCount { avail: 0, .. }),
+        "got: {scen}"
+    );
+}
+
+/// A stalled (but alive) rank is *not* PeerDied: the coordinator's
+/// bounded read surfaces a typed `Timeout` instead of hanging.  Uses
+/// the built-in stall fault — rank 1 parks forever at its first Work
+/// frame, the deterministic stand-in for a SIGSTOP'd process.
+#[test]
+fn stalled_rank_surfaces_as_typed_timeout() {
+    let mut t = LocalTcp::new(300, Some(rank_exe()));
+    t.set_stall(1, 0);
+    let mut bufs: Vec<Tensor> =
+        (0..4).map(|r| Tensor::from_vec(&[8], vec![r as f32; 8])).collect();
+    let err = t.all_reduce("stall-test", &mut bufs).expect_err("stalled rank must time out");
+    assert!(matches!(err, TransportError::Timeout { .. }), "got: {err}");
+}
+
+/// The same stall through the whole trainer, with a real `SIGSTOP`:
+/// the run fails fast with a typed `Timeout` in the error chain — a
+/// stopped process is alive, so this must *not* take the PeerDied
+/// recovery path or re-shard.
+#[cfg(unix)]
+#[test]
+fn sigstopped_rank_times_out_with_typed_error() {
+    let mut cfg = fault_cfg(TransportKind::Tcp);
+    cfg.train.transport_timeout_ms = 300;
+    let mut t = Trainer::new(cfg).expect("trainer");
+    t.run_to(Some(2)).expect("warmup");
+    let pid = t.debug_rank_pid(1).expect("spawned group");
+    let stopped = std::process::Command::new("kill")
+        .args(["-STOP", &pid.to_string()])
+        .status()
+        .map(|s| s.success())
+        .unwrap_or(false);
+    assert!(stopped, "kill -STOP {pid} failed");
+    let err = t.run().expect_err("a stalled rank must surface, not hang");
+    let timed_out =
+        matches!(err.downcast_ref::<TransportError>(), Some(TransportError::Timeout { .. }));
+    assert!(timed_out, "expected a typed Timeout as the root cause, got: {err:?}");
+    assert_eq!(t.model().e, 4, "a timeout must not trigger the re-shard path");
+    // Trainer drop tears the group down; SIGKILL reaps stopped processes
+}
+
+/// Direct kill on a raw transport group: a clean warmup reduce, then a
+/// SIGKILL, then the typed `PeerDied` on the next collective — the
+/// signal the trainer's recovery path keys on.
+#[test]
+fn killed_rank_surfaces_as_typed_peer_died() {
+    let mut t = LocalTcp::new(2_000, Some(rank_exe()));
+    let mut bufs: Vec<Tensor> =
+        (0..4).map(|r| Tensor::from_vec(&[8], vec![r as f32; 8])).collect();
+    t.all_reduce("warmup", &mut bufs).expect("clean reduce");
+    for b in &bufs {
+        assert!(b.data.iter().all(|&x| x == 6.0), "0+1+2+3 on every rank, got {:?}", b.data);
+    }
+    assert!(t.kill_rank(2));
+    // give the kernel a beat to reap, so the liveness probe sees it
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    let err = t.all_reduce("after-kill", &mut bufs).expect_err("dead rank must surface");
+    assert_eq!(err, TransportError::PeerDied { rank: 2 }, "signal-killed rank wins the blame");
+}
