@@ -67,6 +67,14 @@ pub struct Balancer {
     /// indices pruned during the current epoch, per (w, k, kind)
     pub(crate) pruned_epoch: Vec<Vec<[Vec<bool>; 3]>>,
     pub(crate) rng: Rng,
+    /// per-rank bytes available for migration intake (DESIGN.md §16):
+    /// the trainer refreshes this from the [`crate::memory::MemLedger`]
+    /// before each plan.  A migration plan is dropped when any
+    /// receiver's migrated share would not fit its headroom — the
+    /// worker then sheds by ZERO-resizing, which shrinks the straggler's
+    /// footprint instead of growing a receiver's.  `None` disables the
+    /// filter (legacy callers, unit tests).
+    mem_headroom: Option<Vec<u64>>,
 }
 
 impl Balancer {
@@ -90,7 +98,33 @@ impl Balancer {
                 })
                 .collect(),
             rng: Rng::new(seed ^ 0xBA1A),
+            mem_headroom: None,
         }
+    }
+
+    /// Refresh the per-rank migration-intake headroom (bytes) the next
+    /// `plan_iter` enforces; `None` disables the memory filter.
+    pub fn set_mem_headroom(&mut self, headroom: Option<Vec<u64>>) {
+        self.mem_headroom = headroom;
+    }
+
+    /// Drop `action.mig` when any receiver's migrated columns exceed its
+    /// intake headroom.  Per-receiver cost uses the same
+    /// [`crate::memory::mig_bytes_per_col`] constant the ledger charges,
+    /// so the filter is exact.  Returns true when a plan was dropped —
+    /// callers fall back to ZERO-resizing for the shed demand.
+    fn drop_mig_if_over_headroom(&self, manifest: &Manifest, action: &mut WorkerAction) -> bool {
+        let Some(headroom) = &self.mem_headroom else { return false };
+        let Some(mig) = &action.mig else { return false };
+        let per_col = crate::memory::mig_bytes_per_col(&manifest.model);
+        let tight = mig.receivers.iter().any(|rw| {
+            let need = rw.cols() as u64 * per_col;
+            headroom.get(rw.rank).is_some_and(|&h| need > h)
+        });
+        if tight {
+            action.mig = None;
+        }
+        tight
     }
 
     fn selection(&self) -> Selection {
@@ -168,6 +202,10 @@ impl Balancer {
                     let remove = (s / FFN_SHARE).min(GAMMA_MAX);
                     actions[w].mig =
                         migration::plan(manifest, w, remove, 1.0, self.pref(w));
+                    // pure MIG has no resizing fallback: a receiver
+                    // without headroom simply vetoes the migration and
+                    // the straggler rides out the iteration at full size
+                    self.drop_mig_if_over_headroom(manifest, &mut actions[w]);
                     self.apply_mig_to_layers(manifest, &mut actions, w);
                 }
             }
@@ -230,6 +268,10 @@ impl Balancer {
             let l_gamma = ffn_demand * m.ffl as f64;
             let beta = semi::eq2_beta(l_gamma, e, costs);
             actions[w].mig = migration::plan(manifest, w, ffn_demand, beta, self.pref(w));
+            // memory-tight receivers veto the migration → the else
+            // branch sheds the same demand by ZERO-resizing, which
+            // shrinks the straggler instead of growing a receiver
+            self.drop_mig_if_over_headroom(manifest, &mut actions[w]);
             if actions[w].mig.is_some() {
                 // mirror the kept set into the straggler's mlp plans —
                 // without this the straggler would compute its full FFN
@@ -266,6 +308,14 @@ impl Balancer {
                     let remove = (s / FFN_SHARE).min(GAMMA_MAX);
                     actions[w].mig =
                         migration::plan(manifest, w, remove, 1.0, self.pref(w));
+                    if self.drop_mig_if_over_headroom(manifest, &mut actions[w]) {
+                        // memory-tight receivers veto: shed the full
+                        // demand by differentiated resizing instead
+                        let planner = self.planner(manifest, iters_per_epoch);
+                        actions[w].layers =
+                            planner.plan_diff(s, &self.trackers[w], &mut self.rng);
+                        continue;
+                    }
                     self.apply_mig_to_layers_one(manifest, &mut actions[w]);
                     // cap overflow: if FFN could not absorb everything,
                     // resize QKV for the rest
@@ -616,6 +666,36 @@ mod tests {
         for a in &acts {
             assert_eq!(a.layers[0].attn_bucket, "g50");
         }
+    }
+
+    #[test]
+    fn memory_tight_receivers_veto_migration() {
+        let man = manifest();
+        let mon = monitor_with(vec![3.0, 1.0, 1.0, 1.0], 0.9);
+        // ample headroom: SEMI migrates as usual
+        let cfg = BalancerCfg { strategy: Strategy::Semi, ..Default::default() };
+        let mut b = Balancer::new(cfg.clone(), &man, 7);
+        b.set_mem_headroom(Some(vec![u64::MAX; 4]));
+        let acts = b.plan_iter(&man, &mon, &vec![1.5; 4], 1.0, 10, &costs());
+        assert!(acts[0].mig.is_some(), "ample headroom must not veto");
+        // zero headroom on every receiver: the plan is dropped and the
+        // straggler sheds the same demand by resizing instead
+        let mut b = Balancer::new(cfg.clone(), &man, 7);
+        b.set_mem_headroom(Some(vec![0; 4]));
+        let acts = b.plan_iter(&man, &mon, &vec![1.5; 4], 1.0, 10, &costs());
+        assert!(acts[0].mig.is_none(), "tight receivers must veto migration");
+        assert!(
+            acts[0].layers.iter().any(|p| !p.is_full()),
+            "vetoed migration must fall back to resizing"
+        );
+        // pure MIG has no fallback: veto leaves the straggler full-size
+        let cfg = BalancerCfg { strategy: Strategy::Mig, ..Default::default() };
+        let mut b = Balancer::new(cfg, &man, 7);
+        b.set_mem_headroom(Some(vec![0; 4]));
+        let mon = monitor_with(vec![2.0, 1.0, 1.0, 1.0], 0.9);
+        let acts = b.plan_iter(&man, &mon, &vec![1.25; 4], 1.0, 10, &costs());
+        assert!(acts[0].mig.is_none());
+        assert!(acts[0].layers.iter().all(|p| p.is_full()));
     }
 
     #[test]

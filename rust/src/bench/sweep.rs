@@ -177,7 +177,31 @@ impl SweepSpec {
                     CellSpec::fixed(Strategy::Semi, ReplanMode::Online, Some(2)),
                 ];
             }
-            _ => bail!("unknown sweep preset '{name}' (smoke|bursty|churn)"),
+            // memory pressure: a mid-run capacity squeeze on a rank that
+            // simultaneously turns straggler (the balancer must steer
+            // migration *away* from it), plus a forced hard OOM in a
+            // second scenario.  Live cells recover through the churn
+            // eviction path; the fixed-E baseline turns the OOM into an
+            // explicit `"error"` row instead of a lost cell.
+            "mem" => {
+                s.scenarios = vec![
+                    (
+                        "memsqueeze".into(),
+                        ScenarioSpec::parse(
+                            "memsqueeze:r1@iter6:x0.5,burst:r1@x6:iters6-24,chimax:32",
+                        )?,
+                    ),
+                    ("hard-oom".into(), ScenarioSpec::parse("oom:r2@iter8")?),
+                ];
+                s.cells = vec![
+                    CellSpec::new(Strategy::Semi, ReplanMode::Online),
+                    CellSpec::new(Strategy::Semi, ReplanMode::Epoch),
+                    CellSpec::new(Strategy::Mig, ReplanMode::Online),
+                    CellSpec::new(Strategy::Baseline, ReplanMode::Iter),
+                    CellSpec::fixed(Strategy::Semi, ReplanMode::Online, None),
+                ];
+            }
+            _ => bail!("unknown sweep preset '{name}' (smoke|bursty|churn|mem)"),
         }
         Ok(s)
     }
@@ -266,6 +290,16 @@ pub struct SweepCell {
     pub replans: u64,
     pub chi_mean: f64,
     pub chi_max: f64,
+    /// peak modeled per-rank memory high-water-mark across epochs
+    pub mem_hwm_bytes: u64,
+    /// tightest peak-usage headroom seen across epochs
+    pub mem_headroom_min_bytes: u64,
+    /// rank-iterations that degraded to activation checkpointing
+    pub recompute_iters: u64,
+    /// typed fault variant when the cell died mid-run (`"OutOfMemory"`,
+    /// `"NoViableWorkerCount"`, …) — an explicit error row in
+    /// `BENCH_scenarios.json` instead of a silently lost cell
+    pub error: Option<String>,
 }
 
 impl SweepCell {
@@ -282,8 +316,55 @@ impl SweepCell {
             replans: r.total_replans(),
             chi_mean: r.chi_mean(),
             chi_max: r.chi_max(),
+            mem_hwm_bytes: r.mem_hwm_max(),
+            mem_headroom_min_bytes: r.mem_headroom_min(),
+            recompute_iters: r.total_recompute_iters(),
+            error: None,
         }
     }
+
+    fn from_error(scenario: &str, cell: &CellSpec, variant: String) -> Self {
+        SweepCell {
+            scenario: scenario.to_string(),
+            strategy: cell.strategy.name().to_string(),
+            replan: cell.replan.name().to_string(),
+            cell: cell.tag(),
+            rt: 0.0,
+            final_acc: 0.0,
+            best_acc: 0.0,
+            comm_bytes: 0,
+            replans: 0,
+            chi_mean: 0.0,
+            chi_max: 0.0,
+            mem_hwm_bytes: 0,
+            mem_headroom_min_bytes: 0,
+            recompute_iters: 0,
+            error: Some(variant),
+        }
+    }
+}
+
+/// Short variant name when `err`'s chain contains one of the
+/// simulator's typed faults.  Only these become error rows; untyped
+/// errors (I/O, bugs) still abort the whole sweep.
+fn error_variant(err: &anyhow::Error) -> Option<String> {
+    fn head(dbg: String) -> String {
+        dbg.split(['{', '(', ' ']).next().unwrap_or_default().to_string()
+    }
+    for cause in err.chain() {
+        if let Some(e) = cause.downcast_ref::<crate::memory::MemError>() {
+            return Some(head(format!("{e:?}")));
+        }
+        if let Some(e @ contention::ScenarioError::NoViableWorkerCount { .. }) =
+            cause.downcast_ref::<contention::ScenarioError>()
+        {
+            return Some(head(format!("{e:?}")));
+        }
+        if let Some(e) = cause.downcast_ref::<crate::collectives::transport::TransportError>() {
+            return Some(head(format!("{e:?}")));
+        }
+    }
+    None
 }
 
 /// Sweep results: cells + the online-vs-epoch comparisons.
@@ -314,15 +395,23 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport> {
             cfg.train.transport = cell.transport;
             cfg.train.rank_exe = spec.rank_exe.clone();
             cfg.stragglers = StragglerPlan::Scenario(scen.clone());
-            let r = run_cell(cfg, scen.preempt, label, cell).with_context(|| {
-                format!(
-                    "cell {label} × {}@{}@{}",
-                    cell.strategy.name(),
-                    cell.replan.name(),
-                    cell.tag()
-                )
-            })?;
-            cells.push(SweepCell::from_report(label, cell, &r));
+            match run_cell(cfg, scen.preempt, label, cell) {
+                Ok(r) => cells.push(SweepCell::from_report(label, cell, &r)),
+                // a typed mid-run fault (OOM, no viable worker count,
+                // transport death) is a *result*, not a harness failure:
+                // record it as an explicit error row
+                Err(err) => match error_variant(&err) {
+                    Some(variant) => cells.push(SweepCell::from_error(label, cell, variant)),
+                    None => {
+                        return Err(err.context(format!(
+                            "cell {label} × {}@{}@{}",
+                            cell.strategy.name(),
+                            cell.replan.name(),
+                            cell.tag()
+                        )))
+                    }
+                },
+            }
         }
     }
     Ok(SweepReport {
@@ -375,9 +464,12 @@ fn run_cell(
 
 impl SweepReport {
     fn find(&self, scenario: &str, strategy: &str, replan: &str) -> Option<&SweepCell> {
-        self.cells
-            .iter()
-            .find(|c| c.scenario == scenario && c.strategy == strategy && c.replan == replan)
+        self.cells.iter().find(|c| {
+            c.scenario == scenario
+                && c.strategy == strategy
+                && c.replan == replan
+                && c.error.is_none()
+        })
     }
 
     /// Per scenario with both `SEMI@online` and `SEMI@epoch` cells:
@@ -411,11 +503,14 @@ impl SweepReport {
     pub fn churn_comparisons(&self) -> Vec<(String, f64, f64, f64, f64)> {
         let mut out = Vec::new();
         for label in self.scenario_labels() {
-            let live = self.cells.iter().find(|c| c.scenario == label && c.cell == "live");
+            let live = self
+                .cells
+                .iter()
+                .find(|c| c.scenario == label && c.cell == "live" && c.error.is_none());
             let fixed: Vec<&SweepCell> = self
                 .cells
                 .iter()
-                .filter(|c| c.scenario == label && c.cell.starts_with("fixed"))
+                .filter(|c| c.scenario == label && c.cell.starts_with("fixed") && c.error.is_none())
                 .collect();
             let (Some(live), false) = (live, fixed.is_empty()) else {
                 continue;
@@ -471,6 +566,19 @@ impl SweepReport {
                                 ("replans", (c.replans as f64).into()),
                                 ("chi_mean", c.chi_mean.into()),
                                 ("chi_max", c.chi_max.into()),
+                                ("mem_hwm_bytes", (c.mem_hwm_bytes as f64).into()),
+                                (
+                                    "mem_headroom_min_bytes",
+                                    (c.mem_headroom_min_bytes as f64).into(),
+                                ),
+                                ("recompute_iters", (c.recompute_iters as f64).into()),
+                                (
+                                    "error",
+                                    match &c.error {
+                                        Some(v) => v.as_str().into(),
+                                        None => Json::Null,
+                                    },
+                                ),
                             ])
                         })
                         .collect(),
@@ -528,7 +636,10 @@ impl SweepReport {
     pub fn render(&self) -> String {
         let mut t = TextTable::new(
             &format!("scenario sweep '{}' ({}, RT in sim-seconds)", self.name, self.model),
-            &["scenario", "strategy", "replan", "cell", "RT", "ACC", "comm", "replans", "chi_mean", "chi_max"],
+            &[
+                "scenario", "strategy", "replan", "cell", "RT", "ACC", "comm", "replans",
+                "chi_mean", "chi_max", "mem_hwm", "rcmp", "error",
+            ],
         );
         for c in &self.cells {
             t.row(&[
@@ -542,6 +653,9 @@ impl SweepReport {
                 c.replans.to_string(),
                 format!("{:.2}", c.chi_mean),
                 format!("{:.1}", c.chi_max),
+                crate::util::fmt_bytes(c.mem_hwm_bytes),
+                c.recompute_iters.to_string(),
+                c.error.clone().unwrap_or_default(),
             ]);
         }
         let mut out = t.render();
@@ -604,7 +718,7 @@ mod tests {
 
     #[test]
     fn presets_build() {
-        for p in ["smoke", "bursty", "churn"] {
+        for p in ["smoke", "bursty", "churn", "mem"] {
             let s = SweepSpec::preset(p).unwrap();
             assert!(!s.scenarios.is_empty());
             assert!(!s.cells.is_empty());
@@ -626,6 +740,13 @@ mod tests {
         assert_eq!(c.scenarios[0].1.churn.len(), 2);
         let tags: Vec<String> = c.cells.iter().map(|x| x.tag()).collect();
         assert_eq!(tags, ["live", "fixed", "fixed-e2"]);
+        // the mem matrix carries one squeeze and one hard-OOM scenario,
+        // and pits live cells against a fixed-E (error-row) baseline
+        let m = SweepSpec::preset("mem").unwrap();
+        assert_eq!(m.scenarios.len(), 2);
+        assert_eq!(m.scenarios[0].1.mem.len(), 1);
+        assert_eq!(m.scenarios[1].1.mem.len(), 1);
+        assert!(m.cells.iter().any(|x| !x.churn));
     }
 
     #[test]
@@ -649,6 +770,10 @@ mod tests {
             replans: 4,
             chi_mean: 2.0,
             chi_max: 6.0,
+            mem_hwm_bytes: 1 << 20,
+            mem_headroom_min_bytes: 1 << 19,
+            recompute_iters: 0,
+            error: None,
         };
         r.cells.push(mk("online", "live", 1.0, 0.5));
         r.cells.push(mk("epoch", "live", 2.0, 0.5));
@@ -668,5 +793,48 @@ mod tests {
         assert!((cc[0].2 - 2.5).abs() < 1e-12, "best fixed rt");
         assert!((cc[0].3 - 2.5).abs() < 1e-12, "elastic speedup");
         assert!(r.to_json().to_string().contains("\"elastic_speedup\":2.5"));
+    }
+
+    #[test]
+    fn typed_faults_become_error_rows_and_stay_out_of_comparisons() {
+        use crate::memory::MemError;
+        let oom = anyhow::Error::from(MemError::OutOfMemory {
+            rank: 1,
+            need_bytes: 10,
+            cap_bytes: 5,
+        })
+        .context("hard OOM on rank 1 at iteration 8");
+        assert_eq!(error_variant(&oom).as_deref(), Some("OutOfMemory"));
+        let inf = anyhow::Error::from(MemError::Infeasible {
+            rank: 0,
+            need_bytes: 10,
+            headroom_bytes: 5,
+        });
+        assert_eq!(error_variant(&inf).as_deref(), Some("Infeasible"));
+        let dead = anyhow::Error::from(contention::ScenarioError::NoViableWorkerCount {
+            avail: 0,
+            hs: 32,
+            heads: 4,
+        });
+        assert_eq!(error_variant(&dead).as_deref(), Some("NoViableWorkerCount"));
+        assert_eq!(error_variant(&anyhow::anyhow!("disk on fire")), None);
+
+        // an error row is visible in the JSON but never in comparisons
+        let cell = CellSpec::fixed(Strategy::Semi, ReplanMode::Online, None);
+        let mut r = SweepReport {
+            name: "t".into(),
+            model: "vit-tiny".into(),
+            epochs: 2,
+            iters: 4,
+            cells: vec![SweepCell::from_error("hard-oom", &cell, "OutOfMemory".into())],
+        };
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"error\":\"OutOfMemory\""));
+        assert!(r.comparisons().is_empty());
+        assert!(r.churn_comparisons().is_empty());
+        assert!(r.render().contains("OutOfMemory"));
+        // healthy cells emit an explicit null, keeping the schema stable
+        r.cells[0].error = None;
+        assert!(r.to_json().to_string().contains("\"error\":null"));
     }
 }

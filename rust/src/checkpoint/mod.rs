@@ -158,7 +158,7 @@ pub fn cfg_fingerprint(cfg: &RunCfg) -> String {
         "model={};seed={};ipe={};eval={};batches={};lr={};mom={};\
          strategy={};imp={:?};migpol={:?};theta={};alpha={};gamma={:?};\
          lambda={:?};merge={};replan={};time={};net={},{};\
-         ctl={},{},{},{},{};churn={};plan={}",
+         ctl={},{},{},{},{};churn={};mem={:?},{:?},{};plan={}",
         cfg.model,
         t.seed,
         t.iters_per_epoch,
@@ -184,6 +184,11 @@ pub fn cfg_fingerprint(cfg: &RunCfg) -> String {
         c.lo,
         c.cooldown,
         t.churn,
+        // memory budgets gate the balancer's migration filter and the
+        // recompute fallback, so they are part of the training math
+        t.mem_cap,
+        t.mem_caps,
+        t.mem_recompute,
         plan_desc(&cfg.stragglers),
     )
 }
@@ -554,6 +559,11 @@ pub fn save_trainer(t: &Trainer) -> Snapshot {
                 ("loss_sum", t.epoch_loss_sum.into()),
                 ("start_bytes", ju64(t.epoch_start_bytes)),
                 ("wall_s", t.epoch_wall_s.into()),
+                // ju64 is a decimal string, so the u64::MAX
+                // fresh-epoch sentinel in headroom_min round-trips exactly
+                ("mem_hwm", ju64(t.epoch_mem_hwm)),
+                ("headroom_min", ju64(t.epoch_headroom_min)),
+                ("recompute_iters", ju64(t.epoch_recompute_iters)),
             ]),
         ),
         (
@@ -729,6 +739,20 @@ pub fn restore_trainer(t: &mut Trainer, snap: &Snapshot) -> Result<(), CkptError
     t.epoch_loss_sum = pf64(ej, "loss_sum")?;
     t.epoch_start_bytes = pu64(ej, "start_bytes")?;
     t.epoch_wall_s = pf64(ej, "wall_s")?;
+    // memory accumulators: lenient reads (pre-memory snapshots carry
+    // none; the fresh-epoch sentinel for headroom_min is u64::MAX)
+    t.epoch_mem_hwm = match ej.opt("mem_hwm") {
+        Some(v) => u64_from(v, "mem_hwm")?,
+        None => 0,
+    };
+    t.epoch_headroom_min = match ej.opt("headroom_min") {
+        Some(v) => u64_from(v, "headroom_min")?,
+        None => u64::MAX,
+    };
+    t.epoch_recompute_iters = match ej.opt("recompute_iters") {
+        Some(v) => u64_from(v, "recompute_iters")?,
+        None => 0,
+    };
 
     let ck_e = pusize(mm, "e")?;
     if ck_e == cur.e {
@@ -751,6 +775,12 @@ pub fn restore_trainer(t: &mut Trainer, snap: &Snapshot) -> Result<(), CkptError
         None => ck_e,
     };
     t.churn_fired = t.churn.iter().filter(|ev| (ev.at as u64) < giter).count();
+    // ---- memory-event cursor + ledger -------------------------------------
+    // Same firing contract as churn; the ledger is then rebuilt as a pure
+    // function of (cfg, restored E, fired squeeze events), which is what
+    // makes a live OOM eviction and this resume path bitwise equal.
+    t.mem_fired = t.mem_events.iter().filter(|ev| (ev.at as u64) < giter).count();
+    t.rebuild_ledger();
     t.resumed = true;
     Ok(())
 }
@@ -1042,6 +1072,17 @@ mod tests {
         let mut e = b.clone();
         e.stragglers = StragglerPlan::Fixed(vec![2.0, 1.0]);
         assert_ne!(cfg_fingerprint(&b), cfg_fingerprint(&e));
+        // memory budgets gate the plan filter and recompute fallback —
+        // they are math knobs and must pin
+        let mut f = b.clone();
+        f.train.mem_cap = Some(64 << 20);
+        assert_ne!(cfg_fingerprint(&b), cfg_fingerprint(&f));
+        let mut g = b.clone();
+        g.train.mem_caps = vec![(1, 32 << 20)];
+        assert_ne!(cfg_fingerprint(&b), cfg_fingerprint(&g));
+        let mut h = b.clone();
+        h.train.mem_recompute = true;
+        assert_ne!(cfg_fingerprint(&b), cfg_fingerprint(&h));
     }
 
     #[test]

@@ -349,6 +349,19 @@ pub struct TrainCfg {
     /// tests must point this at the real CLI binary — the *test* binary
     /// has no `rank` subcommand.
     pub rank_exe: Option<PathBuf>,
+    /// per-rank memory capacity in bytes (`--mem-cap`, byte suffixes
+    /// `K`/`M`/`G` accepted); None derives 2× the model's full footprint
+    /// from the manifest (`memory::default_cap`).  Part of the math
+    /// fingerprint: a tighter cap changes balancing decisions.
+    pub mem_cap: Option<u64>,
+    /// per-rank capacity overrides (`--mem-cap-rN`), sorted by rank;
+    /// entries for ranks ≥ E are ignored by the ledger.
+    pub mem_caps: Vec<(usize, u64)>,
+    /// force activation-checkpointing (recompute-in-backward) on every
+    /// rank every iteration (`--mem-recompute`) — the loss-invariance
+    /// baseline; normally recompute engages per rank only under memory
+    /// pressure.
+    pub mem_recompute: bool,
 }
 
 impl Default for TrainCfg {
@@ -373,8 +386,38 @@ impl Default for TrainCfg {
             transport: TransportKind::InProc,
             transport_timeout_ms: crate::collectives::transport::DEFAULT_COORD_TIMEOUT_MS,
             rank_exe: None,
+            mem_cap: None,
+            mem_caps: Vec::new(),
+            mem_recompute: false,
         }
     }
+}
+
+/// Parse a byte size: plain bytes, or binary suffixes `K`/`M`/`G`
+/// (also `KiB`/`MiB`/`GiB`) — `--mem-cap 512M`, `--mem-cap 1.5G`.
+pub fn parse_bytes(s: &str) -> Result<u64> {
+    let t = s.trim();
+    let (digits, mult) = ["GiB", "MiB", "KiB", "G", "M", "K", "B"]
+        .iter()
+        .find_map(|suf| {
+            t.strip_suffix(suf).map(|d| {
+                let m: u64 = match suf.as_bytes()[0] {
+                    b'G' => 1 << 30,
+                    b'M' => 1 << 20,
+                    b'K' => 1 << 10,
+                    _ => 1,
+                };
+                (d, m)
+            })
+        })
+        .unwrap_or((t, 1));
+    let v: f64 = digits.trim().parse().map_err(|_| {
+        anyhow::anyhow!("bad byte size '{s}' (examples: 1073741824, 512M, 1.5G)")
+    })?;
+    if !v.is_finite() || v < 0.0 {
+        bail!("byte size '{s}' must be a non-negative number");
+    }
+    Ok((v * mult as f64).round() as u64)
 }
 
 /// Default rank-execution thread count: `FLEXTP_THREADS` when set and
@@ -551,6 +594,17 @@ pub fn apply_overrides(cfg: &mut RunCfg, kv: &BTreeMap<String, String>) -> Resul
             }
             "net-alpha-us" => cfg.net.alpha_s = v.parse::<f64>().context("net-alpha-us")? * 1e-6,
             "net-gbps" => cfg.net.bytes_per_s = v.parse::<f64>().context("net-gbps")? * 1e9,
+            "mem-cap" => cfg.train.mem_cap = Some(parse_bytes(v).context("mem-cap")?),
+            "mem-recompute" => cfg.train.mem_recompute = true,
+            k if k.starts_with("mem-cap-r") => {
+                let rank: usize = k["mem-cap-r".len()..]
+                    .parse()
+                    .with_context(|| format!("bad rank in --{k} (use --mem-cap-r3)"))?;
+                let cap = parse_bytes(v).with_context(|| k.to_string())?;
+                cfg.train.mem_caps.retain(|(r, _)| *r != rank);
+                cfg.train.mem_caps.push((rank, cap));
+                cfg.train.mem_caps.sort_by_key(|(r, _)| *r);
+            }
             _ => bail!("unknown option --{k}"),
         }
     }
@@ -728,6 +782,49 @@ mod tests {
         let (_, kv) = parse_kv_args(&["--ckpt-every=soon".to_string()]).unwrap();
         assert!(apply_overrides(&mut cfg, &kv).is_err());
         let (_, kv) = parse_kv_args(&["--e=two".to_string()]).unwrap();
+        assert!(apply_overrides(&mut cfg, &kv).is_err());
+    }
+
+    #[test]
+    fn byte_sizes_parse_with_binary_suffixes() {
+        assert_eq!(parse_bytes("1073741824").unwrap(), 1 << 30);
+        assert_eq!(parse_bytes("512M").unwrap(), 512 << 20);
+        assert_eq!(parse_bytes("512MiB").unwrap(), 512 << 20);
+        assert_eq!(parse_bytes("1.5G").unwrap(), 3 << 29);
+        assert_eq!(parse_bytes("64K").unwrap(), 64 << 10);
+        assert_eq!(parse_bytes("0").unwrap(), 0);
+        for bad in ["", "MiB", "-1", "1.5Q", "lots"] {
+            assert!(parse_bytes(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn memory_overrides_apply() {
+        let mut cfg = RunCfg::new("vit-tiny");
+        assert_eq!(cfg.train.mem_cap, None);
+        assert!(cfg.train.mem_caps.is_empty());
+        assert!(!cfg.train.mem_recompute);
+        let args: Vec<String> = [
+            "--mem-cap", "256M",
+            "--mem-cap-r2", "128M",
+            "--mem-cap-r0", "64M",
+            "--mem-recompute",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let (_, kv) = parse_kv_args(&args).unwrap();
+        apply_overrides(&mut cfg, &kv).unwrap();
+        assert_eq!(cfg.train.mem_cap, Some(256 << 20));
+        assert_eq!(cfg.train.mem_caps, vec![(0, 64 << 20), (2, 128 << 20)]);
+        assert!(cfg.train.mem_recompute);
+        // latest override for the same rank wins
+        let (_, kv) = parse_kv_args(&["--mem-cap-r2=32M".to_string()]).unwrap();
+        apply_overrides(&mut cfg, &kv).unwrap();
+        assert_eq!(cfg.train.mem_caps, vec![(0, 64 << 20), (2, 32 << 20)]);
+        let (_, kv) = parse_kv_args(&["--mem-cap-rX=1M".to_string()]).unwrap();
+        assert!(apply_overrides(&mut cfg, &kv).is_err());
+        let (_, kv) = parse_kv_args(&["--mem-cap=huge".to_string()]).unwrap();
         assert!(apply_overrides(&mut cfg, &kv).is_err());
     }
 

@@ -20,7 +20,12 @@
 //! * worker churn — [`ChurnEvent`] (`join:rN@iterK`, `leave:rN@iterK`,
 //!   `fail:rN@iterK`): unlike χ events these change the *size* of the
 //!   worker group; the trainer re-shards in-process onto the largest
-//!   `E'` the live worker count supports (DESIGN.md §14).
+//!   `E'` the live worker count supports (DESIGN.md §14);
+//! * memory pressure — [`MemEvent`] (`memsqueeze:rN@iterK:xF`: a
+//!   co-tenant steals fraction F of rank N's memory capacity;
+//!   `oom:rN@iterK`: forced hard OOM).  Like churn these are
+//!   orchestration-level — they drive the per-rank memory ledger
+//!   (DESIGN.md §16), never the χ rows.
 //!
 //! Concurrent tenants compose **multiplicatively** (time-slicing a
 //! device between n tenants multiplies service time), clamped to
@@ -127,6 +132,26 @@ impl ChurnKind {
     }
 }
 
+/// A scripted memory event (DESIGN.md §16).  Like [`ChurnEvent`], `at`
+/// is a global iteration and the event fires **before** iteration `at`
+/// runs — the same cut a kill-at-`at` checkpoint makes, which is what
+/// keeps hard-OOM eviction bitwise-equal to the resume oracle.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemEvent {
+    pub kind: MemKind,
+    pub rank: usize,
+    pub at: usize,
+}
+
+/// `Squeeze` shrinks the rank's effective capacity (the latest squeeze
+/// per rank wins; `frac: 0` restores it); `Oom` forces a hard
+/// out-of-memory fault that evicts the rank through the churn path.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MemKind {
+    Squeeze { frac: f64 },
+    Oom,
+}
+
 /// Typed scenario errors.  Parsing and validation surface these through
 /// `anyhow`, so callers (and tests) can `downcast_ref::<ScenarioError>()`
 /// instead of string-matching, while the CLI keeps the readable message.
@@ -151,7 +176,7 @@ impl std::fmt::Display for ScenarioError {
             ScenarioError::UnknownEventKind(k) => write!(
                 f,
                 "unknown event kind '{k}' \
-                 (burst|tenant|ramp|step|pulse|markov|join|leave|fail)"
+                 (burst|tenant|ramp|step|pulse|markov|join|leave|fail|memsqueeze|oom)"
             ),
             ScenarioError::Malformed { item, reason } => write!(f, "'{item}': {reason}"),
             ScenarioError::RankOutOfRange { rank, e } => write!(
@@ -214,6 +239,10 @@ pub struct ScenarioSpec {
     /// rows — the trainer re-realizes the trace whenever the worker
     /// count changes.
     pub churn: Vec<ChurnEvent>,
+    /// Memory-pressure schedule (DSL `memsqueeze:rN@iterK:xF`,
+    /// `oom:rN@iterK`).  Orchestration-level like `churn`: drives the
+    /// per-rank memory ledger, never the χ rows (DESIGN.md §16).
+    pub mem: Vec<MemEvent>,
 }
 
 impl Default for ScenarioSpec {
@@ -224,6 +253,7 @@ impl Default for ScenarioSpec {
             events: Vec::new(),
             preempt: None,
             churn: Vec::new(),
+            mem: Vec::new(),
         }
     }
 }
@@ -243,6 +273,8 @@ impl ScenarioSpec {
     ///         | "join:rN@iterK"             worker N joins before iteration K
     ///         | "leave:rN@iterK"            worker N departs before iteration K
     ///         | "fail:rN@iterK"             worker N crashes before iteration K
+    ///         | "memsqueeze:rN@iterK:xF"    tenant steals capacity fraction F
+    ///         | "oom:rN@iterK"              forced hard OOM on worker N
     /// R      := rank index | "*" (every rank, independent tenants)
     /// ```
     ///
@@ -280,6 +312,10 @@ impl ScenarioSpec {
                 spec.churn.push(ev);
                 continue;
             }
+            if let Some(ev) = parse_mem(item)? {
+                spec.mem.push(ev);
+                continue;
+            }
             spec.events.push(parse_event(item)?);
         }
         Ok(spec)
@@ -295,8 +331,11 @@ impl ScenarioSpec {
         }
         if let Json::Obj(m) = j {
             for k in m.keys() {
-                if !matches!(k.as_str(), "seed" | "chi_max" | "events" | "preempt" | "churn") {
-                    bail!("unknown scenario field '{k}' (seed|chi_max|events|preempt|churn)");
+                if !matches!(
+                    k.as_str(),
+                    "seed" | "chi_max" | "events" | "preempt" | "churn" | "mem"
+                ) {
+                    bail!("unknown scenario field '{k}' (seed|chi_max|events|preempt|churn|mem)");
                 }
             }
         }
@@ -320,6 +359,11 @@ impl ScenarioSpec {
         if let Some(c) = j.opt("churn") {
             for ev in c.arr()? {
                 spec.churn.push(churn_from_json(ev)?);
+            }
+        }
+        if let Some(c) = j.opt("mem") {
+            for ev in c.arr()? {
+                spec.mem.push(mem_from_json(ev)?);
             }
         }
         Ok(spec)
@@ -347,10 +391,21 @@ impl ScenarioSpec {
     /// legitimately name a rank that exists only at the larger `E` (it is
     /// inert while the group is smaller), so the static range check is
     /// skipped — trace realization at any `E'` simply never applies
-    /// events whose rank is absent.
+    /// events whose rank is absent.  A scripted `oom:` event evicts a
+    /// rank and makes the group dynamic too, so it suspends the check
+    /// the same way.
     pub fn validate_ranks(&self, e: usize) -> Result<()> {
-        if !self.churn.is_empty() {
+        if !self.churn.is_empty() || self.mem.iter().any(|m| m.kind == MemKind::Oom) {
             return Ok(());
+        }
+        for m in &self.mem {
+            if m.rank >= e {
+                return Err(anyhow::Error::from(ScenarioError::RankOutOfRange {
+                    rank: m.rank,
+                    e,
+                })
+                .context(format!("in scenario '{}'", self.describe())));
+            }
         }
         for ev in &self.events {
             let rank = match ev {
@@ -381,12 +436,24 @@ impl ScenarioSpec {
         v
     }
 
+    /// The memory-event schedule in firing order (stable on `at`, like
+    /// [`Self::churn_sorted`]).
+    pub fn mem_sorted(&self) -> Vec<MemEvent> {
+        let mut v = self.mem.clone();
+        v.sort_by_key(|m| m.at);
+        v
+    }
+
     /// Compact one-line rendering (labels, sweep tables).  Includes
     /// `seed:`/`chimax:` when they differ from the defaults, so the
     /// rendered string re-parses to an equivalent spec (stochastic
     /// tenants and clamping reproduce).
     pub fn describe(&self) -> String {
-        if self.events.is_empty() && self.preempt.is_none() && self.churn.is_empty() {
+        if self.events.is_empty()
+            && self.preempt.is_none()
+            && self.churn.is_empty()
+            && self.mem.is_empty()
+        {
             // a calm trace is seed/chimax-independent, so those stay
             // implicit too
             return "calm".to_string();
@@ -418,6 +485,14 @@ impl ScenarioSpec {
             .collect();
         for c in &self.churn {
             items.push(format!("{}:r{}@iter{}", c.kind.name(), c.rank, c.at));
+        }
+        for m in &self.mem {
+            items.push(match &m.kind {
+                MemKind::Squeeze { frac } => {
+                    format!("memsqueeze:r{}@iter{}:x{frac}", m.rank, m.at)
+                }
+                MemKind::Oom => format!("oom:r{}@iter{}", m.rank, m.at),
+            });
         }
         let defaults = ScenarioSpec::default();
         if self.seed != defaults.seed {
@@ -523,6 +598,92 @@ fn churn_from_json(j: &Json) -> Result<ChurnEvent> {
     let ev = ChurnEvent { kind, rank: j.get("rank")?.usize()?, at: j.get("at")?.usize()? };
     if ev.at == 0 {
         bail!("churn at iteration 0 would resize before any work");
+    }
+    Ok(ev)
+}
+
+/// Parse a memory clause `memsqueeze:rN@iterK:xF` / `oom:rN@iterK`.
+/// Returns `Ok(None)` when `item` is not a memory kind (the caller
+/// falls through to χ-event parsing) and a typed
+/// [`ScenarioError::Malformed`] when the kind matches but the body does
+/// not — mirroring [`parse_churn`].
+fn parse_mem(item: &str) -> Result<Option<MemEvent>> {
+    let Some((kind_s, rest)) = item.split_once(':') else {
+        return Ok(None);
+    };
+    if kind_s != "memsqueeze" && kind_s != "oom" {
+        return Ok(None);
+    }
+    let mal = |reason: &str| ScenarioError::Malformed {
+        item: item.to_string(),
+        reason: reason.to_string(),
+    };
+    let mut parts = rest.split(':');
+    let target = parts.next().unwrap_or("");
+    let (r, at_s) = target
+        .split_once('@')
+        .ok_or_else(|| mal("expected rN@iterK"))?;
+    let rank = match RankSel::parse(r).map_err(|_| mal("expected a rank like r3"))? {
+        RankSel::One(x) => x,
+        RankSel::All => {
+            return Err(mal("memory events need a concrete rank; r* is not a worker").into())
+        }
+    };
+    let at_s = at_s.strip_prefix("iter").ok_or_else(|| mal("expected @iterK"))?;
+    let at: usize = at_s.parse().map_err(|_| mal("bad iteration after @iter"))?;
+    if at == 0 {
+        return Err(mal(
+            "memory events at iteration 0 fire before any work — shrink --mem-cap instead",
+        )
+        .into());
+    }
+    let kind = match kind_s {
+        "memsqueeze" => {
+            let f = parts.next().ok_or_else(|| mal("memsqueeze needs a :xF fraction"))?;
+            let f = f.strip_prefix('x').ok_or_else(|| mal("expected :xF fraction"))?;
+            let frac: f64 = f.parse().map_err(|_| mal("bad squeeze fraction"))?;
+            if !(0.0..=1.0).contains(&frac) {
+                return Err(mal("squeeze fraction must be in [0,1]").into());
+            }
+            MemKind::Squeeze { frac }
+        }
+        _ => MemKind::Oom,
+    };
+    if let Some(extra) = parts.next() {
+        return Err(mal(&format!("trailing field '{extra}'")).into());
+    }
+    Ok(Some(MemEvent { kind, rank, at }))
+}
+
+/// JSON form of a memory clause: `{"kind":"memsqueeze","rank":1,
+/// "at":6,"frac":0.5}` / `{"kind":"oom","rank":3,"at":6}`.
+fn mem_from_json(j: &Json) -> Result<MemEvent> {
+    if let Json::Obj(m) = j {
+        for k in m.keys() {
+            if !matches!(k.as_str(), "kind" | "rank" | "at" | "frac") {
+                bail!("memory event does not take a '{k}' field (allowed: kind, rank, at, frac)");
+            }
+        }
+    }
+    let kind = match j.get("kind")?.str()? {
+        "memsqueeze" => {
+            let frac = j.get("frac")?.num()?;
+            if !(0.0..=1.0).contains(&frac) {
+                bail!("squeeze fraction must be in [0,1], got {frac}");
+            }
+            MemKind::Squeeze { frac }
+        }
+        "oom" => {
+            if j.opt("frac").is_some() {
+                bail!("oom events do not take a 'frac' field");
+            }
+            MemKind::Oom
+        }
+        other => return Err(ScenarioError::UnknownEventKind(other.to_string()).into()),
+    };
+    let ev = MemEvent { kind, rank: j.get("rank")?.usize()?, at: j.get("at")?.usize()? };
+    if ev.at == 0 {
+        bail!("memory events at iteration 0 fire before any work");
     }
     Ok(ev)
 }
@@ -1073,6 +1234,82 @@ mod tests {
         let sorted = s.churn_sorted();
         assert_eq!(sorted[0].at, 3);
         assert_eq!(sorted[1].at, 9);
+    }
+
+    #[test]
+    fn mem_events_parse_describe_and_json_roundtrip() {
+        let s =
+            ScenarioSpec::parse("memsqueeze:r1@iter4:x0.5,oom:r3@iter8,step:r2@x3:iters6-")
+                .unwrap();
+        assert_eq!(s.mem.len(), 2);
+        assert_eq!(
+            s.mem[0],
+            MemEvent { kind: MemKind::Squeeze { frac: 0.5 }, rank: 1, at: 4 }
+        );
+        assert_eq!(s.mem[1], MemEvent { kind: MemKind::Oom, rank: 3, at: 8 });
+        // describe round-trips — checkpoint fingerprints depend on this
+        assert_eq!(ScenarioSpec::parse(&s.describe()).unwrap(), s);
+        // a mem-only spec is not "calm"
+        let only = ScenarioSpec::parse("memsqueeze:r0@iter2:x0.25").unwrap();
+        assert_ne!(only.describe(), "calm");
+        assert_eq!(ScenarioSpec::parse(&only.describe()).unwrap(), only);
+        // JSON object form agrees with the DSL
+        let j = Json::parse(
+            r#"{"events": [{"kind":"step","rank":2,"chi":3,"from":6}],
+                "mem": [{"kind":"memsqueeze","rank":1,"at":4,"frac":0.5},
+                        {"kind":"oom","rank":3,"at":8}]}"#,
+        )
+        .unwrap();
+        assert_eq!(ScenarioSpec::from_json(&j).unwrap(), s);
+        // memory events are orchestration-only: χ rows are unperturbed
+        let bare = ScenarioSpec::parse("step:r2@x3:iters6-").unwrap();
+        let ta = ContentionTrace::generate(&bare, 4, 12);
+        let tb = ContentionTrace::generate(&s, 4, 12);
+        for g in 0..12 {
+            assert_eq!(ta.chis(g), tb.chis(g), "g={g}");
+        }
+        // mem sorts stably by firing iteration
+        let sorted = s.mem_sorted();
+        assert_eq!(sorted[0].at, 4);
+        assert_eq!(sorted[1].at, 8);
+    }
+
+    #[test]
+    fn mem_event_rank_validation_follows_oom_not_squeeze() {
+        // an oom evicts through the churn path, so the group size is
+        // dynamic and the static range check is suspended …
+        let s = ScenarioSpec::parse("oom:r3@iter6").unwrap();
+        assert!(s.validate_ranks(2).is_ok());
+        // … but a squeeze never changes E, so its rank must exist
+        let s = ScenarioSpec::parse("memsqueeze:r3@iter6:x0.5").unwrap();
+        assert!(s.validate_ranks(2).is_err(), "squeeze keeps the range check");
+        assert!(s.validate_ranks(4).is_ok());
+    }
+
+    #[test]
+    fn mem_rejects_malformed_clauses() {
+        for bad in [
+            "memsqueeze:r*@iter4:x0.5",
+            "memsqueeze:r1@iter0:x0.5",
+            "memsqueeze:r1@iter4",
+            "memsqueeze:r1@iter4:x1.5",
+            "memsqueeze:r1@iter4:0.5",
+            "oom:r1@iter4:x0.5",
+            "oom:r1",
+            "oom:rq@iter3",
+        ] {
+            assert!(ScenarioSpec::parse(bad).is_err(), "{bad} must be rejected");
+        }
+        // JSON: oom forbids frac, memsqueeze requires it, typos rejected
+        let j = Json::parse(r#"{"mem": [{"kind":"oom","rank":1,"at":4,"frac":0.5}]}"#)
+            .unwrap();
+        assert!(ScenarioSpec::from_json(&j).is_err(), "oom must reject 'frac'");
+        let j = Json::parse(r#"{"mem": [{"kind":"memsqueeze","rank":1,"at":4}]}"#).unwrap();
+        assert!(ScenarioSpec::from_json(&j).is_err(), "memsqueeze needs 'frac'");
+        let j =
+            Json::parse(r#"{"mem": [{"kind":"memsqueeze","rank":1,"at":4,"fra":0.5}]}"#)
+                .unwrap();
+        assert!(ScenarioSpec::from_json(&j).is_err(), "typoed 'fra' must not be dropped");
     }
 
     #[test]

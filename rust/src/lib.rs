@@ -37,6 +37,7 @@ pub mod collectives;
 pub mod config;
 pub mod contention;
 pub mod data;
+pub mod memory;
 pub mod metrics;
 pub mod migration;
 pub mod model;

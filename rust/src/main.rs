@@ -76,7 +76,11 @@ fn print_help() {
                                 worker churn: join:rN@iterK, leave:rN@iterK,\n\
                                 fail:rN@iterK — the run re-shards in-process\n\
                                 to the largest E' ≤ live workers dividing\n\
-                                hs and heads, at the same global iteration\n\
+                                hs and heads, at the same global iteration;\n\
+                                memory faults: memsqueeze:rN@iterK:xF shrinks\n\
+                                rank N's capacity by fraction F, oom:rN@iterK\n\
+                                forces a hard OOM (evicts through the churn\n\
+                                path, or a typed error when --churn false)\n\
            --churn B            true (default): act on scenario churn\n\
                                 events; false: fixed-E baseline that rides\n\
                                 out the scenario at its starting width\n\
@@ -96,6 +100,16 @@ fn print_help() {
                                 plan results are bitwise identical at any\n\
                                 N; env default: FLEXTP_THREADS)\n\
            --epochs/--iters/--lr/--momentum/--seed ...\n\
+         \n\
+         MEMORY BUDGETS (DESIGN.md §16)\n\
+           --mem-cap BYTES      per-rank capacity (suffixes: K/M/G or\n\
+                                KiB/MiB/GiB; default: 2× the rank's full\n\
+                                modeled footprint, MiB-aligned)\n\
+           --mem-cap-rN BYTES   override one rank's capacity (repeatable)\n\
+           --mem-recompute      always run activation checkpointing\n\
+                                (recompute-in-backward); otherwise it is\n\
+                                a per-rank fallback when an iteration\n\
+                                would not fit\n\
          \n\
          TRANSPORT (DESIGN.md §15)\n\
            --transport T        inproc (default: ranks are in-process\n\
@@ -128,7 +142,8 @@ fn print_help() {
          SWEEP OPTIONS\n\
            --preset P           smoke (CI, 2×2) | bursty | churn (live\n\
                                 elastic vs fixed-E baselines under worker\n\
-                                fail/join)\n\
+                                fail/join) | mem (capacity squeeze + hard\n\
+                                OOM; typed faults become \"error\" rows)\n\
            --scenarios S        \"label=dsl;label2=dsl\" matrix rows\n\
            --strategies S       \"semi@online,semi@epoch,baseline\" columns;\n\
                                 further @-segments compose in any order:\n\

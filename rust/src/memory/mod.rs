@@ -1,0 +1,334 @@
+//! Memory-budgeted ranks (DESIGN.md §16).
+//!
+//! Every simulated rank owns a byte-accounted memory budget.  The
+//! [`MemLedger`] charges a **modeled** footprint — weights, optimizer
+//! moments, gradients, live activations, and the `Workspace` arena —
+//! against a per-rank capacity (`--mem-cap`, `--mem-cap-rN`, or a
+//! deterministic default derived from the manifest), tracks a per
+//! iteration high-water mark, and classifies shortfalls:
+//!
+//! * **near-OOM** (projected headroom under [`NEAR_OOM_FRAC`] of
+//!   capacity): the trainer triggers a drift-style replan with the
+//!   balancer's headroom constraint engaged;
+//! * **plan-infeasible** (the iteration's dynamic footprint does not fit
+//!   even in activation-checkpointing mode): typed
+//!   [`MemError::Infeasible`] — the plan is rejected, never a panic;
+//! * **hard OOM** (the *static* footprint — weights + moments + grads —
+//!   no longer fits, or a scripted `oom:rN@iterK` event): typed
+//!   [`MemError::OutOfMemory`], recovered through the §14 churn path
+//!   (evict the rank, re-shard survivors onto the nearest divisor E').
+//!
+//! Everything here is a pure function of the manifest, the balancing
+//! plan, and the scenario events — never of wall time or actual arena
+//! contents (which are thread-timing-dependent under `--threads N`) —
+//! so ledger observables are bitwise identical at any thread count and
+//! across the kill/checkpoint/`--resume --e E'` oracle.
+
+use crate::runtime::manifest::ModelInfo;
+
+/// Bytes per f32 element.
+const F32: u64 = 4;
+
+/// Near-OOM threshold: projected headroom below this fraction of the
+/// effective capacity arms the memory-pressure replan trigger.
+pub const NEAR_OOM_FRAC: f64 = 0.0625;
+
+/// SimClock surcharge for activation-checkpointing mode: the backward
+/// pass re-runs the forward compute, so a rank in recompute mode is
+/// charged this fraction of its iteration compute time on top.
+pub const RECOMPUTE_TIME_FRAC: f64 = 0.5;
+
+/// Typed memory faults.  Never a panic: hard OOM routes through the
+/// churn/recovery path, infeasible plans fail the run with this error
+/// (which `flextp sweep` records as an explicit `"error"` row).
+#[derive(Debug, Clone, PartialEq)]
+pub enum MemError {
+    /// The rank's static footprint exceeds its (possibly squeezed)
+    /// capacity, or a scripted `oom:` event forced the condition.
+    OutOfMemory { rank: usize, need_bytes: u64, cap_bytes: u64 },
+    /// The balancing plan's dynamic footprint does not fit the rank's
+    /// headroom even with activation checkpointing engaged.
+    Infeasible { rank: usize, need_bytes: u64, headroom_bytes: u64 },
+}
+
+impl std::fmt::Display for MemError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MemError::OutOfMemory { rank, need_bytes, cap_bytes } => write!(
+                f,
+                "rank {rank} out of memory: static footprint {need_bytes} B \
+                 exceeds capacity {cap_bytes} B"
+            ),
+            MemError::Infeasible { rank, need_bytes, headroom_bytes } => write!(
+                f,
+                "no feasible plan for rank {rank}: iteration footprint {need_bytes} B \
+                 exceeds headroom {headroom_bytes} B even with activation checkpointing"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for MemError {}
+
+/// Deterministic per-rank footprint model (bytes).  Mirrors what the
+/// simulator actually materializes per rank — shard parameters, SGD
+/// moments, gradient buffers, live layer activations, and the workspace
+/// arena's steady-state working set — as a pure function of the
+/// manifest and the current plan.
+#[derive(Debug, Clone)]
+pub struct FootprintModel {
+    /// shard + replicated parameter elements on one rank
+    params: u64,
+    /// activation elements held live per transformer layer (residual
+    /// stream + QKV + attention output + both MLP intermediates)
+    act_per_layer: u64,
+    depth: u64,
+    /// workspace arena steady-state: double-buffered largest per-layer
+    /// working set
+    workspace: u64,
+}
+
+impl FootprintModel {
+    pub fn new(m: &ModelInfo) -> FootprintModel {
+        let rep = (m.pd * m.hs + m.seq * m.hs + 3 * m.hs + m.hs * m.classes + m.classes) as u64;
+        let params = m.params_per_worker as u64 + rep;
+        let tokens = (m.bs * m.seq) as u64;
+        let act_per_layer = tokens * (m.hs + 3 * m.hsl + m.hsl + m.ffl) as u64;
+        FootprintModel {
+            params,
+            act_per_layer,
+            depth: m.depth as u64,
+            workspace: 2 * act_per_layer * F32,
+        }
+    }
+
+    /// Static residents: weights + optimizer moments + gradient buffers.
+    /// These exist whether or not an iteration is running; if they do
+    /// not fit, the rank is hard-OOM.
+    pub fn static_bytes(&self) -> u64 {
+        3 * self.params * F32
+    }
+
+    /// Dynamic per-iteration bytes on top of the statics: live
+    /// activations (all layers, or one layer's working set in
+    /// activation-checkpointing mode), the workspace arena, and weight
+    /// columns migrated *onto* this rank (`mig_in_cols` FFN columns,
+    /// two panels of `hs` each, plus their activation column).
+    pub fn iter_bytes(&self, m: &ModelInfo, mig_in_cols: u64, recompute: bool) -> u64 {
+        let live_layers = if recompute { 1 } else { self.depth };
+        let acts = self.act_per_layer * live_layers * F32;
+        acts + self.workspace + mig_in_cols * mig_bytes_per_col(m)
+    }
+
+    /// Full no-pressure footprint: statics + a plain (non-recompute,
+    /// no-migration) iteration.  The default capacity is derived from
+    /// this.
+    pub fn full_bytes(&self, m: &ModelInfo) -> u64 {
+        self.static_bytes() + self.iter_bytes(m, 0, false)
+    }
+
+    /// Modeled steady-state workspace budget — what `shrink_to` trims a
+    /// rank's actual arena back to after a re-shard/transition.
+    pub fn workspace_budget(&self) -> u64 {
+        self.workspace
+    }
+}
+
+/// Bytes one migrated-in FFN column costs its receiver: two `hs` weight
+/// panels plus one activation column per token.  The balancer's
+/// receiver-headroom filter and the trainer's ledger share this constant
+/// so the filter is exact, not an estimate.
+pub fn mig_bytes_per_col(m: &ModelInfo) -> u64 {
+    (2 * m.hs + m.bs * m.seq) as u64 * F32
+}
+
+/// Deterministic default capacity: twice the full per-rank footprint,
+/// rounded up to a whole MiB — calm runs keep comfortable headroom, a
+/// `memsqueeze:…:x0.5` lands the rank right at its working set, and the
+/// value is a stable function of the manifest alone.
+pub fn default_cap(m: &ModelInfo) -> u64 {
+    let mib = 1u64 << 20;
+    (2 * FootprintModel::new(m).full_bytes(m)).div_ceil(mib) * mib
+}
+
+/// The per-rank memory ledger.  All mutation happens on the coordinator
+/// in rank order (the PR 2 determinism contract); charges saturate at
+/// zero on release so the ledger can never go negative.
+#[derive(Debug, Clone)]
+pub struct MemLedger {
+    /// configured capacity (before squeezes)
+    cap: Vec<u64>,
+    /// capacity fraction stolen by co-tenants (`memsqueeze` events);
+    /// the latest event per rank wins
+    squeeze: Vec<f64>,
+    /// bytes currently charged
+    used: Vec<u64>,
+    /// high-water mark since the last `begin_iter`
+    hwm: Vec<u64>,
+}
+
+impl MemLedger {
+    /// Build a ledger for `e` ranks from the configured capacity
+    /// (`cap_default`, normally `--mem-cap` or [`default_cap`]) plus
+    /// per-rank overrides (`--mem-cap-rN`); overrides naming ranks
+    /// beyond `e` are ignored (the group may have shrunk).
+    pub fn new(e: usize, cap_default: u64, overrides: &[(usize, u64)]) -> MemLedger {
+        let mut cap = vec![cap_default; e];
+        for &(r, c) in overrides {
+            if r < e {
+                cap[r] = c;
+            }
+        }
+        MemLedger { cap, squeeze: vec![0.0; e], used: vec![0; e], hwm: vec![0; e] }
+    }
+
+    pub fn e(&self) -> usize {
+        self.cap.len()
+    }
+
+    /// Effective capacity after tenant squeezes.
+    pub fn effective_cap(&self, rank: usize) -> u64 {
+        (self.cap[rank] as f64 * (1.0 - self.squeeze[rank])).max(0.0) as u64
+    }
+
+    /// Record a `memsqueeze` event: a co-tenant steals `frac` of the
+    /// rank's capacity.  The latest event per rank wins; fractions clamp
+    /// to [0, 1].
+    pub fn set_squeeze(&mut self, rank: usize, frac: f64) {
+        self.squeeze[rank] = frac.clamp(0.0, 1.0);
+    }
+
+    pub fn squeeze_of(&self, rank: usize) -> f64 {
+        self.squeeze[rank]
+    }
+
+    /// Charge bytes to a rank.  The charge always lands (the high-water
+    /// mark must reflect the attempt); exceeding the effective capacity
+    /// is the *caller's* fault to classify (hard OOM vs infeasible).
+    pub fn charge(&mut self, rank: usize, bytes: u64) {
+        self.used[rank] = self.used[rank].saturating_add(bytes);
+        self.hwm[rank] = self.hwm[rank].max(self.used[rank]);
+    }
+
+    /// Release bytes; saturates at zero — the ledger never goes negative.
+    pub fn release(&mut self, rank: usize, bytes: u64) {
+        self.used[rank] = self.used[rank].saturating_sub(bytes);
+    }
+
+    pub fn used(&self, rank: usize) -> u64 {
+        self.used[rank]
+    }
+
+    /// Remaining headroom (0 when at/over capacity — never negative).
+    pub fn headroom(&self, rank: usize) -> u64 {
+        self.effective_cap(rank).saturating_sub(self.used[rank])
+    }
+
+    /// Per-rank headroom vector (feeds the balancer's receiver filter).
+    pub fn headrooms(&self) -> Vec<u64> {
+        (0..self.e()).map(|r| self.headroom(r)).collect()
+    }
+
+    /// Start a fresh iteration window: clear the per-iteration
+    /// high-water mark down to what is still charged.
+    pub fn begin_iter(&mut self) {
+        for r in 0..self.e() {
+            self.hwm[r] = self.used[r];
+        }
+    }
+
+    /// High-water mark since the last `begin_iter`.
+    pub fn hwm(&self, rank: usize) -> u64 {
+        self.hwm[rank]
+    }
+
+    /// Worst (max) high-water mark across ranks this iteration.
+    pub fn hwm_max(&self) -> u64 {
+        self.hwm.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Tightest (min) headroom across ranks right now.
+    pub fn headroom_min(&self) -> u64 {
+        (0..self.e()).map(|r| self.headroom(r)).min().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn model() -> ModelInfo {
+        crate::runtime::presets::synthesize("vit-tiny").unwrap().model
+    }
+
+    #[test]
+    fn footprint_orders_sanely() {
+        let m = model();
+        let fp = FootprintModel::new(&m);
+        assert!(fp.static_bytes() > 0);
+        // recompute strictly shrinks the dynamic footprint (depth > 1)
+        assert!(fp.iter_bytes(&m, 0, true) < fp.iter_bytes(&m, 0, false));
+        // migrated-in columns strictly grow it
+        assert!(fp.iter_bytes(&m, 16, false) > fp.iter_bytes(&m, 0, false));
+        // the default capacity fits the full footprint twice over, MiB-aligned
+        let cap = default_cap(&m);
+        assert!(cap >= 2 * fp.full_bytes(&m));
+        assert_eq!(cap % (1 << 20), 0);
+    }
+
+    #[test]
+    fn ledger_never_goes_negative_and_headroom_is_bounded() {
+        let m = model();
+        let cap = default_cap(&m);
+        let mut l = MemLedger::new(4, cap, &[(1, cap / 2), (99, 7)]);
+        assert_eq!(l.effective_cap(1), cap / 2, "per-rank override applies");
+        let mut rng = Rng::new(42);
+        let mut charged = vec![0u64; 4];
+        for _ in 0..10_000 {
+            let r = (rng.next_u64() % 4) as usize;
+            let b = rng.next_u64() % (cap / 8);
+            if rng.next_u64() % 3 == 0 {
+                l.charge(r, b);
+                charged[r] = charged[r].saturating_add(b);
+            } else {
+                // releases routinely exceed what was charged — must saturate
+                l.release(r, b);
+                charged[r] = charged[r].saturating_sub(b);
+            }
+            assert!(l.used(r) <= charged[r].max(l.used(r)));
+            assert!(l.headroom(r) <= l.effective_cap(r));
+        }
+        for r in 0..4 {
+            l.release(r, u64::MAX);
+            assert_eq!(l.used(r), 0, "ledger saturates at zero");
+            assert_eq!(l.headroom(r), l.effective_cap(r));
+        }
+    }
+
+    #[test]
+    fn squeeze_shrinks_effective_cap_latest_wins() {
+        let mut l = MemLedger::new(2, 1000, &[]);
+        l.set_squeeze(0, 0.5);
+        assert_eq!(l.effective_cap(0), 500);
+        l.set_squeeze(0, 0.25);
+        assert_eq!(l.effective_cap(0), 750, "the latest squeeze wins");
+        l.set_squeeze(0, 7.0);
+        assert_eq!(l.effective_cap(0), 0, "fractions clamp to [0,1]");
+        assert_eq!(l.effective_cap(1), 1000);
+    }
+
+    #[test]
+    fn hwm_tracks_the_iteration_peak() {
+        let mut l = MemLedger::new(1, 1000, &[]);
+        l.charge(0, 300); // statics
+        l.begin_iter();
+        l.charge(0, 400);
+        l.release(0, 400);
+        assert_eq!(l.hwm(0), 700);
+        assert_eq!(l.used(0), 300);
+        l.begin_iter();
+        assert_eq!(l.hwm(0), 300, "begin_iter resets the peak to the residents");
+        assert_eq!(l.hwm_max(), 300);
+    }
+}

@@ -35,6 +35,14 @@ pub struct EpochMetrics {
     pub chi_mean: f64,
     /// max χ seen this epoch
     pub chi_max: f64,
+    /// worst per-iteration memory high-water mark across ranks (bytes,
+    /// modeled ledger — DESIGN.md §16)
+    pub mem_hwm_bytes: u64,
+    /// tightest end-of-iteration headroom across ranks this epoch
+    /// (bytes; ≥ 0 by construction — the ledger saturates)
+    pub mem_headroom_min_bytes: u64,
+    /// rank·iterations spent in activation-checkpointing mode
+    pub recompute_iters: u64,
 }
 
 impl EpochMetrics {
@@ -56,6 +64,9 @@ impl EpochMetrics {
             && self.replans == o.replans
             && self.chi_mean == o.chi_mean
             && self.chi_max == o.chi_max
+            && self.mem_hwm_bytes == o.mem_hwm_bytes
+            && self.mem_headroom_min_bytes == o.mem_headroom_min_bytes
+            && self.recompute_iters == o.recompute_iters
     }
 }
 
@@ -151,6 +162,21 @@ impl RunReport {
         self.epochs.iter().map(|e| e.chi_mean).sum::<f64>() / self.epochs.len() as f64
     }
 
+    /// Peak modeled per-rank memory high-water-mark across epochs.
+    pub fn mem_hwm_max(&self) -> u64 {
+        self.epochs.iter().map(|e| e.mem_hwm_bytes).max().unwrap_or(0)
+    }
+
+    /// Tightest peak-usage headroom seen across epochs.
+    pub fn mem_headroom_min(&self) -> u64 {
+        self.epochs.iter().map(|e| e.mem_headroom_min_bytes).min().unwrap_or(0)
+    }
+
+    /// Rank-iterations that degraded to activation checkpointing.
+    pub fn total_recompute_iters(&self) -> u64 {
+        self.epochs.iter().map(|e| e.recompute_iters).sum()
+    }
+
     /// Whole-run [`EpochMetrics::sim_equal`]: losses, per-epoch simulated
     /// metrics, and timeline samples all bitwise equal (wall time
     /// excluded).  Used by the resume-determinism harness to state "a
@@ -188,6 +214,12 @@ impl RunReport {
                                 ("replans", (e.replans as f64).into()),
                                 ("chi_mean", e.chi_mean.into()),
                                 ("chi_max", e.chi_max.into()),
+                                ("mem_hwm_bytes", (e.mem_hwm_bytes as f64).into()),
+                                (
+                                    "mem_headroom_min_bytes",
+                                    (e.mem_headroom_min_bytes as f64).into(),
+                                ),
+                                ("recompute_iters", (e.recompute_iters as f64).into()),
                             ])
                         })
                         .collect(),
@@ -296,6 +328,9 @@ mod tests {
         assert!(a.sim_equal(&b));
         b.epochs[1].rt_sim_s += 1e-9; // any sim field may not
         assert!(!a.sim_equal(&b));
+        let mut m = a.clone();
+        m.epochs[0].mem_hwm_bytes = 1; // ledger observables are simulated
+        assert!(!a.sim_equal(&m));
         let mut c = a.clone();
         c.loss_curve[1] = 2.26;
         assert!(!a.sim_equal(&c));

@@ -36,6 +36,14 @@ pub struct ReceiverWork {
     pub chunks: Vec<Chunk>,
 }
 
+impl ReceiverWork {
+    /// Actual migrated columns this receiver computes (sum of chunk
+    /// lens, not the padded kb buckets).
+    pub fn cols(&self) -> usize {
+        self.chunks.iter().map(|c| c.len).sum()
+    }
+}
+
 /// Per-layer migration plan for one straggler (same for every block —
 /// layers have identical FFN shapes, mirroring Eq. (1)'s uniform γ).
 #[derive(Debug, Clone)]
@@ -59,6 +67,15 @@ impl MigPlan {
     /// setup: w1 cols + w2 rows of the migrated slice.
     pub fn weight_bytes(&self, hs: usize) -> usize {
         2 * hs * self.l_mig() * 4
+    }
+
+    /// Columns landing on `rank` (0 when it is not a receiver) — the
+    /// per-receiver input to the memory-headroom check in the balancer.
+    pub fn cols_for(&self, rank: usize) -> usize {
+        self.receivers
+            .iter()
+            .find(|rw| rw.rank == rank)
+            .map_or(0, ReceiverWork::cols)
     }
 }
 
@@ -223,6 +240,19 @@ mod tests {
         let p = plan(&m, 0, 0.5, 1.0, Some(&pref)).unwrap();
         assert!(p.kept.iter().all(|&i| i % 2 == 1));
         assert!(p.migrated.iter().all(|&i| i % 2 == 0));
+    }
+
+    #[test]
+    fn receiver_cols_partition_l_mig() {
+        let m = manifest();
+        let p = plan(&m, 0, 0.875, 1.0, None).unwrap();
+        let total: usize = p.receivers.iter().map(ReceiverWork::cols).sum();
+        assert_eq!(total, p.l_mig());
+        for rw in &p.receivers {
+            assert_eq!(p.cols_for(rw.rank), rw.cols());
+        }
+        assert_eq!(p.cols_for(0), 0, "the straggler receives nothing");
+        assert_eq!(p.cols_for(99), 0, "non-receivers report zero");
     }
 
     #[test]

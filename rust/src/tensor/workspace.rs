@@ -39,11 +39,12 @@ pub struct Workspace {
     free: Vec<Vec<f32>>,
     takes: u64,
     allocs: u64,
+    hwm_bytes: usize,
 }
 
 impl Workspace {
     pub const fn new() -> Workspace {
-        Workspace { free: Vec::new(), takes: 0, allocs: 0 }
+        Workspace { free: Vec::new(), takes: 0, allocs: 0, hwm_bytes: 0 }
     }
 
     /// Pop the best-fitting free buffer for `len` elements (smallest
@@ -112,6 +113,7 @@ impl Workspace {
             return;
         }
         self.free.push(v);
+        self.hwm_bytes = self.hwm_bytes.max(self.retained_bytes());
     }
 
     /// [`Workspace::give`] for a tensor's backing buffer.
@@ -132,6 +134,32 @@ impl Workspace {
     /// Bytes currently parked on the free list.
     pub fn retained_bytes(&self) -> usize {
         self.free.iter().map(|b| b.capacity() * 4).sum()
+    }
+
+    /// Peak of [`Workspace::retained_bytes`] ever observed — arenas only
+    /// grow under `take`/`give`, so without [`Workspace::shrink_to`] this
+    /// is also the current footprint after any transient large shape.
+    pub fn hwm_bytes(&self) -> usize {
+        self.hwm_bytes
+    }
+
+    /// Drop parked buffers, largest first, until the free list fits in
+    /// `budget_bytes`.  The ledger calls this after re-shard/transition
+    /// events so a transient large shape (a one-off migration slice, a
+    /// pre-transition E-wide buffer) does not permanently inflate a
+    /// rank's real footprint.  Checked-out buffers are unaffected; the
+    /// high-water mark is kept (it records history, not state).  Returns
+    /// the bytes freed.
+    pub fn shrink_to(&mut self, budget_bytes: usize) -> usize {
+        self.free.sort_by_key(|b| b.capacity());
+        let mut freed = 0;
+        while self.retained_bytes() > budget_bytes {
+            match self.free.pop() {
+                Some(b) => freed += b.capacity() * 4,
+                None => break,
+            }
+        }
+        freed
     }
 }
 
@@ -219,5 +247,30 @@ mod tests {
         // zero-capacity buffers are dropped, not parked
         ws.give(Vec::new());
         assert_eq!(ws.retained_bytes(), 0);
+    }
+
+    #[test]
+    fn hwm_records_the_peak_and_shrink_to_enforces_a_budget() {
+        let mut ws = Workspace::new();
+        assert_eq!(ws.hwm_bytes(), 0);
+        // a transient large shape inflates the arena …
+        let big = ws.take(1000);
+        let small = ws.take(10);
+        ws.give(big);
+        ws.give(small);
+        let peak = ws.retained_bytes();
+        assert!(peak >= 1010 * 4);
+        assert_eq!(ws.hwm_bytes(), peak);
+        // … and shrink_to drops the largest buffers first
+        let freed = ws.shrink_to(64);
+        assert!(freed >= 1000 * 4, "freed {freed}");
+        assert!(ws.retained_bytes() <= 64);
+        assert_eq!(ws.hwm_bytes(), peak, "hwm records history, not state");
+        // shrink_to(0) empties the free list entirely
+        ws.shrink_to(0);
+        assert_eq!(ws.retained_bytes(), 0);
+        // the arena still works afterwards
+        let v = ws.take(8);
+        assert_eq!(v, vec![0.0; 8]);
     }
 }

@@ -148,6 +148,24 @@ pub struct Trainer {
     /// Checkpointed: a resumed run must count joins/leaves from the
     /// same baseline as the uninterrupted one.
     pub(crate) avail: usize,
+    /// per-rank memory ledger (DESIGN.md §16).  A pure function of
+    /// (cfg, current E, fired mem events) — [`Trainer::rebuild_ledger`]
+    /// reconstructs it after every re-shard/restore, which is what keeps
+    /// live OOM eviction bitwise equal to the resume oracle.
+    pub ledger: crate::memory::MemLedger,
+    /// modeled per-rank footprint for the current manifest
+    pub(crate) footprint: crate::memory::FootprintModel,
+    /// scenario memory events (DESIGN.md §16), sorted by firing
+    /// iteration; they fire before the iteration at their cursor, like
+    /// churn
+    pub(crate) mem_events: Vec<crate::contention::MemEvent>,
+    /// cursor into `mem_events` (recomputed from the restored
+    /// `global_iter`, like `churn_fired`)
+    pub(crate) mem_fired: usize,
+    // -- memory epoch accumulators (checkpointed like the others)
+    pub(crate) epoch_mem_hwm: u64,
+    pub(crate) epoch_headroom_min: u64,
+    pub(crate) epoch_recompute_iters: u64,
 }
 
 impl Trainer {
@@ -235,13 +253,26 @@ impl Trainer {
             }
             _ => Vec::new(),
         };
-        if !churn.is_empty() {
+        let mem_events = match &cfg.stragglers {
+            crate::config::StragglerPlan::Scenario(spec) => spec.mem_sorted(),
+            _ => Vec::new(),
+        };
+        if !churn.is_empty()
+            || (cfg.train.churn
+                && mem_events.iter().any(|ev| ev.kind == crate::contention::MemKind::Oom))
+        {
             anyhow::ensure!(
                 cfg.backend == crate::config::BackendKind::Native,
                 "worker-churn scenarios (live re-sharding) require the native backend"
             );
         }
         let avail = m.e;
+        let footprint = crate::memory::FootprintModel::new(&m);
+        let cap = cfg.train.mem_cap.unwrap_or_else(|| crate::memory::default_cap(&m));
+        let mut ledger = crate::memory::MemLedger::new(m.e, cap, &cfg.train.mem_caps);
+        for r in 0..m.e {
+            ledger.charge(r, footprint.static_bytes());
+        }
         Ok(Trainer {
             pool,
             ws,
@@ -280,6 +311,13 @@ impl Trainer {
             churn,
             churn_fired: 0,
             avail,
+            ledger,
+            footprint,
+            mem_events,
+            mem_fired: 0,
+            epoch_mem_hwm: 0,
+            epoch_headroom_min: u64::MAX,
+            epoch_recompute_iters: 0,
         })
     }
 
@@ -444,6 +482,9 @@ impl Trainer {
             self.epoch_loss_sum = 0.0;
             self.epoch_wall_s = 0.0;
             self.epoch_start_bytes = self.comm.stats.total_bytes();
+            self.epoch_mem_hwm = 0;
+            self.epoch_headroom_min = u64::MAX;
+            self.epoch_recompute_iters = 0;
         }
         let mut wall0 = std::time::Instant::now();
         // with OS-process ranks a peer can really die mid-iteration; an
@@ -456,6 +497,10 @@ impl Trainer {
             // makes, so live transitions and the kill/resume oracle see
             // identical state (tests/elastic_live.rs)
             self.apply_churn_transitions()?;
+            // memory events fire at the same cut, after churn: a squeeze
+            // that leaves a rank's resident set over its shrunken cap is
+            // a hard OOM and routes through the same eviction math
+            self.apply_mem_transitions()?;
             let loss = loop {
                 let snap = if recoverable {
                     Some(crate::checkpoint::save_trainer(self))
@@ -531,6 +576,13 @@ impl Trainer {
                 1.0
             },
             chi_max: self.epoch_chi_max,
+            mem_hwm_bytes: self.epoch_mem_hwm,
+            mem_headroom_min_bytes: if self.epoch_headroom_min == u64::MAX {
+                0
+            } else {
+                self.epoch_headroom_min
+            },
+            recompute_iters: self.epoch_recompute_iters,
         });
         Ok(())
     }
@@ -669,6 +721,129 @@ impl Trainer {
         Ok(())
     }
 
+    /// Rebuild the memory ledger from scratch: capacities from cfg for
+    /// the *current* sharding degree, squeezes re-applied from already
+    /// fired events (ranks outside the shrunken group are dropped),
+    /// statics charged.  Because the result depends only on
+    /// (cfg, current E, fired events), a live OOM eviction and the
+    /// kill/checkpoint/`--resume --e E'` oracle reconstruct the exact
+    /// same ledger — the memory half of the bitwise-transition invariant.
+    pub(crate) fn rebuild_ledger(&mut self) {
+        let m = self.rt.manifest.model.clone();
+        let cap = self.cfg.train.mem_cap.unwrap_or_else(|| crate::memory::default_cap(&m));
+        let mut ledger = crate::memory::MemLedger::new(m.e, cap, &self.cfg.train.mem_caps);
+        for ev in &self.mem_events[..self.mem_fired.min(self.mem_events.len())] {
+            if ev.rank < m.e {
+                if let crate::contention::MemKind::Squeeze { frac } = ev.kind {
+                    ledger.set_squeeze(ev.rank, frac);
+                }
+            }
+        }
+        let footprint = crate::memory::FootprintModel::new(&m);
+        for r in 0..m.e {
+            ledger.charge(r, footprint.static_bytes());
+        }
+        self.footprint = footprint;
+        self.ledger = ledger;
+    }
+
+    /// Fire scheduled memory events whose cursor has arrived, then
+    /// enforce the hard invariant that every rank's *resident* set
+    /// (weights + moments + gradients) fits its effective capacity.
+    /// A rank that no longer fits is a hard OOM: `handle_oom` routes it
+    /// through the churn eviction math (or a typed error when churn
+    /// recovery is off).  The loop re-checks after every eviction
+    /// because shrinking E grows each survivor's shard — a cascade
+    /// terminates at the typed `NoViableWorkerCount` floor.
+    fn apply_mem_transitions(&mut self) -> Result<()> {
+        while self.mem_fired < self.mem_events.len() {
+            let ev = self.mem_events[self.mem_fired].clone();
+            if (ev.at as u64) > self.global_iter {
+                break;
+            }
+            self.mem_fired += 1;
+            let e = self.rt.manifest.model.e;
+            match ev.kind {
+                crate::contention::MemKind::Squeeze { frac } => {
+                    // ranks renumber on re-shard; a squeeze naming a rank
+                    // outside the current group has nothing to squeeze
+                    if ev.rank < e {
+                        self.ledger.set_squeeze(ev.rank, frac);
+                        // trim the real arena to the shrunken budget too —
+                        // retained capacity is observability, not math, so
+                        // this cannot perturb determinism
+                        let budget = self.footprint.workspace_budget() as usize;
+                        if let Ok(mut ws) = self.ws[ev.rank].lock() {
+                            ws.shrink_to(budget);
+                        }
+                    }
+                }
+                // a forced OOM is rank-descriptive like `fail:` — the
+                // group re-shards, survivor identity is not tracked
+                crate::contention::MemKind::Oom => self.handle_oom(ev.rank)?,
+            }
+        }
+        loop {
+            let e = self.rt.manifest.model.e;
+            let Some(r) =
+                (0..e).find(|&r| self.ledger.used(r) > self.ledger.effective_cap(r))
+            else {
+                break;
+            };
+            self.handle_oom(r)?;
+        }
+        Ok(())
+    }
+
+    /// Hard out-of-memory on `rank`.  Never a panic: with churn recovery
+    /// on, the rank is evicted and the survivors re-shard through
+    /// exactly the `fail:` math (`avail`−1 → nearest divisor →
+    /// `transition_to`), so recovery is bitwise equal to the
+    /// kill/checkpoint/`--resume --e E'` oracle; with it off, the typed
+    /// `MemError::OutOfMemory` propagates to the caller (sweeps record
+    /// it as an error row).
+    fn handle_oom(&mut self, rank: usize) -> Result<()> {
+        let (need, cap) = if rank < self.ledger.e() {
+            (self.ledger.used(rank), self.ledger.effective_cap(rank))
+        } else {
+            (0, 0)
+        };
+        let oom = crate::memory::MemError::OutOfMemory {
+            rank,
+            need_bytes: need,
+            cap_bytes: cap,
+        };
+        let ctx = format!("hard OOM on rank {rank} at iteration {}", self.global_iter);
+        if !self.cfg.train.churn {
+            return Err(anyhow::Error::from(oom).context(ctx));
+        }
+        self.avail = self.avail.saturating_sub(1);
+        let m = self.rt.manifest.model.clone();
+        if self.avail == 0 {
+            return Err(anyhow::Error::from(
+                crate::contention::ScenarioError::NoViableWorkerCount {
+                    avail: 0,
+                    hs: m.hs,
+                    heads: m.heads,
+                },
+            )
+            .context(ctx));
+        }
+        let target = (1..=self.avail)
+            .rev()
+            .find(|d| m.hs % d == 0 && m.heads % d == 0)
+            .unwrap_or(1);
+        if target != m.e {
+            self.transition_to(target).with_context(|| {
+                format!(
+                    "OOM eviction {}→{target} at iteration {}",
+                    m.e, self.global_iter
+                )
+            })?;
+        }
+        Ok(())
+    }
+
     /// In-process elastic re-shard onto `new_e` workers — no `.flexckpt`
     /// round-trip.  Field by field this reproduces exactly what
     /// `Trainer::new(--e new_e)` + the checkpoint elastic-restore path
@@ -725,6 +900,16 @@ impl Trainer {
         self.epoch_compute = vec![0.0; new_m.e];
         self.cached_actions = None;
         self.costs = self.fresh_cost_fit();
+        // ledger is a pure function of (cfg, new E, fired mem events) —
+        // rebuilding here is what keeps it bitwise equal to the one the
+        // resume oracle constructs; fresh arenas then start under budget
+        self.rebuild_ledger();
+        let ws_budget = self.footprint.workspace_budget() as usize;
+        for slot in &self.ws {
+            if let Ok(mut ws) = slot.lock() {
+                ws.shrink_to(ws_budget);
+            }
+        }
         // a wire transport must re-form its process group at the new
         // width before the next collective (no-op for InProc) — this is
         // how scenario churn under `@tcp` sweep cells respawns ranks
@@ -821,10 +1006,65 @@ impl Trainer {
 
         // --- balancing plan (uses last iteration's statistics)
         let mut replanned = false;
-        let actions = match self.forced_actions.clone() {
+        let mut actions = match self.forced_actions.clone() {
             Some(a) => a,
             None => self.plan_actions(iter, &mut replanned)?,
         };
+
+        // --- memory accounting (DESIGN.md §16).  All charges are
+        // *modeled* (plan-derived) footprints replayed on the
+        // coordinator in rank order — never actual arena telemetry, so
+        // the ledger's observables are bitwise thread-count-invariant.
+        let mut recompute = vec![self.cfg.train.mem_recompute; e];
+        let mut iter_mem = vec![0u64; e];
+        if !self.warming {
+            // predicted near-OOM: with a cached plan whose projected
+            // footprint leaves less than NEAR_OOM_FRAC of some rank's
+            // capacity free, force a drift-style replan *this* iteration
+            // — the refreshed plan runs under the headroom filter set in
+            // plan_now, steering migration away from the tight rank
+            if self.forced_actions.is_none()
+                && matches!(self.cfg.balancer.replan, ReplanMode::Online)
+                && !replanned
+                && self.mem_pressured(&m, &actions)
+            {
+                let a = self.plan_now()?;
+                self.charge_replan();
+                self.cached_actions = Some(a.clone());
+                actions = a;
+                replanned = true;
+            }
+            self.ledger.begin_iter();
+            let mut infeasible: Option<crate::memory::MemError> = None;
+            for w in 0..e {
+                let mig_in = mig_in_cols(&actions, w);
+                let mut need = self.footprint.iter_bytes(&m, mig_in, recompute[w]);
+                if !recompute[w] && need > self.ledger.headroom(w) {
+                    // degrade before failing: per-rank activation
+                    // checkpointing keeps one live layer instead of all
+                    need = self.footprint.iter_bytes(&m, mig_in, true);
+                    recompute[w] = true;
+                }
+                if need > self.ledger.headroom(w) && infeasible.is_none() {
+                    infeasible = Some(crate::memory::MemError::Infeasible {
+                        rank: w,
+                        need_bytes: need,
+                        headroom_bytes: self.ledger.headroom(w),
+                    });
+                }
+                iter_mem[w] = need;
+                self.ledger.charge(w, need);
+            }
+            if let Some(err) = infeasible {
+                // leave a clean ledger behind the typed error: statics
+                // stay resident, the attempted dynamics are rolled back
+                for w in 0..e {
+                    self.ledger.release(w, iter_mem[w]);
+                }
+                return Err(anyhow::Error::from(err)
+                    .context(format!("planning iteration {g} exceeds the memory budget")));
+            }
+        }
         self.last_replanned = replanned;
         for a in &actions {
             for p in &a.layers {
@@ -977,6 +1217,33 @@ impl Trainer {
             crate::runtime::recycle_local(t);
         }
 
+        // ---- memory close-out -------------------------------------------
+        if !self.warming {
+            // activation checkpointing re-runs the forward GEMMs inside
+            // the backward; charge the modeled surcharge *before* the
+            // monitor records so the balancer prices recompute into its
+            // next plan.  Numerics are untouched: recompute only moves
+            // time, though adaptive strategies may legitimately replan
+            // around the slower rank (under a stat-independent plan the
+            // loss curve is bitwise invariant to the recompute decision).
+            for w in 0..e {
+                if recompute[w] {
+                    let dt = crate::memory::RECOMPUTE_TIME_FRAC * m_gemm[w];
+                    self.clocks.advance(w, dt);
+                    m_gemm[w] += dt;
+                }
+            }
+            self.epoch_recompute_iters += recompute.iter().filter(|&&r| r).count() as u64;
+            // peak-usage stats while the iteration's dynamics are still
+            // charged; then roll them back — only statics stay resident
+            self.epoch_mem_hwm = self.epoch_mem_hwm.max(self.ledger.hwm_max());
+            self.epoch_headroom_min =
+                self.epoch_headroom_min.min(self.ledger.headroom_min());
+            for w in 0..e {
+                self.ledger.release(w, iter_mem[w]);
+            }
+        }
+
         // ---- statistics -------------------------------------------------
         let t_iter = self.clocks.take_iter_compute();
         if self.epoch_compute.len() == e {
@@ -1045,10 +1312,40 @@ impl Trainer {
         }
     }
 
+    /// True when the projected footprint of `actions` leaves less than
+    /// `NEAR_OOM_FRAC` of some rank's effective capacity free — the
+    /// predictive trigger for a drift-style replan (DESIGN.md §16).
+    /// Reads only ledger state (statics + squeezes) and plan-derived
+    /// bytes, so the predicate is bitwise thread-count-invariant.
+    fn mem_pressured(
+        &self,
+        m: &crate::runtime::manifest::ModelInfo,
+        actions: &[WorkerAction],
+    ) -> bool {
+        (0..m.e).any(|w| {
+            let need =
+                self.footprint.iter_bytes(m, mig_in_cols(actions, w), self.cfg.train.mem_recompute);
+            let slack = self.ledger.headroom(w).saturating_sub(need);
+            (slack as f64) < self.ledger.effective_cap(w) as f64 * crate::memory::NEAR_OOM_FRAC
+        })
+    }
+
     /// One plan recomputation: gather the detection statistics the
     /// strategy needs (charged collectives) and run the balancer.
     fn plan_now(&mut self) -> Result<Vec<WorkerAction>> {
         let e = self.model().e;
+        // refresh the balancer's migration-intake headroom: bytes each
+        // rank can absorb beyond a plain iteration's dynamics.  At plan
+        // time only statics are charged, so this is a pure function of
+        // (cfg, E, fired squeeze events).  Warmup stays cap-agnostic.
+        if self.warming {
+            self.balancer.set_mem_headroom(None);
+        } else {
+            let m = self.rt.manifest.model.clone();
+            let base = self.footprint.iter_bytes(&m, 0, false);
+            let hr = (0..e).map(|w| self.ledger.headroom(w).saturating_sub(base)).collect();
+            self.balancer.set_mem_headroom(Some(hr));
+        }
         let t_avg = if matches!(self.cfg.balancer.strategy, Strategy::Mig | Strategy::Semi) {
             vec![0.0; e] // unused by MIG/SEMI
         } else {
@@ -1759,6 +2056,18 @@ fn peer_died_rank(err: &anyhow::Error) -> Option<usize> {
         Some(crate::collectives::transport::TransportError::PeerDied { rank }) => Some(*rank),
         _ => None,
     }
+}
+
+/// Migrated columns landing on `rank` under `actions` — one layer's
+/// working set (slices are broadcast and processed layer-at-a-time), so
+/// the ledger charge mirrors the balancer-side `mig_bytes_per_col`
+/// headroom check exactly.
+fn mig_in_cols(actions: &[WorkerAction], rank: usize) -> u64 {
+    actions
+        .iter()
+        .filter_map(|a| a.mig.as_ref())
+        .map(|p| p.cols_for(rank) as u64)
+        .sum()
 }
 
 /// Drain a wall-clock segment: elapsed seconds since `w`, resetting `w`

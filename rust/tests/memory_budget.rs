@@ -1,0 +1,291 @@
+//! Memory-budget suite (ISSUE 8, DESIGN.md §16).
+//!
+//! Every simulated rank carries a byte-accounted budget; OOM is a
+//! first-class, injectable, *recoverable* fault.  Pinned here:
+//!
+//! * the ledger never goes negative (saturating arithmetic under a
+//!   seeded adversarial op stream);
+//! * a same-seed squeeze trace is bitwise identical at `--threads` 1
+//!   and 4 — memory charges are modeled, never arena telemetry;
+//! * hard-OOM recovery is bitwise equal to the PR 5/6 oracle: kill at
+//!   the fault iteration, checkpoint, `--resume --e E'`;
+//! * an iteration that cannot fit even with activation checkpointing is
+//!   a typed `MemError::Infeasible`, never a panic (and statics that
+//!   cannot fit are a typed `MemError::OutOfMemory`);
+//! * activation checkpointing is bitwise loss-invariant — it charges
+//!   SimClock time, never touches numerics;
+//! * the `mem` sweep preset acceptance row: zero panics across
+//!   strategies, `semi@online` completes within capacity, and typed
+//!   faults surface as explicit `"error"` rows.
+
+use flextp::bench::sweep::{run_sweep, SweepSpec};
+use flextp::config::{ReplanMode, RunCfg, StragglerPlan, Strategy, TimeModel};
+use flextp::contention::ScenarioSpec;
+use flextp::memory::{FootprintModel, MemError, MemLedger};
+use flextp::metrics::RunReport;
+use flextp::train::trainer::Trainer;
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("flextp_mem_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// vit-tiny (hs=128, heads=4, e=4), SEMI + online controller, modeled
+/// clock, with `scenario` scripted on top.
+fn mem_cfg(threads: usize, scenario: &str) -> RunCfg {
+    let mut cfg = RunCfg::new("vit-tiny");
+    cfg.train.threads = threads;
+    cfg.train.epochs = 2;
+    cfg.train.iters_per_epoch = 6;
+    cfg.train.eval_iters = 2;
+    cfg.train.momentum = 0.9;
+    cfg.train.time_model = TimeModel::Modeled;
+    cfg.balancer.strategy = Strategy::Semi;
+    cfg.balancer.replan = ReplanMode::Online;
+    cfg.balancer.forced_lambda = Some(1);
+    cfg.stragglers =
+        StragglerPlan::Scenario(ScenarioSpec::parse(scenario).expect("scenario"));
+    cfg
+}
+
+type Observables = (RunReport, u64, u64, usize);
+
+fn run_live(cfg: RunCfg) -> Observables {
+    let mut t = Trainer::new(cfg).expect("trainer");
+    let r = t.run().expect("live run");
+    (r, t.comm.stats.total_bytes(), t.comm.stats.allreduce_ops, t.model().e)
+}
+
+fn assert_bitwise(a: &Observables, b: &Observables, what: &str) {
+    assert!(a.0.loss_curve.iter().all(|l| l.is_finite()), "{what}: diverged");
+    assert_eq!(a.0.loss_curve, b.0.loss_curve, "{what}: losses must be bitwise identical");
+    assert!(a.0.sim_equal(&b.0), "{what}: per-epoch sim metrics (incl. mem) must match");
+    assert_eq!(a.1, b.1, "{what}: CommStats::total_bytes must match");
+    assert_eq!(a.2, b.2, "{what}: all-reduce op counts must match");
+    assert_eq!(a.3, b.3, "{what}: final worker counts must match");
+}
+
+/// Saturating ledger arithmetic under a seeded adversarial op stream:
+/// `used` never underflows, `headroom` never exceeds the effective cap,
+/// and the high-water-mark is monotone within an iteration window.
+#[test]
+fn ledger_never_goes_negative_under_random_ops() {
+    let mut ledger = MemLedger::new(4, 1 << 20, &[(2, 1 << 18)]);
+    let mut lcg: u64 = 0xDEAD_BEEF_CAFE_F00D;
+    let mut next = move || {
+        // xorshift64* — deterministic, no external crates
+        lcg ^= lcg << 13;
+        lcg ^= lcg >> 7;
+        lcg ^= lcg << 17;
+        lcg
+    };
+    for step in 0..10_000 {
+        let r = (next() % 4) as usize;
+        let bytes = next() % (1 << 19);
+        match next() % 4 {
+            0 => ledger.charge(r, bytes),
+            // over-release on purpose: must saturate at zero
+            1 => ledger.release(r, bytes.saturating_mul(3)),
+            2 => ledger.set_squeeze(r, (next() % 100) as f64 / 100.0),
+            _ => ledger.begin_iter(),
+        }
+        for w in 0..4 {
+            assert!(
+                ledger.headroom(w) <= ledger.effective_cap(w),
+                "step {step}: headroom exceeds the effective cap on rank {w}"
+            );
+            assert!(
+                ledger.hwm(w) >= ledger.used(w) || ledger.hwm(w) == 0,
+                "step {step}: hwm fell below live usage on rank {w}"
+            );
+        }
+    }
+    // full squeeze: capacity zero, headroom zero, no underflow anywhere
+    ledger.set_squeeze(0, 1.0);
+    assert_eq!(ledger.effective_cap(0), 0);
+    assert_eq!(ledger.headroom(0), 0);
+    ledger.release(0, u64::MAX);
+    assert_eq!(ledger.used(0), 0);
+}
+
+/// A same-seed squeeze trace is bitwise identical at 1 and 4 threads:
+/// ledger charges replay modeled footprints on the coordinator in rank
+/// order, so thread timing can never leak into any memory observable.
+#[test]
+fn squeeze_trace_is_bitwise_identical_at_1_and_4_threads() {
+    let scenario = "memsqueeze:r1@iter4:x0.5,burst:r1@x5:iters2-9,seed:9";
+    let a = run_live(mem_cfg(1, scenario));
+    let b = run_live(mem_cfg(4, scenario));
+    assert_bitwise(&a, &b, "threads 1 vs 4 under memsqueeze");
+    assert_eq!(a.0.loss_curve.len(), 12, "every scheduled iteration ran");
+    assert!(a.0.mem_hwm_max() > 0, "the ledger recorded a high-water-mark");
+    // the squeeze shows up as *tighter* minimum headroom than a calm run
+    let calm = run_live(mem_cfg(1, "burst:r1@x5:iters2-9,seed:9"));
+    assert!(
+        a.0.mem_headroom_min() < calm.0.mem_headroom_min(),
+        "squeeze headroom {} must undercut calm headroom {}",
+        a.0.mem_headroom_min(),
+        calm.0.mem_headroom_min(),
+    );
+}
+
+/// Tentpole: a hard `oom:` fault evicts the rank through the churn path
+/// and the live recovery is bitwise equal to kill/checkpoint/`--resume
+/// --e E'` — at 1 and 4 threads.  vit-tiny at e=4 loses one worker →
+/// 3 survivors divide neither hs=128 nor heads=4 → E'=2.
+#[test]
+fn hard_oom_recovery_matches_resume_oracle_at_1_and_4_threads() {
+    let scenario = "oom:r1@iter4,burst:r2@x4:iters2-9,seed:9";
+    let mut per_thread = Vec::new();
+    for threads in [1usize, 4] {
+        let cfg = mem_cfg(threads, scenario);
+        let live = run_live(cfg.clone());
+        assert_eq!(live.3, 2, "the OOM eviction must land on E'=2");
+
+        // the oracle: run to the fault cut, checkpoint, kill, resume at E'
+        let dir = tmp_dir(&format!("oom_oracle_t{threads}"));
+        let p4 = dir.join(flextp::checkpoint::ckpt_filename(4));
+        {
+            let mut t = Trainer::new(cfg.clone()).expect("trainer");
+            t.run_to(Some(4)).expect("to the fault point");
+            assert_eq!(t.model().e, 4, "oom@4 fires before iteration 4, not earlier");
+            t.save_checkpoint(&p4).expect("save @4");
+            // drop = the kill
+        }
+        let mut shrunk = cfg;
+        shrunk.e_override = Some(2);
+        let mut t = Trainer::resume_from(shrunk, &p4).expect("elastic resume onto e=2");
+        let r = t.run().expect("oracle run");
+        let oracle =
+            (r, t.comm.stats.total_bytes(), t.comm.stats.allreduce_ops, t.model().e);
+        assert_bitwise(&live, &oracle, &format!("threads={threads} oom vs oracle"));
+        let _ = std::fs::remove_dir_all(&dir);
+        per_thread.push(live);
+    }
+    assert_bitwise(&per_thread[0], &per_thread[1], "threads 1 vs 4 under hard OOM");
+}
+
+/// Typed failure modes, never panics: statics that cannot fit are
+/// `MemError::OutOfMemory` (when churn recovery is off), and an
+/// iteration that cannot fit even with recompute is
+/// `MemError::Infeasible` (regardless of churn).
+#[test]
+fn impossible_budgets_yield_typed_errors_not_panics() {
+    let m = flextp::runtime::presets::synthesize("vit-tiny").expect("manifest").model;
+    let fp = FootprintModel::new(&m);
+
+    // statics don't fit and there is no churn recovery → hard OOM error
+    let mut cfg = mem_cfg(1, "seed:9");
+    cfg.train.churn = false;
+    cfg.train.mem_cap = Some(fp.static_bytes() / 2);
+    let err = Trainer::new(cfg).expect("trainer").run().expect_err("statics cannot fit");
+    match err.downcast_ref::<MemError>() {
+        Some(MemError::OutOfMemory { rank: 0, .. }) => {}
+        other => panic!("expected OutOfMemory on rank 0, got: {other:?} ({err:#})"),
+    }
+
+    // statics fit, dynamics don't — not even with one live layer → the
+    // plan is infeasible; eviction would not help, so churn stays on and
+    // the error is still typed
+    let mut cfg = mem_cfg(1, "seed:9");
+    cfg.train.mem_cap = Some(fp.static_bytes() + fp.iter_bytes(&m, 0, true) / 2);
+    let err = Trainer::new(cfg).expect("trainer").run().expect_err("dynamics cannot fit");
+    match err.downcast_ref::<MemError>() {
+        Some(MemError::Infeasible { .. }) => {}
+        other => panic!("expected Infeasible, got: {other:?} ({err:#})"),
+    }
+}
+
+/// Activation checkpointing trades SimClock time for memory and must
+/// leave the numerics untouched: forcing `--mem-recompute` keeps the
+/// loss curve bitwise identical while simulated RT grows and the
+/// per-epoch recompute counter engages.  The plan is pinned to
+/// BASELINE (stat-independent) so the time surcharge — which adaptive
+/// strategies are *meant* to see and react to — cannot route the two
+/// runs onto different plans.
+#[test]
+fn recompute_is_bitwise_loss_invariant_and_charges_time() {
+    let scenario = "burst:r1@x5:iters2-9,seed:9";
+    let pin = |threads| {
+        let mut cfg = mem_cfg(threads, scenario);
+        cfg.balancer.strategy = Strategy::Baseline;
+        cfg.balancer.replan = ReplanMode::Iter;
+        cfg
+    };
+    let plain = run_live(pin(1));
+    let mut forced = pin(1);
+    forced.train.mem_recompute = true;
+    let forced = run_live(forced);
+    assert_eq!(
+        plain.0.loss_curve, forced.0.loss_curve,
+        "recompute must not perturb a single loss bit"
+    );
+    assert!(forced.0.total_recompute_iters() > 0, "recompute never engaged");
+    assert_eq!(plain.0.total_recompute_iters(), 0, "plain run must not recompute");
+    for (i, (a, b)) in plain.0.epochs.iter().zip(&forced.0.epochs).enumerate() {
+        assert!(
+            b.rt_sim_s > a.rt_sim_s,
+            "epoch {i}: recompute RT {:.6} must exceed plain RT {:.6}",
+            b.rt_sim_s,
+            a.rt_sim_s
+        );
+        assert!(
+            b.mem_hwm_bytes < a.mem_hwm_bytes,
+            "epoch {i}: recompute hwm {} must undercut plain hwm {}",
+            b.mem_hwm_bytes,
+            a.mem_hwm_bytes
+        );
+    }
+}
+
+/// The acceptance row: the `mem` sweep preset completes with zero
+/// panics across all strategies; `semi@online` finishes the squeeze
+/// scenario within capacity; the fixed-E cell turns the hard OOM into
+/// an explicit `"error"` row; live cells recover from it.
+#[test]
+fn mem_sweep_preset_degrades_gracefully_and_reports_error_rows() {
+    let spec = SweepSpec::preset("mem").expect("mem preset");
+    let report = run_sweep(&spec).expect("the mem sweep must never panic or abort");
+    assert_eq!(report.cells.len(), spec.scenarios.len() * spec.cells.len());
+
+    for c in &report.cells {
+        if c.scenario == "memsqueeze" {
+            // every strategy rides out the squeeze: no faults, headroom
+            // never exhausted, and the ledger saw real pressure
+            assert!(c.error.is_none(), "{}@{}: unexpected fault {:?}", c.strategy, c.cell, c.error);
+            assert!(c.mem_hwm_bytes > 0, "{}@{}: no high-water-mark", c.strategy, c.cell);
+        }
+    }
+    let online = report
+        .cells
+        .iter()
+        .find(|c| {
+            c.scenario == "memsqueeze"
+                && c.strategy == "SEMI"
+                && c.replan == "online"
+                && c.cell == "live"
+        })
+        .expect("semi@online memsqueeze cell");
+    assert!(online.error.is_none(), "semi@online must complete within capacity");
+
+    // the hard-OOM scenario: the fixed-E baseline cannot evict, so its
+    // cell is an explicit typed error row; every live cell recovers
+    let fixed = report
+        .cells
+        .iter()
+        .find(|c| c.scenario == "hard-oom" && c.cell == "fixed")
+        .expect("fixed cell");
+    assert_eq!(fixed.error.as_deref(), Some("OutOfMemory"));
+    for c in report.cells.iter().filter(|c| c.scenario == "hard-oom" && c.cell == "live") {
+        assert!(
+            c.error.is_none(),
+            "{}@{}: live cells must recover from the OOM, got {:?}",
+            c.strategy,
+            c.replan,
+            c.error
+        );
+        assert!(c.rt > 0.0, "{}@{}: recovered cell must report RT", c.strategy, c.replan);
+    }
+}
