@@ -93,6 +93,11 @@ pub struct SweepSpec {
     /// rank binary for `@tcp` cells (`--rank-exe`); `None` re-execs the
     /// current executable
     pub rank_exe: Option<std::path::PathBuf>,
+    /// trace every cell and embed its phase-time breakdown as a
+    /// `phases` object per cell (default true — tracing has zero
+    /// observer effect on the simulated metrics, so the sweep numbers
+    /// are bitwise identical either way)
+    pub trace: bool,
     /// (label, scenario) rows of the matrix
     pub scenarios: Vec<(String, ScenarioSpec)>,
     /// strategy/replan/elasticity/transport columns of the matrix
@@ -110,6 +115,7 @@ impl SweepSpec {
             seed: 42,
             time_model: TimeModel::Modeled,
             rank_exe: None,
+            trace: true,
             scenarios: Vec::new(),
             cells: Vec::new(),
         }
@@ -300,10 +306,19 @@ pub struct SweepCell {
     /// `"NoViableWorkerCount"`, …) — an explicit error row in
     /// `BENCH_scenarios.json` instead of a silently lost cell
     pub error: Option<String>,
+    /// phase-time breakdown from the cell's trace (`SweepSpec::trace`);
+    /// `None` for untraced and error cells — serialized as an explicit
+    /// `"phases": null` so the schema is stable
+    pub phases: Option<crate::trace::report::PhaseTotals>,
 }
 
 impl SweepCell {
-    fn from_report(scenario: &str, cell: &CellSpec, r: &RunReport) -> Self {
+    fn from_report(
+        scenario: &str,
+        cell: &CellSpec,
+        r: &RunReport,
+        phases: Option<crate::trace::report::PhaseTotals>,
+    ) -> Self {
         SweepCell {
             scenario: scenario.to_string(),
             strategy: cell.strategy.name().to_string(),
@@ -320,6 +335,7 @@ impl SweepCell {
             mem_headroom_min_bytes: r.mem_headroom_min(),
             recompute_iters: r.total_recompute_iters(),
             error: None,
+            phases,
         }
     }
 
@@ -340,6 +356,7 @@ impl SweepCell {
             mem_headroom_min_bytes: 0,
             recompute_iters: 0,
             error: Some(variant),
+            phases: None,
         }
     }
 }
@@ -394,9 +411,10 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport> {
             cfg.train.time_model = spec.time_model;
             cfg.train.transport = cell.transport;
             cfg.train.rank_exe = spec.rank_exe.clone();
+            cfg.train.trace = spec.trace;
             cfg.stragglers = StragglerPlan::Scenario(scen.clone());
             match run_cell(cfg, scen.preempt, label, cell) {
-                Ok(r) => cells.push(SweepCell::from_report(label, cell, &r)),
+                Ok((r, phases)) => cells.push(SweepCell::from_report(label, cell, &r, phases)),
                 // a typed mid-run fault (OOM, no viable worker count,
                 // transport death) is a *result*, not a harness failure:
                 // record it as an explicit error row
@@ -434,16 +452,19 @@ fn run_cell(
     preempt: Option<usize>,
     label: &str,
     cell: &CellSpec,
-) -> Result<RunReport> {
+) -> Result<(RunReport, Option<crate::trace::report::PhaseTotals>)> {
     let Some(g) = preempt else {
         let mut t = Trainer::new(cfg)?;
-        return t.run();
+        let r = t.run()?;
+        let phases = phase_totals_of(&t);
+        return Ok((r, phases));
     };
     let mut t = Trainer::new(cfg.clone())?;
     t.run_to(Some(g as u64))?;
     if t.is_complete() {
         // preemption point beyond the schedule: nothing to resume
-        return Ok(t.report.clone());
+        let phases = phase_totals_of(&t);
+        return Ok((t.report.clone(), phases));
     }
     let dir = std::env::temp_dir().join(format!(
         "flextp_preempt_{}_{}_{}_{}_{}",
@@ -459,7 +480,21 @@ fn run_cell(
     let mut resumed = Trainer::resume_from(cfg, &path)?;
     let r = resumed.run()?;
     let _ = std::fs::remove_dir_all(&dir);
-    Ok(r)
+    // trace buffers are not checkpointed (DESIGN.md §17): the phases of
+    // a kill/resume cell cover the resumed segment only
+    let phases = phase_totals_of(&resumed);
+    Ok((r, phases))
+}
+
+/// The cell's whole-run phase totals, aggregated from its tracer
+/// (`None` when the cell ran untraced).
+fn phase_totals_of(t: &Trainer) -> Option<crate::trace::report::PhaseTotals> {
+    let tr = t.tracer.as_ref()?;
+    let tr = tr.lock().expect("tracer lock");
+    if !tr.spans_on() {
+        return None;
+    }
+    Some(crate::trace::report::Attribution::from_spans(tr.merged()).phase_totals())
 }
 
 impl SweepReport {
@@ -579,6 +614,13 @@ impl SweepReport {
                                         None => Json::Null,
                                     },
                                 ),
+                                (
+                                    "phases",
+                                    match &c.phases {
+                                        Some(p) => p.to_json(),
+                                        None => Json::Null,
+                                    },
+                                ),
                             ])
                         })
                         .collect(),
@@ -638,10 +680,22 @@ impl SweepReport {
             &format!("scenario sweep '{}' ({}, RT in sim-seconds)", self.name, self.model),
             &[
                 "scenario", "strategy", "replan", "cell", "RT", "ACC", "comm", "replans",
-                "chi_mean", "chi_max", "mem_hwm", "rcmp", "error",
+                "chi_mean", "chi_max", "mem_hwm", "rcmp", "wait_s", "straggler", "error",
             ],
         );
         for c in &self.cells {
+            // the trace columns: total all-reduce wait and the attributed
+            // straggler ("r1@97%"), blank for untraced/error rows
+            let (wait, straggler) = match &c.phases {
+                Some(p) => (
+                    format!("{:.4}", p.wait_s),
+                    match p.straggler {
+                        Some(r) => format!("r{r}@{:.0}%", p.attributed_pct),
+                        None => "-".to_string(),
+                    },
+                ),
+                None => (String::new(), String::new()),
+            };
             t.row(&[
                 c.scenario.clone(),
                 c.strategy.clone(),
@@ -655,6 +709,8 @@ impl SweepReport {
                 format!("{:.1}", c.chi_max),
                 crate::util::fmt_bytes(c.mem_hwm_bytes),
                 c.recompute_iters.to_string(),
+                wait,
+                straggler,
                 c.error.clone().unwrap_or_default(),
             ]);
         }
@@ -774,6 +830,7 @@ mod tests {
             mem_headroom_min_bytes: 1 << 19,
             recompute_iters: 0,
             error: None,
+            phases: None,
         };
         r.cells.push(mk("online", "live", 1.0, 0.5));
         r.cells.push(mk("epoch", "live", 2.0, 0.5));
@@ -793,6 +850,21 @@ mod tests {
         assert!((cc[0].2 - 2.5).abs() < 1e-12, "best fixed rt");
         assert!((cc[0].3 - 2.5).abs() < 1e-12, "elastic speedup");
         assert!(r.to_json().to_string().contains("\"elastic_speedup\":2.5"));
+        // untraced cells carry an explicit "phases": null; traced ones
+        // embed the breakdown and surface in the rendered table
+        assert!(r.to_json().to_string().contains("\"phases\":null"));
+        r.cells[0].phases = Some(crate::trace::report::PhaseTotals {
+            compute_s: 1.0,
+            chi_excess_s: 0.5,
+            wait_s: 0.4,
+            straggler: Some(1),
+            attributed_pct: 97.0,
+            ..Default::default()
+        });
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"attributed_pct\":97"));
+        assert!(j.contains("\"straggler\":1"));
+        assert!(r.render().contains("r1@97%"));
     }
 
     #[test]

@@ -146,10 +146,13 @@ pub fn plan_desc(p: &StragglerPlan) -> String {
 /// Everything that feeds the training math, in one comparable string.
 /// Excluded on purpose: `--threads` (bitwise-invariant), `--epochs`
 /// (runs may be extended), wall-only knobs (`--emulate-wall`,
-/// `--timeline`), the transport knobs (`--transport`,
-/// `--transport-timeout-ms`, `--rank-exe` — cross-transport parity is
-/// bitwise, tests/transport_parity.rs, so a tcp run may resume an
-/// inproc checkpoint and vice versa), and checkpoint plumbing itself.
+/// `--timeline`), the observability knobs (`--trace`, `--trace-out`,
+/// `--trace-ring` — zero observer effect, tests/trace_determinism.rs,
+/// so a traced run may resume an untraced checkpoint and vice versa),
+/// the transport knobs (`--transport`, `--transport-timeout-ms`,
+/// `--rank-exe` — cross-transport parity is bitwise,
+/// tests/transport_parity.rs, so a tcp run may resume an inproc
+/// checkpoint and vice versa), and checkpoint plumbing itself.
 pub fn cfg_fingerprint(cfg: &RunCfg) -> String {
     let b = &cfg.balancer;
     let t = &cfg.train;
@@ -1062,6 +1065,11 @@ mod tests {
         a.train.transport = crate::config::TransportKind::Tcp;
         a.train.transport_timeout_ms = 123;
         a.train.rank_exe = Some(std::path::PathBuf::from("/tmp/flextp"));
+        // tracing has zero observer effect (tests/trace_determinism.rs):
+        // a traced run may resume an untraced checkpoint and vice versa
+        a.train.trace = true;
+        a.train.trace_out = Some(std::path::PathBuf::from("/tmp/flextp_trace"));
+        a.train.trace_ring = 128;
         assert_eq!(cfg_fingerprint(&a), cfg_fingerprint(&b), "non-math knobs must not pin");
         let mut c = b.clone();
         c.train.seed = 43;

@@ -15,8 +15,11 @@
 pub mod cost;
 pub mod transport;
 
+use std::sync::{Arc, Mutex};
+
 use crate::cluster::Clocks;
 use crate::tensor::Tensor;
+use crate::trace::{Kind, Tracer};
 use cost::CostModel;
 use transport::{InProc, Transport, TransportError};
 
@@ -58,6 +61,12 @@ pub struct Comm {
     /// process, the historic engine) or
     /// [`LocalTcp`](transport::LocalTcp) (OS-process ranks).
     pub transport: Box<dyn Transport>,
+    /// Shared span recorder (DESIGN.md §17).  Records the wait-vs-transfer
+    /// split of every collective by *reading* the clocks before the
+    /// barrier — it never advances them, so a traced run's clocks, stats,
+    /// and data stay bitwise identical to an untraced one, on either
+    /// transport.
+    pub tracer: Option<Arc<Mutex<Tracer>>>,
 }
 
 impl Comm {
@@ -66,7 +75,50 @@ impl Comm {
     }
 
     pub fn with_transport(cost: CostModel, transport: Box<dyn Transport>) -> Comm {
-        Comm { cost, stats: CommStats::default(), transport }
+        Comm { cost, stats: CommStats::default(), transport, tracer: None }
+    }
+
+    /// Record each member's pre-barrier wait (the straggler tax) and
+    /// return the members' clock frontier — the point where the
+    /// collective's transfer phase starts.  Reads clocks only.
+    fn trace_pre(&self, clocks: &Clocks, members: &[usize], label: &str) -> f64 {
+        let mut mx = f64::NEG_INFINITY;
+        for &r in members {
+            mx = mx.max(clocks.now(r));
+        }
+        if let Some(tr) = &self.tracer {
+            let mut tr = tr.lock().expect("tracer lock");
+            if tr.comm_enabled() {
+                for &r in members {
+                    let w = mx - clocks.now(r);
+                    if w > 0.0 {
+                        tr.comm_wait(r, label, clocks.now(r), w);
+                    }
+                }
+            }
+        }
+        mx
+    }
+
+    /// Record the transfer phase on each member: `t0` is the frontier
+    /// returned by [`Comm::trace_pre`], `dur` the cost-model charge just
+    /// applied to the clocks, `bytes` the member's payload share.
+    fn trace_xfer(&self, members: &[usize], kind: Kind, label: &str, t0: f64, dur: f64, bytes: u64) {
+        if let Some(tr) = &self.tracer {
+            let mut tr = tr.lock().expect("tracer lock");
+            if tr.comm_enabled() {
+                for &r in members {
+                    tr.comm_xfer(r, kind, label, t0, dur, bytes);
+                }
+            }
+        }
+    }
+
+    fn tracing(&self) -> bool {
+        match &self.tracer {
+            Some(tr) => tr.lock().expect("tracer lock").comm_enabled(),
+            None => false,
+        }
     }
 
     /// All-reduce: every rank ends with the elementwise sum.
@@ -92,6 +144,12 @@ impl Comm {
         let e = bufs.len();
         debug_assert_eq!(e, clocks.e());
         let bytes = bufs[0].size_bytes();
+        let pre = if self.tracing() {
+            let members: Vec<usize> = (0..e).collect();
+            Some((self.trace_pre(clocks, &members, phase), members))
+        } else {
+            None
+        };
         self.transport.all_reduce(phase, bufs)?;
         clocks.barrier();
         let dt = self.cost.ring_allreduce(e, bytes);
@@ -100,6 +158,9 @@ impl Comm {
         }
         self.stats.allreduce_ops += 1;
         self.stats.allreduce_bytes += bytes as u64;
+        if let Some((t0, members)) = pre {
+            self.trace_xfer(&members, Kind::CommXfer, phase, t0, dt, bytes as u64);
+        }
         Ok(())
     }
 
@@ -122,6 +183,15 @@ impl Comm {
         let e = groups[0].len();
         debug_assert_eq!(e, clocks.e());
         let sizes: Vec<usize> = groups.iter().map(|g| g[0].size_bytes()).collect();
+        // only the first group's barrier can observe skew (the replay
+        // below equalizes all clocks); record waits once, then walk a
+        // transfer cursor group by group
+        let mut pre = if self.tracing() {
+            let members: Vec<usize> = (0..e).collect();
+            Some((self.trace_pre(clocks, &members, phase), members))
+        } else {
+            None
+        };
         self.transport.all_reduce_batch(phase, groups)?;
         for bytes in sizes {
             clocks.barrier();
@@ -131,6 +201,10 @@ impl Comm {
             }
             self.stats.allreduce_ops += 1;
             self.stats.allreduce_bytes += bytes as u64;
+            if let Some((t_cursor, members)) = &mut pre {
+                self.trace_xfer(members, Kind::CommXfer, phase, *t_cursor, dt, bytes as u64);
+                *t_cursor += dt;
+            }
         }
         Ok(())
     }
@@ -139,6 +213,12 @@ impl Comm {
     /// Algorithm 2 line 2). Returns the gathered vector.
     pub fn all_gather_scalars(&mut self, clocks: &mut Clocks, vals: &[f64]) -> Vec<f64> {
         let e = vals.len();
+        let pre = if self.tracing() {
+            let members: Vec<usize> = (0..e).collect();
+            Some((self.trace_pre(clocks, &members, "detect"), members))
+        } else {
+            None
+        };
         clocks.barrier();
         let bytes = 8 * e;
         let dt = self.cost.ring_allgather(e, bytes);
@@ -147,6 +227,9 @@ impl Comm {
         }
         self.stats.allgather_ops += 1;
         self.stats.allgather_bytes += bytes as u64;
+        if let Some((t0, members)) = pre {
+            self.trace_xfer(&members, Kind::Detect, "detect", t0, dt, bytes as u64);
+        }
         vals.to_vec()
     }
 
@@ -159,6 +242,7 @@ impl Comm {
         }
         let mut all = vec![root];
         all.extend_from_slice(peers);
+        let t0 = self.trace_pre(clocks, &all, "mig_bcast");
         clocks.barrier_of(&all);
         let dt = self.cost.tree_rounds(peers.len() + 1, bytes);
         for &r in &all {
@@ -166,6 +250,7 @@ impl Comm {
         }
         self.stats.broadcast_ops += 1;
         self.stats.broadcast_bytes += (bytes * peers.len()) as u64;
+        self.trace_xfer(&all, Kind::Migration, "mig_bcast", t0, dt, bytes as u64);
     }
 
     /// Flat scatter: root sends a distinct `bytes`-sized slice to each
@@ -176,6 +261,7 @@ impl Comm {
         }
         let mut all = vec![root];
         all.extend_from_slice(peers);
+        let pre = self.trace_pre(clocks, &all, "mig_scatter");
         clocks.barrier_of(&all);
         let per = self.cost.p2p(bytes_each);
         // peer i can proceed after (i+1) sequential sends; root after all.
@@ -184,11 +270,14 @@ impl Comm {
             let tp = t0 + per * (i + 1) as f64;
             let dt = (tp - clocks.now(p)).max(0.0);
             clocks.advance_comm(p, dt);
+            self.trace_xfer(&[p], Kind::Migration, "mig_scatter", pre, dt, bytes_each as u64);
         }
         let dtr = per * peers.len() as f64;
         clocks.advance_comm(root, dtr);
         self.stats.scatter_ops += 1;
         self.stats.scatter_bytes += (bytes_each * peers.len()) as u64;
+        self.trace_xfer(&[root], Kind::Migration, "mig_scatter", pre, dtr,
+                        (bytes_each * peers.len()) as u64);
     }
 
     /// Tree reduce of per-peer partials to `root`. The data reduction
@@ -200,6 +289,7 @@ impl Comm {
         }
         let mut all = vec![root];
         all.extend_from_slice(peers);
+        let t0 = self.trace_pre(clocks, &all, "mig_reduce");
         clocks.barrier_of(&all);
         let dt = self.cost.tree_rounds(peers.len() + 1, bytes);
         for &r in &all {
@@ -207,6 +297,7 @@ impl Comm {
         }
         self.stats.reduce_ops += 1;
         self.stats.reduce_bytes += (bytes * peers.len()) as u64;
+        self.trace_xfer(&all, Kind::Migration, "mig_reduce", t0, dt, bytes as u64);
     }
 
     /// Flat gather: each peer sends `bytes_each` to root sequentially.
@@ -216,15 +307,19 @@ impl Comm {
         }
         let mut all = vec![root];
         all.extend_from_slice(peers);
+        let t0 = self.trace_pre(clocks, &all, "mig_gather");
         clocks.barrier_of(&all);
         let per = self.cost.p2p(bytes_each);
         let dtr = per * peers.len() as f64;
         clocks.advance_comm(root, dtr);
         for &p in peers {
             clocks.advance_comm(p, per);
+            self.trace_xfer(&[p], Kind::Migration, "mig_gather", t0, per, bytes_each as u64);
         }
         self.stats.gather_ops += 1;
         self.stats.gather_bytes += (bytes_each * peers.len()) as u64;
+        self.trace_xfer(&[root], Kind::Migration, "mig_gather", t0, dtr,
+                        (bytes_each * peers.len()) as u64);
     }
 }
 
@@ -344,6 +439,44 @@ mod tests {
         assert_eq!(c.stats.allreduce_ops, 2);
         assert_eq!(c.stats.allreduce_bytes, 64);
         assert_eq!(c.stats.total_bytes(), 64 + 100);
+    }
+
+    #[test]
+    fn tracing_is_zero_observer_on_collectives() {
+        // attaching a tracer must not move a single clock bit or stat;
+        // it only *adds* the recorded wait/xfer split
+        let run = |traced: bool| {
+            let mut c = mk_comm();
+            if traced {
+                c.tracer = Some(Arc::new(Mutex::new(Tracer::new(3, 1024, true, false))));
+            }
+            let mut k = Clocks::new(3);
+            k.advance(1, 2.0); // skew so waits are non-trivial
+            let mut bufs: Vec<Tensor> = (0..3).map(|_| Tensor::zeros(&[8])).collect();
+            c.all_reduce(&mut k, "p", &mut bufs).unwrap();
+            let mut g1: Vec<Tensor> = (0..3).map(|_| Tensor::zeros(&[4])).collect();
+            let mut g2: Vec<Tensor> = (0..3).map(|_| Tensor::zeros(&[2])).collect();
+            c.all_reduce_batch(&mut k, "p", &mut [&mut g1[..], &mut g2[..]]).unwrap();
+            c.broadcast(&mut k, 0, &[1, 2], 100);
+            c.scatter(&mut k, 0, &[1, 2], 50);
+            c.reduce(&mut k, 1, &[0, 2], 60);
+            c.gather(&mut k, 2, &[0, 1], 70);
+            let _ = c.all_gather_scalars(&mut k, &[1.0, 2.0, 3.0]);
+            let bits: Vec<u64> = (0..3).map(|r| k.now(r).to_bits()).collect();
+            (bits, c.stats.total_bytes(), c.stats.allreduce_ops, c)
+        };
+        let (ka, ba, oa, ca) = run(false);
+        let (kb, bb, ob, cb) = run(true);
+        assert_eq!(ka, kb, "clocks must be bitwise identical traced vs untraced");
+        assert_eq!((ba, oa), (bb, ob));
+        assert!(ca.tracer.is_none());
+        let tr = cb.tracer.expect("tracer attached");
+        let tr = tr.lock().unwrap();
+        let m = tr.merged();
+        assert!(m.iter().any(|s| s.kind == Kind::CommWait && s.dur > 0.0));
+        assert!(m.iter().any(|s| s.kind == Kind::CommXfer && s.bytes > 0));
+        assert!(m.iter().any(|s| s.kind == Kind::Migration && s.label == "mig_scatter"));
+        assert!(m.iter().any(|s| s.kind == Kind::Detect));
     }
 
     #[test]

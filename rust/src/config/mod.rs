@@ -317,8 +317,21 @@ pub struct TrainCfg {
     /// where SimClock compute charges come from (`--time-model`)
     pub time_model: TimeModel,
     /// opt-in per-iteration JSON dump (`--timeline`): χ vs T_i vs RT per
-    /// iteration lands in the run report for plotting
+    /// iteration lands in the run report for plotting.  Since the trace
+    /// layer landed this is a *view* over the span recorder
+    /// (`trace::Tracer::end_iter`), not a separate sampling path.
     pub timeline: bool,
+    /// record full phase spans (`--trace`): per-rank ring buffers merged
+    /// deterministically and exported as Perfetto `trace.json` + JSONL
+    /// at run end; charges NOTHING to SimClocks (DESIGN.md §17)
+    pub trace: bool,
+    /// trace export directory (`--trace-out`; default `<bench_out>/trace`);
+    /// an unwritable path yields a typed `TraceError` warning up front,
+    /// never a mid-epoch panic
+    pub trace_out: Option<PathBuf>,
+    /// per-rank span ring capacity (`--trace-ring`); when exceeded the
+    /// oldest spans drop and the drop count is reported at export
+    pub trace_ring: usize,
     /// checkpoint directory (`--ckpt-dir`); None disables periodic saves
     pub ckpt_dir: Option<PathBuf>,
     /// save a snapshot every N global iterations (`--ckpt-every`);
@@ -378,6 +391,9 @@ impl Default for TrainCfg {
             threads: env_threads(),
             time_model: TimeModel::Measured,
             timeline: false,
+            trace: false,
+            trace_out: None,
+            trace_ring: crate::trace::DEFAULT_RING_CAP,
             ckpt_dir: None,
             ckpt_every: 0,
             resume: None,
@@ -569,6 +585,9 @@ pub fn apply_overrides(cfg: &mut RunCfg, kv: &BTreeMap<String, String>) -> Resul
             "replan" => cfg.balancer.replan = ReplanMode::parse(v)?,
             "time-model" => cfg.train.time_model = TimeModel::parse(v)?,
             "timeline" => cfg.train.timeline = true,
+            "trace" => cfg.train.trace = true,
+            "trace-out" => cfg.train.trace_out = Some(PathBuf::from(v)),
+            "trace-ring" => cfg.train.trace_ring = v.parse().context("trace-ring")?,
             "ctl-hi" => cfg.control.hi = v.parse().context("ctl-hi")?,
             "ctl-lo" => cfg.control.lo = v.parse().context("ctl-lo")?,
             "ctl-cooldown" => cfg.control.cooldown = v.parse().context("ctl-cooldown")?,
@@ -702,6 +721,9 @@ mod tests {
             "--replan", "online",
             "--time-model", "modeled",
             "--timeline",
+            "--trace",
+            "--trace-out", "/tmp/flextp_trace_cfg_test",
+            "--trace-ring", "1024",
             "--ctl-hi", "0.5",
             "--ctl-cooldown", "4",
         ]
@@ -714,6 +736,10 @@ mod tests {
         assert_eq!(cfg.balancer.replan, ReplanMode::Online);
         assert_eq!(cfg.train.time_model, TimeModel::Modeled);
         assert!(cfg.train.timeline);
+        assert!(cfg.train.trace);
+        assert_eq!(cfg.train.trace_out.as_deref(),
+                   Some(std::path::Path::new("/tmp/flextp_trace_cfg_test")));
+        assert_eq!(cfg.train.trace_ring, 1024);
         assert_eq!(cfg.control.hi, 0.5);
         assert_eq!(cfg.control.cooldown, 4);
         assert!(ReplanMode::parse("never").is_err());

@@ -46,5 +46,6 @@ pub mod runtime;
 pub mod semi;
 pub mod straggler;
 pub mod tensor;
+pub mod trace;
 pub mod train;
 pub mod util;

@@ -4,6 +4,7 @@
 //!   train               run a training job (strategy, stragglers, model …)
 //!   rank                one TP rank process (re-exec'd by `train --transport tcp`)
 //!   sweep               run a scenario × strategy matrix (BENCH_scenarios.json)
+//!   trace               attribution report from an exported span trace
 //!   inspect-artifacts   list a model's executables and shapes
 //!   bench-comm          compare migration primitives at given sizes
 //!   pretest             print the SEMI cost-function fit for a model
@@ -31,6 +32,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&kv),
         "rank" => cmd_rank(&kv),
         "sweep" => cmd_sweep(&kv),
+        "trace" => cmd_trace(&pos, &kv),
         "inspect-artifacts" => cmd_inspect(&kv),
         "bench-comm" => cmd_bench_comm(&kv),
         "pretest" => cmd_pretest(&kv),
@@ -53,6 +55,8 @@ fn print_help() {
            rank                 one TP rank process (spawned internally by\n\
                                 'train --transport tcp'; not for direct use)\n\
            sweep                scenario × strategy matrix → BENCH_scenarios.json\n\
+           trace                per-rank/per-phase attribution from an\n\
+                                exported trace (flextp trace report FILE)\n\
            inspect-artifacts    list executables in a model's artifact set\n\
            bench-comm           compare broadcast-reduce vs scatter-gather\n\
            pretest              print the SEMI cost-function fit\n\
@@ -90,6 +94,22 @@ fn print_help() {
            --time-model T       measured (default) | modeled (deterministic\n\
                                 FLOP-model SimClock — reproducible sims)\n\
            --timeline           per-iteration χ/T_i/RT dump in the report JSON\n\
+         \n\
+         TRACING (DESIGN.md §17)\n\
+           --trace              record per-rank phase spans (compute with\n\
+                                χ, comm wait vs transfer, replans,\n\
+                                migration, churn/mem/ckpt events); zero\n\
+                                observer effect — losses/SimClocks/\n\
+                                CommStats are bitwise identical with it\n\
+                                on or off.  Exports trace.jsonl +\n\
+                                Perfetto trace.json and prints the\n\
+                                attribution table after the run\n\
+           --trace-out DIR      trace export directory (default\n\
+                                bench_out/trace); an unwritable path is\n\
+                                a typed warning, never a mid-epoch panic\n\
+           --trace-ring N       per-rank span ring capacity (default\n\
+                                65536; oldest spans drop first and the\n\
+                                drop count is reported, never silent)\n\
            --ctl-hi/--ctl-lo/--ctl-cooldown/--ctl-alpha-fast/--ctl-alpha-slow\n\
                                 online-controller drift thresholds\n\
            --gamma G            force a uniform pruning ratio\n\
@@ -152,6 +172,10 @@ fn print_help() {
                                 re-shards — the default) and transport\n\
                                 (...@tcp runs the cell over rank processes)\n\
            --rank-exe PATH      binary for @tcp cells' rank processes\n\
+           --trace B            true (default): trace each cell and embed\n\
+                                its phase-time breakdown (compute/wait/\n\
+                                xfer/replan/mig + straggler attribution)\n\
+                                as a 'phases' object per cell\n\
            --out FILE           output path (default BENCH_scenarios.json)\n"
     );
 }
@@ -188,8 +212,24 @@ fn build_cfg(kv: &std::collections::BTreeMap<String, String>) -> Result<RunCfg> 
     Ok(cfg)
 }
 
+/// Where a traced run exports to: `--trace-out`, else bench_out/trace.
+fn trace_out_dir(cfg: &RunCfg) -> std::path::PathBuf {
+    cfg.train
+        .trace_out
+        .clone()
+        .unwrap_or_else(|| std::path::PathBuf::from("bench_out").join("trace"))
+}
+
 fn cmd_train(kv: &std::collections::BTreeMap<String, String>) -> Result<()> {
     let cfg = build_cfg(kv)?;
+    if cfg.train.trace {
+        // probe --trace-out up front: an unwritable path is a typed
+        // warning (TraceError::Unwritable), never a panic mid-epoch —
+        // the run proceeds traced and export re-warns at the end
+        if let Err(e) = flextp::trace::validate_out(&trace_out_dir(&cfg)) {
+            eprintln!("warning: {e}; training continues, trace export will be skipped");
+        }
+    }
     let strategy = cfg.balancer.strategy.name();
     println!(
         "flextp train: model={} strategy={} epochs={} iters={}",
@@ -264,15 +304,62 @@ fn cmd_train(kv: &std::collections::BTreeMap<String, String>) -> Result<()> {
         .join(format!("train_{}_{}.json", t.model().name, strategy));
     report.save_json(&out).context("saving report")?;
     println!("report: {}", out.display());
+    if let Some(tr) = &t.tracer {
+        let tr = tr.lock().expect("tracer lock");
+        if tr.spans_on() {
+            let attr = flextp::trace::report::Attribution::from_spans(tr.merged());
+            print!("{}", attr.render());
+            if tr.dropped() > 0 {
+                println!(
+                    "trace: {} span(s) dropped at --trace-ring capacity (raise --trace-ring)",
+                    tr.dropped()
+                );
+            }
+            match flextp::trace::export::write_outputs(&tr, &trace_out_dir(&t.cfg)) {
+                Ok((jsonl, perfetto)) => {
+                    println!("trace: {} (JSONL; flextp trace report {})", jsonl.display(), jsonl.display());
+                    println!("trace: {} (Perfetto; open at https://ui.perfetto.dev)", perfetto.display());
+                }
+                Err(e) => eprintln!("warning: {e}; trace not exported"),
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `flextp trace report <trace.jsonl>` — parse an exported JSONL trace
+/// and print the per-rank/per-phase attribution tables with the
+/// straggler verdict per epoch.
+fn cmd_trace(pos: &[String], kv: &std::collections::BTreeMap<String, String>) -> Result<()> {
+    let sub = pos.get(1).map(String::as_str).unwrap_or("report");
+    if sub != "report" {
+        bail!("unknown trace subcommand '{sub}' (try: flextp trace report <trace.jsonl>)");
+    }
+    let path = pos
+        .get(2)
+        .cloned()
+        .or_else(|| kv.get("in").cloned())
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "flextp trace report: missing trace file \
+                 (e.g. flextp trace report bench_out/trace/trace.jsonl)"
+            )
+        })?;
+    let path = std::path::PathBuf::from(path);
+    let text =
+        std::fs::read_to_string(&path).with_context(|| format!("reading {}", path.display()))?;
+    let spans = flextp::trace::export::parse_jsonl(&text, &path)?;
+    println!("{}: {} span(s)", path.display(), spans.len());
+    print!("{}", flextp::trace::report::Attribution::from_spans(spans.iter()).render());
     Ok(())
 }
 
 fn cmd_sweep(kv: &std::collections::BTreeMap<String, String>) -> Result<()> {
     use flextp::bench::sweep;
     // reject typos up front (cmd_train gets this from apply_overrides)
-    const KNOWN: [&str; 10] = [
+    const KNOWN: [&str; 11] = [
         "preset", "scenarios", "strategies", "model", "epochs", "iters",
-        "eval-iters", "seed", "time-model", "rank-exe",
+        "eval-iters", "seed", "time-model", "rank-exe", "trace",
     ];
     for k in kv.keys() {
         if k != "out" && !KNOWN.contains(&k.as_str()) {
@@ -313,6 +400,9 @@ fn cmd_sweep(kv: &std::collections::BTreeMap<String, String>) -> Result<()> {
     }
     if let Some(v) = kv.get("rank-exe") {
         spec.rank_exe = Some(std::path::PathBuf::from(v));
+    }
+    if let Some(v) = kv.get("trace") {
+        spec.trace = v.parse().context("trace")?;
     }
     println!(
         "flextp sweep: preset={} model={} {} scenario(s) × {} strategy cell(s), \

@@ -72,6 +72,12 @@ impl EpochMetrics {
 
 /// One `--timeline` sample: contention vs runtime, per iteration — the
 /// raw material for plotting χ against RT and replan events.
+///
+/// Since the trace layer (DESIGN.md §17) these are synthesized by
+/// `trace::Tracer::end_iter` from the same per-rank charge stream that
+/// feeds `--trace` spans — one event stream, two views.  The fold is
+/// bitwise-exact: the tracer accumulates the identical f64 charges in
+/// the identical order the SimClocks do.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct IterSample {
     /// global iteration index

@@ -1,0 +1,210 @@
+//! Trace serialization: newline-JSONL (scripting) and Chrome/Perfetto
+//! `trace.json` (load via https://ui.perfetto.dev or chrome://tracing).
+//!
+//! Both exports walk [`Tracer::merged`], so file order is the
+//! deterministic (t0, rank, seq) merge order.  JSONL can be emitted with
+//! or without the `wall_us` field: determinism suites compare the
+//! without-wall form byte-for-byte across `--threads`.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{obj, Json};
+
+use super::{Kind, Span, TraceError, Tracer};
+
+/// One span as a JSONL object (alphabetical keys via the BTreeMap
+/// emitter, so emission is deterministic).
+pub fn span_to_json(s: &Span, with_wall: bool) -> Json {
+    let mut pairs = vec![
+        ("rank", Json::from(s.rank as usize)),
+        ("epoch", Json::from(s.epoch as usize)),
+        ("giter", Json::from(s.giter as usize)),
+        ("kind", Json::from(s.kind.as_str())),
+        ("label", Json::from(s.label.as_str())),
+        ("layer", Json::Num(s.layer as f64)),
+        ("t0", Json::Num(s.t0)),
+        ("dur", Json::Num(s.dur)),
+        ("bytes", Json::from(s.bytes as usize)),
+        ("chi", Json::Num(s.chi)),
+    ];
+    if with_wall {
+        pairs.push(("wall_us", Json::from(s.wall_us as usize)));
+    }
+    obj(pairs)
+}
+
+/// Parse one JSONL line back into a [`Span`] (`wall_us` optional — the
+/// without-wall export form parses to `wall_us == 0`).
+pub fn span_from_json(v: &Json) -> anyhow::Result<Span> {
+    let kind_s = v.get("kind")?.str()?;
+    let kind = Kind::parse(kind_s)
+        .ok_or_else(|| anyhow::anyhow!("unknown span kind '{kind_s}'"))?;
+    Ok(Span {
+        rank: v.get("rank")?.usize()? as u32,
+        epoch: v.get("epoch")?.usize()? as u32,
+        giter: v.get("giter")?.usize()? as u64,
+        kind,
+        label: v.get("label")?.str()?.to_string(),
+        layer: v.get("layer")?.num()? as i32,
+        t0: v.get("t0")?.num()?,
+        dur: v.get("dur")?.num()?,
+        bytes: v.get("bytes")?.usize()? as u64,
+        chi: v.get("chi")?.num()?,
+        wall_us: match v.opt("wall_us") {
+            Some(w) => w.usize()? as u64,
+            None => 0,
+        },
+    })
+}
+
+/// Merged spans as newline-JSONL text.
+pub fn to_jsonl(tracer: &Tracer, with_wall: bool) -> String {
+    let mut out = String::new();
+    for s in tracer.merged() {
+        out.push_str(&span_to_json(s, with_wall).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a JSONL trace file's text (written by [`to_jsonl`]).
+pub fn parse_jsonl(text: &str, path: &Path) -> Result<Vec<Span>, TraceError> {
+    let mut spans = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line).map_err(|e| TraceError::Malformed {
+            path: path.to_path_buf(),
+            reason: format!("line {}: {e}", i + 1),
+        })?;
+        spans.push(span_from_json(&v).map_err(|e| TraceError::Malformed {
+            path: path.to_path_buf(),
+            reason: format!("line {}: {e}", i + 1),
+        })?);
+    }
+    Ok(spans)
+}
+
+/// Merged spans as a Chrome/Perfetto trace: complete events (`ph:"X"`)
+/// on pid 0, one tid lane per rank, timestamps in µs of SimClock.
+pub fn to_perfetto(tracer: &Tracer) -> String {
+    let mut events: Vec<Json> = Vec::new();
+    // thread_name metadata so Perfetto labels lanes "rank N"
+    for r in 0..tracer.lanes() {
+        events.push(obj([
+            ("ph", Json::from("M")),
+            ("name", Json::from("thread_name")),
+            ("pid", Json::from(0usize)),
+            ("tid", Json::from(r)),
+            ("args", obj([("name", Json::from(format!("rank {r}")))])),
+        ]));
+    }
+    for s in tracer.merged() {
+        events.push(obj([
+            ("ph", Json::from("X")),
+            ("name", Json::from(s.label.as_str())),
+            ("cat", Json::from(s.kind.as_str())),
+            ("ts", Json::Num(s.t0 * 1e6)),
+            ("dur", Json::Num(s.dur * 1e6)),
+            ("pid", Json::from(0usize)),
+            ("tid", Json::from(s.rank as usize)),
+            (
+                "args",
+                obj([
+                    ("epoch", Json::from(s.epoch as usize)),
+                    ("giter", Json::from(s.giter as usize)),
+                    ("layer", Json::Num(s.layer as f64)),
+                    ("bytes", Json::from(s.bytes as usize)),
+                    ("chi", Json::Num(s.chi)),
+                    ("wall_us", Json::from(s.wall_us as usize)),
+                ]),
+            ),
+        ]));
+    }
+    obj([
+        ("displayTimeUnit", Json::from("ms")),
+        ("traceEvents", Json::Arr(events)),
+    ])
+    .to_string()
+}
+
+/// Write `trace.jsonl` + `trace.json` (Perfetto) under `dir`.  Returns
+/// the two paths; any I/O failure maps to the typed
+/// [`TraceError::Unwritable`] so callers warn instead of panicking.
+pub fn write_outputs(tracer: &Tracer, dir: &Path) -> Result<(PathBuf, PathBuf), TraceError> {
+    super::validate_out(dir)?;
+    let unwritable = |p: &Path, e: std::io::Error| TraceError::Unwritable {
+        path: p.to_path_buf(),
+        reason: e.to_string(),
+    };
+    let jsonl = dir.join("trace.jsonl");
+    std::fs::write(&jsonl, to_jsonl(tracer, true)).map_err(|e| unwritable(&jsonl, e))?;
+    let perfetto = dir.join("trace.json");
+    std::fs::write(&perfetto, to_perfetto(tracer)).map_err(|e| unwritable(&perfetto, e))?;
+    Ok((jsonl, perfetto))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_tracer() -> Tracer {
+        let mut tr = Tracer::new(2, 64, true, false);
+        tr.begin_iter(0, 0, 0, 0.0, &[1.0, 6.0]);
+        tr.compute(0, Kind::Compute, "attn_fwd", 0, 0.1, 0.1, 1.0);
+        tr.compute(1, Kind::Compute, "attn_fwd", 0, 0.6, 0.6, 6.0);
+        tr.comm_wait(0, "attn_fwd", 0.1, 0.5);
+        tr.comm_xfer(0, Kind::CommXfer, "attn_fwd", 0.6, 0.01, 1024);
+        tr.comm_xfer(1, Kind::CommXfer, "attn_fwd", 0.6, 0.01, 1024);
+        tr.event(0, Kind::Churn, "transition:2->1", 0, 0, 0.61, 0.0, 0);
+        tr
+    }
+
+    #[test]
+    fn jsonl_roundtrips_bitwise() {
+        let tr = sample_tracer();
+        let text = to_jsonl(&tr, true);
+        let spans = parse_jsonl(&text, Path::new("mem")).unwrap();
+        let merged = tr.merged();
+        assert_eq!(spans.len(), merged.len());
+        for (a, b) in spans.iter().zip(merged.iter()) {
+            assert!(a.sim_eq(b), "{a:?} != {b:?}");
+            assert_eq!(a.wall_us, b.wall_us);
+        }
+    }
+
+    #[test]
+    fn without_wall_form_has_no_wall_field() {
+        let tr = sample_tracer();
+        let text = to_jsonl(&tr, false);
+        assert!(!text.contains("wall_us"));
+        // and still parses (wall defaults to 0)
+        let spans = parse_jsonl(&text, Path::new("mem")).unwrap();
+        assert!(spans.iter().all(|s| s.wall_us == 0));
+    }
+
+    #[test]
+    fn perfetto_shape() {
+        let tr = sample_tracer();
+        let v = Json::parse(&to_perfetto(&tr)).unwrap();
+        let events = v.get("traceEvents").unwrap().arr().unwrap();
+        // 2 thread_name metadata + 7 spans
+        assert_eq!(events.len(), 2 + tr.merged().len());
+        let first_span = events
+            .iter()
+            .find(|e| e.get("ph").unwrap().str().unwrap() == "X")
+            .unwrap();
+        assert_eq!(first_span.get("pid").unwrap().usize().unwrap(), 0);
+        assert!(first_span.get("ts").unwrap().num().unwrap() >= 0.0);
+        assert!(first_span.opt("cat").is_some());
+    }
+
+    #[test]
+    fn malformed_jsonl_is_typed() {
+        let err = parse_jsonl("{not json}\n", Path::new("bad.jsonl")).unwrap_err();
+        assert!(matches!(err, TraceError::Malformed { .. }));
+        let err2 = parse_jsonl("{\"kind\":\"nope\"}\n", Path::new("bad.jsonl")).unwrap_err();
+        assert!(err2.to_string().contains("Malformed"));
+    }
+}

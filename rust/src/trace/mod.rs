@@ -1,0 +1,638 @@
+//! Zero-observer-effect tracing (DESIGN.md §17).
+//!
+//! A per-rank span recorder for the simulated cluster: every SimClock
+//! charge the trainer or the collectives make can mirror itself as a
+//! [`Span`] — phase compute (with the rank's χ), the wait-vs-transfer
+//! split of each collective, balancer replans (Ω₁), migration traffic,
+//! checkpoint/churn transitions, and memory events.  Spans land in
+//! per-rank ring buffers and are merged on the coordinator in a
+//! deterministic order for export (Perfetto `trace.json`, newline-JSONL)
+//! and for the `flextp trace report` attribution table.
+//!
+//! # The zero-observer contract
+//!
+//! Tracing must never perturb the simulation: with `--trace` on or off,
+//! at `--threads 1` or N, on either transport, losses / SimClocks /
+//! `CommStats` stay **bitwise identical** (`tests/trace_determinism.rs`).
+//! Three properties make that true by construction:
+//!
+//! * the recorder only *reads* clocks — a span records `now(r)` and the
+//!   already-computed charge, it never advances anything;
+//! * recording happens exclusively on the coordinator thread, inside the
+//!   same rank-order replay loops that do the clock accounting, so the
+//!   event stream (and every f64 accumulation) is identical at any
+//!   `--threads`;
+//! * wall-clock timestamps live in a single non-deterministic field
+//!   ([`Span::wall_us`]) that every parity diff and [`Span::sim_eq`]
+//!   exclude.
+//!
+//! "Lock-free-enough": the rings sit behind one `Mutex` shared by the
+//! trainer and `Comm`, but only the coordinator thread ever takes it —
+//! pool workers compute, they never trace — so the lock is uncontended
+//! by design rather than by a lock-free structure.
+//!
+//! The `--timeline` per-iteration sampler is a *view* over this same
+//! event stream: [`Tracer::begin_iter`]/[`Tracer::end_iter`] accumulate
+//! the per-rank compute charges (in the exact order the clocks do) and
+//! synthesize the [`IterSample`]s that used to be built ad hoc in the
+//! trainer.
+
+pub mod export;
+pub mod report;
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+
+use crate::metrics::IterSample;
+
+/// Typed tracing fault (satellite: an unwritable `--trace-out` is a
+/// warning, never a panic mid-epoch).
+#[derive(Debug)]
+pub enum TraceError {
+    /// `--trace-out` cannot be created or written.
+    Unwritable { path: PathBuf, reason: String },
+    /// a trace file handed to `flextp trace report` does not parse
+    Malformed { path: PathBuf, reason: String },
+}
+
+impl std::fmt::Display for TraceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TraceError::Unwritable { path, reason } => {
+                write!(f, "TraceError::Unwritable: --trace-out '{}' is not writable ({reason})",
+                       path.display())
+            }
+            TraceError::Malformed { path, reason } => {
+                write!(f, "TraceError::Malformed: trace file '{}' did not parse ({reason})",
+                       path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
+
+/// Span category — what kind of SimClock time (or instant event) this is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// phase compute charged to the rank's clock (χ-skewed GEMMs,
+    /// replicated embed/head, migration receiver slices)
+    Compute,
+    /// activation-checkpointing surcharge (DESIGN.md §16)
+    Recompute,
+    /// pre-collective barrier wait (the straggler tax on the fast ranks)
+    CommWait,
+    /// the collective's own α-β transfer time
+    CommXfer,
+    /// detection statistics collectives (T_i all-gathers)
+    Detect,
+    /// balancer replan overhead Ω₁
+    Replan,
+    /// migration weight-movement collectives (bcast/scatter/gather)
+    Migration,
+    /// worker churn: join/leave/fail events and E→E' transitions
+    Churn,
+    /// memory events: squeezes, OOM evictions
+    Mem,
+    /// a `.flexckpt` snapshot write
+    Checkpoint,
+}
+
+impl Kind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Kind::Compute => "compute",
+            Kind::Recompute => "recompute",
+            Kind::CommWait => "comm_wait",
+            Kind::CommXfer => "comm_xfer",
+            Kind::Detect => "detect",
+            Kind::Replan => "replan",
+            Kind::Migration => "migration",
+            Kind::Churn => "churn",
+            Kind::Mem => "mem",
+            Kind::Checkpoint => "checkpoint",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Kind> {
+        Some(match s {
+            "compute" => Kind::Compute,
+            "recompute" => Kind::Recompute,
+            "comm_wait" => Kind::CommWait,
+            "comm_xfer" => Kind::CommXfer,
+            "detect" => Kind::Detect,
+            "replan" => Kind::Replan,
+            "migration" => Kind::Migration,
+            "churn" => Kind::Churn,
+            "mem" => Kind::Mem,
+            "checkpoint" => Kind::Checkpoint,
+            _ => return None,
+        })
+    }
+}
+
+/// One recorded interval (or instant, `dur == 0`) on a rank's timeline.
+///
+/// `t0`/`dur` are **SimClock** seconds, cumulative across epochs (the
+/// tracer adds the per-epoch frontier so exported timelines don't fold
+/// back on themselves at epoch resets).  `wall_us` is the only
+/// non-deterministic field — microseconds of real time since the first
+/// span — and is excluded from every determinism comparison.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub rank: u32,
+    pub epoch: u32,
+    pub giter: u64,
+    pub kind: Kind,
+    /// phase / strategy-action label ("attn_fwd", "mig_slice",
+    /// "transition:4->2", "oom-evict:r2", …)
+    pub label: String,
+    /// transformer block index, -1 when not layer-scoped
+    pub layer: i32,
+    /// SimClock start, cumulative across epochs (seconds)
+    pub t0: f64,
+    /// SimClock duration (seconds; 0 for instant events)
+    pub dur: f64,
+    /// counter: payload bytes for comm spans, capacity/need bytes for
+    /// memory events, 0 otherwise
+    pub bytes: u64,
+    /// the rank's χ for compute spans (1.0 elsewhere) — `dur·(1−1/χ)`
+    /// is the span's injected-slowdown share
+    pub chi: f64,
+    /// wall-clock microseconds since tracing started — the ONE
+    /// non-deterministic field, excluded from parity diffs
+    pub wall_us: u64,
+}
+
+impl Span {
+    /// Deterministic-field equality: everything except `wall_us`.
+    pub fn sim_eq(&self, o: &Span) -> bool {
+        self.rank == o.rank
+            && self.epoch == o.epoch
+            && self.giter == o.giter
+            && self.kind == o.kind
+            && self.label == o.label
+            && self.layer == o.layer
+            && self.t0.to_bits() == o.t0.to_bits()
+            && self.dur.to_bits() == o.dur.to_bits()
+            && self.bytes == o.bytes
+            && self.chi.to_bits() == o.chi.to_bits()
+    }
+
+    /// χ-induced slowdown inside this span: the extra seconds versus the
+    /// same work at χ=1 (`dur` already includes the skew, so the base
+    /// work is `dur/χ`).
+    pub fn chi_excess_s(&self) -> f64 {
+        if self.chi > 1.0 { self.dur * (1.0 - 1.0 / self.chi) } else { 0.0 }
+    }
+}
+
+/// Fixed-capacity per-rank span buffer: oldest spans drop first, with a
+/// drop counter so truncation is never silent.
+#[derive(Debug)]
+struct RankRing {
+    cap: usize,
+    next_seq: u64,
+    dropped: u64,
+    buf: VecDeque<(u64, Span)>,
+}
+
+impl RankRing {
+    fn new(cap: usize) -> RankRing {
+        RankRing { cap: cap.max(1), next_seq: 0, dropped: 0, buf: VecDeque::new() }
+    }
+
+    fn push(&mut self, span: Span) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back((self.next_seq, span));
+        self.next_seq += 1;
+    }
+}
+
+/// The recorder.  Owned by the trainer (shared with `Comm` behind
+/// `Arc<Mutex<..>>`); all methods are cheap no-ops while inactive
+/// (warmup) or when the relevant view (`--trace` spans, `--timeline`
+/// samples) is off.
+#[derive(Debug)]
+pub struct Tracer {
+    /// record full spans into the rings (`--trace`)
+    spans_on: bool,
+    /// synthesize per-iteration [`IterSample`]s (`--timeline`)
+    timeline_on: bool,
+    /// false while warmup_and_pretest's untimed iteration runs
+    active: bool,
+    ring_cap: usize,
+    rings: Vec<RankRing>,
+    /// cumulative SimClock of completed epochs (clocks reset per epoch;
+    /// spans record `base + raw` so exported time is monotone)
+    clock_base: f64,
+    cur_giter: u64,
+    cur_epoch: u32,
+    cur_iter: u32,
+    in_iter: bool,
+    iter_start: f64,
+    /// per-rank compute accumulated this iteration, in the exact f64
+    /// order the SimClocks accumulate `iter_compute` — what makes the
+    /// folded `--timeline` bitwise-identical to the pre-trace sampler
+    iter_t: Vec<f64>,
+    iter_chi: Vec<f64>,
+    wall0: std::time::Instant,
+}
+
+impl Tracer {
+    pub fn new(e: usize, ring_cap: usize, spans_on: bool, timeline_on: bool) -> Tracer {
+        Tracer {
+            spans_on,
+            timeline_on,
+            active: true,
+            ring_cap,
+            rings: (0..e).map(|_| RankRing::new(ring_cap)).collect(),
+            clock_base: 0.0,
+            cur_giter: 0,
+            cur_epoch: 0,
+            cur_iter: 0,
+            in_iter: false,
+            iter_start: 0.0,
+            iter_t: vec![0.0; e],
+            iter_chi: vec![1.0; e],
+            wall0: std::time::Instant::now(),
+        }
+    }
+
+    /// Suppress/resume recording (the trainer parks the tracer during
+    /// the untimed warmup iteration, exactly like χ accounting).
+    pub fn set_active(&mut self, on: bool) {
+        self.active = on;
+    }
+
+    /// Should `Comm` bother building wait/transfer spans?
+    pub fn comm_enabled(&self) -> bool {
+        self.active && self.spans_on
+    }
+
+    /// Grow the per-rank rings to at least `e` lanes (elastic re-shard /
+    /// rejoin).  Shrinking never discards history: a departed rank's
+    /// lane stays exportable.
+    pub fn ensure_ranks(&mut self, e: usize) {
+        while self.rings.len() < e {
+            self.rings.push(RankRing::new(self.ring_cap));
+        }
+    }
+
+    /// Fold a completed epoch's SimClock frontier into the cumulative
+    /// base — called right before the trainer resets the clocks.
+    pub fn epoch_rollover(&mut self, frontier: f64) {
+        self.clock_base += frontier;
+    }
+
+    /// Start an iteration: snapshot χ and the clock frontier, reset the
+    /// per-rank compute accumulators (sized to the current group).
+    pub fn begin_iter(&mut self, giter: u64, epoch: u32, iter: u32, frontier: f64, chi: &[f64]) {
+        if !self.active {
+            return;
+        }
+        self.cur_giter = giter;
+        self.cur_epoch = epoch;
+        self.cur_iter = iter;
+        self.in_iter = true;
+        self.iter_start = frontier;
+        self.iter_t.clear();
+        self.iter_t.resize(chi.len(), 0.0);
+        self.iter_chi.clear();
+        self.iter_chi.extend_from_slice(chi);
+        self.ensure_ranks(chi.len());
+    }
+
+    /// Close the iteration; under `--timeline` returns the synthesized
+    /// sample (the view the run report serializes).
+    pub fn end_iter(&mut self, frontier: f64, replanned: bool) -> Option<IterSample> {
+        if !(self.active && self.in_iter) {
+            return None;
+        }
+        self.in_iter = false;
+        if !self.timeline_on {
+            return None;
+        }
+        Some(IterSample {
+            giter: self.cur_giter,
+            epoch: self.cur_epoch as usize,
+            iter: self.cur_iter as usize,
+            chi: self.iter_chi.clone(),
+            t_iter: self.iter_t.clone(),
+            rt_iter_s: frontier - self.iter_start,
+            replanned,
+        })
+    }
+
+    fn wall_us(&self) -> u64 {
+        self.wall0.elapsed().as_micros() as u64
+    }
+
+    fn push(&mut self, rank: usize, span: Span) {
+        if rank < self.rings.len() {
+            self.rings[rank].push(span);
+        }
+    }
+
+    /// Mirror a compute charge: `dur` is the already-skewed SimClock
+    /// seconds just advanced on `rank` (so `t_end_raw - dur` is the span
+    /// start), `chi` the injector's multiplier for it.  Also feeds the
+    /// `--timeline` accumulator — in charge order, so the folded sampler
+    /// stays bitwise equal to summing the clock's own `iter_compute`.
+    pub fn compute(
+        &mut self,
+        rank: usize,
+        kind: Kind,
+        label: &'static str,
+        layer: i32,
+        t_end_raw: f64,
+        dur: f64,
+        chi: f64,
+    ) {
+        if !self.active {
+            return;
+        }
+        if rank < self.iter_t.len() {
+            self.iter_t[rank] += dur;
+        }
+        if !self.spans_on {
+            return;
+        }
+        let span = Span {
+            rank: rank as u32,
+            epoch: self.cur_epoch,
+            giter: self.cur_giter,
+            kind,
+            label: label.to_string(),
+            layer,
+            t0: self.clock_base + (t_end_raw - dur),
+            dur,
+            bytes: 0,
+            chi,
+            wall_us: self.wall_us(),
+        };
+        self.push(rank, span);
+    }
+
+    /// Pre-collective barrier wait on `rank` (skipped for zero waits —
+    /// the frontier rank by definition waits for nobody).
+    pub fn comm_wait(&mut self, rank: usize, label: &str, t_raw: f64, dur: f64) {
+        if !self.comm_enabled() {
+            return;
+        }
+        let span = Span {
+            rank: rank as u32,
+            epoch: self.cur_epoch,
+            giter: self.cur_giter,
+            kind: Kind::CommWait,
+            label: label.to_string(),
+            layer: -1,
+            t0: self.clock_base + t_raw,
+            dur,
+            bytes: 0,
+            chi: 1.0,
+            wall_us: self.wall_us(),
+        };
+        self.push(rank, span);
+    }
+
+    /// The collective's transfer phase on `rank`: `bytes` is the
+    /// payload, `kind` distinguishes branch all-reduces ([`Kind::CommXfer`]),
+    /// detection gathers ([`Kind::Detect`]) and migration weight movement
+    /// ([`Kind::Migration`]).
+    pub fn comm_xfer(
+        &mut self,
+        rank: usize,
+        kind: Kind,
+        label: &str,
+        t_raw: f64,
+        dur: f64,
+        bytes: u64,
+    ) {
+        if !self.comm_enabled() {
+            return;
+        }
+        let span = Span {
+            rank: rank as u32,
+            epoch: self.cur_epoch,
+            giter: self.cur_giter,
+            kind,
+            label: label.to_string(),
+            layer: -1,
+            t0: self.clock_base + t_raw,
+            dur,
+            bytes,
+            chi: 1.0,
+            wall_us: self.wall_us(),
+        };
+        self.push(rank, span);
+    }
+
+    /// A control event with an explicit cursor: replans (Ω₁, `dur > 0`),
+    /// churn/memory/checkpoint instants (`dur == 0`).  `t_end_raw` is
+    /// the rank's clock after any charge, like [`Tracer::compute`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn event(
+        &mut self,
+        rank: usize,
+        kind: Kind,
+        label: &str,
+        giter: u64,
+        epoch: u32,
+        t_end_raw: f64,
+        dur: f64,
+        bytes: u64,
+    ) {
+        if !(self.active && self.spans_on) {
+            return;
+        }
+        let span = Span {
+            rank: rank as u32,
+            epoch,
+            giter,
+            kind,
+            label: label.to_string(),
+            layer: -1,
+            t0: self.clock_base + (t_end_raw - dur),
+            dur,
+            bytes,
+            chi: 1.0,
+            wall_us: self.wall_us(),
+        };
+        self.push(rank, span);
+    }
+
+    /// Were full spans requested (`--trace`)?
+    pub fn spans_on(&self) -> bool {
+        self.spans_on
+    }
+
+    /// Total spans dropped to ring capacity across all ranks (0 in any
+    /// normally-sized run; reported so truncation is never silent).
+    pub fn dropped(&self) -> u64 {
+        self.rings.iter().map(|r| r.dropped).sum()
+    }
+
+    /// Number of rank lanes ever recorded.
+    pub fn lanes(&self) -> usize {
+        self.rings.len()
+    }
+
+    /// Coordinator-side merge in deterministic order: primary key is the
+    /// cumulative SimClock start, ties broken by (rank, per-rank emission
+    /// sequence).  Every key is a pure function of the simulation, so the
+    /// merged order — like the spans themselves — is identical at any
+    /// `--threads` and on either transport.
+    pub fn merged(&self) -> Vec<&Span> {
+        let mut all: Vec<(&Span, u32, u64)> = Vec::new();
+        for ring in &self.rings {
+            for (seq, span) in &ring.buf {
+                all.push((span, span.rank, *seq));
+            }
+        }
+        all.sort_by(|a, b| {
+            a.0.t0
+                .total_cmp(&b.0.t0)
+                .then(a.1.cmp(&b.1))
+                .then(a.2.cmp(&b.2))
+        });
+        all.into_iter().map(|(s, _, _)| s).collect()
+    }
+}
+
+/// Probe that `dir` can be created and written — the early check behind
+/// the typed `--trace-out` warning (satellite: unwritable paths warn at
+/// startup and at export, never panic mid-epoch).
+pub fn validate_out(dir: &std::path::Path) -> Result<(), TraceError> {
+    std::fs::create_dir_all(dir).map_err(|e| TraceError::Unwritable {
+        path: dir.to_path_buf(),
+        reason: e.to_string(),
+    })?;
+    let probe = dir.join(".trace-probe");
+    std::fs::write(&probe, b"probe").map_err(|e| TraceError::Unwritable {
+        path: dir.to_path_buf(),
+        reason: e.to_string(),
+    })?;
+    let _ = std::fs::remove_file(&probe);
+    Ok(())
+}
+
+/// Default per-rank ring capacity (`--trace-ring`): generous for any
+/// sweep-sized run (a vit-tiny iteration is ~60 spans/rank).
+pub const DEFAULT_RING_CAP: usize = 65_536;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(rank: u32, t0: f64, label: &str) -> Span {
+        Span {
+            rank,
+            epoch: 0,
+            giter: 0,
+            kind: Kind::Compute,
+            label: label.to_string(),
+            layer: -1,
+            t0,
+            dur: 0.1,
+            bytes: 0,
+            chi: 1.0,
+            wall_us: 0,
+        }
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let mut r = RankRing::new(2);
+        r.push(span(0, 0.0, "a"));
+        r.push(span(0, 1.0, "b"));
+        r.push(span(0, 2.0, "c"));
+        assert_eq!(r.dropped, 1);
+        let labels: Vec<&str> = r.buf.iter().map(|(_, s)| s.label.as_str()).collect();
+        assert_eq!(labels, vec!["b", "c"]);
+    }
+
+    #[test]
+    fn merge_is_time_then_rank_then_seq() {
+        let mut tr = Tracer::new(2, 16, true, false);
+        tr.compute(1, Kind::Compute, "late", -1, 2.0, 1.0, 1.0); // t0=1.0
+        tr.compute(0, Kind::Compute, "early", -1, 0.5, 0.5, 1.0); // t0=0.0
+        tr.compute(0, Kind::Compute, "tie_r0", -1, 2.0, 1.0, 1.0); // t0=1.0
+        let order: Vec<&str> = tr.merged().iter().map(|s| s.label.as_str()).collect();
+        assert_eq!(order, vec!["early", "tie_r0", "late"]);
+    }
+
+    #[test]
+    fn inactive_tracer_records_nothing() {
+        let mut tr = Tracer::new(1, 16, true, true);
+        tr.set_active(false);
+        tr.begin_iter(0, 0, 0, 0.0, &[1.0]);
+        tr.compute(0, Kind::Compute, "x", -1, 1.0, 1.0, 1.0);
+        assert!(tr.end_iter(1.0, false).is_none());
+        assert!(tr.merged().is_empty());
+    }
+
+    #[test]
+    fn timeline_sample_accumulates_in_charge_order() {
+        let mut tr = Tracer::new(2, 16, false, true);
+        tr.begin_iter(7, 1, 3, 10.0, &[1.0, 4.0]);
+        tr.compute(0, Kind::Compute, "a", 0, 10.1, 0.1, 1.0);
+        tr.compute(1, Kind::Compute, "a", 0, 10.4, 0.4, 4.0);
+        tr.compute(1, Kind::Recompute, "recompute", -1, 10.6, 0.2, 1.0);
+        let s = tr.end_iter(10.8, true).expect("timeline sample");
+        assert_eq!(s.giter, 7);
+        assert_eq!((s.epoch, s.iter), (1, 3));
+        assert_eq!(s.chi, vec![1.0, 4.0]);
+        assert!((s.t_iter[0] - 0.1).abs() < 1e-12);
+        assert!((s.t_iter[1] - 0.6).abs() < 1e-12);
+        assert!((s.rt_iter_s - 0.8).abs() < 1e-12);
+        assert!(s.replanned);
+        // spans_on is false: a timeline-only tracer buffers no spans
+        assert!(tr.merged().is_empty());
+    }
+
+    #[test]
+    fn epoch_rollover_offsets_t0() {
+        let mut tr = Tracer::new(1, 16, true, false);
+        tr.compute(0, Kind::Compute, "e0", -1, 1.0, 1.0, 1.0);
+        tr.epoch_rollover(5.0);
+        tr.compute(0, Kind::Compute, "e1", -1, 1.0, 1.0, 1.0); // raw t0=0 again
+        let m = tr.merged();
+        assert_eq!(m[0].t0, 0.0);
+        assert_eq!(m[1].t0, 5.0);
+    }
+
+    #[test]
+    fn sim_eq_ignores_wall_only() {
+        let a = span(0, 1.0, "x");
+        let mut b = a.clone();
+        b.wall_us = 999;
+        assert!(a.sim_eq(&b));
+        b.dur += 1e-9;
+        assert!(!a.sim_eq(&b));
+    }
+
+    #[test]
+    fn unwritable_out_is_typed() {
+        let dir = std::env::temp_dir().join(format!("flextp_trace_probe_{}", std::process::id()));
+        std::fs::write(&dir, b"a file, not a dir").unwrap();
+        let err = validate_out(&dir.join("sub")).expect_err("must be unwritable");
+        assert!(matches!(err, TraceError::Unwritable { .. }));
+        assert!(err.to_string().contains("Unwritable"));
+        let _ = std::fs::remove_file(&dir);
+    }
+
+    #[test]
+    fn chi_excess_matches_injected_slowdown() {
+        // χ=6 on 0.6s of skewed time: base work 0.1s, excess 0.5s
+        let mut s = span(0, 0.0, "x");
+        s.dur = 0.6;
+        s.chi = 6.0;
+        assert!((s.chi_excess_s() - 0.5).abs() < 1e-12);
+        s.chi = 1.0;
+        assert_eq!(s.chi_excess_s(), 0.0);
+    }
+}

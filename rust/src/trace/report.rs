@@ -1,0 +1,380 @@
+//! Per-rank / per-phase attribution: the `flextp trace report` table and
+//! the per-cell phase-time summaries sweeps embed in
+//! `BENCH_scenarios.json`.
+//!
+//! One aggregation path serves both the in-memory tracer (end of a
+//! traced `flextp train`) and a parsed JSONL file (`flextp trace report
+//! <trace.jsonl>`), so the CLI and the sweep columns can never disagree.
+//!
+//! The headline number is the observability analogue of the paper's
+//! T_i/M_i monitor: per epoch, pick the rank with the most χ-induced
+//! compute slowdown, measure its *excess* compute SimClock over the
+//! fastest rank, and report what fraction of that excess the trace
+//! explains as χ-slowed compute (the matching peer-side all-reduce wait
+//! corroborates it from the other side of the barrier).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{obj, Json};
+use crate::util::table::TextTable;
+
+use super::{Kind, Span};
+
+/// Per-rank SimClock totals within one epoch.
+#[derive(Debug, Clone, Default)]
+pub struct RankAgg {
+    pub rank: u32,
+    /// all compute charged to the rank's clock (χ-skewed phases,
+    /// replicated embed/head, migration slices, recompute surcharge)
+    pub compute_s: f64,
+    /// the χ-induced share of `compute_s`: Σ dur·(1−1/χ)
+    pub chi_excess_s: f64,
+    /// activation-recompute surcharge (also counted in `compute_s`)
+    pub recompute_s: f64,
+    /// pre-collective barrier waits
+    pub wait_s: f64,
+    /// collective transfer time (branch all-reduces + detection gathers)
+    pub xfer_s: f64,
+    /// balancer replan overhead Ω₁
+    pub replan_s: f64,
+    /// migration weight-movement collectives
+    pub mig_s: f64,
+    /// bytes moved through collectives on this rank
+    pub comm_bytes: u64,
+    /// churn/memory/checkpoint instants observed
+    pub events: u32,
+}
+
+/// One epoch's attribution: per-rank totals plus the straggler verdict.
+#[derive(Debug, Clone)]
+pub struct EpochAttr {
+    pub epoch: u32,
+    pub ranks: Vec<RankAgg>,
+    /// rank with the largest χ-induced slowdown (None if χ never rose)
+    pub straggler: Option<u32>,
+    /// straggler compute excess over the fastest rank (s)
+    pub excess_s: f64,
+    /// the straggler's χ-induced slowdown (s)
+    pub chi_slowdown_s: f64,
+    /// mean all-reduce wait across the other ranks (s) — the barrier-side
+    /// image of the same straggle
+    pub peer_wait_s: f64,
+    /// % of `excess_s` explained by χ-slowed compute (100 when there is
+    /// no excess to explain)
+    pub attributed_pct: f64,
+}
+
+/// Whole-trace attribution (what `flextp trace report` renders).
+#[derive(Debug, Clone)]
+pub struct Attribution {
+    pub epochs: Vec<EpochAttr>,
+    pub spans: usize,
+}
+
+impl Attribution {
+    /// Aggregate any span stream (tracer-merged or JSONL-parsed).
+    pub fn from_spans<'a, I: IntoIterator<Item = &'a Span>>(spans: I) -> Attribution {
+        let mut by_epoch: BTreeMap<u32, BTreeMap<u32, RankAgg>> = BTreeMap::new();
+        let mut n = 0usize;
+        for s in spans {
+            n += 1;
+            let agg = by_epoch
+                .entry(s.epoch)
+                .or_default()
+                .entry(s.rank)
+                .or_insert_with(|| RankAgg { rank: s.rank, ..RankAgg::default() });
+            match s.kind {
+                Kind::Compute => {
+                    agg.compute_s += s.dur;
+                    agg.chi_excess_s += s.chi_excess_s();
+                }
+                Kind::Recompute => {
+                    agg.compute_s += s.dur;
+                    agg.recompute_s += s.dur;
+                }
+                Kind::CommWait => agg.wait_s += s.dur,
+                Kind::CommXfer | Kind::Detect => {
+                    agg.xfer_s += s.dur;
+                    agg.comm_bytes += s.bytes;
+                }
+                Kind::Replan => agg.replan_s += s.dur,
+                Kind::Migration => {
+                    agg.mig_s += s.dur;
+                    agg.comm_bytes += s.bytes;
+                }
+                Kind::Churn | Kind::Mem | Kind::Checkpoint => agg.events += 1,
+            }
+        }
+        let epochs = by_epoch
+            .into_iter()
+            .map(|(epoch, ranks)| {
+                let ranks: Vec<RankAgg> = ranks.into_values().collect();
+                EpochAttr::judge(epoch, ranks)
+            })
+            .collect();
+        Attribution { epochs, spans: n }
+    }
+
+    /// Render the per-epoch tables + straggler verdicts.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if self.epochs.is_empty() {
+            out.push_str("trace report: no spans (was the run traced with --trace?)\n");
+            return out;
+        }
+        for ep in &self.epochs {
+            let mut t = TextTable::new(
+                &format!("trace report — epoch {}", ep.epoch),
+                &[
+                    "rank", "compute_s", "chi_excess_s", "wait_s", "xfer_s", "replan_s",
+                    "mig_s", "recompute_s", "comm_MB", "events",
+                ],
+            );
+            for r in &ep.ranks {
+                t.row(&[
+                    r.rank.to_string(),
+                    format!("{:.4}", r.compute_s),
+                    format!("{:.4}", r.chi_excess_s),
+                    format!("{:.4}", r.wait_s),
+                    format!("{:.4}", r.xfer_s),
+                    format!("{:.4}", r.replan_s),
+                    format!("{:.4}", r.mig_s),
+                    format!("{:.4}", r.recompute_s),
+                    format!("{:.2}", r.comm_bytes as f64 / 1e6),
+                    r.events.to_string(),
+                ]);
+            }
+            out.push_str(&t.render());
+            out.push_str(&ep.verdict());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Straggler verdict of the epoch with the most excess to explain
+    /// (what sweeps and the acceptance check consume).
+    pub fn worst_epoch(&self) -> Option<&EpochAttr> {
+        self.epochs
+            .iter()
+            .filter(|e| e.straggler.is_some())
+            .max_by(|a, b| a.excess_s.total_cmp(&b.excess_s))
+    }
+
+    /// Whole-run phase totals, summed over epochs and ranks — the
+    /// per-cell summary sweeps embed as a `phases` object.
+    pub fn phase_totals(&self) -> PhaseTotals {
+        let mut p = PhaseTotals::default();
+        for ep in &self.epochs {
+            for r in &ep.ranks {
+                p.compute_s += r.compute_s;
+                p.chi_excess_s += r.chi_excess_s;
+                p.wait_s += r.wait_s;
+                p.xfer_s += r.xfer_s;
+                p.replan_s += r.replan_s;
+                p.mig_s += r.mig_s;
+                p.recompute_s += r.recompute_s;
+                p.comm_bytes += r.comm_bytes;
+                p.events += r.events as u64;
+            }
+        }
+        if let Some(w) = self.worst_epoch() {
+            p.straggler = w.straggler;
+            p.attributed_pct = w.attributed_pct;
+        }
+        p.spans = self.spans as u64;
+        p
+    }
+}
+
+impl EpochAttr {
+    fn judge(epoch: u32, ranks: Vec<RankAgg>) -> EpochAttr {
+        let straggler = ranks
+            .iter()
+            .max_by(|a, b| a.chi_excess_s.total_cmp(&b.chi_excess_s))
+            .filter(|r| r.chi_excess_s > 0.0)
+            .map(|r| r.rank);
+        let (mut excess_s, mut chi_slowdown_s, mut peer_wait_s, mut attributed_pct) =
+            (0.0, 0.0, 0.0, 100.0);
+        if let Some(s) = straggler {
+            let sagg = ranks.iter().find(|r| r.rank == s).expect("straggler agg");
+            let min_compute = ranks
+                .iter()
+                .map(|r| r.compute_s)
+                .fold(f64::INFINITY, f64::min);
+            excess_s = sagg.compute_s - min_compute;
+            chi_slowdown_s = sagg.chi_excess_s;
+            let peers: Vec<&RankAgg> = ranks.iter().filter(|r| r.rank != s).collect();
+            if !peers.is_empty() {
+                peer_wait_s = peers.iter().map(|r| r.wait_s).sum::<f64>() / peers.len() as f64;
+            }
+            attributed_pct = if excess_s > 1e-12 {
+                100.0 * chi_slowdown_s.min(excess_s) / excess_s
+            } else {
+                100.0
+            };
+        }
+        EpochAttr {
+            epoch,
+            ranks,
+            straggler,
+            excess_s,
+            chi_slowdown_s,
+            peer_wait_s,
+            attributed_pct,
+        }
+    }
+
+    /// One-line cause naming for the epoch.
+    pub fn verdict(&self) -> String {
+        match self.straggler {
+            Some(s) => format!(
+                "epoch {}: straggler rank {} — excess compute {:.4}s, {:.1}% attributed to \
+                 chi-slowed compute ({:.4}s); peers absorbed it as {:.4}s mean all-reduce wait\n",
+                self.epoch, s, self.excess_s, self.attributed_pct, self.chi_slowdown_s,
+                self.peer_wait_s
+            ),
+            None => format!("epoch {}: no injected straggler observed (chi stayed 1.0)\n", self.epoch),
+        }
+    }
+}
+
+/// Whole-run phase-time breakdown, serialized into sweep cells.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PhaseTotals {
+    pub compute_s: f64,
+    pub chi_excess_s: f64,
+    pub wait_s: f64,
+    pub xfer_s: f64,
+    pub replan_s: f64,
+    pub mig_s: f64,
+    pub recompute_s: f64,
+    pub comm_bytes: u64,
+    pub events: u64,
+    pub spans: u64,
+    pub straggler: Option<u32>,
+    pub attributed_pct: f64,
+}
+
+impl PhaseTotals {
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("compute_s", Json::Num(self.compute_s)),
+            ("chi_excess_s", Json::Num(self.chi_excess_s)),
+            ("wait_s", Json::Num(self.wait_s)),
+            ("xfer_s", Json::Num(self.xfer_s)),
+            ("replan_s", Json::Num(self.replan_s)),
+            ("mig_s", Json::Num(self.mig_s)),
+            ("recompute_s", Json::Num(self.recompute_s)),
+            ("comm_bytes", Json::from(self.comm_bytes as usize)),
+            ("events", Json::from(self.events as usize)),
+            ("spans", Json::from(self.spans as usize)),
+            (
+                "straggler",
+                match self.straggler {
+                    Some(r) => Json::from(r as usize),
+                    None => Json::Null,
+                },
+            ),
+            ("attributed_pct", Json::Num(self.attributed_pct)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(rank: u32, epoch: u32, kind: Kind, dur: f64, chi: f64) -> Span {
+        Span {
+            rank,
+            epoch,
+            giter: 0,
+            kind,
+            label: "x".to_string(),
+            layer: -1,
+            t0: 0.0,
+            dur,
+            bytes: 0,
+            chi,
+            wall_us: 0,
+        }
+    }
+
+    #[test]
+    fn attribution_names_the_chi_straggler() {
+        // rank 1 does the same base work (0.1s) at chi=6 -> 0.6s skewed;
+        // rank 0 waits out the difference at the barrier.
+        let spans = vec![
+            span(0, 0, Kind::Compute, 0.1, 1.0),
+            span(1, 0, Kind::Compute, 0.6, 6.0),
+            span(0, 0, Kind::CommWait, 0.5, 1.0),
+            span(0, 0, Kind::CommXfer, 0.01, 1.0),
+            span(1, 0, Kind::CommXfer, 0.01, 1.0),
+        ];
+        let a = Attribution::from_spans(spans.iter());
+        assert_eq!(a.epochs.len(), 1);
+        let ep = &a.epochs[0];
+        assert_eq!(ep.straggler, Some(1));
+        assert!((ep.excess_s - 0.5).abs() < 1e-12);
+        assert!((ep.chi_slowdown_s - 0.5).abs() < 1e-12);
+        assert!(ep.attributed_pct > 99.9);
+        assert!((ep.peer_wait_s - 0.5).abs() < 1e-12);
+        assert!(ep.verdict().contains("straggler rank 1"));
+    }
+
+    #[test]
+    fn homogeneous_trace_has_no_straggler() {
+        let spans = vec![
+            span(0, 0, Kind::Compute, 0.1, 1.0),
+            span(1, 0, Kind::Compute, 0.1, 1.0),
+        ];
+        let a = Attribution::from_spans(spans.iter());
+        assert_eq!(a.epochs[0].straggler, None);
+        assert!(a.epochs[0].verdict().contains("no injected straggler"));
+    }
+
+    #[test]
+    fn recompute_counts_as_compute_but_tracked() {
+        let spans = vec![
+            span(0, 0, Kind::Compute, 0.2, 1.0),
+            span(0, 0, Kind::Recompute, 0.1, 1.0),
+        ];
+        let a = Attribution::from_spans(spans.iter());
+        let r = &a.epochs[0].ranks[0];
+        assert!((r.compute_s - 0.3).abs() < 1e-12);
+        assert!((r.recompute_s - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phase_totals_sum_epochs_and_serialize() {
+        let spans = vec![
+            span(0, 0, Kind::Compute, 0.1, 1.0),
+            span(1, 0, Kind::Compute, 0.6, 6.0),
+            span(0, 1, Kind::Replan, 0.02, 1.0),
+            span(0, 1, Kind::Churn, 0.0, 1.0),
+        ];
+        let a = Attribution::from_spans(spans.iter());
+        let p = a.phase_totals();
+        assert!((p.compute_s - 0.7).abs() < 1e-12);
+        assert!((p.replan_s - 0.02).abs() < 1e-12);
+        assert_eq!(p.events, 1);
+        assert_eq!(p.spans, 4);
+        assert_eq!(p.straggler, Some(1));
+        let j = p.to_json();
+        assert_eq!(j.get("straggler").unwrap().usize().unwrap(), 1);
+        assert!(j.get("attributed_pct").unwrap().num().unwrap() > 99.0);
+    }
+
+    #[test]
+    fn render_has_tables_and_verdicts() {
+        let spans = vec![
+            span(0, 0, Kind::Compute, 0.1, 1.0),
+            span(1, 0, Kind::Compute, 0.6, 6.0),
+        ];
+        let a = Attribution::from_spans(spans.iter());
+        let r = a.render();
+        assert!(r.contains("trace report — epoch 0"));
+        assert!(r.contains("chi_excess_s"));
+        assert!(r.contains("straggler rank 1"));
+    }
+}

@@ -65,7 +65,7 @@ use crate::config::{Imputation, MigPolicy, ReplanMode, RunCfg, Strategy, TimeMod
 use crate::contention::control::DriftDetector;
 use crate::contention::{timemodel, ContentionTrace};
 use crate::data::{Batch, SynthData};
-use crate::metrics::{EpochMetrics, IterSample, RunReport};
+use crate::metrics::{EpochMetrics, RunReport};
 use crate::migration::Chunk;
 use crate::model::{BlockGrads, ModelState};
 use crate::resizing::lineage::{impute_cols, impute_rows, Lineage};
@@ -101,6 +101,12 @@ pub struct Trainer {
     /// once on the coordinator from `cfg.stragglers`; workers never
     /// observe or advance trace state
     trace: ContentionTrace,
+    /// span recorder (DESIGN.md §17), shared with [`Comm`] so collectives
+    /// log their wait/transfer split.  Only the coordinator thread ever
+    /// locks it, always in rank-order replay loops, and it never touches
+    /// a clock — tracing on/off is bitwise-invisible to the simulation
+    /// (`tests/trace_determinism.rs`).  None unless `--trace`/`--timeline`.
+    pub tracer: Option<std::sync::Arc<Mutex<crate::trace::Tracer>>>,
     /// EWMA drift detector driving `--replan online`
     pub controller: DriftDetector,
     /// plan cache for the epoch/online replan modes (checkpointed so a
@@ -273,11 +279,24 @@ impl Trainer {
         for r in 0..m.e {
             ledger.charge(r, footprint.static_bytes());
         }
+        let tracer = if cfg.train.trace || cfg.train.timeline {
+            Some(std::sync::Arc::new(Mutex::new(crate::trace::Tracer::new(
+                m.e,
+                cfg.train.trace_ring,
+                cfg.train.trace,
+                cfg.train.timeline,
+            ))))
+        } else {
+            None
+        };
+        let mut comm = comm;
+        comm.tracer = tracer.clone();
         Ok(Trainer {
             pool,
             ws,
             injector,
             trace,
+            tracer,
             controller,
             cached_actions: None,
             warming: false,
@@ -469,6 +488,12 @@ impl Trainer {
         );
         let start_iter = (self.global_iter - base) as usize;
         if start_iter == 0 {
+            // the tracer folds the finished epoch's frontier into its
+            // cumulative base *before* the reset, so exported span
+            // timelines stay monotone across epochs
+            if let Some(tr) = &self.tracer {
+                tr.lock().expect("tracer lock").epoch_rollover(self.clocks.max());
+            }
             // χ applies per *iteration* from the realized trace inside
             // train_iter (the injector snapshots one row per iteration)
             self.clocks.reset();
@@ -609,6 +634,7 @@ impl Trainer {
         let snap = crate::checkpoint::save_trainer(self);
         snap.save_atomic(path)
             .with_context(|| format!("writing checkpoint {}", path.display()))?;
+        self.trace_event(crate::trace::Kind::Checkpoint, "checkpoint", 0.0, 0);
         Ok(())
     }
 
@@ -620,7 +646,15 @@ impl Trainer {
         let saved = self.state.clone();
         let saved_clocks = self.clocks.clone();
         self.warming = true;
+        // the warmup iteration is untimed and later undone — parking the
+        // tracer keeps its event stream identical to a resumed run's
+        if let Some(tr) = &self.tracer {
+            tr.lock().expect("tracer lock").set_active(false);
+        }
         let warm = self.train_iter();
+        if let Some(tr) = &self.tracer {
+            tr.lock().expect("tracer lock").set_active(true);
+        }
         self.warming = false;
         warm?;
         self.state = saved;
@@ -679,12 +713,26 @@ impl Trainer {
             if (ev.at as u64) > self.global_iter {
                 break;
             }
-            match ev.kind {
-                crate::contention::ChurnKind::Join => self.avail += 1,
-                crate::contention::ChurnKind::Leave | crate::contention::ChurnKind::Fail => {
-                    self.avail = self.avail.saturating_sub(1);
+            let kind_s = match ev.kind {
+                crate::contention::ChurnKind::Join => {
+                    self.avail += 1;
+                    "join"
                 }
-            }
+                crate::contention::ChurnKind::Leave => {
+                    self.avail = self.avail.saturating_sub(1);
+                    "leave"
+                }
+                crate::contention::ChurnKind::Fail => {
+                    self.avail = self.avail.saturating_sub(1);
+                    "fail"
+                }
+            };
+            self.trace_event(
+                crate::trace::Kind::Churn,
+                &format!("{kind_s}:r{}", ev.rank),
+                0.0,
+                0,
+            );
             self.churn_fired += 1;
             fired = true;
         }
@@ -769,6 +817,12 @@ impl Trainer {
                     // outside the current group has nothing to squeeze
                     if ev.rank < e {
                         self.ledger.set_squeeze(ev.rank, frac);
+                        self.trace_event(
+                            crate::trace::Kind::Mem,
+                            &format!("squeeze:r{}", ev.rank),
+                            0.0,
+                            self.ledger.effective_cap(ev.rank),
+                        );
                         // trim the real arena to the shrunken budget too —
                         // retained capacity is observability, not math, so
                         // this cannot perturb determinism
@@ -817,6 +871,7 @@ impl Trainer {
         if !self.cfg.train.churn {
             return Err(anyhow::Error::from(oom).context(ctx));
         }
+        self.trace_event(crate::trace::Kind::Mem, &format!("oom-evict:r{rank}"), 0.0, need);
         self.avail = self.avail.saturating_sub(1);
         let m = self.rt.manifest.model.clone();
         if self.avail == 0 {
@@ -860,6 +915,12 @@ impl Trainer {
     ///   compute accumulator, plan cache, pretest cost fit.
     fn transition_to(&mut self, new_e: usize) -> Result<()> {
         let old_m = self.rt.manifest.model.clone();
+        self.trace_event(
+            crate::trace::Kind::Churn,
+            &format!("transition:{}->{new_e}", old_m.e),
+            0.0,
+            0,
+        );
         let man = crate::runtime::presets::synthesize_with_e(&self.cfg.model, new_e)
             .with_context(|| format!("re-sharding '{}' over {new_e} workers", self.cfg.model))?;
         let rt = Runtime::native_with_manifest(man);
@@ -917,6 +978,11 @@ impl Trainer {
             .transport
             .ensure_group(new_m.e)
             .map_err(|err| anyhow::Error::from(err).context("re-forming the transport group"))?;
+        // grow the tracer's rank lanes if the group widened (shrinks keep
+        // the departed ranks' history exportable)
+        if let Some(tr) = &self.tracer {
+            tr.lock().expect("tracer lock").ensure_ranks(new_m.e);
+        }
         Ok(())
     }
 
@@ -957,7 +1023,16 @@ impl Trainer {
         crate::checkpoint::restore_trainer(&mut t, snap)
             .map_err(|err| anyhow::Error::from(err).context("restoring the recovery snapshot"))?;
         t.avail = avail;
+        // carry the span history across the rebuild: the rebuilt trainer
+        // made its own empty tracer — replace it (and Comm's clone) with
+        // the one holding the run so far
+        if let Some(tr) = self.tracer.take() {
+            tr.lock().expect("tracer lock").ensure_ranks(t.model().e);
+            t.comm.tracer = Some(tr.clone());
+            t.tracer = Some(tr);
+        }
         *self = t;
+        self.trace_event(crate::trace::Kind::Churn, &format!("peer-died:r{dead}"), 0.0, 0);
         Ok(())
     }
 
@@ -971,6 +1046,52 @@ impl Trainer {
     /// OS pid of the given rank's process (tests: SIGSTOP injection).
     pub fn debug_rank_pid(&self, rank: usize) -> Option<u32> {
         self.comm.transport.rank_pid(rank)
+    }
+
+    // -----------------------------------------------------------------
+    // Tracing hooks (DESIGN.md §17) — pure mirrors of charges already
+    // applied to the clocks; nothing here advances a clock, touches a
+    // stat, or runs off the coordinator thread, so `--trace` cannot
+    // perturb the simulation.
+    // -----------------------------------------------------------------
+
+    /// Mirror a compute charge on rank `w`: `dur` is the (χ-skewed)
+    /// SimClock seconds just advanced, so the span starts `dur` before
+    /// the rank's current clock.
+    fn trace_compute(
+        &self,
+        w: usize,
+        kind: crate::trace::Kind,
+        label: &'static str,
+        layer: i32,
+        dur: f64,
+        chi: f64,
+    ) {
+        if let Some(tr) = &self.tracer {
+            tr.lock()
+                .expect("tracer lock")
+                .compute(w, kind, label, layer, self.clocks.now(w), dur, chi);
+        }
+    }
+
+    /// Record a control event on the coordinator lane (rank 0): churn
+    /// and memory transitions, checkpoints.  `dur == 0` is an instant
+    /// pinned at the group frontier.
+    fn trace_event(&self, kind: crate::trace::Kind, label: &str, dur: f64, bytes: u64) {
+        if let Some(tr) = &self.tracer {
+            let g = self.global_iter;
+            let ipe = self.cfg.train.iters_per_epoch.max(1) as u64;
+            tr.lock().expect("tracer lock").event(
+                0,
+                kind,
+                label,
+                g,
+                (g / ipe) as u32,
+                self.clocks.max(),
+                dur,
+                bytes,
+            );
+        }
     }
 
     // -----------------------------------------------------------------
@@ -995,6 +1116,15 @@ impl Trainer {
                 self.epoch_chi_max = self.epoch_chi_max.max(c);
             }
             self.epoch_chi_iters += 1;
+        }
+        if let Some(tr) = &self.tracer {
+            tr.lock().expect("tracer lock").begin_iter(
+                g,
+                epoch as u32,
+                iter as u32,
+                rt0,
+                &self.injector.chi,
+            );
         }
         let batch = match &self.forced_batch {
             Some(b) => b.clone(),
@@ -1099,6 +1229,7 @@ impl Trainer {
         let tc = self.sim_secs(t, timemodel::embed_s(&m, false));
         for r in 0..e {
             self.injector.charge_unskewed(&mut self.clocks, r, tc);
+            self.trace_compute(r, crate::trace::Kind::Compute, "embed_fwd", -1, tc, 1.0);
         }
         let mut x = into1(outs)?;
 
@@ -1138,6 +1269,7 @@ impl Trainer {
         let tc = self.sim_secs(t, timemodel::head_s(&m));
         for r in 0..e {
             self.injector.charge_unskewed(&mut self.clocks, r, tc);
+            self.trace_compute(r, crate::trace::Kind::Compute, "head_fwdbwd", -1, tc, 1.0);
         }
         let mut it = outs.into_iter();
         let loss = it.next().unwrap().scalar_f32()?;
@@ -1174,6 +1306,7 @@ impl Trainer {
         let tc = self.sim_secs(t, timemodel::embed_s(&m, true));
         for r in 0..e {
             self.injector.charge_unskewed(&mut self.clocks, r, tc);
+            self.trace_compute(r, crate::trace::Kind::Compute, "embed_bwd", -1, tc, 1.0);
         }
         let mut it = outs.into_iter();
         let dw_patch = it.next().unwrap().tensor()?;
@@ -1230,6 +1363,7 @@ impl Trainer {
                 if recompute[w] {
                     let dt = crate::memory::RECOMPUTE_TIME_FRAC * m_gemm[w];
                     self.clocks.advance(w, dt);
+                    self.trace_compute(w, crate::trace::Kind::Recompute, "recompute", -1, dt, 1.0);
                     m_gemm[w] += dt;
                 }
             }
@@ -1251,16 +1385,18 @@ impl Trainer {
                 *acc += t;
             }
         }
-        if self.cfg.train.timeline && !self.warming {
-            self.report.timeline.push(IterSample {
-                giter: g,
-                epoch,
-                iter,
-                chi: self.injector.chi.clone(),
-                t_iter: t_iter.clone(),
-                rt_iter_s: self.clocks.max() - rt0,
-                replanned: self.last_replanned,
-            });
+        // `--timeline` is a trace view: the tracer mirrored every compute
+        // charge (same f64 values, same order as `iter_compute`), so the
+        // sample it synthesizes here is bitwise identical to the one the
+        // pre-trace sampler built from `t_iter` directly.
+        if let Some(tr) = &self.tracer {
+            let sample = tr
+                .lock()
+                .expect("tracer lock")
+                .end_iter(self.clocks.max(), self.last_replanned);
+            if let Some(s) = sample {
+                self.report.timeline.push(s);
+            }
         }
         self.monitor.record(t_iter, m_gemm);
         Ok(loss)
@@ -1376,8 +1512,22 @@ impl Trainer {
     fn charge_replan(&mut self) {
         let e = self.model().e;
         let dt = self.costs.omega1_s;
+        let g = self.global_iter;
+        let ipe = self.cfg.train.iters_per_epoch.max(1) as u64;
         for r in 0..e {
             self.clocks.advance_comm(r, dt);
+            if let Some(tr) = &self.tracer {
+                tr.lock().expect("tracer lock").event(
+                    r,
+                    crate::trace::Kind::Replan,
+                    "replan",
+                    g,
+                    (g / ipe) as u32,
+                    self.clocks.now(r),
+                    dt,
+                    0,
+                );
+            }
         }
     }
 
@@ -1447,7 +1597,10 @@ impl Trainer {
             let keep = actions[w].layers[k].attn_keep.len();
             let tc = self.sim_secs(t, timemodel::attn_s(mi, keep, false));
             self.injector.charge(&mut self.clocks, w, tc);
-            m_gemm[w] += tc * self.injector.chi[w];
+            let chi = self.injector.chi[w];
+            let skewed = tc * chi;
+            m_gemm[w] += skewed;
+            self.trace_compute(w, crate::trace::Kind::Compute, "attn_fwd", k as i32, skewed, chi);
             partials.push(y);
         }
         Ok(partials)
@@ -1497,7 +1650,10 @@ impl Trainer {
             let (k1, k2) = (p.mlp_keep1.len(), p.mlp_keep2.len());
             let tc = self.sim_secs(t, timemodel::mlp_s(mi, k1, k2, false));
             self.injector.charge(&mut self.clocks, w, tc);
-            m_gemm[w] += tc * self.injector.chi[w];
+            let chi = self.injector.chi[w];
+            let skewed = tc * chi;
+            m_gemm[w] += skewed;
+            self.trace_compute(w, crate::trace::Kind::Compute, "mlp_fwd", k as i32, skewed, chi);
             partials.push(y);
         }
         // migration: receivers compute stragglers' slices (fwd direction)
@@ -1562,7 +1718,10 @@ impl Trainer {
             let (k1, k2) = (p.mlp_keep1.len(), p.mlp_keep2.len());
             let tc = self.sim_secs(t, timemodel::mlp_s(mi, k1, k2, true));
             self.injector.charge(&mut self.clocks, w, tc);
-            m_gemm[w] += tc * self.injector.chi[w];
+            let chi = self.injector.chi[w];
+            let skewed = tc * chi;
+            m_gemm[w] += skewed;
+            self.trace_compute(w, crate::trace::Kind::Compute, "mlp_bwd", k as i32, skewed, chi);
             dx_parts.push(dx);
             dg_parts.push(dg);
             db_parts.push(db);
@@ -1662,7 +1821,10 @@ impl Trainer {
             let keep = actions[w].layers[k].attn_keep.len();
             let tc = self.sim_secs(t, timemodel::attn_s(mi, keep, true));
             self.injector.charge(&mut self.clocks, w, tc);
-            m_gemm[w] += tc * self.injector.chi[w];
+            let chi = self.injector.chi[w];
+            let skewed = tc * chi;
+            m_gemm[w] += skewed;
+            self.trace_compute(w, crate::trace::Kind::Compute, "attn_bwd", k as i32, skewed, chi);
             dx_parts.push(dx);
             dg_parts.push(dg);
             db_parts.push(db);
@@ -1832,7 +1994,17 @@ impl Trainer {
                     let bwd = dy.is_some();
                     let tc = self.sim_secs(t, timemodel::mig_slice_s(&m, chunk.kb, bwd));
                     self.injector.charge(&mut self.clocks, rw.rank, tc);
-                    m_gemm[rw.rank] += tc * self.injector.chi[rw.rank];
+                    let chi = self.injector.chi[rw.rank];
+                    let skewed = tc * chi;
+                    m_gemm[rw.rank] += skewed;
+                    self.trace_compute(
+                        rw.rank,
+                        crate::trace::Kind::Compute,
+                        "mig_slice",
+                        k as i32,
+                        skewed,
+                        chi,
+                    );
                     match out {
                         MigOut::Fwd(y) => {
                             if merging {

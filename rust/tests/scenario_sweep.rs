@@ -186,6 +186,12 @@ fn sweep_report_writes_parseable_bench_scenarios_json() {
     assert!(c.get("replans").unwrap().num().unwrap() >= 1.0);
     // calm trace: χ stays at 1
     assert_eq!(c.get("chi_max").unwrap().num().unwrap(), 1.0);
+    // sweeps trace by default: each cell embeds its phase-time totals
+    let p = c.get("phases").unwrap();
+    assert!(p.get("compute_s").unwrap().num().unwrap() > 0.0);
+    assert!(p.get("spans").unwrap().num().unwrap() > 0.0);
+    // calm ⇒ no χ excess, so no straggler to attribute
+    assert!(matches!(p.get("straggler").unwrap(), Json::Null));
     // render must not panic and must carry the table header
     assert!(report.render().contains("scenario sweep"));
 }

@@ -1,0 +1,221 @@
+//! Zero-observer-effect suite for `--trace` (DESIGN.md §17).
+//!
+//! The tentpole contract: tracing is a pure *read* of the simulation.
+//! Pinned here:
+//!
+//! * trace-on vs trace-off **bitwise** parity of losses, per-epoch sim
+//!   metrics, and `CommStats` — at `--threads` 1 and 4, on both the
+//!   in-process and the TCP transport;
+//! * trace-content identity across `--threads` 1 vs 4 (the without-wall
+//!   JSONL export compares byte-for-byte — `wall_us` is the one
+//!   non-deterministic field and it is excluded by construction);
+//! * a churn + memory-fault scenario whose trace carries the
+//!   transition/eviction events in exactly the order they fired;
+//! * the acceptance bar: on the `bursty` preset the attribution report
+//!   names the injected straggler and explains ≥ 80% of its excess
+//!   SimClock time as χ-slowed compute;
+//! * an unwritable trace sink is the typed `TraceError::Unwritable`,
+//!   never a panic.
+
+use flextp::config::{ReplanMode, RunCfg, StragglerPlan, Strategy, TimeModel, TransportKind};
+use flextp::contention::ScenarioSpec;
+use flextp::metrics::RunReport;
+use flextp::trace::report::Attribution;
+use flextp::trace::{export, Kind, TraceError};
+use flextp::train::trainer::Trainer;
+
+/// vit-tiny, SEMI@online, modeled clock, bursty tenant — the same
+/// non-trivial plan the transport-parity suite exercises.
+fn base_cfg(threads: usize, transport: TransportKind, trace: bool) -> RunCfg {
+    let mut cfg = RunCfg::new("vit-tiny");
+    cfg.train.threads = threads;
+    cfg.train.epochs = 2;
+    cfg.train.iters_per_epoch = 5;
+    cfg.train.eval_iters = 2;
+    cfg.train.momentum = 0.9;
+    cfg.train.time_model = TimeModel::Modeled;
+    cfg.train.transport = transport;
+    cfg.train.rank_exe = Some(env!("CARGO_BIN_EXE_flextp").into());
+    cfg.train.trace = trace;
+    cfg.balancer.strategy = Strategy::Semi;
+    cfg.balancer.replan = ReplanMode::Online;
+    cfg.balancer.forced_lambda = Some(1);
+    cfg.stragglers = StragglerPlan::Scenario(
+        ScenarioSpec::parse("burst:r1@x5:iters2-7,markov:r3@x2:p0.4-0.3,seed:9")
+            .expect("scenario"),
+    );
+    cfg
+}
+
+type Observables = (RunReport, u64, u64, usize);
+
+fn run(cfg: RunCfg) -> (Trainer, Observables) {
+    let mut t = Trainer::new(cfg).expect("trainer");
+    let r = t.run().expect("run");
+    let obs = (r, t.comm.stats.total_bytes(), t.comm.stats.allreduce_ops, t.model().e);
+    (t, obs)
+}
+
+fn assert_bitwise(a: &Observables, b: &Observables, what: &str) {
+    assert!(a.0.loss_curve.iter().all(|l| l.is_finite()), "{what}: diverged");
+    assert_eq!(a.0.loss_curve, b.0.loss_curve, "{what}: losses must be bitwise identical");
+    assert!(a.0.sim_equal(&b.0), "{what}: per-epoch sim metrics must be bitwise identical");
+    assert_eq!(a.1, b.1, "{what}: CommStats::total_bytes must match");
+    assert_eq!(a.2, b.2, "{what}: all-reduce op counts must match");
+    assert_eq!(a.3, b.3, "{what}: final worker counts must match");
+}
+
+/// The without-wall JSONL export of a finished traced run.
+fn jsonl_of(t: &Trainer) -> String {
+    let tr = t.tracer.as_ref().expect("traced run").lock().expect("tracer lock");
+    assert!(tr.spans_on());
+    export::to_jsonl(&tr, false)
+}
+
+#[test]
+fn trace_on_equals_trace_off_bitwise_across_threads_and_transports() {
+    for transport in [TransportKind::InProc, TransportKind::Tcp] {
+        for threads in [1usize, 4] {
+            let (_, off) = run(base_cfg(threads, transport, false));
+            let (traced, on) = run(base_cfg(threads, transport, true));
+            assert_bitwise(
+                &off,
+                &on,
+                &format!("trace off vs on, threads={threads} transport={transport:?}"),
+            );
+            // and the traced run actually recorded the simulation
+            let tr = traced.tracer.as_ref().unwrap().lock().unwrap();
+            assert!(tr.merged().len() > 100, "a traced run must buffer spans");
+            assert_eq!(tr.dropped(), 0, "default ring must not drop on a run this size");
+        }
+    }
+}
+
+#[test]
+fn trace_content_is_identical_across_thread_counts() {
+    let (t1, o1) = run(base_cfg(1, TransportKind::InProc, true));
+    let (t4, o4) = run(base_cfg(4, TransportKind::InProc, true));
+    assert_bitwise(&o1, &o4, "threads 1 vs 4");
+    let (a, b) = (jsonl_of(&t1), jsonl_of(&t4));
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "without-wall trace exports must be byte-identical across --threads");
+    // the wall-free form really excludes the one nondeterministic field
+    assert!(!a.contains("wall_us"));
+}
+
+#[test]
+fn trace_content_is_identical_across_transports() {
+    let (ti, oi) = run(base_cfg(1, TransportKind::InProc, true));
+    let (tt, ot) = run(base_cfg(1, TransportKind::Tcp, true));
+    assert_bitwise(&oi, &ot, "inproc vs tcp, traced");
+    assert_eq!(
+        jsonl_of(&ti),
+        jsonl_of(&tt),
+        "without-wall trace exports must be byte-identical across transports"
+    );
+}
+
+/// Worker fail + capacity squeeze + forced OOM: the trace must carry
+/// the control events in exactly the order they fired.  After
+/// `fail:r3` the group re-shards 4→2; the later OOM names a rank that
+/// no longer exists (rank-descriptive, like `fail:`), evicts it, and
+/// lands on the same E'=2 — so no second transition is recorded.
+#[test]
+fn churn_and_oom_events_appear_in_fired_order() {
+    let mut cfg = base_cfg(1, TransportKind::InProc, true);
+    cfg.train.epochs = 2;
+    cfg.train.iters_per_epoch = 6;
+    cfg.stragglers = StragglerPlan::Scenario(
+        ScenarioSpec::parse("fail:r3@iter2,memsqueeze:r1@iter3:x0.5,oom:r2@iter4")
+            .expect("scenario"),
+    );
+    let (t, obs) = run(cfg);
+    assert_eq!(obs.3, 2, "fail:r3 must have re-sharded 4→2");
+    let tr = t.tracer.as_ref().unwrap().lock().unwrap();
+    let controls: Vec<String> = tr
+        .merged()
+        .iter()
+        .filter(|s| matches!(s.kind, Kind::Churn | Kind::Mem))
+        .map(|s| s.label.clone())
+        .collect();
+    assert_eq!(
+        controls,
+        vec!["fail:r3", "transition:4->2", "squeeze:r1", "oom-evict:r2"],
+        "control events must appear in fired order"
+    );
+    // the squeeze span carries the shrunken capacity as its counter
+    let squeeze = tr
+        .merged()
+        .into_iter()
+        .find(|s| s.label == "squeeze:r1")
+        .expect("squeeze span")
+        .clone();
+    assert!(squeeze.bytes > 0, "squeeze span must report the effective capacity");
+}
+
+/// Acceptance: on the `bursty` preset (χ6 square wave on rank 1),
+/// SEMI@online at 4 threads, the report names rank 1 and attributes
+/// ≥ 80% of its excess SimClock time to χ-slowed compute, with the
+/// peers' all-reduce waits corroborating from the other side.
+#[test]
+fn bursty_report_attributes_the_injected_straggler() {
+    let mut cfg = base_cfg(4, TransportKind::InProc, true);
+    cfg.train.epochs = 2;
+    cfg.train.iters_per_epoch = 12;
+    cfg.stragglers = StragglerPlan::Scenario(
+        flextp::contention::preset("bursty").expect("bursty preset"),
+    );
+    let (t, _) = run(cfg);
+    let tr = t.tracer.as_ref().unwrap().lock().unwrap();
+    let attr = Attribution::from_spans(tr.merged());
+    let worst = attr.worst_epoch().expect("an epoch with a straggler");
+    assert_eq!(worst.straggler, Some(1), "the injected straggler is rank 1");
+    assert!(
+        worst.attributed_pct >= 80.0,
+        "only {:.1}% of the straggler's {:.4}s excess attributed (need ≥ 80%)",
+        worst.attributed_pct,
+        worst.excess_s
+    );
+    assert!(worst.excess_s > 0.0);
+    assert!(worst.peer_wait_s > 0.0, "peers must have absorbed the straggle as waits");
+    // the rendered report names the cause in prose
+    assert!(attr.render().contains("straggler rank 1"));
+
+    // round-trip: the report over the exported JSONL agrees with the
+    // in-memory one (same aggregation path as `flextp trace report`)
+    let text = export::to_jsonl(&tr, true);
+    let spans = export::parse_jsonl(&text, std::path::Path::new("mem")).expect("parse");
+    let reparsed = Attribution::from_spans(spans.iter());
+    let w2 = reparsed.worst_epoch().expect("straggler survives the round trip");
+    assert_eq!(w2.straggler, Some(1));
+    assert_eq!(w2.attributed_pct.to_bits(), worst.attributed_pct.to_bits());
+}
+
+/// An unwritable trace sink surfaces as the typed
+/// `TraceError::Unwritable` — the training run itself completes and is
+/// never panicked or aborted by the export failure.
+#[test]
+fn unwritable_trace_out_is_a_typed_warning_not_a_panic() {
+    let (t, obs) = run(base_cfg(1, TransportKind::InProc, true));
+    assert!(obs.0.loss_curve.iter().all(|l| l.is_finite()), "the run itself completed");
+    // a regular file in place of the export directory: both the early
+    // probe and the end-of-run export map it to TraceError::Unwritable
+    let clash = std::env::temp_dir().join(format!("flextp_trace_clash_{}", std::process::id()));
+    std::fs::write(&clash, b"a file, not a directory").unwrap();
+    let bad_dir = clash.join("trace");
+    let err = flextp::trace::validate_out(&bad_dir).expect_err("probe must fail");
+    assert!(matches!(err, TraceError::Unwritable { .. }));
+    let tr = t.tracer.as_ref().unwrap().lock().unwrap();
+    let err = export::write_outputs(&tr, &bad_dir).expect_err("export must fail");
+    assert!(matches!(err, TraceError::Unwritable { .. }));
+    assert!(err.to_string().contains("Unwritable"));
+    let _ = std::fs::remove_file(&clash);
+
+    // a writable sink exports both forms
+    let good = std::env::temp_dir().join(format!("flextp_trace_out_{}", std::process::id()));
+    let (jsonl, perfetto) = export::write_outputs(&tr, &good).expect("export");
+    assert!(jsonl.exists() && perfetto.exists());
+    let text = std::fs::read_to_string(&jsonl).unwrap();
+    assert!(export::parse_jsonl(&text, &jsonl).expect("reparse").len() > 100);
+    let _ = std::fs::remove_dir_all(&good);
+}
