@@ -1,0 +1,230 @@
+//! Per-component TP degree selection (`--degrees auto`, DESIGN.md §18).
+//!
+//! Fine-grained tensor parallelism lets each model component (attention,
+//! MLP) run over its own rank-prefix sub-group instead of the full
+//! worker group.  On a heterogeneous cluster that is a real lever: a
+//! component whose all-reduce would otherwise synchronize with a
+//! heavily χ-skewed rank can simply leave that rank out of its group,
+//! trading a larger per-member shard for freedom from the straggler —
+//! the same RT-vs-work tradeoff as Eq. 2/3, decided per component at
+//! geometry-resolution time rather than per iteration.
+//!
+//! The selector scores every valid divisor `d` for a component as
+//!
+//! ```text
+//! time(d) = compute(full)/d · max(χ[0..d]) / GEMM_FLOPS  +  comm(d)
+//! ```
+//!
+//! members are always the rank prefix `0..d` (the sub-group formation
+//! contract), so the straggler term is the prefix maximum of the
+//! iteration-0 χ row.  Compute uses the modeled device rate by default;
+//! when the caller passes pretest cost fits, the MLP per-column rate is
+//! blended 50/50 with the fitted Φ₂ slope — the same EWMA-style blend
+//! `refresh_costs` applies mid-run — so the selection tracks measured
+//! hardware where fits exist and the closed model where they don't.
+//!
+//! Embed and head stay at the uniform degree: they execute replicated,
+//! so their degree is declared and validated but buys no time.
+
+use crate::collectives::cost::CostModel;
+use crate::contention::timemodel::GEMM_FLOPS_PER_S;
+use crate::runtime::manifest::{Degrees, ModelInfo};
+use crate::semi::CostFns;
+
+/// Fwd+bwd multiple of a forward pass (bwd ≈ 2× fwd, timemodel contract).
+const FWD_BWD: f64 = 3.0;
+
+/// Full (degree-1) attention-branch forward FLOPs for one block.
+fn attn_flops_full(m: &ModelInfo) -> f64 {
+    let rows = (m.bs * m.seq) as f64;
+    let qkv = 2.0 * rows * m.hs as f64 * (3 * m.hs) as f64;
+    let core = 4.0 * m.bs as f64 * (m.seq * m.seq) as f64 * m.hs as f64;
+    let oproj = 2.0 * rows * (m.hs * m.hs) as f64;
+    qkv + core + oproj
+}
+
+/// Full (degree-1) MLP-branch forward FLOPs for one block (ffl = 4·hs).
+fn mlp_flops_full(m: &ModelInfo) -> f64 {
+    let rows = (m.bs * m.seq) as f64;
+    let ffl = (crate::runtime::presets::MLP_RATIO * m.hs) as f64;
+    2.0 * rows * m.hs as f64 * ffl + 2.0 * rows * ffl * m.hs as f64
+}
+
+/// Largest χ on the member prefix `0..d` (clamped to the χ row length —
+/// a degenerate row means a homogeneous group).
+fn prefix_chi_max(chis: &[f64], d: usize) -> f64 {
+    chis[..d.min(chis.len())].iter().cloned().fold(1.0, f64::max)
+}
+
+/// Modeled per-member iteration time for a component at degree `d`:
+/// χ-skewed compute on the slowest member plus the sub-group all-reduce
+/// (one forward reduce and the batched backward reduce per block — the
+/// activation-sized buffers dominate, so both price as one ring each).
+fn component_time(
+    secs_full: f64,
+    chis: &[f64],
+    net: &CostModel,
+    d: usize,
+    bytes: usize,
+) -> f64 {
+    secs_full / d as f64 * prefix_chi_max(chis, d) + 2.0 * net.ring_allreduce(d, bytes)
+}
+
+/// Select the per-component degree vector for `m` (already synthesized
+/// at the uniform worker count `m.e`) under the iteration-0 χ row.
+/// Every returned degree is a valid divisor at its component's own
+/// granularity and ≤ `m.e`; a homogeneous χ row returns the uniform
+/// vector, keeping `--degrees auto` a no-op on calm clusters.
+pub fn select_degrees(
+    m: &ModelInfo,
+    chis: &[f64],
+    net: &CostModel,
+) -> Degrees {
+    select_degrees_with_costs(m, chis, net, None)
+}
+
+/// [`select_degrees`] with optional pretest cost fits blended into the
+/// MLP compute rate (Φ₂ is a fitted per-column receiver-compute slope —
+/// the measured analogue of the modeled MLP column cost).
+pub fn select_degrees_with_costs(
+    m: &ModelInfo,
+    chis: &[f64],
+    net: &CostModel,
+    costs: Option<&CostFns>,
+) -> Degrees {
+    let e = m.e;
+    let bytes = m.bs * m.seq * m.hs * 4;
+
+    let attn_secs_full = FWD_BWD * attn_flops_full(m) / GEMM_FLOPS_PER_S;
+    let attn = best_degree(
+        (1..=e).filter(|&d| m.hs % d == 0 && m.heads % d == 0),
+        |d| component_time(attn_secs_full, chis, net, d, bytes),
+    );
+
+    let mut mlp_secs_full = FWD_BWD * mlp_flops_full(m) / GEMM_FLOPS_PER_S;
+    if let Some(c) = costs {
+        if c.phi2_per_col > 0.0 {
+            // blend the modeled per-column rate with the fitted Φ₂ slope
+            // (cols at degree 1 = the full ffl), 50/50 like refresh_costs
+            let cols = (crate::runtime::presets::MLP_RATIO * m.hs) as f64;
+            let fitted_full = FWD_BWD * cols * c.phi2_per_col;
+            mlp_secs_full = 0.5 * mlp_secs_full + 0.5 * fitted_full;
+        }
+    }
+    let mlp = best_degree(
+        (1..=e).filter(|&d| (crate::runtime::presets::MLP_RATIO * m.hs) % d == 0),
+        |d| component_time(mlp_secs_full, chis, net, d, bytes),
+    );
+
+    // embed/head execute replicated — their degree is declarative
+    Degrees { embed: e, attn, mlp, head: e }
+}
+
+/// Argmin over candidate degrees; ties break toward the *larger* degree
+/// (more parallelism at equal modeled time — the uniform default wins on
+/// a homogeneous row because the ring term only then separates degrees).
+fn best_degree<I, F>(candidates: I, mut time: F) -> usize
+where
+    I: Iterator<Item = usize>,
+    F: FnMut(usize) -> f64,
+{
+    let mut best = 1;
+    let mut best_t = f64::INFINITY;
+    for d in candidates {
+        let t = time(d);
+        if t < best_t || (t == best_t && d > best) {
+            best = d;
+            best_t = t;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vit_tiny(e: usize) -> ModelInfo {
+        ModelInfo {
+            name: "vit-tiny".into(),
+            hs: 128,
+            depth: 2,
+            heads: 8,
+            e,
+            bs: 8,
+            classes: 10,
+            seq: 65,
+            seq0: 64,
+            pd: 48,
+            hsl: 128 / e,
+            hl: 8 / e,
+            hd: 16,
+            ffl: 512 / e,
+            params_total: 0,
+            params_per_worker: 0,
+            degrees: Degrees::uniform(e),
+        }
+    }
+
+    #[test]
+    fn homogeneous_row_keeps_the_uniform_vector() {
+        let m = vit_tiny(4);
+        let d = select_degrees(&m, &[1.0; 4], &CostModel::default());
+        assert_eq!(d, Degrees::uniform(4));
+    }
+
+    #[test]
+    fn heavy_tail_rank_shrinks_block_groups_to_exclude_it() {
+        // rank 3 at χ=24: any degree including it pays 24× on the prefix
+        // max, so both block components settle on d=2 (d=3 is not a
+        // divisor), excluding the straggler entirely
+        let m = vit_tiny(4);
+        let d = select_degrees(&m, &[1.0, 1.0, 1.0, 24.0], &CostModel::default());
+        assert_eq!(d.attn, 2);
+        assert_eq!(d.mlp, 2);
+        assert_eq!(d.embed, 4, "replicated components keep the uniform degree");
+        assert_eq!(d.head, 4);
+    }
+
+    #[test]
+    fn skew_on_rank_zero_cannot_be_excluded_by_any_prefix() {
+        // rank 0 is in every prefix, so the χ term is constant and the
+        // widest degree (most parallelism) wins
+        let m = vit_tiny(4);
+        let d = select_degrees(&m, &[24.0, 1.0, 1.0, 1.0], &CostModel::default());
+        assert_eq!(d.attn, 4);
+        assert_eq!(d.mlp, 4);
+    }
+
+    #[test]
+    fn attn_respects_head_divisibility() {
+        // heads=2 on hs=128 over e=4: attention candidates are {1, 2}
+        // (4 ∤ 2); a calm row then picks 2, mlp keeps 4
+        let mut m = vit_tiny(4);
+        m.heads = 2;
+        let d = select_degrees(&m, &[1.0; 4], &CostModel::default());
+        assert_eq!(d.attn, 2);
+        assert_eq!(d.mlp, 4);
+    }
+
+    #[test]
+    fn cost_fit_blend_is_identity_when_fit_matches_model() {
+        let m = vit_tiny(4);
+        let chis = [1.0, 1.0, 1.0, 24.0];
+        let net = CostModel::default();
+        let a = select_degrees(&m, &chis, &net);
+        // a Φ₂ slope equal to the modeled per-column rate blends to the
+        // same total — the selection cannot move
+        let cols = (crate::runtime::presets::MLP_RATIO * m.hs) as f64;
+        let modeled_per_col = mlp_flops_full(&m) / cols / GEMM_FLOPS_PER_S;
+        let costs = CostFns {
+            omega1_s: 1e-6,
+            omega2_per_col: 1e-7,
+            phi1_base_s: 1e-6,
+            phi1_per_col: 1e-7,
+            phi2_per_col: modeled_per_col,
+        };
+        let b = select_degrees_with_costs(&m, &chis, &net, Some(&costs));
+        assert_eq!(a, b);
+    }
+}

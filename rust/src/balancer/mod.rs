@@ -20,6 +20,9 @@
 //! first, QKV (resize-only) covers the remainder; O-proj is never resized
 //! (its contraction is the already-small hsl).
 
+pub mod degrees;
+pub use degrees::{select_degrees, select_degrees_with_costs};
+
 use crate::config::{BalancerCfg, Strategy};
 use crate::migration::{self, MigPlan};
 use crate::resizing::priority::BlockTrackers;

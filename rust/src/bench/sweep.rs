@@ -15,7 +15,9 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{ReplanMode, RunCfg, StragglerPlan, Strategy, TimeModel, TransportKind};
+use crate::config::{
+    DegreeOverrides, ReplanMode, RunCfg, StragglerPlan, Strategy, TimeModel, TransportKind,
+};
 use crate::contention::{self, ScenarioSpec};
 use crate::metrics::RunReport;
 use crate::train::trainer::Trainer;
@@ -40,6 +42,12 @@ pub struct CellSpec {
     /// elasticity stance, so one matrix covers `live@tcp` without a
     /// duplicated cell list
     pub transport: TransportKind,
+    /// per-component TP degree overrides (`--e-attn` etc., DESIGN.md
+    /// §18); unset components stay at the effective global `e`
+    pub degrees: DegreeOverrides,
+    /// `--degrees auto`: pick the per-component vector from the χ row
+    /// and the blended pretest cost fits at startup
+    pub degrees_auto: bool,
 }
 
 impl CellSpec {
@@ -50,6 +58,8 @@ impl CellSpec {
             e_override: None,
             churn: true,
             transport: TransportKind::InProc,
+            degrees: DegreeOverrides::default(),
+            degrees_auto: false,
         }
     }
 
@@ -62,11 +72,23 @@ impl CellSpec {
         self
     }
 
-    /// Elasticity/transport tag, the `cell` column of
+    pub fn with_degrees(mut self, degrees: DegreeOverrides) -> CellSpec {
+        self.degrees = degrees;
+        self
+    }
+
+    pub fn auto_degrees(mut self) -> CellSpec {
+        self.degrees_auto = true;
+        self
+    }
+
+    /// Elasticity/transport/degree tag, the `cell` column of
     /// `BENCH_scenarios.json`: `live`, `live-eN`, `fixed`, or `fixed-eN`,
-    /// with a `+tcp` suffix for multi-process cells.  In-process cells
-    /// keep the historic bare tags so existing consumers (churn-parity
-    /// CI, `churn_comparisons`) are unaffected.
+    /// with a `+tcp` suffix for multi-process cells and a `+deg…` suffix
+    /// for fine-grained-degree cells (`+dega2m2` spells the overridden
+    /// components, `+degauto` marks balancer-selected degrees).
+    /// Uniform in-process cells keep the historic bare tags so existing
+    /// consumers (churn-parity CI, `churn_comparisons`) are unaffected.
     pub fn tag(&self) -> String {
         let base = if self.churn { "live" } else { "fixed" };
         let mut tag = match self.e_override {
@@ -75,6 +97,21 @@ impl CellSpec {
         };
         if self.transport == TransportKind::Tcp {
             tag.push_str("+tcp");
+        }
+        if self.degrees_auto {
+            tag.push_str("+degauto");
+        } else if self.degrees.any() {
+            tag.push_str("+deg");
+            for (c, d) in [
+                ('e', self.degrees.embed),
+                ('a', self.degrees.attn),
+                ('m', self.degrees.mlp),
+                ('h', self.degrees.head),
+            ] {
+                if let Some(d) = d {
+                    tag.push_str(&format!("{c}{d}"));
+                }
+            }
         }
         tag
     }
@@ -207,7 +244,32 @@ impl SweepSpec {
                     CellSpec::fixed(Strategy::Semi, ReplanMode::Online, None),
                 ];
             }
-            _ => bail!("unknown sweep preset '{name}' (smoke|bursty|churn|mem)"),
+            // the fine-grained TP headline (DESIGN.md §18): rank 3 is a
+            // heavy straggler for the whole run (χ24 — past what the
+            // γ-capped pruning of the uniform cell can absorb).  The
+            // mixed-degree cell shrinks the attn/mlp groups to the 0..2
+            // rank prefix, leaving r3 out of block compute and both
+            // block all-reduces entirely; `--degrees auto` must derive
+            // the same vector from the iteration-0 χ row.
+            // `finegrained_comparisons()` pins mixed beating uniform-E
+            // on modeled RT at equal final ACC (CI finegrained-parity).
+            "finegrained" => {
+                s.scenarios = vec![(
+                    "tail-r3".into(),
+                    ScenarioSpec::parse("burst:r3@x24:iters0-,chimax:32")?,
+                )];
+                let uni = CellSpec::fixed(Strategy::Semi, ReplanMode::Online, None);
+                s.cells = vec![
+                    uni,
+                    uni.with_degrees(DegreeOverrides {
+                        attn: Some(2),
+                        mlp: Some(2),
+                        ..DegreeOverrides::default()
+                    }),
+                    uni.auto_degrees(),
+                ];
+            }
+            _ => bail!("unknown sweep preset '{name}' (smoke|bursty|churn|mem|finegrained)"),
         }
         Ok(s)
     }
@@ -222,7 +284,11 @@ impl SweepSpec {
 ///   count;
 /// * transport — `inproc` (default) or `tcp` picks the collective data
 ///   plane, so `semi@online@live@tcp` runs the elastic cell over real
-///   rank processes without a second cell grammar.
+///   rank processes without a second cell grammar;
+/// * degrees — `degauto` turns on balancer-selected per-component
+///   degrees, `deg` followed by component letters with degrees
+///   (`dega2m2` = `--e-attn 2 --e-mlp 2`) pins them explicitly
+///   (DESIGN.md §18).
 pub fn parse_cell(s: &str) -> Result<CellSpec> {
     let mut parts = s.split('@');
     let st = Strategy::parse(parts.next().unwrap_or(""))?;
@@ -231,7 +297,7 @@ pub fn parse_cell(s: &str) -> Result<CellSpec> {
         None => ReplanMode::Iter,
     };
     let mut cell = CellSpec::new(st, rp);
-    let (mut saw_elastic, mut saw_transport) = (false, false);
+    let (mut saw_elastic, mut saw_transport, mut saw_degrees) = (false, false, false);
     for seg in parts {
         if matches!(seg, "inproc" | "tcp") {
             if saw_transport {
@@ -239,6 +305,19 @@ pub fn parse_cell(s: &str) -> Result<CellSpec> {
             }
             saw_transport = true;
             cell.transport = TransportKind::parse(seg)?;
+            continue;
+        }
+        if let Some(rest) = seg.strip_prefix("deg") {
+            if saw_degrees {
+                bail!("duplicate degree tag '{seg}' in cell '{s}'");
+            }
+            saw_degrees = true;
+            if rest == "auto" {
+                cell.degrees_auto = true;
+            } else {
+                cell.degrees = parse_degree_overrides(rest)
+                    .with_context(|| format!("bad degree tag '{seg}' in cell '{s}'"))?;
+            }
             continue;
         }
         if saw_elastic {
@@ -258,13 +337,45 @@ pub fn parse_cell(s: &str) -> Result<CellSpec> {
             "live" => cell.churn = true,
             "fixed" => cell.churn = false,
             _ => bail!(
-                "unknown cell tag '{seg}' (live|fixed, optionally -eN, or a \
-                 transport: inproc|tcp)"
+                "unknown cell tag '{seg}' (live|fixed, optionally -eN, a \
+                 transport: inproc|tcp, or degrees: degauto|deg<spec>)"
             ),
         }
         cell.e_override = e;
     }
     Ok(cell)
+}
+
+/// Parse a compact per-component degree spec: component letters `e`
+/// (embed) / `a` (attn) / `m` (mlp) / `h` (head), each followed by its
+/// degree — `a2m2` reads as `--e-attn 2 --e-mlp 2`.
+fn parse_degree_overrides(s: &str) -> Result<DegreeOverrides> {
+    let mut ov = DegreeOverrides::default();
+    let mut chars = s.chars().peekable();
+    while let Some(c) = chars.next() {
+        let mut n = String::new();
+        while chars.peek().map_or(false, |d| d.is_ascii_digit()) {
+            n.push(chars.next().expect("peeked"));
+        }
+        let d: usize = n
+            .parse()
+            .with_context(|| format!("component '{c}' needs a degree (e.g. '{c}2')"))?;
+        let slot = match c {
+            'e' => &mut ov.embed,
+            'a' => &mut ov.attn,
+            'm' => &mut ov.mlp,
+            'h' => &mut ov.head,
+            _ => bail!("unknown degree component '{c}' (e|a|m|h)"),
+        };
+        if slot.is_some() {
+            bail!("duplicate degree component '{c}'");
+        }
+        *slot = Some(d);
+    }
+    if !ov.any() {
+        bail!("empty degree spec");
+    }
+    Ok(ov)
 }
 
 /// Parse `"label=dsl;label2=dsl"` (bare specs get s0, s1, … labels).
@@ -403,6 +514,8 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport> {
             cfg.balancer.strategy = cell.strategy;
             cfg.balancer.replan = cell.replan;
             cfg.e_override = cell.e_override;
+            cfg.degree_overrides = cell.degrees;
+            cfg.degrees_auto = cell.degrees_auto;
             cfg.train.churn = cell.churn;
             cfg.train.epochs = spec.epochs;
             cfg.train.iters_per_epoch = spec.iters;
@@ -498,71 +611,124 @@ fn phase_totals_of(t: &Trainer) -> Option<crate::trace::report::PhaseTotals> {
 }
 
 impl SweepReport {
-    fn find(&self, scenario: &str, strategy: &str, replan: &str) -> Option<&SweepCell> {
+    /// Exact-key lookup: a comparison side must match on the *full*
+    /// (scenario, strategy, replan, cell tag) key and be a healthy row.
+    /// The pre-tag lookup matched the first non-error cell of a
+    /// strategy/replan, so an `"error"` row (or a multi-tag matrix)
+    /// silently paired cells of *different* elasticity tags — a bogus
+    /// cross-tag speedup instead of an omitted entry.
+    fn find(&self, scenario: &str, strategy: &str, replan: &str, tag: &str) -> Option<&SweepCell> {
         self.cells.iter().find(|c| {
             c.scenario == scenario
                 && c.strategy == strategy
                 && c.replan == replan
+                && c.cell == tag
                 && c.error.is_none()
         })
     }
 
-    /// Per scenario with both `SEMI@online` and `SEMI@epoch` cells:
-    /// (scenario, rt_online, rt_epoch, speedup, acc_delta_pp).
+    /// Per scenario and cell tag with both `SEMI@online` and
+    /// `SEMI@epoch` cells: (scenario, rt_online, rt_epoch, speedup,
+    /// acc_delta_pp).  A typed-fault `"error"` row on either side drops
+    /// the pair — the entry is omitted, never NaN/inf or a cross-tag
+    /// mispairing.
     pub fn comparisons(&self) -> Vec<(String, f64, f64, f64, f64)> {
         let mut out = Vec::new();
         for label in self.scenario_labels() {
-            let (Some(on), Some(ep)) = (
-                self.find(&label, "SEMI", "online"),
-                self.find(&label, "SEMI", "epoch"),
-            ) else {
-                continue;
-            };
-            let speedup = if on.rt > 0.0 { ep.rt / on.rt } else { 0.0 };
-            out.push((
-                label,
-                on.rt,
-                ep.rt,
-                speedup,
-                100.0 * (on.final_acc - ep.final_acc),
-            ));
+            for tag in self.cell_tags() {
+                let (Some(on), Some(ep)) = (
+                    self.find(&label, "SEMI", "online", &tag),
+                    self.find(&label, "SEMI", "epoch", &tag),
+                ) else {
+                    continue;
+                };
+                let speedup = if on.rt > 0.0 { ep.rt / on.rt } else { 0.0 };
+                out.push((
+                    label.clone(),
+                    on.rt,
+                    ep.rt,
+                    speedup,
+                    100.0 * (on.final_acc - ep.final_acc),
+                ));
+            }
         }
         out
     }
 
-    /// Per scenario with a `live` cell and at least one `fixed*` cell:
-    /// (scenario, rt_live, rt_fixed_best, speedup over the *best* fixed-E
-    /// baseline, final-ACC delta vs that baseline in pp).  A speedup
-    /// > 1 means the elastic cell beat every fixed-E baseline on modeled
-    /// RT — the churn acceptance bar (tests/elastic_live.rs).
+    /// Per scenario with a `live` cell and at least one `fixed*` cell of
+    /// the *same strategy and replan mode*: (scenario, rt_live,
+    /// rt_fixed_best, speedup over the *best* fixed-E baseline,
+    /// final-ACC delta vs that baseline in pp).  A speedup > 1 means the
+    /// elastic cell beat every fixed-E baseline on modeled RT — the
+    /// churn acceptance bar (tests/elastic_live.rs).  Error rows are
+    /// skipped on either side: an errored live cell never falls through
+    /// to a live cell of another strategy, and errored baselines drop
+    /// out of the best-of pool.
     pub fn churn_comparisons(&self) -> Vec<(String, f64, f64, f64, f64)> {
         let mut out = Vec::new();
         for label in self.scenario_labels() {
-            let live = self
+            for live in self
                 .cells
                 .iter()
-                .find(|c| c.scenario == label && c.cell == "live" && c.error.is_none());
-            let fixed: Vec<&SweepCell> = self
+                .filter(|c| c.scenario == label && c.cell == "live" && c.error.is_none())
+            {
+                let fixed: Vec<&SweepCell> = self
+                    .cells
+                    .iter()
+                    .filter(|c| {
+                        c.scenario == label
+                            && c.strategy == live.strategy
+                            && c.replan == live.replan
+                            && c.cell.starts_with("fixed")
+                            && c.error.is_none()
+                    })
+                    .collect();
+                let Some(best) = fixed.iter().copied().min_by(|a, b| a.rt.total_cmp(&b.rt))
+                else {
+                    continue;
+                };
+                let speedup = if live.rt > 0.0 { best.rt / live.rt } else { 0.0 };
+                out.push((
+                    label.clone(),
+                    live.rt,
+                    best.rt,
+                    speedup,
+                    100.0 * (live.final_acc - best.final_acc),
+                ));
+            }
+        }
+        out
+    }
+
+    /// Per scenario pairing each degree-tagged cell (`…+degXN…` /
+    /// `…+degauto`) against the uniform-degree cell with the same
+    /// elasticity/transport tag, strategy, and replan: (scenario, degree
+    /// cell tag, rt_mixed, rt_uniform, speedup, acc_delta_pp).  Speedup
+    /// > 1 means the mixed-degree vector beat uniform-E on modeled RT —
+    /// the fine-grained acceptance bar (DESIGN.md §18, CI
+    /// finegrained-parity).  Error rows on either side drop the pair.
+    pub fn finegrained_comparisons(&self) -> Vec<(String, String, f64, f64, f64, f64)> {
+        let mut out = Vec::new();
+        for label in self.scenario_labels() {
+            for deg in self
                 .cells
                 .iter()
-                .filter(|c| c.scenario == label && c.cell.starts_with("fixed") && c.error.is_none())
-                .collect();
-            let (Some(live), false) = (live, fixed.is_empty()) else {
-                continue;
-            };
-            let best = fixed
-                .iter()
-                .copied()
-                .min_by(|a, b| a.rt.total_cmp(&b.rt))
-                .expect("non-empty");
-            let speedup = if live.rt > 0.0 { best.rt / live.rt } else { 0.0 };
-            out.push((
-                label,
-                live.rt,
-                best.rt,
-                speedup,
-                100.0 * (live.final_acc - best.final_acc),
-            ));
+                .filter(|c| c.scenario == label && c.cell.contains("+deg") && c.error.is_none())
+            {
+                let base = &deg.cell[..deg.cell.find("+deg").expect("tag has +deg")];
+                let Some(uni) = self.find(&label, &deg.strategy, &deg.replan, base) else {
+                    continue;
+                };
+                let speedup = if deg.rt > 0.0 { uni.rt / deg.rt } else { 0.0 };
+                out.push((
+                    label.clone(),
+                    deg.cell.clone(),
+                    deg.rt,
+                    uni.rt,
+                    speedup,
+                    100.0 * (deg.final_acc - uni.final_acc),
+                ));
+            }
         }
         out
     }
@@ -572,6 +738,16 @@ impl SweepReport {
         for c in &self.cells {
             if !seen.contains(&c.scenario) {
                 seen.push(c.scenario.clone());
+            }
+        }
+        seen
+    }
+
+    fn cell_tags(&self) -> Vec<String> {
+        let mut seen: Vec<String> = Vec::new();
+        for c in &self.cells {
+            if !seen.contains(&c.cell) {
+                seen.push(c.cell.clone());
             }
         }
         seen
@@ -660,6 +836,24 @@ impl SweepReport {
                         .collect(),
                 ),
             ),
+            (
+                "finegrained_comparisons",
+                Json::Arr(
+                    self.finegrained_comparisons()
+                        .into_iter()
+                        .map(|(s, tag, mixed, uniform, sp, dacc)| {
+                            obj([
+                                ("scenario", s.into()),
+                                ("cell", tag.into()),
+                                ("rt_mixed", mixed.into()),
+                                ("rt_uniform", uniform.into()),
+                                ("mixed_speedup", sp.into()),
+                                ("acc_delta_pp", dacc.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
 
@@ -727,6 +921,12 @@ impl SweepReport {
                  (ΔACC {dacc:+.1}pp)"
             ));
         }
+        for (s, tag, mixed, uniform, sp, dacc) in self.finegrained_comparisons() {
+            out.push_str(&format!(
+                "\n{s}: {tag} RT {mixed:.4}s vs uniform {uniform:.4}s → {sp:.2}× \
+                 (ΔACC {dacc:+.1}pp)"
+            ));
+        }
         out
     }
 }
@@ -765,6 +965,23 @@ mod tests {
         assert_eq!(parse_cell("semi@online@inproc").unwrap().tag(), "live");
         assert!(parse_cell("semi@online@tcp@inproc").is_err(), "duplicate transport");
         assert!(parse_cell("semi@online@live@fixed").is_err(), "duplicate elasticity");
+        // degree tags compose with the elasticity/transport segments
+        let dg = parse_cell("semi@online@fixed@dega2m2").unwrap();
+        assert_eq!(
+            dg.degrees,
+            DegreeOverrides { attn: Some(2), mlp: Some(2), ..DegreeOverrides::default() }
+        );
+        assert!(!dg.degrees_auto && !dg.churn);
+        assert_eq!(dg.tag(), "fixed+dega2m2");
+        let auto = parse_cell("semi@online@degauto").unwrap();
+        assert!(auto.degrees_auto && !auto.degrees.any());
+        assert_eq!(auto.tag(), "live+degauto");
+        assert_eq!(parse_cell("semi@online@tcp@dega4").unwrap().tag(), "live+tcp+dega4");
+        assert!(parse_cell("semi@online@dega2@degauto").is_err(), "duplicate degree tag");
+        assert!(parse_cell("semi@online@degz2").is_err(), "unknown component");
+        assert!(parse_cell("semi@online@dega").is_err(), "component without a degree");
+        assert!(parse_cell("semi@online@dega2a4").is_err(), "duplicate component");
+        assert!(parse_cell("semi@online@deg").is_err(), "empty degree spec");
         let sc = parse_scenarios("a=burst:r1@x4:iters0-4;step:r2@x3:iters1-").unwrap();
         assert_eq!(sc.len(), 2);
         assert_eq!(sc[0].0, "a");
@@ -774,7 +991,7 @@ mod tests {
 
     #[test]
     fn presets_build() {
-        for p in ["smoke", "bursty", "churn", "mem"] {
+        for p in ["smoke", "bursty", "churn", "mem", "finegrained"] {
             let s = SweepSpec::preset(p).unwrap();
             assert!(!s.scenarios.is_empty());
             assert!(!s.cells.is_empty());
@@ -803,6 +1020,13 @@ mod tests {
         assert_eq!(m.scenarios[0].1.mem.len(), 1);
         assert_eq!(m.scenarios[1].1.mem.len(), 1);
         assert!(m.cells.iter().any(|x| !x.churn));
+        // the finegrained matrix pins a uniform fixed-E cell against an
+        // explicit a2m2 vector and the balancer-selected one
+        let fg = SweepSpec::preset("finegrained").unwrap();
+        assert_eq!(fg.scenarios.len(), 1);
+        let tags: Vec<String> = fg.cells.iter().map(|x| x.tag()).collect();
+        assert_eq!(tags, ["fixed", "fixed+dega2m2", "fixed+degauto"]);
+        assert!(fg.cells.iter().all(|x| !x.churn));
     }
 
     #[test]
@@ -908,5 +1132,90 @@ mod tests {
         // healthy cells emit an explicit null, keeping the schema stable
         r.cells[0].error = None;
         assert!(r.to_json().to_string().contains("\"error\":null"));
+    }
+
+    fn cell(replan: &str, tag: &str, rt: f64, acc: f64) -> SweepCell {
+        SweepCell {
+            scenario: "step6".into(),
+            strategy: "SEMI".into(),
+            replan: replan.into(),
+            cell: tag.into(),
+            rt,
+            final_acc: acc,
+            best_acc: acc,
+            comm_bytes: 10,
+            replans: 4,
+            chi_mean: 2.0,
+            chi_max: 6.0,
+            mem_hwm_bytes: 1 << 20,
+            mem_headroom_min_bytes: 1 << 19,
+            recompute_iters: 0,
+            error: None,
+            phases: None,
+        }
+    }
+
+    fn report_of(cells: Vec<SweepCell>) -> SweepReport {
+        SweepReport { name: "t".into(), model: "vit-tiny".into(), epochs: 2, iters: 4, cells }
+    }
+
+    /// The comparison-pairing regression: an `"error"` row on either
+    /// side of a pair must *omit* the entry.  Before the tag-matched
+    /// lookup, `find` returned the first non-error cell of the
+    /// strategy/replan, so an errored `live` online cell silently
+    /// paired the healthy `fixed` online cell against the `live` epoch
+    /// cell — a cross-tag comparison presented as an elastic speedup.
+    #[test]
+    fn comparison_pairs_skip_error_rows_on_either_side() {
+        let mut dead = cell("online", "live", 4.0, 0.0);
+        dead.error = Some("OutOfMemory".into());
+        let mut r = report_of(vec![
+            dead,
+            cell("epoch", "live", 2.0, 0.5),
+            cell("online", "fixed", 1.0, 0.5),
+            cell("epoch", "fixed", 0.5, 0.5),
+        ]);
+        assert!(
+            r.comparisons().is_empty(),
+            "errored online side must drop the pair, not fall through to another tag"
+        );
+        assert!(
+            r.churn_comparisons().is_empty(),
+            "an errored live cell is not an elastic result to compare against"
+        );
+        // heal the online live cell, fail the epoch live cell: the
+        // online/epoch pair is still incomplete, but live-vs-fixed now
+        // has both healthy sides — and only the replan-matched baseline
+        // counts (the cheaper epoch baseline must not leak into the
+        // online live cell's best-of pool)
+        r.cells[0].error = None;
+        r.cells[1].error = Some("Infeasible".into());
+        assert!(r.comparisons().is_empty(), "errored epoch side must drop the pair");
+        let cc = r.churn_comparisons();
+        assert_eq!(cc.len(), 1);
+        assert!((cc[0].2 - 1.0).abs() < 1e-12, "baseline = the online fixed cell, not epoch's");
+        // an errored baseline drops out of the best-of pool too
+        r.cells[2].error = Some("OutOfMemory".into());
+        assert!(r.churn_comparisons().is_empty());
+    }
+
+    #[test]
+    fn finegrained_comparisons_pair_degree_cells_with_their_uniform_base() {
+        let mut r = report_of(vec![
+            cell("online", "fixed", 3.0, 0.50),
+            cell("online", "fixed+dega2m2", 2.0, 0.50),
+            cell("online", "fixed+degauto", 2.0, 0.51),
+        ]);
+        let fc = r.finegrained_comparisons();
+        assert_eq!(fc.len(), 2);
+        assert_eq!(fc[0].1, "fixed+dega2m2");
+        assert!((fc[0].4 - 1.5).abs() < 1e-12, "mixed_speedup = rt_uniform / rt_mixed");
+        assert!((fc[1].5 - 1.0).abs() < 1e-9, "ΔACC in pp vs the uniform base");
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"mixed_speedup\":1.5"));
+        assert!(r.render().contains("fixed+degauto"));
+        // an errored uniform base drops every pair built on it
+        r.cells[0].error = Some("OutOfMemory".into());
+        assert!(r.finegrained_comparisons().is_empty());
     }
 }

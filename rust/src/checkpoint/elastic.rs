@@ -19,14 +19,22 @@
 //!   trainer's all-reduced-gradient invariant keeps every worker's copy
 //!   bit-identical, so worker 0's copy stands for all.
 //!
-//! Re-sharding onto `E'` requires `E' | hs` and `E' | heads` (checked by
-//! [`crate::runtime::presets::synthesize_with_e`]).  Optimizer momentum
-//! buffers are per-element and re-shard with exactly the same slicing.
+//! With fine-grained per-component degrees (DESIGN.md §18) each
+//! component concatenates over its **own** group — attention panels over
+//! ranks `0..degrees.attn`, FFN panels over ranks `0..degrees.mlp` — and
+//! re-sharding distributes back onto each target group.  Ranks outside a
+//! component's group hold zero-filled shard slots: they carry no model
+//! content, and both directions skip them.  Re-sharding onto `E'`
+//! requires `E' | hs`, with attention clamped to whole-head degrees
+//! (checked by [`crate::runtime::presets::synthesize_with_e`] /
+//! [`crate::runtime::presets::synthesize_with_degrees`]).  Optimizer
+//! momentum buffers are per-element and re-shard with exactly the same
+//! slicing.
 
 use std::collections::BTreeMap;
 
-use crate::model::{BlockShard, ModelState, RepParams};
-use crate::runtime::manifest::ModelInfo;
+use crate::model::{shard_degree, BlockShard, ModelState, RepParams};
+use crate::runtime::manifest::{Degrees, ModelInfo};
 use crate::tensor::Tensor;
 
 /// One transformer block's unsharded weights.
@@ -92,8 +100,11 @@ fn get_rows(src: &Tensor, at: usize, h: usize) -> Tensor {
     Tensor::from_vec(&[h, sc], src.data[at * sc..(at + h) * sc].to_vec())
 }
 
-/// Undo the 1D-TP split: concatenate every worker's shards into the full
-/// per-block matrices.  Pure copies — bitwise-exact.
+/// Undo the 1D-TP split: concatenate each component group's shards into
+/// the full per-block matrices.  Pure copies — bitwise-exact.  Attention
+/// panels come from ranks `0..degrees.attn`, FFN panels from ranks
+/// `0..degrees.mlp`; ranks outside a group hold zero slots with no model
+/// content and are skipped.
 pub fn gather_full(m: &ModelInfo, state: &ModelState) -> FullModel {
     let (hs, hsl, ffl) = (m.hs, m.hsl, m.ffl);
     let mut blocks = Vec::with_capacity(m.depth);
@@ -101,9 +112,9 @@ pub fn gather_full(m: &ModelInfo, state: &ModelState) -> FullModel {
         let b0 = &state.shards[0][k];
         let mut wqkv = Tensor::zeros(&[hs, 3 * hs]);
         let mut wo = Tensor::zeros(&[hs, hs]);
-        let mut w1 = Tensor::zeros(&[hs, m.e * ffl]);
-        let mut w2 = Tensor::zeros(&[m.e * ffl, hs]);
-        for w in 0..m.e {
+        let mut w1 = Tensor::zeros(&[hs, m.degrees.mlp * ffl]);
+        let mut w2 = Tensor::zeros(&[m.degrees.mlp * ffl, hs]);
+        for w in 0..m.degrees.attn {
             let b = &state.shards[w][k];
             // local q|k|v sections map to the full q|k|v sections at the
             // worker's contiguous head-column range
@@ -112,6 +123,9 @@ pub fn gather_full(m: &ModelInfo, state: &ModelState) -> FullModel {
                 put_cols(&mut wqkv, sec * hs + w * hsl, &local);
             }
             put_rows(&mut wo, w * hsl, &b.wo);
+        }
+        for w in 0..m.degrees.mlp {
+            let b = &state.shards[w][k];
             put_cols(&mut w1, w * ffl, &b.w1);
             put_rows(&mut w2, w * ffl, &b.w2);
         }
@@ -129,30 +143,43 @@ pub fn gather_full(m: &ModelInfo, state: &ModelState) -> FullModel {
     FullModel { blocks, rep: state.rep.clone() }
 }
 
-/// Re-apply the 1D-TP split for a (possibly different) worker count.
-/// `m2` must describe the same model geometry (`hs`, `depth`) with its
-/// own `e`-derived shard widths.  Pure copies — bitwise-exact, and an
-/// exact inverse of [`gather_full`] for any valid `e`.
+/// Re-apply the 1D-TP split for a (possibly different) worker count
+/// and/or degree vector.  `m2` must describe the same model geometry
+/// (`hs`, `depth`) with its own degree-derived shard widths.  Pure
+/// copies — bitwise-exact, and an exact inverse of [`gather_full`] for
+/// any valid geometry.  Ranks outside a component's target group get
+/// zero-filled slots at the member shapes (the canonical encoding of
+/// "holds no model content").
 pub fn shard_full(m2: &ModelInfo, full: &FullModel) -> ModelState {
     let (hs, hsl, ffl) = (m2.hs, m2.hsl, m2.ffl);
     let mut shards = Vec::with_capacity(m2.e);
     for w in 0..m2.e {
         let mut blocks = Vec::with_capacity(m2.depth);
         for fb in &full.blocks {
-            let mut wqkv = Tensor::zeros(&[hs, 3 * hsl]);
-            for sec in 0..3 {
-                let panel = get_cols(&fb.wqkv, sec * hs + w * hsl, hsl);
-                put_cols(&mut wqkv, sec * hsl, &panel);
-            }
+            let (wqkv, wo) = if w < m2.degrees.attn {
+                let mut wqkv = Tensor::zeros(&[hs, 3 * hsl]);
+                for sec in 0..3 {
+                    let panel = get_cols(&fb.wqkv, sec * hs + w * hsl, hsl);
+                    put_cols(&mut wqkv, sec * hsl, &panel);
+                }
+                (wqkv, get_rows(&fb.wo, w * hsl, hsl))
+            } else {
+                (Tensor::zeros(&[hs, 3 * hsl]), Tensor::zeros(&[hsl, hs]))
+            };
+            let (w1, w2) = if w < m2.degrees.mlp {
+                (get_cols(&fb.w1, w * ffl, ffl), get_rows(&fb.w2, w * ffl, ffl))
+            } else {
+                (Tensor::zeros(&[hs, ffl]), Tensor::zeros(&[ffl, hs]))
+            };
             blocks.push(BlockShard {
                 ln1_g: fb.ln1_g.clone(),
                 ln1_b: fb.ln1_b.clone(),
                 wqkv,
-                wo: get_rows(&fb.wo, w * hsl, hsl),
+                wo,
                 ln2_g: fb.ln2_g.clone(),
                 ln2_b: fb.ln2_b.clone(),
-                w1: get_cols(&fb.w1, w * ffl, ffl),
-                w2: get_rows(&fb.w2, w * ffl, ffl),
+                w1,
+                w2,
             });
         }
         shards.push(blocks);
@@ -187,6 +214,9 @@ pub fn reshard_moments(
         for w in 0..m1.e {
             for k in 0..m1.depth {
                 for n in BlockShard::names() {
+                    if w >= shard_degree(m1, n) {
+                        continue; // non-member slot: no momentum content
+                    }
                     if let Some(b) = bufs.get(&format!("{w}.{k}.{n}")) {
                         old.shards[w][k].get_mut(n).data.copy_from_slice(&b.data);
                     }
@@ -197,6 +227,9 @@ pub fn reshard_moments(
         for w in 0..m2.e {
             for k in 0..m2.depth {
                 for n in BlockShard::names() {
+                    if w >= shard_degree(m2, n) {
+                        continue; // non-members never step, so no buffer
+                    }
                     out.insert(format!("{w}.{k}.{n}"), new.shards[w][k].get(n).clone());
                 }
             }
@@ -235,7 +268,21 @@ mod tests {
             ffl: 4 * 32 / e,
             params_total: 0,
             params_per_worker: 0,
+            degrees: Degrees::uniform(e),
         }
+    }
+
+    /// Mixed per-component degrees over `e` workers: attn/mlp shard
+    /// widths follow their own group sizes.
+    fn info_mixed(e: usize, d: Degrees) -> ModelInfo {
+        let mut m = info(e);
+        assert!(d.attn <= e && d.mlp <= e && 32 % d.attn == 0 && 8 % d.attn == 0);
+        assert_eq!((4 * 32) % d.mlp, 0);
+        m.hsl = 32 / d.attn;
+        m.hl = 8 / d.attn;
+        m.ffl = 4 * 32 / d.mlp;
+        m.degrees = d;
+        m
     }
 
     #[test]
@@ -276,6 +323,91 @@ mod tests {
             full,
             "8→4 changed the full model"
         );
+    }
+
+    #[test]
+    fn mixed_roundtrip_members_bitwise_nonmembers_zeroed() {
+        // attn group = ranks 0..2, mlp group = all 4.  Re-sharding onto
+        // the same mixed geometry must return member panels bitwise and
+        // canonicalize non-member attn slots (which carry no model
+        // content) to zero.
+        let d = Degrees { embed: 4, attn: 2, mlp: 4, head: 4 };
+        let m = info_mixed(4, d);
+        let s = ModelState::init(&m, 11);
+        let back = shard_full(&m, &gather_full(&m, &s));
+        for w in 0..4 {
+            for k in 0..2 {
+                for n in BlockShard::names() {
+                    if w < shard_degree(&m, n) {
+                        assert_eq!(
+                            s.shards[w][k].get(n).data,
+                            back.shards[w][k].get(n).data,
+                            "member w={w} k={k} {n}"
+                        );
+                    } else {
+                        assert!(
+                            back.shards[w][k].get(n).data.iter().all(|&v| v == 0.0),
+                            "non-member w={w} k={k} {n} not zeroed"
+                        );
+                        assert_eq!(
+                            back.shards[w][k].get(n).dims,
+                            s.shards[w][k].get(n).dims,
+                            "non-member slot shape w={w} k={k} {n}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_divisor_chain_preserves_full_model() {
+        // uniform(4) → mixed attn=1/mlp=2 over 4 → uniform(8) (every
+        // degree = E) → mixed attn=2/mlp=8 over 8 → uniform(4): the full
+        // model must be bitwise stable across every hop, including the
+        // degenerate degrees e_c = 1 and e_c = E.
+        let m4 = info(4);
+        let full = gather_full(&m4, &ModelState::init(&m4, 9));
+        let ma = info_mixed(4, Degrees { embed: 1, attn: 1, mlp: 2, head: 1 });
+        let fa = gather_full(&ma, &shard_full(&ma, &full));
+        assert_eq!(full, fa, "4 → mixed(a1,m2) changed the full model");
+        let m8 = info(8);
+        let fb = gather_full(&m8, &shard_full(&m8, &fa));
+        assert_eq!(full, fb, "mixed → uniform(8) changed the full model");
+        let mc = info_mixed(8, Degrees { embed: 8, attn: 2, mlp: 8, head: 8 });
+        let fc = gather_full(&mc, &shard_full(&mc, &fb));
+        assert_eq!(full, fc, "uniform(8) → mixed(a2,m8) changed the full model");
+        let fd = gather_full(&m4, &shard_full(&m4, &fc));
+        assert_eq!(full, fd, "mixed → uniform(4) changed the full model");
+    }
+
+    #[test]
+    fn reshard_moments_mixed_keeps_member_keys_only() {
+        let m1 = info(4);
+        let d = Degrees { embed: 4, attn: 2, mlp: 4, head: 4 };
+        let m2 = info_mixed(4, d);
+        let src = ModelState::init(&m1, 5);
+        let mut bufs = BTreeMap::new();
+        for w in 0..4 {
+            for k in 0..2 {
+                for n in BlockShard::names() {
+                    bufs.insert(format!("{w}.{k}.{n}"), src.shards[w][k].get(n).clone());
+                }
+            }
+        }
+        bufs.insert("rep.w_head".into(), src.rep.w_head.clone());
+        let out = reshard_moments(&m1, &m2, &bufs);
+        // attn buffers only for ranks 0..2; mlp buffers for all 4
+        assert!(out.contains_key("1.0.wqkv"));
+        assert!(!out.contains_key("2.0.wqkv"), "non-member attn buffer leaked");
+        assert!(!out.contains_key("3.1.wo"), "non-member attn buffer leaked");
+        assert!(out.contains_key("3.1.w1"));
+        // member buffers re-slice exactly like the weights
+        let want = reshard_state(&m1, &m2, &src);
+        assert_eq!(out["1.0.wqkv"].data, want.shards[1][0].wqkv.data);
+        assert_eq!(out["3.1.w2"].data, want.shards[3][1].w2.data);
+        // replicated buffers pass through untouched
+        assert_eq!(out["rep.w_head"].data, src.rep.w_head.data);
     }
 
     #[test]

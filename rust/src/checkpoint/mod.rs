@@ -125,6 +125,28 @@ fn pu32s(j: &Json, key: &str) -> Result<Vec<u32>, CkptError> {
         .collect()
 }
 
+/// The snapshot's per-component degree vector (`meta.model.deg`,
+/// DESIGN.md §18).  Lenient: snapshots from before fine-grained degrees
+/// carry no `deg` key and read back as the uniform vector at `ck_e` —
+/// exactly the geometry those runs were sharded with.
+fn degrees_from_meta(
+    mm: &Json,
+    ck_e: usize,
+) -> Result<crate::runtime::manifest::Degrees, CkptError> {
+    let Some(v) = mm.opt("deg") else {
+        return Ok(crate::runtime::manifest::Degrees::uniform(ck_e));
+    };
+    let arr = v.arr().map_err(bad)?;
+    if arr.len() != 4 {
+        return Err(bad(format!("model.deg has {} entries, expected 4", arr.len())));
+    }
+    let mut d = [0usize; 4];
+    for (slot, item) in d.iter_mut().zip(arr) {
+        *slot = item.usize().map_err(bad)?;
+    }
+    Ok(crate::runtime::manifest::Degrees::from_array(d))
+}
+
 // ---------------------------------------------------------------------------
 // Config fingerprint
 // ---------------------------------------------------------------------------
@@ -483,6 +505,14 @@ pub fn save_trainer(t: &Trainer) -> Snapshot {
                 ("heads", m.heads.into()),
                 ("bs", m.bs.into()),
                 ("ffl", m.ffl.into()),
+                // per-component TP degree vector (DESIGN.md §18), in
+                // [`Degrees::as_array`] order [embed, attn, mlp, head];
+                // pre-fine-grained snapshots carry none and read back as
+                // the uniform vector
+                (
+                    "deg",
+                    Json::Arr(m.degrees.as_array().iter().map(|&d| d.into()).collect()),
+                ),
             ]),
         ),
         ("cfg_fp", cfg_fingerprint(&t.cfg).into()),
@@ -758,10 +788,14 @@ pub fn restore_trainer(t: &mut Trainer, snap: &Snapshot) -> Result<(), CkptError
     };
 
     let ck_e = pusize(mm, "e")?;
-    if ck_e == cur.e {
+    let ck_deg = degrees_from_meta(mm, ck_e)?;
+    // bitwise in-place restore requires the whole degree vector to
+    // match, not just the worker count — a mixed-degree snapshot landing
+    // on a uniform trainer (or vice versa) re-shards elastically
+    if ck_e == cur.e && ck_deg == cur.degrees {
         restore_same_e(t, snap, &cur)?;
     } else {
-        restore_elastic(t, snap, ck_e)?;
+        restore_elastic(t, snap, ck_e, ck_deg)?;
     }
 
     t.global_iter = giter;
@@ -956,10 +990,16 @@ fn restore_same_e(t: &mut Trainer, snap: &Snapshot, m: &ModelInfo) -> Result<(),
 /// and the pretest cost fits recompute for the new shard widths, so the
 /// Eq. 2/3 allocation re-runs before the first resumed iteration.
 /// Continuation is loss-equivalent, not bitwise (DESIGN.md §13).
-fn restore_elastic(t: &mut Trainer, snap: &Snapshot, ck_e: usize) -> Result<(), CkptError> {
+fn restore_elastic(
+    t: &mut Trainer,
+    snap: &Snapshot,
+    ck_e: usize,
+    ck_deg: crate::runtime::manifest::Degrees,
+) -> Result<(), CkptError> {
     let new_m = t.rt.manifest.model.clone();
-    let old_man = crate::runtime::presets::synthesize_with_e(&new_m.name, ck_e)
-        .map_err(|e| CkptError::Incompatible(format!("elastic resume: {e}")))?;
+    let old_man =
+        crate::runtime::presets::synthesize_with_degrees(&new_m.name, ck_e, ck_deg)
+            .map_err(|e| CkptError::Incompatible(format!("elastic resume: {e}")))?;
     let old_m = old_man.model;
     // model parameters: fill the old geometry, undo TP, re-shard
     let mut old_state = zero_state(&old_m);
@@ -996,6 +1036,12 @@ fn restore_elastic(t: &mut Trainer, snap: &Snapshot, ck_e: usize) -> Result<(), 
         for w in 0..new_m.e {
             for k in 0..new_m.depth {
                 for n in BlockShard::names() {
+                    // ranks outside a tensor's component group never step
+                    // it — their moment keys stay absent, exactly like
+                    // the live path (`elastic::reshard_moments`)
+                    if w >= crate::model::shard_degree(&new_m, n) {
+                        continue;
+                    }
                     t.opt
                         .bufs
                         .insert(format!("{w}.{k}.{n}"), mom.shards[w][k].get(n).clone());

@@ -209,6 +209,97 @@ impl Comm {
         Ok(())
     }
 
+    /// All-reduce over a **component sub-group** (DESIGN.md §18): the
+    /// rank prefix `0..bufs.len()` of an `e_total`-rank process group.
+    /// Only members synchronize (`barrier_of`), only members are
+    /// charged, and the ring cost is priced at the *sub-group* size —
+    /// non-member clocks never move.  When the sub-group is the whole
+    /// group this delegates to [`Comm::all_reduce`], so uniform-degree
+    /// runs keep the historic accounting and trace labels bit for bit.
+    /// Sub-group collectives are labelled `{phase}@g{n}` in traces and
+    /// transport errors.
+    pub fn all_reduce_group(
+        &mut self,
+        clocks: &mut Clocks,
+        phase: &str,
+        bufs: &mut [Tensor],
+        e_total: usize,
+    ) -> Result<(), TransportError> {
+        let g = bufs.len();
+        if g == e_total {
+            return self.all_reduce(clocks, phase, bufs);
+        }
+        debug_assert!(g >= 1 && g < e_total);
+        debug_assert_eq!(e_total, clocks.e());
+        let label = format!("{phase}@g{g}");
+        let bytes = bufs[0].size_bytes();
+        let members: Vec<usize> = (0..g).collect();
+        let pre = if self.tracing() {
+            Some(self.trace_pre(clocks, &members, &label))
+        } else {
+            None
+        };
+        self.transport.all_reduce_prefix_batch(&label, &mut [bufs], e_total)?;
+        clocks.barrier_of(&members);
+        let dt = self.cost.ring_allreduce(g, bytes);
+        for &r in &members {
+            clocks.advance_comm(r, dt);
+        }
+        self.stats.allreduce_ops += 1;
+        self.stats.allreduce_bytes += bytes as u64;
+        if let Some(t0) = pre {
+            self.trace_xfer(&members, Kind::CommXfer, &label, t0, dt, bytes as u64);
+        }
+        Ok(())
+    }
+
+    /// Several independent sub-group all-reduces at once, all over the
+    /// same `e_total`-rank process group but with per-group member
+    /// counts.  Data moves in one overlapped transport submission; the
+    /// accounting replays sequential [`Comm::all_reduce_group`] calls
+    /// group by group (member-only barriers and charges), so clocks,
+    /// stats, and traces are bitwise identical to the unbatched form.
+    pub fn all_reduce_group_batch(
+        &mut self,
+        clocks: &mut Clocks,
+        phase: &str,
+        groups: &mut [&mut [Tensor]],
+        e_total: usize,
+    ) -> Result<(), TransportError> {
+        if groups.is_empty() {
+            return Ok(());
+        }
+        if groups.iter().all(|g| g.len() == e_total) {
+            return self.all_reduce_batch(clocks, phase, groups);
+        }
+        let metas: Vec<(usize, usize)> =
+            groups.iter().map(|g| (g.len(), g[0].size_bytes())).collect();
+        self.transport.all_reduce_prefix_batch(phase, groups, e_total)?;
+        for (g, bytes) in metas {
+            // full-size groups inside a mixed batch keep the plain phase
+            // label, exactly like the unbatched delegate path
+            let label =
+                if g == e_total { phase.to_string() } else { format!("{phase}@g{g}") };
+            let members: Vec<usize> = (0..g).collect();
+            let pre = if self.tracing() {
+                Some(self.trace_pre(clocks, &members, &label))
+            } else {
+                None
+            };
+            clocks.barrier_of(&members);
+            let dt = self.cost.ring_allreduce(g, bytes);
+            for &r in &members {
+                clocks.advance_comm(r, dt);
+            }
+            self.stats.allreduce_ops += 1;
+            self.stats.allreduce_bytes += bytes as u64;
+            if let Some(t0) = pre {
+                self.trace_xfer(&members, Kind::CommXfer, &label, t0, dt, bytes as u64);
+            }
+        }
+        Ok(())
+    }
+
     /// All-gather of per-rank scalars (e.g. the T_i runtime list of
     /// Algorithm 2 line 2). Returns the gathered vector.
     pub fn all_gather_scalars(&mut self, clocks: &mut Clocks, vals: &[f64]) -> Vec<f64> {
@@ -477,6 +568,122 @@ mod tests {
         assert!(m.iter().any(|s| s.kind == Kind::CommXfer && s.bytes > 0));
         assert!(m.iter().any(|s| s.kind == Kind::Migration && s.label == "mig_scatter"));
         assert!(m.iter().any(|s| s.kind == Kind::Detect));
+    }
+
+    #[test]
+    fn group_allreduce_full_size_delegates_to_legacy_path() {
+        // g == e_total must be indistinguishable from plain all_reduce
+        let mk = |grouped: bool| {
+            let mut c = mk_comm();
+            let mut k = Clocks::new(3);
+            k.advance(2, 1.5);
+            let mut bufs: Vec<Tensor> =
+                (0..3).map(|r| Tensor::from_vec(&[2], vec![r as f32, 1.0])).collect();
+            if grouped {
+                c.all_reduce_group(&mut k, "p", &mut bufs, 3).unwrap();
+            } else {
+                c.all_reduce(&mut k, "p", &mut bufs).unwrap();
+            }
+            let clocks: Vec<u64> = (0..3).map(|r| k.now(r).to_bits()).collect();
+            (bufs[0].data.clone(), clocks, c.stats.allreduce_bytes)
+        };
+        assert_eq!(mk(true), mk(false));
+    }
+
+    #[test]
+    fn group_allreduce_charges_members_only() {
+        let mut c = mk_comm();
+        let mut k = Clocks::new(4);
+        k.advance(0, 1.0);
+        k.advance(3, 9.0); // non-member straggler must NOT drag the group
+        let mut bufs = vec![
+            Tensor::from_vec(&[2], vec![1.0, 2.0]),
+            Tensor::from_vec(&[2], vec![10.0, 20.0]),
+        ];
+        c.all_reduce_group(&mut k, "p", &mut bufs, 4).unwrap();
+        for b in &bufs {
+            assert_eq!(b.data, vec![11.0, 22.0]);
+        }
+        // members barrier to the member frontier (1.0) + g-sized ring cost
+        let dt = c.cost.ring_allreduce(2, 8);
+        assert_eq!(k.now(0), 1.0 + dt);
+        assert_eq!(k.now(1), 1.0 + dt);
+        // non-members untouched — bitwise
+        assert_eq!(k.now(2), 0.0);
+        assert_eq!(k.now(3), 9.0);
+        assert_eq!(c.stats.allreduce_ops, 1);
+        assert_eq!(c.stats.allreduce_bytes, 8);
+    }
+
+    #[test]
+    fn group_batch_matches_sequential_group_calls() {
+        let mk_bufs = || {
+            (
+                vec![
+                    Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]),
+                    Tensor::from_vec(&[3], vec![4.0, 5.0, 6.0]),
+                ],
+                vec![
+                    Tensor::from_vec(&[2], vec![0.1, 0.2]),
+                    Tensor::from_vec(&[2], vec![0.3, 0.4]),
+                    Tensor::from_vec(&[2], vec![0.5, 0.6]),
+                    Tensor::from_vec(&[2], vec![0.7, 0.8]),
+                ],
+            )
+        };
+        let (mut s1, mut s2) = mk_bufs();
+        let mut cs = mk_comm();
+        let mut ks = Clocks::new(4);
+        ks.advance(1, 2.0);
+        cs.all_reduce_group(&mut ks, "p", &mut s1, 4).unwrap();
+        cs.all_reduce_group(&mut ks, "p", &mut s2, 4).unwrap();
+
+        let (mut b1, mut b2) = mk_bufs();
+        let mut cb = mk_comm();
+        let mut kb = Clocks::new(4);
+        kb.advance(1, 2.0);
+        cb.all_reduce_group_batch(&mut kb, "p", &mut [&mut b1[..], &mut b2[..]], 4)
+            .unwrap();
+
+        for (s, b) in s1.iter().zip(&b1).chain(s2.iter().zip(&b2)) {
+            assert_eq!(s.data, b.data);
+        }
+        for r in 0..4 {
+            assert_eq!(ks.now(r).to_bits(), kb.now(r).to_bits(), "rank {r} clock");
+        }
+        assert_eq!(cs.stats.allreduce_ops, cb.stats.allreduce_ops);
+        assert_eq!(cs.stats.allreduce_bytes, cb.stats.allreduce_bytes);
+    }
+
+    #[test]
+    fn tracing_is_zero_observer_on_group_collectives() {
+        let run = |traced: bool| {
+            let mut c = mk_comm();
+            if traced {
+                c.tracer = Some(Arc::new(Mutex::new(Tracer::new(4, 1024, true, false))));
+            }
+            let mut k = Clocks::new(4);
+            k.advance(1, 2.0);
+            let mut g1: Vec<Tensor> = (0..2).map(|_| Tensor::zeros(&[4])).collect();
+            c.all_reduce_group(&mut k, "p", &mut g1, 4).unwrap();
+            let mut g2: Vec<Tensor> = (0..2).map(|_| Tensor::zeros(&[4])).collect();
+            let mut g3: Vec<Tensor> = (0..4).map(|_| Tensor::zeros(&[2])).collect();
+            c.all_reduce_group_batch(&mut k, "p", &mut [&mut g2[..], &mut g3[..]], 4)
+                .unwrap();
+            let bits: Vec<u64> = (0..4).map(|r| k.now(r).to_bits()).collect();
+            (bits, c.stats.total_bytes(), c)
+        };
+        let (ka, ba, _) = run(false);
+        let (kb, bb, cb) = run(true);
+        assert_eq!(ka, kb, "clocks must be bitwise identical traced vs untraced");
+        assert_eq!(ba, bb);
+        let tr = cb.tracer.expect("tracer attached");
+        let tr = tr.lock().unwrap();
+        let m = tr.merged();
+        assert!(
+            m.iter().any(|s| s.kind == Kind::CommXfer && s.label == "p@g2"),
+            "sub-group transfers must carry the @g label"
+        );
     }
 
     #[test]

@@ -405,6 +405,31 @@ pub trait Transport: fmt::Debug + Send {
         Ok(())
     }
 
+    /// Reduce several independent **prefix sub-groups** of one
+    /// `e_total`-rank process group (DESIGN.md §18): `groups[i]` spans
+    /// ranks `0..groups[i].len()`, with `1 ≤ len ≤ e_total`.  Each
+    /// sub-group's f32 association order must equal the fixed stride
+    /// loop over its own size — the same order a dedicated group of
+    /// that size would use — so mixed-degree sums stay bitwise equal
+    /// across transports and thread counts.
+    ///
+    /// The default reduces each sub-group in place over its own slots
+    /// (in-process semantics).  A wire transport over a fixed
+    /// `e_total`-rank tree can reuse that tree verbatim: membership
+    /// `rank ≡ 0 (mod 2d)` is size-independent, every member's parent
+    /// is a member, and non-member subtrees contribute empty payloads
+    /// that fold to nothing — so pruning by prefix reproduces the
+    /// smaller stride loop bit for bit
+    /// (`tests::binomial_prefix_pruning_matches_stride_loop`).
+    fn all_reduce_prefix_batch(
+        &mut self,
+        phase: &str,
+        groups: &mut [&mut [Tensor]],
+        _e_total: usize,
+    ) -> Result<(), TransportError> {
+        self.all_reduce_batch(phase, groups)
+    }
+
     /// Make the transport ready for a group of `e` ranks (spawn or
     /// re-spawn worker processes as needed).  A no-op for in-process
     /// transports.  Called by `Trainer::transition_to` after a live
@@ -847,6 +872,69 @@ impl Transport for LocalTcp {
         Ok(())
     }
 
+    /// Prefix sub-groups over the `e_total`-rank process tree: members
+    /// (`r < g.len()`) get real Work payloads, non-members get
+    /// zero-length Work.  Non-member subtrees (all descendants of a
+    /// non-member outrank it, hence are non-members too) carry empty
+    /// partials that members skip, so each sub-group's sum replays the
+    /// stride loop over its own size — bitwise equal to [`InProc`].
+    /// Rank 0 is a member of every sub-group, so the Sum frame is
+    /// always full-length.
+    fn all_reduce_prefix_batch(
+        &mut self,
+        phase: &str,
+        groups: &mut [&mut [Tensor]],
+        e_total: usize,
+    ) -> Result<(), TransportError> {
+        if groups.is_empty() {
+            return Ok(());
+        }
+        if groups.iter().all(|g| g.len() == e_total) {
+            // uniform degrees: the historic full-group path, verbatim
+            return self.all_reduce_batch(phase, groups);
+        }
+        self.ensure_group(e_total)?;
+        let seq0 = self.seq;
+        self.seq = self.seq.wrapping_add(groups.len() as u32);
+        for (gi, g) in groups.iter().enumerate() {
+            debug_assert!(
+                !g.is_empty() && g.len() <= e_total,
+                "prefix sub-group of {} outside 1..={e_total}",
+                g.len()
+            );
+            let seq = seq0.wrapping_add(gi as u32);
+            for r in 0..e_total {
+                let payload =
+                    if r < g.len() { f32s_to_bytes(&g[r].data) } else { Vec::new() };
+                if let Err(err) =
+                    write_frame(&mut self.links[r].conn, FrameKind::Work, r as u16, seq, &payload)
+                {
+                    return Err(self.classify(err, phase));
+                }
+            }
+        }
+        for (gi, g) in groups.iter_mut().enumerate() {
+            let seq = seq0.wrapping_add(gi as u32);
+            let f = match expect_frame(&mut self.links[0].conn, FrameKind::Sum, Some(seq)) {
+                Ok(f) => f,
+                Err(err) => return Err(self.classify(err, phase)),
+            };
+            let want = g[0].data.len() * 4;
+            if f.payload.len() != want {
+                let reason = format!(
+                    "sum length mismatch in {phase}: got {} bytes, want {want}",
+                    f.payload.len()
+                );
+                return Err(self.classify(TransportError::BadFrame { reason }, phase));
+            }
+            let sum = bytes_to_f32s(&f.payload);
+            for b in g.iter_mut() {
+                b.data.copy_from_slice(&sum);
+            }
+        }
+        Ok(())
+    }
+
     fn kill_rank(&mut self, rank: usize) -> bool {
         match self.links.get_mut(rank) {
             Some(link) => link.child.kill().is_ok(),
@@ -980,6 +1068,11 @@ pub fn rank_serve(rank: usize, e: usize, connect: &str, timeout_ms: u64) -> Resu
         let mut acc = bytes_to_f32s(&frame.payload);
         for conn in child_conns.iter_mut() {
             let part = expect_frame(conn, FrameKind::Partial, Some(seq))?;
+            if part.payload.is_empty() {
+                // prefix sub-group collective (DESIGN.md §18): the child
+                // heads a non-member subtree and contributes nothing
+                continue;
+            }
             if part.payload.len() != frame.payload.len() {
                 return Err(TransportError::BadFrame {
                     reason: format!(
@@ -1210,6 +1303,74 @@ mod tests {
                 let b: Vec<u32> = wire.iter().map(|v| v.to_bits()).collect();
                 assert_eq!(a, b, "binomial ≠ stride loop at e={e}, n={n}");
             }
+        }
+    }
+
+    /// The mixed-degree keystone (DESIGN.md §18): pruning the fixed
+    /// `e_total` binomial tree to a rank prefix `0..g` — zero-length
+    /// payloads for non-members, empty partials skipped — reproduces the
+    /// `g`-sized stride loop bit for bit, for every (e_total, g).  This
+    /// is the exact computation `LocalTcp::all_reduce_prefix_batch`
+    /// distributes across processes.
+    #[test]
+    fn binomial_prefix_pruning_matches_stride_loop() {
+        fn prefix_sum(rank: usize, e_total: usize, g: usize, inputs: &[Vec<f32>]) -> Vec<f32> {
+            let mut acc = if rank < g { inputs[rank].clone() } else { Vec::new() };
+            for c in children_of(rank, e_total) {
+                let part = prefix_sum(c, e_total, g, inputs);
+                if part.is_empty() {
+                    continue;
+                }
+                assert!(
+                    !acc.is_empty(),
+                    "non-member rank {rank} got a non-empty partial (g={g}, e={e_total})"
+                );
+                for (a, b) in acc.iter_mut().zip(part) {
+                    *a += b;
+                }
+            }
+            acc
+        }
+        for seed in 0..CASES as u64 {
+            let mut rng = Rng::new(seed ^ 0x9f17);
+            for e_total in 1..=9 {
+                for g in 1..=e_total {
+                    let n = 1 + rng.below(48);
+                    let inputs: Vec<Vec<f32>> =
+                        (0..g).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+                    let mut bufs: Vec<Tensor> =
+                        inputs.iter().map(|v| Tensor::from_vec(&[n], v.clone())).collect();
+                    tree_reduce_inplace(&mut bufs);
+                    let wire = prefix_sum(0, e_total, g, &inputs);
+                    let a: Vec<u32> = bufs[0].data.iter().map(|v| v.to_bits()).collect();
+                    let b: Vec<u32> = wire.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(a, b, "prefix tree ≠ stride loop at e={e_total}, g={g}, n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_batch_default_reduces_each_group_over_its_own_size() {
+        // the trait default (InProc semantics) reduces ragged sub-groups
+        // independently, matching per-group stride loops bitwise
+        let mut t = InProc;
+        let mut a = vec![
+            Tensor::from_vec(&[2], vec![1.0, 2.0]),
+            Tensor::from_vec(&[2], vec![10.0, 20.0]),
+        ];
+        let mut b = vec![
+            Tensor::from_vec(&[2], vec![1.0, 1.0]),
+            Tensor::from_vec(&[2], vec![2.0, 2.0]),
+            Tensor::from_vec(&[2], vec![3.0, 3.0]),
+            Tensor::from_vec(&[2], vec![4.0, 4.0]),
+        ];
+        t.all_reduce_prefix_batch("test", &mut [&mut a[..], &mut b[..]], 4).unwrap();
+        for s in &a {
+            assert_eq!(s.data, vec![11.0, 22.0]);
+        }
+        for s in &b {
+            assert_eq!(s.data, vec![10.0, 10.0]);
         }
     }
 

@@ -9,6 +9,36 @@ use anyhow::{bail, Context, Result};
 
 use crate::contention::control::ControlCfg;
 use crate::contention::ScenarioSpec;
+use crate::runtime::manifest::Degrees;
+
+/// Per-component TP degree overrides (`--e-embed/--e-attn/--e-mlp/
+/// --e-head`, DESIGN.md §18).  Unset components fall back to the
+/// effective global `e` (after `--e`), with attention additionally
+/// clamped to a whole-head divisor by the manifest synthesis.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DegreeOverrides {
+    pub embed: Option<usize>,
+    pub attn: Option<usize>,
+    pub mlp: Option<usize>,
+    pub head: Option<usize>,
+}
+
+impl DegreeOverrides {
+    pub fn any(&self) -> bool {
+        self.embed.is_some() || self.attn.is_some() || self.mlp.is_some() || self.head.is_some()
+    }
+
+    /// Concrete degree vector over `e` workers: overridden components as
+    /// requested, the rest uniform at `e`.
+    pub fn resolve(&self, e: usize) -> Degrees {
+        Degrees {
+            embed: self.embed.unwrap_or(e),
+            attn: self.attn.unwrap_or(e),
+            mlp: self.mlp.unwrap_or(e),
+            head: self.head.unwrap_or(e),
+        }
+    }
+}
 
 /// Which execution backend runs the manifest executables.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -498,6 +528,14 @@ pub struct RunCfg {
     /// Native backend only: the manifest re-synthesizes with the new
     /// shard widths (`runtime::presets::synthesize_with_e`).
     pub e_override: Option<usize>,
+    /// per-component TP degree overrides (`--e-attn` etc., DESIGN.md
+    /// §18); components left unset default to the effective global `e`.
+    pub degree_overrides: DegreeOverrides,
+    /// `--degrees auto`: let the balancer pick per-component degrees
+    /// from the blended pretest cost fits and the initial χ profile
+    /// (`balancer::select_degrees`) instead of uniform `e`.  Explicit
+    /// `--e-*` overrides win over the auto choice per component.
+    pub degrees_auto: bool,
 }
 
 impl RunCfg {
@@ -512,6 +550,8 @@ impl RunCfg {
             net: NetCfg::default(),
             control: ControlCfg::default(),
             e_override: None,
+            degree_overrides: DegreeOverrides::default(),
+            degrees_auto: false,
         }
     }
 
@@ -572,6 +612,17 @@ pub fn apply_overrides(cfg: &mut RunCfg, kv: &BTreeMap<String, String>) -> Resul
             "emulate-wall" => cfg.train.emulate_wall = true,
             "threads" => cfg.train.threads = v.parse().context("threads")?,
             "e" => cfg.e_override = Some(v.parse().context("e")?),
+            "e-embed" => cfg.degree_overrides.embed = Some(v.parse().context("e-embed")?),
+            "e-attn" => cfg.degree_overrides.attn = Some(v.parse().context("e-attn")?),
+            "e-mlp" => cfg.degree_overrides.mlp = Some(v.parse().context("e-mlp")?),
+            "e-head" => cfg.degree_overrides.head = Some(v.parse().context("e-head")?),
+            "degrees" => match v.as_str() {
+                "auto" => cfg.degrees_auto = true,
+                _ => bail!(
+                    "--degrees only supports 'auto' (use --e-attn/--e-mlp/\
+                     --e-embed/--e-head for explicit per-component degrees)"
+                ),
+            },
             "ckpt-dir" => cfg.train.ckpt_dir = Some(PathBuf::from(v)),
             "ckpt-every" => cfg.train.ckpt_every = v.parse().context("ckpt-every")?,
             "resume" => cfg.train.resume = Some(PathBuf::from(v)),
@@ -808,6 +859,30 @@ mod tests {
         let (_, kv) = parse_kv_args(&["--ckpt-every=soon".to_string()]).unwrap();
         assert!(apply_overrides(&mut cfg, &kv).is_err());
         let (_, kv) = parse_kv_args(&["--e=two".to_string()]).unwrap();
+        assert!(apply_overrides(&mut cfg, &kv).is_err());
+    }
+
+    #[test]
+    fn degree_overrides_apply_and_resolve() {
+        let mut cfg = RunCfg::new("vit-tiny");
+        assert!(!cfg.degree_overrides.any());
+        assert_eq!(cfg.degree_overrides.resolve(4), Degrees::uniform(4));
+        let args: Vec<String> = ["--e", "4", "--e-attn", "2", "--e-mlp", "2"]
+            .iter().map(|s| s.to_string()).collect();
+        let (_, kv) = parse_kv_args(&args).unwrap();
+        apply_overrides(&mut cfg, &kv).unwrap();
+        assert!(cfg.degree_overrides.any());
+        assert_eq!(
+            cfg.degree_overrides.resolve(4),
+            Degrees { embed: 4, attn: 2, mlp: 2, head: 4 }
+        );
+        assert!(!cfg.degrees_auto);
+        let (_, kv) = parse_kv_args(&["--degrees".to_string(), "auto".to_string()]).unwrap();
+        apply_overrides(&mut cfg, &kv).unwrap();
+        assert!(cfg.degrees_auto);
+        let (_, kv) = parse_kv_args(&["--degrees=2,2,4,4".to_string()]).unwrap();
+        assert!(apply_overrides(&mut cfg, &kv).is_err());
+        let (_, kv) = parse_kv_args(&["--e-attn=two".to_string()]).unwrap();
         assert!(apply_overrides(&mut cfg, &kv).is_err());
     }
 

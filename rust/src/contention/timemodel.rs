@@ -90,6 +90,7 @@ mod tests {
             ffl: 128,
             params_total: 0,
             params_per_worker: 0,
+            degrees: crate::runtime::manifest::Degrees::uniform(4),
         }
     }
 

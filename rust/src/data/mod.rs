@@ -82,6 +82,7 @@ mod tests {
             name: "t".into(), hs: 32, depth: 1, heads: 4, e: 4, bs: 8,
             classes: 10, seq: 17, seq0: 16, pd: 48, hsl: 8, hl: 1, hd: 8,
             ffl: 32, params_total: 0, params_per_worker: 0,
+            degrees: crate::runtime::manifest::Degrees::uniform(4),
         }
     }
 

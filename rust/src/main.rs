@@ -158,19 +158,33 @@ fn print_help() {
            --e N                elastic resume target: re-shard the saved\n\
                                 state over N workers (N must divide hs\n\
                                 and heads; native backend only)\n\
+           --e-embed/--e-attn/--e-mlp/--e-head N\n\
+                                per-component TP degrees: the component\n\
+                                runs over the rank prefix 0..N instead of\n\
+                                all E workers (N must divide the\n\
+                                component's own granularity; native\n\
+                                backend only)\n\
+           --degrees auto       pick the per-component degree vector from\n\
+                                the initial chi profile and pretest cost\n\
+                                fits (explicit --e-* flags win)\n\
          \n\
          SWEEP OPTIONS\n\
            --preset P           smoke (CI, 2×2) | bursty | churn (live\n\
                                 elastic vs fixed-E baselines under worker\n\
                                 fail/join) | mem (capacity squeeze + hard\n\
-                                OOM; typed faults become \"error\" rows)\n\
+                                OOM; typed faults become \"error\" rows) |\n\
+                                finegrained (mixed per-component degrees\n\
+                                vs uniform-E under a heavy-tail rank)\n\
            --scenarios S        \"label=dsl;label2=dsl\" matrix rows\n\
            --strategies S       \"semi@online,semi@epoch,baseline\" columns;\n\
                                 further @-segments compose in any order:\n\
                                 elasticity (semi@online@fixed-e2 ignores\n\
                                 churn events and forces --e 2, ...@live\n\
-                                re-shards — the default) and transport\n\
-                                (...@tcp runs the cell over rank processes)\n\
+                                re-shards — the default), transport\n\
+                                (...@tcp runs the cell over rank\n\
+                                processes), and degrees (...@dega2m2 pins\n\
+                                --e-attn 2 --e-mlp 2, ...@degauto lets\n\
+                                the balancer pick)\n\
            --rank-exe PATH      binary for @tcp cells' rank processes\n\
            --trace B            true (default): trace each cell and embed\n\
                                 its phase-time breakdown (compute/wait/\n\

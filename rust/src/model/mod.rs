@@ -218,6 +218,19 @@ pub type BlockGrads = BlockShard;
 /// Gradients for the replicated params.
 pub type RepGrads = RepParams;
 
+/// TP group size owning a block-shard tensor under fine-grained degrees
+/// (DESIGN.md §18): attention tensors (`ln1_*`, `wqkv`, `wo`) belong to
+/// the `degrees.attn` group, MLP tensors (`ln2_*`, `w1`, `w2`) to the
+/// `degrees.mlp` group.  Ranks `>= shard_degree(m, name)` hold
+/// zero-filled slots for that tensor and never compute with it.
+pub fn shard_degree(m: &ModelInfo, name: &str) -> usize {
+    match name {
+        "ln1_g" | "ln1_b" | "wqkv" | "wo" => m.degrees.attn,
+        "ln2_g" | "ln2_b" | "w1" | "w2" => m.degrees.mlp,
+        _ => panic!("unknown block tensor '{name}'"),
+    }
+}
+
 pub fn zero_block_grads(m: &ModelInfo) -> BlockGrads {
     BlockShard {
         ln1_g: Tensor::zeros(&[m.hs]),
@@ -256,6 +269,7 @@ mod tests {
             name: "t".into(), hs: 32, depth: 2, heads: 4, e: 4, bs: 2,
             classes: 10, seq: 17, seq0: 16, pd: 48, hsl: 8, hl: 1, hd: 8,
             ffl: 32, params_total: 0, params_per_worker: 0,
+            degrees: crate::runtime::manifest::Degrees::uniform(4),
         }
     }
 

@@ -40,6 +40,54 @@ pub struct ExecSpec {
     pub outputs: Vec<ArgSpec>,
 }
 
+/// Per-component TP degrees (fine-grained tensor parallelism,
+/// DESIGN.md §18).  Each degree is the size of that component's rank
+/// group; a group is always the **rank prefix** `0..d` of the global
+/// worker set, so sub-group collectives reuse the global binomial tree
+/// (prefix membership is closed under `children_of`).  Every degree must
+/// divide the component's own contraction granularity: attention needs
+/// `d | hs` *and* `d | heads` (whole heads per worker), embed/MLP/head
+/// only slice hs-granular panels.  The default — every degree equal to
+/// the worker count `e` — is classic uniform 1D TP and is
+/// behavior-identical to the pre-fine-grained engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Degrees {
+    pub embed: usize,
+    pub attn: usize,
+    pub mlp: usize,
+    pub head: usize,
+}
+
+impl Degrees {
+    /// Classic uniform TP: every component sharded over all `e` workers.
+    pub fn uniform(e: usize) -> Degrees {
+        Degrees { embed: e, attn: e, mlp: e, head: e }
+    }
+
+    /// True when every component runs at the global degree — the fast
+    /// path that keeps uniform runs bitwise identical to the historic
+    /// engine.
+    pub fn is_uniform(&self, e: usize) -> bool {
+        *self == Degrees::uniform(e)
+    }
+
+    /// `[embed, attn, mlp, head]` — the serialization order used by the
+    /// checkpoint meta and the sweep cell tag.
+    pub fn as_array(&self) -> [usize; 4] {
+        [self.embed, self.attn, self.mlp, self.head]
+    }
+
+    pub fn from_array(v: [usize; 4]) -> Degrees {
+        Degrees { embed: v[0], attn: v[1], mlp: v[2], head: v[3] }
+    }
+}
+
+impl std::fmt::Display for Degrees {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "e{}a{}m{}h{}", self.embed, self.attn, self.mlp, self.head)
+    }
+}
+
 /// Static model/parallelism facts (mirrors python ModelCfg).
 #[derive(Debug, Clone)]
 pub struct ModelInfo {
@@ -59,6 +107,10 @@ pub struct ModelInfo {
     pub ffl: usize,
     pub params_total: usize,
     pub params_per_worker: usize,
+    /// Per-component TP group sizes.  `hsl`/`hl` derive from
+    /// `degrees.attn`, `ffl` from `degrees.mlp`; ranks `>= degrees.c`
+    /// hold component `c`'s shard slots but never compute with them.
+    pub degrees: Degrees,
 }
 
 /// A pruning bucket: γ plus the static keep sizes it compiles to.
@@ -108,12 +160,24 @@ impl Manifest {
     pub fn parse(text: &str) -> Result<Manifest> {
         let j = Json::parse(text)?;
         let m = j.get("model")?;
+        let e = m.get("e")?.usize()?;
+        // lenient: manifests compiled before fine-grained TP carry no
+        // degree vector — they are uniform by construction
+        let degrees = match m.opt("degrees") {
+            None => Degrees::uniform(e),
+            Some(d) => Degrees {
+                embed: d.get("embed")?.usize()?,
+                attn: d.get("attn")?.usize()?,
+                mlp: d.get("mlp")?.usize()?,
+                head: d.get("head")?.usize()?,
+            },
+        };
         let model = ModelInfo {
             name: m.get("name")?.str()?.to_string(),
             hs: m.get("hs")?.usize()?,
             depth: m.get("depth")?.usize()?,
             heads: m.get("heads")?.usize()?,
-            e: m.get("e")?.usize()?,
+            e,
             bs: m.get("bs")?.usize()?,
             classes: m.get("classes")?.usize()?,
             seq: m.get("seq")?.usize()?,
@@ -125,6 +189,7 @@ impl Manifest {
             ffl: m.get("ffl")?.usize()?,
             params_total: m.get("params_total")?.usize()?,
             params_per_worker: m.get("params_per_worker")?.usize()?,
+            degrees,
         };
         let mut buckets = Vec::new();
         for b in j.get("buckets")?.arr()? {
@@ -239,6 +304,24 @@ mod tests {
         assert_eq!(m.model.hs, 32);
         assert_eq!(m.buckets.len(), 3);
         assert_eq!(m.buckets[0].name, "g00"); // sorted ascending γ
+        // pre-fine-grained manifests carry no degree vector: uniform
+        assert_eq!(m.model.degrees, Degrees::uniform(4));
+        assert!(m.model.degrees.is_uniform(m.model.e));
+    }
+
+    #[test]
+    fn parses_explicit_degree_vector() {
+        let text = tiny_manifest().replace(
+            r#""e":4,"#,
+            r#""e":4,"degrees":{"embed":4,"attn":2,"mlp":2,"head":4},"#,
+        );
+        let m = Manifest::parse(&text).unwrap();
+        let d = m.model.degrees;
+        assert_eq!(d, Degrees { embed: 4, attn: 2, mlp: 2, head: 4 });
+        assert!(!d.is_uniform(4));
+        assert_eq!(d.as_array(), [4, 2, 2, 4]);
+        assert_eq!(Degrees::from_array(d.as_array()), d);
+        assert_eq!(d.to_string(), "e4a2m2h4");
     }
 
     #[test]

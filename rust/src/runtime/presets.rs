@@ -10,7 +10,7 @@
 
 use anyhow::{bail, ensure, Result};
 
-use super::manifest::{ArgSpec, Bucket, Dtype, ExecSpec, Manifest, ModelInfo};
+use super::manifest::{ArgSpec, Bucket, Degrees, Dtype, ExecSpec, Manifest, ModelInfo};
 
 /// Static pruning buckets: fraction of the contraction that SURVIVES
 /// (γ = 1 − keep_frac), mirroring `model.KEEP_FRACS`.
@@ -23,7 +23,7 @@ const IMG: usize = 32;
 const PATCH: usize = 4;
 const CHANS: usize = 3;
 const CLASSES: usize = 10;
-const MLP_RATIO: usize = 4;
+pub const MLP_RATIO: usize = 4;
 
 /// One artifact-set preset (mirrors python `ModelCfg` presets).
 #[derive(Debug, Clone, Copy)]
@@ -66,15 +66,20 @@ pub fn bucket_name(frac: f64) -> String {
     format!("g{:02}", ((1.0 - frac) * 100.0).round() as i64)
 }
 
-fn model_info(p: &Preset) -> ModelInfo {
+fn model_info(p: &Preset, degrees: Degrees) -> ModelInfo {
     let seq0 = (IMG / PATCH) * (IMG / PATCH);
     let seq = seq0 + 1;
     let pd = CHANS * PATCH * PATCH;
-    let hsl = p.hs / p.e;
-    let hl = p.heads / p.e;
+    // shard widths derive from each component's own group size, not the
+    // global worker count (DESIGN.md §18); uniform degrees reproduce the
+    // historic hs/e and 4·hs/e widths exactly
+    let hsl = p.hs / degrees.attn;
+    let hl = p.heads / degrees.attn;
     let hd = p.hs / p.heads;
-    let ffl = MLP_RATIO * p.hs / p.e;
+    let ffl = MLP_RATIO * p.hs / degrees.mlp;
     // per-worker: shard of every block + one replica of embed/head
+    // (under mixed degrees this is a group-member rank's count — the
+    // densest rank, since groups are rank prefixes)
     let blk_w = 4 * p.hs + p.hs * 3 * hsl + hsl * p.hs + p.hs * ffl + ffl * p.hs;
     let emb = pd * p.hs + seq * p.hs + p.hs;
     let head = 2 * p.hs + p.hs * CLASSES + CLASSES;
@@ -103,6 +108,7 @@ fn model_info(p: &Preset) -> ModelInfo {
         ffl,
         params_total,
         params_per_worker,
+        degrees,
     }
 }
 
@@ -318,32 +324,115 @@ fn mig_buckets(ffl: usize) -> Vec<usize> {
 /// minus the HLO files the native backend does not need).
 pub fn synthesize(name: &str) -> Result<Manifest> {
     let p = preset(name)?;
-    synthesize_preset(p)
+    synthesize_preset(p, Degrees::uniform(p.e))
+}
+
+/// Largest valid attention degree ≤ `want`: attention panels slice in
+/// whole heads, so the degree must divide `hs` *and* `heads`.  `want ≥ 1`
+/// guarantees a result (1 divides everything).
+pub fn attn_degree_floor(hs: usize, heads: usize, want: usize) -> usize {
+    (1..=want.max(1))
+        .rev()
+        .find(|&d| hs % d == 0 && heads % d == 0)
+        .expect("d=1 always divides")
+}
+
+/// Clamp a requested per-component degree vector onto worker count `e`:
+/// each degree drops to the largest value ≤ min(requested, e) that still
+/// divides its component's contraction at the component's own
+/// granularity (embed/head: hs; MLP: 4·hs; attention: hs *and* heads).
+/// This is the degree-aware form of the churn path's nearest-divisor
+/// degradation — a uniform request reproduces it exactly.
+pub fn clamp_degrees(hs: usize, heads: usize, req: Degrees, e: usize) -> Degrees {
+    let floor = |granule: usize, want: usize| -> usize {
+        (1..=want.min(e).max(1))
+            .rev()
+            .find(|&d| granule % d == 0)
+            .expect("d=1 always divides")
+    };
+    Degrees {
+        embed: floor(hs, req.embed),
+        attn: attn_degree_floor(hs, heads, req.attn.min(e)),
+        mlp: floor(MLP_RATIO * hs, req.mlp),
+        head: floor(hs, req.head),
+    }
 }
 
 /// Synthesize a preset's manifest at a **different worker count** — the
 /// elastic-resume target geometry (`--e`, DESIGN.md §13).  The model
 /// itself (hs, depth, heads, batch) is unchanged; only the 1D-TP shard
-/// widths (`hsl = hs/e`, `ffl = 4·hs/e`, `hl = heads/e`) re-derive.
-/// Valid targets must divide both `hs` and `heads` so every worker gets
-/// whole attention heads and lane-aligned FFN slices.
+/// widths (`hsl`, `ffl`, `hl`) re-derive.  `e` must divide `hs` (the
+/// hs-granular components slice lane-aligned panels); attention — the
+/// only component that also slices whole heads — clamps to the largest
+/// degree ≤ `e` dividing both `hs` and `heads`, instead of rejecting
+/// targets where `e ∤ heads` outright (historically the check demanded
+/// `e | heads` for every component, including the ones that never touch
+/// head panels).
 pub fn synthesize_with_e(name: &str, e: usize) -> Result<Manifest> {
+    let p = preset(name)?;
+    let mut d = Degrees::uniform(e);
+    if e >= 1 {
+        d.attn = attn_degree_floor(p.hs, p.heads, e);
+    }
+    synthesize_with_degrees(name, e, d)
+}
+
+/// Synthesize a preset's manifest with an explicit per-component degree
+/// vector over `e` workers (fine-grained TP, DESIGN.md §18).  Each
+/// degree must already be valid — use [`clamp_degrees`] first when the
+/// vector comes from user input or a churn transition.
+pub fn synthesize_with_degrees(name: &str, e: usize, degrees: Degrees) -> Result<Manifest> {
     let mut p = preset(name)?;
     ensure!(e >= 1, "worker count must be ≥ 1");
     ensure!(
-        p.hs % e == 0 && p.heads % e == 0,
-        "'{name}' cannot be sharded over {e} workers: e must divide \
-         hs={} and heads={} (valid: divisors of {})",
+        p.hs % e == 0,
+        "'{name}' cannot be sharded over {e} workers: e must divide hs={}",
+        p.hs,
+    );
+    for (what, d) in [
+        ("embed", degrees.embed),
+        ("attn", degrees.attn),
+        ("mlp", degrees.mlp),
+        ("head", degrees.head),
+    ] {
+        ensure!(
+            d >= 1 && d <= e,
+            "'{name}': {what} degree {d} must be in 1..={e} (the worker count)"
+        );
+    }
+    ensure!(
+        p.hs % degrees.embed == 0,
+        "'{name}': embed degree {} must divide hs={}",
+        degrees.embed,
+        p.hs,
+    );
+    ensure!(
+        p.hs % degrees.head == 0,
+        "'{name}': head degree {} must divide hs={}",
+        degrees.head,
+        p.hs,
+    );
+    ensure!(
+        (MLP_RATIO * p.hs) % degrees.mlp == 0,
+        "'{name}': mlp degree {} must divide 4·hs={}",
+        degrees.mlp,
+        MLP_RATIO * p.hs,
+    );
+    ensure!(
+        p.hs % degrees.attn == 0 && p.heads % degrees.attn == 0,
+        "'{name}': attn degree {} must divide hs={} and heads={} \
+         (valid: divisors of {})",
+        degrees.attn,
         p.hs,
         p.heads,
         crate::util::gcd(p.hs, p.heads),
     );
     p.e = e;
-    synthesize_preset(p)
+    synthesize_preset(p, degrees)
 }
 
-fn synthesize_preset(p: Preset) -> Result<Manifest> {
-    let m = model_info(&p);
+fn synthesize_preset(p: Preset, degrees: Degrees) -> Result<Manifest> {
+    let m = model_info(&p, degrees);
     let buckets = KEEP_FRACS
         .iter()
         .map(|&f| Bucket {
@@ -379,7 +468,8 @@ mod tests {
 
     #[test]
     fn vit_tiny_derivations() {
-        let m = model_info(&preset("vit-tiny").unwrap());
+        let p = preset("vit-tiny").unwrap();
+        let m = model_info(&p, Degrees::uniform(p.e));
         assert_eq!(m.seq0, 64);
         assert_eq!(m.seq, 65);
         assert_eq!(m.pd, 48);
@@ -453,13 +543,89 @@ mod tests {
 
     #[test]
     fn synthesize_with_e_rejects_indivisible_targets() {
-        // vit-tiny: hs=128, heads=4 → e=8 violates heads, e=3 violates hs
-        assert!(synthesize_with_e("vit-tiny", 8).is_err());
+        // vit-tiny: hs=128 → e=3 violates hs; e=0 is nonsense
         assert!(synthesize_with_e("vit-tiny", 3).is_err());
         assert!(synthesize_with_e("vit-tiny", 0).is_err());
-        // vit-s: hs=256, heads=8 → 1, 2, 4, 8 all valid
+        // vit-s: hs=256, heads=8 → 1, 2, 4, 8 all valid and uniform
         for e in [1usize, 2, 4, 8] {
-            assert!(synthesize_with_e("vit-s", e).is_ok(), "e={e}");
+            let man = synthesize_with_e("vit-s", e).unwrap();
+            assert!(man.model.degrees.is_uniform(e), "e={e}");
         }
+    }
+
+    #[test]
+    fn e_dividing_hs_but_not_heads_clamps_attn_only() {
+        // the historic check rejected any e ∤ heads even though only
+        // attention slices head panels; now the hs-granular components
+        // run at e and attention clamps to the largest whole-head degree
+        let man = synthesize_with_e("vit-tiny", 8).unwrap(); // hs=128, heads=4
+        let m = &man.model;
+        assert_eq!(m.e, 8);
+        assert_eq!(m.degrees, Degrees { embed: 8, attn: 4, mlp: 8, head: 8 });
+        assert_eq!(m.hsl, 32, "attn widths follow the clamped degree");
+        assert_eq!(m.hl, 1);
+        assert_eq!(m.ffl, 64, "mlp width follows the full worker count");
+        // vit-100m: hs=768, heads=12 → e=8 divides hs, heads%8=4;
+        // attention lands on 6 (the largest divisor of both ≤ 8)
+        let man = synthesize_with_e("vit-100m", 8).unwrap();
+        assert_eq!(man.model.degrees.attn, 6);
+        assert_eq!(man.model.hsl, 128);
+        assert_eq!(man.model.hl, 2);
+    }
+
+    #[test]
+    fn synthesize_with_degrees_validates_per_component() {
+        // a mixed vector: attn/mlp at 2, embed/head at the full count
+        let d = Degrees { embed: 4, attn: 2, mlp: 2, head: 4 };
+        let man = synthesize_with_degrees("vit-tiny", 4, d).unwrap();
+        let m = &man.model;
+        assert_eq!(m.degrees, d);
+        assert_eq!(m.hsl, 64, "hsl = hs/degrees.attn");
+        assert_eq!(m.hl, 2);
+        assert_eq!(m.ffl, 256, "ffl = 4·hs/degrees.mlp");
+        // the executable inventory re-derives against the mixed widths
+        assert!(man.exec("attn_fwd_g00").is_ok());
+        assert_eq!(man.buckets[0].keep_ffl, 256);
+        // degrees above the worker count are rejected
+        let too_big = Degrees { attn: 8, ..Degrees::uniform(4) };
+        assert!(synthesize_with_degrees("vit-tiny", 4, too_big).is_err());
+        // attention degree must keep whole heads (heads=4: no degree 8
+        // even over 8 workers... but 8 divides hs so mlp may use it)
+        let bad_attn = Degrees { attn: 8, ..Degrees::uniform(8) };
+        assert!(synthesize_with_degrees("vit-tiny", 8, bad_attn).is_err());
+        let ok_mlp = Degrees { attn: 4, ..Degrees::uniform(8) };
+        assert!(synthesize_with_degrees("vit-tiny", 8, ok_mlp).is_ok());
+        // degree 0 is rejected
+        let zero = Degrees { mlp: 0, ..Degrees::uniform(4) };
+        assert!(synthesize_with_degrees("vit-tiny", 4, zero).is_err());
+        // uniform degrees reproduce synthesize() exactly
+        let u = synthesize_with_degrees("vit-tiny", 4, Degrees::uniform(4)).unwrap();
+        let s = synthesize("vit-tiny").unwrap();
+        assert_eq!(u.model.hsl, s.model.hsl);
+        assert_eq!(u.model.ffl, s.model.ffl);
+        assert_eq!(u.model.params_per_worker, s.model.params_per_worker);
+        assert_eq!(u.executables.len(), s.executables.len());
+    }
+
+    #[test]
+    fn clamp_degrees_degrades_per_component() {
+        // uniform request over a shrinking worker pool reproduces the
+        // churn path's nearest-divisor behavior per component
+        let req = Degrees::uniform(4);
+        assert_eq!(clamp_degrees(128, 4, req, 4), Degrees::uniform(4));
+        // 3 workers: hs=128 % 3 ≠ 0 → hs-granular components drop to 2;
+        // 4·hs=512 % 3 ≠ 0 too
+        assert_eq!(clamp_degrees(128, 4, req, 3), Degrees::uniform(2));
+        // mixed request survives a clamp that doesn't constrain it
+        let mixed = Degrees { embed: 4, attn: 2, mlp: 2, head: 4 };
+        assert_eq!(clamp_degrees(128, 4, mixed, 4), mixed);
+        // ... and degrades component-wise when the pool shrinks
+        let clamped = clamp_degrees(128, 4, mixed, 2);
+        assert_eq!(clamped, Degrees { embed: 2, attn: 2, mlp: 2, head: 2 });
+        // attention respects heads where the others don't: over 8
+        // workers a uniform request lands attn on 4, everything else 8
+        let wide = clamp_degrees(128, 4, Degrees::uniform(8), 8);
+        assert_eq!(wide, Degrees { embed: 8, attn: 4, mlp: 8, head: 8 });
+        assert_eq!(attn_degree_floor(768, 12, 8), 6);
     }
 }

@@ -117,6 +117,17 @@ impl Monitor {
     /// Charges the scalar all-gather to the clocks when any rank triggers.
     pub fn t_avg(&mut self, comm: &mut Comm, clocks: &mut Clocks) -> Vec<f64> {
         let e = self.t_iter.len();
+        self.t_avg_group(comm, clocks, e)
+    }
+
+    /// [`Monitor::t_avg`] with the average taken over the rank prefix
+    /// `0..g` only — the block-compute group under fine-grained degrees
+    /// (DESIGN.md §18).  Ranks outside the prefix run no block GEMMs, so
+    /// folding their near-idle runtimes into T_avg would manufacture
+    /// phantom demand on every member.  `g == e` is the legacy average.
+    pub fn t_avg_group(&mut self, comm: &mut Comm, clocks: &mut Clocks, g: usize) -> Vec<f64> {
+        let e = self.t_iter.len();
+        let g = g.clamp(1, e);
         let mut trigger = false;
         for r in 0..e {
             let base = self.t_self_at_sync[r];
@@ -127,7 +138,7 @@ impl Monitor {
         }
         if trigger {
             let gathered = comm.all_gather_scalars(clocks, &self.t_iter);
-            let avg = gathered.iter().sum::<f64>() / e as f64;
+            let avg = gathered[..g].iter().sum::<f64>() / g as f64;
             for r in 0..e {
                 self.t_avg_cached[r] = avg;
                 self.t_self_at_sync[r] = self.t_iter[r];
@@ -140,8 +151,24 @@ impl Monitor {
     /// Strict criterion T_min for the hybrid solution (paper §IV-B) —
     /// needs the full runtime list, so it always costs an all-gather.
     pub fn t_list_and_min(&self, comm: &mut Comm, clocks: &mut Clocks) -> (Vec<f64>, f64) {
+        let e = self.t_iter.len();
+        self.t_list_and_min_group(comm, clocks, e)
+    }
+
+    /// [`Monitor::t_list_and_min`] with the minimum taken over the rank
+    /// prefix `0..g` only (block-compute group, DESIGN.md §18).  The
+    /// gathered list still covers every rank — the collective's cost and
+    /// the per-rank entries are unchanged; only the scalar criterion
+    /// ignores out-of-group ranks.
+    pub fn t_list_and_min_group(
+        &self,
+        comm: &mut Comm,
+        clocks: &mut Clocks,
+        g: usize,
+    ) -> (Vec<f64>, f64) {
         let list = comm.all_gather_scalars(clocks, &self.t_iter);
-        let min = list.iter().cloned().fold(f64::INFINITY, f64::min);
+        let g = g.clamp(1, list.len().max(1));
+        let min = list[..g].iter().cloned().fold(f64::INFINITY, f64::min);
         (list, min)
     }
 }

@@ -172,6 +172,7 @@ mod tests {
             name: "t".into(), hs: 32, depth: 2, heads: 4, e: 4, bs: 2,
             classes: 10, seq: 17, seq0: 16, pd: 48, hsl: 8, hl: 1, hd: 8,
             ffl: 32, params_total: 0, params_per_worker: 0,
+            degrees: crate::runtime::manifest::Degrees::uniform(4),
         };
         let c = pretest(&m, &CostModel::default(), 0.01);
         assert!(c.omega1_s >= 0.0);
@@ -188,6 +189,7 @@ mod tests {
             name: "t".into(), hs: 32, depth: 2, heads: 4, e: 4, bs: 2,
             classes: 10, seq: 17, seq0: 16, pd: 48, hsl: 8, hl: 1, hd: 8,
             ffl: 32, params_total: 0, params_per_worker: 0,
+            degrees: crate::runtime::manifest::Degrees::uniform(4),
         };
         let a = pretest_det(&m, &CostModel::default(), 0.01);
         let b = pretest_det(&m, &CostModel::default(), 0.01);

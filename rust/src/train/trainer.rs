@@ -176,17 +176,23 @@ pub struct Trainer {
 
 impl Trainer {
     pub fn new(cfg: RunCfg) -> Result<Trainer> {
-        let rt = match cfg.e_override {
-            None => Runtime::open(&cfg.model_dir(), &cfg.model, cfg.backend)
+        let degreeful = cfg.degree_overrides.any() || cfg.degrees_auto;
+        let rt = match (cfg.e_override, degreeful) {
+            (None, false) => Runtime::open(&cfg.model_dir(), &cfg.model, cfg.backend)
                 .with_context(|| {
                     format!("opening {} backend for '{}'", cfg.backend.name(), cfg.model)
                 })?,
-            Some(e) => {
+            (e_ov, _) => {
                 anyhow::ensure!(
                     cfg.backend == crate::config::BackendKind::Native,
-                    "--e (elastic worker-count override) requires the native backend"
+                    "--e / --e-* / --degrees (elastic geometry overrides) require \
+                     the native backend"
                 );
-                let man = crate::runtime::presets::synthesize_with_e(&cfg.model, e)
+                let e = match e_ov {
+                    Some(e) => e,
+                    None => crate::runtime::presets::preset(&cfg.model)?.e,
+                };
+                let man = resolved_manifest(&cfg, e)
                     .with_context(|| format!("sharding '{}' over {e} workers", cfg.model))?;
                 Runtime::native_with_manifest(man)
             }
@@ -750,10 +756,10 @@ impl Trainer {
             )
             .context(format!("worker churn at iteration {}", self.global_iter)));
         }
-        let target = (1..=self.avail)
-            .rev()
-            .find(|d| m.hs % d == 0 && m.heads % d == 0)
-            .unwrap_or(1);
+        // the group width only needs to divide hs — attention, the one
+        // component that also slices whole heads, clamps its own degree
+        // inside the geometry resolution (DESIGN.md §18)
+        let target = (1..=self.avail).rev().find(|d| m.hs % d == 0).unwrap_or(1);
         // a same-degree outcome (e.g. a join with no larger divisor to
         // grow into, or the kill/resume oracle already running at E') is
         // a pure cursor advance — no transient may be touched, or a
@@ -884,10 +890,7 @@ impl Trainer {
             )
             .context(ctx));
         }
-        let target = (1..=self.avail)
-            .rev()
-            .find(|d| m.hs % d == 0 && m.heads % d == 0)
-            .unwrap_or(1);
+        let target = (1..=self.avail).rev().find(|d| m.hs % d == 0).unwrap_or(1);
         if target != m.e {
             self.transition_to(target).with_context(|| {
                 format!(
@@ -921,7 +924,7 @@ impl Trainer {
             0.0,
             0,
         );
-        let man = crate::runtime::presets::synthesize_with_e(&self.cfg.model, new_e)
+        let man = resolved_manifest(&self.cfg, new_e)
             .with_context(|| format!("re-sharding '{}' over {new_e} workers", self.cfg.model))?;
         let rt = Runtime::native_with_manifest(man);
         let new_m = rt.manifest.model.clone();
@@ -988,7 +991,8 @@ impl Trainer {
 
     /// Rebuild this trainer from a pre-iteration snapshot after rank
     /// `dead`'s process died: one fewer live worker, re-sharded onto the
-    /// largest divisor of hs/heads that fits — **the same path as
+    /// largest divisor of hs that fits (attention clamps its own degree
+    /// in the geometry resolution) — **the same path as
     /// kill/checkpoint/`--resume --e E'`** (`Trainer::new` with
     /// `e_override` + `checkpoint::restore_trainer`), which is what
     /// makes real-kill recovery bitwise equal to that oracle
@@ -1013,10 +1017,7 @@ impl Trainer {
             )
             .context(format!("rank {dead} process died; no workers left")));
         }
-        let target = (1..=avail)
-            .rev()
-            .find(|d| m.hs % d == 0 && m.heads % d == 0)
-            .unwrap_or(1);
+        let target = (1..=avail).rev().find(|d| m.hs % d == 0).unwrap_or(1);
         let mut cfg = self.cfg.clone();
         cfg.e_override = Some(target);
         let mut t = Trainer::new(cfg)?;
@@ -1140,6 +1141,7 @@ impl Trainer {
             Some(a) => a,
             None => self.plan_actions(iter, &mut replanned)?,
         };
+        self.enforce_degree_groups(&m, &mut actions);
 
         // --- memory accounting (DESIGN.md §16).  All charges are
         // *modeled* (plan-derived) footprints replayed on the
@@ -1162,6 +1164,7 @@ impl Trainer {
                 self.charge_replan();
                 self.cached_actions = Some(a.clone());
                 actions = a;
+                self.enforce_degree_groups(&m, &mut actions);
                 replanned = true;
             }
             self.ledger.begin_iter();
@@ -1238,7 +1241,7 @@ impl Trainer {
         for k in 0..m.depth {
             attn_in.push(x.clone());
             let mut partials = self.attn_fwd_partials(&x, k, &actions, &mut m_gemm)?;
-            self.comm.all_reduce(&mut self.clocks, "attn_fwd", &mut partials)?;
+            self.comm.all_reduce_group(&mut self.clocks, "attn_fwd", &mut partials, e)?;
             x.add_assign(&partials[0]);
             for (w, p) in partials.into_iter().enumerate() {
                 self.recycle_rank(w, p);
@@ -1246,7 +1249,7 @@ impl Trainer {
 
             mlp_in.push(x.clone());
             let mut partials = self.mlp_fwd_partials(&x, k, &actions, &mut m_gemm)?;
-            self.comm.all_reduce(&mut self.clocks, "mlp_fwd", &mut partials)?;
+            self.comm.all_reduce_group(&mut self.clocks, "mlp_fwd", &mut partials, e)?;
             x.add_assign(&partials[0]);
             for (w, p) in partials.into_iter().enumerate() {
                 self.recycle_rank(w, p);
@@ -1406,6 +1409,48 @@ impl Trainer {
     // Replanning (DESIGN.md §12): when is the balancer's plan recomputed
     // -----------------------------------------------------------------
 
+    /// Project a plan onto the fine-grained TP groups (DESIGN.md §18).
+    /// Ranks outside a component's group hold zero-filled shard slots
+    /// and never execute that component, so their plan fields reset to
+    /// the no-op full plan (keeping the pruned-column accounting
+    /// honest), and any migration touching an out-of-group rank is
+    /// dropped whole — out-of-group shard columns are not model
+    /// content, and a partially-received migration would leave
+    /// un-imputed gradient holes.  A uniform degree vector is untouched,
+    /// so every legacy run takes the early return.
+    fn enforce_degree_groups(
+        &self,
+        m: &crate::runtime::manifest::ModelInfo,
+        actions: &mut [WorkerAction],
+    ) {
+        let deg = m.degrees;
+        if deg.is_uniform(m.e) {
+            return;
+        }
+        for (w, a) in actions.iter_mut().enumerate() {
+            if w >= deg.attn {
+                for p in &mut a.layers {
+                    p.attn_bucket = "g00".into();
+                    p.attn_keep = (0..m.hs as u32).collect();
+                }
+            }
+            if w >= deg.mlp {
+                for p in &mut a.layers {
+                    p.mlp_b1 = "g00".into();
+                    p.mlp_b2 = "g00".into();
+                    p.mlp_keep1 = (0..m.hs as u32).collect();
+                    p.mlp_keep2 = (0..m.ffl as u32).collect();
+                }
+                a.mig = None;
+            }
+            if let Some(mig) = &a.mig {
+                if mig.receivers.iter().any(|r| r.rank >= deg.mlp) {
+                    a.mig = None;
+                }
+            }
+        }
+    }
+
     /// Produce this iteration's actions under the configured
     /// [`ReplanMode`].  `iter` is the within-epoch index; `replanned`
     /// reports whether the plan was recomputed this iteration.
@@ -1482,13 +1527,19 @@ impl Trainer {
             let hr = (0..e).map(|w| self.ledger.headroom(w).saturating_sub(base)).collect();
             self.balancer.set_mem_headroom(Some(hr));
         }
+        // detection statistics span the block-compute group only: ranks
+        // outside both the attention and MLP groups run no block GEMMs,
+        // and folding their near-idle runtimes into T_avg / T_min would
+        // manufacture phantom demand on every member (DESIGN.md §18)
+        let deg = self.rt.manifest.model.degrees;
+        let g = deg.attn.max(deg.mlp);
         let t_avg = if matches!(self.cfg.balancer.strategy, Strategy::Mig | Strategy::Semi) {
             vec![0.0; e] // unused by MIG/SEMI
         } else {
-            self.monitor.t_avg(&mut self.comm, &mut self.clocks)
+            self.monitor.t_avg_group(&mut self.comm, &mut self.clocks, g)
         };
         let t_min = if matches!(self.cfg.balancer.strategy, Strategy::Mig | Strategy::Semi) {
-            self.monitor.t_list_and_min(&mut self.comm, &mut self.clocks).1
+            self.monitor.t_list_and_min_group(&mut self.comm, &mut self.clocks, g).1
         } else {
             0.0
         };
@@ -1566,10 +1617,13 @@ impl Trainer {
         actions: &[WorkerAction],
         m_gemm: &mut [f64],
     ) -> Result<Vec<Tensor>> {
-        let e = self.model().e;
+        // only the attention group's ranks (prefix 0..degrees.attn,
+        // DESIGN.md §18) hold attention panels and execute; under
+        // uniform degrees this is the full worker group
+        let d = self.model().degrees.attn;
         let rt = &self.rt;
         let state = &self.state;
-        let results = self.pool.run_ws(e, &self.ws, |w, ws| {
+        let results = self.pool.run_ws(d, &self.ws, |w, ws| {
             let p = &actions[w].layers[k];
             let name = rt.manifest.attn_name("fwd", &p.attn_bucket);
             let idx: Vec<i32> = p.attn_keep.iter().map(|&i| i as i32).collect();
@@ -1591,7 +1645,7 @@ impl Trainer {
             ws.give_tensor(mask);
             Ok((into1(outs)?, t))
         })?;
-        let mut partials = Vec::with_capacity(e);
+        let mut partials = Vec::with_capacity(d);
         let mi = &self.rt.manifest.model;
         for (w, (y, t)) in results.into_iter().enumerate() {
             let keep = actions[w].layers[k].attn_keep.len();
@@ -1613,10 +1667,13 @@ impl Trainer {
         actions: &[WorkerAction],
         m_gemm: &mut [f64],
     ) -> Result<Vec<Tensor>> {
-        let e = self.model().e;
+        // MLP group prefix 0..degrees.mlp (DESIGN.md §18); migration
+        // stragglers and receivers are confined to it by
+        // `enforce_degree_groups`, so `partials` indexing stays in range
+        let d = self.model().degrees.mlp;
         let rt = &self.rt;
         let state = &self.state;
-        let results = self.pool.run_ws(e, &self.ws, |w, ws| {
+        let results = self.pool.run_ws(d, &self.ws, |w, ws| {
             let p = &actions[w].layers[k];
             let name = rt.manifest.mlp_name("fwd", &p.mlp_b1, &p.mlp_b2);
             let idx1: Vec<i32> = p.mlp_keep1.iter().map(|&i| i as i32).collect();
@@ -1643,7 +1700,7 @@ impl Trainer {
             ws.give_tensor(mask2);
             Ok((into1(outs)?, t))
         })?;
-        let mut partials = Vec::with_capacity(e);
+        let mut partials = Vec::with_capacity(d);
         let mi = &self.rt.manifest.model;
         for (w, (y, t)) in results.into_iter().enumerate() {
             let p = &actions[w].layers[k];
@@ -1671,9 +1728,10 @@ impl Trainer {
         block_grads: &mut [Vec<BlockGrads>],
     ) -> Result<Tensor> {
         let e = self.model().e;
+        let d = self.model().degrees.mlp;
         let rt = &self.rt;
         let state = &self.state;
-        let results = self.pool.run_ws(e, &self.ws, |w, ws| {
+        let results = self.pool.run_ws(d, &self.ws, |w, ws| {
             let p = &actions[w].layers[k];
             let name = rt.manifest.mlp_name("bwd", &p.mlp_b1, &p.mlp_b2);
             let idx1: Vec<i32> = p.mlp_keep1.iter().map(|&i| i as i32).collect();
@@ -1709,9 +1767,9 @@ impl Trainer {
                 t,
             ))
         })?;
-        let mut dx_parts = Vec::with_capacity(e);
-        let mut dg_parts = Vec::with_capacity(e);
-        let mut db_parts = Vec::with_capacity(e);
+        let mut dx_parts = Vec::with_capacity(d);
+        let mut dg_parts = Vec::with_capacity(d);
+        let mut db_parts = Vec::with_capacity(d);
         let mi = &self.rt.manifest.model;
         for (w, (dx, dg, db, dw1, dw2, t)) in results.into_iter().enumerate() {
             let p = &actions[w].layers[k];
@@ -1747,12 +1805,15 @@ impl Trainer {
         // column/row-parallel discipline).  Accounting replays the
         // sequential barrier/cost order and the copy-outs below only
         // read already-reduced data, so results are bitwise unchanged.
-        self.comm.all_reduce_batch(
+        // Under mixed degrees the reduce spans the MLP group only; ranks
+        // outside it neither contribute nor wait.
+        self.comm.all_reduce_group_batch(
             &mut self.clocks,
             "mlp_bwd",
             &mut [&mut dg_parts[..], &mut db_parts[..], &mut dx_parts[..]],
+            e,
         )?;
-        for w in 0..e {
+        for w in 0..d {
             block_grads[w][k].ln2_g.data.copy_from_slice(&dg_parts[0].data);
             block_grads[w][k].ln2_b.data.copy_from_slice(&db_parts[0].data);
         }
@@ -1780,9 +1841,10 @@ impl Trainer {
         block_grads: &mut [Vec<BlockGrads>],
     ) -> Result<Tensor> {
         let e = self.model().e;
+        let d = self.model().degrees.attn;
         let rt = &self.rt;
         let state = &self.state;
-        let results = self.pool.run_ws(e, &self.ws, |w, ws| {
+        let results = self.pool.run_ws(d, &self.ws, |w, ws| {
             let p = &actions[w].layers[k];
             let name = rt.manifest.attn_name("bwd", &p.attn_bucket);
             let idx: Vec<i32> = p.attn_keep.iter().map(|&i| i as i32).collect();
@@ -1813,9 +1875,9 @@ impl Trainer {
                 t,
             ))
         })?;
-        let mut dx_parts = Vec::with_capacity(e);
-        let mut dg_parts = Vec::with_capacity(e);
-        let mut db_parts = Vec::with_capacity(e);
+        let mut dx_parts = Vec::with_capacity(d);
+        let mut dg_parts = Vec::with_capacity(d);
+        let mut db_parts = Vec::with_capacity(d);
         let mi = &self.rt.manifest.model;
         for (w, (dx, dg, db, dwqkv, dwo, t)) in results.into_iter().enumerate() {
             let keep = actions[w].layers[k].attn_keep.len();
@@ -1834,13 +1896,14 @@ impl Trainer {
             self.recycle_rank(w, old);
         }
         // batched like mlp_bwd: overlapped waits, bitwise-identical
-        // accounting and sums
-        self.comm.all_reduce_batch(
+        // accounting and sums; spans the attention group only
+        self.comm.all_reduce_group_batch(
             &mut self.clocks,
             "attn_bwd",
             &mut [&mut dg_parts[..], &mut db_parts[..], &mut dx_parts[..]],
+            e,
         )?;
-        for w in 0..e {
+        for w in 0..d {
             block_grads[w][k].ln1_g.data.copy_from_slice(&dg_parts[0].data);
             block_grads[w][k].ln1_b.data.copy_from_slice(&db_parts[0].data);
         }
@@ -1991,6 +2054,22 @@ impl Trainer {
             for rw in &mig.receivers {
                 for chunk in &rw.chunks {
                     let (out, t) = results.next().expect("one result per migration job");
+                    // The slice above may have computed in a throwaway
+                    // arena (the try_lock fallback) whose high-water mark
+                    // used to vanish without ever folding into
+                    // `mem_hwm_bytes`.  Whether the fallback fired is
+                    // thread-timing-dependent, so the ledger instead
+                    // records the same modeled per-chunk scratch bound on
+                    // every run — weight panels in plus the activation
+                    // slice out, released as soon as the chunk's replay
+                    // merges — charged to the receiver that owned the
+                    // arena.
+                    if !self.warming {
+                        let scratch =
+                            chunk.kb as u64 * crate::memory::mig_bytes_per_col(&m);
+                        self.ledger.charge(rw.rank, scratch);
+                        self.ledger.release(rw.rank, scratch);
+                    }
                     let bwd = dy.is_some();
                     let tc = self.sim_secs(t, timemodel::mig_slice_s(&m, chunk.kb, bwd));
                     self.injector.charge(&mut self.clocks, rw.rank, tc);
@@ -2062,29 +2141,42 @@ impl Trainer {
         let m = self.rt.manifest.model.clone();
         let policy = self.cfg.balancer.imputation;
         for w in 0..m.e {
+            // component-group membership (DESIGN.md §18): ranks outside a
+            // group hold zero-filled slots there — no imputation, no
+            // optimizer step, no momentum buffers (the checkpoint and the
+            // elastic re-shard both treat those keys as absent)
+            let attn_member = w < m.degrees.attn;
+            let mlp_member = w < m.degrees.mlp;
             for k in 0..m.depth {
                 let p = &actions[w].layers[k];
                 let g = &mut block_grads[w][k];
                 let prev = self.prev_grads.as_ref().map(|pg| &pg[w][k]);
-                // qkv contraction rows
-                let lin = Lineage::new(m.hs, &p.attn_keep);
-                impute_rows(&mut g.wqkv, &lin, policy, prev.map(|p| &p.wqkv));
-                // fc1 contraction rows
-                let lin1 = Lineage::new(m.hs, &p.mlp_keep1);
-                impute_rows(&mut g.w1, &lin1, policy, prev.map(|p| &p.w1));
-                // ffl dim: pruned = complement of keep2 MINUS migrated
-                // (migrated grads arrived exactly via scatter)
-                let mut lin2 = Lineage::new(m.ffl, &p.mlp_keep2);
-                if let Some(mig) = &actions[w].mig {
-                    let migset: std::collections::BTreeSet<u32> =
-                        mig.migrated.iter().copied().collect();
-                    lin2.pruned.retain(|i| !migset.contains(i));
+                if attn_member {
+                    // qkv contraction rows
+                    let lin = Lineage::new(m.hs, &p.attn_keep);
+                    impute_rows(&mut g.wqkv, &lin, policy, prev.map(|p| &p.wqkv));
                 }
-                impute_cols(&mut g.w1, &lin2, policy, prev.map(|p| &p.w1));
-                impute_rows(&mut g.w2, &lin2, policy, prev.map(|p| &p.w2));
+                if mlp_member {
+                    // fc1 contraction rows
+                    let lin1 = Lineage::new(m.hs, &p.mlp_keep1);
+                    impute_rows(&mut g.w1, &lin1, policy, prev.map(|p| &p.w1));
+                    // ffl dim: pruned = complement of keep2 MINUS migrated
+                    // (migrated grads arrived exactly via scatter)
+                    let mut lin2 = Lineage::new(m.ffl, &p.mlp_keep2);
+                    if let Some(mig) = &actions[w].mig {
+                        let migset: std::collections::BTreeSet<u32> =
+                            mig.migrated.iter().copied().collect();
+                        lin2.pruned.retain(|i| !migset.contains(i));
+                    }
+                    impute_cols(&mut g.w1, &lin2, policy, prev.map(|p| &p.w1));
+                    impute_rows(&mut g.w2, &lin2, policy, prev.map(|p| &p.w2));
+                }
                 // optimizer
                 let b = &mut self.state.shards[w][k];
                 for name in crate::model::BlockShard::names() {
+                    if w >= crate::model::shard_degree(&m, name) {
+                        continue;
+                    }
                     let key = format!("{w}.{k}.{name}");
                     self.opt.update(&key, b.get_mut(name), g.get(name));
                 }
@@ -2162,7 +2254,9 @@ impl Trainer {
         // per-rank full-width calls below use the pool instead)
         for k in 0..m.depth {
             let xin = &x;
-            let parts = self.pool.run_ws(m.e, &self.ws, |w, ws| {
+            // members only (DESIGN.md §18): out-of-group shards are
+            // zero-filled slots, so their partials are pure wasted work
+            let parts = self.pool.run_ws(m.degrees.attn, &self.ws, |w, ws| {
                 let b = &state.shards[w][k];
                 let (outs, _) = rt.call_ws(
                     "attn_fwd_g00",
@@ -2181,7 +2275,7 @@ impl Trainer {
             })?;
             self.fold_partials_into(&mut x, parts);
             let xin = &x;
-            let parts = self.pool.run_ws(m.e, &self.ws, |w, ws| {
+            let parts = self.pool.run_ws(m.degrees.mlp, &self.ws, |w, ws| {
                 let b = &state.shards[w][k];
                 let (outs, _) = rt.call_ws(
                     "mlp_fwd_g00",
@@ -2240,6 +2334,52 @@ fn mig_in_cols(actions: &[WorkerAction], rank: usize) -> u64 {
         .filter_map(|a| a.mig.as_ref())
         .map(|p| p.cols_for(rank) as u64)
         .sum()
+}
+
+/// Resolve the manifest for `cfg.model` at worker count `e` under the
+/// run's fine-grained degree configuration (DESIGN.md §18).  This is the
+/// single geometry-resolution path shared by `Trainer::new`, the live
+/// churn/OOM transitions, and the elastic checkpoint restore — sharing
+/// it is what keeps a live transition bitwise equal to the
+/// kill/checkpoint/`--resume` oracle when degrees are in play.
+///
+/// Order of precedence per component: explicit `--e-*` override, then
+/// `--degrees auto` (balancer selection from the iteration-0 χ row and
+/// the modeled network), then the uniform `e` default.  The resolved
+/// vector is clamped onto `e` with [`presets::clamp_degrees`] — a churn
+/// transition to a narrower group degrades each component to its nearest
+/// valid divisor instead of erroring.
+pub(crate) fn resolved_manifest(
+    cfg: &RunCfg,
+    e: usize,
+) -> Result<crate::runtime::manifest::Manifest> {
+    use crate::runtime::presets;
+    if !cfg.degree_overrides.any() && !cfg.degrees_auto {
+        return presets::synthesize_with_e(&cfg.model, e);
+    }
+    let base = presets::synthesize_with_e(&cfg.model, e)?;
+    let m0 = base.model.clone();
+    let mut want = if cfg.degrees_auto {
+        let chis = cfg.stragglers.chis_at(e, 0, 0);
+        crate::balancer::select_degrees(&m0, &chis, &CostModel::from_net(cfg.net))
+    } else {
+        crate::runtime::manifest::Degrees::uniform(e)
+    };
+    let ov = &cfg.degree_overrides;
+    if let Some(d) = ov.embed {
+        want.embed = d;
+    }
+    if let Some(d) = ov.attn {
+        want.attn = d;
+    }
+    if let Some(d) = ov.mlp {
+        want.mlp = d;
+    }
+    if let Some(d) = ov.head {
+        want.head = d;
+    }
+    let degrees = presets::clamp_degrees(m0.hs, m0.heads, want, e);
+    presets::synthesize_with_degrees(&cfg.model, e, degrees)
 }
 
 /// Drain a wall-clock segment: elapsed seconds since `w`, resetting `w`

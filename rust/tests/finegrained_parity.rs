@@ -1,0 +1,172 @@
+//! Fine-grained-degree parity suite (ISSUE 10, DESIGN.md §18).
+//!
+//! The tentpole contract: per-component TP degrees are a pure geometry
+//! choice.  A `semi@online` run whose attn/mlp components execute over
+//! the rank prefix `0..2` while embed/head stay replicated over all 4
+//! workers must produce **bitwise identical** observables — losses,
+//! per-epoch sim metrics (modulo wall time), `CommStats` — at
+//! `--threads` 1 and 4 and over both transports (in-process buffer
+//! slots vs rank processes on localhost TCP), because the sub-group
+//! all-reduce reuses the full group's binomial/stride association
+//! order on the member prefix.
+//!
+//! Also pinned: `--degrees auto` resolving to the same vector (and the
+//! same bits) as the explicit `--e-attn 2 --e-mlp 2` run under a
+//! heavy-tail χ row, and the degree vector surviving a
+//! kill/checkpoint/resume cycle bitwise — including an elastic resume
+//! that re-shards the mixed checkpoint back to uniform degrees.
+
+use flextp::config::{
+    DegreeOverrides, ReplanMode, RunCfg, StragglerPlan, Strategy, TimeModel, TransportKind,
+};
+use flextp::contention::ScenarioSpec;
+use flextp::metrics::RunReport;
+use flextp::runtime::manifest::Degrees;
+use flextp::train::trainer::Trainer;
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("flextp_fg_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// vit-tiny over 4 workers with the finegrained-preset contention
+/// shape: r3 is a heavy straggler for the whole run (excluded from the
+/// 0..2 block groups), and r1 — a member of both groups — bursts
+/// mid-run so pruning/migration engage *inside* the sub-groups and the
+/// parity below covers a non-trivial plan.
+fn fg_cfg(threads: usize, transport: TransportKind) -> RunCfg {
+    let mut cfg = RunCfg::new("vit-tiny");
+    cfg.train.threads = threads;
+    cfg.train.epochs = 2;
+    cfg.train.iters_per_epoch = 6;
+    cfg.train.eval_iters = 2;
+    cfg.train.momentum = 0.9;
+    cfg.train.time_model = TimeModel::Modeled;
+    cfg.train.transport = transport;
+    cfg.train.rank_exe = Some(env!("CARGO_BIN_EXE_flextp").into());
+    cfg.balancer.strategy = Strategy::Semi;
+    cfg.balancer.replan = ReplanMode::Online;
+    cfg.balancer.forced_lambda = Some(1);
+    cfg.degree_overrides =
+        DegreeOverrides { attn: Some(2), mlp: Some(2), ..DegreeOverrides::default() };
+    cfg.stragglers = StragglerPlan::Scenario(
+        ScenarioSpec::parse("burst:r3@x24:iters0-,burst:r1@x3:iters4-9,chimax:32")
+            .expect("scenario"),
+    );
+    cfg
+}
+
+type Observables = (RunReport, u64, u64, Degrees);
+
+fn run(cfg: RunCfg) -> Observables {
+    let mut t = Trainer::new(cfg).expect("trainer");
+    let r = t.run().expect("run");
+    (r, t.comm.stats.total_bytes(), t.comm.stats.allreduce_ops, t.model().degrees)
+}
+
+fn assert_bitwise(a: &Observables, b: &Observables, what: &str) {
+    assert!(
+        a.0.loss_curve.iter().all(|l| l.is_finite()),
+        "{what}: diverged: {:?}",
+        a.0.loss_curve
+    );
+    assert_eq!(a.0.loss_curve, b.0.loss_curve, "{what}: losses must be bitwise identical");
+    assert!(a.0.sim_equal(&b.0), "{what}: per-epoch sim metrics must be bitwise identical");
+    assert_eq!(a.1, b.1, "{what}: CommStats::total_bytes must match");
+    assert_eq!(a.2, b.2, "{what}: all-reduce op counts must match");
+    assert_eq!(a.3, b.3, "{what}: degree vectors must match");
+}
+
+#[test]
+fn mixed_degrees_bitwise_identical_at_1_and_4_threads_on_both_transports() {
+    let mut per_thread = Vec::new();
+    for threads in [1usize, 4] {
+        let inproc = run(fg_cfg(threads, TransportKind::InProc));
+        assert_eq!(
+            inproc.3,
+            Degrees { embed: 4, attn: 2, mlp: 2, head: 4 },
+            "the overrides must have reached the resolved manifest"
+        );
+        let tcp = run(fg_cfg(threads, TransportKind::Tcp));
+        assert_bitwise(&inproc, &tcp, &format!("inproc vs tcp, threads={threads}"));
+        per_thread.push(inproc);
+    }
+    assert_bitwise(&per_thread[0], &per_thread[1], "mixed degrees, threads 1 vs 4");
+    // sanity: the member-rank burst engaged the balancer inside the
+    // sub-groups, so the parity covered a non-trivial plan
+    assert!(
+        per_thread[0].0.epochs.iter().map(|e| e.pruned_cols + e.migrated_cols).sum::<u64>() > 0,
+        "no balancing engaged — the mixed-degree comparison would be vacuous"
+    );
+}
+
+/// `--degrees auto` under the heavy-tail row must derive exactly the
+/// explicit a2m2 vector (rank 3's χ24 makes every degree including it
+/// lose on the prefix max) and therefore reproduce the explicit run's
+/// bits.
+#[test]
+fn auto_degrees_match_the_explicit_vector_bitwise() {
+    let explicit = run(fg_cfg(1, TransportKind::InProc));
+    let auto = {
+        let mut cfg = fg_cfg(1, TransportKind::InProc);
+        cfg.degree_overrides = DegreeOverrides::default();
+        cfg.degrees_auto = true;
+        run(cfg)
+    };
+    assert_eq!(auto.3, Degrees { embed: 4, attn: 2, mlp: 2, head: 4 });
+    assert_bitwise(&explicit, &auto, "explicit a2m2 vs --degrees auto");
+}
+
+/// Kill a mixed-degree run mid-epoch, resume from the snapshot with the
+/// same config: the degree vector must round-trip through the
+/// checkpoint (meta.model.deg) and the resumed run must be bitwise
+/// indistinguishable from an uninterrupted one.
+#[test]
+fn mixed_degree_kill_resume_round_trips_the_degree_vector() {
+    let full = run(fg_cfg(1, TransportKind::InProc));
+    let dir = tmp_dir("resume");
+    let path = dir.join(flextp::checkpoint::ckpt_filename(5));
+    let resumed = {
+        let cfg = fg_cfg(1, TransportKind::InProc);
+        {
+            let mut t = Trainer::new(cfg.clone()).expect("trainer");
+            t.run_to(Some(5)).expect("run to kill point");
+            t.save_checkpoint(&path).expect("save checkpoint");
+            // t dropped here — the "kill"
+        }
+        let mut t = Trainer::resume_from(cfg, &path).expect("resume");
+        assert_eq!(
+            t.model().degrees,
+            Degrees { embed: 4, attn: 2, mlp: 2, head: 4 },
+            "resume must restore the saved degree vector"
+        );
+        let r = t.run().expect("resumed run");
+        (r, t.comm.stats.total_bytes(), t.comm.stats.allreduce_ops, t.model().degrees)
+    };
+    assert_bitwise(&full, &resumed, "mixed degrees, uninterrupted vs kill/resume");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Resuming a mixed-degree checkpoint *without* the overrides re-shards
+/// it back to the uniform vector through the elastic path (same worker
+/// count, different degrees): the run must come up at uniform degrees
+/// and keep training to finite losses.
+#[test]
+fn elastic_resume_reshards_mixed_checkpoint_to_uniform() {
+    let dir = tmp_dir("to_uniform");
+    let path = dir.join(flextp::checkpoint::ckpt_filename(5));
+    {
+        let mut t = Trainer::new(fg_cfg(1, TransportKind::InProc)).expect("trainer");
+        t.run_to(Some(5)).expect("run to snapshot point");
+        t.save_checkpoint(&path).expect("save checkpoint");
+    }
+    let mut cfg = fg_cfg(1, TransportKind::InProc);
+    cfg.degree_overrides = DegreeOverrides::default();
+    let mut t = Trainer::resume_from(cfg, &path).expect("elastic resume to uniform degrees");
+    assert_eq!(t.model().degrees, Degrees::uniform(4), "degrees re-shard to uniform");
+    let r = t.run().expect("resumed run");
+    assert!(r.loss_curve.iter().all(|l| l.is_finite()), "diverged: {:?}", r.loss_curve);
+    let _ = std::fs::remove_dir_all(&dir);
+}
